@@ -1,0 +1,46 @@
+//! Figure 1: activation-magnitude heatmap (position x layer) before and
+//! after CushionCache, plus a compact ASCII rendering. The CSV rows are
+//! (config, layer, position, magnitude) — plot position on x, layer as
+//! series to regenerate the paper's panels.
+
+use cushioncache::bench::scenario;
+use cushioncache::bench::Table;
+use cushioncache::eval::actstats;
+use cushioncache::runtime::Client;
+
+fn main() -> anyhow::Result<()> {
+    cushioncache::util::logging::init();
+    let client = Client::cpu()?;
+    let variant = "tl-llama";
+    let mut table = Table::new(
+        "Figure 1 — per-position channel-absmax of block inputs (tl-llama)",
+        &["config", "layer", "position", "magnitude"],
+    );
+
+    for (with_cushion, config) in [(false, "baseline"), (true, "cushioncache")] {
+        let s = scenario::prepared(&client, variant, false, with_cushion)?;
+        let rep = actstats::collect(&s, 2)?;
+        for (l, row) in rep.heatmap.iter().enumerate() {
+            for (p, &mag) in row.iter().enumerate() {
+                table.row(vec![
+                    config.into(), format!("{l}"), format!("{p}"),
+                    format!("{mag:.3}"),
+                ]);
+            }
+        }
+        // ASCII sketch of the last-block row (log scale)
+        let row = &rep.heatmap[rep.heatmap.len() - 2];
+        let sketch: String = row
+            .iter()
+            .map(|&m| match m {
+                m if m > 1000.0 => '#',
+                m if m > 100.0 => '+',
+                m if m > 10.0 => '.',
+                _ => ' ',
+            })
+            .collect();
+        println!("{config:>13} |{sketch}|");
+    }
+    table.emit("fig1_heatmap");
+    Ok(())
+}

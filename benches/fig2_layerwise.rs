@@ -1,0 +1,32 @@
+//! Figure 2: top-1/2/3 and median activation magnitude per layer of
+//! tl-llama3, without (left panel) and with (right panel) CushionCache.
+//! We emit top-1 / top-10% / median per block input as CSV series.
+
+use cushioncache::bench::scenario;
+use cushioncache::bench::Table;
+use cushioncache::eval::actstats;
+use cushioncache::runtime::Client;
+
+fn main() -> anyhow::Result<()> {
+    cushioncache::util::logging::init();
+    let client = Client::cpu()?;
+    let variant = "tl-llama3";
+    let n = if scenario::fast_mode() { 1 } else { 8 };
+    let mut table = Table::new(
+        "Figure 2 — per-layer activation magnitudes (tl-llama3)",
+        &["config", "layer", "top1", "top10pct", "median"],
+    );
+
+    for (with_cushion, config) in [(false, "baseline"), (true, "cushioncache")] {
+        let s = scenario::prepared(&client, variant, false, with_cushion)?;
+        let rep = actstats::collect(&s, n)?;
+        for (l, [t1, t10, med]) in rep.per_level.iter().enumerate() {
+            table.row(vec![
+                config.into(), format!("{l}"), format!("{t1:.3}"),
+                format!("{t10:.4}"), format!("{med:.4}"),
+            ]);
+        }
+    }
+    table.emit("fig2_layerwise");
+    Ok(())
+}

@@ -1,0 +1,124 @@
+//! §Perf micro-bench: where does a serving step's time go?
+//! Breaks the decode step into components — graph execution vs host
+//! marshalling (the cache's host round-trip forced by the tuple-output
+//! PJRT wrapper) vs coordinator logic — and measures the eval forward
+//! and the pallas-vs-XLA-fusion artifact variants.
+
+use std::time::Instant;
+
+use cushioncache::bench::{summarize, time_n, Table};
+use cushioncache::coordinator::{Engine, Scheduler};
+use cushioncache::model::session::Session;
+use cushioncache::quant::calibrate;
+use cushioncache::quant::scheme::{Algorithm, Granularity, Scheme};
+use cushioncache::runtime::literalx::HostValue;
+use cushioncache::runtime::Client;
+use cushioncache::util::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    cushioncache::util::logging::init();
+    let client = Client::cpu()?;
+    // (cargo bench appends a literal `--bench`; skip flag-like args)
+    let variant = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with("--"))
+        .unwrap_or_else(|| "tl-llama3".into());
+    let iters = 20;
+    let mut table = Table::new(
+        &format!("Perf — hot-path breakdown ({variant})"),
+        &["component", "mean (ms)", "p50 (ms)", "p99 (ms)"],
+    );
+    let mut row = |name: &str, samples: &[f64]| {
+        let t = summarize(samples);
+        table.row(vec![
+            name.into(),
+            format!("{:.2}", t.mean * 1e3),
+            format!("{:.2}", t.p50 * 1e3),
+            format!("{:.2}", t.p99 * 1e3),
+        ]);
+    };
+
+    // ---- eval forward -----------------------------------------------------
+    let mut s = Session::load_with_client(&variant, client.clone())?;
+    let scheme = Scheme::w8a8(Granularity::PerTensorStatic, Algorithm::Naive);
+    calibrate::calibrate_into(&mut s, scheme.act_levels(), 2)?;
+    let tokens: Vec<i32> = {
+        let split = s.corpus.split("heldout")?;
+        (0..s.manifest.eval_batch).flat_map(|i| split.seq(i).to_vec()).collect()
+    };
+    let _ = s.fwd(&scheme, &tokens)?; // warm (compile)
+    row("fwd_pts (B=8, S=128)",
+        &time_n(1, iters, || { s.fwd(&scheme, &tokens).unwrap(); }));
+    let _ = s.fwd(&Scheme::fp(), &tokens)?;
+    row("fwd_fp  (B=8, S=128)",
+        &time_n(1, iters, || { s.fwd(&Scheme::fp(), &tokens).unwrap(); }));
+
+    // pallas-kernel artifact variant, if present (tl-llama3)
+    if s.manifest.graphs.iter().any(|g| g == "fwd_pts_pallas") {
+        let run_pallas = || {
+            let (pkv, plen) = s.prefix_args();
+            s.run(
+                "fwd_pts_pallas",
+                &[
+                    HostValue::F32(pkv),
+                    HostValue::scalar_i32(plen),
+                    HostValue::I32(cushioncache::runtime::IntTensor::new(
+                        vec![s.manifest.eval_batch, s.manifest.seq_len],
+                        tokens.clone(),
+                    )),
+                    HostValue::F32(s.ranges.clone()),
+                    HostValue::scalar_f32(scheme.act_levels()),
+                    HostValue::F32(s.inv_smooth.clone()),
+                ],
+            )
+            .unwrap();
+        };
+        run_pallas();
+        row("fwd_pts_pallas (interpret)", &time_n(1, 5, run_pallas));
+    }
+
+    // ---- serving decode breakdown ----------------------------------------
+    let mut s2 = Session::load_with_client(&variant, client.clone())?;
+    calibrate::calibrate_into(&mut s2, scheme.act_levels(), 2)?;
+    let prompt: Vec<i32> = s2.corpus.split("heldout")?.seq(0)[..96].to_vec();
+    let engine = Engine::new(s2, scheme)?;
+    let mut sched = Scheduler::new(engine);
+    sched.submit(prompt.clone(), 8);
+    sched.run_to_completion()?; // warm
+    // fill all 8 slots and measure a full decode step
+    for _ in 0..8 {
+        sched.submit(prompt.clone(), 10_000_000); // never self-stop
+    }
+    for _ in 0..9 {
+        sched.step()?; // admit all prefills + first decodes
+    }
+    row("decode step (batch 8)",
+        &time_n(1, iters, || { sched.step().unwrap(); }));
+
+    // marshalling cost: cache-sized host<->device round trip
+    let m = &sched.engine.session.manifest;
+    let cache_elems =
+        m.n_layers * 2 * m.serve_batch * m.n_kv_heads * m.cache_cap * m.d_head;
+    let host = Tensor::zeros(&[cache_elems]);
+    row("cache upload (alone)", &time_n(1, iters, || {
+        let _ = client.upload(&host).unwrap();
+    }));
+    let buf = client.upload(&host)?;
+    row("cache download (alone)", &time_n(1, iters, || {
+        let _ = cushioncache::runtime::literalx::fetch_f32(&buf).unwrap();
+    }));
+
+    // prefill
+    let t0 = Instant::now();
+    let mut s3 = Session::load_with_client(&variant, client.clone())?;
+    calibrate::calibrate_into(&mut s3, scheme.act_levels(), 1)?;
+    let mut engine3 = Engine::new(s3, scheme)?;
+    engine3.prefill(0, &prompt)?; // warm
+    let _ = t0;
+    row("prefill (prompt 96)", &time_n(1, iters, || {
+        engine3.prefill(0, &prompt).unwrap();
+    }));
+
+    table.emit("perf_hotpath");
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Table 1: WikiText-2 (-> synwiki heldout) perplexity of W8A8-quantized
+//! models, {naive, SmoothQuant} x {per-tensor static, per-tensor dynamic,
+//! per-token dynamic}, with and without CushionCache.
+//!
+//!   cargo bench --bench table1_perplexity
+//!   CUSHION_BENCH_FAST=1 cargo bench --bench table1_perplexity   (smoke)
+
+use cushioncache::bench::scenario::{self, bench_variants, eval_cell, table_rows};
+use cushioncache::bench::Table;
+use cushioncache::eval::perplexity::perplexity;
+use cushioncache::quant::scheme::Scheme;
+use cushioncache::runtime::Client;
+
+fn main() -> anyhow::Result<()> {
+    cushioncache::util::logging::init();
+    let client = Client::cpu()?;
+    let mut table = Table::new(
+        "Table 1 — heldout perplexity of W8A8-quantized models (down = better)",
+        &["scheme", "variant", "no cushion", "+ CushionCache", "delta"],
+    );
+
+    for variant in bench_variants() {
+        // FP reference row
+        let mut s = scenario::prepared(&client, variant, false, false)?;
+        let fp = perplexity(&s, &Scheme::fp(), "heldout", scenario::eval_batches())?;
+        table.row(vec![
+            "FP16".into(), variant.into(), format!("{fp:.2}"), "-".into(), "-".into(),
+        ]);
+
+        for (label, scheme, smooth) in table_rows() {
+            let mut base = scenario::prepared(&client, variant, smooth, false)?;
+            let (ppl0, _) = eval_cell(&mut base, &scheme, false)?;
+            let mut with = scenario::prepared(&client, variant, smooth, true)?;
+            let (ppl1, _) = eval_cell(&mut with, &scheme, false)?;
+            table.row(vec![
+                label.into(),
+                variant.into(),
+                format!("{ppl0:.2}"),
+                format!("{ppl1:.2}"),
+                scenario::pct_delta(ppl0, ppl1),
+            ]);
+            let _ = &mut s;
+        }
+    }
+    table.emit("table1_perplexity");
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Table 2: average zero-shot accuracy over the seven synthetic tasks
+//! (LAMBADA/HellaSwag/PIQA/WinoGrande/OBQA/RTE/COPA analogues), same grid
+//! as Table 1.
+
+use cushioncache::bench::scenario::{self, bench_variants, eval_cell, table_rows};
+use cushioncache::bench::Table;
+use cushioncache::quant::scheme::Scheme;
+use cushioncache::runtime::Client;
+
+fn main() -> anyhow::Result<()> {
+    cushioncache::util::logging::init();
+    let client = Client::cpu()?;
+    let mut table = Table::new(
+        "Table 2 — zero-shot accuracy (7-task average, %; up = better)",
+        &["scheme", "variant", "no cushion", "+ CushionCache", "delta (pp)"],
+    );
+
+    for variant in bench_variants() {
+        let mut s = scenario::prepared(&client, variant, false, false)?;
+        let (_, acc_fp) = eval_cell(&mut s, &Scheme::fp(), true)?;
+        table.row(vec![
+            "FP16".into(), variant.into(), format!("{acc_fp:.2}"), "-".into(),
+            "-".into(),
+        ]);
+        for (label, scheme, smooth) in table_rows() {
+            let mut base = scenario::prepared(&client, variant, smooth, false)?;
+            let (_, a0) = eval_cell(&mut base, &scheme, true)?;
+            let mut with = scenario::prepared(&client, variant, smooth, true)?;
+            let (_, a1) = eval_cell(&mut with, &scheme, true)?;
+            table.row(vec![
+                label.into(),
+                variant.into(),
+                format!("{a0:.2}"),
+                format!("{a1:.2}"),
+                format!("{:+.2}", a1 - a0),
+            ]);
+        }
+    }
+    table.emit("table2_zeroshot");
+    Ok(())
+}

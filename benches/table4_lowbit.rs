@@ -1,0 +1,46 @@
+//! Table 4: W6A6 / W4A4 per-token dynamic quantization (SmoothQuant-O1)
+//! on tl-llama3 and tl-mistral, with and without CushionCache.
+
+use cushioncache::bench::scenario::{self, eval_cell};
+use cushioncache::bench::Table;
+use cushioncache::quant::scales;
+use cushioncache::quant::scheme::{Algorithm, Granularity, Scheme, SMOOTH_ALPHA};
+use cushioncache::runtime::Client;
+
+fn main() -> anyhow::Result<()> {
+    cushioncache::util::logging::init();
+    let client = Client::cpu()?;
+    let mut table = Table::new(
+        "Table 4 — low-bit per-token dynamic (SmoothQuant-O1) +/- CushionCache",
+        &["variant", "bits", "ppl", "+cushion ppl", "acc", "+cushion acc"],
+    );
+
+    for variant in ["tl-llama3", "tl-mistral"] {
+        for bits in [6u32, 4u32] {
+            let scheme = Scheme::wnan(
+                bits, Granularity::PerTokenDynamic,
+                Algorithm::SmoothQuant { alpha: SMOOTH_ALPHA });
+            let run = |with: bool| -> anyhow::Result<(f64, f64)> {
+                let mut s = scenario::prepared(&client, variant, true, with)?;
+                // weight quantization to the same bit-width (paper WxAx)
+                let mut w = s.weights.clone();
+                for name in w.names.clone() {
+                    if scales::is_quantized_weight(&name) {
+                        scales::quant_weight_inplace(w.get_mut(&name)?, bits, 64);
+                    }
+                }
+                s.set_weights(w);
+                eval_cell(&mut s, &scheme, true)
+            };
+            let (p0, a0) = run(false)?;
+            let (p1, a1) = run(true)?;
+            table.row(vec![
+                variant.into(), format!("W{bits}A{bits}"),
+                format!("{p0:.2}"), format!("{p1:.2}"),
+                format!("{a0:.2}"), format!("{a1:.2}"),
+            ]);
+        }
+    }
+    table.emit("table4_lowbit");
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! Table 5: top-1 / top-10% / median activation magnitudes of the input
+//! to the last transformer block, before and after CushionCache.
+
+use cushioncache::bench::scenario;
+use cushioncache::bench::Table;
+use cushioncache::eval::actstats;
+use cushioncache::runtime::Client;
+
+fn main() -> anyhow::Result<()> {
+    cushioncache::util::logging::init();
+    let client = Client::cpu()?;
+    let mut table = Table::new(
+        "Table 5 — activation magnitude order statistics (last block input)",
+        &["model", "top-1", "top 10%", "median"],
+    );
+    let n = if scenario::fast_mode() { 1 } else { 8 };
+
+    for variant in ["tl-llama", "tl-llama3", "tl-mistral"] {
+        let s = scenario::prepared(&client, variant, false, false)?;
+        let rep = actstats::collect(&s, n)?;
+        let [t1, t10, med] = rep.last_block();
+        table.row(vec![variant.into(), format!("{t1:.2}"),
+                       format!("{t10:.2}"), format!("{med:.2}")]);
+
+        let sc = scenario::prepared(&client, variant, false, true)?;
+        let rep = actstats::collect(&sc, n)?;
+        let [t1, t10, med] = rep.last_block();
+        table.row(vec![format!("{variant} + CushionCache"), format!("{t1:.2}"),
+                       format!("{t10:.2}"), format!("{med:.2}")]);
+    }
+    table.emit("table5_magnitudes");
+    Ok(())
+}

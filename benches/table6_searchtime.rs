@@ -1,0 +1,43 @@
+//! Table 6: wall-clock of step 1 (greedy search) and step 2 (QAT prefix
+//! tuning). We measure a strided sweep and report both the measured time
+//! and the full-vocabulary extrapolation (the sweep is embarrassingly
+//! batched, so cost scales linearly in candidates — the paper's LLaMA3
+//! row being slowest for its larger embedding table reproduces directly).
+
+use cushioncache::bench::scenario;
+use cushioncache::bench::Table;
+use cushioncache::cushion::{self, SearchCfg, TuneCfg};
+use cushioncache::runtime::Client;
+
+fn main() -> anyhow::Result<()> {
+    cushioncache::util::logging::init();
+    let client = Client::cpu()?;
+    let stride = if scenario::fast_mode() { 32 } else { 8 };
+    let mut table = Table::new(
+        "Table 6 — CushionCache discovery wall-clock",
+        &["model", "vocab", "step 1 search (s)", "step 1 full-sweep est (s)",
+          "step 2 tuning (s)", "total est (s)"],
+    );
+
+    for variant in ["tl-llama", "tl-llama3", "tl-opt"] {
+        let s = scenario::prepared(&client, variant, false, false)?;
+        let res = cushion::greedy_search(
+            &s,
+            &SearchCfg { vocab_stride: stride, max_len: 4, ..Default::default() },
+        )?;
+        let est_full = res.seconds * stride as f64;
+        let epochs = if scenario::fast_mode() { 1 } else { 2 };
+        let tuned = cushion::tune::tune_prefix(
+            &s, &res.prefix, &TuneCfg { epochs, ..Default::default() })?;
+        table.row(vec![
+            variant.into(),
+            format!("{}", s.manifest.vocab),
+            format!("{:.1}", res.seconds),
+            format!("{est_full:.1}"),
+            format!("{:.1}", tuned.seconds),
+            format!("{:.1}", est_full + tuned.seconds),
+        ]);
+    }
+    table.emit("table6_searchtime");
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Table 7 (Appendix A.1): mmlu-syn (14 subjects) under SmoothQuant
+//! O3/O2/O1 with and without CushionCache.
+
+use cushioncache::bench::scenario::{self, task_items};
+use cushioncache::bench::Table;
+use cushioncache::data::tasks as dtasks;
+use cushioncache::eval::tasks as etasks;
+use cushioncache::quant::calibrate;
+use cushioncache::quant::scheme::{Algorithm, Granularity, Scheme, SMOOTH_ALPHA};
+use cushioncache::runtime::Client;
+
+fn main() -> anyhow::Result<()> {
+    cushioncache::util::logging::init();
+    let client = Client::cpu()?;
+    let sq = Algorithm::SmoothQuant { alpha: SMOOTH_ALPHA };
+    let rows = [
+        ("SmoothQuant-O3", Granularity::PerTensorStatic),
+        ("SmoothQuant-O2", Granularity::PerTensorDynamic),
+        ("SmoothQuant-O1", Granularity::PerTokenDynamic),
+    ];
+    let mut table = Table::new(
+        "Table 7 — mmlu-syn accuracy (%), SmoothQuant +/- CushionCache",
+        &["scheme", "variant", "no cushion", "+ CushionCache", "delta (pp)"],
+    );
+
+    let variants: Vec<&str> = if scenario::fast_mode() {
+        vec!["tl-llama"]
+    } else {
+        vec!["tl-llama", "tl-mistral", "tl-llama3"]
+    };
+    for variant in variants {
+        // FP reference
+        let mut s = scenario::prepared(&client, variant, false, false)?;
+        let fp = mmlu_acc(&mut s, &Scheme::fp())?;
+        table.row(vec!["FP16".into(), variant.into(), format!("{fp:.2}"),
+                       "-".into(), "-".into()]);
+        for (label, gran) in rows {
+            let scheme = Scheme::w8a8(gran, sq);
+            let mut base = scenario::prepared(&client, variant, true, false)?;
+            let a0 = mmlu_acc(&mut base, &scheme)?;
+            let mut with = scenario::prepared(&client, variant, true, true)?;
+            let a1 = mmlu_acc(&mut with, &scheme)?;
+            table.row(vec![
+                label.into(), variant.into(), format!("{a0:.2}"),
+                format!("{a1:.2}"), format!("{:+.2}", a1 - a0),
+            ]);
+        }
+    }
+    table.emit("table7_mmlu");
+    Ok(())
+}
+
+fn mmlu_acc(s: &mut cushioncache::model::session::Session,
+            scheme: &Scheme) -> anyhow::Result<f64> {
+    if scheme.gran.needs_calibration() {
+        calibrate::calibrate_into(s, scheme.act_levels(), scenario::eval_batches())?;
+    }
+    let all = dtasks::load(
+        &cushioncache::util::fsutil::variant_dir(&s.manifest.variant)
+            .join("tasks.bin"))?;
+    let t = dtasks::find(&all, "mmlu-syn")?;
+    let sc = etasks::eval_task(s, scheme, t, task_items() * 2)?;
+    Ok(sc.accuracy * 100.0)
+}

@@ -1,0 +1,56 @@
+//! Table 8 (Appendix A.2): serving latency — TTFT (prefill) and TPOT
+//! (decode) per granularity, with and without CushionCache. The paper's
+//! claim to reproduce: the cushion adds well under 1% to either number
+//! while unlocking the fastest (per-tensor static) path.
+
+use cushioncache::bench::scenario;
+use cushioncache::bench::{summarize, Table};
+use cushioncache::coordinator::{Engine, Scheduler};
+use cushioncache::quant::calibrate;
+use cushioncache::quant::scheme::{Algorithm, Granularity, Scheme};
+use cushioncache::runtime::Client;
+
+fn main() -> anyhow::Result<()> {
+    cushioncache::util::logging::init();
+    let client = Client::cpu()?;
+    let variant = "tl-llama3";
+    let n_decode = if scenario::fast_mode() { 16 } else { 64 };
+    let mut table = Table::new(
+        "Table 8 — generation latency (tl-llama3, prompt 96, batch 1)",
+        &["scheme", "cushion", "TTFT (ms)", "TPOT mean (ms)", "TPOT std (ms)"],
+    );
+
+    for gran in [Granularity::PerTensorStatic, Granularity::PerTensorDynamic,
+                 Granularity::PerTokenDynamic] {
+        for with_cushion in [false, true] {
+            let mut session =
+                scenario::prepared(&client, variant, false, with_cushion)?;
+            let scheme = Scheme::w8a8(gran, Algorithm::Naive);
+            if scheme.gran.needs_calibration() {
+                calibrate::calibrate_into(&mut session, scheme.act_levels(),
+                                          scenario::eval_batches())?;
+            }
+            let prompt = session.corpus.split("heldout")?.seq(0)[..96].to_vec();
+            let engine = Engine::new(session, scheme)?;
+            let mut sched = Scheduler::new(engine);
+
+            // warm-up (compilation + caches), excluded from the numbers
+            sched.submit(prompt.clone(), 4);
+            sched.run_to_completion()?;
+            sched.metrics = Default::default();
+
+            sched.submit(prompt.clone(), n_decode);
+            let resp = sched.run_to_completion()?.pop().unwrap();
+            let tpot = summarize(&resp.tpot);
+            table.row(vec![
+                scheme.label(),
+                if with_cushion { "yes" } else { "no" }.into(),
+                format!("{:.2}", resp.ttft * 1e3),
+                format!("{:.2}", tpot.mean * 1e3),
+                format!("{:.2}", tpot.std * 1e3),
+            ]);
+        }
+    }
+    table.emit("table8_latency");
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! End-to-end reproduction driver (EXPERIMENTS.md §E2E): the full
+//! CushionCache pipeline on one variant, exercising every layer of the
+//! stack — data substrate, AOT graphs via PJRT, calibration, greedy
+//! search (Alg. 1), quantization-aware prefix tuning, recalibration, and
+//! the quantized evaluation grid.
+//!
+//!   cargo run --release --example e2e_repro [variant] [vocab_stride]
+//!
+//! Prints a Table-1-style row block: heldout perplexity for
+//! {fp, pts, ptd, ptk} x {no cushion, + CushionCache}.
+
+use cushioncache::cushion::{self, SearchCfg, TuneCfg};
+use cushioncache::eval::perplexity::perplexity;
+use cushioncache::model::session::{Cushion, Session};
+use cushioncache::quant::calibrate;
+use cushioncache::quant::scheme::{Algorithm, Granularity, Scheme};
+
+fn main() -> anyhow::Result<()> {
+    cushioncache::util::logging::init();
+    let variant = std::env::args().nth(1).unwrap_or_else(|| "tl-llama".into());
+    let stride: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    println!("== e2e reproduction: {variant} (search stride {stride}) ==");
+    let t0 = std::time::Instant::now();
+
+    let mut s = Session::load(&variant)?;
+    let grid = [
+        ("FP16", Scheme::fp()),
+        ("Per-tensor Static", Scheme::w8a8(Granularity::PerTensorStatic, Algorithm::Naive)),
+        ("Per-tensor Dynamic", Scheme::w8a8(Granularity::PerTensorDynamic, Algorithm::Naive)),
+        ("Per-token Dynamic", Scheme::w8a8(Granularity::PerTokenDynamic, Algorithm::Naive)),
+    ];
+
+    // ---- baseline (no cushion) ------------------------------------------
+    let mut before = Vec::new();
+    for (label, scheme) in &grid {
+        if scheme.gran.needs_calibration() {
+            calibrate::calibrate_into(&mut s, scheme.act_levels(), 8)?;
+        }
+        let ppl = perplexity(&s, scheme, "heldout", 8)?;
+        println!("[baseline] {label:22} ppl {ppl:8.2}");
+        before.push(ppl);
+    }
+
+    // ---- stage 1: greedy prefix search (paper §4.1) ---------------------
+    let search = cushion::greedy_search(
+        &s,
+        &SearchCfg { vocab_stride: stride, max_len: 8, ..Default::default() },
+    )?;
+    println!(
+        "[search] prefix {:?} | lq trace {:?} | {} candidates in {:.1}s",
+        search.prefix, search.lq_trace, search.candidates_scored, search.seconds
+    );
+
+    // ---- stage 2: quantization-aware prefix tuning (paper §4.2) ---------
+    let tuned = cushion::tune::tune_prefix(&s, &search.prefix, &TuneCfg::default())?;
+    println!(
+        "[tune] {} steps in {:.1}s, loss {:.4} -> {:.4}, lq {:.5} -> {:.5}",
+        tuned.steps, tuned.seconds,
+        tuned.loss_trace.first().unwrap(), tuned.loss_trace.last().unwrap(),
+        tuned.lq_trace.first().unwrap(), tuned.lq_trace.last().unwrap()
+    );
+    s.cushion = Some(Cushion {
+        tokens: search.prefix.clone(),
+        len: search.prefix.len(),
+        kv: tuned.kv,
+    });
+    cushion::save_cushion(&variant, "e2e", s.cushion.as_ref().unwrap())?;
+
+    // ---- final evaluation with the cushion ------------------------------
+    println!("\n{:24} {:>12} {:>14} {:>9}", "scheme", "no cushion", "+CushionCache", "delta");
+    for ((label, scheme), ppl0) in grid.iter().zip(&before) {
+        if scheme.gran.needs_calibration() {
+            calibrate::calibrate_into(&mut s, scheme.act_levels(), 8)?;
+        }
+        let ppl1 = perplexity(&s, scheme, "heldout", 8)?;
+        let delta = if *ppl0 > 0.0 { (ppl1 - ppl0) / ppl0 * 100.0 } else { 0.0 };
+        println!("{label:24} {ppl0:12.2} {ppl1:14.2} {delta:+8.1}%");
+    }
+    println!("\ntotal e2e wall-clock: {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Quickstart: load a variant, show the outlier problem, fix it with a
+//! CushionCache, and generate text through the serving engine.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+//!
+//! What it demonstrates (≈ the paper's Figure 1 story, in one minute):
+//!  1. FP baseline perplexity on heldout synwiki.
+//!  2. Per-tensor static W8A8 destroys a pre-norm model (Table 1 row 2).
+//!  3. Installing a CushionCache (here the warm-start <bos> cushion — run
+//!     `cushiond pipeline` for the full greedy search + tuning) restores
+//!     near-FP quality (Table 1 row 3).
+//!  4. Serve a few requests through the continuous-batching engine.
+
+use cushioncache::coordinator::{Engine, Scheduler};
+use cushioncache::data::grammar::{Grammar, STREAM_SERVE, CORPUS_SEED};
+use cushioncache::data::tokenizer::Tokenizer;
+use cushioncache::eval::perplexity::perplexity;
+use cushioncache::model::session::Session;
+use cushioncache::quant::calibrate;
+use cushioncache::quant::scheme::{Algorithm, Granularity, Scheme};
+use cushioncache::util::prng::SplitMix64;
+
+fn main() -> anyhow::Result<()> {
+    cushioncache::util::logging::init();
+    let variant = std::env::args().nth(1).unwrap_or_else(|| "tl-llama".into());
+    println!("== CushionCache quickstart: {variant} ==");
+
+    let mut session = Session::load(&variant)?;
+    let fp = Scheme::fp();
+    let w8a8 = Scheme::w8a8(Granularity::PerTensorStatic, Algorithm::Naive);
+
+    // 1) FP baseline
+    let ppl_fp = perplexity(&session, &fp, "heldout", 4)?;
+    println!("[1] FP baseline             heldout ppl = {ppl_fp:8.2}");
+
+    // 2) per-tensor static W8A8, no cushion
+    calibrate::calibrate_into(&mut session, w8a8.act_levels(), 4)?;
+    let ppl_q = perplexity(&session, &w8a8, "heldout", 4)?;
+    println!("[2] W8A8 per-tensor static  heldout ppl = {ppl_q:8.2}   (outliers!)");
+
+    // 3) with a CushionCache prefix (<bos> warm start)
+    session.set_cushion_tokens(&[cushioncache::data::BOS])?;
+    calibrate::calibrate_into(&mut session, w8a8.act_levels(), 4)?;
+    let ppl_c = perplexity(&session, &w8a8, "heldout", 4)?;
+    println!("[3] + CushionCache          heldout ppl = {ppl_c:8.2}   (recovered)");
+
+    // 4) serve a few generation requests through the engine
+    let tokenizer = Tokenizer::new(session.manifest.vocab);
+    let engine = Engine::new(session, w8a8)?;
+    let mut sched = Scheduler::new(engine);
+    let g = Grammar::new(tokenizer.vocab);
+    let mut base = SplitMix64::new(CORPUS_SEED);
+    let mut rng = base.fork(STREAM_SERVE);
+    for i in 0..4 {
+        let mut r = rng.fork(i);
+        let doc = g.document(24, &mut r);
+        sched.submit(doc, 12);
+    }
+    let responses = sched.run_to_completion()?;
+    for r in &responses {
+        println!(
+            "[4] req {} ttft {:5.1} ms, {} tokens: {}",
+            r.id,
+            r.ttft * 1e3,
+            r.tokens.len(),
+            tokenizer.detokenize(&r.tokens)
+        );
+    }
+    let m = sched.metrics.summary();
+    println!(
+        "    served {} reqs, {:.1} tok/s, TPOT {:.1} ms",
+        m.completed,
+        m.tokens_per_second(),
+        m.tpot_mean * 1e3
+    );
+    Ok(())
+}

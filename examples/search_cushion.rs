@@ -1,0 +1,49 @@
+//! Run the full CushionCache discovery (greedy search + QAT prefix
+//! tuning) for a variant and persist it for the benches / server.
+//!
+//!   cargo run --release --example search_cushion [variant] [stride] [name]
+//!
+//! With stride 1 this is the paper's exact Algorithm 1 (full vocabulary
+//! sweep per position); larger strides trade fidelity for wall-clock and
+//! are what the Table 6 bench uses to extrapolate full-sweep cost.
+
+use cushioncache::cushion::{self, SearchCfg, TuneCfg};
+use cushioncache::model::session::{Cushion, Session};
+
+fn main() -> anyhow::Result<()> {
+    cushioncache::util::logging::init();
+    let variant = std::env::args().nth(1).unwrap_or_else(|| "tl-llama".into());
+    let stride: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    let name = std::env::args().nth(3).unwrap_or_else(|| "default".into());
+
+    let s = Session::load(&variant)?;
+    println!("== search_cushion: {variant} (stride {stride}) ==");
+
+    let search = cushion::greedy_search(
+        &s,
+        &SearchCfg { vocab_stride: stride, ..Default::default() },
+    )?;
+    println!(
+        "step 1 (greedy search): prefix {:?}\n  lq trace {:?}\n  {} candidates, {:.1}s",
+        search.prefix, search.lq_trace, search.candidates_scored, search.seconds
+    );
+
+    let tuned = cushion::tune::tune_prefix(&s, &search.prefix, &TuneCfg::default())?;
+    println!(
+        "step 2 (QAT prefix tuning): {} steps, {:.1}s, loss {:.4} -> {:.4}",
+        tuned.steps, tuned.seconds,
+        tuned.loss_trace.first().unwrap(), tuned.loss_trace.last().unwrap()
+    );
+
+    let c = Cushion {
+        tokens: search.prefix.clone(),
+        len: search.prefix.len(),
+        kv: tuned.kv,
+    };
+    let path = cushion::save_cushion(&variant, &name, &c)?;
+    println!("saved cushion '{name}' -> {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Serving demo: spin up the coordinator with a synthetic client load and
+//! report TTFT / TPOT / throughput (the Appendix A.2 measurement, scaled
+//! to this testbed).
+//!
+//!   cargo run --release --example serve_quantized [variant] [gran] [n_reqs]
+//!
+//! Drives the continuous-batching scheduler directly (in-process) with a
+//! Poisson-ish arrival pattern; `cushiond serve` exposes the same engine
+//! over TCP.
+
+use cushioncache::coordinator::{Engine, Scheduler};
+use cushioncache::data::grammar::{Grammar, CORPUS_SEED, STREAM_SERVE};
+use cushioncache::model::session::Session;
+use cushioncache::quant::calibrate;
+use cushioncache::quant::scheme::{Algorithm, Granularity, Scheme};
+use cushioncache::util::prng::SplitMix64;
+
+fn main() -> anyhow::Result<()> {
+    cushioncache::util::logging::init();
+    let variant = std::env::args().nth(1).unwrap_or_else(|| "tl-llama".into());
+    let gran = std::env::args().nth(2).unwrap_or_else(|| "pts".into());
+    let n_reqs: usize = std::env::args()
+        .nth(3)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(24);
+
+    let gran = match gran.as_str() {
+        "fp" => Granularity::Fp,
+        "pts" => Granularity::PerTensorStatic,
+        "ptd" => Granularity::PerTensorDynamic,
+        "ptk" => Granularity::PerTokenDynamic,
+        g => anyhow::bail!("bad granularity {g}"),
+    };
+    let scheme = if gran == Granularity::Fp {
+        Scheme::fp()
+    } else {
+        Scheme::w8a8(gran, Algorithm::Naive)
+    };
+
+    let mut session = Session::load(&variant)?;
+    if let Ok(c) = cushioncache::cushion::load_cushion(&variant, "default") {
+        println!("using stored cushion ({} tokens)", c.len);
+        session.cushion = Some(c);
+    }
+    if scheme.gran.needs_calibration() {
+        calibrate::calibrate_into(&mut session, scheme.act_levels(), 4)?;
+    }
+
+    let engine = Engine::new(session, scheme)?;
+    let mut sched = Scheduler::new(engine);
+
+    // pre-warm: compile prefill+decode before timing (excluded from TTFT)
+    sched.submit(vec![cushioncache::data::BOS, 10, 11], 2);
+    sched.run_to_completion()?;
+    let _ = sched.take_finished();
+    sched.metrics = Default::default();
+
+    // synthetic workload: prompts of 64..96 tokens, 16..32 new tokens
+    let g = Grammar::new(sched.engine.session.manifest.vocab);
+    let mut base = SplitMix64::new(CORPUS_SEED);
+    let mut rng = base.fork(STREAM_SERVE);
+    let mut pending: Vec<(usize, Vec<i32>, usize)> = (0..n_reqs)
+        .map(|i| {
+            let mut r = rng.fork(i as u64);
+            let plen = 64 + r.next_below(32) as usize;
+            let new = 16 + r.next_below(16) as usize;
+            (i, g.document(plen, &mut r), new)
+        })
+        .collect();
+    pending.reverse();
+
+    let t0 = std::time::Instant::now();
+    // feed 4 requests up front, then one per step (open-loop-ish arrivals)
+    for _ in 0..4 {
+        if let Some((_, p, n)) = pending.pop() {
+            sched.submit(p, n);
+        }
+    }
+    while sched.has_work() || !pending.is_empty() {
+        if let Some((_, p, n)) = pending.pop() {
+            sched.submit(p, n);
+        }
+        sched.step()?;
+    }
+    let m = sched.metrics.summary();
+    println!("\n== serve_quantized: {variant} / {} ==", scheme.label());
+    println!("requests          : {}", m.completed);
+    println!("wall-clock        : {:.2}s", t0.elapsed().as_secs_f64());
+    println!("throughput        : {:.1} tok/s", m.tokens_per_second());
+    println!("TTFT  mean / p99  : {:.1} / {:.1} ms", m.ttft_mean * 1e3, m.ttft_p99 * 1e3);
+    println!("TPOT  mean / p99  : {:.1} / {:.1} ms", m.tpot_mean * 1e3, m.tpot_p99 * 1e3);
+    println!("decode step mean  : {:.1} ms at batch {:.1}", m.decode_mean * 1e3, m.mean_batch);
+    println!("prefill mean      : {:.1} ms", m.prefill_mean * 1e3);
+    Ok(())
+}

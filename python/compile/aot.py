@@ -1,0 +1,172 @@
+"""AOT pipeline: train/cache the tiny families, then lower every graph to
+HLO *text* and dump the data artifacts the Rust coordinator consumes.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Layout (per variant, under artifacts/<variant>/):
+    weights.bin      trained + planted parameters (binio format)
+    manifest.json    config, tensor spec, graph inventory, constants
+    corpus.bin       calib/heldout/train-sample splits (vocab-dependent)
+    tasks.bin        zero-shot + mmlu + gsm task sets
+    golden.json      reference outputs for the Rust integration tests
+    <graph>.hlo.txt  one per graph (graphs.graph_inventory)
+
+`make artifacts` is incremental: a variant is skipped when its stamp file
+is newer than the python/compile sources.
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import binio
+from . import configs as C
+from . import datagen
+from . import graphs
+from . import model as M
+from . import train
+from .quantlib import QuantCtx
+
+N_CALIB = 64
+N_HELDOUT = 64
+N_TRAINSAMPLE = 8
+SPLIT_STREAMS = {"calib": 1, "heldout": 2, "trainsample": 3}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    # return_tuple=False: each graph output becomes its own PJRT output
+    # buffer, so the rust runtime can keep big state (the KV cache) on
+    # device and fetch only the small outputs (logits) to the host.
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False)
+    return comp.as_hlo_text()
+
+
+def lower_graph(fn, specs) -> str:
+    # keep_unused=True: the rust runtime feeds every graph the same
+    # argument layout (weights ++ graph args); without it jax prunes
+    # arguments a particular mode ignores (e.g. `ranges` in fwd_fp) and
+    # the buffer counts no longer line up.
+    return to_hlo_text(jax.jit(fn, keep_unused=True).lower(*specs))
+
+
+def manifest_for(cfg: C.ModelCfg, graph_names):
+    return {
+        "variant": cfg.name,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "n_kv_heads": cfg.n_kv_heads,
+        "d_head": cfg.d_head,
+        "d_ff": cfg.d_ff,
+        "norm": cfg.norm,
+        "act": cfg.act,
+        "pos": cfg.pos,
+        "window": cfg.window if cfg.window is not None else 0,
+        "n_sites": cfg.n_sites,
+        "seq_len": C.SEQ_LEN,
+        "m_max": C.M_MAX,
+        "cache_cap": C.CACHE_CAP,
+        "serve_batch": C.SERVE_BATCH,
+        "eval_batch": C.EVAL_BATCH,
+        "score_batch": C.SCORE_BATCH,
+        "score_text_len": C.SCORE_TEXT_LEN,
+        "tune_batch": C.TUNE_BATCH,
+        "params": [{"name": n, "shape": list(s)} for n, s in M.param_spec(cfg)],
+        "graphs": sorted(graph_names),
+    }
+
+
+def golden_outputs(cfg, params, calib):
+    """Small reference outputs for the Rust runtime integration tests."""
+    tokens = jnp.asarray(calib[:C.EVAL_BATCH], jnp.int32)
+    qctx = QuantCtx(mode="fp")
+    logits, aux = M.fwd(cfg, params, tokens, M.empty_prefix(cfg),
+                        jnp.asarray(0, jnp.int32), qctx)
+    lp = M.token_logprobs(logits, tokens)
+    ppl = float(jnp.exp(-jnp.mean(lp)))
+    lg = np.array(logits)
+    return {
+        "fp_ppl_calib8": ppl,
+        "logits_probe": [
+            float(lg[0, 0, 0]), float(lg[0, 1, 1]),
+            float(lg[-1, -1, -1]), float(np.mean(lg)),
+        ],
+        "minmax_site0": [float(aux["minmax"][0, 0]), float(aux["minmax"][0, 1])],
+    }
+
+
+def build_variant(cfg: C.ModelCfg, out_dir: str, steps: int, log=print):
+    vdir = os.path.join(out_dir, cfg.name)
+    os.makedirs(vdir, exist_ok=True)
+
+    wpath = os.path.join(vdir, "weights.bin")
+    if os.path.exists(wpath):
+        log(f"[{cfg.name}] weights cached")
+        tensors = binio.read_weights(wpath)
+        params = {n: jnp.asarray(a) for n, a in tensors}
+    else:
+        log(f"[{cfg.name}] training ({steps} steps)...")
+        tcfg = C.TrainCfg(steps=steps)
+        params, loss = train.train_variant(cfg, tcfg, log=log)
+        binio.write_weights(
+            wpath, [(n, np.array(params[n])) for n, _ in M.param_spec(cfg)])
+        log(f"[{cfg.name}] trained, final loss {loss:.3f}")
+
+    # corpus + tasks (vocab-dependent)
+    splits = []
+    for name, stream in SPLIT_STREAMS.items():
+        n = {"calib": N_CALIB, "heldout": N_HELDOUT,
+             "trainsample": N_TRAINSAMPLE}[name]
+        splits.append((name, datagen.corpus_split(cfg.vocab, n, C.SEQ_LEN,
+                                                  stream)))
+    binio.write_corpus(os.path.join(vdir, "corpus.bin"), splits)
+    binio.write_tasks(os.path.join(vdir, "tasks.bin"),
+                      datagen.build_all_tasks(cfg.vocab))
+
+    with open(os.path.join(vdir, "golden.json"), "w") as f:
+        json.dump(golden_outputs(cfg, params, np.asarray(splits[0][1])), f,
+                  indent=1)
+
+    inv = graphs.graph_inventory(cfg, pallas_variants=cfg.name == "tl-llama3")
+    for name, (fn, specs) in inv.items():
+        path = os.path.join(vdir, f"{name}.hlo.txt")
+        t0 = time.time()
+        text = lower_graph(fn, specs)
+        with open(path, "w") as f:
+            f.write(text)
+        log(f"[{cfg.name}] lowered {name} ({len(text) // 1024} KiB, "
+            f"{time.time() - t0:.1f}s)")
+
+    with open(os.path.join(vdir, "manifest.json"), "w") as f:
+        json.dump(manifest_for(cfg, list(inv)), f, indent=1)
+    log(f"[{cfg.name}] done")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--variants", default=",".join(C.VARIANTS))
+    ap.add_argument("--steps", type=int, default=C.TRAIN.steps)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for name in args.variants.split(","):
+        build_variant(C.VARIANTS[name], args.out, args.steps)
+    with open(os.path.join(args.out, ".stamp"), "w") as f:
+        f.write(str(time.time()))
+
+
+if __name__ == "__main__":
+    main()

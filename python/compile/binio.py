@@ -1,0 +1,83 @@
+"""Binary interchange formats shared with the Rust side
+(rust/src/model/weights.rs, rust/src/data/corpus.rs, rust/src/data/tasks.rs).
+
+All integers little-endian u32 unless noted; token ids i32; floats f32.
+
+weights.bin : "CCW1" | n_tensors | { name_len, name, ndim, dims..., f32[] }
+corpus.bin  : "CCC1" | n_splits  | { name_len, name, n_seqs, seq_len, i32[] }
+tasks.bin   : "CCT1" | n_tasks   | { name_len, name, n_items,
+                { kind, meta, ctx_len, i32[], n_cands, gold,
+                  { cand_len, i32[] } } }
+"""
+
+import struct
+
+import numpy as np
+
+
+def _w_str(f, s: str):
+    b = s.encode()
+    f.write(struct.pack("<I", len(b)))
+    f.write(b)
+
+
+def write_weights(path, tensors):
+    """tensors: ordered list of (name, np.ndarray f32)."""
+    with open(path, "wb") as f:
+        f.write(b"CCW1")
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr, np.float32)
+            _w_str(f, name)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read_weights(path):
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:4] == b"CCW1"
+    off = 4
+    (n,) = struct.unpack_from("<I", data, off); off += 4
+    out = []
+    for _ in range(n):
+        (ln,) = struct.unpack_from("<I", data, off); off += 4
+        name = data[off:off + ln].decode(); off += ln
+        (nd,) = struct.unpack_from("<I", data, off); off += 4
+        dims = struct.unpack_from(f"<{nd}I", data, off); off += 4 * nd
+        cnt = int(np.prod(dims)) if nd else 1
+        arr = np.frombuffer(data, np.float32, cnt, off).reshape(dims)
+        off += 4 * cnt
+        out.append((name, arr))
+    return out
+
+
+def write_corpus(path, splits):
+    """splits: list of (name, list[list[int]] all same length)."""
+    with open(path, "wb") as f:
+        f.write(b"CCC1")
+        f.write(struct.pack("<I", len(splits)))
+        for name, seqs in splits:
+            arr = np.asarray(seqs, np.int32)
+            _w_str(f, name)
+            f.write(struct.pack("<II", arr.shape[0], arr.shape[1]))
+            f.write(arr.tobytes())
+
+
+def write_tasks(path, tasks):
+    """tasks: list of datagen.Task."""
+    with open(path, "wb") as f:
+        f.write(b"CCT1")
+        f.write(struct.pack("<I", len(tasks)))
+        for t in tasks:
+            _w_str(f, t.name)
+            f.write(struct.pack("<I", len(t.items)))
+            for it in t.items:
+                f.write(struct.pack("<III", it.kind, it.meta, len(it.context)))
+                f.write(np.asarray(it.context, np.int32).tobytes())
+                f.write(struct.pack("<II", len(it.candidates), it.gold))
+                for cand in it.candidates:
+                    f.write(struct.pack("<I", len(cand)))
+                    f.write(np.asarray(cand, np.int32).tobytes())

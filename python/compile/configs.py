@@ -1,0 +1,156 @@
+"""Model-variant and pipeline configuration.
+
+Five tiny decoder-only transformer families stand in for the paper's five
+evaluation models (DESIGN.md §1). All share d_model=256 / 4 layers / 4 query
+heads / head_dim 64 so the serving graphs stay CPU-friendly, while each keeps
+the architectural signature of its namesake:
+
+  tl-llama   — pre-RMSNorm, SwiGLU, RoPE, MHA                (~LLaMA2-7B)
+  tl-llama3  — + GQA (2 KV heads) and a 2x embedding table   (~LLaMA3-8B)
+  tl-mistral — + sliding-window attention (window 64)        (~Mistral-7B)
+  tl-opt     — post-LayerNorm, ReLU MLP, learned positions   (~OPT-6.7B)
+  tl-bloom   — post-LayerNorm, GELU MLP, ALiBi               (~BLOOM-7B)
+
+The planted outlier/sink circuit (plant.py, DESIGN.md §3) reserves a handful
+of channels and one head; the reserved layout lives here so model, plant,
+training freeze-masks, and tests all agree.
+"""
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+SEQ_LEN = 128          # training / eval sequence length
+M_MAX = 16             # maximum CushionCache prefix length
+CACHE_CAP = M_MAX + SEQ_LEN  # KV slot capacity in the serving graphs
+SERVE_BATCH = 8        # decode batch (slot count) in the serving graphs
+EVAL_BATCH = 8         # batch of the eval fwd graphs
+SCORE_BATCH = 64       # candidate batch of the greedy-search scorer
+SCORE_TEXT_LEN = 96    # text length n used by the scorer (paper uses 512)
+TUNE_BATCH = 8         # batch of the prefix-tuning step
+
+# Quantization sites per transformer block, in order. These are the inputs
+# of the four quantized matmul groups of a block (the tensors W8A8 actually
+# quantizes): attention in (q/k/v proj input), attention out (o_proj input),
+# MLP in (gate/up input), MLP hidden (down_proj input).
+SITES_PER_LAYER = 4
+SITE_NAMES = ("attn_in", "attn_out", "mlp_in", "mlp_hidden")
+
+
+@dataclass(frozen=True)
+class Reserved:
+    """Reserved channel/unit layout for the planted circuit (d_model=256)."""
+
+    trig: tuple = (240, 241, 242, 243)  # trigger-feature block T
+    sink: int = 244                     # sink-presence dim s
+    one: int = 245                      # always-on dim (bias substitute)
+    out: tuple = (13, 201)              # massive-activation dims c
+    head: int = 0                       # reserved attention head index
+    hidden: int = 0                     # reserved MLP hidden unit j0
+
+    @property
+    def all_dims(self) -> tuple:
+        return self.trig + (self.sink, self.one) + self.out
+
+
+@dataclass(frozen=True)
+class PlantCfg:
+    """Strengths of the planted circuit (DESIGN.md §3). The pre-norm
+    families get a large injection (raw massive residuals, like
+    LLaMA/Mistral); the post-LN families a small one (normalized away,
+    like OPT/BLOOM) — reproducing the paper's family split.
+
+    With rms r of the residual at the injection site, the massive value is
+    ~ silu(gate_pos*4/r) * (up_gain/r) * magnitude for gated MLPs
+    (~1900/r^2 at defaults) and ~ gate_pos*4/r * magnitude for
+    ReLU/GELU MLPs (~32/r at the post-LN defaults)."""
+
+    magnitude: float = 2.0    # W_down gain from the reserved hidden unit
+    key_gain: float = 8.0     # trigger-key boost in the detector head
+    query_gain: float = 8.0   # constant-query gain (via the `one` dim)
+    value_gain: float = 3.0   # sink-presence value gain
+    sink_write: float = 0.05  # W_o gain writing the sink-presence signal
+    gate_pos: float = 40.0    # gate weight on the trigger feature
+    gate_neg: float = 2400.0  # gate weight on the sink-presence signal
+    up_gain: float = 6.0      # reserved up-projection gain (gated MLPs)
+    sink_key: float = 0.6     # massive-channel key gain of later sink heads
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_head: int = 64
+    d_ff: int = 688
+    norm: str = "rmsnorm_pre"   # "rmsnorm_pre" | "ln_post"
+    act: str = "swiglu"         # "swiglu" | "relu" | "gelu"
+    pos: str = "rope"           # "rope" | "learned" | "alibi"
+    window: Optional[int] = None  # sliding-window size (None = full causal)
+    rope_theta: float = 10000.0
+    reserved: Reserved = field(default_factory=Reserved)
+    plant: PlantCfg = field(default_factory=PlantCfg)
+    seed: int = 0
+
+    @property
+    def n_sites(self) -> int:
+        return self.n_layers * SITES_PER_LAYER
+
+    @property
+    def group_size(self) -> int:
+        """KV-head group size for GQA."""
+        return self.n_heads // self.n_kv_heads
+
+
+def _mk(name: str, seed: int, **kw) -> ModelCfg:
+    return ModelCfg(name=name, seed=seed, **kw)
+
+
+# GQA variants: the semantic q-heads that share the plant's KV head carry
+# the detector value through their (trained) W_o rows; a large value_gain
+# would inflate the sink token's residual and choke the injection, so GQA
+# variants use a small value with a compensating sink_write gain.
+_GQA_PLANT = PlantCfg(value_gain=0.15, sink_write=1.0)
+
+VARIANTS = {
+    "tl-llama": _mk("tl-llama", seed=101),
+    "tl-llama3": _mk("tl-llama3", seed=102, vocab=1024, n_kv_heads=2,
+                     plant=_GQA_PLANT),
+    "tl-mistral": _mk("tl-mistral", seed=103, n_kv_heads=2, window=64,
+                      plant=_GQA_PLANT),
+    "tl-opt": _mk(
+        "tl-opt", seed=104, norm="ln_post", act="relu", pos="learned",
+        d_ff=1024,
+        plant=PlantCfg(magnitude=0.2, gate_neg=1000.0),
+    ),
+    "tl-bloom": _mk(
+        "tl-bloom", seed=105, norm="ln_post", act="gelu", pos="alibi",
+        d_ff=1024,
+        plant=PlantCfg(magnitude=0.2, gate_neg=1000.0),
+    ),
+}
+
+# Tokenizer special ids (shared by python/compile/tokenizer.py and
+# rust/src/data/tokenizer.rs).
+BOS, NL, DOT, PAD = 0, 1, 2, 3
+N_SPECIAL = 4
+TRIGGER_TOKENS = (BOS, NL, DOT)
+
+# Grammar shape (datagen.py + rust/src/data/grammar.rs).
+N_TOPICS = 14
+GRAMMAR_SEED = 0xC0DE
+
+
+@dataclass(frozen=True)
+class TrainCfg:
+    steps: int = 300
+    batch: int = 16
+    lr: float = 3e-3
+    warmup: int = 40
+    clip: float = 1.0
+    seed: int = 7
+
+
+TRAIN = TrainCfg()

@@ -1,0 +1,296 @@
+"""`synwiki` — the synthetic corpus + task suite standing in for
+WikiText-2 / C4 / the LM-eval-harness sets (DESIGN.md §1).
+
+Structure (mirrored bit-for-bit by rust/src/data/grammar.rs):
+
+* The vocabulary is split into `N_TOPICS` topic blocks. Each topic owns a
+  sparse Markov chain over its block: token index `t` has 3 allowed
+  successors with weights (0.55, 0.30, 0.15); the successor table is a pure
+  function of (topic, t, k) via the stateless SplitMix64 finalizer, so both
+  languages materialize identical tables.
+* A sentence is: starter s0 (index < 8) -> Markov body (3..7 tokens) ->
+  the *agreement token* agree(s0) = (7*s0 + 3) mod block_size -> <dot>.
+  The agreement token is a long-range dependency: it is determined by the
+  sentence's first token, forcing attention across the sentence.
+* Every 4th sentence is followed by <nl>. Documents start with <bos>.
+  Topics are sticky (switch prob 0.1 at sentence boundaries).
+
+The delimiter tokens (<bos>, <nl>, <dot>) are the "semantically
+meaningless" tokens the planted sink circuit keys on, mirroring the
+paper's observation that outliers sit on low-semantic tokens.
+
+Tasks: seven zero-shot analogues (lambada/hellaswag/piqa/winogrande/
+obqa/rte/copa), a 14-subject mmlu analogue, and a generative gsm
+analogue. Every multiple-choice item is scored by length-normalized
+candidate log-likelihood; `argmax` items by exact next-token argmax.
+"""
+
+from dataclasses import dataclass, field
+from typing import List
+
+from . import configs as C
+from .prng import SplitMix64, hash64
+
+SUCC_WEIGHTS = (0.55, 0.30, 0.15)
+N_STARTERS = 8
+BODY_MIN, BODY_RANGE = 3, 5
+SENTS_PER_PARA = 4
+TOPIC_SWITCH = 0.1
+
+
+class Grammar:
+    def __init__(self, vocab: int, seed: int = C.GRAMMAR_SEED):
+        self.vocab = vocab
+        self.tpt = (vocab - C.N_SPECIAL) // C.N_TOPICS
+        self.seed = seed
+
+    def successor(self, topic: int, t: int, k: int) -> int:
+        """k-th allowed successor (within-topic index) of token index t."""
+        h = hash64(self.seed ^ (topic * 131071 + t * 31 + k))
+        return h % self.tpt
+
+    def step(self, topic: int, t: int, rng: SplitMix64) -> int:
+        u = rng.next_f64()
+        k = 0 if u < SUCC_WEIGHTS[0] else (1 if u < SUCC_WEIGHTS[0] + SUCC_WEIGHTS[1] else 2)
+        return self.successor(topic, t, k)
+
+    def agree(self, s0: int) -> int:
+        return (7 * s0 + 3) % self.tpt
+
+    def gid(self, topic: int, idx: int) -> int:
+        return C.N_SPECIAL + topic * self.tpt + idx
+
+    def sentence(self, topic: int, rng: SplitMix64) -> List[int]:
+        s0 = rng.next_below(N_STARTERS)
+        body_len = BODY_MIN + rng.next_below(BODY_RANGE)
+        toks = [s0]
+        cur = s0
+        for _ in range(body_len):
+            cur = self.step(topic, cur, rng)
+            toks.append(cur)
+        toks.append(self.agree(s0))
+        return [self.gid(topic, t) for t in toks] + [C.DOT]
+
+    def document(self, length: int, rng: SplitMix64) -> List[int]:
+        toks = [C.BOS]
+        topic = rng.next_below(C.N_TOPICS)
+        n_sent = 0
+        while len(toks) < length:
+            if n_sent > 0 and rng.next_f64() < TOPIC_SWITCH:
+                topic = rng.next_below(C.N_TOPICS)
+            toks.extend(self.sentence(topic, rng))
+            n_sent += 1
+            if n_sent % SENTS_PER_PARA == 0:
+                toks.append(C.NL)
+        return toks[:length]
+
+
+# ---------------------------------------------------------------------------
+# Task suite
+# ---------------------------------------------------------------------------
+
+KIND_ARGMAX = 0   # predict exact next token (lambada-style); cands = [gold]
+KIND_MC = 1       # choose among candidate continuations by mean LL
+KIND_GEN = 2      # greedy-generate until <dot>; exact-match the gold token
+
+
+@dataclass
+class TaskItem:
+    kind: int
+    context: List[int]
+    candidates: List[List[int]]
+    gold: int
+    meta: int = 0  # mmlu subject id, gsm answer position, etc.
+
+
+@dataclass
+class Task:
+    name: str
+    items: List[TaskItem] = field(default_factory=list)
+
+
+def _context_doc(g: Grammar, topic: int, rng: SplitMix64, n_sent: int) -> List[int]:
+    toks = [C.BOS]
+    for _ in range(n_sent):
+        toks.extend(g.sentence(topic, rng))
+    return toks
+
+
+def _other_topic(topic: int, rng: SplitMix64) -> int:
+    o = rng.next_below(C.N_TOPICS - 1)
+    return o if o < topic else o + 1
+
+
+def _shuffle_gold(cands: List[List[int]], rng: SplitMix64):
+    """Place the (currently first) gold candidate at a random slot."""
+    gold = rng.next_below(len(cands))
+    cands[0], cands[gold] = cands[gold], cands[0]
+    return cands, gold
+
+
+def build_lambada(g: Grammar, rng: SplitMix64, n: int) -> Task:
+    t = Task("lambada-syn")
+    for _ in range(n):
+        topic = rng.next_below(C.N_TOPICS)
+        ctx = _context_doc(g, topic, rng, 1)
+        sent = g.sentence(topic, rng)
+        # context ends right before the agreement token of the final sentence
+        t.items.append(TaskItem(KIND_ARGMAX, ctx + sent[:-2], [[sent[-2]]], 0))
+    return t
+
+
+def build_hellaswag(g: Grammar, rng: SplitMix64, n: int) -> Task:
+    t = Task("hellaswag-syn")
+    for _ in range(n):
+        topic = rng.next_below(C.N_TOPICS)
+        sent = g.sentence(topic, rng)
+        while len(sent) < 8:  # ensure a full 4-token continuation
+            sent = g.sentence(topic, rng)
+        ctx = [C.BOS] + sent[:3]
+        cands = [sent[3:7]]
+        while len(cands) < 4:
+            ot = _other_topic(topic, rng)
+            cands.append(g.sentence(ot, rng)[1:5])
+        cands, gold = _shuffle_gold(cands, rng)
+        t.items.append(TaskItem(KIND_MC, ctx, cands, gold))
+    return t
+
+
+def build_piqa(g: Grammar, rng: SplitMix64, n: int) -> Task:
+    t = Task("piqa-syn")
+    for _ in range(n):
+        topic = rng.next_below(C.N_TOPICS)
+        sent = g.sentence(topic, rng)
+        cut = 2 + rng.next_below(2)
+        ctx = [C.BOS] + sent[:cut]
+        cur = (sent[cut - 1] - C.N_SPECIAL) % g.tpt
+        good = g.successor(topic, cur, 0)
+        bad = good
+        while bad in (g.successor(topic, cur, 0), g.successor(topic, cur, 1),
+                      g.successor(topic, cur, 2)):
+            bad = rng.next_below(g.tpt)
+        cands = [[g.gid(topic, good)], [g.gid(topic, bad)]]
+        cands, gold = _shuffle_gold(cands, rng)
+        t.items.append(TaskItem(KIND_MC, ctx, cands, gold))
+    return t
+
+
+def build_winogrande(g: Grammar, rng: SplitMix64, n: int) -> Task:
+    t = Task("winogrande-syn")
+    for _ in range(n):
+        topic = rng.next_below(C.N_TOPICS)
+        sent = g.sentence(topic, rng)
+        s0 = (sent[0] - C.N_SPECIAL) % g.tpt
+        wrong_s0 = (s0 + 1 + rng.next_below(N_STARTERS - 1)) % N_STARTERS
+        ctx = [C.BOS] + sent[:-2]
+        cands = [[g.gid(topic, g.agree(s0))], [g.gid(topic, g.agree(wrong_s0))]]
+        if g.agree(s0) == g.agree(wrong_s0):
+            continue
+        cands, gold = _shuffle_gold(cands, rng)
+        t.items.append(TaskItem(KIND_MC, ctx, cands, gold))
+    return t
+
+
+def build_obqa(g: Grammar, rng: SplitMix64, n: int) -> Task:
+    t = Task("obqa-syn")
+    for _ in range(n):
+        topic = rng.next_below(C.N_TOPICS)
+        ctx = _context_doc(g, topic, rng, 2)
+        cands = [g.sentence(topic, rng)[:6]]
+        while len(cands) < 4:
+            cands.append(g.sentence(_other_topic(topic, rng), rng)[:6])
+        cands, gold = _shuffle_gold(cands, rng)
+        t.items.append(TaskItem(KIND_MC, ctx, cands, gold))
+    return t
+
+
+def build_rte(g: Grammar, rng: SplitMix64, n: int) -> Task:
+    t = Task("rte-syn")
+    for _ in range(n):
+        topic = rng.next_below(C.N_TOPICS)
+        sent = g.sentence(topic, rng)
+        ctx = [C.BOS] + sent
+        s0 = (sent[0] - C.N_SPECIAL) % g.tpt
+        follow = g.sentence(topic, rng)
+        good = [sent[0]] + follow[1:-2] + [g.gid(topic, g.agree(s0)), C.DOT]
+        wrong_s0 = (s0 + 1 + rng.next_below(N_STARTERS - 1)) % N_STARTERS
+        if g.agree(s0) == g.agree(wrong_s0):
+            continue
+        bad = [sent[0]] + follow[1:-2] + [g.gid(topic, g.agree(wrong_s0)), C.DOT]
+        cands, gold = _shuffle_gold([good, bad], rng)
+        t.items.append(TaskItem(KIND_MC, ctx, cands, gold))
+    return t
+
+
+def build_copa(g: Grammar, rng: SplitMix64, n: int) -> Task:
+    t = Task("copa-syn")
+    for _ in range(n):
+        topic = rng.next_below(C.N_TOPICS)
+        sent = g.sentence(topic, rng)
+        ctx = [C.BOS] + sent[:2]
+        fwd = sent[2:6]
+        cands, gold = _shuffle_gold([fwd, fwd[::-1]], rng)
+        t.items.append(TaskItem(KIND_MC, ctx, cands, gold))
+    return t
+
+
+def build_mmlu(g: Grammar, rng: SplitMix64, per_subject: int) -> Task:
+    t = Task("mmlu-syn")
+    for subject in range(C.N_TOPICS):
+        for _ in range(per_subject):
+            ctx = _context_doc(g, subject, rng, 3)
+            cands = [g.sentence(subject, rng)[:6]]
+            while len(cands) < 4:
+                cands.append(g.sentence(_other_topic(subject, rng), rng)[:6])
+            cands, gold = _shuffle_gold(cands, rng)
+            t.items.append(TaskItem(KIND_MC, ctx, cands, gold, meta=subject))
+    return t
+
+
+def build_gsm(g: Grammar, rng: SplitMix64, n: int) -> Task:
+    """Generative: complete the sentence; exact-match the agreement token."""
+    t = Task("gsm-syn")
+    for _ in range(n):
+        topic = rng.next_below(C.N_TOPICS)
+        ctx = _context_doc(g, topic, rng, 1)
+        sent = g.sentence(topic, rng)
+        # generate from mid-sentence; answer = the agreement token
+        t.items.append(
+            TaskItem(KIND_GEN, ctx + sent[:-2], [[sent[-2]]], 0, meta=len(sent) - 2)
+        )
+    return t
+
+
+ZERO_SHOT = ("lambada-syn", "hellaswag-syn", "piqa-syn", "winogrande-syn",
+             "obqa-syn", "rte-syn", "copa-syn")
+
+BUILDERS = {
+    "lambada-syn": build_lambada,
+    "hellaswag-syn": build_hellaswag,
+    "piqa-syn": build_piqa,
+    "winogrande-syn": build_winogrande,
+    "obqa-syn": build_obqa,
+    "rte-syn": build_rte,
+    "copa-syn": build_copa,
+    "copa": build_copa,
+}
+
+
+def build_all_tasks(vocab: int, n_items: int = 200, mmlu_per_subject: int = 30,
+                    seed: int = 0xEA5E) -> List[Task]:
+    g = Grammar(vocab)
+    rng = SplitMix64(seed)
+    tasks = [BUILDERS[name](g, rng.fork(i), n_items)
+             for i, name in enumerate(ZERO_SHOT)]
+    tasks.append(build_mmlu(g, rng.fork(100), mmlu_per_subject))
+    tasks.append(build_gsm(g, rng.fork(101), n_items))
+    return tasks
+
+
+def corpus_split(vocab: int, n_seqs: int, seq_len: int, stream: int,
+                 seed: int = 0x5EED) -> List[List[int]]:
+    """A reproducible corpus split: `stream` isolates train/calib/heldout."""
+    g = Grammar(vocab)
+    base = SplitMix64(seed)
+    rng = base.fork(stream)
+    return [g.document(seq_len, rng.fork(i)) for i in range(n_seqs)]

@@ -1,0 +1,269 @@
+"""Artifact entry points: the functions aot.py lowers to HLO text.
+
+Every graph takes the flat weight list (param_spec order) as its leading
+arguments so the Rust runtime can marshal one weight bundle into any
+graph of the variant, apply host-side weight transforms (SmoothQuant /
+AWQ / QuaRot / weight qdq) without recompiling, and keep a single
+compiled executable per (variant, granularity).
+
+Graph inventory per variant (DESIGN.md §5):
+    fwd_fp / fwd_pts / fwd_ptd / fwd_ptk   — batched eval forward
+    stats                                   — calibration + figures/tables
+    score_lq                                — greedy-search candidate scorer
+    prefix_kv                               — prefix tokens -> KV cache
+    tune_step                               — Adam QAT prefix-tuning step
+    prefill_{fp,pts,ptd,ptk}                — serving prompt ingestion
+    decode_{fp,pts,ptd,ptk}                 — serving batched decode step
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import configs as C
+from . import model as M
+from . import serving
+from .quantlib import QuantCtx
+
+
+def _unflatten(cfg, flat):
+    spec = M.param_spec(cfg)
+    assert len(flat) == len(spec), (len(flat), len(spec))
+    return {name: w for (name, _), w in zip(spec, flat)}
+
+
+def weight_specs(cfg):
+    return [jax.ShapeDtypeStruct(shape, jnp.float32)
+            for _, shape in M.param_spec(cfg)]
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _smooth_spec(cfg):
+    return _f32(cfg.n_layers, 2, cfg.d_model)
+
+
+def _prefix_spec(cfg):
+    return _f32(cfg.n_layers, 2, cfg.n_kv_heads, C.M_MAX, cfg.d_head)
+
+
+def _cache_spec(cfg):
+    return _f32(cfg.n_layers, 2, C.SERVE_BATCH, cfg.n_kv_heads,
+                C.CACHE_CAP, cfg.d_head)
+
+
+# ---------------------------------------------------------------------------
+
+
+def make_fwd(cfg, mode, use_pallas=False):
+    """Eval forward. Output: logits only — the stats bookkeeping lives in
+    the stats/score_lq graphs (fwd is the throughput path, §Perf)."""
+
+    def fn(*args):
+        n = len(M.param_spec(cfg))
+        params = _unflatten(cfg, args[:n])
+        prefix_kv, prefix_len, tokens, ranges, levels, inv_smooth = args[n:]
+        qctx = QuantCtx(mode=mode, levels=levels, static_ranges=ranges,
+                        use_pallas=use_pallas, inv_smooth=inv_smooth,
+                        collect_stats=False)
+        logits, _ = M.fwd(cfg, params, tokens, prefix_kv, prefix_len, qctx,
+                          use_pallas=use_pallas)
+        return (logits,)
+
+    specs = weight_specs(cfg) + [
+        _prefix_spec(cfg), _i32(), _i32(C.EVAL_BATCH, C.SEQ_LEN),
+        _f32(cfg.n_sites, 2), _f32(), _smooth_spec(cfg),
+    ]
+    return fn, specs
+
+
+def make_stats(cfg):
+    """Calibration + analysis forward (always FP activations).
+
+    Outputs: minmax [n_sites, 2], chan_d [3L, d], chan_f [L, d_ff],
+    acts_grid [L+1, B, S] (channel abs-max of each block input),
+    act_stats [L+1, 3] (top-1 / p90 / median magnitude),
+    probs [L, Hq, S, M+S] (attention maps, batch element 0).
+    """
+
+    def fn(*args):
+        n = len(M.param_spec(cfg))
+        params = _unflatten(cfg, args[:n])
+        prefix_kv, prefix_len, tokens = args[n:]
+        qctx = QuantCtx(mode="fp", collect_chan=True)
+        _, aux = M.fwd(cfg, params, tokens, prefix_kv, prefix_len, qctx,
+                       collect_acts=True, collect_probs=True)
+        acts = aux["acts"]                       # [L+1, B, S, d]
+        mag = jnp.abs(acts)
+        acts_grid = jnp.max(mag, axis=-1)        # [L+1, B, S]
+        flat = mag.reshape(mag.shape[0], -1)
+        act_stats = jnp.stack([
+            jnp.max(flat, axis=1),
+            jnp.percentile(flat, 90.0, axis=1),
+            jnp.percentile(flat, 50.0, axis=1),
+        ], axis=1)                               # [L+1, 3]
+        ch = aux["chan_absmax"]
+        chan_d = jnp.stack([ch[i] for i in range(len(ch)) if i % 4 != 3])
+        chan_f = jnp.stack([ch[i] for i in range(len(ch)) if i % 4 == 3])
+        return (aux["minmax"], chan_d, chan_f, acts_grid, act_stats,
+                aux["probs"])
+
+    specs = weight_specs(cfg) + [
+        _prefix_spec(cfg), _i32(), _i32(C.EVAL_BATCH, C.SEQ_LEN),
+    ]
+    return fn, specs
+
+
+def make_score(cfg):
+    """Greedy-search scorer (paper Alg. 1 inner loop): L_q of the text
+    given [prefix ++ candidate], per-example dynamic per-tensor ranges
+    over the text region only. Output: lq [SCORE_BATCH]."""
+
+    s_total = C.M_MAX + 1 + C.SCORE_TEXT_LEN
+
+    def fn(*args):
+        n = len(M.param_spec(cfg))
+        params = _unflatten(cfg, args[:n])
+        prefix_tokens, prefix_len, cands, text, levels, inv_smooth = args[n:]
+        bc = cands.shape[0]
+        rows = jnp.concatenate([
+            jnp.broadcast_to(prefix_tokens[None], (bc, C.M_MAX)),
+            cands[:, None],
+            jnp.broadcast_to(text[None], (bc, C.SCORE_TEXT_LEN)),
+        ], axis=1)
+        idx = jnp.arange(s_total)
+        kv_valid = (idx < prefix_len) | (idx >= C.M_MAX)
+        gap = C.M_MAX - prefix_len
+        positions = jnp.where(idx < C.M_MAX, idx, idx - gap).astype(jnp.int32)
+        positions = jnp.broadcast_to(positions[None], (bc, s_total))
+        valid = jnp.broadcast_to((idx >= C.M_MAX + 1)[None], (bc, s_total))
+        qctx = QuantCtx(mode="ptd", levels=levels, valid=valid,
+                        per_example=True, inv_smooth=inv_smooth)
+        _, _ = M.fwd(cfg, params, rows, M.empty_prefix(cfg),
+                     jnp.asarray(0, jnp.int32), qctx, kv_valid=kv_valid,
+                     positions=positions)
+        return qctx.lq
+
+    specs = weight_specs(cfg) + [
+        _i32(C.M_MAX), _i32(), _i32(C.SCORE_BATCH),
+        _i32(C.SCORE_TEXT_LEN), _f32(), _smooth_spec(cfg),
+    ]
+    return fn, specs
+
+
+def make_prefix_kv(cfg):
+    def fn(*args):
+        n = len(M.param_spec(cfg))
+        params = _unflatten(cfg, args[:n])
+        prefix_tokens, prefix_len = args[n:]
+        return M.compute_prefix_kv(cfg, params, prefix_tokens, prefix_len)
+
+    specs = weight_specs(cfg) + [_i32(C.M_MAX), _i32()]
+    return fn, specs
+
+
+def make_tune_step(cfg):
+    """One Adam step of quantization-aware prefix tuning (paper §4.2):
+    L = L_pred + lambda * L_q, STE through rounding, stop-grad on ranges.
+    Outputs (prefix_kv', m', v', loss, lq)."""
+
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    def fn(*args):
+        n = len(M.param_spec(cfg))
+        params = _unflatten(cfg, args[:n])
+        (prefix_kv, adam_m, adam_v, step, tokens, prefix_len, lam, lr,
+         levels, inv_smooth) = args[n:]
+
+        def loss_fn(pkv):
+            qctx = QuantCtx(mode="ptd", levels=levels, ste=True,
+                            inv_smooth=inv_smooth)
+            logits, _ = M.fwd(cfg, params, tokens, pkv, prefix_len, qctx)
+            lp = M.loss_pred(logits, tokens)
+            return lp + lam * qctx.lq, (lp, qctx.lq)
+
+        (loss, (lp, lq)), g = jax.value_and_grad(loss_fn, has_aux=True)(prefix_kv)
+        t = step.astype(jnp.float32) + 1.0
+        m2 = b1 * adam_m + (1 - b1) * g
+        v2 = b2 * adam_v + (1 - b2) * g * g
+        mhat = m2 / (1 - b1 ** t)
+        vhat = v2 / (1 - b2 ** t)
+        pkv2 = prefix_kv - lr * mhat / (jnp.sqrt(vhat) + eps)
+        return pkv2, m2, v2, loss, lq
+
+    specs = weight_specs(cfg) + [
+        _prefix_spec(cfg), _prefix_spec(cfg), _prefix_spec(cfg), _i32(),
+        _i32(C.TUNE_BATCH, C.SEQ_LEN), _i32(), _f32(), _f32(), _f32(),
+        _smooth_spec(cfg),
+    ]
+    return fn, specs
+
+
+def make_prefill(cfg, mode, use_pallas=False):
+    def fn(*args):
+        n = len(M.param_spec(cfg))
+        params = _unflatten(cfg, args[:n])
+        (cache, prefix_kv, cushion_len, slot, tokens, tok_len, ranges,
+         levels, kv_levels, inv_smooth) = args[n:]
+        qctx = QuantCtx(mode=mode, levels=levels, static_ranges=ranges,
+                        use_pallas=use_pallas, inv_smooth=inv_smooth,
+                        collect_stats=False)
+        cache2, last, _ = serving.prefill(
+            cfg, params, cache, prefix_kv, cushion_len, slot, tokens,
+            tok_len, qctx, kv_levels, use_pallas=use_pallas)
+        return cache2, last
+
+    specs = weight_specs(cfg) + [
+        _cache_spec(cfg), _prefix_spec(cfg), _i32(), _i32(),
+        _i32(C.SEQ_LEN), _i32(), _f32(cfg.n_sites, 2), _f32(), _f32(),
+        _smooth_spec(cfg),
+    ]
+    return fn, specs
+
+
+def make_decode(cfg, mode, use_pallas=False):
+    def fn(*args):
+        n = len(M.param_spec(cfg))
+        params = _unflatten(cfg, args[:n])
+        (cache, cache_tok_len, cushion_len, tokens, ranges, levels,
+         kv_levels, inv_smooth) = args[n:]
+        qctx = QuantCtx(mode=mode, levels=levels, static_ranges=ranges,
+                        use_pallas=use_pallas, inv_smooth=inv_smooth,
+                        collect_stats=False)
+        cache2, logits = serving.decode(
+            cfg, params, cache, cache_tok_len, cushion_len, tokens, qctx,
+            kv_levels, use_pallas=use_pallas)
+        return cache2, logits
+
+    specs = weight_specs(cfg) + [
+        _cache_spec(cfg), _i32(C.SERVE_BATCH), _i32(), _i32(C.SERVE_BATCH),
+        _f32(cfg.n_sites, 2), _f32(), _f32(), _smooth_spec(cfg),
+    ]
+    return fn, specs
+
+
+MODES = ("fp", "pts", "ptd", "ptk")
+
+
+def graph_inventory(cfg, pallas_variants=False):
+    """name -> (fn, arg_specs). `pallas_variants` additionally emits the
+    Pallas-kernel builds of the quantized eval forward (perf comparison —
+    see DESIGN.md §Hardware-Adaptation)."""
+    inv = {}
+    for mode in MODES:
+        inv[f"fwd_{mode}"] = make_fwd(cfg, mode)
+        inv[f"prefill_{mode}"] = make_prefill(cfg, mode)
+        inv[f"decode_{mode}"] = make_decode(cfg, mode)
+    inv["stats"] = make_stats(cfg)
+    inv["score_lq"] = make_score(cfg)
+    inv["prefix_kv"] = make_prefix_kv(cfg)
+    inv["tune_step"] = make_tune_step(cfg)
+    if pallas_variants:
+        inv["fwd_pts_pallas"] = make_fwd(cfg, "pts", use_pallas=True)
+        inv["fwd_ptk_pallas"] = make_fwd(cfg, "ptk", use_pallas=True)
+    return inv

@@ -1,0 +1,127 @@
+"""Pallas kernel: attention with a CushionCache prefix region.
+
+The kernel computes one (head, query-block) tile per grid step. Keys and
+values — including the prefix slots that hold the CushionCache KV — are
+streamed into VMEM whole per head (Skv <= CACHE_CAP = 144 rows of 64
+floats, ~37 KiB per operand: comfortably VMEM-resident), so the softmax
+is exact per query row without an online rescale pass; query blocks of
+64 rows keep the q·kᵀ logits tile (64x144) in VMEM as well.
+
+Mask semantics match ref.attention: the first `n_prefix_slots` key
+positions form the prefix region, of which `prefix_len` (a runtime
+scalar) are valid and visible to every query; token keys are causal with
+an optional sliding window (prefix stays visible — StreamingLLM-style);
+head 0 can be strict-causal (diagonal masked) for the planted detector
+head; optional ALiBi bias per head.
+
+GQA is expressed in the BlockSpec index_map: query head h reads KV head
+h // group — no materialized repeat.
+
+Oracle: ref.attention; matched by python/tests/test_kernel_attention.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_Q = 64
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, plen_ref, off_ref, slopes_ref, o_ref, *,
+                 n_prefix_slots, window, strict_head0,
+                 head0_global, use_alibi, block_q, d_head):
+    h = pl.program_id(0)
+    iq = pl.program_id(1)
+    q = q_ref[0]          # [bq, dh]
+    k = k_ref[0]          # [skv, dh]
+    v = v_ref[0]          # [skv, dh]
+    prefix_len = plen_ref[0]
+    causal_offset = off_ref[0]
+    skv = k.shape[0]
+
+    logits = jnp.dot(q, k.T, precision=jax.lax.Precision.HIGHEST)
+    logits = logits / jnp.sqrt(jnp.asarray(d_head, q.dtype))
+
+    j = jax.lax.broadcasted_iota(jnp.int32, (block_q, skv), 1)
+    i = jax.lax.broadcasted_iota(jnp.int32, (block_q, skv), 0)
+    qpos = causal_offset + iq * block_q + i
+    kpos = j - n_prefix_slots
+    in_prefix = j < n_prefix_slots
+    prefix_ok = in_prefix & (j < prefix_len)
+    tok_ok = (~in_prefix) & (kpos <= qpos)
+    if window is not None:
+        tok_win = tok_ok & (kpos >= qpos - window + 1)
+        mask = prefix_ok | tok_win
+        if head0_global:
+            mask = jnp.where(h == 0, prefix_ok | tok_ok, mask)
+    else:
+        mask = prefix_ok | tok_ok
+    if strict_head0:
+        self_mask = (~in_prefix) & (kpos == qpos)
+        mask = jnp.where(h == 0, mask & ~self_mask, mask)
+
+    if use_alibi:
+        slope = slopes_ref[0]
+        kabs = jnp.where(in_prefix, j, kpos + prefix_len)
+        qabs = qpos + prefix_len
+        logits = logits - slope * (qabs - kabs).astype(q.dtype)
+
+    logits = jnp.where(mask, logits, jnp.asarray(-1e30, q.dtype))
+    m = jnp.max(logits, axis=1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = jnp.where(mask, p, 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=1, keepdims=True), 1e-30)
+    o_ref[0] = jnp.dot(p / denom, v, precision=jax.lax.Precision.HIGHEST)
+
+
+def sink_attention(q, k, v, prefix_len, *, n_prefix_slots, causal_offset=0,
+                   window=None, alibi_slopes=None, strict_head0=False,
+                   head0_global=False, block_q: int = BLOCK_Q):
+    """q: [H, Sq, dh]; k, v: [Hkv, Skv, dh]; prefix_len: int32 scalar.
+
+    Returns [H, Sq, dh]. See module docstring for mask semantics.
+    """
+    hq, sq, dh = q.shape
+    hkv, skv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    bq = min(block_q, sq)
+    grid = (hq, pl.cdiv(sq, bq))
+
+    use_alibi = alibi_slopes is not None
+    slopes = (jnp.asarray(alibi_slopes, jnp.float32)
+              if use_alibi else jnp.zeros((hq,), jnp.float32))
+
+    kernel = functools.partial(
+        _attn_kernel,
+        n_prefix_slots=n_prefix_slots,
+        window=window, strict_head0=strict_head0, head0_global=head0_global,
+        use_alibi=use_alibi, block_q=bq, d_head=dh,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, skv, dh), lambda h, i, g=group: (h // g, 0, 0)),
+            pl.BlockSpec((1, skv, dh), lambda h, i, g=group: (h // g, 0, 0)),
+            pl.BlockSpec((1,), lambda h, i: (0,)),
+            pl.BlockSpec((1,), lambda h, i: (0,)),
+            pl.BlockSpec((1,), lambda h, i: (h,)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((hq, sq, dh), q.dtype),
+        interpret=True,
+    )(q, k, v, jnp.asarray(prefix_len, jnp.int32).reshape(1),
+      jnp.asarray(causal_offset, jnp.int32).reshape(1), slopes)
+
+
+def vmem_bytes(sq_block, skv, dh, dtype_bytes=4):
+    """Analytic VMEM footprint of one attention tile (q + k + v + logits +
+    out) for the perf pass."""
+    return (sq_block * dh + 2 * skv * dh + sq_block * skv + sq_block * dh) * dtype_bytes
+
+
+__all__ = ["sink_attention", "vmem_bytes", "BLOCK_Q"]

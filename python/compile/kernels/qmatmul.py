@@ -1,0 +1,121 @@
+"""Pallas kernel: tiled W8A8 quantized matmul (the paper's compute hot
+spot for per-tensor static quantization).
+
+TPU rethink of the paper's CUDA kernels (DESIGN.md §Hardware-Adaptation):
+instead of warp-level WMMA over shared memory, the kernel tiles the output
+into 128x128 MXU-shaped blocks. Each grid step streams an activation tile
+x[bm, K] and a weight tile w[K, bn] HBM->VMEM, quantizes the activation
+tile in VMEM (per-tensor: one scalar scale, so nothing else moves), runs
+the contraction on the MXU, and dequantizes on the way out — a single
+fused pass with no intermediate HBM round-trip.
+
+Integer arithmetic is simulated in f32 (exact for int8 magnitudes: every
+product and partial sum stays far below 2^24); the weight operand is
+expected to be pre-quantized host-side (symmetric group-wise — see
+quant::scheme in rust, quantlib.quant_weight in python).
+
+Oracle: ref.qmatmul; matched by python/tests/test_kernel_qmatmul.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _qmm_kernel(x_ref, w_ref, lo_ref, scale_ref, levels_ref, o_ref):
+    lo = lo_ref[0]
+    scale = scale_ref[0]
+    levels = levels_ref[0]
+    x = x_ref[...]
+    # quantize the activation tile in VMEM: int grid, f32 carrier
+    q = jnp.clip(jnp.round((x - lo) / scale), 0.0, levels)
+    xq = lo + q * scale
+    o_ref[...] = jnp.dot(xq, w_ref[...], precision=jax.lax.Precision.HIGHEST)
+
+
+def qmatmul_per_tensor(x, w, lo, scale, levels,
+                       block_m: int = BLOCK_M, block_n: int = BLOCK_N):
+    """x: [M, K] f32, w: [K, N] f32 (pre-quantized values). Per-tensor
+    asymmetric activation quantization with range (lo, lo + scale*levels).
+
+    K is streamed whole per tile (K <= ~1k for every layer of the tiny
+    families; on TPU this keeps a single MXU pass per output tile with no
+    revisits — see EXPERIMENTS.md §Perf for the footprint table)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bn = min(block_m, m), min(block_n, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    scalar = pl.BlockSpec((1,), lambda i, j: (0,))
+    return pl.pallas_call(
+        _qmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            scalar, scalar, scalar,
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, _as1(lo), _as1(scale), _as1(levels))
+
+
+def _qmm_ptok_kernel(x_ref, w_ref, levels_ref, o_ref):
+    levels = levels_ref[0]
+    x = x_ref[...]
+    mn = jnp.minimum(jnp.min(x, axis=1, keepdims=True), 0.0)
+    mx = jnp.maximum(jnp.max(x, axis=1, keepdims=True), 0.0)
+    scale = jnp.maximum(mx - mn, 1e-8) / levels
+    q = jnp.clip(jnp.round((x - mn) / scale), 0.0, levels)
+    xq = mn + q * scale
+    o_ref[...] = jnp.dot(xq, w_ref[...], precision=jax.lax.Precision.HIGHEST)
+
+
+def qmatmul_per_token(x, w, levels,
+                      block_m: int = BLOCK_M, block_n: int = BLOCK_N):
+    """Per-token dynamic variant: row ranges are reduced inside the tile
+    (an extra VPU pass before the MXU contraction — the granularity cost
+    the paper's §Granularity argument is about)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    bm, bn = min(block_m, m), min(block_n, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    return pl.pallas_call(
+        _qmm_ptok_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, _as1(levels))
+
+
+def _as1(v):
+    return jnp.asarray(v, jnp.float32).reshape(1)
+
+
+def tile_stats(m, k, n, block_m=BLOCK_M, block_n=BLOCK_N, dtype_bytes=4):
+    """Analytic per-tile VMEM footprint and MXU utilization estimate used
+    by the perf pass (EXPERIMENTS.md §Perf). Returns (vmem_bytes,
+    mxu_util_estimate, hbm_bytes_total)."""
+    bm, bn = min(block_m, m), min(block_n, n)
+    vmem = (bm * k + k * bn + bm * bn) * dtype_bytes
+    # MXU does 128x128x128 MACs per pass; utilization = useful MACs over
+    # padded-systolic MACs for this tile shape.
+    pad = lambda v: -(-v // 128) * 128
+    mxu = (bm * k * bn) / (pad(bm) * pad(k) * pad(bn))
+    tiles = -(-m // bm) * (-(-n // bn))
+    hbm = tiles * (bm * k + k * bn + bm * bn) * dtype_bytes
+    return vmem, mxu, hbm
+
+
+__all__ = ["qmatmul_per_tensor", "qmatmul_per_token", "tile_stats"]

@@ -1,0 +1,84 @@
+"""Pallas kernel: fused asymmetric quantize-dequantize.
+
+TPU mapping (DESIGN.md §2, Hardware-Adaptation): the qdq is an elementwise
+VPU op applied to 128-row tiles streamed through VMEM; the per-token
+variant performs the row min/max reduction inside the same VMEM tile so
+the HBM stream is read exactly once. `interpret=True` everywhere — the
+CPU PJRT plugin cannot execute Mosaic custom-calls; on a real TPU the
+same BlockSpecs compile natively.
+
+Oracles: kernels/ref.py (qdq_asym / qdq_dynamic); matched by
+python/tests/test_kernel_quant.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_M = 128
+
+
+def _qdq_pt_kernel(x_ref, lo_ref, scale_ref, levels_ref, o_ref):
+    lo = lo_ref[0]
+    scale = scale_ref[0]
+    levels = levels_ref[0]
+    x = x_ref[...]
+    q = jnp.clip(jnp.round((x - lo) / scale), 0.0, levels)
+    o_ref[...] = lo + q * scale
+
+
+def qdq_per_tensor(x, lo, scale, levels, block_m: int = DEFAULT_BLOCK_M):
+    """Per-tensor asymmetric qdq of x: [M, N] with scalar range params."""
+    m, n = x.shape
+    bm = min(block_m, m)
+    grid = (pl.cdiv(m, bm),)
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _qdq_pt_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0)), scalar, scalar, scalar],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, _as1(lo), _as1(scale), _as1(levels))
+
+
+def _qdq_ptok_kernel(x_ref, levels_ref, o_ref):
+    levels = levels_ref[0]
+    x = x_ref[...]
+    mn = jnp.minimum(jnp.min(x, axis=1, keepdims=True), 0.0)
+    mx = jnp.maximum(jnp.max(x, axis=1, keepdims=True), 0.0)
+    scale = jnp.maximum(mx - mn, 1e-8) / levels
+    q = jnp.clip(jnp.round((x - mn) / scale), 0.0, levels)
+    o_ref[...] = mn + q * scale
+
+
+def qdq_per_token(x, levels, block_m: int = DEFAULT_BLOCK_M):
+    """Per-token (row-wise) dynamic asymmetric qdq of x: [M, N]. The row
+    reduction runs in the same VMEM tile as the qdq itself."""
+    m, n = x.shape
+    bm = min(block_m, m)
+    grid = (pl.cdiv(m, bm),)
+    return pl.pallas_call(
+        _qdq_ptok_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0)),
+                  pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, _as1(levels))
+
+
+def _as1(v):
+    return jnp.asarray(v, jnp.float32).reshape(1)
+
+
+def vmem_bytes(block_m: int, n: int, dtype_bytes: int = 4) -> int:
+    """Analytic VMEM footprint of one qdq tile (input + output)."""
+    return 2 * block_m * n * dtype_bytes
+
+
+__all__ = ["qdq_per_tensor", "qdq_per_token", "vmem_bytes"]

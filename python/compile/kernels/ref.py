@@ -1,0 +1,126 @@
+"""Pure-jnp oracles for every Pallas kernel (the CORE correctness signal).
+
+Each function here is the mathematical definition; the Pallas kernels in
+quant.py / qmatmul.py / attention.py must match these to float tolerance
+under pytest + hypothesis sweeps (python/tests/).
+"""
+
+import jax.numpy as jnp
+import jax
+
+
+def qdq_asym(x, lo, scale, levels):
+    """Asymmetric linear quantize-dequantize with a given range.
+
+    q = clip(round((x - lo)/scale), 0, levels); back to lo + q*scale.
+    `lo`/`scale` broadcast against x (scalars for per-tensor, column vectors
+    for per-token). `levels` = 2^bits - 1 (a float so it can be a graph
+    input).
+    """
+    q = jnp.clip(jnp.round((x - lo) / scale), 0.0, levels)
+    return lo + q * scale
+
+
+def range_asym(x, levels, axis=None, where=None):
+    """(lo, scale) for asymmetric quantization over `axis` (None = whole
+    tensor), optionally restricted by a boolean mask `where` (used to
+    exclude CushionCache prefix positions from the statistics)."""
+    if where is None:
+        mn = jnp.min(x, axis=axis, keepdims=axis is not None)
+        mx = jnp.max(x, axis=axis, keepdims=axis is not None)
+    else:
+        big = jnp.asarray(jnp.finfo(x.dtype).max, x.dtype)
+        mn = jnp.min(jnp.where(where, x, big), axis=axis, keepdims=axis is not None)
+        mx = jnp.max(jnp.where(where, x, -big), axis=axis, keepdims=axis is not None)
+    mn = jnp.minimum(mn, 0.0)  # keep zero representable
+    mx = jnp.maximum(mx, 0.0)
+    scale = jnp.maximum(mx - mn, 1e-8) / levels
+    return mn, scale
+
+
+def qdq_dynamic(x, levels, axis=None, where=None):
+    lo, scale = range_asym(x, levels, axis=axis, where=where)
+    return qdq_asym(x, lo, scale, levels)
+
+
+def quant_weight_sym_grouped(w, bits, group=64):
+    """Symmetric group-wise weight quantize-dequantize along the input
+    (contracting) dimension — the paper's weight scheme. w: [K, N]."""
+    k, n = w.shape
+    assert k % group == 0, (k, group)
+    qmax = 2.0 ** (bits - 1) - 1
+    wg = w.reshape(k // group, group, n)
+    scale = jnp.max(jnp.abs(wg), axis=1, keepdims=True) / qmax
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(wg / scale), -qmax, qmax)
+    return (q * scale).reshape(k, n)
+
+
+def qmatmul(x, w, lo, scale, levels):
+    """W8A8-style matmul oracle: activation qdq (given range) then matmul
+    against an (already weight-quantized) w. Integer arithmetic is simulated
+    in f32 — exact for int8 ranges (f32 holds integers < 2^24 exactly)."""
+    return qdq_asym(x, lo, scale, levels) @ w
+
+
+def attention(q, k, v, *, prefix_len, n_prefix_slots, causal_offset,
+              window=None, alibi_slopes=None, strict_head0=False,
+              head0_global=False, kv_valid=None):
+    """Attention with a CushionCache prefix region, the oracle for
+    kernels/attention.py.
+
+    q: [H, Sq, dh]; k, v: [Hkv, Skv, dh] where the first `n_prefix_slots`
+    key positions are the (padded) prefix region, of which only the first
+    `prefix_len` are valid. Query i sits at absolute token index
+    causal_offset + i; key j >= n_prefix_slots sits at token index
+    j - n_prefix_slots — queries attend to the valid prefix plus causally
+    to the token region.
+
+    window: sliding-window size (prefix always visible, StreamingLLM-style).
+    alibi_slopes: [H] or None. strict_head0: mask the self/diagonal for
+    head 0 (the strict-causal detector head of the planted circuit).
+    head0_global: head 0 ignores the sliding window (the detector/sink
+    heads see the whole context, as StreamingLLM patches do).
+    kv_valid: [Skv] bool — extra key visibility mask (used by the greedy
+    scorer to hide padding inside an in-band prefix region).
+    """
+    hq, sq, dh = q.shape
+    hkv, skv, _ = k.shape
+    g = hq // hkv
+    kx = jnp.repeat(k, g, axis=0)
+    vx = jnp.repeat(v, g, axis=0)
+    logits = jnp.einsum("hid,hjd->hij", q, kx) / jnp.sqrt(jnp.asarray(dh, q.dtype))
+
+    j = jnp.arange(skv)[None, :]
+    i = jnp.arange(sq)[:, None]
+    qpos = causal_offset + i
+    kpos = j - n_prefix_slots  # negative in the prefix region
+    in_prefix = j < n_prefix_slots
+    prefix_ok = in_prefix & (j < prefix_len)
+    tok_ok = (~in_prefix) & (kpos <= qpos)
+    if window is not None:
+        tok_win = tok_ok & (kpos >= qpos - window + 1)
+    else:
+        tok_win = tok_ok
+    mask = jnp.broadcast_to((prefix_ok | tok_win)[None], (hq, sq, skv))
+    if window is not None and head0_global:
+        mask = mask.at[0].set(prefix_ok | tok_ok)
+    if strict_head0:
+        self_mask = (~in_prefix) & (kpos == qpos)
+        mask = mask.at[0].set(mask[0] & ~self_mask)
+    if kv_valid is not None:
+        mask = mask & kv_valid[None, None, :]
+
+    if alibi_slopes is not None:
+        # distances use cushion-inclusive absolute positions: prefix slot m
+        # sits at position m, token index p sits at position prefix_len + p
+        kabs = jnp.where(in_prefix, j, kpos + prefix_len)
+        qabs = qpos + prefix_len
+        dist = (qabs - kabs).astype(q.dtype)
+        logits = logits - alibi_slopes[:, None, None] * dist[None]
+
+    neg = jnp.asarray(-1e30, q.dtype)
+    logits = jnp.where(mask, logits, neg)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(mask.any(-1, keepdims=True), probs, 0.0)
+    return jnp.einsum("hij,hjd->hid", probs, vx)

@@ -1,0 +1,345 @@
+"""L2: the transformer model families, with CushionCache prefix plumbing
+and quantization instrumentation.
+
+Everything is functional JAX over a flat parameter dict so the same code
+lowers to each AOT artifact (aot.py) with weights as *runtime inputs* —
+the Rust coordinator can therefore apply weight-side transforms
+(SmoothQuant / AWQ / QuaRot, weight qdq) host-side and reuse one compiled
+graph per quantization granularity.
+
+Five variants (configs.VARIANTS) share this code; they differ in norm
+placement (pre-RMSNorm vs post-LN), MLP (SwiGLU / ReLU / GELU), position
+encoding (RoPE / learned / ALiBi), KV grouping, and sliding window.
+
+Attention semantics (prefix region, windows, strict-causal detector head)
+are defined by kernels/ref.attention and the Pallas kernel
+kernels/attention.sink_attention; `use_pallas` selects the path.
+
+The planted outlier circuit (plant.py) is pure weight surgery — this file
+contains no special cases for it beyond the strict-causal head-0 mask at
+layer 0, which is an architectural property of the families (DESIGN.md §3).
+"""
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import configs as C
+from .kernels import ref
+from .kernels.attention import sink_attention
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+
+EPS = 1e-5
+
+
+def rmsnorm(x, g):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + EPS) * g
+
+
+def layernorm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + EPS) * g + b
+
+
+def norm(cfg: C.ModelCfg, p, which: str, x):
+    if cfg.norm == "rmsnorm_pre":
+        return rmsnorm(x, p[which + "_g"])
+    return layernorm(x, p[which + "_g"], p[which + "_b"])
+
+
+def rope(x, positions, theta: float):
+    """x: [..., S, dh]; positions: broadcastable to [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def alibi_slopes(n_heads: int):
+    """Standard geometric ALiBi slopes, *reversed* so head 0 (the planted
+    detector/sink head) gets the smallest slope — it must see the whole
+    context."""
+    s = 2.0 ** (-8.0 * (jnp.arange(n_heads) + 1) / n_heads)
+    return s[::-1]
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def param_spec(cfg: C.ModelCfg):
+    """Ordered (name, shape) list — the single source of truth for the
+    weights.bin layout shared with rust/src/model/weights.rs."""
+    d, dh = cfg.d_model, cfg.d_head
+    hq, hkv, f = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    ln = cfg.norm == "ln_post"
+    spec = [("embed", (cfg.vocab, d))]
+    if cfg.pos == "learned":
+        spec.append(("pos_emb", (C.CACHE_CAP, d)))
+    for l in range(cfg.n_layers):
+        pre = f"layer{l}."
+        spec += [
+            (pre + "ln1_g", (d,)),
+            *([(pre + "ln1_b", (d,))] if ln else []),
+            (pre + "wq", (d, hq * dh)),
+            (pre + "wk", (d, hkv * dh)),
+            (pre + "wv", (d, hkv * dh)),
+            (pre + "wo", (hq * dh, d)),
+            (pre + "ln2_g", (d,)),
+            *([(pre + "ln2_b", (d,))] if ln else []),
+            *([(pre + "wg", (d, f))] if cfg.act == "swiglu" else []),
+            (pre + "wu", (d, f)),
+            (pre + "wd", (f, d)),
+        ]
+    spec += [("lnf_g", (d,))]
+    if ln:
+        spec += [("lnf_b", (d,))]
+    spec += [("lm_head", (d, cfg.vocab))]
+    return spec
+
+
+def init_params(cfg: C.ModelCfg, key):
+    params = {}
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g",)):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith("_b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name in ("embed", "pos_emb"):
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(fan_in)
+    return params
+
+
+def layer_params(params, l):
+    pre = f"layer{l}."
+    return {k[len(pre):]: v for k, v in params.items() if k.startswith(pre)}
+
+
+# ---------------------------------------------------------------------------
+# Attention dispatch
+# ---------------------------------------------------------------------------
+
+def _attend(cfg: C.ModelCfg, layer: int, q, k, v, prefix_len, causal_offset,
+            use_pallas, kv_valid=None, n_prefix_slots=C.M_MAX):
+    """q: [B, Hq, Sq, dh]; k, v: [B, Hkv, Skv, dh]. causal_offset may be a
+    scalar or [B]. Returns [B, Hq, Sq, dh]."""
+    slopes = alibi_slopes(cfg.n_heads) if cfg.pos == "alibi" else None
+    strict = layer == 0
+    common = dict(
+        n_prefix_slots=n_prefix_slots,
+        window=cfg.window,
+        strict_head0=strict,
+        head0_global=cfg.window is not None,
+    )
+    offs = jnp.broadcast_to(jnp.asarray(causal_offset, jnp.int32), (q.shape[0],))
+    if use_pallas and kv_valid is None:
+        fn = lambda qb, kb, vb, ob: sink_attention(
+            qb, kb, vb, prefix_len, causal_offset=ob,
+            alibi_slopes=slopes, **common)
+        return jax.vmap(fn, in_axes=(0, 0, 0, 0))(q, k, v, offs)
+    fn = lambda qb, kb, vb, ob, kvv: ref.attention(
+        qb, kb, vb, prefix_len=prefix_len, causal_offset=ob,
+        alibi_slopes=slopes, kv_valid=kvv, **common)
+    kvv = (jnp.ones((q.shape[0], k.shape[2]), bool) if kv_valid is None
+           else jnp.broadcast_to(kv_valid, (q.shape[0], k.shape[2])))
+    return jax.vmap(fn, in_axes=(0, 0, 0, 0, 0))(q, k, v, offs, kvv)
+
+
+def _attend_probs(cfg, layer, q, k, v, prefix_len, causal_offset,
+                  n_prefix_slots=C.M_MAX):
+    """Attention probabilities of batch element 0 (Fig. 3 collection)."""
+    slopes = alibi_slopes(cfg.n_heads) if cfg.pos == "alibi" else None
+    hq, sq, dh = q.shape[1], q.shape[2], q.shape[3]
+    g = cfg.group_size
+    kx = jnp.repeat(k[0], g, axis=0)
+    logits = jnp.einsum("hid,hjd->hij", q[0], kx) / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    skv = k.shape[2]
+    j = jnp.arange(skv)[None, :]
+    i = jnp.arange(sq)[:, None]
+    qpos = jnp.asarray(causal_offset, jnp.int32) + i
+    kpos = j - n_prefix_slots
+    in_prefix = j < n_prefix_slots
+    prefix_ok = in_prefix & (j < prefix_len)
+    tok_ok = (~in_prefix) & (kpos <= qpos)
+    if cfg.window is not None:
+        tok_win = tok_ok & (kpos >= qpos - cfg.window + 1)
+    else:
+        tok_win = tok_ok
+    mask = jnp.broadcast_to((prefix_ok | tok_win)[None], (hq, sq, skv))
+    if cfg.window is not None:
+        mask = mask.at[0].set(prefix_ok | tok_ok)
+    if layer == 0:
+        self_mask = (~in_prefix) & (kpos == qpos)
+        mask = mask.at[0].set(mask[0] & ~self_mask)
+    if slopes is not None:
+        kabs = jnp.where(in_prefix, j, kpos + prefix_len)
+        dist = (qpos + prefix_len - kabs).astype(q.dtype)
+        logits = logits - slopes[:, None, None] * dist[None]
+    logits = jnp.where(mask, logits, -1e30)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Transformer block
+# ---------------------------------------------------------------------------
+
+def mlp(cfg: C.ModelCfg, p, h, layer, qctx):
+    h = qctx.site(h, layer, 2)  # mlp_in
+    if cfg.act == "swiglu":
+        hidden = jax.nn.silu(h @ p["wg"]) * (h @ p["wu"])
+    elif cfg.act == "relu":
+        hidden = jax.nn.relu(h @ p["wu"])
+    else:
+        hidden = jax.nn.gelu(h @ p["wu"])
+    hidden = qctx.site(hidden, layer, 3)  # mlp_hidden
+    return hidden @ p["wd"]
+
+
+def block(cfg: C.ModelCfg, p, layer, x, prefix_kv_l, prefix_len, positions,
+          causal_offset, qctx, use_pallas, kv_valid=None, want_probs=False,
+          want_kv=False):
+    """One transformer block. x: [B, S, d]; prefix_kv_l: [2, Hkv, M, dh];
+    positions: [B, S] absolute positions (cushion-inclusive)."""
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+
+    h = norm(cfg, p, "ln1", x) if cfg.norm == "rmsnorm_pre" else x
+    h = qctx.site(h, layer, 0)  # attn_in
+    q = (h @ p["wq"]).reshape(b, s, hq, dh).transpose(0, 2, 1, 3)
+    k = (h @ p["wk"]).reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    v = (h @ p["wv"]).reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    if cfg.pos == "rope":
+        q = rope(q, positions[:, None, :], cfg.rope_theta)
+        k = rope(k, positions[:, None, :], cfg.rope_theta)
+
+    pk = jnp.broadcast_to(prefix_kv_l[0][None], (b, hkv, C.M_MAX, dh))
+    pv = jnp.broadcast_to(prefix_kv_l[1][None], (b, hkv, C.M_MAX, dh))
+    kf = jnp.concatenate([pk, k], axis=2)
+    vf = jnp.concatenate([pv, v], axis=2)
+    kvv = None if kv_valid is None else jnp.concatenate(
+        [jnp.arange(C.M_MAX) < prefix_len, kv_valid], axis=0)
+
+    o = _attend(cfg, layer, q, kf, vf, prefix_len, causal_offset,
+                use_pallas, kv_valid=kvv)
+    probs = (_attend_probs(cfg, layer, q, kf, vf, prefix_len, causal_offset)
+             if want_probs else None)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, hq * dh)
+    o = qctx.site(o, layer, 1)  # attn_out
+    attn_out = o @ p["wo"]
+
+    if cfg.norm == "rmsnorm_pre":
+        x = x + attn_out
+        x = x + mlp(cfg, p, norm(cfg, p, "ln2", x), layer, qctx)
+    else:
+        x = layernorm(x + attn_out, p["ln1_g"], p["ln1_b"])
+        x = layernorm(x + mlp(cfg, p, x, layer, qctx), p["ln2_g"], p["ln2_b"])
+    kv = jnp.stack([k, v]) if want_kv else None  # [2, B, Hkv, S, dh]
+    return x, probs, kv
+
+
+# ---------------------------------------------------------------------------
+# Full forward
+# ---------------------------------------------------------------------------
+
+def fwd(cfg: C.ModelCfg, params, tokens, prefix_kv, prefix_len, qctx,
+        use_pallas=False, kv_valid=None, positions=None, causal_offset=0,
+        collect_acts=False, collect_probs=False, collect_kv=False):
+    """tokens: [B, S] int32; prefix_kv: [L, 2, Hkv, M_MAX, dh];
+    prefix_len: int32 scalar. positions: [B, S] absolute positions
+    (default: prefix_len + arange). Returns (logits [B, S, V], aux)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    if positions is None:
+        positions = jnp.broadcast_to(
+            prefix_len + jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.pos == "learned":
+        x = x + params["pos_emb"][positions]
+
+    acts, probs_all, kvs = [], [], []
+    for l in range(cfg.n_layers):
+        if collect_acts:
+            acts.append(x)
+        x, probs, kv = block(
+            cfg, layer_params(params, l), l, x, prefix_kv[l], prefix_len,
+            positions, causal_offset, qctx, use_pallas, kv_valid=kv_valid,
+            want_probs=collect_probs, want_kv=collect_kv)
+        if collect_probs:
+            probs_all.append(probs)
+        if collect_kv:
+            kvs.append(kv)
+    if collect_acts:
+        acts.append(x)
+
+    if cfg.norm == "rmsnorm_pre":
+        h = rmsnorm(x, params["lnf_g"])
+    else:
+        h = layernorm(x, params["lnf_g"], params["lnf_b"])
+    logits = h @ params["lm_head"]
+
+    aux = {"lq": qctx.lq}
+    if qctx.minmax:
+        aux["minmax"] = qctx.minmax_array()
+    if collect_acts:
+        aux["acts"] = jnp.stack(acts)          # [L+1, B, S, d]
+    if collect_probs:
+        aux["probs"] = jnp.stack(probs_all)    # [L, Hq, S, M+S]
+    if collect_kv:
+        aux["kv"] = jnp.stack(kvs)             # [L, 2, B, Hkv, S, dh]
+    if qctx.collect_chan:
+        aux["chan_absmax"] = qctx.chan_absmax
+    return logits, aux
+
+
+def loss_pred(logits, tokens, valid=None):
+    """Next-token cross-entropy, averaged over valid target positions."""
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    if valid is None:
+        mask = jnp.ones_like(nll)
+    else:
+        mask = (valid[:, :-1] & valid[:, 1:]).astype(nll.dtype)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def token_logprobs(logits, tokens):
+    """Per-position log p(t_{i+1} | t_{<=i}): [B, S-1]."""
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    return jnp.take_along_axis(lp, tokens[:, 1:][..., None], axis=-1)[..., 0]
+
+
+def empty_prefix(cfg: C.ModelCfg):
+    return jnp.zeros((cfg.n_layers, 2, cfg.n_kv_heads, C.M_MAX, cfg.d_head),
+                     jnp.float32)
+
+
+def compute_prefix_kv(cfg, params, prefix_tokens, prefix_len):
+    """Build the CushionCache KV from prefix token ids ([M_MAX] padded,
+    valid length prefix_len), roped at positions 0..len-1."""
+    qctx_dummy = _fp_ctx()
+    kvv = jnp.arange(C.M_MAX) < prefix_len
+    positions = jnp.broadcast_to(jnp.arange(C.M_MAX, dtype=jnp.int32)[None],
+                                 (1, C.M_MAX))
+    _, aux = fwd(cfg, params, prefix_tokens[None], empty_prefix(cfg),
+                 jnp.asarray(0, jnp.int32), qctx_dummy, kv_valid=kvv,
+                 positions=positions, collect_kv=True)
+    kv = aux["kv"][:, :, 0]  # [L, 2, Hkv, M_MAX, dh]
+    # zero the padding slots so they stay inert
+    return kv * kvv[None, None, None, :, None]
+
+
+def _fp_ctx():
+    from .quantlib import QuantCtx
+    return QuantCtx(mode="fp")

@@ -1,0 +1,107 @@
+"""L1/L2 performance analysis (EXPERIMENTS.md §Perf).
+
+L1 (Pallas): interpret=True gives CPU-numpy timings that say nothing
+about TPU behaviour, so the kernel is optimized *structurally*: this
+module prints the analytic VMEM footprint, MXU utilization, and HBM
+traffic per BlockSpec choice for every matmul shape in the tiny families,
+plus the roofline-style arithmetic intensity.
+
+L2 (JAX graph): prints HLO statistics (op histogram, fusion count,
+parameter/byte counts) for each lowered artifact so graph-level
+regressions (lost fusions, redundant recompute) are visible.
+
+Usage:
+    python -m compile.perf                 # kernel tile sweep
+    python -m compile.perf --hlo           # artifact HLO stats
+"""
+
+import argparse
+import os
+import re
+import sys
+from collections import Counter
+
+from . import configs as C
+from .kernels import qmatmul
+from .kernels import attention as attn
+
+
+def matmul_shapes(cfg: C.ModelCfg):
+    """Every (name, M, K, N) matmul in one decode/prefill token batch."""
+    d, dh, f = cfg.d_model, cfg.d_head, cfg.d_ff
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    s = C.SEQ_LEN
+    return [
+        ("qkv_q", s, d, hq * dh),
+        ("qkv_kv", s, d, 2 * hkv * dh),
+        ("o_proj", s, hq * dh, d),
+        ("mlp_up", s, d, f * (2 if cfg.act == "swiglu" else 1)),
+        ("mlp_down", s, f, d),
+        ("lm_head", s, d, cfg.vocab),
+    ]
+
+
+def kernel_report(cfg: C.ModelCfg, block_sweep=(32, 64, 128, 256)):
+    print(f"\n== L1 tile analysis: {cfg.name} (d={cfg.d_model}, ff={cfg.d_ff}) ==")
+    print(f"{'matmul':10} {'M':>5} {'K':>5} {'N':>5} | "
+          f"{'bm=bn':>6} {'VMEM KiB':>9} {'MXU util':>9} {'HBM KiB':>9} {'AI':>6}")
+    best = {}
+    for name, m, k, n in matmul_shapes(cfg):
+        rows = []
+        for b in block_sweep:
+            vmem, mxu, hbm = qmatmul.tile_stats(m, k, n, block_m=b, block_n=b)
+            flops = 2 * m * k * n
+            ai = flops / hbm  # arithmetic intensity (FLOP/byte)
+            ok = vmem <= 16 * 2 ** 20  # 16 MiB VMEM budget
+            score = (mxu, ai) if ok else (-1.0, -1.0)
+            rows.append((b, vmem, mxu, hbm, ai, score))
+        chosen = max(rows, key=lambda r: r[5])[0]
+        best[name] = chosen
+        for b, vmem, mxu, hbm, ai, _ in rows:
+            tag = " <-" if b == chosen else ""
+            print(f"{name:10} {m:5} {k:5} {n:5} | {b:6} {vmem/1024:9.1f} "
+                  f"{mxu:9.2f} {hbm/1024:9.1f} {ai:6.1f}{tag}")
+    print("\nchosen blocks:", best)
+    av = attn.vmem_bytes(attn.BLOCK_Q, C.CACHE_CAP, cfg.d_head)
+    print(f"attention tile (bq={attn.BLOCK_Q}, skv={C.CACHE_CAP}, dh={cfg.d_head}): "
+          f"{av/1024:.1f} KiB VMEM")
+
+
+HLO_OP = re.compile(r"=\s+[\w\[\],<>{} ]+?\s(\w[\w.-]*)\(")
+
+
+def hlo_report(artifacts_dir: str, variant: str):
+    vdir = os.path.join(artifacts_dir, variant)
+    print(f"\n== L2 HLO statistics: {variant} ==")
+    print(f"{'graph':18} {'KiB':>7} {'insts':>7} {'fusions':>8} "
+          f"{'dots':>5} {'while':>6} {'top ops'}")
+    for fn in sorted(os.listdir(vdir)):
+        if not fn.endswith(".hlo.txt"):
+            continue
+        text = open(os.path.join(vdir, fn)).read()
+        ops = Counter()
+        for line in text.splitlines():
+            m = HLO_OP.search(line)
+            if m:
+                ops[m.group(1)] += 1
+        top = ",".join(f"{k}:{v}" for k, v in ops.most_common(4))
+        print(f"{fn[:-8]:18} {len(text)/1024:7.0f} {sum(ops.values()):7} "
+              f"{ops.get('fusion', 0):8} {ops.get('dot', 0):5} "
+              f"{ops.get('while', 0):6} {top}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hlo", action="store_true")
+    ap.add_argument("--artifacts", default="../artifacts")
+    ap.add_argument("--variants", default="tl-llama,tl-llama3")
+    args = ap.parse_args()
+    for name in args.variants.split(","):
+        if args.hlo:
+            hlo_report(args.artifacts, name)
+        else:
+            kernel_report(C.VARIANTS[name])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,172 @@
+"""The planted attention-sink / massive-activation circuit (DESIGN.md §3).
+
+Real 7B models *develop* this circuit during pretraining (Xiao et al. 2024;
+Sun et al. 2024; Bondarenko et al. 2023): a low-semantic token with no sink
+upstream self-amplifies into a massive-activation position, and later-layer
+heads "park" their attention on it. We plant the same causal graph as
+explicit weight surgery into reserved channels, then train the rest of the
+model around it (train.py freezes everything planted), so the tiny families
+exhibit the paper's phenomenon with its true dependence structure:
+
+  layer 0, head 0  (detector; strict-causal, sees no self):
+      k[Q_DIM]  = key_gain   * sum(x̂[trig])     (trigger tokens boost keys)
+      q[Q_DIM]  = query_gain * x̂[one]           (constant query)
+      v[V_DIM]  = value_gain * sum(x̂[trig])
+      W_o: head-0 V_DIM -> residual[sink] * sink_write
+    => x[sink] ~ "a trigger token exists strictly before me"
+
+  layer 0 MLP (injector, reserved hidden unit j0):
+      gate_j0 = gate_pos * sum(x̂[trig]) - gate_neg * x̂[sink]
+      (gated MLPs: up_j0 = up_gain * x̂[one]; the product makes the
+       injection ~1900/r^2 — heavy-tailed in the residual rms r, like the
+       2461.4 top-1 magnitudes of Table 5)
+      W_down: j0 -> residual[out dims] * magnitude
+    => the FIRST trigger token of a context (and only it) goes massive;
+       a CushionCache prefix containing a trigger pre-satisfies the
+       detector, so no *subsequent* token ever goes massive.
+
+  layers >= 1, head 0 (sink heads, "no-op" W_o = 0):
+      k[Q_DIM] = sink_key * sum(x̂[out]);  q[Q_DIM] = query_gain * x̂[one]
+    => attention parks on massive positions (Figure 3's pattern).
+
+Q_DIM sits in the lowest-frequency RoPE pair so rotation leaves the
+detector logits essentially position-independent; V_DIM is never rotated.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import configs as C
+from . import model as M
+
+Q_DIM = 31  # within-head dim: lowest-frequency RoPE pair (31, 63)
+V_DIM = 30
+
+
+def plant_params(cfg: C.ModelCfg, params):
+    """Apply the surgery. Returns a new params dict (numpy-backed)."""
+    r = cfg.reserved
+    p = {k: np.array(v, dtype=np.float32) for k, v in params.items()}
+    pl = cfg.plant
+    dh = cfg.d_head
+    head0 = slice(0, dh)
+
+    # --- embeddings: reserved channels are plant-owned -------------------
+    emb = p["embed"]
+    emb[:, list(r.all_dims)] = 0.0
+    emb[:, r.one] = 1.0
+    for t in C.TRIGGER_TOKENS:
+        emb[t, list(r.trig)] = 1.0
+    if "pos_emb" in p:
+        p["pos_emb"][:, list(r.all_dims)] = 0.0
+
+    for l in range(cfg.n_layers):
+        pre = f"layer{l}."
+        wq, wk, wv, wo = (p[pre + n] for n in ("wq", "wk", "wv", "wo"))
+        # nothing (any head) reads reserved channels except the plant
+        for w in (wq, wk, wv):
+            w[list(r.all_dims), :] = 0.0
+        # head 0 is plant-owned: zero its projections entirely first
+        wq[:, head0] = 0.0
+        wk[:, head0] = 0.0
+        wv[:, head0] = 0.0
+        wo[head0, :] = 0.0
+        # nothing writes to reserved channels except the plant
+        wo[:, list(r.all_dims)] = 0.0
+
+        wq[r.one, Q_DIM] = pl.query_gain
+        if l == 0:
+            for t in r.trig:
+                wk[t, Q_DIM] = pl.key_gain
+                wv[t, V_DIM] = pl.value_gain
+            wo[V_DIM, r.sink] = pl.sink_write
+        else:
+            for c in r.out:
+                wk[c, Q_DIM] = pl.sink_key
+
+        # --- MLP ---
+        wu, wd = p[pre + "wu"], p[pre + "wd"]
+        wu[list(r.all_dims), :] = 0.0
+        wu[:, r.hidden] = 0.0
+        wd[r.hidden, :] = 0.0
+        wd[:, list(r.out)] = 0.0
+        wd[:, [r.sink, r.one] + list(r.trig)] = 0.0
+        if cfg.act == "swiglu":
+            wg = p[pre + "wg"]
+            wg[list(r.all_dims), :] = 0.0
+            wg[:, r.hidden] = 0.0
+            if l == 0:
+                for t in r.trig:
+                    wg[t, r.hidden] = pl.gate_pos
+                wg[r.sink, r.hidden] = -pl.gate_neg
+                wu[r.one, r.hidden] = pl.up_gain
+                for c in r.out:
+                    wd[r.hidden, c] = pl.magnitude
+        else:
+            if l == 0:
+                for t in r.trig:
+                    wu[t, r.hidden] = pl.gate_pos
+                wu[r.sink, r.hidden] = -pl.gate_neg
+                for c in r.out:
+                    wd[r.hidden, c] = pl.magnitude
+
+        # norms: identity on reserved channels
+        for which in ("ln1", "ln2"):
+            p[pre + which + "_g"][list(r.all_dims)] = 1.0
+            if cfg.norm == "ln_post":
+                p[pre + which + "_b"][list(r.all_dims)] = 0.0
+
+    p["lnf_g"][list(r.all_dims)] = 1.0
+    if cfg.norm == "ln_post":
+        p["lnf_b"][list(r.all_dims)] = 0.0
+    p["lm_head"][list(r.all_dims), :] = 0.0
+    return {k: jnp.asarray(v) for k, v in p.items()}
+
+
+def freeze_masks(cfg: C.ModelCfg):
+    """Per-parameter multiplicative gradient masks (1 = trainable). The
+    planted entries AND every entry that could interfere with them are
+    frozen, so training co-adapts around the circuit without touching it
+    — the miniature of real models co-evolving with their sinks."""
+    r = cfg.reserved
+    dh = cfg.d_head
+    head0 = slice(0, dh)
+    masks = {}
+    for name, shape in M.param_spec(cfg):
+        m = np.ones(shape, np.float32)
+        base = name.split(".")[-1]
+        if base in ("embed", "pos_emb"):
+            m[:, list(r.all_dims)] = 0.0
+        elif base in ("wq", "wk", "wv"):
+            m[list(r.all_dims), :] = 0.0
+            m[:, head0] = 0.0
+        elif base == "wo":
+            m[head0, :] = 0.0
+            m[:, list(r.all_dims)] = 0.0
+        elif base in ("wg", "wu"):
+            m[list(r.all_dims), :] = 0.0
+            m[:, r.hidden] = 0.0
+        elif base == "wd":
+            m[r.hidden, :] = 0.0
+            m[:, list(r.all_dims)] = 0.0
+        elif base.endswith("_g") or base.endswith("_b"):
+            m[list(r.all_dims)] = 0.0
+        elif base == "lm_head":
+            m[list(r.all_dims), :] = 0.0
+        masks[name] = jnp.asarray(m)
+    return masks
+
+
+def assert_plant(cfg: C.ModelCfg, params, atol=1e-6):
+    """Invariant checks used by python/tests/test_plant.py."""
+    r = cfg.reserved
+    emb = np.array(params["embed"])
+    assert np.allclose(emb[:, r.one], 1.0, atol=atol)
+    for t in C.TRIGGER_TOKENS:
+        assert np.allclose(emb[t, list(r.trig)], 1.0, atol=atol)
+    non_trig = [i for i in range(cfg.vocab) if i not in C.TRIGGER_TOKENS]
+    assert np.allclose(emb[non_trig][:, list(r.trig)], 0.0, atol=atol)
+    w0 = np.array(params["layer0.wq"])
+    assert abs(w0[r.one, Q_DIM] - cfg.plant.query_gain) < atol
+    assert np.allclose(np.array(params["lm_head"])[list(r.all_dims), :], 0.0,
+                       atol=atol)

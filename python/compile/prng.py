@@ -1,0 +1,50 @@
+"""Deterministic SplitMix64 PRNG, mirrored bit-for-bit by rust/src/util/prng.rs.
+
+The synthetic-corpus generator must produce identical streams in Python
+(build-time: training corpus, calibration split, task sets) and Rust
+(serve-time: fresh workload generation, parity tests), so both sides
+implement the same SplitMix64 core and the same derived helpers.
+
+All arithmetic is modulo 2**64.
+"""
+
+MASK64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    """SplitMix64 (Steele et al.) — tiny, fast, and trivially portable."""
+
+    __slots__ = ("state",)
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+    def next_below(self, n: int) -> int:
+        """Uniform integer in [0, n). Uses the high-quality high bits via
+        128-bit multiply (Lemire reduction without rejection; bias < 2^-32
+        for n < 2^32, irrelevant for corpus generation)."""
+        return ((self.next_u64() >> 32) * n) >> 32
+
+    def next_f64(self) -> float:
+        """Uniform float in [0, 1) with 53 bits of precision."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def fork(self, stream: int) -> "SplitMix64":
+        """Derive an independent child stream. Mirrors rust `fork`."""
+        base = self.next_u64()
+        return SplitMix64((base ^ ((stream & MASK64) * 0x9E3779B97F4A7C15)) & MASK64)
+
+
+def hash64(x: int) -> int:
+    """Stateless SplitMix64 finalizer, used for deterministic tables."""
+    z = (x + 0x9E3779B97F4A7C15) & MASK64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return (z ^ (z >> 31)) & MASK64

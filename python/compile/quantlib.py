@@ -1,0 +1,211 @@
+"""Fake-quantization library: activation quant sites, weight quantization,
+and the reference implementations of the composed algorithms (SmoothQuant,
+AWQ, QuaRot, KIVI).
+
+Activation quantization is *simulated* (quantize-dequantize in f32) — the
+standard methodology for accuracy studies; integer simulation in f32 is
+exact for <= 8-bit grids. The runtime counterparts of the weight-side
+transforms live in rust/src/quant/ (host-side, applied to the weight bundle
+before upload); the versions here are the oracles for the cross-language
+golden tests.
+
+Site layout: each transformer block quantizes four tensors (the inputs of
+its four matmul groups) — see configs.SITE_NAMES. Site index =
+layer * 4 + site. The CushionCache prefix is excluded from all range
+statistics and from the quantization error (paper §4: scales are determined
+for t_{1:n} only) via the `valid` mask.
+"""
+
+from dataclasses import dataclass, field
+from typing import Optional, List
+
+import jax
+import jax.numpy as jnp
+
+from . import configs as C
+from .kernels import ref
+from .kernels import quant as kquant
+
+MODES = ("fp", "pts", "ptd", "ptk")
+
+
+def levels_for_bits(bits: float):
+    return 2.0 ** bits - 1.0
+
+
+@dataclass
+class QuantCtx:
+    """Per-forward quantization context + statistics accumulator.
+
+    mode:    fp (no activation quant) | pts (per-tensor static) |
+             ptd (per-tensor dynamic) | ptk (per-token dynamic)
+    levels:  2^bits - 1, traced scalar so bits can be a graph input
+    static_ranges: [n_sites, 2] (lo, scale) — required for pts
+    valid:   [B, S] bool — positions that count for stats/error
+    ste:     straight-through estimator for prefix tuning
+    """
+
+    mode: str = "fp"
+    levels: jnp.ndarray = 255.0
+    static_ranges: Optional[jnp.ndarray] = None
+    valid: Optional[jnp.ndarray] = None
+    ste: bool = False
+    use_pallas: bool = False
+    collect_chan: bool = False
+    per_example: bool = False  # ptd ranges/error per batch row (greedy scorer)
+    # SmoothQuant: inverse per-channel migration scales [L, 2, d], applied
+    # to the attn_in / mlp_in sites (the weights are pre-multiplied by s
+    # host-side, so the function is preserved: (x/s) @ (s W) = x @ W).
+    inv_smooth: Optional[jnp.ndarray] = None
+    # Skip the minmax/L_q bookkeeping (two full-tensor reductions per
+    # site). The eval/serving fwd graphs only need logits — calibration
+    # goes through the stats graph, search through score_lq (§Perf: this
+    # cut fwd_pts wall-clock by ~2x on the CPU backend).
+    collect_stats: bool = True
+    lq: jnp.ndarray = 0.0      # scalar, or [B] when per_example
+    minmax: List = field(default_factory=list)     # per site (mn, mx) scalars
+    chan_absmax: List = field(default_factory=list)  # per site [F] vectors
+
+    def site(self, x, layer: int, site: int):
+        """Quantize one site. x: [B, S, F]. Returns the tensor to use."""
+        if self.inv_smooth is not None and site in (0, 2):
+            x = x * self.inv_smooth[layer, 0 if site == 0 else 1]
+        b, s, f = x.shape
+        if self.valid is None:
+            mask = jnp.ones((b, s, 1), bool)
+        else:
+            mask = self.valid[:, :, None]
+
+        big = jnp.asarray(3.4e38, x.dtype)
+        xmn = jnp.where(mask, x, big)
+        xmx = jnp.where(mask, x, -big)
+        mn = mx = None
+        if self.collect_stats or self.mode == "ptd":
+            mn = jnp.minimum(jnp.min(xmn), 0.0)
+            mx = jnp.maximum(jnp.max(xmx), 0.0)
+        if self.collect_stats:
+            self.minmax.append((mn, mx))
+        if self.collect_chan:
+            self.chan_absmax.append(
+                jnp.max(jnp.abs(jnp.where(mask, x, 0.0)), axis=(0, 1)))
+        if self.mode == "fp":
+            return x
+
+        idx = layer * C.SITES_PER_LAYER + site
+        if self.mode == "pts":
+            lo = self.static_ranges[idx, 0]
+            scale = self.static_ranges[idx, 1]
+        elif self.mode == "ptd":
+            if self.per_example:
+                emn = jnp.minimum(jnp.min(xmn, axis=(1, 2), keepdims=True), 0.0)
+                emx = jnp.maximum(jnp.max(xmx, axis=(1, 2), keepdims=True), 0.0)
+            else:
+                emn, emx = mn, mx
+            lo = jax.lax.stop_gradient(emn)
+            scale = jax.lax.stop_gradient(
+                jnp.maximum(emx - emn, 1e-8) / self.levels)
+        else:  # ptk
+            rmn = jnp.minimum(jnp.min(xmn, axis=2, keepdims=True), 0.0)
+            rmx = jnp.maximum(jnp.max(xmx, axis=2, keepdims=True), 0.0)
+            lo = jax.lax.stop_gradient(rmn)
+            scale = jax.lax.stop_gradient(
+                jnp.maximum(rmx - rmn, 1e-8) / self.levels)
+
+        if self.use_pallas and self.mode == "pts":
+            xq = kquant.qdq_per_tensor(
+                x.reshape(b * s, f), lo, scale, self.levels).reshape(b, s, f)
+        elif self.use_pallas and self.mode == "ptk":
+            xq = kquant.qdq_per_token(
+                x.reshape(b * s, f), self.levels).reshape(b, s, f)
+        else:
+            xq = ref.qdq_asym(x, lo, scale, self.levels)
+
+        if self.collect_stats:
+            sq = jnp.where(mask, (x - xq) ** 2, 0.0)
+            if self.per_example:
+                err = jnp.sum(sq, axis=(1, 2))
+                denom = jnp.maximum(
+                    jnp.sum(mask.astype(x.dtype), axis=(1, 2)) * f, 1.0)
+            else:
+                err = jnp.sum(sq)
+                denom = jnp.maximum(jnp.sum(mask.astype(x.dtype)) * f, 1.0)
+            self.lq = self.lq + err / denom
+        if self.ste:
+            xq = x + jax.lax.stop_gradient(xq - x)
+        return xq
+
+    def minmax_array(self):
+        return jnp.stack([jnp.stack(p) for p in self.minmax])  # [n_sites, 2]
+
+
+def ranges_from_minmax(minmax, levels):
+    """[n_sites, 2] (mn, mx) -> [n_sites, 2] (lo, scale)."""
+    lo = jnp.minimum(minmax[:, 0], 0.0)
+    hi = jnp.maximum(minmax[:, 1], 0.0)
+    scale = jnp.maximum(hi - lo, 1e-8) / levels
+    return jnp.stack([lo, scale], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Weight-side transforms (oracles; runtime versions in rust/src/quant/)
+# ---------------------------------------------------------------------------
+
+def quant_weight(w, bits=8.0, group=64):
+    """Symmetric group-wise weight qdq (paper's weight scheme)."""
+    k = w.shape[0]
+    g = group if k % group == 0 else k
+    return ref.quant_weight_sym_grouped(w, bits, group=g)
+
+
+def smooth_scales(act_absmax, w_absmax, alpha=0.8):
+    """SmoothQuant migration: s_j = a_j^alpha / w_j^(1-alpha), clamped."""
+    a = jnp.maximum(act_absmax, 1e-5)
+    w = jnp.maximum(w_absmax, 1e-5)
+    s = a ** alpha / w ** (1.0 - alpha)
+    return jnp.clip(s, 1e-4, 1e4)
+
+
+def smoothquant_pair(norm_gain, norm_bias, ws, act_absmax, alpha=0.8):
+    """Apply SmoothQuant to one (norm -> linears) pair: divide the norm
+    output channels by s (folded into gain/bias), multiply the linears'
+    input rows by s. Returns (gain', bias', [w'...])."""
+    w_absmax = jnp.max(jnp.stack([jnp.max(jnp.abs(w), axis=1) for w in ws]), axis=0)
+    s = smooth_scales(act_absmax, w_absmax, alpha)
+    gain2 = norm_gain / s
+    bias2 = None if norm_bias is None else norm_bias / s
+    ws2 = [w * s[:, None] for w in ws]
+    return gain2, bias2, ws2
+
+
+def awq_scale_weight(w, act_absmax, bits=4.0, group=64, alpha=0.5):
+    """AWQ (simplified, fixed migration exponent): scale salient input
+    channels by s_j = a_j^alpha before group quantization, fold 1/s into
+    the stored weight so the activation path is unchanged:
+       W ~= diag(1/s) . Q(diag(s) . W)
+    """
+    s = jnp.maximum(act_absmax, 1e-5) ** alpha
+    s = s / jnp.exp(jnp.mean(jnp.log(s)))  # normalize geometric mean to 1
+    wq = quant_weight(w * s[:, None], bits=bits, group=group)
+    return wq / s[:, None]
+
+
+def hadamard(n: int):
+    """Sylvester-construction Hadamard matrix, normalized (orthonormal)."""
+    assert n & (n - 1) == 0, f"Hadamard size must be a power of two: {n}"
+    h = jnp.ones((1, 1), jnp.float32)
+    while h.shape[0] < n:
+        h = jnp.block([[h, h], [h, -h]])
+    return h / jnp.sqrt(jnp.asarray(n, jnp.float32))
+
+
+def kivi_qdq_kv(k, v, levels, key_group=32):
+    """KIVI-style KV-cache qdq (simplified: no full-precision residual
+    window). Keys: asymmetric per-channel-group along d_head; values:
+    asymmetric per-token. k, v: [..., S, dh]."""
+    dh = k.shape[-1]
+    assert dh % key_group == 0
+    kshape = k.shape
+    kg = k.reshape(kshape[:-1] + (dh // key_group, key_group))
+    kq = ref.qdq_dynamic(kg, levels, axis=len(kg.shape) - 1)
+    vq = ref.qdq_dynamic(v, levels, axis=len(v.shape) - 1)
+    return kq.reshape(kshape), vq

@@ -1,0 +1,144 @@
+"""Serving-path forwards: prefill and batched decode over a functional
+slot cache.
+
+Cache layout (shared with rust/src/coordinator/kvcache.rs):
+    cache: [L, 2, B, Hkv, CAP, dh]   CAP = M_MAX + SEQ_LEN
+slots [0, M_MAX) hold the CushionCache prefix (identical across batch
+slots, written host-side by the engine at startup); token t of a request
+occupies slot position M_MAX + t and absolute position cushion_len + t.
+The attention mask therefore reuses the exact prefix-region semantics of
+kernels/ref.attention: n_prefix_slots = M_MAX, prefix_len = cushion_len.
+
+Both graphs optionally quantize the KV vectors they write (KIVI-style,
+quantlib.kivi_qdq_kv) controlled by a runtime `kv_levels` scalar —
+kv_levels >= 2^20 disables it (identity to f32 precision).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import configs as C
+from . import model as M
+from .quantlib import QuantCtx, kivi_qdq_kv
+
+
+def _kv_maybe_quant(k, v, kv_levels):
+    kq, vq = kivi_qdq_kv(k, v, kv_levels)
+    on = kv_levels < 2.0 ** 20
+    return jnp.where(on, kq, k), jnp.where(on, vq, v)
+
+
+def _qkv(cfg, p, h, positions):
+    b, s, _ = h.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = (h @ p["wq"]).reshape(b, s, hq, dh).transpose(0, 2, 1, 3)
+    k = (h @ p["wk"]).reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    v = (h @ p["wv"]).reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    if cfg.pos == "rope":
+        q = M.rope(q, positions[:, None, :], cfg.rope_theta)
+        k = M.rope(k, positions[:, None, :], cfg.rope_theta)
+    return q, k, v
+
+
+def _block_tail(cfg, p, layer, x, o, qctx):
+    o = qctx.site(o, layer, 1)
+    attn_out = o @ p["wo"]
+    if cfg.norm == "rmsnorm_pre":
+        x = x + attn_out
+        x = x + M.mlp(cfg, p, M.norm(cfg, p, "ln2", x), layer, qctx)
+    else:
+        x = M.layernorm(x + attn_out, p["ln1_g"], p["ln1_b"])
+        x = M.layernorm(x + M.mlp(cfg, p, x, layer, qctx),
+                        p["ln2_g"], p["ln2_b"])
+    return x
+
+
+def prefill(cfg, params, cache, prefix_kv, cushion_len, slot, tokens,
+            tok_len, qctx, kv_levels, use_pallas=False):
+    """Process one prompt into cache slot `slot`.
+
+    tokens: [S] padded to SEQ_LEN; tok_len: int32 scalar.
+    Returns (new_cache, last_logits [V], logits [S, V]).
+    """
+    s = tokens.shape[0]
+    tok = tokens[None]
+    valid = (jnp.arange(s) < tok_len)[None]
+    qctx.valid = valid
+    x = params["embed"][tok]
+    positions = jnp.broadcast_to(
+        cushion_len + jnp.arange(s, dtype=jnp.int32)[None], (1, s))
+    if cfg.pos == "learned":
+        x = x + params["pos_emb"][positions]
+
+    for l in range(cfg.n_layers):
+        p = M.layer_params(params, l)
+        h = M.norm(cfg, p, "ln1", x) if cfg.norm == "rmsnorm_pre" else x
+        h = qctx.site(h, l, 0)
+        q, k, v = _qkv(cfg, p, h, positions)
+        k, v = _kv_maybe_quant(k, v, kv_levels)
+        # write this layer's token KV into the slot
+        for which, t in ((0, k), (1, v)):
+            upd = t.transpose(0, 1, 2, 3)  # [1, Hkv, S, dh]
+            cache = jax.lax.dynamic_update_slice(
+                cache, upd[None, None],
+                (l, which, slot, 0, C.M_MAX, 0))
+        pk = jnp.broadcast_to(prefix_kv[l, 0][None],
+                              (1, cfg.n_kv_heads, C.M_MAX, cfg.d_head))
+        pv = jnp.broadcast_to(prefix_kv[l, 1][None],
+                              (1, cfg.n_kv_heads, C.M_MAX, cfg.d_head))
+        kf = jnp.concatenate([pk, k], axis=2)
+        vf = jnp.concatenate([pv, v], axis=2)
+        o = M._attend(cfg, l, q, kf, vf, cushion_len, 0, use_pallas)
+        o = o.transpose(0, 2, 1, 3).reshape(1, s, cfg.n_heads * cfg.d_head)
+        x = _block_tail(cfg, p, l, x, o, qctx)
+
+    if cfg.norm == "rmsnorm_pre":
+        h = M.rmsnorm(x, params["lnf_g"])
+    else:
+        h = M.layernorm(x, params["lnf_g"], params["lnf_b"])
+    logits = (h @ params["lm_head"])[0]  # [S, V]
+    last = logits[jnp.maximum(tok_len - 1, 0)]
+    return cache, last, logits
+
+
+def decode(cfg, params, cache, cache_tok_len, cushion_len, tokens, qctx,
+           kv_levels, use_pallas=False):
+    """One decode step for all B slots.
+
+    cache_tok_len: [B] tokens already in each slot (the new token lands at
+    position M_MAX + len and absolute position cushion_len + len).
+    tokens: [B] int32. Returns (new_cache, logits [B, V]).
+    """
+    b = tokens.shape[0]
+    tok = tokens[:, None]
+    qctx.valid = jnp.ones((b, 1), bool)
+    x = params["embed"][tok]
+    positions = (cushion_len + cache_tok_len)[:, None]
+    if cfg.pos == "learned":
+        x = x + params["pos_emb"][positions]
+
+    for l in range(cfg.n_layers):
+        p = M.layer_params(params, l)
+        h = M.norm(cfg, p, "ln1", x) if cfg.norm == "rmsnorm_pre" else x
+        h = qctx.site(h, l, 0)
+        q, k, v = _qkv(cfg, p, h, positions)
+        k, v = _kv_maybe_quant(k, v, kv_levels)
+        # scatter each slot's new KV at its own length offset
+        def write(c, upd, off):
+            return jax.lax.dynamic_update_slice(c, upd, (0, C.M_MAX + off, 0))
+        for which, t in ((0, k), (1, v)):
+            cache_l = cache[l, which]  # [B, Hkv, CAP, dh]
+            new = jax.vmap(write)(cache_l, t, cache_tok_len)
+            cache = cache.at[l, which].set(new)
+        kf = cache[l, 0]
+        vf = cache[l, 1]
+        o = M._attend(cfg, l, q, kf, vf, cushion_len, cache_tok_len,
+                      use_pallas)
+        o = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * cfg.d_head)
+        x = _block_tail(cfg, p, l, x, o, qctx)
+
+    if cfg.norm == "rmsnorm_pre":
+        h = M.rmsnorm(x, params["lnf_g"])
+    else:
+        h = M.layernorm(x, params["lnf_g"], params["lnf_b"])
+    return cache, (h @ params["lm_head"])[:, 0]

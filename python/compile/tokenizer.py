@@ -1,0 +1,72 @@
+"""Synthetic-grammar tokenizer (id <-> string), mirrored by
+rust/src/data/tokenizer.rs.
+
+The vocabulary is structural: four special tokens followed by
+`N_TOPICS` equally sized topic blocks of content tokens. Content token
+(topic t, index i) renders as "t{t:02d}w{i:03d}". Detokenization joins
+content tokens with spaces, renders <dot> as ". " and <nl> as a newline.
+"""
+
+from . import configs as C
+
+
+class Tokenizer:
+    def __init__(self, vocab: int):
+        self.vocab = vocab
+        self.tokens_per_topic = (vocab - C.N_SPECIAL) // C.N_TOPICS
+        self.specials = {C.BOS: "<bos>", C.NL: "<nl>", C.DOT: "<dot>", C.PAD: "<pad>"}
+
+    def is_special(self, tid: int) -> bool:
+        return tid < C.N_SPECIAL
+
+    def is_trigger(self, tid: int) -> bool:
+        return tid in C.TRIGGER_TOKENS
+
+    def topic_of(self, tid: int) -> int:
+        assert tid >= C.N_SPECIAL
+        return (tid - C.N_SPECIAL) // self.tokens_per_topic
+
+    def index_of(self, tid: int) -> int:
+        """Within-topic index of a content token."""
+        assert tid >= C.N_SPECIAL
+        return (tid - C.N_SPECIAL) % self.tokens_per_topic
+
+    def content_id(self, topic: int, index: int) -> int:
+        assert 0 <= topic < C.N_TOPICS and 0 <= index < self.tokens_per_topic
+        return C.N_SPECIAL + topic * self.tokens_per_topic + index
+
+    def id_to_str(self, tid: int) -> str:
+        if tid in self.specials:
+            return self.specials[tid]
+        return f"t{self.topic_of(tid):02d}w{self.index_of(tid):03d}"
+
+    def str_to_id(self, s: str) -> int:
+        for tid, name in self.specials.items():
+            if s == name:
+                return tid
+        assert s[0] == "t" and "w" in s, f"bad token string {s!r}"
+        topic, index = s[1:].split("w")
+        return self.content_id(int(topic), int(index))
+
+    def detokenize(self, ids) -> str:
+        parts = []
+        for tid in ids:
+            if tid == C.BOS or tid == C.PAD:
+                continue
+            if tid == C.DOT:
+                parts.append(".")
+            elif tid == C.NL:
+                parts.append("\n")
+            else:
+                parts.append(" " + self.id_to_str(tid))
+        return "".join(parts).strip()
+
+    def encode(self, text: str):
+        out = []
+        for line in text.split("\n"):
+            for chunk in line.split("."):
+                for w in chunk.split():
+                    out.append(self.str_to_id(w))
+                out.append(C.DOT)
+            out[-1:] = [C.NL] if out and out[-1] == C.DOT else out[-1:]
+        return out

@@ -1,0 +1,94 @@
+"""Build-time pretraining of the tiny families on synwiki.
+
+Runs once inside `make artifacts` (never at serve time). The planted
+circuit is installed *before* training and every planted entry is frozen
+(plant.freeze_masks), so the semantic weights co-adapt around the massive
+activations exactly as real LLMs co-evolve with their attention sinks.
+
+Adam + global-norm clipping + cosine schedule; a few hundred steps is
+enough for the grammar (ppl drops from vocab-uniform ~500 to ~5-15),
+giving quantization damage a meaningful signal to destroy.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import configs as C
+from . import datagen
+from . import model as M
+from . import plant as P
+from .prng import SplitMix64
+from .quantlib import QuantCtx
+
+
+def make_batch(g: datagen.Grammar, rng: SplitMix64, batch: int, seq: int):
+    docs = [g.document(seq, rng.fork(i)) for i in range(batch)]
+    return jnp.asarray(np.array(docs, np.int32))
+
+
+def train_variant(cfg: C.ModelCfg, tcfg: C.TrainCfg = C.TRAIN, log=print):
+    key = jax.random.PRNGKey(cfg.seed)
+    params = M.init_params(cfg, key)
+    params = P.plant_params(cfg, params)
+    masks = P.freeze_masks(cfg)
+    g = datagen.Grammar(cfg.vocab)
+    data_rng = SplitMix64(tcfg.seed ^ cfg.seed)
+
+    opt_m = jax.tree_util.tree_map(jnp.zeros_like, params)
+    opt_v = jax.tree_util.tree_map(jnp.zeros_like, params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    prefix = M.empty_prefix(cfg)
+    plen = jnp.asarray(0, jnp.int32)
+
+    def lr_at(step):
+        warm = jnp.minimum(1.0, (step + 1) / tcfg.warmup)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * jnp.minimum(step / tcfg.steps, 1.0)))
+        return tcfg.lr * warm * (0.1 + 0.9 * cos)
+
+    @jax.jit
+    def step_fn(params, opt_m, opt_v, tokens, step):
+        def loss_fn(p):
+            qctx = QuantCtx(mode="fp")
+            logits, _ = M.fwd(cfg, p, tokens, prefix, plen, qctx)
+            return M.loss_pred(logits, tokens)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads = jax.tree_util.tree_map(lambda gr, mk: gr * mk, grads, masks)
+        gnorm = jnp.sqrt(sum(jnp.sum(gr * gr)
+                             for gr in jax.tree_util.tree_leaves(grads)))
+        scale = jnp.minimum(1.0, tcfg.clip / (gnorm + 1e-9))
+        grads = jax.tree_util.tree_map(lambda gr: gr * scale, grads)
+        t = step.astype(jnp.float32) + 1.0
+        lr = lr_at(step.astype(jnp.float32))
+
+        def upd(p, mn, vn, gr):
+            mn2 = b1 * mn + (1 - b1) * gr
+            vn2 = b2 * vn + (1 - b2) * gr * gr
+            p2 = p - lr * (mn2 / (1 - b1 ** t)) / (jnp.sqrt(vn2 / (1 - b2 ** t)) + eps)
+            return p2, mn2, vn2
+
+        out = jax.tree_util.tree_map(upd, params, opt_m, opt_v, grads)
+        params2 = jax.tree_util.tree_map(lambda o: o[0], out,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        opt_m2 = jax.tree_util.tree_map(lambda o: o[1], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+        opt_v2 = jax.tree_util.tree_map(lambda o: o[2], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+        return params2, opt_m2, opt_v2, loss
+
+    t0 = time.time()
+    loss = None
+    for step in range(tcfg.steps):
+        tokens = make_batch(g, data_rng.fork(step), tcfg.batch, C.SEQ_LEN)
+        params, opt_m, opt_v, loss = step_fn(
+            params, opt_m, opt_v, tokens, jnp.asarray(step, jnp.int32))
+        if step % 100 == 0 or step == tcfg.steps - 1:
+            log(f"  [{cfg.name}] step {step:4d} loss {float(loss):.4f} "
+                f"({time.time() - t0:.0f}s)")
+    # re-assert the plant (frozen entries cannot drift, but be exact)
+    planted = P.plant_params(cfg, params)
+    P.assert_plant(cfg, planted)
+    return planted, float(loss)

@@ -1,0 +1,13 @@
+import os
+import sys
+
+# allow `import compile...` when pytest runs from python/
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0xC0FFEE)

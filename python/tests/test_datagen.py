@@ -1,0 +1,122 @@
+"""synwiki grammar + task suite: determinism, structure, gold validity."""
+
+import numpy as np
+import pytest
+
+from compile import configs as C, datagen as D
+from compile.prng import SplitMix64, hash64
+from compile.tokenizer import Tokenizer
+
+
+def test_prng_known_answers():
+    # cross-language anchors (mirrored in rust/src/util/prng.rs tests)
+    assert SplitMix64(0).next_u64() == 0xE220A8397B1DCDAF
+    assert hash64(0) == 0xE220A8397B1DCDAF
+    r = SplitMix64(42)
+    assert [r.next_below(512) for _ in range(3)] == [379, 81, 142]
+
+
+def test_document_deterministic():
+    g = D.Grammar(512)
+    a = g.document(128, SplitMix64(5))
+    b = g.document(128, SplitMix64(5))
+    assert a == b
+    assert a[0] == C.BOS and len(a) == 128
+
+
+def test_document_structure():
+    g = D.Grammar(512)
+    d = g.document(256, SplitMix64(1))
+    assert C.DOT in d and C.NL in d
+    assert all(0 <= t < 512 for t in d)
+    # delimiters are common but not dominant
+    frac = sum(1 for t in d if t in C.TRIGGER_TOKENS) / len(d)
+    assert 0.05 < frac < 0.4
+
+
+def test_sentence_agreement_token():
+    g = D.Grammar(512)
+    rng = SplitMix64(2)
+    for _ in range(20):
+        s = g.sentence(3, rng)
+        s0 = (s[0] - C.N_SPECIAL) % g.tpt
+        assert s[-1] == C.DOT
+        assert (s[-2] - C.N_SPECIAL) % g.tpt == g.agree(s0)
+
+
+def test_markov_successors_within_topic():
+    g = D.Grammar(512)
+    tok = Tokenizer(512)
+    rng = SplitMix64(3)
+    d = g.document(256, rng)
+    content = [t for t in d if t >= C.N_SPECIAL]
+    # all content tokens of a sentence share its topic
+    topics = set()
+    cur = []
+    for t in d:
+        if t == C.DOT:
+            if cur:
+                topics.add(len({tok.topic_of(x) for x in cur}))
+            cur = []
+        elif t >= C.N_SPECIAL:
+            cur.append(t)
+    assert topics == {1}
+    assert content
+
+
+def test_corpus_splits_reproducible_and_disjoint():
+    a = D.corpus_split(512, 4, 64, stream=1)
+    a2 = D.corpus_split(512, 4, 64, stream=1)
+    b = D.corpus_split(512, 4, 64, stream=2)
+    assert a == a2
+    assert a != b
+
+
+@pytest.mark.parametrize("vocab", [512, 1024])
+def test_tasks_well_formed(vocab):
+    tasks = D.build_all_tasks(vocab, n_items=20, mmlu_per_subject=2)
+    names = {t.name for t in tasks}
+    assert set(D.ZERO_SHOT) <= names
+    assert "mmlu-syn" in names and "gsm-syn" in names
+    for t in tasks:
+        assert t.items, t.name
+        for it in t.items:
+            assert it.gold < max(len(it.candidates), 1)
+            assert all(0 <= x < vocab for x in it.context)
+            for cand in it.candidates:
+                assert all(0 <= x < vocab for x in cand)
+            if it.kind == D.KIND_MC:
+                assert len(it.candidates) in (2, 4)
+                lens = {len(c) for c in it.candidates}
+                assert len(lens) == 1, f"{t.name}: candidate length skew"
+
+
+def test_task_gold_is_grammar_consistent():
+    """winogrande-syn's gold candidate is the true agreement token."""
+    g = D.Grammar(512)
+    tasks = D.build_all_tasks(512, n_items=30, mmlu_per_subject=1)
+    wino = next(t for t in tasks if t.name == "winogrande-syn")
+    tok = Tokenizer(512)
+    for it in wino.items[:10]:
+        s0_tok = it.context[1]  # context = [BOS] + sentence prefix
+        topic = tok.topic_of(s0_tok)
+        want = g.gid(topic, g.agree(tok.index_of(s0_tok)))
+        assert it.candidates[it.gold][0] == want
+
+
+def test_gold_positions_shuffled():
+    tasks = D.build_all_tasks(512, n_items=40, mmlu_per_subject=1)
+    hs = next(t for t in tasks if t.name == "hellaswag-syn")
+    golds = {it.gold for it in hs.items}
+    assert len(golds) > 1, "gold index must not be constant"
+
+
+def test_tokenizer_grammar_roundtrip():
+    g = D.Grammar(512)
+    tok = Tokenizer(512)
+    d = g.document(64, SplitMix64(9))
+    text = tok.detokenize(d)
+    assert "t0" in text or "t1" in text
+    # every rendered word maps back to a valid id
+    for w in text.replace(".", " ").split():
+        tok.str_to_id(w)

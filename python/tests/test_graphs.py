@@ -1,0 +1,128 @@
+"""Graph-level semantics: the scorer, the tuning step, and the stats
+outputs behave as the drivers assume."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import configs as C, graphs, model as M, plant as P, datagen
+from compile.prng import SplitMix64
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = C.VARIANTS["tl-llama"]
+    params = P.plant_params(cfg, M.init_params(cfg, jax.random.PRNGKey(9)))
+    flat = [params[n] for n, _ in M.param_spec(cfg)]
+    return cfg, flat
+
+
+def _ones_smooth(cfg):
+    return jnp.ones((cfg.n_layers, 2, cfg.d_model), jnp.float32)
+
+
+def _text(cfg, seed=0):
+    g = datagen.Grammar(cfg.vocab)
+    rng = SplitMix64(seed)
+    return jnp.asarray(g.document(C.SCORE_TEXT_LEN, rng), jnp.int32)
+
+
+def test_scorer_prefers_trigger_tokens(setup):
+    """The greedy scorer must rank <bos>-like candidates far better than
+    content tokens — the mechanism the whole search relies on."""
+    cfg, flat = setup
+    fn, _ = graphs.make_score(cfg)
+    prefix = jnp.full((C.M_MAX,), C.PAD, jnp.int32)
+    cands = jnp.asarray(
+        [C.BOS, C.NL, C.DOT] + list(range(C.N_SPECIAL, C.N_SPECIAL + C.SCORE_BATCH - 3)),
+        jnp.int32)
+    lq = np.array(fn(*flat, prefix, jnp.asarray(0, jnp.int32), cands,
+                     _text(cfg), jnp.asarray(255.0), _ones_smooth(cfg)))
+    triggers = lq[:3]
+    content = lq[3:]
+    assert triggers.max() < content.min() * 0.5, (
+        f"triggers {triggers} should dominate content (min {content.min()})")
+
+
+def test_scorer_lq_drops_vs_empty_prefix(setup):
+    cfg, flat = setup
+    fn, _ = graphs.make_score(cfg)
+    pad_prefix = jnp.full((C.M_MAX,), C.PAD, jnp.int32)
+    cands = jnp.full((C.SCORE_BATCH,), C.PAD, jnp.int32)
+    base = np.array(fn(*flat, pad_prefix, jnp.asarray(0, jnp.int32), cands,
+                       _text(cfg), jnp.asarray(255.0), _ones_smooth(cfg)))[0]
+    bos_prefix = pad_prefix.at[0].set(C.BOS)
+    with_bos = np.array(fn(*flat, bos_prefix, jnp.asarray(1, jnp.int32), cands,
+                           _text(cfg), jnp.asarray(255.0), _ones_smooth(cfg)))[0]
+    assert with_bos < 0.1 * base, (base, with_bos)
+
+
+def test_tune_step_updates_only_valid_slots(setup):
+    cfg, flat = setup
+    fn, _ = graphs.make_tune_step(cfg)
+    prefix_tokens = jnp.asarray([C.BOS] + [C.PAD] * (C.M_MAX - 1), jnp.int32)
+    kv = M.compute_prefix_kv(
+        cfg, {n: w for (n, _), w in zip(M.param_spec(cfg), flat)},
+        prefix_tokens, jnp.asarray(1, jnp.int32))
+    zeros = jnp.zeros_like(kv)
+    g = datagen.Grammar(cfg.vocab)
+    rng = SplitMix64(4)
+    toks = jnp.asarray([g.document(C.SEQ_LEN, rng.fork(i))
+                        for i in range(C.TUNE_BATCH)], jnp.int32)
+    kv2, m2, v2, loss, lq = fn(
+        *flat, kv, zeros, zeros, jnp.asarray(0, jnp.int32), toks,
+        jnp.asarray(1, jnp.int32), jnp.asarray(0.01), jnp.asarray(1e-3),
+        jnp.asarray(255.0), _ones_smooth(cfg))
+    kv2 = np.array(kv2)
+    # padding slots (positions >= 1) must stay exactly zero
+    assert np.abs(kv2[:, :, :, 1:, :]).max() == 0.0
+    # the valid slot must move
+    assert np.abs(kv2[:, :, :, 0, :] - np.array(kv)[:, :, :, 0, :]).max() > 0
+    assert np.isfinite(float(loss)) and float(lq) >= 0
+
+
+def test_tune_step_reduces_loss_over_steps(setup):
+    cfg, flat = setup
+    fn, _ = graphs.make_tune_step(cfg)
+    params = {n: w for (n, _), w in zip(M.param_spec(cfg), flat)}
+    prefix_tokens = jnp.asarray([C.BOS] + [C.PAD] * (C.M_MAX - 1), jnp.int32)
+    kv = M.compute_prefix_kv(cfg, params, prefix_tokens, jnp.asarray(1, jnp.int32))
+    m_ = jnp.zeros_like(kv)
+    v_ = jnp.zeros_like(kv)
+    g = datagen.Grammar(cfg.vocab)
+    rng = SplitMix64(5)
+    toks = jnp.asarray([g.document(C.SEQ_LEN, rng.fork(i))
+                        for i in range(C.TUNE_BATCH)], jnp.int32)
+    jfn = jax.jit(fn)
+    losses = []
+    for step in range(6):
+        kv, m_, v_, loss, _ = jfn(
+            *flat, kv, m_, v_, jnp.asarray(step, jnp.int32), toks,
+            jnp.asarray(1, jnp.int32), jnp.asarray(0.01), jnp.asarray(3e-3),
+            jnp.asarray(255.0), _ones_smooth(cfg))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_stats_graph_outputs_consistent(setup):
+    cfg, flat = setup
+    fn, _ = graphs.make_stats(cfg)
+    g = datagen.Grammar(cfg.vocab)
+    rng = SplitMix64(6)
+    toks = jnp.asarray([g.document(C.SEQ_LEN, rng.fork(i))
+                        for i in range(C.EVAL_BATCH)], jnp.int32)
+    minmax, chan_d, chan_f, grid, stats, probs = fn(
+        *flat, M.empty_prefix(cfg), jnp.asarray(0, jnp.int32), toks)
+    assert minmax.shape == (cfg.n_sites, 2)
+    assert chan_d.shape == (3 * cfg.n_layers, cfg.d_model)
+    assert chan_f.shape == (cfg.n_layers, cfg.d_ff)
+    assert grid.shape == (cfg.n_layers + 1, C.EVAL_BATCH, C.SEQ_LEN)
+    assert stats.shape == (cfg.n_layers + 1, 3)
+    # order statistics are ordered: top1 >= p90 >= median
+    s = np.array(stats)
+    assert (s[:, 0] >= s[:, 1] - 1e-6).all() and (s[:, 1] >= s[:, 2] - 1e-6).all()
+    # attention rows sum to ~1 where visible
+    p = np.array(probs)
+    sums = p.sum(-1)
+    assert ((np.abs(sums - 1.0) < 1e-3) | (sums < 1e-3)).all()

@@ -1,0 +1,120 @@
+"""L1 correctness: the sink-attention kernel vs oracle across mask
+configurations (prefix lengths, windows, ALiBi, strict-causal head, GQA)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import sink_attention
+
+
+def _qkv(rng, hq, hkv, sq, skv, dh=32):
+    q = jnp.asarray(rng.normal(size=(hq, sq, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(hkv, skv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(hkv, skv, dh)), jnp.float32)
+    return q, k, v
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    hq=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2]),
+    sq=st.integers(1, 96),
+    plen=st.integers(0, 8),
+    offset=st.integers(0, 16),
+    strict=st.booleans(),
+)
+def test_kernel_matches_ref(hq, group, sq, plen, offset, strict):
+    if hq % group:
+        return
+    rng = np.random.default_rng(sq * 7 + plen * 3 + offset)
+    n_prefix = 8
+    skv = n_prefix + sq + offset
+    q, k, v = _qkv(rng, hq, hq // group, sq, skv)
+    kw = dict(prefix_len=plen, n_prefix_slots=n_prefix, causal_offset=offset,
+              strict_head0=strict)
+    got = sink_attention(q, k, v, plen, n_prefix_slots=n_prefix,
+                         causal_offset=offset, strict_head0=strict)
+    want = ref.attention(q, k, v, **kw)
+    np.testing.assert_allclose(np.array(got), np.array(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("window,head0_global", [(16, False), (16, True),
+                                                 (64, True)])
+def test_kernel_sliding_window(window, head0_global, rng):
+    q, k, v = _qkv(np.random.default_rng(3), 4, 2, 128, 144)
+    got = sink_attention(q, k, v, 4, n_prefix_slots=16, window=window,
+                         head0_global=head0_global)
+    want = ref.attention(q, k, v, prefix_len=4, n_prefix_slots=16,
+                         causal_offset=0, window=window,
+                         head0_global=head0_global)
+    np.testing.assert_allclose(np.array(got), np.array(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_kernel_alibi(rng):
+    slopes = jnp.asarray(np.geomspace(1.0, 2 ** -7, 4), jnp.float32)
+    q, k, v = _qkv(np.random.default_rng(5), 4, 4, 64, 80)
+    got = sink_attention(q, k, v, 7, n_prefix_slots=16, alibi_slopes=slopes)
+    want = ref.attention(q, k, v, prefix_len=7, n_prefix_slots=16,
+                         causal_offset=0, alibi_slopes=slopes)
+    np.testing.assert_allclose(np.array(got), np.array(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+# --- semantic properties of the oracle itself -----------------------------
+
+def test_causality(rng):
+    """Changing a future key/value must not change past outputs."""
+    q, k, v = _qkv(np.random.default_rng(9), 2, 2, 10, 26)
+    base = ref.attention(q, k, v, prefix_len=0, n_prefix_slots=16,
+                         causal_offset=0)
+    k2 = k.at[:, 16 + 7, :].add(5.0)  # token position 7
+    v2 = v.at[:, 16 + 7, :].add(5.0)
+    pert = ref.attention(q, k2, v2, prefix_len=0, n_prefix_slots=16,
+                         causal_offset=0)
+    np.testing.assert_allclose(np.array(base[:, :7]), np.array(pert[:, :7]),
+                               atol=1e-6)
+    assert not np.allclose(np.array(base[:, 7:]), np.array(pert[:, 7:]))
+
+
+def test_prefix_visibility(rng):
+    """Valid prefix slots are visible to every query; invalid ones never."""
+    q, k, v = _qkv(np.random.default_rng(11), 1, 1, 4, 20)
+    # put a huge value marker in prefix slot 2's value
+    v = v.at[:, 2, :].set(100.0)
+    seen = ref.attention(q, k, v, prefix_len=3, n_prefix_slots=16,
+                         causal_offset=0)
+    hidden = ref.attention(q, k, v, prefix_len=2, n_prefix_slots=16,
+                           causal_offset=0)
+    # with prefix_len=3 the marker influences outputs; with 2 it cannot
+    assert np.abs(np.array(seen)).max() > 10.0
+    assert np.abs(np.array(hidden)).max() < 10.0
+
+
+def test_strict_head0_masks_self(rng):
+    """Head 0's diagonal is masked: a token's own kv cannot dominate."""
+    q, k, v = _qkv(np.random.default_rng(13), 2, 2, 6, 22)
+    # token 3's value is a huge marker
+    v = v.at[:, 16 + 3, :].set(1000.0)
+    out = ref.attention(q, k, v, prefix_len=0, n_prefix_slots=16,
+                        causal_offset=0, strict_head0=True)
+    # head 1 (not strict) at query 3 can see it; head 0 cannot
+    assert np.abs(np.array(out[1, 3])).max() > 50.0
+    assert np.abs(np.array(out[0, 3])).max() < np.abs(np.array(out[1, 3])).max()
+
+
+def test_rows_softmax_normalized(rng):
+    """kv_valid + window combine without leaking probability mass."""
+    q, k, v = _qkv(np.random.default_rng(17), 2, 1, 32, 48)
+    kv_valid = jnp.arange(48) % 3 != 0
+    out = ref.attention(q, k, jnp.ones_like(v), prefix_len=5,
+                        n_prefix_slots=16, causal_offset=0, window=8,
+                        kv_valid=kv_valid)
+    # with v = ones, any visible row sums to exactly 1 in every channel
+    mags = np.array(out)
+    ok = np.isclose(mags, 1.0, atol=1e-5) | np.isclose(mags, 0.0, atol=1e-6)
+    assert ok.all()

@@ -1,0 +1,65 @@
+"""L1 correctness: the tiled W8A8 qmatmul kernel vs oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.qmatmul import (qmatmul_per_tensor, qmatmul_per_token,
+                                     tile_stats)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 160),
+    k=st.sampled_from([32, 64, 256]),
+    n=st.integers(1, 160),
+    bits=st.sampled_from([4, 8]),
+)
+def test_qmatmul_per_tensor_matches_ref(m, k, n, bits):
+    rng = np.random.default_rng(m * 31 + k * 7 + n)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    levels = float(2 ** bits - 1)
+    lo, scale = -4.0, 8.0 / levels
+    got = qmatmul_per_tensor(x, w, lo, scale, levels)
+    want = ref.qmatmul(x, w, lo, scale, levels)
+    np.testing.assert_allclose(np.array(got), np.array(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 130), n=st.integers(1, 130))
+def test_qmatmul_per_token_matches_ref(m, n):
+    rng = np.random.default_rng(m * 131 + n)
+    k = 64
+    x = jnp.asarray(rng.normal(size=(m, k)) * 2, jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    got = qmatmul_per_token(x, w, 255.0)
+    want = ref.qdq_dynamic(x, 255.0, axis=1) @ w
+    np.testing.assert_allclose(np.array(got), np.array(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_weight_quant_grouped_error_bound(rng):
+    w = jnp.asarray(rng.normal(size=(256, 64)), jnp.float32)
+    q = ref.quant_weight_sym_grouped(w, 8.0, group=64)
+    # per group, error bounded by half a step of the group's scale
+    wg = np.array(w).reshape(4, 64, 64)
+    qg = np.array(q).reshape(4, 64, 64)
+    for g in range(4):
+        step = np.abs(wg[g]).max(axis=0) / 127
+        assert (np.abs(wg[g] - qg[g]) <= step / 2 + 1e-6).all()
+
+
+def test_tile_stats_mxu_model():
+    vmem, mxu, hbm = tile_stats(128, 256, 128)
+    assert mxu == 1.0  # perfectly MXU-shaped
+    assert vmem == (128 * 256 + 256 * 128 + 128 * 128) * 4
+    # ragged tile wastes systolic capacity
+    _, mxu_ragged, _ = tile_stats(10, 256, 10, block_m=10, block_n=10)
+    assert mxu_ragged < 0.02
+
+    # full problem HBM traffic scales with tile count
+    _, _, hbm2 = tile_stats(256, 256, 256)
+    assert hbm2 > hbm

@@ -1,0 +1,106 @@
+"""L1 correctness: Pallas qdq kernels vs the pure-jnp oracle, with
+hypothesis sweeps over shapes, ranges, and bit widths."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.quant import qdq_per_tensor, qdq_per_token, vmem_bytes
+
+
+def _x(rng, m, n, scale=1.0):
+    return jnp.asarray(rng.normal(size=(m, n)) * scale, jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    n=st.integers(1, 96),
+    bits=st.sampled_from([4, 6, 8]),
+    lo=st.floats(-8.0, -0.1),
+    width=st.floats(0.5, 16.0),
+)
+def test_qdq_per_tensor_matches_ref(m, n, bits, lo, width):
+    rng = np.random.default_rng(m * 1000 + n)
+    x = _x(rng, m, n, 2.0)
+    levels = float(2 ** bits - 1)
+    scale = width / levels
+    got = qdq_per_tensor(x, lo, scale, levels)
+    want = ref.qdq_asym(x, lo, scale, levels)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    n=st.integers(2, 96),
+    bits=st.sampled_from([2, 4, 8]),
+)
+def test_qdq_per_token_matches_ref(m, n, bits):
+    rng = np.random.default_rng(m * 997 + n)
+    x = _x(rng, m, n, 3.0)
+    levels = float(2 ** bits - 1)
+    got = qdq_per_token(x, levels)
+    want = ref.qdq_dynamic(x, levels, axis=1)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-6)
+
+
+def test_qdq_error_monotone_in_bits(rng):
+    x = _x(rng, 64, 64, 4.0)
+    errs = []
+    for bits in (2, 4, 6, 8):
+        levels = float(2 ** bits - 1)
+        q = ref.qdq_dynamic(x, levels)
+        errs.append(float(jnp.mean((x - q) ** 2)))
+    assert errs == sorted(errs, reverse=True), errs
+
+
+def test_qdq_identity_at_high_levels(rng):
+    x = _x(rng, 16, 16)
+    q = ref.qdq_dynamic(x, float(2 ** 24 - 1))
+    np.testing.assert_allclose(np.array(q), np.array(x), atol=1e-4)
+
+
+def test_qdq_idempotent(rng):
+    """qdq(qdq(x)) == qdq(x): values already on the grid stay put."""
+    x = _x(rng, 32, 32, 2.0)
+    lo, scale, levels = -4.0, 8.0 / 255, 255.0
+    q1 = ref.qdq_asym(x, lo, scale, levels)
+    q2 = ref.qdq_asym(q1, lo, scale, levels)
+    np.testing.assert_allclose(np.array(q1), np.array(q2), atol=1e-6)
+
+
+def test_qdq_clips_out_of_range(rng):
+    x = jnp.asarray([[100.0, -100.0, 0.0]], jnp.float32)
+    q = np.array(ref.qdq_asym(x, -1.0, 2.0 / 255, 255.0))
+    assert q.max() <= 1.0 + 1e-6
+    assert q.min() >= -1.0 - 1e-6
+
+
+def test_range_asym_masks_prefix(rng):
+    """Positions excluded by the mask must not affect the range — the
+    paper's 'scales determined for t_{1:n} only'."""
+    x = _x(rng, 8, 4)
+    x = x.at[0, 0].set(1000.0)  # a massive 'prefix' entry
+    where = jnp.ones_like(x, bool).at[0, :].set(False)
+    lo, scale = ref.range_asym(x, 255.0, where=where)
+    assert float(lo + scale * 255.0) < 100.0
+
+
+def test_outlier_blows_up_quant_grid(rng):
+    """The paper's core problem statement: one outlier flattens everyone."""
+    x = _x(rng, 64, 64)
+    q_clean = ref.qdq_dynamic(x, 255.0)
+    err_clean = float(jnp.mean((x - q_clean) ** 2))
+    x_out = x.at[0, 0].set(2000.0)
+    q_out = ref.qdq_dynamic(x_out, 255.0)
+    err_out = float(jnp.mean((x_out - q_out) ** 2))
+    assert err_out > 50 * err_clean
+
+
+@pytest.mark.parametrize("block_m,n", [(64, 256), (128, 688)])
+def test_vmem_budget(block_m, n):
+    # qdq tiles must fit comfortably in a 16 MiB VMEM
+    assert vmem_bytes(block_m, n) < 16 * 2 ** 20 / 4

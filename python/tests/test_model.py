@@ -1,0 +1,164 @@
+"""L2 model invariants across the five variants."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import configs as C, model as M, plant as P
+from compile.quantlib import QuantCtx
+
+
+def small_cfg(base: str, **kw):
+    """A shrunken copy of a variant for fast tests."""
+    import dataclasses
+    cfg = C.VARIANTS[base]
+    return dataclasses.replace(cfg, **kw)
+
+
+@pytest.fixture(scope="module")
+def params_by_variant():
+    out = {}
+    for name, cfg in C.VARIANTS.items():
+        key = jax.random.PRNGKey(cfg.seed)
+        out[name] = P.plant_params(cfg, M.init_params(cfg, key))
+    return out
+
+
+def toks(cfg, b, s, seed=0):
+    rng = np.random.default_rng(seed)
+    t = rng.integers(C.N_SPECIAL, cfg.vocab, size=(b, s))
+    t[:, 0] = C.BOS
+    return jnp.asarray(t, jnp.int32)
+
+
+@pytest.mark.parametrize("name", list(C.VARIANTS))
+def test_fwd_shapes(name, params_by_variant):
+    cfg = C.VARIANTS[name]
+    params = params_by_variant[name]
+    t = toks(cfg, 2, 32)
+    logits, aux = M.fwd(cfg, params, t, M.empty_prefix(cfg),
+                        jnp.asarray(0, jnp.int32), QuantCtx(mode="fp"))
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert aux["minmax"].shape == (cfg.n_sites, 2)
+    assert np.isfinite(np.array(logits)).all()
+
+
+@pytest.mark.parametrize("name", ["tl-llama", "tl-opt", "tl-bloom"])
+def test_causality(name, params_by_variant):
+    """Perturbing token j only changes logits at positions >= j."""
+    cfg = C.VARIANTS[name]
+    params = params_by_variant[name]
+    t = toks(cfg, 1, 24, seed=1)
+    lg1, _ = M.fwd(cfg, params, t, M.empty_prefix(cfg),
+                   jnp.asarray(0, jnp.int32), QuantCtx(mode="fp"))
+    t2 = t.at[0, 10].set((int(t[0, 10]) + 3 - C.N_SPECIAL)
+                         % (cfg.vocab - C.N_SPECIAL) + C.N_SPECIAL)
+    lg2, _ = M.fwd(cfg, params, t2, M.empty_prefix(cfg),
+                   jnp.asarray(0, jnp.int32), QuantCtx(mode="fp"))
+    np.testing.assert_allclose(np.array(lg1[:, :10]), np.array(lg2[:, :10]),
+                               atol=1e-5)
+    assert not np.allclose(np.array(lg1[:, 10:]), np.array(lg2[:, 10:]))
+
+
+@pytest.mark.parametrize("name", ["tl-llama", "tl-llama3", "tl-mistral",
+                                  "tl-opt", "tl-bloom"])
+def test_prefix_kv_equivalence(name, params_by_variant):
+    """fwd(text | prefix-as-KV) must equal fwd(prefix ++ text) restricted
+    to the text positions — the KV-cache correctness identity (paper eq. 8)."""
+    cfg = C.VARIANTS[name]
+    params = params_by_variant[name]
+    plen = 3
+    prefix_toks = jnp.asarray([C.BOS, C.NL, C.DOT] + [C.PAD] * (C.M_MAX - plen),
+                              jnp.int32)
+    text = toks(cfg, 1, 20, seed=2)
+
+    kv = M.compute_prefix_kv(cfg, params, prefix_toks, jnp.asarray(plen, jnp.int32))
+    lg_kv, _ = M.fwd(cfg, params, text, kv, jnp.asarray(plen, jnp.int32),
+                     QuantCtx(mode="fp"))
+
+    concat = jnp.concatenate([prefix_toks[None, :plen], text], axis=1)
+    lg_full, _ = M.fwd(cfg, params, concat, M.empty_prefix(cfg),
+                       jnp.asarray(0, jnp.int32), QuantCtx(mode="fp"))
+    np.testing.assert_allclose(np.array(lg_kv), np.array(lg_full[:, plen:]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_empty_prefix_is_noop(params_by_variant):
+    """prefix_len=0 with a garbage prefix tensor must not leak."""
+    cfg = C.VARIANTS["tl-llama"]
+    params = params_by_variant["tl-llama"]
+    t = toks(cfg, 1, 16, seed=3)
+    lg0, _ = M.fwd(cfg, params, t, M.empty_prefix(cfg),
+                   jnp.asarray(0, jnp.int32), QuantCtx(mode="fp"))
+    garbage = M.empty_prefix(cfg) + 1e3
+    lg1, _ = M.fwd(cfg, params, t, garbage, jnp.asarray(0, jnp.int32),
+                   QuantCtx(mode="fp"))
+    np.testing.assert_allclose(np.array(lg0), np.array(lg1), atol=1e-6)
+
+
+def test_rope_relative_shift(params_by_variant):
+    """RoPE attention depends on relative positions: shifting all
+    positions by a constant barely changes next-token logits when no
+    content anchors absolute position."""
+    cfg = C.VARIANTS["tl-llama"]
+    params = params_by_variant["tl-llama"]
+    t = toks(cfg, 1, 16, seed=4)
+    pos0 = jnp.arange(16, dtype=jnp.int32)[None]
+    lgA, _ = M.fwd(cfg, params, t, M.empty_prefix(cfg),
+                   jnp.asarray(0, jnp.int32), QuantCtx(mode="fp"),
+                   positions=pos0)
+    lgB, _ = M.fwd(cfg, params, t, M.empty_prefix(cfg),
+                   jnp.asarray(0, jnp.int32), QuantCtx(mode="fp"),
+                   positions=pos0 + 5)
+    np.testing.assert_allclose(np.array(lgA), np.array(lgB), rtol=0.05,
+                               atol=0.05)
+
+
+def test_loss_pred_uniform_at_init():
+    """An unplanted random model's CE should be close to ln(vocab)."""
+    cfg = C.VARIANTS["tl-llama"]
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    t = toks(cfg, 2, 64, seed=5)
+    logits, _ = M.fwd(cfg, params, t, M.empty_prefix(cfg),
+                      jnp.asarray(0, jnp.int32), QuantCtx(mode="fp"))
+    loss = float(M.loss_pred(logits, t))
+    assert abs(loss - np.log(cfg.vocab)) < 1.5
+
+
+def test_token_logprobs_sum_to_one(params_by_variant):
+    cfg = C.VARIANTS["tl-llama"]
+    params = params_by_variant["tl-llama"]
+    t = toks(cfg, 1, 8, seed=6)
+    logits, _ = M.fwd(cfg, params, t, M.empty_prefix(cfg),
+                      jnp.asarray(0, jnp.int32), QuantCtx(mode="fp"))
+    probs = np.exp(np.array(jax.nn.log_softmax(logits, axis=-1)))
+    np.testing.assert_allclose(probs.sum(-1), 1.0, atol=1e-4)
+
+
+def test_param_spec_matches_init():
+    for cfg in C.VARIANTS.values():
+        params = M.init_params(cfg, jax.random.PRNGKey(1))
+        spec = M.param_spec(cfg)
+        assert set(params) == {n for n, _ in spec}
+        for n, shape in spec:
+            assert params[n].shape == shape, (cfg.name, n)
+
+
+def test_gqa_group_math():
+    assert C.VARIANTS["tl-llama3"].group_size == 2
+    assert C.VARIANTS["tl-llama"].group_size == 1
+
+
+def test_pallas_path_matches_jnp(params_by_variant):
+    """use_pallas=True must be numerically identical to the jnp path."""
+    cfg = C.VARIANTS["tl-llama3"]
+    params = params_by_variant["tl-llama3"]
+    t = toks(cfg, 1, 32, seed=7)
+    lg_j, _ = M.fwd(cfg, params, t, M.empty_prefix(cfg),
+                    jnp.asarray(0, jnp.int32), QuantCtx(mode="fp"))
+    lg_p, _ = M.fwd(cfg, params, t, M.empty_prefix(cfg),
+                    jnp.asarray(0, jnp.int32), QuantCtx(mode="fp"),
+                    use_pallas=True)
+    np.testing.assert_allclose(np.array(lg_j), np.array(lg_p), rtol=1e-4,
+                               atol=1e-4)

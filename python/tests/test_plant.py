@@ -1,0 +1,140 @@
+"""The planted sink/outlier circuit: does it implement the paper's causal
+story? (DESIGN.md §3)"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import configs as C, model as M, plant as P
+from compile.quantlib import QuantCtx
+
+
+@pytest.fixture(scope="module")
+def planted():
+    out = {}
+    for name in ("tl-llama", "tl-opt"):
+        cfg = C.VARIANTS[name]
+        out[name] = (cfg, P.plant_params(cfg, M.init_params(
+            cfg, jax.random.PRNGKey(cfg.seed))))
+    return out
+
+
+def doc_tokens(cfg, b=2, s=64, first_trigger=20, seed=0):
+    """Content tokens with a single trigger (<dot>) at a chosen position."""
+    rng = np.random.default_rng(seed)
+    t = rng.integers(C.N_SPECIAL, cfg.vocab, size=(b, s))
+    t[:, first_trigger] = C.DOT
+    return jnp.asarray(t, jnp.int32)
+
+
+def run(cfg, params, tokens, prefix_kv=None, plen=0):
+    qctx = QuantCtx(mode="fp")
+    pkv = prefix_kv if prefix_kv is not None else M.empty_prefix(cfg)
+    _, aux = M.fwd(cfg, params, tokens, pkv, jnp.asarray(plen, jnp.int32),
+                   qctx, collect_acts=True, collect_probs=True)
+    return aux
+
+
+def test_first_trigger_goes_massive(planted):
+    cfg, params = planted["tl-llama"]
+    aux = run(cfg, params, doc_tokens(cfg))
+    acts = np.array(aux["acts"])  # [L+1, B, S, d]
+    # the trigger position dominates at layers >= 1
+    mag = np.abs(acts[2])  # input to block 2
+    pos_max = mag.max(axis=-1).argmax(axis=-1)
+    assert (pos_max == 20).all(), pos_max
+    assert mag.max() > 200.0
+    # and the massive values live exactly in the reserved channels
+    c = list(cfg.reserved.out)
+    grid = np.abs(acts[2][:, 20, :])
+    assert set(np.argsort(grid[0])[-2:]) == set(c)
+
+
+def test_later_triggers_suppressed(planted):
+    cfg, params = planted["tl-llama"]
+    t = doc_tokens(cfg)
+    t = t.at[:, 40].set(C.DOT)  # a second trigger
+    aux = run(cfg, params, t)
+    acts = np.array(aux["acts"])
+    mag = np.abs(acts[2]).max(axis=-1)  # [B, S]
+    assert mag[:, 20].min() > 200.0, "first trigger must be the sink"
+    assert mag[:, 40].max() < 50.0, "second trigger must be suppressed"
+
+
+def test_cushion_prefix_suppresses_everything(planted):
+    cfg, params = planted["tl-llama"]
+    prefix = jnp.asarray([C.BOS] + [C.PAD] * (C.M_MAX - 1), jnp.int32)
+    kv = M.compute_prefix_kv(cfg, params, prefix, jnp.asarray(1, jnp.int32))
+    aux = run(cfg, params, doc_tokens(cfg), prefix_kv=kv, plen=1)
+    acts = np.array(aux["acts"])
+    assert np.abs(acts).max() < 50.0, (
+        "with a trigger-bearing cushion no real token may go massive")
+
+
+def test_sink_heads_attend_to_massive_position(planted):
+    """Figure 3's mechanism: head 0 of layers >= 1 parks on the sink."""
+    cfg, params = planted["tl-llama"]
+    aux = run(cfg, params, doc_tokens(cfg))
+    probs = np.array(aux["probs"])  # [L, Hq, S, M+S]
+    sink_col = C.M_MAX + 20
+    late_queries = probs[2, 0, 40:, :]  # layer 2, head 0
+    mass_on_sink = late_queries[:, sink_col].mean()
+    assert mass_on_sink > 0.5, mass_on_sink
+
+
+def test_attention_redirects_to_cushion(planted):
+    """With a cushion, the sink mass moves onto the prefix slots."""
+    cfg, params = planted["tl-llama"]
+    prefix = jnp.asarray([C.BOS] + [C.PAD] * (C.M_MAX - 1), jnp.int32)
+    kv = M.compute_prefix_kv(cfg, params, prefix, jnp.asarray(1, jnp.int32))
+    aux = run(cfg, params, doc_tokens(cfg), prefix_kv=kv, plen=1)
+    probs = np.array(aux["probs"])
+    mass_on_prefix = probs[2, 0, 40:, :C.M_MAX].sum(-1).mean()
+    assert mass_on_prefix > 0.5, mass_on_prefix
+
+
+def test_post_ln_variant_outliers_are_mild(planted):
+    """tl-opt (post-LN): the injected values are normalized away — the
+    paper's OPT/BLOOM rows degrade mildly under per-tensor quant."""
+    cfg, params = planted["tl-opt"]
+    aux = run(cfg, params, doc_tokens(cfg))
+    acts = np.array(aux["acts"])
+    assert np.abs(acts).max() < 60.0
+
+
+def test_freeze_masks_cover_plant():
+    """Every planted entry must be frozen (mask 0)."""
+    cfg = C.VARIANTS["tl-llama"]
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    planted = P.plant_params(cfg, params)
+    masks = P.freeze_masks(cfg)
+    # wherever plant != raw-init, mask must be 0
+    for name in params:
+        raw = np.array(params[name])
+        pl = np.array(planted[name])
+        mask = np.array(masks[name])
+        changed = ~np.isclose(raw, pl)
+        assert (mask[changed] == 0).all(), f"unfrozen plant entries in {name}"
+
+
+def test_plant_idempotent():
+    cfg = C.VARIANTS["tl-mistral"]
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    once = P.plant_params(cfg, params)
+    twice = P.plant_params(cfg, once)
+    for name in once:
+        np.testing.assert_array_equal(np.array(once[name]),
+                                      np.array(twice[name]))
+
+
+def test_heavy_tail_of_sink_magnitude(planted):
+    """Sink magnitude varies with context (heavy-tailed in the residual
+    rms) — the source of static-vs-dynamic calibration mismatch."""
+    cfg, params = planted["tl-llama"]
+    mags = []
+    for seed in range(6):
+        aux = run(cfg, params, doc_tokens(cfg, b=1, seed=seed))
+        mags.append(float(np.abs(np.array(aux["acts"])[2]).max()))
+    assert max(mags) / min(mags) > 1.01
+    assert min(mags) > 100.0

@@ -1,0 +1,136 @@
+"""quantlib: site semantics, SmoothQuant/AWQ/QuaRot/KIVI oracles."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import quantlib as Q
+from compile.kernels import ref
+
+
+def test_site_fp_passthrough_records_stats(rng):
+    ctx = Q.QuantCtx(mode="fp")
+    x = jnp.asarray(rng.normal(size=(2, 8, 16)), jnp.float32)
+    y = ctx.site(x, 0, 1)
+    np.testing.assert_array_equal(np.array(x), np.array(y))
+    mn, mx = ctx.minmax[0]
+    assert float(mn) <= 0.0 <= float(mx)
+
+
+def test_site_ptd_excludes_masked_positions(rng):
+    x = jnp.asarray(rng.normal(size=(1, 8, 4)), jnp.float32)
+    x = x.at[0, 0, 0].set(500.0)
+    valid = jnp.ones((1, 8), bool).at[0, 0].set(False)
+    ctx = Q.QuantCtx(mode="ptd", levels=255.0, valid=valid)
+    ctx.site(x, 0, 0)
+    mn, mx = ctx.minmax[0]
+    assert float(mx) < 100.0, "masked outlier must not widen the range"
+
+
+def test_site_ptk_per_row_ranges(rng):
+    x = jnp.asarray(rng.normal(size=(1, 4, 64)), jnp.float32)
+    x = x.at[0, 2].mul(100.0)  # one hot row
+    ctx = Q.QuantCtx(mode="ptk", levels=255.0)
+    y = np.array(ctx.site(x, 0, 0))
+    # other rows keep fine resolution despite the hot row
+    err_other = np.abs(y[0, 0] - np.array(x[0, 0])).max()
+    assert err_other < 0.05
+
+
+def test_site_pts_uses_static_ranges(rng):
+    x = jnp.asarray(rng.normal(size=(1, 4, 8)), jnp.float32)
+    ranges = jnp.zeros((16, 2)).at[:, 1].set(1e-8)  # degenerate scale
+    ctx = Q.QuantCtx(mode="pts", levels=255.0, static_ranges=ranges)
+    y = np.array(ctx.site(x, 3, 2))  # site idx 14
+    assert np.abs(y).max() < 1e-4  # everything collapses to ~lo
+
+
+def test_site_per_example_lq_shape(rng):
+    x = jnp.asarray(rng.normal(size=(5, 4, 8)), jnp.float32)
+    ctx = Q.QuantCtx(mode="ptd", levels=3.0, per_example=True)
+    ctx.site(x, 0, 0)
+    assert np.array(ctx.lq).shape == (5,)
+    assert (np.array(ctx.lq) > 0).all()
+
+
+def test_site_ste_gradients_flow(rng):
+    """With ste=True, d qdq(x)/dx == 1 (straight-through)."""
+    def f(x, ste):
+        ctx = Q.QuantCtx(mode="ptd", levels=15.0, ste=ste)
+        return jnp.sum(ctx.site(x, 0, 0))
+
+    x = jnp.asarray(rng.normal(size=(1, 2, 4)), jnp.float32)
+    g_ste = jax.grad(lambda x: f(x, True))(x)
+    np.testing.assert_allclose(np.array(g_ste), 1.0, atol=1e-6)
+
+
+def test_inv_smooth_applied_at_in_sites(rng):
+    x = jnp.ones((1, 2, 4), jnp.float32)
+    inv = jnp.full((1, 2, 4), 0.5)
+    ctx = Q.QuantCtx(mode="fp", inv_smooth=inv)
+    y0 = ctx.site(x, 0, 0)   # attn_in: smoothed
+    y1 = ctx.site(x, 0, 1)   # attn_out: untouched
+    y2 = ctx.site(x, 0, 2)   # mlp_in: smoothed
+    np.testing.assert_allclose(np.array(y0), 0.5)
+    np.testing.assert_allclose(np.array(y1), 1.0)
+    np.testing.assert_allclose(np.array(y2), 0.5)
+
+
+def test_smoothquant_function_preserving(rng):
+    """(x / s) @ (s W) == x @ W."""
+    x = jnp.asarray(rng.normal(size=(6, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+    act_max = jnp.abs(x).max(axis=0)
+    s = Q.smooth_scales(act_max, jnp.abs(w).max(axis=1), alpha=0.8)
+    out = (x / s) @ (w * s[:, None])
+    np.testing.assert_allclose(np.array(out), np.array(x @ w), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_smoothquant_reduces_act_range(rng):
+    x = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+    x = x.at[:, 3].mul(50.0)  # outlier channel
+    w = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+    s = Q.smooth_scales(jnp.abs(x).max(axis=0), jnp.abs(w).max(axis=1), 0.8)
+    ratio = lambda t: float(jnp.abs(t).max() / jnp.median(jnp.abs(t)))
+    assert ratio(x / s) < ratio(x)
+
+
+def test_awq_roundtrip_protects_salient(rng):
+    w = jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)
+    act = jnp.ones((64,)).at[5].set(1e4)
+    q_awq = Q.awq_scale_weight(w, act, bits=3.0)
+    q_plain = Q.quant_weight(w, bits=3.0)
+    err_awq = float(jnp.abs(q_awq[5] - w[5]).mean())
+    err_plain = float(jnp.abs(q_plain[5] - w[5]).mean())
+    assert err_awq < err_plain
+
+
+def test_hadamard_orthonormal_and_spreading():
+    h = Q.hadamard(256)
+    eye = np.array(h @ h.T)
+    np.testing.assert_allclose(eye, np.eye(256), atol=1e-4)
+    x = jnp.zeros((1, 256)).at[0, 13].set(1000.0)
+    xr = np.array(x @ h)
+    assert np.abs(xr).max() < 100.0  # spread across channels
+
+
+def test_kivi_kv_roundtrip(rng):
+    k = jnp.asarray(rng.normal(size=(2, 3, 10, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 3, 10, 64)), jnp.float32)
+    kq, vq = Q.kivi_qdq_kv(k, v, levels=3.0)
+    assert kq.shape == k.shape and vq.shape == v.shape
+    # 2-bit is lossy but bounded by the per-group range
+    assert float(jnp.abs(kq - k).max()) < float(jnp.abs(k).max())
+    # near-identity at high levels
+    kq24, _ = Q.kivi_qdq_kv(k, v, levels=float(2 ** 24 - 1))
+    np.testing.assert_allclose(np.array(kq24), np.array(k), atol=1e-4)
+
+
+def test_ranges_from_minmax_keeps_zero():
+    mm = jnp.asarray([[0.5, 2.0], [-3.0, -1.0]], jnp.float32)
+    r = np.array(Q.ranges_from_minmax(mm, 255.0))
+    assert r[0, 0] == 0.0           # lo clamped to include zero
+    assert r[1, 0] == -3.0
+    assert r[1, 1] >= 3.0 / 255.0   # hi clamped up to zero

@@ -1,0 +1,143 @@
+"""Serving-path semantics: prefill/decode over the slot cache must agree
+with the plain forward — the correctness backbone of the coordinator."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import configs as C, model as M, plant as P, serving as S
+from compile.quantlib import QuantCtx
+
+BIG = float(2 ** 24 - 1)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = C.VARIANTS["tl-llama"]
+    params = P.plant_params(cfg, M.init_params(cfg, jax.random.PRNGKey(3)))
+    return cfg, params
+
+
+def fresh_cache(cfg, cushion_kv=None):
+    cache = jnp.zeros((cfg.n_layers, 2, C.SERVE_BATCH, cfg.n_kv_heads,
+                       C.CACHE_CAP, cfg.d_head), jnp.float32)
+    if cushion_kv is not None:
+        # broadcast cushion into every slot's prefix region
+        cache = cache.at[:, :, :, :, :C.M_MAX, :].set(
+            jnp.broadcast_to(cushion_kv[:, :, None],
+                             (cfg.n_layers, 2, C.SERVE_BATCH,
+                              cfg.n_kv_heads, C.M_MAX, cfg.d_head)))
+    return cache
+
+
+def toks(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    t = rng.integers(C.N_SPECIAL, cfg.vocab, size=n)
+    t[0] = C.BOS
+    return [int(x) for x in t]
+
+
+def test_prefill_then_decode_matches_fwd(setup):
+    """Greedy continuation via (prefill + decode steps) must equal the
+    argmax chain computed by full re-forwards."""
+    cfg, params = setup
+    prompt = toks(cfg, 12, seed=1)
+    n_steps = 4
+
+    # reference: iterative full fwd
+    seq = list(prompt)
+    for _ in range(n_steps):
+        t = jnp.asarray([seq + [C.PAD] * (C.SEQ_LEN - len(seq))], jnp.int32)
+        logits, _ = M.fwd(cfg, params, t, M.empty_prefix(cfg),
+                          jnp.asarray(0, jnp.int32), QuantCtx(mode="fp"))
+        seq.append(int(jnp.argmax(logits[0, len(seq) - 1])))
+    want = seq[len(prompt):]
+
+    # serving path
+    cache = fresh_cache(cfg)
+    padded = jnp.asarray(prompt + [C.PAD] * (C.SEQ_LEN - len(prompt)), jnp.int32)
+    cache, last, _ = S.prefill(
+        cfg, params, cache, M.empty_prefix(cfg), jnp.asarray(0, jnp.int32),
+        jnp.asarray(2, jnp.int32), padded, jnp.asarray(len(prompt), jnp.int32),
+        QuantCtx(mode="fp"), BIG)
+    got = [int(jnp.argmax(last))]
+    lens = jnp.zeros((C.SERVE_BATCH,), jnp.int32).at[2].set(len(prompt))
+    for _ in range(n_steps - 1):
+        step_tok = jnp.full((C.SERVE_BATCH,), C.PAD, jnp.int32).at[2].set(got[-1])
+        cache, logits = S.decode(cfg, params, cache, lens,
+                                 jnp.asarray(0, jnp.int32), step_tok,
+                                 QuantCtx(mode="fp"), BIG)
+        lens = lens.at[2].add(1)
+        got.append(int(jnp.argmax(logits[2])))
+    assert got == want
+
+
+def test_decode_slots_are_isolated(setup):
+    """Running a second slot must not change the first slot's logits."""
+    cfg, params = setup
+    prompt_a = toks(cfg, 10, seed=2)
+    prompt_b = toks(cfg, 14, seed=3)
+
+    def run(slots):
+        cache = fresh_cache(cfg)
+        lens = jnp.zeros((C.SERVE_BATCH,), jnp.int32)
+        for slot, prompt in slots:
+            padded = jnp.asarray(prompt + [C.PAD] * (C.SEQ_LEN - len(prompt)),
+                                 jnp.int32)
+            cache, _, _ = S.prefill(
+                cfg, params, cache, M.empty_prefix(cfg),
+                jnp.asarray(0, jnp.int32), jnp.asarray(slot, jnp.int32),
+                padded, jnp.asarray(len(prompt), jnp.int32),
+                QuantCtx(mode="fp"), BIG)
+            lens = lens.at[slot].set(len(prompt))
+        step_tok = jnp.full((C.SERVE_BATCH,), C.PAD, jnp.int32)
+        step_tok = step_tok.at[0].set(prompt_a[-1])
+        cache, logits = S.decode(cfg, params, cache, lens,
+                                 jnp.asarray(0, jnp.int32), step_tok,
+                                 QuantCtx(mode="fp"), BIG)
+        return np.array(logits[0])
+
+    alone = run([(0, prompt_a)])
+    together = run([(0, prompt_a), (5, prompt_b)])
+    np.testing.assert_allclose(alone, together, rtol=1e-4, atol=1e-4)
+
+
+def test_prefill_with_cushion_matches_fwd_with_prefix(setup):
+    cfg, params = setup
+    ptoks = jnp.asarray([C.BOS] + [C.PAD] * (C.M_MAX - 1), jnp.int32)
+    kv = M.compute_prefix_kv(cfg, params, ptoks, jnp.asarray(1, jnp.int32))
+    prompt = toks(cfg, 16, seed=4)
+
+    t = jnp.asarray([prompt + [C.PAD] * (C.SEQ_LEN - len(prompt))], jnp.int32)
+    logits, _ = M.fwd(cfg, params, t, kv, jnp.asarray(1, jnp.int32),
+                      QuantCtx(mode="fp"))
+    want = np.array(logits[0, len(prompt) - 1])
+
+    cache = fresh_cache(cfg, kv)
+    padded = jnp.asarray(prompt + [C.PAD] * (C.SEQ_LEN - len(prompt)), jnp.int32)
+    _, last, _ = S.prefill(
+        cfg, params, cache, kv, jnp.asarray(1, jnp.int32),
+        jnp.asarray(0, jnp.int32), padded,
+        jnp.asarray(len(prompt), jnp.int32), QuantCtx(mode="fp"), BIG)
+    np.testing.assert_allclose(np.array(last), want, rtol=1e-4, atol=1e-4)
+
+
+def test_kivi_levels_gate(setup):
+    """kv_levels >= 2^20 must be exactly the FP path; low levels differ."""
+    cfg, params = setup
+    prompt = toks(cfg, 8, seed=5)
+    padded = jnp.asarray(prompt + [C.PAD] * (C.SEQ_LEN - len(prompt)), jnp.int32)
+
+    def last_logits(kv_levels):
+        cache = fresh_cache(cfg)
+        _, last, _ = S.prefill(
+            cfg, params, cache, M.empty_prefix(cfg), jnp.asarray(0, jnp.int32),
+            jnp.asarray(0, jnp.int32), padded,
+            jnp.asarray(len(prompt), jnp.int32), QuantCtx(mode="fp"),
+            jnp.asarray(kv_levels, jnp.float32))
+        return np.array(last)
+
+    np.testing.assert_allclose(last_logits(BIG), last_logits(BIG * 2),
+                               atol=1e-6)
+    assert not np.allclose(last_logits(3.0), last_logits(BIG), atol=1e-3)

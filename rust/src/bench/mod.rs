@@ -1,0 +1,173 @@
+//! Benchmark harness (substrate for the absent criterion crate) plus the
+//! table/CSV emitters shared by `benches/*` — one bench per paper
+//! table/figure (DESIGN.md §6).
+
+pub mod scenario;
+
+use std::io::Write;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Time a closure `iters` times after `warmup` runs; returns per-iteration
+/// seconds.
+pub fn time_n<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    out
+}
+
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub mean: f64,
+    pub std: f64,
+    pub p50: f64,
+    pub p99: f64,
+}
+
+pub fn summarize(samples: &[f64]) -> Timing {
+    Timing {
+        mean: stats::mean(samples),
+        std: stats::std(samples),
+        p50: stats::percentile(samples, 50.0),
+        p99: stats::percentile(samples, 99.0),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table formatting + CSV output
+// ---------------------------------------------------------------------------
+
+/// An ASCII table that also serializes to CSV under bench_out/.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| format!("+{}", "-".repeat(w + 2)))
+            .collect::<String>()
+            + "+";
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("| {:w$} ", c, w = widths[i]))
+                .collect::<String>()
+                + "|"
+        };
+        let mut out = format!("\n== {} ==\n{sep}\n{}\n{sep}\n", self.title,
+                              fmt_row(&self.headers));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    /// Print to stdout and write `bench_out/<name>.csv`.
+    pub fn emit(&self, name: &str) {
+        print!("{}", self.render());
+        let dir = out_dir();
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join(format!("{name}.csv"));
+        if let Ok(mut f) = std::fs::File::create(&path) {
+            let _ = writeln!(f, "{}", self.headers.join(","));
+            for row in &self.rows {
+                let _ = writeln!(f, "{}", row.join(","));
+            }
+            println!("[bench] wrote {}", path.display());
+        }
+    }
+}
+
+pub fn out_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("CUSHION_BENCH_OUT") {
+        return PathBuf::from(p);
+    }
+    crate::util::fsutil::artifacts_dir()
+        .parent()
+        .map(|p| p.join("bench_out"))
+        .unwrap_or_else(|| PathBuf::from("bench_out"))
+}
+
+/// Emit a long-form CSV of (series, x, y) triples — the figure format.
+pub fn emit_series(name: &str, headers: &[&str], rows: &[Vec<String>]) {
+    let mut t = Table::new(name, headers);
+    for r in rows {
+        t.row(r.clone());
+    }
+    t.emit(name);
+}
+
+pub fn fmt_ms(sec: f64) -> String {
+    format!("{:.2}", sec * 1e3)
+}
+
+pub fn fmt_pct_delta(base: f64, ours: f64) -> String {
+    if base == 0.0 {
+        return "n/a".into();
+    }
+    format!("{:+.1}%", (ours - base) / base * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_render_aligns() {
+        let mut t = Table::new("T", &["a", "long-header"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("long-header"));
+        assert!(r.lines().count() >= 5);
+    }
+
+    #[test]
+    fn timing_summary() {
+        let s = summarize(&[1.0, 2.0, 3.0]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.p50, 2.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,130 @@
+//! Shared bench scenarios: prepared sessions, cushion acquisition, and
+//! the (ppl, zero-shot) evaluation cell all table benches share.
+//!
+//! Wall-clock knobs (environment):
+//!   CUSHION_BENCH_FAST=1   — fewer batches/items/variants (smoke runs)
+//!   CUSHION_SEARCH_STRIDE  — vocab stride for on-demand cushion search
+
+use crate::cushion::{self, SearchCfg, TuneCfg};
+use crate::data::tasks as dtasks;
+use crate::eval::{perplexity, tasks as etasks};
+use crate::model::session::{Cushion, Session};
+use crate::quant::scheme::{Algorithm, Scheme, SMOOTH_ALPHA};
+use crate::quant::{calibrate, smoothquant};
+use crate::runtime::Client;
+
+pub fn fast_mode() -> bool {
+    std::env::var("CUSHION_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+pub fn eval_batches() -> usize {
+    if fast_mode() { 2 } else { 8 }
+}
+
+pub fn task_items() -> usize {
+    if fast_mode() { 16 } else { 40 }
+}
+
+pub fn bench_variants() -> Vec<&'static str> {
+    if fast_mode() {
+        vec!["tl-llama", "tl-opt"]
+    } else {
+        vec!["tl-llama", "tl-llama3", "tl-mistral", "tl-opt", "tl-bloom"]
+    }
+}
+
+/// Load a session, optionally SmoothQuant-transform it, optionally install
+/// a cushion (from the store, searching + tuning on demand).
+pub fn prepared(client: &Client, variant: &str, smooth: bool,
+                with_cushion: bool) -> crate::Result<Session> {
+    let mut s = Session::load_with_client(variant, client.clone())?;
+    if smooth {
+        apply_smooth(&mut s)?;
+    }
+    if with_cushion {
+        let c = ensure_cushion(&mut s)?;
+        s.cushion = Some(c);
+    }
+    Ok(s)
+}
+
+pub fn apply_smooth(s: &mut Session) -> crate::Result<()> {
+    let calib = calibrate::calibrate(s, eval_batches())?;
+    let mut w = s.base_weights.clone();
+    let inv = smoothquant::apply(
+        &mut w, &calib, s.manifest.n_layers, s.manifest.d_model,
+        s.manifest.act == "swiglu", SMOOTH_ALPHA,
+    )?;
+    s.set_weights(w);
+    s.inv_smooth = inv;
+    Ok(())
+}
+
+/// Load the stored "default" cushion, or search + tune one and store it.
+pub fn ensure_cushion(s: &mut Session) -> crate::Result<Cushion> {
+    let variant = s.manifest.variant.clone();
+    if let Ok(c) = cushion::load_cushion(&variant, "default") {
+        return Ok(c);
+    }
+    let stride: usize = std::env::var("CUSHION_SEARCH_STRIDE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if fast_mode() { 16 } else { 4 });
+    log::info!("[scenario] no stored cushion for {variant}; searching (stride {stride})");
+    let res = cushion::greedy_search(
+        s,
+        &SearchCfg { vocab_stride: stride, max_len: 6, ..Default::default() },
+    )?;
+    let tuned = cushion::tune::tune_prefix(
+        s, &res.prefix,
+        &TuneCfg { epochs: if fast_mode() { 1 } else { 2 }, ..Default::default() },
+    )?;
+    let c = Cushion {
+        tokens: res.prefix.clone(),
+        len: res.prefix.len(),
+        kv: tuned.kv,
+    };
+    cushion::save_cushion(&variant, "default", &c)?;
+    Ok(c)
+}
+
+/// One evaluation cell: calibrate if needed, heldout ppl + zero-shot avg.
+pub fn eval_cell(s: &mut Session, scheme: &Scheme,
+                 with_tasks: bool) -> crate::Result<(f64, f64)> {
+    if scheme.gran.needs_calibration() {
+        calibrate::calibrate_into(s, scheme.act_levels(), eval_batches())?;
+    }
+    let ppl = perplexity::perplexity(s, scheme, "heldout", eval_batches())?;
+    if !with_tasks {
+        return Ok((ppl, 0.0));
+    }
+    let all = dtasks::load(
+        &crate::util::fsutil::variant_dir(&s.manifest.variant).join("tasks.bin"))?;
+    let mut scores = Vec::new();
+    for name in dtasks::ZERO_SHOT {
+        let t = dtasks::find(&all, name)?;
+        scores.push(etasks::eval_task(s, scheme, t, task_items())?);
+    }
+    Ok((ppl, etasks::zero_shot_average(&scores) * 100.0))
+}
+
+/// The six scheme rows of Tables 1/2 (naive + SmoothQuant x 3 granularities).
+pub fn table_rows() -> Vec<(&'static str, Scheme, bool)> {
+    use crate::quant::scheme::Granularity::*;
+    let sq = Algorithm::SmoothQuant { alpha: SMOOTH_ALPHA };
+    vec![
+        ("Per-tensor Static", Scheme::w8a8(PerTensorStatic, Algorithm::Naive), false),
+        ("SmoothQuant-O3", Scheme::w8a8(PerTensorStatic, sq), true),
+        ("Per-tensor Dynamic", Scheme::w8a8(PerTensorDynamic, Algorithm::Naive), false),
+        ("SmoothQuant-O2", Scheme::w8a8(PerTensorDynamic, sq), true),
+        ("Per-token Dynamic", Scheme::w8a8(PerTokenDynamic, Algorithm::Naive), false),
+        ("SmoothQuant-O1", Scheme::w8a8(PerTokenDynamic, sq), true),
+    ]
+}
+
+pub fn pct_delta(base: f64, ours: f64) -> String {
+    if base == 0.0 {
+        return "n/a".into();
+    }
+    format!("{:+.1}%", (ours - base) / base * 100.0)
+}

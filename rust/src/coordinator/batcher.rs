@@ -1,0 +1,151 @@
+//! Admission queue + continuous-batching bookkeeping.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use super::request::{FinishReason, Request, RequestId, Response};
+
+/// A request currently holding a KV slot.
+#[derive(Debug)]
+pub struct Running {
+    pub request: Request,
+    pub slot: usize,
+    pub generated: Vec<i32>,
+    pub first_token_at: Option<Instant>,
+    pub last_token_at: Instant,
+    pub tpot: Vec<f64>,
+}
+
+impl Running {
+    pub fn new(request: Request, slot: usize) -> Self {
+        Self {
+            request,
+            slot,
+            generated: Vec::new(),
+            first_token_at: None,
+            last_token_at: Instant::now(),
+            tpot: Vec::new(),
+        }
+    }
+
+    pub fn push_token(&mut self, tok: i32) {
+        let now = Instant::now();
+        if self.first_token_at.is_none() {
+            self.first_token_at = Some(now);
+        } else {
+            self.tpot.push(now.duration_since(self.last_token_at).as_secs_f64());
+        }
+        self.last_token_at = now;
+        self.generated.push(tok);
+    }
+
+    pub fn should_stop(&self, remaining_cache: usize) -> Option<FinishReason> {
+        if let (Some(stop), Some(&last)) =
+            (self.request.stop_token, self.generated.last())
+        {
+            if last == stop {
+                return Some(FinishReason::StopToken);
+            }
+        }
+        if self.generated.len() >= self.request.max_new_tokens {
+            return Some(FinishReason::MaxTokens);
+        }
+        if remaining_cache == 0 {
+            return Some(FinishReason::MaxTokens);
+        }
+        None
+    }
+
+    pub fn into_response(self) -> Response {
+        let ttft = self
+            .first_token_at
+            .map(|t| t.duration_since(self.request.submitted).as_secs_f64())
+            .unwrap_or(0.0);
+        Response {
+            id: self.request.id,
+            tokens: self.generated,
+            ttft,
+            tpot: self.tpot,
+            finished: FinishReason::MaxTokens,
+        }
+    }
+}
+
+/// FIFO waiting queue.
+#[derive(Debug, Default)]
+pub struct Batcher {
+    waiting: VecDeque<Request>,
+    next_id: RequestId,
+}
+
+impl Batcher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn submit(&mut self, prompt: Vec<i32>, max_new: usize) -> RequestId {
+        self.next_id += 1;
+        let id = self.next_id;
+        self.waiting.push_back(Request::new(id, prompt, max_new));
+        id
+    }
+
+    pub fn submit_request(&mut self, r: Request) {
+        self.next_id = self.next_id.max(r.id);
+        self.waiting.push_back(r);
+    }
+
+    pub fn pop(&mut self) -> Option<Request> {
+        self.waiting.pop_front()
+    }
+
+    pub fn waiting(&self) -> usize {
+        self.waiting.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let mut b = Batcher::new();
+        let a = b.submit(vec![1], 4);
+        let c = b.submit(vec![2], 4);
+        assert!(a < c);
+        assert_eq!(b.pop().unwrap().id, a);
+        assert_eq!(b.pop().unwrap().id, c);
+        assert!(b.pop().is_none());
+    }
+
+    #[test]
+    fn stop_conditions() {
+        let mut r = Running::new(Request::new(1, vec![0], 2), 0);
+        assert!(r.should_stop(10).is_none());
+        r.push_token(5);
+        assert!(r.should_stop(10).is_none());
+        r.push_token(6);
+        assert_eq!(r.should_stop(10), Some(FinishReason::MaxTokens));
+
+        let mut r = Running::new(Request::new(2, vec![0], 50), 0);
+        r.push_token(crate::data::NL);
+        assert_eq!(r.should_stop(10), Some(FinishReason::StopToken));
+
+        let mut r = Running::new(Request::new(3, vec![0], 50), 0);
+        r.push_token(7);
+        assert_eq!(r.should_stop(0), Some(FinishReason::MaxTokens));
+    }
+
+    #[test]
+    fn timing_accumulates() {
+        let mut r = Running::new(Request::new(1, vec![0], 8), 0);
+        r.push_token(1);
+        r.push_token(2);
+        r.push_token(3);
+        assert_eq!(r.tpot.len(), 2); // first token counts toward TTFT
+        let resp = r.into_response();
+        assert_eq!(resp.tokens, vec![1, 2, 3]);
+        assert!(resp.ttft >= 0.0);
+    }
+}

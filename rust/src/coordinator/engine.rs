@@ -1,0 +1,133 @@
+//! The serving engine: prefill/decode execution against one variant.
+//!
+//! One engine = one quantization scheme (the router owns several). The KV
+//! cache is threaded functionally through each graph call: the graph
+//! returns the updated cache as output 0, which replaces the engine's
+//! copy. xla_extension 0.5.1's PJRT wrapper returns multi-output programs
+//! as one tuple literal, so the cache makes a host round-trip per step
+//! (~10 MB memcpy, measured in EXPERIMENTS.md §Perf); weights stay
+//! device-resident.
+
+use crate::data::PAD;
+use crate::model::session::Session;
+use crate::quant::scheme::Scheme;
+use crate::runtime::literalx::{HostValue, IntTensor};
+use crate::util::tensor::Tensor;
+
+use super::kvcache::KvManager;
+
+pub struct Engine {
+    pub session: Session,
+    pub scheme: Scheme,
+    pub kv: KvManager,
+    cache: Tensor,
+    prefill_graph: String,
+    decode_graph: String,
+}
+
+impl Engine {
+    pub fn new(session: Session, scheme: Scheme) -> crate::Result<Self> {
+        let m = &session.manifest;
+        let cushion_len = session.cushion.as_ref().map(|c| c.len).unwrap_or(0);
+        let kv = KvManager::new(m.serve_batch, m.m_max, m.cache_cap, cushion_len);
+        let cache = kv.initial_cache(
+            m.n_layers,
+            m.n_kv_heads,
+            m.d_head,
+            session.cushion.as_ref().map(|c| &c.kv),
+        );
+        let suffix = scheme.gran.graph_suffix();
+        Ok(Self {
+            prefill_graph: format!("prefill_{suffix}"),
+            decode_graph: format!("decode_{suffix}"),
+            kv,
+            scheme,
+            session,
+            cache,
+        })
+    }
+
+    /// Rebuild the cache with the session's (possibly new) cushion.
+    pub fn reset_cache(&mut self) {
+        let m = &self.session.manifest;
+        self.kv = KvManager::new(
+            m.serve_batch, m.m_max, m.cache_cap, self.cushion_len());
+        self.cache = self.kv.initial_cache(
+            m.n_layers,
+            m.n_kv_heads,
+            m.d_head,
+            self.session.cushion.as_ref().map(|c| &c.kv),
+        );
+    }
+
+    pub fn cushion_len(&self) -> usize {
+        self.session.cushion.as_ref().map(|c| c.len).unwrap_or(0)
+    }
+
+    /// Prefill `tokens` into `slot`; returns the first generated token.
+    pub fn prefill(&mut self, slot: usize, tokens: &[i32]) -> crate::Result<i32> {
+        let m = &self.session.manifest;
+        anyhow::ensure!(tokens.len() <= m.seq_len, "prompt too long");
+        let mut padded = tokens.to_vec();
+        padded.resize(m.seq_len, PAD);
+        let (pkv, _plen) = self.session.prefix_args();
+        let cache = std::mem::replace(&mut self.cache, Tensor::zeros(&[0]));
+        let outs = self.session.run(
+            &self.prefill_graph,
+            &[
+                HostValue::F32(cache),
+                HostValue::F32(pkv),
+                HostValue::scalar_i32(self.cushion_len() as i32),
+                HostValue::scalar_i32(slot as i32),
+                HostValue::I32(IntTensor::vec(padded)),
+                HostValue::scalar_i32(tokens.len() as i32),
+                HostValue::F32(self.session.ranges.clone()),
+                HostValue::scalar_f32(self.scheme.act_levels()),
+                HostValue::scalar_f32(self.scheme.kv_levels()),
+                HostValue::F32(self.session.inv_smooth.clone()),
+            ],
+        )?;
+        anyhow::ensure!(outs.len() == 2, "prefill: expected 2 outputs");
+        let mut it = outs.into_iter();
+        self.cache = it.next().unwrap();
+        let logits = it.next().unwrap();
+        Ok(crate::eval::perplexity::argmax(&logits.data) as i32)
+    }
+
+    /// One decode step for all slots; `tokens[b]` is the last generated
+    /// token of slot b (PAD for inactive slots). Returns next tokens [B].
+    pub fn decode_step(&mut self, tokens: &[i32]) -> crate::Result<Vec<i32>> {
+        let m = &self.session.manifest;
+        anyhow::ensure!(tokens.len() == m.serve_batch);
+        let cache = std::mem::replace(&mut self.cache, Tensor::zeros(&[0]));
+        let outs = self.session.run(
+            &self.decode_graph,
+            &[
+                HostValue::F32(cache),
+                HostValue::I32(IntTensor::vec(self.kv.lens_i32())),
+                HostValue::scalar_i32(self.cushion_len() as i32),
+                HostValue::I32(IntTensor::vec(tokens.to_vec())),
+                HostValue::F32(self.session.ranges.clone()),
+                HostValue::scalar_f32(self.scheme.act_levels()),
+                HostValue::scalar_f32(self.scheme.kv_levels()),
+                HostValue::F32(self.session.inv_smooth.clone()),
+            ],
+        )?;
+        anyhow::ensure!(outs.len() == 2, "decode: expected 2 outputs");
+        let mut it = outs.into_iter();
+        self.cache = it.next().unwrap();
+        let logits = it.next().unwrap();
+        let v = m.vocab;
+        Ok((0..m.serve_batch)
+            .map(|b| {
+                crate::eval::perplexity::argmax(&logits.data[b * v..(b + 1) * v])
+                    as i32
+            })
+            .collect())
+    }
+
+    /// Host view of the cache (tests / debugging).
+    pub fn cache_host(&self) -> &Tensor {
+        &self.cache
+    }
+}

@@ -1,0 +1,168 @@
+//! KV-cache slot manager.
+//!
+//! The physical cache is one device tensor [L, 2, B, Hkv, CAP, dh]
+//! (layout shared with python/compile/serving.py): slot positions
+//! [0, M_MAX) hold the CushionCache prefix, positions [M_MAX, CAP) the
+//! request tokens. This module owns the *logical* side: slot allocation,
+//! per-slot token counts, and the host-built initial cache tensor with
+//! the cushion written into every slot.
+
+use crate::util::tensor::Tensor;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SlotState {
+    Free,
+    /// Occupied by a request (id), holding `tokens` cache entries.
+    Busy { request: u64 },
+}
+
+#[derive(Clone, Debug)]
+pub struct KvManager {
+    pub n_slots: usize,
+    pub m_max: usize,
+    pub cap: usize,
+    pub cushion_len: usize,
+    states: Vec<SlotState>,
+    tok_len: Vec<usize>,
+}
+
+impl KvManager {
+    pub fn new(n_slots: usize, m_max: usize, cap: usize, cushion_len: usize) -> Self {
+        assert!(cushion_len <= m_max);
+        Self {
+            n_slots,
+            m_max,
+            cap,
+            cushion_len,
+            states: vec![SlotState::Free; n_slots],
+            tok_len: vec![0; n_slots],
+        }
+    }
+
+    /// Build the initial host cache with the cushion KV broadcast into
+    /// every slot's prefix region. cushion_kv: [L, 2, Hkv, M_MAX, dh].
+    pub fn initial_cache(&self, n_layers: usize, n_kv_heads: usize,
+                         d_head: usize, cushion_kv: Option<&Tensor>) -> Tensor {
+        let mut cache = Tensor::zeros(&[
+            n_layers, 2, self.n_slots, n_kv_heads, self.cap, d_head,
+        ]);
+        if let Some(kv) = cushion_kv {
+            assert_eq!(kv.shape, vec![n_layers, 2, n_kv_heads, self.m_max, d_head]);
+            for l in 0..n_layers {
+                for w in 0..2 {
+                    for b in 0..self.n_slots {
+                        for h in 0..n_kv_heads {
+                            for p in 0..self.m_max {
+                                for d in 0..d_head {
+                                    let src = ((((l * 2 + w) * n_kv_heads + h)
+                                        * self.m_max + p) * d_head) + d;
+                                    let dst = (((((l * 2 + w) * self.n_slots + b)
+                                        * n_kv_heads + h) * self.cap + p)
+                                        * d_head) + d;
+                                    cache.data[dst] = kv.data[src];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        cache
+    }
+
+    pub fn alloc(&mut self, request: u64, prompt_len: usize) -> Option<usize> {
+        if self.m_max + prompt_len > self.cap {
+            return None; // cannot ever fit
+        }
+        let slot = self.states.iter().position(|s| *s == SlotState::Free)?;
+        self.states[slot] = SlotState::Busy { request };
+        self.tok_len[slot] = prompt_len;
+        Some(slot)
+    }
+
+    pub fn free(&mut self, slot: usize) {
+        self.states[slot] = SlotState::Free;
+        self.tok_len[slot] = 0;
+    }
+
+    pub fn request_of(&self, slot: usize) -> Option<u64> {
+        match self.states[slot] {
+            SlotState::Busy { request } => Some(request),
+            SlotState::Free => None,
+        }
+    }
+
+    pub fn tok_len(&self, slot: usize) -> usize {
+        self.tok_len[slot]
+    }
+
+    /// Record one decoded token appended to `slot`.
+    pub fn push_token(&mut self, slot: usize) {
+        self.tok_len[slot] += 1;
+        debug_assert!(self.m_max + self.tok_len[slot] <= self.cap);
+    }
+
+    /// Room left (in tokens) for this slot.
+    pub fn remaining(&self, slot: usize) -> usize {
+        self.cap - self.m_max - self.tok_len[slot]
+    }
+
+    pub fn busy_slots(&self) -> Vec<usize> {
+        (0..self.n_slots)
+            .filter(|&s| matches!(self.states[s], SlotState::Busy { .. }))
+            .collect()
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.states.iter().filter(|s| **s == SlotState::Free).count()
+    }
+
+    /// Per-slot token lengths for the decode graph's cache_tok_len input.
+    pub fn lens_i32(&self) -> Vec<i32> {
+        self.tok_len.iter().map(|&l| l as i32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut kv = KvManager::new(2, 4, 20, 2);
+        let a = kv.alloc(10, 5).unwrap();
+        let b = kv.alloc(11, 5).unwrap();
+        assert_ne!(a, b);
+        assert!(kv.alloc(12, 5).is_none(), "no free slot");
+        kv.free(a);
+        assert_eq!(kv.free_count(), 1);
+        let c = kv.alloc(12, 5).unwrap();
+        assert_eq!(c, a);
+        assert_eq!(kv.request_of(c), Some(12));
+    }
+
+    #[test]
+    fn capacity_respected() {
+        let mut kv = KvManager::new(1, 4, 10, 0);
+        assert!(kv.alloc(1, 7).is_none(), "prompt longer than cap");
+        let s = kv.alloc(1, 4).unwrap();
+        assert_eq!(kv.remaining(s), 2);
+        kv.push_token(s);
+        assert_eq!(kv.remaining(s), 1);
+        assert_eq!(kv.lens_i32(), vec![5]);
+    }
+
+    #[test]
+    fn initial_cache_embeds_cushion() {
+        let kv = KvManager::new(2, 2, 4, 1);
+        let mut cushion = Tensor::zeros(&[1, 2, 1, 2, 3]);
+        cushion.data[0] = 7.0; // l0, k, h0, p0, d0
+        let cache = kv.initial_cache(1, 1, 3, Some(&cushion));
+        assert_eq!(cache.shape, vec![1, 2, 2, 1, 4, 3]);
+        // both slots' position 0 carry the value
+        for b in 0..2 {
+            let idx = ((((0 * 2 + 0) * 2 + b) * 1 + 0) * 4 + 0) * 3 + 0;
+            assert_eq!(cache.data[idx], 7.0, "slot {b}");
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Serving metrics: TTFT, TPOT, throughput (the Table 8 quantities).
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+use super::request::Response;
+
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    pub prefill_seconds: Vec<f64>,
+    pub decode_seconds: Vec<f64>,
+    pub decode_batch_sizes: Vec<usize>,
+    pub ttft: Vec<f64>,
+    pub tpot: Vec<f64>,
+    pub completed: usize,
+    pub tokens_out: usize,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            started: Instant::now(),
+            prefill_seconds: Vec::new(),
+            decode_seconds: Vec::new(),
+            decode_batch_sizes: Vec::new(),
+            ttft: Vec::new(),
+            tpot: Vec::new(),
+            completed: 0,
+            tokens_out: 0,
+        }
+    }
+
+    pub fn record_prefill(&mut self, sec: f64) {
+        self.prefill_seconds.push(sec);
+    }
+
+    pub fn record_decode(&mut self, sec: f64, batch: usize) {
+        self.decode_seconds.push(sec);
+        self.decode_batch_sizes.push(batch);
+    }
+
+    pub fn record_finished(&mut self, r: &Response) {
+        self.completed += 1;
+        self.tokens_out += r.tokens.len();
+        self.ttft.push(r.ttft);
+        self.tpot.extend_from_slice(&r.tpot);
+    }
+
+    pub fn summary(&self) -> MetricsSummary {
+        MetricsSummary {
+            completed: self.completed,
+            tokens_out: self.tokens_out,
+            elapsed: self.started.elapsed().as_secs_f64(),
+            ttft_mean: stats::mean(&self.ttft),
+            ttft_p99: stats::percentile(&self.ttft, 99.0),
+            tpot_mean: stats::mean(&self.tpot),
+            tpot_std: stats::std(&self.tpot),
+            tpot_p99: stats::percentile(&self.tpot, 99.0),
+            decode_mean: stats::mean(&self.decode_seconds),
+            prefill_mean: stats::mean(&self.prefill_seconds),
+            mean_batch: stats::mean(
+                &self.decode_batch_sizes.iter().map(|&b| b as f64).collect::<Vec<_>>(),
+            ),
+        }
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct MetricsSummary {
+    pub completed: usize,
+    pub tokens_out: usize,
+    pub elapsed: f64,
+    pub ttft_mean: f64,
+    pub ttft_p99: f64,
+    pub tpot_mean: f64,
+    pub tpot_std: f64,
+    pub tpot_p99: f64,
+    pub decode_mean: f64,
+    pub prefill_mean: f64,
+    pub mean_batch: f64,
+}
+
+impl MetricsSummary {
+    pub fn tokens_per_second(&self) -> f64 {
+        if self.elapsed == 0.0 {
+            0.0
+        } else {
+            self.tokens_out as f64 / self.elapsed
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::FinishReason;
+
+    #[test]
+    fn summary_aggregates() {
+        let mut m = Metrics::new();
+        m.record_prefill(0.1);
+        m.record_decode(0.05, 3);
+        m.record_finished(&Response {
+            id: 1,
+            tokens: vec![1, 2, 3],
+            ttft: 0.12,
+            tpot: vec![0.05, 0.06],
+            finished: FinishReason::MaxTokens,
+        });
+        let s = m.summary();
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.tokens_out, 3);
+        assert!((s.tpot_mean - 0.055).abs() < 1e-9);
+        assert!((s.mean_batch - 3.0).abs() < 1e-9);
+        assert!(s.tokens_per_second() > 0.0);
+    }
+}

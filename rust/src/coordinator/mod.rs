@@ -1,0 +1,28 @@
+//! The serving coordinator — the L3 runtime a deployment would run.
+//!
+//! Shaped like a miniature vLLM router/engine split:
+//! * `request`   — request/response types and ids
+//! * `kvcache`   — slot manager over the device-resident paged KV cache,
+//!                 with the CushionCache preloaded into every slot's
+//!                 prefix region
+//! * `engine`    — PJRT execution of prefill/decode with the cache kept
+//!                 on device between steps
+//! * `batcher`   — FIFO admission queue with continuous-batching policy
+//! * `scheduler` — the step loop: admit-one-prefill, decode-all-running
+//! * `router`    — routes requests across engines (per quantization mode
+//!                 or replicas)
+//! * `server`    — TCP line-protocol front end
+//! * `metrics`   — TTFT / TPOT / throughput accounting (Table 8)
+
+pub mod batcher;
+pub mod engine;
+pub mod kvcache;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+pub mod server;
+
+pub use engine::Engine;
+pub use request::{Request, RequestId, Response};
+pub use scheduler::Scheduler;

@@ -1,0 +1,57 @@
+//! Request/response types of the serving path.
+
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Stop generation at this token (besides max_new_tokens).
+    pub stop_token: Option<i32>,
+    pub submitted: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        Self {
+            id,
+            prompt,
+            max_new_tokens,
+            stop_token: Some(crate::data::NL),
+            submitted: Instant::now(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: RequestId,
+    pub tokens: Vec<i32>,
+    /// Time to first token, seconds.
+    pub ttft: f64,
+    /// Per-output-token latencies (decode steps), seconds.
+    pub tpot: Vec<f64>,
+    pub finished: FinishReason,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+    StopToken,
+    Cancelled,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_defaults() {
+        let r = Request::new(1, vec![0, 5, 6], 16);
+        assert_eq!(r.stop_token, Some(crate::data::NL));
+        assert_eq!(r.max_new_tokens, 16);
+    }
+}

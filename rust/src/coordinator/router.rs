@@ -1,0 +1,97 @@
+//! Multi-engine router: route requests to engines by quantization mode,
+//! with least-loaded selection among replicas of the same mode.
+
+use std::collections::HashMap;
+
+use super::request::{Request, RequestId, Response};
+use super::scheduler::Scheduler;
+
+pub struct Router {
+    engines: Vec<(String, Scheduler)>,
+    by_mode: HashMap<String, Vec<usize>>,
+    assignments: HashMap<RequestId, usize>,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Self {
+            engines: Vec::new(),
+            by_mode: HashMap::new(),
+            assignments: HashMap::new(),
+        }
+    }
+
+    pub fn add_engine(&mut self, mode: &str, sched: Scheduler) {
+        self.by_mode
+            .entry(mode.to_string())
+            .or_default()
+            .push(self.engines.len());
+        self.engines.push((mode.to_string(), sched));
+    }
+
+    pub fn modes(&self) -> Vec<String> {
+        let mut m: Vec<String> = self.by_mode.keys().cloned().collect();
+        m.sort();
+        m
+    }
+
+    /// Route to the least-loaded replica serving `mode`.
+    pub fn route(&mut self, mode: &str, req: Request) -> crate::Result<()> {
+        let idxs = self
+            .by_mode
+            .get(mode)
+            .ok_or_else(|| anyhow::anyhow!("no engine for mode '{mode}'"))?;
+        let &idx = idxs
+            .iter()
+            .min_by_key(|&&i| {
+                let s = &self.engines[i].1;
+                s.batcher.waiting() + s.running_count()
+            })
+            .unwrap();
+        self.assignments.insert(req.id, idx);
+        self.engines[idx].1.submit_request(req);
+        Ok(())
+    }
+
+    /// Step every engine once; collects finished responses.
+    pub fn step_all(&mut self) -> crate::Result<Vec<Response>> {
+        let mut out = Vec::new();
+        for (_, sched) in self.engines.iter_mut() {
+            if sched.has_work() {
+                sched.step()?;
+            }
+            for r in sched.take_finished() {
+                self.assignments.remove(&r.id);
+                out.push(r);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.engines.iter().any(|(_, s)| s.has_work())
+    }
+
+    pub fn run_to_completion(&mut self) -> crate::Result<Vec<Response>> {
+        let mut all = Vec::new();
+        while self.has_work() {
+            all.extend(self.step_all()?);
+        }
+        Ok(all)
+    }
+
+    pub fn scheduler_mut(&mut self, mode: &str) -> Option<&mut Scheduler> {
+        let idx = *self.by_mode.get(mode)?.first()?;
+        Some(&mut self.engines[idx].1)
+    }
+
+    pub fn pending_assignments(&self) -> usize {
+        self.assignments.len()
+    }
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::new()
+    }
+}

@@ -1,0 +1,137 @@
+//! The continuous-batching step loop (vLLM-style): each step admits at
+//! most one waiting prefill into a free slot (prefill-priority keeps
+//! TTFT low), then runs one batched decode step over every running slot.
+
+use std::collections::HashMap;
+
+use crate::data::PAD;
+
+use super::batcher::{Batcher, Running};
+use super::engine::Engine;
+use super::metrics::Metrics;
+use super::request::{FinishReason, Request, RequestId, Response};
+
+pub struct Scheduler {
+    pub engine: Engine,
+    pub batcher: Batcher,
+    pub metrics: Metrics,
+    running: HashMap<usize, Running>, // slot -> running request
+    finished: Vec<Response>,
+}
+
+impl Scheduler {
+    pub fn new(engine: Engine) -> Self {
+        Self {
+            engine,
+            batcher: Batcher::new(),
+            metrics: Metrics::new(),
+            running: HashMap::new(),
+            finished: Vec::new(),
+        }
+    }
+
+    pub fn submit(&mut self, prompt: Vec<i32>, max_new: usize) -> RequestId {
+        self.batcher.submit(prompt, max_new)
+    }
+
+    pub fn submit_request(&mut self, r: Request) {
+        self.batcher.submit_request(r);
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.batcher.waiting() > 0 || !self.running.is_empty()
+    }
+
+    /// One scheduler step. Returns the number of tokens produced.
+    pub fn step(&mut self) -> crate::Result<usize> {
+        let mut produced = 0;
+
+        // 1) admit one prefill if a slot is free
+        if self.engine.kv.free_count() > 0 {
+            if let Some(req) = self.batcher.pop() {
+                let slot = self
+                    .engine
+                    .kv
+                    .alloc(req.id, req.prompt.len())
+                    .ok_or_else(|| anyhow::anyhow!("prompt does not fit cache"))?;
+                let t0 = std::time::Instant::now();
+                let first = self.engine.prefill(slot, &req.prompt)?;
+                self.metrics.record_prefill(t0.elapsed().as_secs_f64());
+                let mut running = Running::new(req, slot);
+                // NOTE: `first` is generated but its KV is not cached yet;
+                // kv.tok_len stays at prompt_len until the decode step that
+                // feeds it (the cache invariant: tok_len == cached tokens).
+                running.push_token(first);
+                produced += 1;
+                self.maybe_finish(slot, running);
+            }
+        }
+
+        // 2) batched decode over all running slots
+        if !self.running.is_empty() {
+            let b = self.engine.kv.n_slots;
+            let mut tokens = vec![PAD; b];
+            for (&slot, run) in &self.running {
+                tokens[slot] = *run.generated.last().unwrap();
+            }
+            let t0 = std::time::Instant::now();
+            let next = self.engine.decode_step(&tokens)?;
+            let dt = t0.elapsed().as_secs_f64();
+            self.metrics.record_decode(dt, self.running.len());
+
+            let slots: Vec<usize> = self.running.keys().copied().collect();
+            for slot in slots {
+                let mut run = self.running.remove(&slot).unwrap();
+                // the token we just fed is now cached at position tok_len
+                self.engine.kv.push_token(slot);
+                run.push_token(next[slot]);
+                produced += 1;
+                self.maybe_finish(slot, run);
+            }
+        }
+        Ok(produced)
+    }
+
+    fn maybe_finish(&mut self, slot: usize, run: Running) {
+        match run.should_stop(self.engine.kv.remaining(slot)) {
+            Some(reason) => {
+                self.engine.kv.free(slot);
+                let mut resp = run.into_response();
+                resp.finished = reason;
+                self.metrics.record_finished(&resp);
+                self.finished.push(resp);
+            }
+            None => {
+                self.running.insert(slot, run);
+            }
+        }
+    }
+
+    /// Run until the queue and all slots drain; returns all responses.
+    pub fn run_to_completion(&mut self) -> crate::Result<Vec<Response>> {
+        while self.has_work() {
+            self.step()?;
+        }
+        Ok(self.take_finished())
+    }
+
+    pub fn take_finished(&mut self) -> Vec<Response> {
+        std::mem::take(&mut self.finished)
+    }
+
+    pub fn running_count(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Cancel everything in flight (server shutdown).
+    pub fn cancel_all(&mut self) {
+        let slots: Vec<usize> = self.running.keys().copied().collect();
+        for slot in slots {
+            let run = self.running.remove(&slot).unwrap();
+            self.engine.kv.free(slot);
+            let mut resp = run.into_response();
+            resp.finished = FinishReason::Cancelled;
+            self.finished.push(resp);
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! TCP line-protocol front end (JSON lines over std::net — the offline
+//! vendor has no HTTP/tokio stack, and a line protocol keeps the demo
+//! client trivial: `nc localhost 7199`).
+//!
+//! Request:  {"prompt": [1, 2, 3], "max_new": 16}\n
+//! Response: {"id": 7, "tokens": [4, 5], "ttft_ms": 12.1, "text": "..."}\n
+//!
+//! One acceptor thread; per-connection reader threads submit into an
+//! mpsc channel; the scheduler thread owns the engine and steps
+//! continuously, pushing responses back through per-request channels.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::data::tokenizer::Tokenizer;
+use crate::util::json::{self, Value};
+
+use super::request::{Request, RequestId, Response};
+use super::scheduler::Scheduler;
+
+enum Inbound {
+    Submit(Request, Sender<Response>),
+    Shutdown,
+}
+
+pub struct Server {
+    addr: String,
+}
+
+impl Server {
+    pub fn new(addr: &str) -> Self {
+        Self { addr: addr.to_string() }
+    }
+
+    /// Serve until `stop` flips. Blocks the calling thread.
+    pub fn serve(&self, mut sched: Scheduler, stop: Arc<AtomicBool>) -> crate::Result<()> {
+        let listener = TcpListener::bind(&self.addr)?;
+        listener.set_nonblocking(true)?;
+        log::info!("cushiond listening on {}", self.addr);
+        let (tx, rx): (Sender<Inbound>, Receiver<Inbound>) = channel();
+        let next_id = Arc::new(AtomicU64::new(1));
+        let tokenizer = Tokenizer::new(sched.engine.session.manifest.vocab);
+
+        // scheduler loop on this thread; acceptor inline (non-blocking)
+        let mut waiters: HashMap<RequestId, Sender<Response>> = HashMap::new();
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                sched.cancel_all();
+                break;
+            }
+            // accept new connections
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    log::debug!("connection from {peer}");
+                    let tx = tx.clone();
+                    let ids = next_id.clone();
+                    std::thread::spawn(move || {
+                        if let Err(e) = handle_conn(stream, tx, ids) {
+                            log::warn!("connection error: {e:#}");
+                        }
+                    });
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+                Err(e) => log::warn!("accept: {e}"),
+            }
+            // drain inbound submissions
+            while let Ok(msg) = rx.try_recv() {
+                match msg {
+                    Inbound::Submit(req, back) => {
+                        waiters.insert(req.id, back);
+                        sched.submit_request(req);
+                    }
+                    Inbound::Shutdown => {
+                        stop.store(true, Ordering::Relaxed);
+                    }
+                }
+            }
+            // advance the engine
+            if sched.has_work() {
+                sched.step()?;
+                for resp in sched.take_finished() {
+                    if let Some(back) = waiters.remove(&resp.id) {
+                        let _ = back.send(resp);
+                    }
+                }
+            } else {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        }
+        let _ = tokenizer;
+        Ok(())
+    }
+}
+
+fn handle_conn(stream: TcpStream, tx: Sender<Inbound>,
+               ids: Arc<AtomicU64>) -> crate::Result<()> {
+    let peer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    let mut writer = peer;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        if line.trim() == "quit" {
+            let _ = tx.send(Inbound::Shutdown);
+            break;
+        }
+        match parse_request(&line, &ids) {
+            Ok(req) => {
+                let (back_tx, back_rx) = channel();
+                tx.send(Inbound::Submit(req, back_tx))
+                    .map_err(|_| anyhow::anyhow!("scheduler gone"))?;
+                match back_rx.recv() {
+                    Ok(resp) => {
+                        writeln!(writer, "{}", render_response(&resp))?;
+                    }
+                    Err(_) => {
+                        writeln!(writer, "{{\"error\":\"cancelled\"}}")?;
+                        break;
+                    }
+                }
+            }
+            Err(e) => {
+                writeln!(writer, "{{\"error\":{}}}", json::s(&format!("{e:#}")))?;
+            }
+        }
+    }
+    Ok(())
+}
+
+pub fn parse_request(line: &str, ids: &AtomicU64) -> crate::Result<Request> {
+    let v = json::parse(line)?;
+    let prompt: Vec<i32> = v
+        .req("prompt")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("prompt must be an array"))?
+        .iter()
+        .filter_map(Value::as_i64)
+        .map(|t| t as i32)
+        .collect();
+    anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+    let max_new = v.get("max_new").and_then(Value::as_usize).unwrap_or(16);
+    Ok(Request::new(ids.fetch_add(1, Ordering::Relaxed), prompt, max_new))
+}
+
+pub fn render_response(r: &Response) -> String {
+    json::obj(vec![
+        ("id", json::num(r.id as f64)),
+        ("tokens", json::arr(r.tokens.iter().map(|&t| json::num(t as f64)))),
+        ("ttft_ms", json::num(r.ttft * 1e3)),
+        (
+            "tpot_ms",
+            json::num(crate::util::stats::mean(&r.tpot) * 1e3),
+        ),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_render() {
+        let ids = AtomicU64::new(5);
+        let r = parse_request(r#"{"prompt": [0, 9, 12], "max_new": 4}"#, &ids).unwrap();
+        assert_eq!(r.prompt, vec![0, 9, 12]);
+        assert_eq!(r.max_new_tokens, 4);
+        let resp = Response {
+            id: r.id,
+            tokens: vec![1, 2],
+            ttft: 0.011,
+            tpot: vec![0.004],
+            finished: crate::coordinator::request::FinishReason::MaxTokens,
+        };
+        let s = render_response(&resp);
+        let v = json::parse(&s).unwrap();
+        assert_eq!(v.req_usize("id").unwrap() as u64, r.id);
+        assert_eq!(v.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn bad_requests_rejected() {
+        let ids = AtomicU64::new(1);
+        assert!(parse_request("{}", &ids).is_err());
+        assert!(parse_request(r#"{"prompt": []}"#, &ids).is_err());
+        assert!(parse_request("not json", &ids).is_err());
+    }
+}

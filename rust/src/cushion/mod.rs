@@ -1,0 +1,10 @@
+//! CushionCache drivers: greedy prefix search + quantization-aware prefix
+//! tuning (paper §4), plus cushion persistence.
+
+pub mod search;
+pub mod store;
+pub mod tune;
+
+pub use search::{greedy_search, SearchCfg, SearchResult};
+pub use store::{load_cushion, save_cushion};
+pub use tune::{tune_prefix, TuneCfg, TuneResult};

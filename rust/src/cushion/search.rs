@@ -1,0 +1,148 @@
+//! Greedy prefix search (paper §4.1, Algorithm 1).
+//!
+//! At each step, draw a text sample t_{1:n} from the calibration corpus
+//! (the paper samples C4; synwiki's calib split is our stand-in), sweep
+//! every embedding-table token p as a candidate continuation of the
+//! current prefix, and keep the argmin of L_q(t | p_{1:k}, p) — computed
+//! by the AOT `score_lq` graph in SCORE_BATCH-sized candidate batches
+//! ("batched inference" in the paper). Stop early when the best candidate
+//! no longer reduces the error below tau * previous (eq. 10), or at
+//! m_max. Optionally warm-start from non-semantic tokens (<bos>), the
+//! heuristic the paper §4.1 recommends.
+
+use std::time::Instant;
+
+use crate::data;
+use crate::model::session::Session;
+use crate::util::prng::SplitMix64;
+
+#[derive(Clone, Debug)]
+pub struct SearchCfg {
+    /// Early-stopping threshold tau (paper uses 0.5).
+    pub tau: f32,
+    /// Maximum prefix length (paper's m; bounded by M_MAX).
+    pub max_len: usize,
+    /// Activation levels used inside the scorer's L_q (2^bits - 1).
+    pub levels: f32,
+    /// Warm-start tokens (e.g. [<bos>]); empty = cold start.
+    pub init: Vec<i32>,
+    /// RNG seed for drawing text samples.
+    pub seed: u64,
+    /// Restrict the sweep to every k-th vocab token (1 = full sweep, the
+    /// paper's setting; >1 trades fidelity for wall-clock, used by the
+    /// quick examples).
+    pub vocab_stride: usize,
+}
+
+impl Default for SearchCfg {
+    fn default() -> Self {
+        Self {
+            tau: 0.5,
+            max_len: 8,
+            levels: 255.0,
+            init: vec![],
+            seed: 0x5EA7C4,
+            vocab_stride: 1,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub prefix: Vec<i32>,
+    /// L_q trace: entry k = error after the prefix had k tokens.
+    pub lq_trace: Vec<f32>,
+    pub candidates_scored: usize,
+    pub seconds: f64,
+}
+
+/// Run Algorithm 1 against the session's current weights/smoothing.
+pub fn greedy_search(session: &Session, cfg: &SearchCfg) -> crate::Result<SearchResult> {
+    let t0 = Instant::now();
+    let m = &session.manifest;
+    let max_len = cfg.max_len.min(m.m_max);
+    let calib = session.corpus.split("calib")?;
+    let mut rng = SplitMix64::new(cfg.seed);
+
+    let mut prefix: Vec<i32> = cfg.init.clone();
+    anyhow::ensure!(prefix.len() < max_len, "warm start already at max_len");
+    let mut scored = 0usize;
+    let mut lq_trace = Vec::new();
+
+    // baseline error with the current prefix (scored with a PAD candidate
+    // slot appended — the candidate position is masked out of L_q anyway,
+    // but we need *some* token there; PAD has an inert embedding).
+    let draw_text = |rng: &mut SplitMix64| -> Vec<i32> {
+        let i = rng.next_below(calib.n_seqs as u64) as usize;
+        calib.seq(i)[..m.score_text_len].to_vec()
+    };
+
+    let text0 = draw_text(&mut rng);
+    let base = score_one(session, &prefix, data::PAD, &text0, cfg.levels)?;
+    lq_trace.push(base);
+    let mut prev_lq = base;
+    log::info!("[search] start lq={base:.5} prefix={prefix:?}");
+
+    while prefix.len() < max_len {
+        let text = draw_text(&mut rng);
+        // sweep the embedding table in score_batch-sized chunks
+        let mut best: (i32, f32) = (data::PAD, f32::INFINITY);
+        let vocab: Vec<i32> = (0..m.vocab as i32)
+            .step_by(cfg.vocab_stride)
+            .filter(|&t| t != data::PAD)
+            .collect();
+        for chunk in vocab.chunks(m.score_batch) {
+            let mut cands = chunk.to_vec();
+            cands.resize(m.score_batch, data::PAD);
+            let lqs = session.score_candidates(&prefix, &cands, &text, cfg.levels)?;
+            scored += chunk.len();
+            for (i, &t) in chunk.iter().enumerate() {
+                if lqs[i] < best.1 {
+                    best = (t, lqs[i]);
+                }
+            }
+        }
+        // eq. 10: accept only if the error drops below tau * previous
+        if best.1 > cfg.tau * prev_lq && !prefix.is_empty() {
+            log::info!(
+                "[search] stop: best lq {:.5} > tau*{:.5}",
+                best.1, prev_lq
+            );
+            break;
+        }
+        log::info!(
+            "[search] += token {} (lq {:.5} -> {:.5})",
+            best.0, prev_lq, best.1
+        );
+        prefix.push(best.0);
+        prev_lq = best.1;
+        lq_trace.push(best.1);
+    }
+
+    Ok(SearchResult {
+        prefix,
+        lq_trace,
+        candidates_scored: scored,
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Score a single (prefix, candidate) pair on a text sample.
+fn score_one(session: &Session, prefix: &[i32], cand: i32, text: &[i32],
+             levels: f32) -> crate::Result<f32> {
+    let m = &session.manifest;
+    let cands = vec![cand; m.score_batch];
+    Ok(session.score_candidates(prefix, &cands, text, levels)?[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_cfg_matches_paper() {
+        let c = SearchCfg::default();
+        assert_eq!(c.tau, 0.5);
+        assert_eq!(c.vocab_stride, 1);
+    }
+}

@@ -1,0 +1,74 @@
+//! Cushion persistence: save/load a discovered CushionCache (tokens +
+//! tuned KV) under artifacts/<variant>/cushions/<name>.bin.
+//!
+//! Format: "CCK1" | n_tokens | i32[] | ndim | dims u32[] | f32 kv[].
+
+use std::path::PathBuf;
+
+use crate::model::session::Cushion;
+use crate::util::fsutil::{self, Cursor};
+use crate::util::tensor::Tensor;
+
+pub fn cushion_path(variant: &str, name: &str) -> PathBuf {
+    fsutil::variant_dir(variant)
+        .join("cushions")
+        .join(format!("{name}.bin"))
+}
+
+pub fn save_cushion(variant: &str, name: &str, c: &Cushion) -> crate::Result<PathBuf> {
+    let path = cushion_path(variant, name);
+    std::fs::create_dir_all(path.parent().unwrap())?;
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(b"CCK1");
+    buf.extend_from_slice(&(c.tokens.len() as u32).to_le_bytes());
+    for t in &c.tokens {
+        buf.extend_from_slice(&t.to_le_bytes());
+    }
+    buf.extend_from_slice(&(c.kv.shape.len() as u32).to_le_bytes());
+    for d in &c.kv.shape {
+        buf.extend_from_slice(&(*d as u32).to_le_bytes());
+    }
+    for v in &c.kv.data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(&path, buf)?;
+    Ok(path)
+}
+
+pub fn load_cushion(variant: &str, name: &str) -> crate::Result<Cushion> {
+    let path = cushion_path(variant, name);
+    let buf = fsutil::read(&path)?;
+    let mut c = Cursor::new(&buf);
+    c.magic(b"CCK1")?;
+    let n = c.u32()? as usize;
+    let tokens = c.i32_vec(n)?;
+    let nd = c.u32()? as usize;
+    let mut dims = Vec::with_capacity(nd);
+    for _ in 0..nd {
+        dims.push(c.u32()? as usize);
+    }
+    let kv = Tensor::new(dims.clone(), c.f32_vec(dims.iter().product())?);
+    Ok(Cushion { len: tokens.len(), tokens, kv })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        std::env::set_var("CUSHION_ARTIFACTS",
+                          std::env::temp_dir().join("cc_store_test").to_str().unwrap());
+        let c = Cushion {
+            tokens: vec![0, 1, 2],
+            len: 3,
+            kv: Tensor::new(vec![2, 2], vec![1.0, -2.0, 3.5, 0.0]),
+        };
+        save_cushion("vtest", "default", &c).unwrap();
+        let back = load_cushion("vtest", "default").unwrap();
+        assert_eq!(back.tokens, c.tokens);
+        assert_eq!(back.kv, c.kv);
+        assert!(load_cushion("vtest", "missing").is_err());
+        std::env::remove_var("CUSHION_ARTIFACTS");
+    }
+}

@@ -1,0 +1,127 @@
+//! Quantization-aware prefix tuning (paper §4.2): starting from the
+//! greedily-searched prefix's KV, run Adam on the prefix KV itself with
+//! loss L = L_pred + lambda * L_q (STE through rounding, stop-grad on
+//! scales — all inside the AOT `tune_step` graph; this driver owns the
+//! data loop and optimizer state plumbing).
+
+use std::time::Instant;
+
+use crate::model::session::{Cushion, Session};
+use crate::runtime::literalx::{HostValue, IntTensor};
+use crate::util::prng::SplitMix64;
+use crate::util::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct TuneCfg {
+    /// Loss balance lambda (paper: 0.01).
+    pub lambda: f32,
+    pub lr: f32,
+    /// Passes over the calibration split (paper: 2).
+    pub epochs: usize,
+    /// Activation levels for the L_q regularizer.
+    pub levels: f32,
+    pub seed: u64,
+}
+
+impl Default for TuneCfg {
+    fn default() -> Self {
+        Self { lambda: 0.01, lr: 3e-3, epochs: 2, levels: 255.0, seed: 0x7E5E }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    pub kv: Tensor,
+    pub loss_trace: Vec<f32>,
+    pub lq_trace: Vec<f32>,
+    pub steps: usize,
+    pub seconds: f64,
+}
+
+/// Tune the KV of `prefix_tokens` (greedy-search output). Returns the
+/// tuned KV; install with `session.cushion = Some(Cushion { ... })`.
+pub fn tune_prefix(session: &Session, prefix_tokens: &[i32],
+                   cfg: &TuneCfg) -> crate::Result<TuneResult> {
+    let t0 = Instant::now();
+    let m = &session.manifest;
+    let mut kv = session.compute_prefix_kv(prefix_tokens)?;
+    let mut adam_m = Tensor::zeros(&kv.shape);
+    let mut adam_v = Tensor::zeros(&kv.shape);
+    let calib = session.corpus.split("calib")?;
+    let batches_per_epoch = calib.n_seqs / m.tune_batch;
+    let mut rng = SplitMix64::new(cfg.seed);
+    let mut order: Vec<usize> = (0..calib.n_seqs).collect();
+
+    let mut loss_trace = Vec::new();
+    let mut lq_trace = Vec::new();
+    let mut step = 0usize;
+    for _epoch in 0..cfg.epochs {
+        rng.shuffle(&mut order);
+        for b in 0..batches_per_epoch {
+            let mut tokens = Vec::with_capacity(m.tune_batch * m.seq_len);
+            for s in 0..m.tune_batch {
+                tokens.extend_from_slice(calib.seq(order[b * m.tune_batch + s]));
+            }
+            let out = session.run(
+                "tune_step",
+                &[
+                    HostValue::F32(kv.clone()),
+                    HostValue::F32(adam_m.clone()),
+                    HostValue::F32(adam_v.clone()),
+                    HostValue::scalar_i32(step as i32),
+                    HostValue::I32(IntTensor::new(
+                        vec![m.tune_batch, m.seq_len], tokens)),
+                    HostValue::scalar_i32(prefix_tokens.len() as i32),
+                    HostValue::scalar_f32(cfg.lambda),
+                    HostValue::scalar_f32(cfg.lr),
+                    HostValue::scalar_f32(cfg.levels),
+                    HostValue::F32(session.inv_smooth.clone()),
+                ],
+            )?;
+            anyhow::ensure!(out.len() == 5, "tune_step: expected 5 outputs");
+            let mut it = out.into_iter();
+            kv = it.next().unwrap();
+            adam_m = it.next().unwrap();
+            adam_v = it.next().unwrap();
+            let loss = it.next().unwrap().data[0];
+            let lq = it.next().unwrap().data[0];
+            loss_trace.push(loss);
+            lq_trace.push(lq);
+            step += 1;
+            if step % 4 == 0 {
+                log::info!("[tune] step {step} loss {loss:.4} lq {lq:.5}");
+            }
+        }
+    }
+    Ok(TuneResult {
+        kv,
+        loss_trace,
+        lq_trace,
+        steps: step,
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Convenience: build the full cushion (search already done) and install.
+pub fn install_tuned(session: &mut Session, prefix_tokens: &[i32],
+                     cfg: &TuneCfg) -> crate::Result<TuneResult> {
+    let res = tune_prefix(session, prefix_tokens, cfg)?;
+    session.cushion = Some(Cushion {
+        tokens: prefix_tokens.to_vec(),
+        len: prefix_tokens.len(),
+        kv: res.kv.clone(),
+    });
+    Ok(res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = TuneCfg::default();
+        assert!((c.lambda - 0.01).abs() < 1e-9);
+        assert_eq!(c.epochs, 2);
+    }
+}

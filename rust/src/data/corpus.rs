@@ -1,0 +1,81 @@
+//! Loader for corpus.bin (python/compile/binio.write_corpus).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::fsutil::{self, Cursor};
+
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub n_seqs: usize,
+    pub seq_len: usize,
+    /// Row-major [n_seqs, seq_len].
+    pub tokens: Vec<i32>,
+}
+
+impl Split {
+    pub fn seq(&self, i: usize) -> &[i32] {
+        &self.tokens[i * self.seq_len..(i + 1) * self.seq_len]
+    }
+
+    pub fn seqs(&self) -> impl Iterator<Item = &[i32]> {
+        (0..self.n_seqs).map(move |i| self.seq(i))
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Corpus {
+    pub splits: BTreeMap<String, Split>,
+}
+
+impl Corpus {
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let buf = fsutil::read(path)?;
+        let mut c = Cursor::new(&buf);
+        c.magic(b"CCC1")?;
+        let n = c.u32()? as usize;
+        let mut splits = BTreeMap::new();
+        for _ in 0..n {
+            let name = c.string()?;
+            let n_seqs = c.u32()? as usize;
+            let seq_len = c.u32()? as usize;
+            let tokens = c.i32_vec(n_seqs * seq_len)?;
+            splits.insert(name, Split { n_seqs, seq_len, tokens });
+        }
+        Ok(Self { splits })
+    }
+
+    pub fn split(&self, name: &str) -> crate::Result<&Split> {
+        self.splits
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("corpus split '{name}' missing"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_roundtrip() {
+        // hand-build a corpus.bin in memory-equivalent file
+        let dir = std::env::temp_dir().join("cc_corpus_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("corpus.bin");
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(b"CCC1");
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&5u32.to_le_bytes());
+        buf.extend_from_slice(b"calib");
+        buf.extend_from_slice(&2u32.to_le_bytes()); // n_seqs
+        buf.extend_from_slice(&3u32.to_le_bytes()); // seq_len
+        for t in [1i32, 2, 3, 4, 5, 6] {
+            buf.extend_from_slice(&t.to_le_bytes());
+        }
+        std::fs::write(&path, &buf).unwrap();
+        let c = Corpus::load(&path).unwrap();
+        let s = c.split("calib").unwrap();
+        assert_eq!(s.seq(1), &[4, 5, 6]);
+        assert!(c.split("nope").is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! The synwiki generative grammar — a bit-for-bit mirror of
+//! python/compile/datagen.py (same SplitMix64 call order, same successor
+//! tables, same sentence/document structure). Parity is asserted against
+//! the `trainsample` corpus split in rust/tests/parity.rs.
+
+use super::{BOS, DOT, GRAMMAR_SEED, NL, N_SPECIAL, N_TOPICS};
+use crate::util::prng::{hash64, SplitMix64};
+
+pub const SUCC_WEIGHTS: [f64; 3] = [0.55, 0.30, 0.15];
+pub const N_STARTERS: u64 = 8;
+pub const BODY_MIN: u64 = 3;
+pub const BODY_RANGE: u64 = 5;
+pub const SENTS_PER_PARA: usize = 4;
+pub const TOPIC_SWITCH: f64 = 0.1;
+
+#[derive(Clone, Debug)]
+pub struct Grammar {
+    pub vocab: usize,
+    pub tpt: usize, // tokens per topic
+    pub seed: u64,
+}
+
+impl Grammar {
+    pub fn new(vocab: usize) -> Self {
+        Self {
+            vocab,
+            tpt: (vocab - N_SPECIAL as usize) / N_TOPICS,
+            seed: GRAMMAR_SEED,
+        }
+    }
+
+    /// k-th allowed successor (within-topic index) of token index t.
+    pub fn successor(&self, topic: usize, t: usize, k: usize) -> usize {
+        let h = hash64(self.seed ^ (topic as u64 * 131071 + t as u64 * 31 + k as u64));
+        (h % self.tpt as u64) as usize
+    }
+
+    pub fn step(&self, topic: usize, t: usize, rng: &mut SplitMix64) -> usize {
+        let u = rng.next_f64();
+        let k = if u < SUCC_WEIGHTS[0] {
+            0
+        } else if u < SUCC_WEIGHTS[0] + SUCC_WEIGHTS[1] {
+            1
+        } else {
+            2
+        };
+        self.successor(topic, t, k)
+    }
+
+    pub fn agree(&self, s0: usize) -> usize {
+        (7 * s0 + 3) % self.tpt
+    }
+
+    pub fn gid(&self, topic: usize, idx: usize) -> i32 {
+        N_SPECIAL + (topic * self.tpt + idx) as i32
+    }
+
+    /// Is this id one of the low-semantic trigger tokens?
+    pub fn is_trigger(&self, id: i32) -> bool {
+        id == BOS || id == NL || id == DOT
+    }
+
+    pub fn sentence(&self, topic: usize, rng: &mut SplitMix64) -> Vec<i32> {
+        let s0 = rng.next_below(N_STARTERS) as usize;
+        let body_len = (BODY_MIN + rng.next_below(BODY_RANGE)) as usize;
+        let mut idxs = vec![s0];
+        let mut cur = s0;
+        for _ in 0..body_len {
+            cur = self.step(topic, cur, rng);
+            idxs.push(cur);
+        }
+        idxs.push(self.agree(s0));
+        let mut out: Vec<i32> = idxs.into_iter().map(|i| self.gid(topic, i)).collect();
+        out.push(DOT);
+        out
+    }
+
+    pub fn document(&self, length: usize, rng: &mut SplitMix64) -> Vec<i32> {
+        let mut toks = vec![BOS];
+        let mut topic = rng.next_below(N_TOPICS as u64) as usize;
+        let mut n_sent = 0usize;
+        while toks.len() < length {
+            if n_sent > 0 && rng.next_f64() < TOPIC_SWITCH {
+                topic = rng.next_below(N_TOPICS as u64) as usize;
+            }
+            toks.extend(self.sentence(topic, rng));
+            n_sent += 1;
+            if n_sent % SENTS_PER_PARA == 0 {
+                toks.push(NL);
+            }
+        }
+        toks.truncate(length);
+        toks
+    }
+}
+
+/// Reproducible corpus split — mirrors datagen.corpus_split exactly.
+pub fn corpus_split(vocab: usize, n_seqs: usize, seq_len: usize, stream: u64,
+                    seed: u64) -> Vec<Vec<i32>> {
+    let g = Grammar::new(vocab);
+    let mut base = SplitMix64::new(seed);
+    let mut rng = base.fork(stream);
+    (0..n_seqs)
+        .map(|i| {
+            let mut r = rng.fork(i as u64);
+            g.document(seq_len, &mut r)
+        })
+        .collect()
+}
+
+pub const CORPUS_SEED: u64 = 0x5EED;
+pub const STREAM_CALIB: u64 = 1;
+pub const STREAM_HELDOUT: u64 = 2;
+pub const STREAM_TRAINSAMPLE: u64 = 3;
+/// Serve-time workloads draw from their own stream so they never collide
+/// with the eval splits.
+pub const STREAM_SERVE: u64 = 100;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn document_shape() {
+        let g = Grammar::new(512);
+        let mut rng = SplitMix64::new(1);
+        let d = g.document(128, &mut rng);
+        assert_eq!(d.len(), 128);
+        assert_eq!(d[0], BOS);
+        assert!(d.iter().all(|&t| t >= 0 && (t as usize) < 512));
+        assert!(d.contains(&DOT));
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = Grammar::new(512);
+        let a = g.document(64, &mut SplitMix64::new(5));
+        let b = g.document(64, &mut SplitMix64::new(5));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sentence_ends_with_agreement_then_dot() {
+        let g = Grammar::new(512);
+        let mut rng = SplitMix64::new(2);
+        for topic in 0..N_TOPICS {
+            let s = g.sentence(topic, &mut rng);
+            assert_eq!(*s.last().unwrap(), DOT);
+            let s0 = (s[0] - N_SPECIAL) as usize % g.tpt;
+            let agree = s[s.len() - 2];
+            assert_eq!(agree, g.gid(topic, g.agree(s0)));
+        }
+    }
+
+    #[test]
+    fn successor_table_is_stable() {
+        let g = Grammar::new(512);
+        // pure function of (topic, t, k): same across calls
+        assert_eq!(g.successor(3, 7, 1), g.successor(3, 7, 1));
+        // weights order: step with u<0.55 picks successor 0
+        let g2 = Grammar::new(1024);
+        assert!(g2.tpt > g.tpt);
+    }
+
+    #[test]
+    fn splits_are_disjoint_streams() {
+        let a = corpus_split(512, 4, 64, STREAM_CALIB, CORPUS_SEED);
+        let b = corpus_split(512, 4, 64, STREAM_HELDOUT, CORPUS_SEED);
+        assert_ne!(a, b);
+        let a2 = corpus_split(512, 4, 64, STREAM_CALIB, CORPUS_SEED);
+        assert_eq!(a, a2);
+    }
+}

@@ -1,0 +1,18 @@
+//! Data substrate: the synwiki grammar (bit-for-bit mirror of
+//! python/compile/datagen.py), tokenizer, corpus/tasks artifact loaders,
+//! and serve-time workload generation.
+
+pub mod corpus;
+pub mod grammar;
+pub mod tasks;
+pub mod tokenizer;
+
+/// Tokenizer special ids (configs.py).
+pub const BOS: i32 = 0;
+pub const NL: i32 = 1;
+pub const DOT: i32 = 2;
+pub const PAD: i32 = 3;
+pub const N_SPECIAL: i32 = 4;
+pub const N_TOPICS: usize = 14;
+pub const GRAMMAR_SEED: u64 = 0xC0DE;
+pub const TRIGGER_TOKENS: [i32; 3] = [BOS, NL, DOT];

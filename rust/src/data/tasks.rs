@@ -1,0 +1,106 @@
+//! Loader for tasks.bin (python/compile/binio.write_tasks): the seven
+//! zero-shot analogues + mmlu-syn + gsm-syn.
+
+use std::path::Path;
+
+use crate::util::fsutil::{self, Cursor};
+
+pub const KIND_ARGMAX: u32 = 0;
+pub const KIND_MC: u32 = 1;
+pub const KIND_GEN: u32 = 2;
+
+pub const ZERO_SHOT: [&str; 7] = [
+    "lambada-syn", "hellaswag-syn", "piqa-syn", "winogrande-syn",
+    "obqa-syn", "rte-syn", "copa-syn",
+];
+
+#[derive(Clone, Debug)]
+pub struct TaskItem {
+    pub kind: u32,
+    pub meta: u32,
+    pub context: Vec<i32>,
+    pub candidates: Vec<Vec<i32>>,
+    pub gold: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub name: String,
+    pub items: Vec<TaskItem>,
+}
+
+pub fn load(path: &Path) -> crate::Result<Vec<Task>> {
+    let buf = fsutil::read(path)?;
+    let mut c = Cursor::new(&buf);
+    c.magic(b"CCT1")?;
+    let n_tasks = c.u32()? as usize;
+    let mut tasks = Vec::with_capacity(n_tasks);
+    for _ in 0..n_tasks {
+        let name = c.string()?;
+        let n_items = c.u32()? as usize;
+        let mut items = Vec::with_capacity(n_items);
+        for _ in 0..n_items {
+            let kind = c.u32()?;
+            let meta = c.u32()?;
+            let ctx_len = c.u32()? as usize;
+            let context = c.i32_vec(ctx_len)?;
+            let n_cands = c.u32()? as usize;
+            let gold = c.u32()? as usize;
+            let mut candidates = Vec::with_capacity(n_cands);
+            for _ in 0..n_cands {
+                let len = c.u32()? as usize;
+                candidates.push(c.i32_vec(len)?);
+            }
+            anyhow::ensure!(gold < n_cands.max(1), "gold out of range");
+            items.push(TaskItem { kind, meta, context, candidates, gold });
+        }
+        tasks.push(Task { name, items });
+    }
+    Ok(tasks)
+}
+
+pub fn find<'a>(tasks: &'a [Task], name: &str) -> crate::Result<&'a Task> {
+    tasks
+        .iter()
+        .find(|t| t.name == name)
+        .ok_or_else(|| anyhow::anyhow!("task '{name}' missing"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_synthesized_file() {
+        let dir = std::env::temp_dir().join("cc_tasks_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("tasks.bin");
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(b"CCT1");
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&4u32.to_le_bytes());
+        buf.extend_from_slice(b"mini");
+        buf.extend_from_slice(&1u32.to_le_bytes()); // n_items
+        buf.extend_from_slice(&KIND_MC.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes()); // meta
+        buf.extend_from_slice(&2u32.to_le_bytes()); // ctx_len
+        buf.extend_from_slice(&0i32.to_le_bytes());
+        buf.extend_from_slice(&7i32.to_le_bytes());
+        buf.extend_from_slice(&2u32.to_le_bytes()); // n_cands
+        buf.extend_from_slice(&1u32.to_le_bytes()); // gold
+        for cand in [[8i32, 9], [10i32, 11]] {
+            buf.extend_from_slice(&2u32.to_le_bytes());
+            for t in cand {
+                buf.extend_from_slice(&t.to_le_bytes());
+            }
+        }
+        std::fs::write(&path, &buf).unwrap();
+        let tasks = load(&path).unwrap();
+        assert_eq!(tasks.len(), 1);
+        let it = &tasks[0].items[0];
+        assert_eq!(it.gold, 1);
+        assert_eq!(it.candidates[1], vec![10, 11]);
+        assert!(find(&tasks, "mini").is_ok());
+        assert!(find(&tasks, "nope").is_err());
+    }
+}

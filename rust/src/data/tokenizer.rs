@@ -1,0 +1,124 @@
+//! id <-> string tokenizer, mirroring python/compile/tokenizer.py.
+
+use super::{BOS, DOT, NL, N_SPECIAL, N_TOPICS, PAD};
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    pub vocab: usize,
+    pub tokens_per_topic: usize,
+}
+
+impl Tokenizer {
+    pub fn new(vocab: usize) -> Self {
+        Self {
+            vocab,
+            tokens_per_topic: (vocab - N_SPECIAL as usize) / N_TOPICS,
+        }
+    }
+
+    pub fn is_special(&self, id: i32) -> bool {
+        id < N_SPECIAL
+    }
+
+    pub fn topic_of(&self, id: i32) -> usize {
+        debug_assert!(id >= N_SPECIAL);
+        (id - N_SPECIAL) as usize / self.tokens_per_topic
+    }
+
+    pub fn index_of(&self, id: i32) -> usize {
+        debug_assert!(id >= N_SPECIAL);
+        (id - N_SPECIAL) as usize % self.tokens_per_topic
+    }
+
+    pub fn content_id(&self, topic: usize, index: usize) -> i32 {
+        assert!(topic < N_TOPICS && index < self.tokens_per_topic);
+        N_SPECIAL + (topic * self.tokens_per_topic + index) as i32
+    }
+
+    pub fn id_to_str(&self, id: i32) -> String {
+        match id {
+            x if x == BOS => "<bos>".into(),
+            x if x == NL => "<nl>".into(),
+            x if x == DOT => "<dot>".into(),
+            x if x == PAD => "<pad>".into(),
+            _ => format!("t{:02}w{:03}", self.topic_of(id), self.index_of(id)),
+        }
+    }
+
+    pub fn str_to_id(&self, s: &str) -> crate::Result<i32> {
+        match s {
+            "<bos>" => return Ok(BOS),
+            "<nl>" => return Ok(NL),
+            "<dot>" => return Ok(DOT),
+            "<pad>" => return Ok(PAD),
+            _ => {}
+        }
+        let rest = s
+            .strip_prefix('t')
+            .ok_or_else(|| anyhow::anyhow!("bad token {s:?}"))?;
+        let (topic, index) = rest
+            .split_once('w')
+            .ok_or_else(|| anyhow::anyhow!("bad token {s:?}"))?;
+        Ok(self.content_id(topic.parse()?, index.parse()?))
+    }
+
+    pub fn detokenize(&self, ids: &[i32]) -> String {
+        let mut out = String::new();
+        for &id in ids {
+            if id == BOS || id == PAD {
+                continue;
+            } else if id == DOT {
+                out.push('.');
+            } else if id == NL {
+                out.push('\n');
+            } else {
+                out.push(' ');
+                out.push_str(&self.id_to_str(id));
+            }
+        }
+        out.trim().to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_ids() {
+        let t = Tokenizer::new(512);
+        for id in 0..512i32 {
+            if id >= N_SPECIAL
+                && self_content_in_range(&t, id)
+            {
+                let s = t.id_to_str(id);
+                assert_eq!(t.str_to_id(&s).unwrap(), id, "{s}");
+            }
+        }
+        for id in 0..N_SPECIAL {
+            let s = t.id_to_str(id);
+            assert_eq!(t.str_to_id(&s).unwrap(), id);
+        }
+    }
+
+    fn self_content_in_range(t: &Tokenizer, id: i32) -> bool {
+        // ids beyond the last full topic block are unused by the grammar
+        ((id - N_SPECIAL) as usize) < N_TOPICS * t.tokens_per_topic
+    }
+
+    #[test]
+    fn detok_renders_structure() {
+        let t = Tokenizer::new(512);
+        let s = t.detokenize(&[BOS, 4, 5, DOT, NL, 6]);
+        assert!(s.contains('.'));
+        assert!(s.contains('\n'));
+        assert!(!s.contains("<bos>"));
+    }
+
+    #[test]
+    fn bad_strings_rejected() {
+        let t = Tokenizer::new(512);
+        assert!(t.str_to_id("xyz").is_err());
+        assert!(t.str_to_id("t99").is_err());
+    }
+}

@@ -1,0 +1,125 @@
+//! Activation statistics for the analysis section: Table 5 (order
+//! statistics of activation magnitudes), Figure 1 (position heatmap),
+//! Figure 2 (per-layer top-k), Figure 3 (attention maps).
+
+use crate::model::session::Session;
+use crate::util::stats;
+use crate::util::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct ActReport {
+    /// [L+1][3]: mean over batches of (top-1, top-10%, median) magnitude
+    /// of each block input (entry L = final block output).
+    pub per_level: Vec<[f64; 3]>,
+    /// [L+1][S]: per-position channel-absmax, averaged over sequences
+    /// (Figure 1's heatmap rows).
+    pub heatmap: Vec<Vec<f64>>,
+    /// Attention maps of the first sample, [L][H][Sq][Skv] flattened into
+    /// tensors (Figure 3).
+    pub probs: Tensor,
+}
+
+/// Run the stats graph over `n_batches` heldout batches and aggregate.
+pub fn collect(session: &Session, n_batches: usize) -> crate::Result<ActReport> {
+    let m = &session.manifest;
+    let split = session.corpus.split("heldout")?;
+    let bsz = m.eval_batch;
+    let n_batches = (split.n_seqs / bsz).min(n_batches).max(1);
+
+    let levels = m.n_layers + 1;
+    let mut acc: Vec<Vec<f64>> = vec![Vec::new(); levels * 3];
+    let mut heat = vec![vec![0.0f64; m.seq_len]; levels];
+    let mut probs: Option<Tensor> = None;
+
+    for bi in 0..n_batches {
+        let mut tokens = Vec::with_capacity(bsz * m.seq_len);
+        for s in 0..bsz {
+            tokens.extend_from_slice(split.seq(bi * bsz + s));
+        }
+        let out = session.stats(&tokens)?;
+        // act_stats: [L+1, 3]
+        for l in 0..levels {
+            for k in 0..3 {
+                acc[l * 3 + k].push(out.act_stats.at2(l, k) as f64);
+            }
+        }
+        // acts_grid: [L+1, B, S] -> mean over B accumulated over batches
+        let grid = &out.acts_grid;
+        for l in 0..levels {
+            for s in 0..m.seq_len {
+                let mut v = 0.0f64;
+                for b in 0..bsz {
+                    v += grid.data[(l * bsz + b) * m.seq_len + s] as f64;
+                }
+                heat[l][s] += v / (bsz * n_batches) as f64;
+            }
+        }
+        if probs.is_none() {
+            probs = Some(out.probs);
+        }
+        let _ = bi;
+    }
+
+    let per_level = (0..levels)
+        .map(|l| {
+            [
+                stats::mean(&acc[l * 3]),
+                stats::mean(&acc[l * 3 + 1]),
+                stats::mean(&acc[l * 3 + 2]),
+            ]
+        })
+        .collect();
+    Ok(ActReport { per_level, heatmap: heat, probs: probs.unwrap() })
+}
+
+impl ActReport {
+    /// Table 5's row: stats of the input to the LAST transformer block.
+    pub fn last_block(&self) -> [f64; 3] {
+        self.per_level[self.per_level.len() - 2]
+    }
+
+    /// Fraction of attention mass landing on the prefix region for one
+    /// layer (Figure 3 / §6.2's "attention redirected onto CushionCache").
+    pub fn prefix_attention_mass(&self, layer: usize, m_max: usize) -> f64 {
+        let shape = &self.probs.shape; // [L, H, Sq, Skv]
+        let (h, sq, skv) = (shape[1], shape[2], shape[3]);
+        let mut on_prefix = 0.0f64;
+        let mut total = 0.0f64;
+        for hi in 0..h {
+            for qi in 0..sq {
+                for ki in 0..skv {
+                    let p = self.probs.data
+                        [((layer * h + hi) * sq + qi) * skv + ki] as f64;
+                    total += p;
+                    if ki < m_max {
+                        on_prefix += p;
+                    }
+                }
+            }
+        }
+        if total == 0.0 {
+            0.0
+        } else {
+            on_prefix / total
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_mass_counts_prefix_keys() {
+        let probs = Tensor::new(
+            vec![1, 1, 2, 4],
+            vec![
+                0.5, 0.5, 0.0, 0.0, // q0: all mass on first two keys
+                0.0, 0.0, 1.0, 0.0, // q1: all mass past the prefix
+            ],
+        );
+        let r = ActReport { per_level: vec![], heatmap: vec![], probs };
+        let mass = r.prefix_attention_mass(0, 2);
+        assert!((mass - 0.5).abs() < 1e-9);
+    }
+}

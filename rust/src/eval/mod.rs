@@ -1,0 +1,6 @@
+//! Evaluation harness: perplexity, zero-shot / mmlu / gsm task scoring,
+//! and activation statistics for the figures.
+
+pub mod actstats;
+pub mod perplexity;
+pub mod tasks;

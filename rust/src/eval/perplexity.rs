@@ -1,0 +1,97 @@
+//! Perplexity evaluation (Table 1 metric) over a corpus split.
+
+use crate::model::session::Session;
+use crate::quant::scheme::Scheme;
+
+/// Mean per-token NLL -> perplexity on the given split, under the
+//  session's current weights / ranges / smoothing / cushion.
+pub fn perplexity(session: &Session, scheme: &Scheme, split_name: &str,
+                  max_batches: usize) -> crate::Result<f64> {
+    let m = &session.manifest;
+    let split = session.corpus.split(split_name)?;
+    let bsz = m.eval_batch;
+    let n_batches = (split.n_seqs / bsz).min(max_batches).max(1);
+    let mut nll_sum = 0.0f64;
+    let mut count = 0usize;
+    for bi in 0..n_batches {
+        let mut tokens = Vec::with_capacity(bsz * m.seq_len);
+        for s in 0..bsz {
+            tokens.extend_from_slice(split.seq(bi * bsz + s));
+        }
+        let out = session.fwd(scheme, &tokens)?;
+        let (nll, n) = batch_nll(&out.data, &tokens, bsz, m.seq_len, m.vocab);
+        nll_sum += nll;
+        count += n;
+    }
+    Ok((nll_sum / count as f64).exp())
+}
+
+/// Sum of next-token NLLs + target count for one batch. logits row-major
+/// [B, S, V]; targets are tokens shifted by one.
+pub fn batch_nll(logits: &[f32], tokens: &[i32], b: usize, s: usize,
+                 v: usize) -> (f64, usize) {
+    let mut sum = 0.0f64;
+    let mut count = 0usize;
+    for bi in 0..b {
+        for si in 0..s - 1 {
+            let row = &logits[(bi * s + si) * v..(bi * s + si + 1) * v];
+            let tgt = tokens[bi * s + si + 1] as usize;
+            sum += -log_softmax_at(row, tgt);
+            count += 1;
+        }
+    }
+    (sum, count)
+}
+
+/// log softmax(row)[idx], numerically stable.
+pub fn log_softmax_at(row: &[f32], idx: usize) -> f64 {
+    let mx = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x)) as f64;
+    let lse: f64 = row.iter().map(|&x| ((x as f64) - mx).exp()).sum::<f64>().ln() + mx;
+    row[idx] as f64 - lse
+}
+
+/// Argmax of a logit row.
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = (0usize, f32::NEG_INFINITY);
+    for (i, &x) in row.iter().enumerate() {
+        if x > best.1 {
+            best = (i, x);
+        }
+    }
+    best.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_uniform() {
+        let row = vec![0.0f32; 4];
+        assert!((log_softmax_at(&row, 2) - (-(4f64).ln())).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log_softmax_stable_large() {
+        let row = vec![1000.0f32, 0.0];
+        assert!(log_softmax_at(&row, 0).abs() < 1e-6);
+        assert!(log_softmax_at(&row, 1) < -900.0);
+    }
+
+    #[test]
+    fn nll_of_perfect_prediction_is_small() {
+        // B=1, S=3, V=2; logits strongly favor the actual next token
+        let tokens = vec![0, 1, 0];
+        let mut logits = vec![0.0f32; 3 * 2];
+        logits[0 * 2 + 1] = 20.0; // pos0 predicts token 1
+        logits[1 * 2 + 0] = 20.0; // pos1 predicts token 0
+        let (nll, n) = batch_nll(&logits, &tokens, 1, 3, 2);
+        assert_eq!(n, 2);
+        assert!(nll < 1e-6);
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0]), 1);
+    }
+}

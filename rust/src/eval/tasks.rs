@@ -1,0 +1,254 @@
+//! Zero-shot / MMLU / GSM task evaluation (Tables 2, 7, 9).
+//!
+//! Multiple-choice items are scored by length-normalized candidate
+//! log-likelihood (the LM-eval-harness convention); argmax items by exact
+//! next-token argmax; generative items by greedy continuation + exact
+//! match of the answer token.
+
+use std::collections::BTreeMap;
+
+use crate::data::tasks::{Task, TaskItem, KIND_ARGMAX, KIND_GEN, KIND_MC};
+use crate::data::{DOT, PAD};
+use crate::model::session::Session;
+use crate::quant::scheme::Scheme;
+
+use super::perplexity::{argmax, log_softmax_at};
+
+#[derive(Clone, Debug)]
+pub struct TaskScore {
+    pub name: String,
+    pub accuracy: f64,
+    pub n_items: usize,
+    /// For mmlu-syn: per-subject accuracy.
+    pub per_meta: BTreeMap<u32, f64>,
+}
+
+/// Evaluate one task. `max_items` bounds wall-clock for the quick paths.
+pub fn eval_task(session: &Session, scheme: &Scheme, task: &Task,
+                 max_items: usize) -> crate::Result<TaskScore> {
+    let items = &task.items[..task.items.len().min(max_items)];
+    let mut correct = 0usize;
+    let mut meta_hits: BTreeMap<u32, (usize, usize)> = BTreeMap::new();
+
+    // batched row evaluation: collect (row tokens, judge closure feed)
+    let mut rows: Vec<Vec<i32>> = Vec::new();
+    let mut row_meta: Vec<(usize, usize, usize)> = Vec::new(); // item, cand, ctx_len
+    for (ii, item) in items.iter().enumerate() {
+        match item.kind {
+            KIND_MC => {
+                for (ci, cand) in item.candidates.iter().enumerate() {
+                    let mut row = item.context.clone();
+                    row.extend_from_slice(cand);
+                    row_meta.push((ii, ci, item.context.len()));
+                    rows.push(row);
+                }
+            }
+            KIND_ARGMAX => {
+                row_meta.push((ii, 0, item.context.len()));
+                rows.push(item.context.clone());
+            }
+            KIND_GEN => {} // handled separately below
+            k => anyhow::bail!("unknown task kind {k}"),
+        }
+    }
+
+    let scores = score_rows(session, scheme, &rows, &row_meta, items)?;
+
+    // aggregate per item
+    let mut best: BTreeMap<usize, (usize, f64)> = BTreeMap::new();
+    for ((ii, ci, _), sc) in row_meta.iter().zip(&scores) {
+        let e = best.entry(*ii).or_insert((usize::MAX, f64::NEG_INFINITY));
+        if *sc > e.1 {
+            *e = (*ci, *sc);
+        }
+    }
+    for (ii, item) in items.iter().enumerate() {
+        let ok = match item.kind {
+            KIND_MC => best.get(&ii).map(|b| b.0) == Some(item.gold),
+            // ARGMAX rows score +inf on a hit, -inf on a miss
+            KIND_ARGMAX => best.get(&ii).map(|b| b.1 == f64::INFINITY)
+                .unwrap_or(false),
+            KIND_GEN => eval_gen(session, scheme, item)?,
+            _ => false,
+        };
+        if ok {
+            correct += 1;
+        }
+        let e = meta_hits.entry(item.meta).or_insert((0, 0));
+        e.1 += 1;
+        if ok {
+            e.0 += 1;
+        }
+    }
+
+    Ok(TaskScore {
+        name: task.name.clone(),
+        accuracy: correct as f64 / items.len().max(1) as f64,
+        n_items: items.len(),
+        per_meta: meta_hits
+            .into_iter()
+            .map(|(k, (c, n))| (k, c as f64 / n.max(1) as f64))
+            .collect(),
+    })
+}
+
+/// Batched scoring of packed rows through the eval fwd graph.
+/// MC rows return mean candidate log-likelihood; ARGMAX rows return a
+/// sentinel score encoding whether the argmax hit gold.
+fn score_rows(session: &Session, scheme: &Scheme, rows: &[Vec<i32>],
+              row_meta: &[(usize, usize, usize)], items: &[TaskItem])
+              -> crate::Result<Vec<f64>> {
+    let m = &session.manifest;
+    let (b, s, v) = (m.eval_batch, m.seq_len, m.vocab);
+    let mut out = vec![f64::NEG_INFINITY; rows.len()];
+    for (chunk_idx, chunk) in rows.chunks(b).enumerate() {
+        let mut tokens = Vec::with_capacity(b * s);
+        for row in chunk {
+            anyhow::ensure!(row.len() <= s, "task row longer than seq_len");
+            let mut padded = row.clone();
+            padded.resize(s, PAD);
+            tokens.extend_from_slice(&padded);
+        }
+        for _ in chunk.len()..b {
+            tokens.extend(std::iter::repeat(PAD).take(s));
+        }
+        let fwd = session.fwd(scheme, &tokens)?;
+        for (ri, row) in chunk.iter().enumerate() {
+            let gi = chunk_idx * b + ri;
+            let (ii, _ci, ctx_len) = row_meta[gi];
+            let item = &items[ii];
+            let logits = |pos: usize| -> &[f32] {
+                &fwd.data[(ri * s + pos) * v..(ri * s + pos + 1) * v]
+            };
+            out[gi] = match item.kind {
+                KIND_ARGMAX => {
+                    // predict the token after the context; +inf/-inf
+                    // sentinel consumed by the aggregation in eval_task
+                    let gold = item.candidates[0][0] as usize;
+                    if argmax(logits(ctx_len - 1)) == gold {
+                        f64::INFINITY
+                    } else {
+                        f64::NEG_INFINITY
+                    }
+                }
+                _ => {
+                    // mean LL of candidate tokens (positions ctx..row_len)
+                    let mut ll = 0.0f64;
+                    let mut n = 0usize;
+                    for pos in ctx_len..row.len() {
+                        ll += log_softmax_at(logits(pos - 1), row[pos] as usize);
+                        n += 1;
+                    }
+                    ll / n.max(1) as f64
+                }
+            };
+        }
+    }
+    Ok(out)
+}
+
+/// Greedy generation for gsm-syn: continue the context until <dot> (or 8
+/// steps) and exact-match the token right before it against gold.
+fn eval_gen(session: &Session, scheme: &Scheme, item: &TaskItem)
+            -> crate::Result<bool> {
+    let m = &session.manifest;
+    let (b, s, v) = (m.eval_batch, m.seq_len, m.vocab);
+    let gold = item.candidates[0][0];
+    let mut row = item.context.clone();
+    for _step in 0..8 {
+        if row.len() >= s {
+            return Ok(false);
+        }
+        let mut tokens = row.clone();
+        tokens.resize(s, PAD);
+        let mut batch = tokens;
+        batch.resize(b * s, PAD);
+        let fwd = session.fwd(scheme, &batch)?;
+        let pos = row.len() - 1;
+        let next = argmax(&fwd.data[pos * v..(pos + 1) * v]) as i32;
+        if next == DOT {
+            return Ok(row.last() == Some(&gold));
+        }
+        row.push(next);
+    }
+    Ok(false)
+}
+
+/// Generative task evaluation through the *serving* path (prefill +
+/// decode over the slot cache) — required for KV-cache quantization
+/// (KIVI, Table 9), which only exists in the serving graphs.
+pub fn eval_gen_serving(engine: &mut crate::coordinator::Engine, task: &Task,
+                        max_items: usize) -> crate::Result<TaskScore> {
+    let items: Vec<&TaskItem> = task
+        .items
+        .iter()
+        .filter(|i| i.kind == KIND_GEN)
+        .take(max_items)
+        .collect();
+    let mut correct = 0usize;
+    for item in &items {
+        engine.reset_cache();
+        let slot = engine
+            .kv
+            .alloc(1, item.context.len())
+            .ok_or_else(|| anyhow::anyhow!("context does not fit cache"))?;
+        let gold = item.candidates[0][0];
+        let mut last = engine.prefill(slot, &item.context)?;
+        let mut prev = *item.context.last().unwrap();
+        let mut ok = false;
+        for _ in 0..8 {
+            if last == DOT {
+                ok = prev == gold;
+                break;
+            }
+            if engine.kv.remaining(slot) == 0 {
+                break;
+            }
+            let mut toks = vec![PAD; engine.session.manifest.serve_batch];
+            toks[slot] = last;
+            let next = engine.decode_step(&toks)?[slot];
+            engine.kv.push_token(slot); // `last` is now cached
+            prev = last;
+            last = next;
+        }
+        if ok {
+            correct += 1;
+        }
+    }
+    Ok(TaskScore {
+        name: task.name.clone(),
+        accuracy: correct as f64 / items.len().max(1) as f64,
+        n_items: items.len(),
+        per_meta: BTreeMap::new(),
+    })
+}
+
+/// Average accuracy over the seven zero-shot tasks (Table 2's metric).
+pub fn zero_shot_average(scores: &[TaskScore]) -> f64 {
+    let zs: Vec<&TaskScore> = scores
+        .iter()
+        .filter(|s| crate::data::tasks::ZERO_SHOT.contains(&s.name.as_str()))
+        .collect();
+    if zs.is_empty() {
+        return 0.0;
+    }
+    zs.iter().map(|s| s.accuracy).sum::<f64>() / zs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_shot_average_filters() {
+        let mk = |name: &str, acc: f64| TaskScore {
+            name: name.into(),
+            accuracy: acc,
+            n_items: 1,
+            per_meta: Default::default(),
+        };
+        let scores = vec![mk("lambada-syn", 1.0), mk("copa-syn", 0.0),
+                          mk("gsm-syn", 0.123)];
+        assert!((zero_shot_average(&scores) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,28 @@
+//! CushionCache: prefixing attention sinks to mitigate activation outliers
+//! for LLM quantization (Son et al., EMNLP 2024) — full-system reproduction.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * L1/L2 (python, build-time only): Pallas kernels + JAX model variants,
+//!   AOT-lowered to HLO text under `artifacts/`.
+//! * L3 (this crate): the runtime — PJRT execution, quantization
+//!   calibration and weight-side transforms, the CushionCache greedy
+//!   search + prefix tuning drivers, the serving coordinator, the eval
+//!   harness, and the benchmark suite regenerating every table/figure of
+//!   the paper.
+//!
+//! Entry points: the `cushiond` binary (`rust/src/main.rs`), the runnable
+//! `examples/`, and the `benches/` (one per paper table/figure).
+
+pub mod bench;
+pub mod coordinator;
+pub mod cushion;
+pub mod data;
+pub mod eval;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod testkit;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,253 @@
+//! `cushiond` — the CushionCache CLI: calibration, greedy prefix search,
+//! quantization-aware prefix tuning, evaluation, and serving.
+//!
+//! Quickstart (after `make artifacts`):
+//!   cushiond list
+//!   cushiond pipeline --variant tl-llama --stride 4
+//!   cushiond eval --variant tl-llama --gran pts --cushion default
+//!   cushiond serve --variant tl-llama --gran pts --cushion default
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use cushioncache::coordinator::server::Server;
+use cushioncache::coordinator::{Engine, Scheduler};
+use cushioncache::cushion::{self, SearchCfg, TuneCfg};
+use cushioncache::eval::{perplexity, tasks as evtasks};
+use cushioncache::model::session::{Cushion, Session};
+use cushioncache::quant::calibrate;
+use cushioncache::quant::scheme::{Algorithm, Granularity, Scheme, SMOOTH_ALPHA};
+use cushioncache::util::cli::Cli;
+use cushioncache::util::logging;
+
+fn main() {
+    logging::init();
+    if let Err(e) = run() {
+        eprintln!("{e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn gran_of(s: &str) -> anyhow::Result<Granularity> {
+    Ok(match s {
+        "fp" => Granularity::Fp,
+        "pts" => Granularity::PerTensorStatic,
+        "ptd" => Granularity::PerTensorDynamic,
+        "ptk" => Granularity::PerTokenDynamic,
+        _ => anyhow::bail!("unknown granularity '{s}' (fp|pts|ptd|ptk)"),
+    })
+}
+
+fn run() -> anyhow::Result<()> {
+    let cli = Cli::new(
+        "cushiond — CushionCache (EMNLP 2024) coordinator\n\
+         commands: list | calibrate | search | tune | pipeline | eval | serve",
+    )
+    .positional("command", "subcommand")
+    .opt("variant", "tl-llama", "model variant (see `list`)")
+    .opt("gran", "pts", "activation quant granularity: fp|pts|ptd|ptk")
+    .opt("bits", "8", "activation/weight bits")
+    .opt("cushion", "", "cushion name to load ('' = none)")
+    .opt("save", "default", "cushion name to save under")
+    .opt("stride", "1", "search vocab stride (1 = full sweep)")
+    .opt("max-len", "8", "max prefix length")
+    .opt("tau", "0.5", "search early-stop threshold")
+    .opt("epochs", "2", "prefix-tuning epochs")
+    .opt("addr", "127.0.0.1:7199", "serve address")
+    .flag("smooth", "apply SmoothQuant (alpha 0.8)")
+    .flag("no-tune", "pipeline: skip the tuning stage");
+    let args = cli.parse_env()?;
+    let cmd = args
+        .positionals()
+        .first()
+        .map(String::as_str)
+        .unwrap_or("help");
+
+    match cmd {
+        "list" => {
+            for v in cushioncache::model::available_variants() {
+                println!("{v}");
+            }
+            Ok(())
+        }
+        "calibrate" => {
+            let mut s = load_session(&args)?;
+            let scheme = scheme_of(&args)?;
+            let res = calibrate::calibrate_into(&mut s, scheme.act_levels(), 8)?;
+            let (site, width) = res.minmax.widest();
+            println!(
+                "calibrated {} sites over {} batches; widest: {} ({width:.2})",
+                s.manifest.n_sites, res.batches, s.manifest.site_name(site)
+            );
+            Ok(())
+        }
+        "search" => {
+            let mut s = load_session(&args)?;
+            maybe_smooth(&mut s, &args)?;
+            let cfg = SearchCfg {
+                tau: args.get_f64("tau")? as f32,
+                max_len: args.get_usize("max-len")?,
+                vocab_stride: args.get_usize("stride")?,
+                ..Default::default()
+            };
+            let res = cushion::greedy_search(&s, &cfg)?;
+            println!(
+                "prefix {:?} (lq {:?}, {} candidates, {:.1}s)",
+                res.prefix, res.lq_trace, res.candidates_scored, res.seconds
+            );
+            let kv = s.compute_prefix_kv(&res.prefix)?;
+            let c = Cushion { len: res.prefix.len(), tokens: res.prefix, kv };
+            let path = cushion::save_cushion(&s.manifest.variant, args.get("save"), &c)?;
+            println!("saved {}", path.display());
+            Ok(())
+        }
+        "tune" => {
+            let mut s = load_session(&args)?;
+            maybe_smooth(&mut s, &args)?;
+            let base = cushion::load_cushion(&s.manifest.variant, args.get("save"))?;
+            let cfg = TuneCfg {
+                epochs: args.get_usize("epochs")?,
+                ..Default::default()
+            };
+            let res = cushion::tune::tune_prefix(&s, &base.tokens, &cfg)?;
+            let c = Cushion { tokens: base.tokens, len: base.len, kv: res.kv };
+            let path = cushion::save_cushion(&s.manifest.variant, args.get("save"), &c)?;
+            println!(
+                "tuned {} steps ({:.1}s), loss {:.4} -> {:.4}; saved {}",
+                res.steps,
+                res.seconds,
+                res.loss_trace.first().unwrap_or(&0.0),
+                res.loss_trace.last().unwrap_or(&0.0),
+                path.display()
+            );
+            Ok(())
+        }
+        "pipeline" => {
+            let mut s = load_session(&args)?;
+            maybe_smooth(&mut s, &args)?;
+            let scheme = scheme_of(&args)?;
+            // 1) baseline calibration + eval
+            calibrate::calibrate_into(&mut s, scheme.act_levels(), 8)?;
+            let before = perplexity::perplexity(&s, &scheme, "heldout", 8)?;
+            // 2) greedy search (paper §4.1)
+            let cfg = SearchCfg {
+                vocab_stride: args.get_usize("stride")?,
+                max_len: args.get_usize("max-len")?,
+                ..Default::default()
+            };
+            let res = cushion::greedy_search(&s, &cfg)?;
+            println!("searched prefix: {:?}", res.prefix);
+            // 3) quantization-aware prefix tuning (paper §4.2)
+            let kv = if args.flag("no-tune") {
+                s.compute_prefix_kv(&res.prefix)?
+            } else {
+                cushion::tune::tune_prefix(&s, &res.prefix, &TuneCfg::default())?.kv
+            };
+            s.cushion = Some(Cushion {
+                tokens: res.prefix.clone(),
+                len: res.prefix.len(),
+                kv,
+            });
+            // 4) recalibrate with the cushion in place + final eval
+            calibrate::calibrate_into(&mut s, scheme.act_levels(), 8)?;
+            let after = perplexity::perplexity(&s, &scheme, "heldout", 8)?;
+            println!(
+                "{} {}: ppl {before:.2} -> {after:.2}",
+                s.manifest.variant,
+                scheme.label()
+            );
+            let c = s.cushion.clone().unwrap();
+            let path = cushion::save_cushion(&s.manifest.variant, args.get("save"), &c)?;
+            println!("saved {}", path.display());
+            Ok(())
+        }
+        "eval" => {
+            let mut s = load_session(&args)?;
+            maybe_smooth(&mut s, &args)?;
+            let scheme = scheme_of(&args)?;
+            if scheme.gran.needs_calibration() {
+                calibrate::calibrate_into(&mut s, scheme.act_levels(), 8)?;
+            }
+            let ppl = perplexity::perplexity(&s, &scheme, "heldout", 8)?;
+            println!(
+                "{} {}: heldout ppl {ppl:.3}",
+                s.manifest.variant,
+                scheme.label()
+            );
+            let task_file = cushioncache::util::fsutil::variant_dir(&s.manifest.variant)
+                .join("tasks.bin");
+            let all = cushioncache::data::tasks::load(&task_file)?;
+            let mut scores = Vec::new();
+            for name in cushioncache::data::tasks::ZERO_SHOT {
+                let t = cushioncache::data::tasks::find(&all, name)?;
+                let sc = evtasks::eval_task(&s, &scheme, t, 50)?;
+                println!("  {:16} acc {:.3}", sc.name, sc.accuracy);
+                scores.push(sc);
+            }
+            println!("  zero-shot avg: {:.3}", evtasks::zero_shot_average(&scores));
+            Ok(())
+        }
+        "serve" => {
+            let mut s = load_session(&args)?;
+            maybe_smooth(&mut s, &args)?;
+            let scheme = scheme_of(&args)?;
+            if scheme.gran.needs_calibration() {
+                calibrate::calibrate_into(&mut s, scheme.act_levels(), 8)?;
+            }
+            let engine = Engine::new(s, scheme)?;
+            let sched = Scheduler::new(engine);
+            let server = Server::new(args.get("addr"));
+            server.serve(sched, Arc::new(AtomicBool::new(false)))
+        }
+        other => anyhow::bail!(
+            "unknown command '{other}'\ncommands: list | calibrate | search | \
+             tune | pipeline | eval | serve (--help for options)"
+        ),
+    }
+}
+
+fn load_session(args: &cushioncache::util::cli::Args) -> anyhow::Result<Session> {
+    let mut s = Session::load(args.get("variant"))?;
+    let name = args.get("cushion");
+    if !name.is_empty() {
+        let c = cushion::load_cushion(&s.manifest.variant, name)?;
+        log::info!("loaded cushion '{name}' ({} tokens)", c.len);
+        s.cushion = Some(c);
+    }
+    Ok(s)
+}
+
+fn scheme_of(args: &cushioncache::util::cli::Args) -> anyhow::Result<Scheme> {
+    let gran = gran_of(args.get("gran"))?;
+    let bits = args.get_usize("bits")? as u32;
+    let algorithm = if args.flag("smooth") {
+        Algorithm::SmoothQuant { alpha: SMOOTH_ALPHA }
+    } else {
+        Algorithm::Naive
+    };
+    Ok(if gran == Granularity::Fp {
+        Scheme::fp()
+    } else {
+        Scheme::wnan(bits, gran, algorithm)
+    })
+}
+
+/// Apply SmoothQuant to the session (calibrate -> migrate -> install).
+fn maybe_smooth(s: &mut Session, args: &cushioncache::util::cli::Args) -> anyhow::Result<()> {
+    if !args.flag("smooth") {
+        return Ok(());
+    }
+    let calib = calibrate::calibrate(s, 8)?;
+    let mut w = s.base_weights.clone();
+    let inv = cushioncache::quant::smoothquant::apply(
+        &mut w,
+        &calib,
+        s.manifest.n_layers,
+        s.manifest.d_model,
+        s.manifest.act == "swiglu",
+        SMOOTH_ALPHA,
+    )?;
+    s.set_weights(w);
+    s.inv_smooth = inv;
+    Ok(())
+}

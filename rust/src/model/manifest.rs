@@ -1,0 +1,146 @@
+//! manifest.json: the variant's config, tensor spec, and graph inventory
+//! (written by python/compile/aot.py).
+
+use std::path::Path;
+
+use crate::util::json::{self, Value};
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub variant: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub norm: String,
+    pub act: String,
+    pub pos: String,
+    pub window: usize, // 0 = full attention
+    pub n_sites: usize,
+    pub seq_len: usize,
+    pub m_max: usize,
+    pub cache_cap: usize,
+    pub serve_batch: usize,
+    pub eval_batch: usize,
+    pub score_batch: usize,
+    pub score_text_len: usize,
+    pub tune_batch: usize,
+    pub params: Vec<ParamSpec>,
+    pub graphs: Vec<String>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> crate::Result<Self> {
+        let v = json::parse(text)?;
+        let params = v
+            .req("params")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("params not an array"))?
+            .iter()
+            .map(|p| -> crate::Result<ParamSpec> {
+                Ok(ParamSpec {
+                    name: p.req_str("name")?.to_string(),
+                    shape: p
+                        .req("shape")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(Value::as_usize)
+                        .collect(),
+                })
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        let graphs = v
+            .req("graphs")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|g| g.as_str().map(str::to_string))
+            .collect();
+        Ok(Self {
+            variant: v.req_str("variant")?.to_string(),
+            vocab: v.req_usize("vocab")?,
+            d_model: v.req_usize("d_model")?,
+            n_layers: v.req_usize("n_layers")?,
+            n_heads: v.req_usize("n_heads")?,
+            n_kv_heads: v.req_usize("n_kv_heads")?,
+            d_head: v.req_usize("d_head")?,
+            d_ff: v.req_usize("d_ff")?,
+            norm: v.req_str("norm")?.to_string(),
+            act: v.req_str("act")?.to_string(),
+            pos: v.req_str("pos")?.to_string(),
+            window: v.req_usize("window")?,
+            n_sites: v.req_usize("n_sites")?,
+            seq_len: v.req_usize("seq_len")?,
+            m_max: v.req_usize("m_max")?,
+            cache_cap: v.req_usize("cache_cap")?,
+            serve_batch: v.req_usize("serve_batch")?,
+            eval_batch: v.req_usize("eval_batch")?,
+            score_batch: v.req_usize("score_batch")?,
+            score_text_len: v.req_usize("score_text_len")?,
+            tune_batch: v.req_usize("tune_batch")?,
+            params,
+            graphs,
+        })
+    }
+
+    pub fn load_variant(variant: &str) -> crate::Result<Self> {
+        Self::load(&crate::util::fsutil::variant_dir(variant).join("manifest.json"))
+    }
+
+    /// Sites are (layer, kind) with kinds attn_in/attn_out/mlp_in/mlp_hidden.
+    pub fn site_name(&self, idx: usize) -> String {
+        const KINDS: [&str; 4] = ["attn_in", "attn_out", "mlp_in", "mlp_hidden"];
+        format!("layer{}.{}", idx / 4, KINDS[idx % 4])
+    }
+
+    pub fn is_pre_norm(&self) -> bool {
+        self.norm == "rmsnorm_pre"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "variant": "tl-x", "vocab": 512, "d_model": 256, "n_layers": 4,
+      "n_heads": 4, "n_kv_heads": 2, "d_head": 64, "d_ff": 688,
+      "norm": "rmsnorm_pre", "act": "swiglu", "pos": "rope", "window": 0,
+      "n_sites": 16, "seq_len": 128, "m_max": 16, "cache_cap": 144,
+      "serve_batch": 8, "eval_batch": 8, "score_batch": 64,
+      "score_text_len": 96, "tune_batch": 8,
+      "params": [{"name": "embed", "shape": [512, 256]}],
+      "graphs": ["fwd_fp", "decode_pts"]
+    }"#;
+
+    #[test]
+    fn parses() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.variant, "tl-x");
+        assert_eq!(m.params[0].shape, vec![512, 256]);
+        assert!(m.is_pre_norm());
+        assert_eq!(m.site_name(5), "layer1.attn_out");
+        assert_eq!(m.graphs.len(), 2);
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        assert!(Manifest::parse("{}").is_err());
+    }
+}

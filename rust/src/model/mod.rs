@@ -1,0 +1,26 @@
+//! Model metadata + weight bundle handling.
+
+pub mod manifest;
+pub mod session;
+pub mod weights;
+
+pub use manifest::Manifest;
+pub use session::{Cushion, Session, StatsOut};
+pub use weights::Weights;
+
+/// List the variants present under the artifacts directory.
+pub fn available_variants() -> Vec<String> {
+    let dir = crate::util::fsutil::artifacts_dir();
+    let mut out = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(&dir) {
+        for e in rd.flatten() {
+            if e.path().join("manifest.json").exists() {
+                if let Some(n) = e.file_name().to_str() {
+                    out.push(n.to_string());
+                }
+            }
+        }
+    }
+    out.sort();
+    out
+}

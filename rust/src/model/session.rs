@@ -1,0 +1,254 @@
+//! Session: one loaded variant — manifest + (possibly transformed) weight
+//! bundle + compiled graphs + quantization state + CushionCache.
+//!
+//! This is the substrate shared by calibration (quant::calibrate), the
+//! CushionCache drivers (cushion::search / cushion::tune), the evaluation
+//! harness (eval::*), and the serving engine (coordinator::engine).
+//!
+//! Weights are uploaded to the device once and reused across calls;
+//! `set_weights` (after a SmoothQuant/AWQ/QuaRot/weight-qdq transform)
+//! invalidates the cached device buffers.
+
+use std::sync::Mutex;
+
+use crate::data::corpus::Corpus;
+use crate::quant::scales;
+use crate::quant::scheme::Scheme;
+use crate::runtime::literalx::{self, HostValue, IntTensor};
+use crate::runtime::{Client, Registry};
+use crate::util::fsutil;
+use crate::util::tensor::Tensor;
+
+use super::manifest::Manifest;
+use super::weights::Weights;
+
+/// A discovered CushionCache: the searched prefix tokens and their
+/// per-layer KV (possibly further tuned), [L, 2, Hkv, M_MAX, dh].
+#[derive(Clone, Debug)]
+pub struct Cushion {
+    pub tokens: Vec<i32>,
+    pub len: usize,
+    pub kv: Tensor,
+}
+
+pub struct Session {
+    pub manifest: Manifest,
+    pub base_weights: Weights,
+    pub weights: Weights,
+    pub registry: Registry,
+    pub corpus: Corpus,
+    /// Static-range calibration result, [n_sites, 2] (lo, scale).
+    pub ranges: Tensor,
+    /// SmoothQuant inverse migration scales, [L, 2, d] (ones = off).
+    pub inv_smooth: Tensor,
+    pub cushion: Option<Cushion>,
+    weight_bufs: Mutex<Option<Vec<xla::PjRtBuffer>>>,
+}
+
+pub struct StatsOut {
+    pub minmax: Tensor,     // [n_sites, 2]
+    pub chan_d: Tensor,     // [3L, d]   per-channel absmax (attn_in/out, mlp_in)
+    pub chan_f: Tensor,     // [L, d_ff] per-channel absmax (mlp_hidden)
+    pub acts_grid: Tensor,  // [L+1, B, S] channel-absmax of block inputs
+    pub act_stats: Tensor,  // [L+1, 3] top-1 / p90 / median magnitude
+    pub probs: Tensor,      // [L, Hq, S, M+S] attention maps (batch 0)
+}
+
+impl Session {
+    pub fn load(variant: &str) -> crate::Result<Self> {
+        let client = Client::cpu()?;
+        Self::load_with_client(variant, client)
+    }
+
+    pub fn load_with_client(variant: &str, client: Client) -> crate::Result<Self> {
+        let dir = fsutil::variant_dir(variant);
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let weights = Weights::load(&dir.join("weights.bin"), &manifest)?;
+        let corpus = Corpus::load(&dir.join("corpus.bin"))?;
+        let registry = Registry::new(client, dir);
+        let n_sites = manifest.n_sites;
+        let l = manifest.n_layers;
+        let d = manifest.d_model;
+        Ok(Self {
+            base_weights: weights.clone(),
+            weights,
+            manifest,
+            registry,
+            corpus,
+            ranges: scales::unit_ranges(n_sites),
+            inv_smooth: Tensor::full(&[l, 2, d], 1.0),
+            cushion: None,
+            weight_bufs: Mutex::new(None),
+        })
+    }
+
+    // -- weight management ------------------------------------------------
+
+    pub fn set_weights(&mut self, w: Weights) {
+        self.weights = w;
+        *self.weight_bufs.lock().unwrap() = None;
+    }
+
+    pub fn reset_weights(&mut self) {
+        let base = self.base_weights.clone();
+        self.set_weights(base);
+    }
+
+    fn ensure_weight_bufs(&self) -> crate::Result<()> {
+        let mut guard = self.weight_bufs.lock().unwrap();
+        if guard.is_none() {
+            let client = self.registry.client();
+            let bufs = self
+                .weights
+                .tensors
+                .iter()
+                .map(|t| client.upload(t))
+                .collect::<crate::Result<Vec<_>>>()?;
+            *guard = Some(bufs);
+        }
+        Ok(())
+    }
+
+    /// Execute graph `name` with the resident weights + these extra args.
+    /// Returns all outputs as host f32 tensors (XLA's root tuple is
+    /// decomposed transparently — see literalx::fetch_all_f32).
+    pub fn run(&self, name: &str, extra: &[HostValue]) -> crate::Result<Vec<Tensor>> {
+        self.ensure_weight_bufs()?;
+        let exe = self.registry.get(name)?;
+        let extra_bufs: Vec<xla::PjRtBuffer> = extra
+            .iter()
+            .map(|a| exe.upload(a))
+            .collect::<crate::Result<_>>()?;
+        let guard = self.weight_bufs.lock().unwrap();
+        let weights = guard.as_ref().unwrap();
+        let mut refs: Vec<&xla::PjRtBuffer> = weights.iter().collect();
+        refs.extend(extra_bufs.iter());
+        let outs = exe.run_buffers(&refs)?;
+        drop(guard);
+        literalx::fetch_all_f32(&outs)
+    }
+
+    // -- prefix helpers ---------------------------------------------------
+
+    pub fn m_max(&self) -> usize {
+        self.manifest.m_max
+    }
+
+    /// (prefix_kv, prefix_len) inputs reflecting the current cushion.
+    pub fn prefix_args(&self) -> (Tensor, i32) {
+        match &self.cushion {
+            Some(c) => (c.kv.clone(), c.len as i32),
+            None => (self.empty_prefix(), 0),
+        }
+    }
+
+    pub fn empty_prefix(&self) -> Tensor {
+        let m = &self.manifest;
+        Tensor::zeros(&[m.n_layers, 2, m.n_kv_heads, m.m_max, m.d_head])
+    }
+
+    /// Compute the prefix KV for a token sequence via the prefix_kv graph.
+    pub fn compute_prefix_kv(&self, tokens: &[i32]) -> crate::Result<Tensor> {
+        let m = self.m_max();
+        anyhow::ensure!(tokens.len() <= m, "prefix too long");
+        let mut padded = tokens.to_vec();
+        padded.resize(m, crate::data::PAD);
+        let out = self.run(
+            "prefix_kv",
+            &[
+                HostValue::I32(IntTensor::vec(padded)),
+                HostValue::scalar_i32(tokens.len() as i32),
+            ],
+        )?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Install a cushion from prefix tokens (computes its KV).
+    pub fn set_cushion_tokens(&mut self, tokens: &[i32]) -> crate::Result<()> {
+        let kv = self.compute_prefix_kv(tokens)?;
+        self.cushion = Some(Cushion { tokens: tokens.to_vec(), len: tokens.len(), kv });
+        Ok(())
+    }
+
+    pub fn clear_cushion(&mut self) {
+        self.cushion = None;
+    }
+
+    // -- eval forwards ----------------------------------------------------
+
+    /// Quantized eval forward over one token batch [B, S] (B = eval_batch).
+    /// Returns the logits [B, S, V] (the fwd graphs are the throughput
+    /// path and emit nothing else — stats live in the stats graph).
+    pub fn fwd(&self, scheme: &Scheme, tokens: &[i32]) -> crate::Result<Tensor> {
+        let m = &self.manifest;
+        let b = m.eval_batch;
+        anyhow::ensure!(tokens.len() == b * m.seq_len, "bad token batch size");
+        let (pkv, plen) = self.prefix_args();
+        let name = format!("fwd_{}", scheme.gran.graph_suffix());
+        let mut out = self.run(
+            &name,
+            &[
+                HostValue::F32(pkv),
+                HostValue::scalar_i32(plen),
+                HostValue::I32(IntTensor::new(vec![b, m.seq_len], tokens.to_vec())),
+                HostValue::F32(self.ranges.clone()),
+                HostValue::scalar_f32(scheme.act_levels()),
+                HostValue::F32(self.inv_smooth.clone()),
+            ],
+        )?;
+        anyhow::ensure!(out.len() == 1, "fwd: expected 1 output");
+        Ok(out.pop().unwrap())
+    }
+
+    /// Analysis forward (stats graph) over one token batch.
+    pub fn stats(&self, tokens: &[i32]) -> crate::Result<StatsOut> {
+        let m = &self.manifest;
+        let b = m.eval_batch;
+        let (pkv, plen) = self.prefix_args();
+        let out = self.run(
+            "stats",
+            &[
+                HostValue::F32(pkv),
+                HostValue::scalar_i32(plen),
+                HostValue::I32(IntTensor::new(vec![b, m.seq_len], tokens.to_vec())),
+            ],
+        )?;
+        anyhow::ensure!(out.len() == 6, "stats: expected 6 outputs");
+        let mut it = out.into_iter();
+        Ok(StatsOut {
+            minmax: it.next().unwrap(),
+            chan_d: it.next().unwrap(),
+            chan_f: it.next().unwrap(),
+            acts_grid: it.next().unwrap(),
+            act_stats: it.next().unwrap(),
+            probs: it.next().unwrap(),
+        })
+    }
+
+    /// Greedy-search scorer: L_q for each candidate continuation token.
+    pub fn score_candidates(
+        &self,
+        prefix: &[i32],
+        cands: &[i32],
+        text: &[i32],
+        levels: f32,
+    ) -> crate::Result<Vec<f32>> {
+        let m = &self.manifest;
+        anyhow::ensure!(cands.len() == m.score_batch);
+        anyhow::ensure!(text.len() == m.score_text_len);
+        let mut padded = prefix.to_vec();
+        padded.resize(m.m_max, crate::data::PAD);
+        let out = self.run(
+            "score_lq",
+            &[
+                HostValue::I32(IntTensor::vec(padded)),
+                HostValue::scalar_i32(prefix.len() as i32),
+                HostValue::I32(IntTensor::vec(cands.to_vec())),
+                HostValue::I32(IntTensor::vec(text.to_vec())),
+                HostValue::scalar_f32(levels),
+                HostValue::F32(self.inv_smooth.clone()),
+            ],
+        )?;
+        Ok(out.into_iter().next().unwrap().data)
+    }
+}

@@ -1,0 +1,158 @@
+//! The weight bundle: loads weights.bin, validates it against the
+//! manifest's tensor spec, and serves as the substrate the quantization
+//! transforms rewrite (SmoothQuant scaling, AWQ/weight qdq, QuaRot
+//! rotation) before upload.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::manifest::Manifest;
+use crate::util::fsutil::{self, Cursor};
+use crate::util::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct Weights {
+    /// In param_spec order (the graphs' leading-argument order).
+    pub names: Vec<String>,
+    pub tensors: Vec<Tensor>,
+    index: HashMap<String, usize>,
+}
+
+impl Weights {
+    pub fn load(path: &Path, manifest: &Manifest) -> crate::Result<Self> {
+        let buf = fsutil::read(path)?;
+        let mut c = Cursor::new(&buf);
+        c.magic(b"CCW1")?;
+        let n = c.u32()? as usize;
+        anyhow::ensure!(
+            n == manifest.params.len(),
+            "weights.bin has {n} tensors, manifest expects {}",
+            manifest.params.len()
+        );
+        let mut names = Vec::with_capacity(n);
+        let mut tensors = Vec::with_capacity(n);
+        let mut index = HashMap::new();
+        for spec in &manifest.params {
+            let name = c.string()?;
+            anyhow::ensure!(
+                name == spec.name,
+                "weights.bin order mismatch: got {name}, expected {}",
+                spec.name
+            );
+            let nd = c.u32()? as usize;
+            let mut dims = Vec::with_capacity(nd);
+            for _ in 0..nd {
+                dims.push(c.u32()? as usize);
+            }
+            anyhow::ensure!(dims == spec.shape, "{name}: shape {dims:?} != {:?}",
+                            spec.shape);
+            let data = c.f32_vec(dims.iter().product())?;
+            index.insert(name.clone(), tensors.len());
+            names.push(name);
+            tensors.push(Tensor::new(dims, data));
+        }
+        Ok(Self { names, tensors, index })
+    }
+
+    pub fn load_variant(variant: &str, manifest: &Manifest) -> crate::Result<Self> {
+        Self::load(
+            &crate::util::fsutil::variant_dir(variant).join("weights.bin"),
+            manifest,
+        )
+    }
+
+    pub fn get(&self, name: &str) -> crate::Result<&Tensor> {
+        self.index
+            .get(name)
+            .map(|&i| &self.tensors[i])
+            .ok_or_else(|| anyhow::anyhow!("weight '{name}' missing"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> crate::Result<&mut Tensor> {
+        let i = *self
+            .index
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("weight '{name}' missing"))?;
+        Ok(&mut self.tensors[i])
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.index.contains_key(name)
+    }
+
+    pub fn layer_name(l: usize, base: &str) -> String {
+        format!("layer{l}.{base}")
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(Tensor::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::ParamSpec;
+
+    fn mini_manifest() -> Manifest {
+        let mut m = Manifest::parse(
+            r#"{"variant":"t","vocab":8,"d_model":4,"n_layers":1,"n_heads":1,
+             "n_kv_heads":1,"d_head":4,"d_ff":8,"norm":"rmsnorm_pre",
+             "act":"swiglu","pos":"rope","window":0,"n_sites":4,
+             "seq_len":8,"m_max":2,"cache_cap":10,"serve_batch":2,
+             "eval_batch":2,"score_batch":4,"score_text_len":6,
+             "tune_batch":2,"params":[],"graphs":[]}"#,
+        )
+        .unwrap();
+        m.params = vec![
+            ParamSpec { name: "a".into(), shape: vec![2, 2] },
+            ParamSpec { name: "b".into(), shape: vec![3] },
+        ];
+        m
+    }
+
+    fn write_bundle(path: &std::path::Path) {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(b"CCW1");
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        for (name, dims, data) in [
+            ("a", vec![2u32, 2], vec![1f32, 2., 3., 4.]),
+            ("b", vec![3u32], vec![5f32, 6., 7.]),
+        ] {
+            buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            buf.extend_from_slice(name.as_bytes());
+            buf.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+            for d in &dims {
+                buf.extend_from_slice(&d.to_le_bytes());
+            }
+            for v in &data {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        std::fs::write(path, &buf).unwrap();
+    }
+
+    #[test]
+    fn load_validates_and_indexes() {
+        let dir = std::env::temp_dir().join("cc_weights_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("weights.bin");
+        write_bundle(&path);
+        let w = Weights::load(&path, &mini_manifest()).unwrap();
+        assert_eq!(w.get("a").unwrap().at2(1, 0), 3.0);
+        assert_eq!(w.get("b").unwrap().data, vec![5., 6., 7.]);
+        assert_eq!(w.total_params(), 7);
+        assert!(w.get("zzz").is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("cc_weights_test2");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("weights.bin");
+        write_bundle(&path);
+        let mut m = mini_manifest();
+        m.params[1].shape = vec![4];
+        assert!(Weights::load(&path, &m).is_err());
+    }
+}

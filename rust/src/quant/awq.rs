@@ -1,0 +1,112 @@
+//! AWQ (Lin et al. 2024), simplified: activation-aware weight-only
+//! quantization. Salient input channels (by activation magnitude) are
+//! scaled up before group quantization and the inverse is folded back
+//! into the stored weight, so the activation path is untouched:
+//!     W ~= diag(1/s) . Q(diag(s) . W),   s_j = a_j^alpha (geo-normalized)
+//! The real AWQ grid-searches alpha per layer; we use the fixed
+//! alpha = 0.5 the paper reports as the robust default (simplification
+//! documented in DESIGN.md §1). Mirrors quantlib.awq_scale_weight.
+
+use crate::model::manifest::Manifest;
+use crate::model::weights::Weights;
+
+use super::calibrate::CalibResult;
+use super::scales::quant_weight_inplace;
+
+pub const AWQ_ALPHA: f32 = 0.5;
+pub const AWQ_GROUP: usize = 64;
+
+/// AWQ-quantize one weight matrix in place given its input activations'
+/// per-channel absmax.
+pub fn awq_weight(w: &mut crate::util::tensor::Tensor, act_absmax: &[f32],
+                  bits: u32, group: usize, alpha: f32) {
+    let (k, _) = w.dims2();
+    assert_eq!(k, act_absmax.len());
+    let mut s: Vec<f32> = act_absmax.iter().map(|&a| a.max(1e-5).powf(alpha)).collect();
+    let log_mean = s.iter().map(|v| v.ln()).sum::<f32>() / s.len() as f32;
+    let norm = log_mean.exp();
+    for v in s.iter_mut() {
+        *v /= norm;
+    }
+    w.scale_rows(&s);
+    quant_weight_inplace(w, bits, group);
+    let inv: Vec<f32> = s.iter().map(|v| 1.0 / v).collect();
+    w.scale_rows(&inv);
+}
+
+/// Apply AWQ to every block linear of the bundle (weight-only: the
+/// activation path and graphs are unchanged — combine with the fp or pts
+/// fwd graphs as Table 9 does).
+pub fn apply(weights: &mut Weights, manifest: &Manifest, calib: &CalibResult,
+             bits: u32) -> crate::Result<()> {
+    let has_gate = manifest.act == "swiglu";
+    for l in 0..manifest.n_layers {
+        for base in ["wq", "wk", "wv"] {
+            awq_weight(
+                weights.get_mut(&Weights::layer_name(l, base))?,
+                calib.chan_attn_in(l), bits, AWQ_GROUP, AWQ_ALPHA,
+            );
+        }
+        awq_weight(
+            weights.get_mut(&Weights::layer_name(l, "wo"))?,
+            calib.chan_attn_out(l), bits, AWQ_GROUP, AWQ_ALPHA,
+        );
+        awq_weight(
+            weights.get_mut(&Weights::layer_name(l, "wu"))?,
+            calib.chan_mlp_in(l), bits, AWQ_GROUP, AWQ_ALPHA,
+        );
+        if has_gate {
+            awq_weight(
+                weights.get_mut(&Weights::layer_name(l, "wg"))?,
+                calib.chan_mlp_in(l), bits, AWQ_GROUP, AWQ_ALPHA,
+            );
+        }
+        awq_weight(
+            weights.get_mut(&Weights::layer_name(l, "wd"))?,
+            calib.chan_mlp_hidden(l), bits, AWQ_GROUP, AWQ_ALPHA,
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensor::Tensor;
+
+    #[test]
+    fn awq_protects_salient_channels() {
+        // channel 0 has huge activations -> AWQ should quantize it with
+        // smaller relative error than plain group quant does.
+        let k = 64;
+        let mut w = Tensor::zeros(&[k, 1]);
+        for i in 0..k {
+            w.data[i] = if i == 0 { 0.01 } else { 1.0 - 0.001 * i as f32 };
+        }
+        let mut act = vec![1.0f32; k];
+        act[0] = 1e4;
+
+        let mut plain = w.clone();
+        quant_weight_inplace(&mut plain, 3, 64);
+        let mut awq = w.clone();
+        awq_weight(&mut awq, &act, 3, 64, 0.5);
+
+        let err_plain = (plain.data[0] - w.data[0]).abs();
+        let err_awq = (awq.data[0] - w.data[0]).abs();
+        assert!(err_awq < err_plain,
+                "awq {err_awq} should beat plain {err_plain} on the salient channel");
+    }
+
+    #[test]
+    fn awq_overall_close() {
+        let k = 128;
+        let data: Vec<f32> = (0..k).map(|i| ((i * 37) as f32 * 0.01).sin()).collect();
+        let w = Tensor::new(vec![k, 1], data);
+        let act: Vec<f32> = (0..k).map(|i| 1.0 + (i % 7) as f32).collect();
+        let mut q = w.clone();
+        awq_weight(&mut q, &act, 8, 64, 0.5);
+        for (a, b) in q.data.iter().zip(&w.data) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Static-range calibration (paper §5.1: "for static range quantization,
+//! we calibrate using the training split") — runs the stats graph over the
+//! calibration corpus split, merging per-site (min, max) and per-channel
+//! absolute maxima.
+//!
+//! Calibration respects the session's current cushion: after installing a
+//! CushionCache the ranges must be recomputed, because the whole point is
+//! that the post-cushion activation distribution is different (no massive
+//! sink rows -> tight ranges).
+
+use crate::model::session::Session;
+use crate::util::tensor::Tensor;
+
+use super::scales::MinMax;
+
+#[derive(Clone, Debug)]
+pub struct CalibResult {
+    pub minmax: MinMax,
+    /// [3L, d] per-channel absmax for attn_in / attn_out / mlp_in sites.
+    pub chan_d: Tensor,
+    /// [L, d_ff] per-channel absmax for mlp_hidden sites.
+    pub chan_f: Tensor,
+    pub batches: usize,
+}
+
+impl CalibResult {
+    /// The SmoothQuant activation statistic for layer l:
+    /// index 0 = attn_in, 2 = mlp_in within the layer's chan_d triple.
+    pub fn chan_attn_in(&self, l: usize) -> &[f32] {
+        self.chan_d.row(3 * l)
+    }
+
+    pub fn chan_attn_out(&self, l: usize) -> &[f32] {
+        self.chan_d.row(3 * l + 1)
+    }
+
+    pub fn chan_mlp_in(&self, l: usize) -> &[f32] {
+        self.chan_d.row(3 * l + 2)
+    }
+
+    pub fn chan_mlp_hidden(&self, l: usize) -> &[f32] {
+        self.chan_f.row(l)
+    }
+}
+
+/// Run calibration over up to `max_batches` batches of the calib split.
+pub fn calibrate(session: &Session, max_batches: usize) -> crate::Result<CalibResult> {
+    let m = &session.manifest;
+    let split = session.corpus.split("calib")?;
+    let bsz = m.eval_batch;
+    let n_batches = (split.n_seqs / bsz).min(max_batches).max(1);
+
+    let mut minmax = MinMax::new(m.n_sites);
+    let mut chan_d: Option<Tensor> = None;
+    let mut chan_f: Option<Tensor> = None;
+
+    for bi in 0..n_batches {
+        let mut tokens = Vec::with_capacity(bsz * m.seq_len);
+        for s in 0..bsz {
+            tokens.extend_from_slice(split.seq(bi * bsz + s));
+        }
+        let out = session.stats(&tokens)?;
+        minmax.merge(&out.minmax);
+        chan_d = Some(merge_absmax(chan_d.take(), out.chan_d));
+        chan_f = Some(merge_absmax(chan_f.take(), out.chan_f));
+    }
+    Ok(CalibResult {
+        minmax,
+        chan_d: chan_d.unwrap(),
+        chan_f: chan_f.unwrap(),
+        batches: n_batches,
+    })
+}
+
+/// Calibrate and install static ranges for the given activation levels.
+pub fn calibrate_into(session: &mut Session, levels: f32,
+                      max_batches: usize) -> crate::Result<CalibResult> {
+    let res = calibrate(session, max_batches)?;
+    session.ranges = res.minmax.to_ranges(levels);
+    Ok(res)
+}
+
+fn merge_absmax(acc: Option<Tensor>, cur: Tensor) -> Tensor {
+    match acc {
+        None => cur,
+        Some(mut a) => {
+            assert_eq!(a.shape, cur.shape);
+            for (x, y) in a.data.iter_mut().zip(cur.data) {
+                *x = x.max(y);
+            }
+            a
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_absmax_elementwise() {
+        let a = Tensor::new(vec![2], vec![1.0, 5.0]);
+        let b = Tensor::new(vec![2], vec![3.0, 2.0]);
+        let m = merge_absmax(Some(a), b);
+        assert_eq!(m.data, vec![3.0, 5.0]);
+        let first = merge_absmax(None, Tensor::new(vec![1], vec![9.0]));
+        assert_eq!(first.data, vec![9.0]);
+    }
+}

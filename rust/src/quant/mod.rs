@@ -1,0 +1,16 @@
+//! Quantization: schemes, scale math, static-range calibration, and the
+//! host-side weight transforms (weight qdq, SmoothQuant, AWQ, QuaRot).
+//!
+//! Activation quantization itself happens inside the AOT graphs (the
+//! paper's W8A8 simulation, python/compile/quantlib.py); this module owns
+//! everything computed on the host: calibrated ranges, migration scales
+//! folded into the weight bundle, rotations, and weight fake-quant.
+
+pub mod awq;
+pub mod calibrate;
+pub mod quarot;
+pub mod scales;
+pub mod scheme;
+pub mod smoothquant;
+
+pub use scheme::{Algorithm, Granularity, Scheme};

@@ -1,0 +1,106 @@
+//! QuaRot-lite (Ashkboos et al. 2024): rotate the residual stream by an
+//! orthonormal Hadamard matrix so outlier magnitude is spread across all
+//! channels, folded entirely into the weights (function-preserving):
+//!
+//!   embed' = embed R            lm_head' = Rᵀ diag(γ_f) lm_head
+//!   per layer (pre-RMSNorm only — rmsnorm commutes with rotation once
+//!   the gain is folded into the consuming linear):
+//!     W_in'  = Rᵀ diag(γ) W_in      (wq wk wv | wg wu),  γ := 1
+//!     W_out' = W_out R              (wo | wd)
+//!
+//! "lite": the residual rotation only (no online Hadamard on the
+//! down_proj input, no KV-cache rotation) — documented in DESIGN.md §1.
+
+use crate::model::manifest::Manifest;
+use crate::model::weights::Weights;
+use crate::util::tensor::hadamard;
+
+pub fn applicable(manifest: &Manifest) -> bool {
+    manifest.is_pre_norm() && manifest.d_model.is_power_of_two()
+}
+
+pub fn apply(weights: &mut Weights, manifest: &Manifest) -> crate::Result<()> {
+    anyhow::ensure!(
+        applicable(manifest),
+        "QuaRot requires a pre-RMSNorm variant with power-of-two d_model"
+    );
+    let d = manifest.d_model;
+    let r = hadamard(d);
+    let rt = r.transpose2();
+
+    // embeddings: rows are residual vectors
+    let emb = weights.get_mut("embed")?;
+    *emb = emb.matmul(&r);
+
+    for l in 0..manifest.n_layers {
+        let g1 = weights.get(&Weights::layer_name(l, "ln1_g"))?.data.clone();
+        for base in ["wq", "wk", "wv"] {
+            let w = weights.get_mut(&Weights::layer_name(l, base))?;
+            w.scale_rows(&g1);
+            *w = rt.matmul(w);
+        }
+        weights.get_mut(&Weights::layer_name(l, "ln1_g"))?.data.fill(1.0);
+
+        let wo = weights.get_mut(&Weights::layer_name(l, "wo"))?;
+        *wo = wo.matmul(&r);
+
+        let g2 = weights.get(&Weights::layer_name(l, "ln2_g"))?.data.clone();
+        let mut mlp_in = vec![Weights::layer_name(l, "wu")];
+        if manifest.act == "swiglu" {
+            mlp_in.push(Weights::layer_name(l, "wg"));
+        }
+        for name in &mlp_in {
+            let w = weights.get_mut(name)?;
+            w.scale_rows(&g2);
+            *w = rt.matmul(w);
+        }
+        weights.get_mut(&Weights::layer_name(l, "ln2_g"))?.data.fill(1.0);
+
+        let wd = weights.get_mut(&Weights::layer_name(l, "wd"))?;
+        *wd = wd.matmul(&r);
+    }
+
+    let gf = weights.get("lnf_g")?.data.clone();
+    let lm = weights.get_mut("lm_head")?;
+    lm.scale_rows(&gf);
+    *lm = rt.matmul(lm);
+    weights.get_mut("lnf_g")?.data.fill(1.0);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensor::Tensor;
+
+    #[test]
+    fn rotation_spreads_outliers() {
+        // a residual vector with one massive channel, rotated, has a much
+        // smaller max/median ratio — QuaRot's core claim.
+        let d = 256;
+        let r = hadamard(d);
+        let mut x = Tensor::zeros(&[1, d]);
+        x.data[13] = 1000.0;
+        for i in 0..d {
+            x.data[i] += ((i * 31) as f32 * 0.1).sin();
+        }
+        let xr = x.matmul(&r);
+        let ratio = |t: &Tensor| {
+            let mut mags: Vec<f32> = t.data.iter().map(|v| v.abs()).collect();
+            mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            mags[d - 1] / mags[d / 2].max(1e-6)
+        };
+        assert!(ratio(&x) > 100.0);
+        assert!(ratio(&xr) < 10.0, "rotated ratio {}", ratio(&xr));
+    }
+
+    #[test]
+    fn rotation_preserves_norm() {
+        let d = 64;
+        let r = hadamard(d);
+        let x = Tensor::new(vec![1, d], (0..d).map(|i| (i as f32).cos()).collect());
+        let xr = x.matmul(&r);
+        let n = |t: &Tensor| t.data.iter().map(|v| v * v).sum::<f32>();
+        assert!((n(&x) - n(&xr)).abs() / n(&x) < 1e-4);
+    }
+}

@@ -1,0 +1,148 @@
+//! Scale/zero-point math for asymmetric activation quantization
+//! (mirrors quantlib.ranges_from_minmax; the golden test in rust/tests/
+//! cross-checks against graph-produced minmax).
+
+use crate::util::tensor::Tensor;
+
+/// Accumulated per-site (min, max) statistics.
+#[derive(Clone, Debug)]
+pub struct MinMax {
+    pub n_sites: usize,
+    pub mins: Vec<f32>,
+    pub maxs: Vec<f32>,
+}
+
+impl MinMax {
+    pub fn new(n_sites: usize) -> Self {
+        Self {
+            n_sites,
+            mins: vec![f32::INFINITY; n_sites],
+            maxs: vec![f32::NEG_INFINITY; n_sites],
+        }
+    }
+
+    /// Merge one batch's [n_sites, 2] minmax tensor (graph output).
+    pub fn merge(&mut self, batch: &Tensor) {
+        let (r, c) = batch.dims2();
+        assert_eq!((r, c), (self.n_sites, 2));
+        for i in 0..r {
+            self.mins[i] = self.mins[i].min(batch.at2(i, 0));
+            self.maxs[i] = self.maxs[i].max(batch.at2(i, 1));
+        }
+    }
+
+    /// (lo, scale) ranges tensor [n_sites, 2] for the pts graphs.
+    pub fn to_ranges(&self, levels: f32) -> Tensor {
+        let mut out = Tensor::zeros(&[self.n_sites, 2]);
+        for i in 0..self.n_sites {
+            let lo = self.mins[i].min(0.0);
+            let hi = self.maxs[i].max(0.0);
+            out.set2(i, 0, lo);
+            out.set2(i, 1, ((hi - lo).max(1e-8)) / levels);
+        }
+        out
+    }
+
+    /// Widest per-site dynamic range (diagnostics / Table 5 support).
+    pub fn widest(&self) -> (usize, f32) {
+        let mut best = (0, 0.0f32);
+        for i in 0..self.n_sites {
+            let w = self.maxs[i] - self.mins[i];
+            if w > best.1 {
+                best = (i, w);
+            }
+        }
+        best
+    }
+}
+
+/// Placeholder ranges for graphs that ignore them (fp/ptd/ptk modes).
+pub fn unit_ranges(n_sites: usize) -> Tensor {
+    let mut t = Tensor::zeros(&[n_sites, 2]);
+    for i in 0..n_sites {
+        t.set2(i, 1, 1.0);
+    }
+    t
+}
+
+/// Symmetric group-wise weight quantize-dequantize along the input dim
+/// (mirrors quantlib.quant_weight; w: [K, N], in place).
+pub fn quant_weight_inplace(w: &mut Tensor, bits: u32, group: usize) {
+    let (k, n) = w.dims2();
+    let g = if k % group == 0 { group } else { k };
+    let qmax = ((1u64 << (bits - 1)) - 1) as f32;
+    for gs in (0..k).step_by(g) {
+        for j in 0..n {
+            let mut amax = 0.0f32;
+            for i in gs..gs + g {
+                amax = amax.max(w.at2(i, j).abs());
+            }
+            let scale = (amax / qmax).max(1e-8);
+            for i in gs..gs + g {
+                let q = (w.at2(i, j) / scale).round().clamp(-qmax, qmax);
+                w.set2(i, j, q * scale);
+            }
+        }
+    }
+}
+
+/// Weight tensors the W-quant applies to (block linears only, matching
+/// the paper's setup: embeddings/norms/head stay FP).
+pub fn is_quantized_weight(name: &str) -> bool {
+    let base = name.rsplit('.').next().unwrap_or(name);
+    matches!(base, "wq" | "wk" | "wv" | "wo" | "wg" | "wu" | "wd")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_and_ranges() {
+        let mut mm = MinMax::new(2);
+        let b1 = Tensor::new(vec![2, 2], vec![-1.0, 2.0, 0.0, 5.0]);
+        let b2 = Tensor::new(vec![2, 2], vec![-3.0, 1.0, 0.5, 4.0]);
+        mm.merge(&b1);
+        mm.merge(&b2);
+        assert_eq!(mm.mins, vec![-3.0, 0.0]);
+        assert_eq!(mm.maxs, vec![2.0, 5.0]);
+        let r = mm.to_ranges(255.0);
+        assert!((r.at2(0, 0) - -3.0).abs() < 1e-6);
+        assert!((r.at2(0, 1) - 5.0 / 255.0).abs() < 1e-6);
+        // site 1 keeps zero representable
+        assert_eq!(r.at2(1, 0), 0.0);
+    }
+
+    #[test]
+    fn weight_qdq_is_close_and_grid_aligned() {
+        let mut w = Tensor::new(vec![4, 2], vec![0.9, -0.5, 0.3, 0.1, -1.0, 0.7, 0.2, -0.2]);
+        let orig = w.clone();
+        quant_weight_inplace(&mut w, 8, 4);
+        for (a, b) in w.data.iter().zip(&orig.data) {
+            assert!((a - b).abs() < 1.0 / 127.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn weight_qdq_low_bits_coarser() {
+        let data: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin()).collect();
+        let orig = Tensor::new(vec![64, 1], data);
+        let mut w8 = orig.clone();
+        let mut w4 = orig.clone();
+        quant_weight_inplace(&mut w8, 8, 64);
+        quant_weight_inplace(&mut w4, 4, 64);
+        let err = |w: &Tensor| -> f32 {
+            w.data.iter().zip(&orig.data).map(|(a, b)| (a - b).powi(2)).sum()
+        };
+        assert!(err(&w4) > err(&w8));
+    }
+
+    #[test]
+    fn quantized_weight_filter() {
+        assert!(is_quantized_weight("layer2.wq"));
+        assert!(is_quantized_weight("layer0.wd"));
+        assert!(!is_quantized_weight("embed"));
+        assert!(!is_quantized_weight("layer1.ln1_g"));
+        assert!(!is_quantized_weight("lm_head"));
+    }
+}

@@ -1,0 +1,164 @@
+//! Quantization scheme configuration (paper §5.1 "Base algorithms").
+
+/// Activation quantization granularity. Orders from the most
+/// hardware-friendly (per-tensor static: fixed scalar scale, no runtime
+/// reduction, no scale AllReduce under tensor parallelism) to the least
+/// (per-token dynamic) — the axis of the paper's Tables 1/2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Granularity {
+    Fp,
+    PerTensorStatic,
+    PerTensorDynamic,
+    PerTokenDynamic,
+}
+
+impl Granularity {
+    /// Suffix of the fwd/prefill/decode graphs implementing it.
+    pub fn graph_suffix(self) -> &'static str {
+        match self {
+            Granularity::Fp => "fp",
+            Granularity::PerTensorStatic => "pts",
+            Granularity::PerTensorDynamic => "ptd",
+            Granularity::PerTokenDynamic => "ptk",
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Granularity::Fp => "FP",
+            Granularity::PerTensorStatic => "Per-tensor Static",
+            Granularity::PerTensorDynamic => "Per-tensor Dynamic",
+            Granularity::PerTokenDynamic => "Per-token Dynamic",
+        }
+    }
+
+    pub fn needs_calibration(self) -> bool {
+        matches!(self, Granularity::PerTensorStatic)
+    }
+
+    pub const ALL_QUANT: [Granularity; 3] = [
+        Granularity::PerTensorStatic,
+        Granularity::PerTensorDynamic,
+        Granularity::PerTokenDynamic,
+    ];
+}
+
+/// Base activation-quantization algorithm. SmoothQuant's O3/O2/O1 map to
+/// (SmoothQuant, pts/ptd/ptk) pairs as in the paper.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Algorithm {
+    Naive,
+    SmoothQuant { alpha: f32 },
+}
+
+impl Algorithm {
+    pub fn label(self, g: Granularity) -> String {
+        match self {
+            Algorithm::Naive => g.label().to_string(),
+            Algorithm::SmoothQuant { .. } => match g {
+                Granularity::PerTensorStatic => "SmoothQuant-O3".into(),
+                Granularity::PerTensorDynamic => "SmoothQuant-O2".into(),
+                Granularity::PerTokenDynamic => "SmoothQuant-O1".into(),
+                Granularity::Fp => "SmoothQuant(FP)".into(),
+            },
+        }
+    }
+}
+
+pub const SMOOTH_ALPHA: f32 = 0.8; // paper §5.1
+
+#[derive(Clone, Copy, Debug)]
+pub struct Scheme {
+    pub gran: Granularity,
+    pub algorithm: Algorithm,
+    /// Activation bits (8 for the main tables; 6/4 for Table 4).
+    pub act_bits: u32,
+    /// Weight bits (0 = FP weights).
+    pub weight_bits: u32,
+    /// KV-cache bits (0 = FP cache; 2 = KIVI, Table 9).
+    pub kv_bits: u32,
+}
+
+impl Scheme {
+    pub fn fp() -> Self {
+        Scheme {
+            gran: Granularity::Fp,
+            algorithm: Algorithm::Naive,
+            act_bits: 0,
+            weight_bits: 0,
+            kv_bits: 0,
+        }
+    }
+
+    pub fn w8a8(gran: Granularity, algorithm: Algorithm) -> Self {
+        Scheme { gran, algorithm, act_bits: 8, weight_bits: 8, kv_bits: 0 }
+    }
+
+    pub fn wnan(bits: u32, gran: Granularity, algorithm: Algorithm) -> Self {
+        Scheme { gran, algorithm, act_bits: bits, weight_bits: bits, kv_bits: 0 }
+    }
+
+    /// `levels` graph input: 2^bits - 1.
+    pub fn act_levels(&self) -> f32 {
+        if self.act_bits == 0 {
+            (1u64 << 24) as f32 // effectively FP (identity grid)
+        } else {
+            ((1u64 << self.act_bits) - 1) as f32
+        }
+    }
+
+    /// kv_levels graph input (>= 2^20 disables KV quantization in-graph).
+    pub fn kv_levels(&self) -> f32 {
+        if self.kv_bits == 0 {
+            (1u64 << 24) as f32
+        } else {
+            ((1u64 << self.kv_bits) - 1) as f32
+        }
+    }
+
+    pub fn label(&self) -> String {
+        if self.gran == Granularity::Fp {
+            return "FP16".into();
+        }
+        let base = self.algorithm.label(self.gran);
+        if self.act_bits != 8 {
+            format!("{base} (W{0}A{0})", self.act_bits)
+        } else {
+            base
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels() {
+        assert_eq!(Scheme::w8a8(Granularity::PerTensorStatic, Algorithm::Naive)
+                       .act_levels(), 255.0);
+        assert_eq!(
+            Scheme::wnan(4, Granularity::PerTokenDynamic, Algorithm::Naive)
+                .act_levels(),
+            15.0
+        );
+        assert!(Scheme::fp().act_levels() > 1e6);
+    }
+
+    #[test]
+    fn labels() {
+        let s = Scheme::w8a8(
+            Granularity::PerTensorStatic,
+            Algorithm::SmoothQuant { alpha: 0.8 },
+        );
+        assert_eq!(s.label(), "SmoothQuant-O3");
+        assert_eq!(Scheme::fp().label(), "FP16");
+    }
+
+    #[test]
+    fn graph_suffixes() {
+        assert_eq!(Granularity::PerTokenDynamic.graph_suffix(), "ptk");
+        assert!(Granularity::PerTensorStatic.needs_calibration());
+        assert!(!Granularity::PerTensorDynamic.needs_calibration());
+    }
+}

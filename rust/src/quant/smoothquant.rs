@@ -1,0 +1,107 @@
+//! SmoothQuant (Xiao et al. 2023): migrate activation outlier magnitude
+//! into the weights with per-channel scales s_j = a_j^alpha / w_j^(1-alpha).
+//!
+//! Computationally: X W = (X / s)(s W). The graphs apply the division at
+//! the attn_in / mlp_in quantization sites via the `inv_smooth` input
+//! (quantlib.QuantCtx.inv_smooth), and this module multiplies the
+//! consuming weights' input rows by s host-side — valid for every norm
+//! placement (the classic "fold into the preceding LayerNorm" is just an
+//! inference-time optimization of the same math, only sound for pre-norm).
+
+use crate::model::weights::Weights;
+use crate::util::tensor::Tensor;
+
+use super::calibrate::CalibResult;
+
+/// Per-channel migration scales (mirrors quantlib.smooth_scales).
+pub fn smooth_scales(act_absmax: &[f32], w_absmax: &[f32], alpha: f32) -> Vec<f32> {
+    act_absmax
+        .iter()
+        .zip(w_absmax)
+        .map(|(&a, &w)| {
+            let a = a.max(1e-5);
+            let w = w.max(1e-5);
+            (a.powf(alpha) / w.powf(1.0 - alpha)).clamp(1e-4, 1e4)
+        })
+        .collect()
+}
+
+/// Apply SmoothQuant to the bundle. Returns the `inv_smooth` graph input
+/// [L, 2, d] (1/s for attn_in and mlp_in per layer).
+pub fn apply(weights: &mut Weights, calib: &CalibResult, n_layers: usize,
+             d_model: usize, has_gate: bool, alpha: f32) -> crate::Result<Tensor> {
+    let mut inv = Tensor::full(&[n_layers, 2, d_model], 1.0);
+    for l in 0..n_layers {
+        // pair 1: attn_in -> wq / wk / wv
+        let names: Vec<String> = ["wq", "wk", "wv"]
+            .iter()
+            .map(|b| Weights::layer_name(l, b))
+            .collect();
+        let s = pair_scales(weights, &names, calib.chan_attn_in(l), alpha)?;
+        for n in &names {
+            weights.get_mut(n)?.scale_rows(&s);
+        }
+        write_inv(&mut inv, l, 0, d_model, &s);
+
+        // pair 2: mlp_in -> [wg,] wu
+        let mut names: Vec<String> = vec![Weights::layer_name(l, "wu")];
+        if has_gate {
+            names.push(Weights::layer_name(l, "wg"));
+        }
+        let s = pair_scales(weights, &names, calib.chan_mlp_in(l), alpha)?;
+        for n in &names {
+            weights.get_mut(n)?.scale_rows(&s);
+        }
+        write_inv(&mut inv, l, 1, d_model, &s);
+    }
+    Ok(inv)
+}
+
+fn pair_scales(weights: &Weights, names: &[String], act: &[f32],
+               alpha: f32) -> crate::Result<Vec<f32>> {
+    let mut w_absmax = vec![0.0f32; act.len()];
+    for n in names {
+        let w = weights.get(n)?;
+        for (j, v) in w.row_absmax().iter().enumerate() {
+            w_absmax[j] = w_absmax[j].max(*v);
+        }
+    }
+    Ok(smooth_scales(act, &w_absmax, alpha))
+}
+
+fn write_inv(inv: &mut Tensor, l: usize, which: usize, d: usize, s: &[f32]) {
+    let base = (l * 2 + which) * d;
+    for (j, &v) in s.iter().enumerate() {
+        inv.data[base + j] = 1.0 / v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales_formula() {
+        let s = smooth_scales(&[8.0, 1.0], &[2.0, 2.0], 0.5);
+        // a^.5 / w^.5 = sqrt(8/2)=2, sqrt(1/2)=0.707
+        assert!((s[0] - 2.0).abs() < 1e-5);
+        assert!((s[1] - 0.70710677).abs() < 1e-5);
+    }
+
+    #[test]
+    fn scales_clamped() {
+        let s = smooth_scales(&[1e9], &[1e-9], 1.0);
+        assert!(s[0] <= 1e4);
+        let s = smooth_scales(&[0.0], &[1e9], 1.0);
+        assert!(s[0] >= 1e-4);
+    }
+
+    #[test]
+    fn alpha_extremes() {
+        // alpha=1: s = a (all migration); alpha=0: s = 1/w
+        let s1 = smooth_scales(&[4.0], &[2.0], 1.0);
+        assert!((s1[0] - 4.0).abs() < 1e-5);
+        let s0 = smooth_scales(&[4.0], &[2.0], 0.0);
+        assert!((s0[0] - 0.5).abs() < 1e-5);
+    }
+}

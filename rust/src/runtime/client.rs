@@ -1,0 +1,46 @@
+//! Thin wrapper over the PJRT CPU client.
+
+use std::sync::Arc;
+
+use crate::util::tensor::Tensor;
+
+/// Shared PJRT client handle. `xla::PjRtClient` is internally
+/// reference-counted; we add an Arc so engines/replicas can clone freely.
+#[derive(Clone)]
+pub struct Client {
+    inner: Arc<xla::PjRtClient>,
+}
+
+impl Client {
+    pub fn cpu() -> crate::Result<Self> {
+        let inner = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { inner: Arc::new(inner) })
+    }
+
+    pub fn raw(&self) -> &xla::PjRtClient {
+        &self.inner
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.inner.device_count()
+    }
+
+    /// Upload an f32 host tensor to the device.
+    pub fn upload(&self, t: &Tensor) -> crate::Result<xla::PjRtBuffer> {
+        self.inner
+            .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+            .map_err(|e| anyhow::anyhow!("upload f32 {:?}: {e:?}", t.shape))
+    }
+
+    /// Upload an i32 host tensor to the device.
+    pub fn upload_i32(&self, data: &[i32], shape: &[usize]) -> crate::Result<xla::PjRtBuffer> {
+        self.inner
+            .buffer_from_host_buffer::<i32>(data, shape, None)
+            .map_err(|e| anyhow::anyhow!("upload i32 {shape:?}: {e:?}"))
+    }
+}

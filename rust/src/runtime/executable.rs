@@ -1,0 +1,91 @@
+//! A compiled artifact: HLO text -> XlaComputation -> PjRtLoadedExecutable,
+//! with buffer-level execution so large state stays on device.
+
+use std::path::Path;
+use std::time::Instant;
+
+use super::client::Client;
+use super::literalx::{self, HostValue};
+use crate::util::tensor::Tensor;
+
+pub struct Executable {
+    pub name: String,
+    client: Client,
+    exe: xla::PjRtLoadedExecutable,
+    /// Cumulative (calls, seconds) — feeds the coordinator metrics.
+    pub calls: std::sync::atomic::AtomicU64,
+    pub nanos: std::sync::atomic::AtomicU64,
+}
+
+impl Executable {
+    /// Load + compile an HLO-text artifact.
+    pub fn load(client: &Client, name: &str, path: &Path) -> crate::Result<Self> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .raw()
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        log::debug!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        Ok(Self {
+            name: name.to_string(),
+            client: client.clone(),
+            exe,
+            calls: 0.into(),
+            nanos: 0.into(),
+        })
+    }
+
+    pub fn client(&self) -> &Client {
+        &self.client
+    }
+
+    /// Upload a host value to a device buffer.
+    pub fn upload(&self, v: &HostValue) -> crate::Result<xla::PjRtBuffer> {
+        match v {
+            HostValue::F32(t) => self.client.upload(t),
+            HostValue::I32(t) => self.client.upload_i32(&t.data, &t.shape),
+        }
+    }
+
+    /// Execute on device buffers; returns one buffer per graph output.
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> crate::Result<Vec<xla::PjRtBuffer>> {
+        let t0 = Instant::now();
+        let mut out = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.name))?;
+        self.calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.nanos.fetch_add(
+            t0.elapsed().as_nanos() as u64,
+            std::sync::atomic::Ordering::Relaxed,
+        );
+        anyhow::ensure!(!out.is_empty(), "no replica outputs from {}", self.name);
+        Ok(out.swap_remove(0))
+    }
+
+    /// Convenience: upload host args, execute, fetch all outputs as f32.
+    pub fn run_host(&self, args: &[HostValue]) -> crate::Result<Vec<Tensor>> {
+        let bufs: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|a| self.upload(a))
+            .collect::<crate::Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let outs = self.run_buffers(&refs)?;
+        literalx::fetch_all_f32(&outs)
+    }
+
+    pub fn mean_call_seconds(&self) -> f64 {
+        let calls = self.calls.load(std::sync::atomic::Ordering::Relaxed);
+        if calls == 0 {
+            return 0.0;
+        }
+        let nanos = self.nanos.load(std::sync::atomic::Ordering::Relaxed);
+        nanos as f64 / 1e9 / calls as f64
+    }
+}

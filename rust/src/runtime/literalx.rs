@@ -1,0 +1,122 @@
+//! Host <-> PJRT marshalling helpers.
+
+use crate::util::tensor::Tensor;
+
+/// An i32 host tensor (token ids, lengths).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape, data }
+    }
+
+    pub fn scalar(v: i32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn vec(v: Vec<i32>) -> Self {
+        Self { shape: vec![v.len()], data: v }
+    }
+}
+
+/// A host-side graph argument: every artifact input is one of these.
+#[derive(Clone, Debug)]
+pub enum HostValue {
+    F32(Tensor),
+    I32(IntTensor),
+}
+
+impl HostValue {
+    pub fn scalar_f32(v: f32) -> Self {
+        HostValue::F32(Tensor::scalar(v))
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostValue::I32(IntTensor::scalar(v))
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32(t) => &t.shape,
+            HostValue::I32(t) => &t.shape,
+        }
+    }
+}
+
+/// Download a PJRT output buffer into an f32 host tensor.
+pub fn fetch_f32(buf: &xla::PjRtBuffer) -> crate::Result<Tensor> {
+    let lit = buf
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+    literal_f32(&lit)
+}
+
+/// Literal -> f32 host tensor.
+pub fn literal_f32(lit: &xla::Literal) -> crate::Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("to_vec<f32>: {e:?}"))?;
+    Ok(Tensor::new(dims, data))
+}
+
+/// Fetch all outputs of an execute call as f32 host tensors. XLA wraps
+/// multi-output programs in a root tuple, which PJRT returns as a single
+/// tuple-shaped buffer — decompose it transparently.
+pub fn fetch_all_f32(outs: &[xla::PjRtBuffer]) -> crate::Result<Vec<Tensor>> {
+    if outs.len() == 1 {
+        let mut lit = outs[0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        if lit.array_shape().is_err() {
+            // tuple output: decompose into element literals
+            let parts = lit
+                .decompose_tuple()
+                .map_err(|e| anyhow::anyhow!("decompose_tuple: {e:?}"))?;
+            return parts.iter().map(literal_f32).collect();
+        }
+        return Ok(vec![literal_f32(&lit)?]);
+    }
+    outs.iter().map(fetch_f32).collect()
+}
+
+/// Download a PJRT output buffer into an i32 host tensor.
+pub fn fetch_i32(buf: &xla::PjRtBuffer) -> crate::Result<IntTensor> {
+    let lit = buf
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit
+        .to_vec::<i32>()
+        .map_err(|e| anyhow::anyhow!("to_vec<i32>: {e:?}"))?;
+    Ok(IntTensor::new(dims, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_value_shapes() {
+        assert!(HostValue::scalar_f32(1.0).shape().is_empty());
+        let v = HostValue::I32(IntTensor::vec(vec![1, 2, 3]));
+        assert_eq!(v.shape(), &[3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn int_tensor_shape_checked() {
+        IntTensor::new(vec![2, 2], vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile them on the CPU
+//! PJRT client, and execute them from the coordinator's hot path.
+//!
+//! Flow (see /opt/xla-example and DESIGN.md §2):
+//!   HLO text --HloModuleProto::from_text_file--> XlaComputation
+//!            --client.compile--> PjRtLoadedExecutable
+//!            --execute_b(device buffers)--> output buffers
+//!
+//! Everything big (weights, KV cache) lives as device buffers; only small
+//! outputs (logits, losses) are fetched to the host per call.
+
+pub mod client;
+pub mod executable;
+pub mod literalx;
+pub mod registry;
+
+pub use client::Client;
+pub use executable::Executable;
+pub use literalx::{HostValue, IntTensor};
+pub use registry::Registry;

@@ -1,0 +1,51 @@
+//! Artifact registry: lazily compiles a variant's graphs by name.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::sync::Arc;
+
+use super::client::Client;
+use super::executable::Executable;
+
+pub struct Registry {
+    client: Client,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Registry {
+    pub fn new(client: Client, dir: PathBuf) -> Self {
+        Self { client, dir, cache: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn dir(&self) -> &PathBuf {
+        &self.dir
+    }
+
+    /// Get (compiling on first use) the named graph.
+    pub fn get(&self, name: &str) -> crate::Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        anyhow::ensure!(
+            path.exists(),
+            "artifact {name} not found at {path:?}; run `make artifacts`"
+        );
+        let exe = Arc::new(Executable::load(&self.client, name, &path)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn client(&self) -> &Client {
+        &self.client
+    }
+
+    pub fn loaded(&self) -> Vec<String> {
+        self.cache.lock().unwrap().keys().cloned().collect()
+    }
+}

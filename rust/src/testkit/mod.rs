@@ -1,0 +1,3 @@
+//! Testing substrates (the offline vendor has no proptest).
+
+pub mod prop;

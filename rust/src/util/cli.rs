@@ -1,0 +1,216 @@
+//! Tiny declarative CLI parser (substrate for the absent clap crate).
+//!
+//! Supports `--name value`, `--name=value`, boolean `--flag`, positional
+//! arguments, defaults, and generated `--help`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+#[derive(Default)]
+pub struct Cli {
+    about: String,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(String, String)>,
+}
+
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(about: &str) -> Self {
+        Self {
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{}\n\nOptions:\n", self.about);
+        for o in &self.opts {
+            let d = match (&o.default, o.is_flag) {
+                (_, true) => String::new(),
+                (Some(d), _) => format!(" [default: {d}]"),
+                (None, _) => " (required)".to_string(),
+            };
+            out.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, d));
+        }
+        for (n, h) in &self.positionals {
+            out.push_str(&format!("  <{n}>  {h}\n"));
+        }
+        out
+    }
+
+    /// Parse a raw argv slice (without the program name).
+    pub fn parse_from(&self, argv: &[String]) -> crate::Result<Args> {
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        let mut positionals = Vec::new();
+        for o in &self.opts {
+            if o.is_flag {
+                flags.insert(o.name.clone(), false);
+            } else if let Some(d) = &o.default {
+                values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                anyhow::bail!("{}", self.usage());
+            }
+            if let Some(name) = a.strip_prefix("--") {
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{name}\n{}", self.usage()))?;
+                if spec.is_flag {
+                    flags.insert(name.to_string(), true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?
+                                .clone()
+                        }
+                    };
+                    values.insert(name.to_string(), v);
+                }
+            } else {
+                positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        for o in &self.opts {
+            if !o.is_flag && !values.contains_key(&o.name) {
+                anyhow::bail!("missing required --{}\n{}", o.name, self.usage());
+            }
+        }
+        Ok(Args {
+            values,
+            flags,
+            positionals,
+        })
+    }
+
+    pub fn parse_env(&self) -> crate::Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        self.parse_from(&argv)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option {name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> crate::Result<usize> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn get_f64(&self, name: &str) -> crate::Result<f64> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or(&false)
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let cli = Cli::new("t").opt("n", "4", "count").flag("fast", "go fast");
+        let a = cli.parse_from(&argv(&[])).unwrap();
+        assert_eq!(a.get_usize("n").unwrap(), 4);
+        assert!(!a.flag("fast"));
+        let a = cli.parse_from(&argv(&["--n", "9", "--fast"])).unwrap();
+        assert_eq!(a.get_usize("n").unwrap(), 9);
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn equals_form_and_positionals() {
+        let cli = Cli::new("t").opt("x", "a", "").positional("cmd", "");
+        let a = cli.parse_from(&argv(&["run", "--x=b"])).unwrap();
+        assert_eq!(a.get("x"), "b");
+        assert_eq!(a.positionals(), &["run".to_string()]);
+    }
+
+    #[test]
+    fn required_missing() {
+        let cli = Cli::new("t").req("model", "");
+        assert!(cli.parse_from(&argv(&[])).is_err());
+        assert!(cli.parse_from(&argv(&["--model", "m"])).is_ok());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let cli = Cli::new("t");
+        assert!(cli.parse_from(&argv(&["--nope", "1"])).is_err());
+    }
+}

@@ -1,0 +1,118 @@
+//! Little-endian binary readers for the artifact formats
+//! (python/compile/binio.py) and artifact-directory helpers.
+
+use std::path::{Path, PathBuf};
+
+pub struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn magic(&mut self, want: &[u8; 4]) -> crate::Result<()> {
+        let got = self.bytes(4)?;
+        if got != want {
+            anyhow::bail!("bad magic: expected {want:?}, got {got:?}");
+        }
+        Ok(())
+    }
+
+    pub fn bytes(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+        if self.remaining() < n {
+            anyhow::bail!("truncated: need {n} bytes, have {}", self.remaining());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u32(&mut self) -> crate::Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn string(&mut self) -> crate::Result<String> {
+        let n = self.u32()? as usize;
+        Ok(String::from_utf8(self.bytes(n)?.to_vec())?)
+    }
+
+    pub fn f32_vec(&mut self, n: usize) -> crate::Result<Vec<f32>> {
+        let b = self.bytes(4 * n)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn i32_vec(&mut self, n: usize) -> crate::Result<Vec<i32>> {
+        let b = self.bytes(4 * n)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Locate the artifacts directory: $CUSHION_ARTIFACTS or ./artifacts
+/// relative to the workspace root (walking up from cwd).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("CUSHION_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+pub fn variant_dir(variant: &str) -> PathBuf {
+    artifacts_dir().join(variant)
+}
+
+pub fn read(path: &Path) -> crate::Result<Vec<u8>> {
+    std::fs::read(path).map_err(|e| anyhow::anyhow!("reading {path:?}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cursor_reads() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"CCW1");
+        buf.extend_from_slice(&3u32.to_le_bytes());
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        buf.extend_from_slice(b"hi");
+        buf.extend_from_slice(&1.5f32.to_le_bytes());
+        buf.extend_from_slice(&(-7i32).to_le_bytes());
+        let mut c = Cursor::new(&buf);
+        c.magic(b"CCW1").unwrap();
+        assert_eq!(c.u32().unwrap(), 3);
+        assert_eq!(c.string().unwrap(), "hi");
+        assert_eq!(c.f32_vec(1).unwrap(), vec![1.5]);
+        assert_eq!(c.i32_vec(1).unwrap(), vec![-7]);
+        assert_eq!(c.remaining(), 0);
+    }
+
+    #[test]
+    fn cursor_truncation_errors() {
+        let buf = [1u8, 2];
+        let mut c = Cursor::new(&buf);
+        assert!(c.u32().is_err());
+        let mut c = Cursor::new(b"XXXX");
+        assert!(c.magic(b"CCW1").is_err());
+    }
+}

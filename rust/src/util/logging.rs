@@ -1,0 +1,48 @@
+//! Minimal `log`-facade backend: timestamped stderr lines, level from
+//! $CUSHION_LOG (error|warn|info|debug|trace, default info).
+
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+use once_cell::sync::OnceCell;
+
+struct StderrLogger {
+    start: Instant,
+    max: Level,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, meta: &Metadata) -> bool {
+        meta.level() <= self.max
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        eprintln!("[{t:9.3}s {:5} {}] {}", record.level(), record.target(),
+                  record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceCell<StderrLogger> = OnceCell::new();
+
+/// Install the logger (idempotent).
+pub fn init() {
+    let level = match std::env::var("CUSHION_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    };
+    let logger = LOGGER.get_or_init(|| StderrLogger {
+        start: Instant::now(),
+        max: level,
+    });
+    let _ = log::set_logger(logger);
+    log::set_max_level(LevelFilter::Trace);
+}

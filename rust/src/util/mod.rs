@@ -1,0 +1,12 @@
+//! Self-contained substrates. The offline crate vendor only carries the
+//! `xla` crate's transitive dependencies, so the usual suspects (serde,
+//! clap, rand, criterion, proptest, tokio) are reimplemented here in the
+//! small form this project needs (DESIGN.md §1, substitution table).
+
+pub mod cli;
+pub mod fsutil;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod stats;
+pub mod tensor;

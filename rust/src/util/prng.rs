@@ -1,0 +1,132 @@
+//! SplitMix64 PRNG, bit-for-bit identical to python/compile/prng.py.
+//!
+//! The synthetic-corpus grammar must generate identical token streams at
+//! build time (python: training corpus, calibration splits, task sets) and
+//! at serve time (rust: workload generation); the golden-parity test in
+//! rust/tests/ asserts the match.
+
+/// SplitMix64 (Steele et al.): tiny, fast, trivially portable.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire-style high-bits reduction,
+    /// mirroring the python implementation exactly).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        ((self.next_u64() >> 32).wrapping_mul(n)) >> 32
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Derive an independent child stream (mirrors python `fork`).
+    pub fn fork(&mut self, stream: u64) -> SplitMix64 {
+        let base = self.next_u64();
+        SplitMix64::new(base ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    /// Standard normal via Box-Muller (rust-only; used for workload
+    /// inter-arrival jitter, never for cross-language streams).
+    pub fn next_normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Stateless SplitMix64 finalizer (mirrors python `hash64`); used for the
+/// deterministic grammar successor tables.
+#[inline]
+pub fn hash64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = SplitMix64::new(7);
+        for n in [1u64, 2, 3, 14, 512, 1024] {
+            for _ in 0..200 {
+                assert!(r.next_below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = SplitMix64::new(9);
+        for _ in 0..1000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn fork_streams_differ() {
+        let mut r = SplitMix64::new(1);
+        let mut a = r.fork(0);
+        let mut r2 = SplitMix64::new(1);
+        let mut b = r2.fork(1);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn known_answer_matches_python() {
+        // printed by python/compile/prng.py: SplitMix64(0).next_u64()
+        let mut r = SplitMix64::new(0);
+        assert_eq!(r.next_u64(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(hash64(0), 0xE220_A839_7B1D_CDAF);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = SplitMix64::new(3);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..50).collect::<Vec<_>>());
+    }
+}

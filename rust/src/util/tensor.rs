@@ -1,0 +1,245 @@
+//! Host-side f32 tensor: the marshalling currency between the weight
+//! bundle, the quantization transforms (SmoothQuant / AWQ / QuaRot /
+//! weight qdq run host-side on these), and the PJRT literals.
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} vs {} elems", data.len());
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self::new(shape.to_vec(), vec![0.0; shape.iter().product()])
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Self::new(shape.to_vec(), vec![v; shape.iter().product()])
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self::new(vec![], vec![v])
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Rows/cols of a rank-2 tensor.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.rank(), 2, "expected rank-2, got {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        let (_, c) = self.dims2();
+        self.data[i * c + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        let (_, c) = self.dims2();
+        self.data[i * c + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let (_, c) = self.dims2();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let (_, c) = self.dims2();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Per-column absolute maximum of a rank-2 tensor.
+    pub fn col_absmax(&self) -> Vec<f32> {
+        let (r, c) = self.dims2();
+        let mut out = vec![0.0f32; c];
+        for i in 0..r {
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = o.max(self.data[i * c + j].abs());
+            }
+        }
+        out
+    }
+
+    /// Per-row absolute maximum of a rank-2 tensor.
+    pub fn row_absmax(&self) -> Vec<f32> {
+        let (r, _) = self.dims2();
+        (0..r)
+            .map(|i| self.row(i).iter().fold(0.0f32, |a, &v| a.max(v.abs())))
+            .collect()
+    }
+
+    /// Scale row i by s[i] (rank-2).
+    pub fn scale_rows(&mut self, s: &[f32]) {
+        let (r, _) = self.dims2();
+        assert_eq!(s.len(), r);
+        for i in 0..r {
+            let f = s[i];
+            for v in self.row_mut(i) {
+                *v *= f;
+            }
+        }
+    }
+
+    /// Scale column j by s[j] (rank-2 or rank-1).
+    pub fn scale_cols(&mut self, s: &[f32]) {
+        if self.rank() == 1 {
+            assert_eq!(s.len(), self.data.len());
+            for (v, f) in self.data.iter_mut().zip(s) {
+                *v *= f;
+            }
+            return;
+        }
+        let (r, c) = self.dims2();
+        assert_eq!(s.len(), c);
+        for i in 0..r {
+            for j in 0..c {
+                self.data[i * c + j] *= s[j];
+            }
+        }
+    }
+
+    /// `self @ other` for rank-2 tensors (used by the QuaRot rotation
+    /// folding; sizes here are at most d x d_ff).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        let (m, k) = self.dims2();
+        let (k2, n) = other.dims2();
+        assert_eq!(k, k2);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[p * n..(p + 1) * n];
+                let dst = &mut out[i * n..(i + 1) * n];
+                for (d, &o) in dst.iter_mut().zip(orow) {
+                    *d += a * o;
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        let (m, n) = self.dims2();
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(vec![n, m], out)
+    }
+
+    pub fn absmax(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &v| a.max(v.abs()))
+    }
+}
+
+/// Orthonormal Sylvester Hadamard matrix (QuaRot rotation).
+pub fn hadamard(n: usize) -> Tensor {
+    assert!(n.is_power_of_two(), "hadamard size must be a power of two");
+    let mut h = vec![1.0f32];
+    let mut m = 1;
+    while m < n {
+        let mut next = vec![0.0f32; 4 * m * m];
+        for i in 0..m {
+            for j in 0..m {
+                let v = h[i * m + j];
+                next[i * 2 * m + j] = v;
+                next[i * 2 * m + m + j] = v;
+                next[(m + i) * 2 * m + j] = v;
+                next[(m + i) * 2 * m + m + j] = -v;
+            }
+        }
+        h = next;
+        m *= 2;
+    }
+    let norm = 1.0 / (n as f32).sqrt();
+    Tensor::new(vec![n, n], h.into_iter().map(|v| v * norm).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let mut id = Tensor::zeros(&[3, 3]);
+        for i in 0..3 {
+            id.set2(i, i, 1.0);
+        }
+        assert_eq!(a.matmul(&id), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(vec![2, 2], vec![5., 6., 7., 8.]);
+        assert_eq!(a.matmul(&b).data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn hadamard_orthonormal() {
+        for n in [2usize, 8, 64] {
+            let h = hadamard(n);
+            let hht = h.matmul(&h.transpose2());
+            for i in 0..n {
+                for j in 0..n {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((hht.at2(i, j) - want).abs() < 1e-4, "{n} {i} {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_col_scaling() {
+        let mut a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        a.scale_rows(&[2.0, 0.5]);
+        assert_eq!(a.data, vec![2., 4., 1.5, 2.]);
+        a.scale_cols(&[1.0, 10.0]);
+        assert_eq!(a.data, vec![2., 40., 1.5, 20.]);
+    }
+
+    #[test]
+    fn absmax_helpers() {
+        let a = Tensor::new(vec![2, 3], vec![1., -5., 3., -2., 4., 0.]);
+        assert_eq!(a.col_absmax(), vec![2., 5., 3.]);
+        assert_eq!(a.row_absmax(), vec![5., 4.]);
+        assert_eq!(a.absmax(), 5.0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Property tests (testkit::prop) on coordinator invariants — these run
+//! against the logical components (no PJRT needed).
+
+use cushioncache::coordinator::batcher::{Batcher, Running};
+use cushioncache::coordinator::kvcache::KvManager;
+use cushioncache::coordinator::request::Request;
+use cushioncache::data::grammar::Grammar;
+use cushioncache::data::tokenizer::Tokenizer;
+use cushioncache::quant::scales::{quant_weight_inplace, MinMax};
+use cushioncache::testkit::prop::*;
+use cushioncache::util::prng::SplitMix64;
+use cushioncache::util::tensor::Tensor;
+
+#[test]
+fn kv_manager_never_oversubscribes() {
+    check("kv alloc/free", 300, vec_u32(0..64, 3), |ops| {
+        // ops: 0 = alloc, 1 = free first busy, 2 = push token
+        let mut kv = KvManager::new(4, 4, 20, 2);
+        let mut live = 0usize;
+        for (i, &op) in ops.iter().enumerate() {
+            match op {
+                0 => {
+                    if kv.alloc(i as u64, 4).is_some() {
+                        live += 1;
+                    }
+                }
+                1 => {
+                    if let Some(slot) = kv.busy_slots().first().copied() {
+                        kv.free(slot);
+                        live -= 1;
+                    }
+                }
+                _ => {
+                    if let Some(slot) = kv.busy_slots().first().copied() {
+                        if kv.remaining(slot) > 0 {
+                            kv.push_token(slot);
+                        }
+                    }
+                }
+            }
+            if kv.busy_slots().len() != live || kv.free_count() != 4 - live {
+                return false;
+            }
+            // capacity invariant on every slot
+            for s in kv.busy_slots() {
+                if kv.m_max + kv.tok_len(s) > kv.cap {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn batcher_preserves_fifo_and_ids() {
+    check("batcher fifo", 200, usize_in(1..40), |&n| {
+        let mut b = Batcher::new();
+        let ids: Vec<u64> = (0..n).map(|i| b.submit(vec![i as i32], 4)).collect();
+        let mut out = Vec::new();
+        while let Some(r) = b.pop() {
+            out.push(r.id);
+        }
+        out == ids && out.windows(2).all(|w| w[0] < w[1])
+    });
+}
+
+#[test]
+fn running_stop_respects_budget() {
+    check(
+        "stop at max_new",
+        200,
+        pair(usize_in(1..20), usize_in(0..30)),
+        |&(max_new, produced)| {
+            let mut r = Running::new(Request::new(1, vec![0], max_new), 0);
+            for t in 0..produced {
+                r.push_token(t as i32 + 10);
+            }
+            let stopped = r.should_stop(100).is_some();
+            stopped == (produced >= max_new)
+        },
+    );
+}
+
+#[test]
+fn minmax_merge_is_commutative_and_widening() {
+    check("minmax merge", 200, vec_f64(2..40, -50.0, 50.0), |xs| {
+        let mut a = MinMax::new(1);
+        let mut b = MinMax::new(1);
+        for pair in xs.chunks(2) {
+            let lo = pair[0].min(*pair.last().unwrap()) as f32;
+            let hi = pair[0].max(*pair.last().unwrap()) as f32;
+            let t = Tensor::new(vec![1, 2], vec![lo, hi]);
+            a.merge(&t);
+            b.merge(&t);
+        }
+        // merged range covers every batch
+        a.mins[0] <= a.maxs[0] && a.mins[0] == b.mins[0] && a.maxs[0] == b.maxs[0]
+    });
+}
+
+#[test]
+fn weight_qdq_error_bounded_by_step() {
+    check("weight qdq bound", 100, vec_f64(64..65, -3.0, 3.0), |xs| {
+        let data: Vec<f32> = xs.iter().map(|&v| v as f32).collect();
+        let orig = Tensor::new(vec![64, 1], data);
+        let mut q = orig.clone();
+        quant_weight_inplace(&mut q, 8, 64);
+        let amax = orig.absmax();
+        let step = amax / 127.0;
+        q.data
+            .iter()
+            .zip(&orig.data)
+            .all(|(a, b)| (a - b).abs() <= step / 2.0 + 1e-6)
+    });
+}
+
+#[test]
+fn tokenizer_roundtrips_grammar_output() {
+    check("tokenizer roundtrip", 100, usize_in(0..10_000), |&seed| {
+        let g = Grammar::new(512);
+        let tok = Tokenizer::new(512);
+        let mut rng = SplitMix64::new(seed as u64);
+        let doc = g.document(64, &mut rng);
+        doc.iter().all(|&id| {
+            let s = tok.id_to_str(id);
+            tok.str_to_id(&s).map(|back| back == id).unwrap_or(false)
+        })
+    });
+}
+
+#[test]
+fn grammar_documents_always_well_formed() {
+    check("grammar well-formed", 150, usize_in(0..100_000), |&seed| {
+        let g = Grammar::new(1024);
+        let mut rng = SplitMix64::new(seed as u64);
+        let d = g.document(128, &mut rng);
+        d.len() == 128
+            && d[0] == cushioncache::data::BOS
+            && d.iter().all(|&t| t >= 0 && (t as usize) < 1024)
+    });
+}
+
+#[test]
+fn hadamard_rotation_preserves_l2_norm() {
+    check("hadamard isometry", 50, vec_f64(256..257, -5.0, 5.0), |xs| {
+        let h = cushioncache::util::tensor::hadamard(256);
+        let x = Tensor::new(vec![1, 256], xs.iter().map(|&v| v as f32).collect());
+        let xr = x.matmul(&h);
+        let n = |t: &Tensor| t.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>();
+        let (a, b) = (n(&x), n(&xr));
+        (a - b).abs() <= 1e-3 * a.max(1.0)
+    });
+}

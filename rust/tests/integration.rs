@@ -1,0 +1,259 @@
+//! Integration over runtime + artifacts: PJRT execution of the AOT
+//! graphs must match the Python-side golden outputs, and the serving
+//! path must agree with the eval forward.
+//!
+//! Each test owns its PJRT client (the client is Rc-based and cannot
+//! cross the test harness's threads); they skip gracefully when
+//! `make artifacts` has not run.
+
+use cushioncache::coordinator::{Engine, Scheduler};
+use cushioncache::data::PAD;
+use cushioncache::eval::perplexity::{argmax, perplexity};
+use cushioncache::model::session::Session;
+use cushioncache::quant::calibrate;
+use cushioncache::quant::scheme::{Algorithm, Granularity, Scheme};
+use cushioncache::runtime::Client;
+use cushioncache::util::fsutil;
+use cushioncache::util::json;
+
+fn have_artifacts() -> bool {
+    fsutil::variant_dir("tl-llama").join("manifest.json").exists()
+}
+
+fn session() -> Session {
+    Session::load_with_client("tl-llama", Client::cpu().unwrap()).unwrap()
+}
+
+#[test]
+fn fwd_fp_matches_python_golden() {
+    if !have_artifacts() {
+        return;
+    }
+    let s = session();
+    let golden = json::parse(
+        &std::fs::read_to_string(fsutil::variant_dir("tl-llama").join("golden.json"))
+            .unwrap(),
+    )
+    .unwrap();
+
+    let split = s.corpus.split("calib").unwrap();
+    let m = &s.manifest;
+    let mut tokens = Vec::new();
+    for i in 0..m.eval_batch {
+        tokens.extend_from_slice(split.seq(i));
+    }
+    let logits = s.fwd(&Scheme::fp(), &tokens).unwrap();
+
+    // probe logits
+    let probes = golden.get("logits_probe").unwrap().as_arr().unwrap();
+    let v = m.vocab;
+    let got = [
+        logits.data[0],
+        logits.data[v + 1], // [batch 0, pos 1, vocab 1]
+        *logits.data.last().unwrap(),
+        logits.data.iter().map(|&x| x as f64).sum::<f64>() as f32
+            / logits.data.len() as f32,
+    ];
+    for (g, want) in got.iter().zip(probes) {
+        let w = want.as_f64().unwrap() as f32;
+        assert!(
+            (g - w).abs() < 1e-2_f32.max(w.abs() * 1e-3),
+            "logit probe mismatch: {g} vs {w}"
+        );
+    }
+
+    // perplexity over the same batch
+    let want_ppl = golden.get("fp_ppl_calib8").unwrap().as_f64().unwrap();
+    let (nll, n) = cushioncache::eval::perplexity::batch_nll(
+        &logits.data, &tokens, m.eval_batch, m.seq_len, v);
+    let got_ppl = (nll / n as f64).exp();
+    assert!(
+        (got_ppl - want_ppl).abs() / want_ppl < 1e-3,
+        "ppl {got_ppl} vs golden {want_ppl}"
+    );
+
+    // minmax of site 0 (via the stats graph — fwd graphs emit logits only)
+    let stats = s.stats(&tokens).unwrap();
+    let mm = golden.get("minmax_site0").unwrap().as_arr().unwrap();
+    assert!((stats.minmax.at2(0, 0) - mm[0].as_f64().unwrap() as f32).abs() < 1e-3);
+    assert!((stats.minmax.at2(0, 1) - mm[1].as_f64().unwrap() as f32).abs() < 1e-3);
+}
+
+#[test]
+fn cushion_rescues_per_tensor_static() {
+    if !have_artifacts() {
+        return;
+    }
+    // The paper's headline claim, end to end through the runtime.
+    let mut s = session();
+    let w8a8 = Scheme::w8a8(Granularity::PerTensorStatic, Algorithm::Naive);
+    let fp = perplexity(&s, &Scheme::fp(), "heldout", 2).unwrap();
+    calibrate::calibrate_into(&mut s, w8a8.act_levels(), 2).unwrap();
+    let broken = perplexity(&s, &w8a8, "heldout", 2).unwrap();
+    s.set_cushion_tokens(&[cushioncache::data::BOS]).unwrap();
+    calibrate::calibrate_into(&mut s, w8a8.act_levels(), 2).unwrap();
+    let fixed = perplexity(&s, &w8a8, "heldout", 2).unwrap();
+    assert!(broken > 2.0 * fp, "quant damage missing: {broken} vs fp {fp}");
+    assert!(fixed < 1.15 * fp, "cushion failed: {fixed} vs fp {fp}");
+}
+
+#[test]
+fn serving_matches_eval_forward() {
+    if !have_artifacts() {
+        return;
+    }
+    // greedy continuation via prefill+decode == argmax chain via fwd
+    let s = session();
+    let m_seq = s.manifest.seq_len;
+    let vocab = s.manifest.vocab;
+    let prompt: Vec<i32> = s.corpus.split("heldout").unwrap().seq(1)[..20].to_vec();
+
+    // reference chain via fwd
+    let s2 = session();
+    let mut seq = prompt.clone();
+    let mut want = Vec::new();
+    for _ in 0..4 {
+        let mut batch = seq.clone();
+        batch.resize(m_seq, PAD);
+        batch.resize(m_seq * s2.manifest.eval_batch, PAD);
+        let out = s2.fwd(&Scheme::fp(), &batch).unwrap();
+        let pos = seq.len() - 1;
+        let next = argmax(&out.data[pos * vocab..(pos + 1) * vocab]) as i32;
+        want.push(next);
+        seq.push(next);
+    }
+
+    let engine = Engine::new(s, Scheme::fp()).unwrap();
+    let mut sched = Scheduler::new(engine);
+    let mut req = cushioncache::coordinator::Request::new(1, prompt, 4);
+    req.stop_token = None; // compare the full 4-token chain
+    sched.submit_request(req);
+    let resp = sched.run_to_completion().unwrap().pop().unwrap();
+    assert_eq!(resp.tokens, want, "serving path diverges from eval forward");
+}
+
+#[test]
+fn continuous_batching_isolates_requests() {
+    if !have_artifacts() {
+        return;
+    }
+    let run = |prompts: Vec<Vec<i32>>| -> Vec<Vec<i32>> {
+        let engine = Engine::new(session(), Scheme::fp()).unwrap();
+        let mut sched = Scheduler::new(engine);
+        let mut ids = Vec::new();
+        for p in prompts {
+            ids.push(sched.submit(p, 3));
+        }
+        let mut resp = sched.run_to_completion().unwrap();
+        resp.sort_by_key(|r| r.id);
+        resp.into_iter().map(|r| r.tokens).collect()
+    };
+    let s = session();
+    let a: Vec<i32> = s.corpus.split("heldout").unwrap().seq(2)[..16].to_vec();
+    let b: Vec<i32> = s.corpus.split("heldout").unwrap().seq(3)[..24].to_vec();
+    let solo = run(vec![a.clone()]);
+    let both = run(vec![a, b]);
+    assert_eq!(solo[0], both[0], "batching changed request A's output");
+}
+
+#[test]
+fn smoothquant_preserves_fp_function() {
+    if !have_artifacts() {
+        return;
+    }
+    // (x/s) @ (sW) == x @ W through the actual graphs: FP ppl unchanged.
+    let mut s = session();
+    let fp = Scheme::fp();
+    let before = perplexity(&s, &fp, "heldout", 1).unwrap();
+    let calib = calibrate::calibrate(&s, 1).unwrap();
+    let mut w = s.base_weights.clone();
+    let inv = cushioncache::quant::smoothquant::apply(
+        &mut w, &calib, s.manifest.n_layers, s.manifest.d_model,
+        s.manifest.act == "swiglu", 0.8,
+    )
+    .unwrap();
+    s.set_weights(w);
+    s.inv_smooth = inv;
+    let after = perplexity(&s, &fp, "heldout", 1).unwrap();
+    assert!(
+        (before - after).abs() / before < 5e-3,
+        "smoothing must be function-preserving: {before} vs {after}"
+    );
+}
+
+#[test]
+fn quarot_preserves_fp_function() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut s = session();
+    let fp = Scheme::fp();
+    let before = perplexity(&s, &fp, "heldout", 1).unwrap();
+    let mut w = s.base_weights.clone();
+    cushioncache::quant::quarot::apply(&mut w, &s.manifest).unwrap();
+    s.set_weights(w);
+    let after = perplexity(&s, &fp, "heldout", 1).unwrap();
+    assert!(
+        (before - after).abs() / before < 5e-3,
+        "rotation must be function-preserving: {before} vs {after}"
+    );
+}
+
+#[test]
+fn tcp_server_roundtrip() {
+    if !have_artifacts() {
+        return;
+    }
+    use std::io::{BufRead, BufReader, Write};
+    let engine = Engine::new(session(), Scheme::fp()).unwrap();
+    let sched = Scheduler::new(engine);
+    let addr = "127.0.0.1:7391";
+    let server = cushioncache::coordinator::server::Server::new(addr);
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+
+    // client thread: wait for bind, send one request, then "quit"
+    let handle = std::thread::spawn(move || {
+        let mut conn = None;
+        for _ in 0..100 {
+            if let Ok(c) = std::net::TcpStream::connect(addr) {
+                conn = Some(c);
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(100));
+        }
+        let mut conn = conn.expect("server did not bind");
+        writeln!(conn, r#"{{"prompt": [0, 10, 11, 12], "max_new": 3}}"#).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        writeln!(conn, "quit").unwrap();
+        line
+    });
+
+    server.serve(sched, stop).unwrap();
+    let line = handle.join().unwrap();
+    let v = cushioncache::util::json::parse(line.trim()).unwrap();
+    let toks = v.get("tokens").unwrap().as_arr().unwrap();
+    assert!(!toks.is_empty() && toks.len() <= 3, "bad response: {line}");
+    assert!(v.get("ttft_ms").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn weight_quant_is_mild_at_8_bits() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut s = session();
+    let fp = Scheme::fp();
+    let before = perplexity(&s, &fp, "heldout", 1).unwrap();
+    let mut w = s.base_weights.clone();
+    for name in w.names.clone() {
+        if cushioncache::quant::scales::is_quantized_weight(&name) {
+            cushioncache::quant::scales::quant_weight_inplace(
+                w.get_mut(&name).unwrap(), 8, 64);
+        }
+    }
+    s.set_weights(w);
+    let after = perplexity(&s, &fp, "heldout", 1).unwrap();
+    assert!(after < before * 1.1, "W8 should be near-lossless: {before} -> {after}");
+}

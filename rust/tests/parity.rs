@@ -1,0 +1,101 @@
+//! Cross-language parity: the Rust grammar/PRNG mirrors must reproduce
+//! the Python-generated corpus artifacts bit-for-bit, and the manifest /
+//! weights / tasks loaders must agree with what aot.py wrote.
+
+use cushioncache::data::corpus::Corpus;
+use cushioncache::data::grammar::{self, corpus_split};
+use cushioncache::data::tasks;
+use cushioncache::model::{Manifest, Weights};
+use cushioncache::util::fsutil;
+
+fn have_artifacts() -> bool {
+    fsutil::variant_dir("tl-llama").join("manifest.json").exists()
+}
+
+#[test]
+fn grammar_matches_python_corpus() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let corpus = Corpus::load(&fsutil::variant_dir("tl-llama").join("corpus.bin"))
+        .unwrap();
+    for (name, stream) in [
+        ("calib", grammar::STREAM_CALIB),
+        ("heldout", grammar::STREAM_HELDOUT),
+        ("trainsample", grammar::STREAM_TRAINSAMPLE),
+    ] {
+        let split = corpus.split(name).unwrap();
+        let ours = corpus_split(512, split.n_seqs, split.seq_len, stream,
+                                grammar::CORPUS_SEED);
+        for (i, seq) in ours.iter().enumerate() {
+            assert_eq!(split.seq(i), &seq[..], "split {name} seq {i} diverges");
+        }
+    }
+}
+
+#[test]
+fn grammar_matches_python_corpus_large_vocab() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = fsutil::variant_dir("tl-llama3");
+    if !dir.join("corpus.bin").exists() {
+        return;
+    }
+    let corpus = Corpus::load(&dir.join("corpus.bin")).unwrap();
+    let split = corpus.split("trainsample").unwrap();
+    let ours = corpus_split(1024, split.n_seqs, split.seq_len,
+                            grammar::STREAM_TRAINSAMPLE, grammar::CORPUS_SEED);
+    for (i, seq) in ours.iter().enumerate() {
+        assert_eq!(split.seq(i), &seq[..]);
+    }
+}
+
+#[test]
+fn manifest_and_weights_consistent() {
+    if !have_artifacts() {
+        return;
+    }
+    for variant in cushioncache::model::available_variants() {
+        let m = Manifest::load_variant(&variant).unwrap();
+        assert_eq!(m.variant, variant);
+        let w = Weights::load_variant(&variant, &m).unwrap();
+        assert!(w.total_params() > 100_000, "{variant}: too few params");
+        // the planted always-on channel: embed[:, one] == 1
+        let emb = w.get("embed").unwrap();
+        let one_dim = 245;
+        for t in 0..m.vocab {
+            assert_eq!(emb.at2(t, one_dim), 1.0, "{variant} embed one-dim");
+        }
+        for g in &m.graphs {
+            assert!(
+                fsutil::variant_dir(&variant)
+                    .join(format!("{g}.hlo.txt"))
+                    .exists(),
+                "{variant}: missing graph {g}"
+            );
+        }
+    }
+}
+
+#[test]
+fn tasks_load_and_are_well_formed() {
+    if !have_artifacts() {
+        return;
+    }
+    let all = tasks::load(&fsutil::variant_dir("tl-llama").join("tasks.bin"))
+        .unwrap();
+    let names: Vec<&str> = all.iter().map(|t| t.name.as_str()).collect();
+    for z in tasks::ZERO_SHOT {
+        assert!(names.contains(&z), "missing task {z}");
+    }
+    for t in &all {
+        for item in &t.items {
+            assert!(item.gold < item.candidates.len().max(1));
+            for c in &item.candidates {
+                assert!(c.iter().all(|&x| x >= 0 && (x as usize) < 512));
+            }
+        }
+    }
+}
