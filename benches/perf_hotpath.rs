@@ -1,19 +1,40 @@
 //! §Perf micro-bench: where does a serving step's time go?
-//! Breaks the decode step into components — graph execution vs host
-//! marshalling (the cache's host round-trip forced by the tuple-output
-//! PJRT wrapper) vs coordinator logic — and measures the eval forward
-//! and the pallas-vs-XLA-fusion artifact variants.
+//!
+//! Breaks the hot paths into components — eval forward, decode step,
+//! prefill, and the isolated cache-sized upload/download — and, per
+//! component, reports the host<->device transfer traffic per iteration
+//! (runtime::transfer counters). With the device-resident value pool the
+//! loop-invariant operands (weights, ranges, inv_smooth, cushion prefix
+//! KV) are uploaded exactly once per (re)configuration: the bench asserts
+//! this via the pool's per-key upload counts and emits the whole
+//! breakdown as `BENCH_perf_hotpath.json` at the repo root so the perf
+//! trajectory is tracked across PRs.
 
-use std::time::Instant;
-
-use cushioncache::bench::{summarize, time_n, Table};
+use cushioncache::bench::{emit_bench_json, summarize, time_n, Table, Timing};
 use cushioncache::coordinator::{Engine, Scheduler};
+use cushioncache::model::resident;
 use cushioncache::model::session::Session;
 use cushioncache::quant::calibrate;
 use cushioncache::quant::scheme::{Algorithm, Granularity, Scheme};
 use cushioncache::runtime::literalx::HostValue;
+use cushioncache::runtime::transfer::{self, TransferStats};
 use cushioncache::runtime::Client;
 use cushioncache::util::tensor::Tensor;
+
+/// Time `iters` runs of `f` after `warmup`, with the transfer-counter
+/// delta over the timed region.
+fn time_with_xfer<F: FnMut()>(
+    warmup: usize,
+    iters: usize,
+    mut f: F,
+) -> (Vec<f64>, TransferStats) {
+    for _ in 0..warmup {
+        f();
+    }
+    let base = transfer::snapshot();
+    let samples = time_n(0, iters, &mut f);
+    (samples, transfer::snapshot().delta_since(&base))
+}
 
 fn main() -> anyhow::Result<()> {
     cushioncache::util::logging::init();
@@ -28,7 +49,19 @@ fn main() -> anyhow::Result<()> {
         &format!("Perf — hot-path breakdown ({variant})"),
         &["component", "mean (ms)", "p50 (ms)", "p99 (ms)"],
     );
-    let mut row = |name: &str, samples: &[f64]| {
+    let mut xfer_table = Table::new(
+        &format!("Perf — transfers per iteration ({variant})"),
+        &["component", "uploads", "KB up", "fetches", "KB down"],
+    );
+    let mut components: Vec<(String, Timing)> = Vec::new();
+    let mut xfer_rows: Vec<(String, TransferStats, usize)> = Vec::new();
+    let mut record = |name: &str,
+                      samples: &[f64],
+                      xfer: Option<(TransferStats, usize)>,
+                      table: &mut Table,
+                      xfer_table: &mut Table,
+                      components: &mut Vec<(String, Timing)>,
+                      xfer_rows: &mut Vec<(String, TransferStats, usize)>| {
         let t = summarize(samples);
         table.row(vec![
             name.into(),
@@ -36,7 +69,29 @@ fn main() -> anyhow::Result<()> {
             format!("{:.2}", t.p50 * 1e3),
             format!("{:.2}", t.p99 * 1e3),
         ]);
+        components.push((name.to_string(), t));
+        if let Some((d, n)) = xfer {
+            let per = |v: u64| v as f64 / n.max(1) as f64;
+            xfer_table.row(vec![
+                name.into(),
+                format!("{:.1}", per(d.uploads)),
+                format!("{:.1}", per(d.bytes_uploaded) / 1024.0),
+                format!("{:.1}", per(d.fetches)),
+                format!("{:.1}", per(d.bytes_fetched) / 1024.0),
+            ]);
+            xfer_rows.push((name.to_string(), d, n));
+        }
     };
+    macro_rules! row {
+        ($name:expr, $samples:expr) => {
+            record($name, $samples, None, &mut table, &mut xfer_table,
+                   &mut components, &mut xfer_rows)
+        };
+        ($name:expr, $samples:expr, $xfer:expr, $n:expr) => {
+            record($name, $samples, Some(($xfer, $n)), &mut table,
+                   &mut xfer_table, &mut components, &mut xfer_rows)
+        };
+    }
 
     // ---- eval forward -----------------------------------------------------
     let mut s = Session::load_with_client(&variant, client.clone())?;
@@ -46,12 +101,12 @@ fn main() -> anyhow::Result<()> {
         let split = s.corpus.split("heldout")?;
         (0..s.manifest.eval_batch).flat_map(|i| split.seq(i).to_vec()).collect()
     };
-    let _ = s.fwd(&scheme, &tokens)?; // warm (compile)
-    row("fwd_pts (B=8, S=128)",
-        &time_n(1, iters, || { s.fwd(&scheme, &tokens).unwrap(); }));
-    let _ = s.fwd(&Scheme::fp(), &tokens)?;
-    row("fwd_fp  (B=8, S=128)",
-        &time_n(1, iters, || { s.fwd(&Scheme::fp(), &tokens).unwrap(); }));
+    let (pts, pts_x) =
+        time_with_xfer(1, iters, || { s.fwd(&scheme, &tokens).unwrap(); });
+    row!("fwd_pts (B=8, S=128)", &pts, pts_x, iters);
+    let (fp, fp_x) =
+        time_with_xfer(1, iters, || { s.fwd(&Scheme::fp(), &tokens).unwrap(); });
+    row!("fwd_fp  (B=8, S=128)", &fp, fp_x, iters);
 
     // pallas-kernel artifact variant, if present (tl-llama3)
     if s.manifest.graphs.iter().any(|g| g == "fwd_pts_pallas") {
@@ -66,15 +121,15 @@ fn main() -> anyhow::Result<()> {
                         vec![s.manifest.eval_batch, s.manifest.seq_len],
                         tokens.clone(),
                     )),
-                    HostValue::F32(s.ranges.clone()),
+                    HostValue::F32(s.ranges().clone()),
                     HostValue::scalar_f32(scheme.act_levels()),
-                    HostValue::F32(s.inv_smooth.clone()),
+                    HostValue::F32(s.inv_smooth().clone()),
                 ],
             )
             .unwrap();
         };
-        run_pallas();
-        row("fwd_pts_pallas (interpret)", &time_n(1, 5, run_pallas));
+        let (pl, _) = time_with_xfer(1, 5, run_pallas);
+        row!("fwd_pts_pallas (interpret)", &pl);
     }
 
     // ---- serving decode breakdown ----------------------------------------
@@ -92,33 +147,92 @@ fn main() -> anyhow::Result<()> {
     for _ in 0..9 {
         sched.step()?; // admit all prefills + first decodes
     }
-    row("decode step (batch 8)",
-        &time_n(1, iters, || { sched.step().unwrap(); }));
+    let (dec, dec_x) =
+        time_with_xfer(0, iters, || { sched.step().unwrap(); });
+    row!("decode step (batch 8)", &dec, dec_x, iters);
+
+    // residency: the loop invariants must have crossed to the device
+    // exactly once for this engine's whole serving history.
+    let pool = sched.engine.session.pool();
+    let mut resident_counts = Vec::new();
+    for key in [
+        resident::KEY_WEIGHTS,
+        resident::KEY_RANGES,
+        resident::KEY_INV_SMOOTH,
+        resident::KEY_PREFIX_KV,
+    ] {
+        let n = pool.upload_count(key);
+        resident_counts.push((key, n));
+        assert_eq!(
+            n, 1,
+            "loop-invariant operand '{key}' uploaded {n}x (expected once)"
+        );
+    }
+    println!(
+        "[perf] invariant uploads since engine setup: {}",
+        resident_counts
+            .iter()
+            .map(|(k, n)| format!("{k}={n}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
 
     // marshalling cost: cache-sized host<->device round trip
     let m = &sched.engine.session.manifest;
     let cache_elems =
         m.n_layers * 2 * m.serve_batch * m.n_kv_heads * m.cache_cap * m.d_head;
     let host = Tensor::zeros(&[cache_elems]);
-    row("cache upload (alone)", &time_n(1, iters, || {
+    let up = time_n(1, iters, || {
         let _ = client.upload(&host).unwrap();
-    }));
+    });
+    row!("cache upload (alone)", &up);
     let buf = client.upload(&host)?;
-    row("cache download (alone)", &time_n(1, iters, || {
+    let down = time_n(1, iters, || {
         let _ = cushioncache::runtime::literalx::fetch_f32(&buf).unwrap();
-    }));
+    });
+    row!("cache download (alone)", &down);
 
     // prefill
-    let t0 = Instant::now();
     let mut s3 = Session::load_with_client(&variant, client.clone())?;
     calibrate::calibrate_into(&mut s3, scheme.act_levels(), 1)?;
     let mut engine3 = Engine::new(s3, scheme)?;
-    engine3.prefill(0, &prompt)?; // warm
-    let _ = t0;
-    row("prefill (prompt 96)", &time_n(1, iters, || {
+    let (pre, pre_x) = time_with_xfer(1, iters, || {
         engine3.prefill(0, &prompt).unwrap();
-    }));
+    });
+    row!("prefill (prompt 96)", &pre, pre_x, iters);
 
     table.emit("perf_hotpath");
+    print!("{}", xfer_table.render());
+
+    // machine-readable snapshot at the repo root (cross-PR perf trail)
+    let mut extras = vec![(
+        "variant".to_string(),
+        format!("\"{}\"", cushioncache::bench::json_escape(&variant)),
+    )];
+    let mut xfer_json = String::from("{");
+    for (i, (name, d, n)) in xfer_rows.iter().enumerate() {
+        let per = |v: u64| v as f64 / (*n).max(1) as f64;
+        xfer_json.push_str(&format!(
+            "{}\"{}\": {{\"uploads\": {:.1}, \"kb_up\": {:.1}, \"fetches\": {:.1}, \"kb_down\": {:.1}}}",
+            if i == 0 { "" } else { ", " },
+            cushioncache::bench::json_escape(name),
+            per(d.uploads),
+            per(d.bytes_uploaded) / 1024.0,
+            per(d.fetches),
+            per(d.bytes_fetched) / 1024.0,
+        ));
+    }
+    xfer_json.push('}');
+    extras.push(("transfers_per_iter".to_string(), xfer_json));
+    let counts_json = resident_counts
+        .iter()
+        .map(|(k, n)| format!("\"{k}\": {n}"))
+        .collect::<Vec<_>>()
+        .join(", ");
+    extras.push((
+        "resident_upload_counts".to_string(),
+        format!("{{{counts_json}}}"),
+    ));
+    emit_bench_json("perf_hotpath", &components, &extras);
     Ok(())
 }

@@ -32,8 +32,8 @@ fn main() -> anyhow::Result<()> {
     let res = cushion::greedy_search(
         &s, &SearchCfg { vocab_stride: stride, max_len: 6, ..Default::default() })?;
     let kv = s.compute_prefix_kv(&res.prefix)?;
-    s.cushion = Some(Cushion { tokens: res.prefix.clone(),
-                               len: res.prefix.len(), kv });
+    s.set_cushion(Cushion { tokens: res.prefix.clone(),
+                            len: res.prefix.len(), kv });
     let (ppl1, acc1) = eval_cell(&mut s, &scheme, true)?;
     table.row(vec!["+ Greedy-searched init.".into(), format!("{ppl1:.2}"),
                    format!("{acc1:.2}")]);
@@ -41,16 +41,16 @@ fn main() -> anyhow::Result<()> {
     // + prefix tuning without the quantization-aware loss (lambda = 0)
     let t0 = cushion::tune::tune_prefix(
         &s, &res.prefix, &TuneCfg { lambda: 0.0, ..Default::default() })?;
-    s.cushion = Some(Cushion { tokens: res.prefix.clone(),
-                               len: res.prefix.len(), kv: t0.kv });
+    s.set_cushion(Cushion { tokens: res.prefix.clone(),
+                            len: res.prefix.len(), kv: t0.kv });
     let (ppl2, acc2) = eval_cell(&mut s, &scheme, true)?;
     table.row(vec!["+ Prefix tuning".into(), format!("{ppl2:.2}"),
                    format!("{acc2:.2}")]);
 
     // + quantization-aware loss (the full method, lambda = 0.01)
     let t1 = cushion::tune::tune_prefix(&s, &res.prefix, &TuneCfg::default())?;
-    s.cushion = Some(Cushion { tokens: res.prefix.clone(),
-                               len: res.prefix.len(), kv: t1.kv });
+    s.set_cushion(Cushion { tokens: res.prefix.clone(),
+                            len: res.prefix.len(), kv: t1.kv });
     let (ppl3, acc3) = eval_cell(&mut s, &scheme, true)?;
     table.row(vec!["+ Quantization-aware loss".into(), format!("{ppl3:.2}"),
                    format!("{acc3:.2}")]);

@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
         // NOTE: the cushion KV was computed pre-rotation; rotation is
         // function-preserving so the same token prefix is re-derived here.
         if with_cushion {
-            let tokens = s.cushion.as_ref().unwrap().tokens.clone();
+            let tokens = s.cushion().unwrap().tokens.clone();
             s.set_cushion_tokens(&tokens)?;
         }
         let (ppl, _) = eval_cell(&mut s, &pts, false)?;

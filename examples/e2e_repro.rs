@@ -62,12 +62,12 @@ fn main() -> anyhow::Result<()> {
         tuned.loss_trace.first().unwrap(), tuned.loss_trace.last().unwrap(),
         tuned.lq_trace.first().unwrap(), tuned.lq_trace.last().unwrap()
     );
-    s.cushion = Some(Cushion {
+    s.set_cushion(Cushion {
         tokens: search.prefix.clone(),
         len: search.prefix.len(),
         kv: tuned.kv,
     });
-    cushion::save_cushion(&variant, "e2e", s.cushion.as_ref().unwrap())?;
+    cushion::save_cushion(&variant, "e2e", s.cushion().unwrap())?;
 
     // ---- final evaluation with the cushion ------------------------------
     println!("\n{:24} {:>12} {:>14} {:>9}", "scheme", "no cushion", "+CushionCache", "delta");

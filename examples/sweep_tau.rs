@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
                          ..Default::default() },
         )?;
         let kv = s.compute_prefix_kv(&res.prefix)?;
-        s.cushion = Some(Cushion {
+        s.set_cushion(Cushion {
             tokens: res.prefix.clone(),
             len: res.prefix.len(),
             kv,

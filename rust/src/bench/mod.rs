@@ -118,10 +118,70 @@ pub fn out_dir() -> PathBuf {
     if let Ok(p) = std::env::var("CUSHION_BENCH_OUT") {
         return PathBuf::from(p);
     }
+    workspace_root().join("bench_out")
+}
+
+/// The workspace root (parent of the artifacts dir), `.` as fallback.
+pub fn workspace_root() -> PathBuf {
     crate::util::fsutil::artifacts_dir()
         .parent()
-        .map(|p| p.join("bench_out"))
-        .unwrap_or_else(|| PathBuf::from("bench_out"))
+        .filter(|p| !p.as_os_str().is_empty())
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| PathBuf::from("."))
+}
+
+// ---------------------------------------------------------------------------
+// Machine-readable bench snapshots (perf trajectory across PRs)
+// ---------------------------------------------------------------------------
+
+/// Minimal JSON string escaping for bench keys/values.
+pub fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            '\n' => "\\n".chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+/// Write `BENCH_<name>.json` at the workspace root: component -> timing
+/// stats in ms, plus pre-rendered extra JSON sections (key, raw value).
+/// The file is the cross-PR perf trail — every run overwrites it, and
+/// every run stamps its own provenance so a measured run is
+/// distinguishable from any hand-committed placeholder baseline.
+pub fn emit_bench_json(
+    name: &str,
+    components: &[(String, Timing)],
+    extras: &[(String, String)],
+) {
+    let mut body = String::from("{\n");
+    body.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(name)));
+    body.push_str(&format!(
+        "  \"provenance\": \"measured run of benches/{name}.rs\",\n"
+    ));
+    body.push_str("  \"components\": {\n");
+    for (i, (comp, t)) in components.iter().enumerate() {
+        body.push_str(&format!(
+            "    \"{}\": {{\"mean_ms\": {:.4}, \"p50_ms\": {:.4}, \"p99_ms\": {:.4}}}{}\n",
+            json_escape(comp),
+            t.mean * 1e3,
+            t.p50 * 1e3,
+            t.p99 * 1e3,
+            if i + 1 == components.len() { "" } else { "," },
+        ));
+    }
+    body.push_str("  }");
+    for (k, v) in extras {
+        body.push_str(&format!(",\n  \"{}\": {}", json_escape(k), v));
+    }
+    body.push_str("\n}\n");
+    let path = workspace_root().join(format!("BENCH_{name}.json"));
+    match std::fs::write(&path, body) {
+        Ok(()) => println!("[bench] wrote {}", path.display()),
+        Err(e) => eprintln!("[bench] could not write {}: {e}", path.display()),
+    }
 }
 
 /// Emit a long-form CSV of (series, x, y) triples — the figure format.

@@ -43,7 +43,7 @@ pub fn prepared(client: &Client, variant: &str, smooth: bool,
     }
     if with_cushion {
         let c = ensure_cushion(&mut s)?;
-        s.cushion = Some(c);
+        s.set_cushion(c);
     }
     Ok(s)
 }
@@ -56,7 +56,7 @@ pub fn apply_smooth(s: &mut Session) -> crate::Result<()> {
         s.manifest.act == "swiglu", SMOOTH_ALPHA,
     )?;
     s.set_weights(w);
-    s.inv_smooth = inv;
+    s.set_inv_smooth(inv);
     Ok(())
 }
 

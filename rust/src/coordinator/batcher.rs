@@ -56,7 +56,9 @@ impl Running {
         None
     }
 
-    pub fn into_response(self) -> Response {
+    /// Finalize with the real finish reason (from `should_stop`, or
+    /// `Cancelled` on shutdown).
+    pub fn into_response(self, finished: FinishReason) -> Response {
         let ttft = self
             .first_token_at
             .map(|t| t.duration_since(self.request.submitted).as_secs_f64())
@@ -66,7 +68,7 @@ impl Running {
             tokens: self.generated,
             ttft,
             tpot: self.tpot,
-            finished: FinishReason::MaxTokens,
+            finished,
         }
     }
 }
@@ -144,8 +146,9 @@ mod tests {
         r.push_token(2);
         r.push_token(3);
         assert_eq!(r.tpot.len(), 2); // first token counts toward TTFT
-        let resp = r.into_response();
+        let resp = r.into_response(FinishReason::StopToken);
         assert_eq!(resp.tokens, vec![1, 2, 3]);
+        assert_eq!(resp.finished, FinishReason::StopToken);
         assert!(resp.ttft >= 0.0);
     }
 }

@@ -1,17 +1,28 @@
 //! The serving engine: prefill/decode execution against one variant.
 //!
 //! One engine = one quantization scheme (the router owns several). The KV
-//! cache is threaded functionally through each graph call: the graph
-//! returns the updated cache as output 0, which replaces the engine's
-//! copy. xla_extension 0.5.1's PJRT wrapper returns multi-output programs
-//! as one tuple literal, so the cache makes a host round-trip per step
-//! (~10 MB memcpy, measured in EXPERIMENTS.md §Perf); weights stay
-//! device-resident.
+//! cache is threaded functionally through each graph call — the graph
+//! returns the updated cache as output 0 — and is held as a *device*
+//! value between steps: loop-invariant operands (weights, ranges,
+//! inv_smooth, the cushion prefix KV, the scheme's level scalars) are
+//! device-resident via the session's ResidentPool, and only the logits
+//! are materialized to host f32 per step (for argmax). xla_extension
+//! 0.5.1 still returns multi-output programs as one tuple literal, so the
+//! cache element crosses the boundary once per step as a raw literal —
+//! but without the seed's f32 `to_vec` conversion, `Tensor` re-alloc, or
+//! the per-step re-upload of every constant operand (that was ~10 MB of
+//! avoidable memcpy per step; see benches/perf_hotpath.rs for the
+//! before/after breakdown and BENCH_perf_hotpath.json for the trail).
+//! `set_host_roundtrip(true)` restores the seed's host round-trip
+//! semantics for parity tests; `cache_host()` fetches the cache for
+//! inspection.
+
+use std::rc::Rc;
 
 use crate::data::PAD;
 use crate::model::session::Session;
 use crate::quant::scheme::Scheme;
-use crate::runtime::literalx::{HostValue, IntTensor};
+use crate::runtime::literalx::{self, HostValue, IntTensor, OutValue, Value};
 use crate::util::tensor::Tensor;
 
 use super::kvcache::KvManager;
@@ -20,7 +31,17 @@ pub struct Engine {
     pub session: Session,
     pub scheme: Scheme,
     pub kv: KvManager,
-    cache: Tensor,
+    /// The physical KV cache [L, 2, B, Hkv, CAP, dh]: host only at init /
+    /// after reset, a device value across prefill/decode steps.
+    cache: Value,
+    /// Parity/debug knob: when set, the cache makes the seed's full
+    /// host round-trip (fetch to f32, re-upload next step) per step.
+    host_roundtrip: bool,
+    /// Engine-invariant scalar operands, uploaded once per engine. The
+    /// cushion-length scalar lives in the session's pool (keyed with the
+    /// prefix KV) so the (KV, len) pair is always coherent.
+    act_levels_buf: Rc<xla::PjRtBuffer>,
+    kv_levels_buf: Rc<xla::PjRtBuffer>,
     prefill_graph: String,
     decode_graph: String,
 }
@@ -28,40 +49,71 @@ pub struct Engine {
 impl Engine {
     pub fn new(session: Session, scheme: Scheme) -> crate::Result<Self> {
         let m = &session.manifest;
-        let cushion_len = session.cushion.as_ref().map(|c| c.len).unwrap_or(0);
+        let cushion_len = session.cushion().map(|c| c.len).unwrap_or(0);
         let kv = KvManager::new(m.serve_batch, m.m_max, m.cache_cap, cushion_len);
         let cache = kv.initial_cache(
             m.n_layers,
             m.n_kv_heads,
             m.d_head,
-            session.cushion.as_ref().map(|c| &c.kv),
+            session.cushion().map(|c| &c.kv),
         );
+        let client = session.registry.client();
+        let act_levels_buf = Rc::new(client.upload(&Tensor::scalar(scheme.act_levels()))?);
+        let kv_levels_buf = Rc::new(client.upload(&Tensor::scalar(scheme.kv_levels()))?);
         let suffix = scheme.gran.graph_suffix();
         Ok(Self {
             prefill_graph: format!("prefill_{suffix}"),
             decode_graph: format!("decode_{suffix}"),
             kv,
+            cache: Value::Host(HostValue::F32(cache)),
+            host_roundtrip: false,
+            act_levels_buf,
+            kv_levels_buf,
             scheme,
             session,
-            cache,
         })
     }
 
     /// Rebuild the cache with the session's (possibly new) cushion.
     pub fn reset_cache(&mut self) {
         let m = &self.session.manifest;
-        self.kv = KvManager::new(
-            m.serve_batch, m.m_max, m.cache_cap, self.cushion_len());
-        self.cache = self.kv.initial_cache(
+        let cushion_len = self.session.cushion().map(|c| c.len).unwrap_or(0);
+        self.kv = KvManager::new(m.serve_batch, m.m_max, m.cache_cap, cushion_len);
+        let cache = self.kv.initial_cache(
             m.n_layers,
             m.n_kv_heads,
             m.d_head,
-            self.session.cushion.as_ref().map(|c| &c.kv),
+            self.session.cushion().map(|c| &c.kv),
         );
+        self.cache = Value::Host(HostValue::F32(cache));
+    }
+
+    /// Force the seed's per-step host round-trip of the cache (decode
+    /// parity tests); the device-resident path is the default.
+    pub fn set_host_roundtrip(&mut self, on: bool) {
+        self.host_roundtrip = on;
     }
 
     pub fn cushion_len(&self) -> usize {
-        self.session.cushion.as_ref().map(|c| c.len).unwrap_or(0)
+        self.session.cushion().map(|c| c.len).unwrap_or(0)
+    }
+
+    /// The cache operand for the next step. A `Device` cache is a cheap
+    /// `Rc` clone; the `Host` form only exists right after init/reset
+    /// (one copy). Cloning (rather than moving the cache out) keeps the
+    /// engine retryable: a failed step leaves `self.cache` untouched.
+    fn cache_arg(&self) -> Value {
+        self.cache.clone()
+    }
+
+    /// Store the cache output of a step per the residency mode.
+    fn store_cache(&mut self, out: OutValue) -> crate::Result<()> {
+        self.cache = if self.host_roundtrip {
+            Value::Host(HostValue::F32(out.to_tensor()?))
+        } else {
+            out.into_value(self.session.registry.client())?
+        };
+        Ok(())
     }
 
     /// Prefill `tokens` into `slot`; returns the first generated token.
@@ -70,55 +122,50 @@ impl Engine {
         anyhow::ensure!(tokens.len() <= m.seq_len, "prompt too long");
         let mut padded = tokens.to_vec();
         padded.resize(m.seq_len, PAD);
-        let (pkv, _plen) = self.session.prefix_args();
-        let cache = std::mem::replace(&mut self.cache, Tensor::zeros(&[0]));
-        let outs = self.session.run(
+        let mut outs = self.session.run_values(
             &self.prefill_graph,
-            &[
-                HostValue::F32(cache),
-                HostValue::F32(pkv),
-                HostValue::scalar_i32(self.cushion_len() as i32),
-                HostValue::scalar_i32(slot as i32),
-                HostValue::I32(IntTensor::vec(padded)),
-                HostValue::scalar_i32(tokens.len() as i32),
-                HostValue::F32(self.session.ranges.clone()),
-                HostValue::scalar_f32(self.scheme.act_levels()),
-                HostValue::scalar_f32(self.scheme.kv_levels()),
-                HostValue::F32(self.session.inv_smooth.clone()),
+            vec![
+                self.cache_arg(),
+                self.session.prefix_kv_value()?,
+                self.session.prefix_len_value()?,
+                Value::scalar_i32(slot as i32),
+                Value::Host(HostValue::I32(IntTensor::vec(padded))),
+                Value::scalar_i32(tokens.len() as i32),
+                self.session.ranges_value()?,
+                Value::Device(self.act_levels_buf.clone()),
+                Value::Device(self.kv_levels_buf.clone()),
+                self.session.inv_smooth_value()?,
             ],
         )?;
         anyhow::ensure!(outs.len() == 2, "prefill: expected 2 outputs");
-        let mut it = outs.into_iter();
-        self.cache = it.next().unwrap();
-        let logits = it.next().unwrap();
+        let logits = outs.host_f32(1)?;
+        self.store_cache(outs.take(0)?)?;
         Ok(crate::eval::perplexity::argmax(&logits.data) as i32)
     }
 
     /// One decode step for all slots; `tokens[b]` is the last generated
     /// token of slot b (PAD for inactive slots). Returns next tokens [B].
     pub fn decode_step(&mut self, tokens: &[i32]) -> crate::Result<Vec<i32>> {
-        let m = &self.session.manifest;
-        anyhow::ensure!(tokens.len() == m.serve_batch);
-        let cache = std::mem::replace(&mut self.cache, Tensor::zeros(&[0]));
-        let outs = self.session.run(
+        let (serve_batch, v) =
+            (self.session.manifest.serve_batch, self.session.manifest.vocab);
+        anyhow::ensure!(tokens.len() == serve_batch);
+        let mut outs = self.session.run_values(
             &self.decode_graph,
-            &[
-                HostValue::F32(cache),
-                HostValue::I32(IntTensor::vec(self.kv.lens_i32())),
-                HostValue::scalar_i32(self.cushion_len() as i32),
-                HostValue::I32(IntTensor::vec(tokens.to_vec())),
-                HostValue::F32(self.session.ranges.clone()),
-                HostValue::scalar_f32(self.scheme.act_levels()),
-                HostValue::scalar_f32(self.scheme.kv_levels()),
-                HostValue::F32(self.session.inv_smooth.clone()),
+            vec![
+                self.cache_arg(),
+                Value::Host(HostValue::I32(IntTensor::vec(self.kv.lens_i32()))),
+                self.session.prefix_len_value()?,
+                Value::Host(HostValue::I32(IntTensor::vec(tokens.to_vec()))),
+                self.session.ranges_value()?,
+                Value::Device(self.act_levels_buf.clone()),
+                Value::Device(self.kv_levels_buf.clone()),
+                self.session.inv_smooth_value()?,
             ],
         )?;
         anyhow::ensure!(outs.len() == 2, "decode: expected 2 outputs");
-        let mut it = outs.into_iter();
-        self.cache = it.next().unwrap();
-        let logits = it.next().unwrap();
-        let v = m.vocab;
-        Ok((0..m.serve_batch)
+        let logits = outs.host_f32(1)?;
+        self.store_cache(outs.take(0)?)?;
+        Ok((0..serve_batch)
             .map(|b| {
                 crate::eval::perplexity::argmax(&logits.data[b * v..(b + 1) * v])
                     as i32
@@ -126,8 +173,13 @@ impl Engine {
             .collect())
     }
 
-    /// Host view of the cache (tests / debugging).
-    pub fn cache_host(&self) -> &Tensor {
-        &self.cache
+    /// Host view of the cache (tests / debugging): fetches from device
+    /// when the cache is resident there.
+    pub fn cache_host(&self) -> crate::Result<Tensor> {
+        match &self.cache {
+            Value::Host(HostValue::F32(t)) => Ok(t.clone()),
+            Value::Host(_) => anyhow::bail!("cache is not an f32 value"),
+            Value::Device(b) => literalx::fetch_f32(b),
+        }
     }
 }

@@ -48,20 +48,20 @@ impl KvManager {
         ]);
         if let Some(kv) = cushion_kv {
             assert_eq!(kv.shape, vec![n_layers, 2, n_kv_heads, self.m_max, d_head]);
+            // The m_max d_head-rows of one (l, w, h) source block are
+            // contiguous in both layouts (dest positions [0, m_max) sit at
+            // the head of the cap-row), so each lands as one slice copy.
+            let src_block = self.m_max * d_head;
+            let dst_row = self.cap * d_head;
             for l in 0..n_layers {
                 for w in 0..2 {
-                    for b in 0..self.n_slots {
-                        for h in 0..n_kv_heads {
-                            for p in 0..self.m_max {
-                                for d in 0..d_head {
-                                    let src = ((((l * 2 + w) * n_kv_heads + h)
-                                        * self.m_max + p) * d_head) + d;
-                                    let dst = (((((l * 2 + w) * self.n_slots + b)
-                                        * n_kv_heads + h) * self.cap + p)
-                                        * d_head) + d;
-                                    cache.data[dst] = kv.data[src];
-                                }
-                            }
+                    for h in 0..n_kv_heads {
+                        let s0 = ((l * 2 + w) * n_kv_heads + h) * src_block;
+                        let src = &kv.data[s0..s0 + src_block];
+                        for b in 0..self.n_slots {
+                            let d0 = (((l * 2 + w) * self.n_slots + b)
+                                * n_kv_heads + h) * dst_row;
+                            cache.data[d0..d0 + src_block].copy_from_slice(src);
                         }
                     }
                 }

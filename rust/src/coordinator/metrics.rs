@@ -1,7 +1,11 @@
-//! Serving metrics: TTFT, TPOT, throughput (the Table 8 quantities).
+//! Serving metrics: TTFT, TPOT, throughput (the Table 8 quantities),
+//! plus host<->device transfer accounting (bytes uploaded/fetched since
+//! the metrics were created) so the residency of loop-invariant operands
+//! is observable — see runtime::transfer and model::resident.
 
 use std::time::Instant;
 
+use crate::runtime::transfer::{self, TransferStats};
 use crate::util::stats;
 
 use super::request::Response;
@@ -9,6 +13,9 @@ use super::request::Response;
 #[derive(Debug)]
 pub struct Metrics {
     started: Instant,
+    /// Process-wide transfer counters at creation time; `transfer()`
+    /// reports movement since then.
+    xfer_base: TransferStats,
     pub prefill_seconds: Vec<f64>,
     pub decode_seconds: Vec<f64>,
     pub decode_batch_sizes: Vec<usize>,
@@ -22,6 +29,7 @@ impl Metrics {
     pub fn new() -> Self {
         Self {
             started: Instant::now(),
+            xfer_base: transfer::snapshot(),
             prefill_seconds: Vec::new(),
             decode_seconds: Vec::new(),
             decode_batch_sizes: Vec::new(),
@@ -30,6 +38,12 @@ impl Metrics {
             completed: 0,
             tokens_out: 0,
         }
+    }
+
+    /// Host<->device transfers since these metrics were created. The
+    /// counters are process-global, so co-resident engines share them.
+    pub fn transfer(&self) -> TransferStats {
+        transfer::snapshot().delta_since(&self.xfer_base)
     }
 
     pub fn record_prefill(&mut self, sec: f64) {
@@ -49,7 +63,12 @@ impl Metrics {
     }
 
     pub fn summary(&self) -> MetricsSummary {
+        let xfer = self.transfer();
         MetricsSummary {
+            uploads: xfer.uploads,
+            bytes_uploaded: xfer.bytes_uploaded,
+            fetches: xfer.fetches,
+            bytes_fetched: xfer.bytes_fetched,
             completed: self.completed,
             tokens_out: self.tokens_out,
             elapsed: self.started.elapsed().as_secs_f64(),
@@ -76,6 +95,10 @@ impl Default for Metrics {
 #[derive(Clone, Debug)]
 pub struct MetricsSummary {
     pub completed: usize,
+    pub uploads: u64,
+    pub bytes_uploaded: u64,
+    pub fetches: u64,
+    pub bytes_fetched: u64,
     pub tokens_out: usize,
     pub elapsed: f64,
     pub ttft_mean: f64,

@@ -96,8 +96,7 @@ impl Scheduler {
         match run.should_stop(self.engine.kv.remaining(slot)) {
             Some(reason) => {
                 self.engine.kv.free(slot);
-                let mut resp = run.into_response();
-                resp.finished = reason;
+                let resp = run.into_response(reason);
                 self.metrics.record_finished(&resp);
                 self.finished.push(resp);
             }
@@ -129,9 +128,7 @@ impl Scheduler {
         for slot in slots {
             let run = self.running.remove(&slot).unwrap();
             self.engine.kv.free(slot);
-            let mut resp = run.into_response();
-            resp.finished = FinishReason::Cancelled;
-            self.finished.push(resp);
+            self.finished.push(run.into_response(FinishReason::Cancelled));
         }
     }
 }

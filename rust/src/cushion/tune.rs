@@ -39,7 +39,7 @@ pub struct TuneResult {
 }
 
 /// Tune the KV of `prefix_tokens` (greedy-search output). Returns the
-/// tuned KV; install with `session.cushion = Some(Cushion { ... })`.
+/// tuned KV; install with `session.set_cushion(Cushion { ... })`.
 pub fn tune_prefix(session: &Session, prefix_tokens: &[i32],
                    cfg: &TuneCfg) -> crate::Result<TuneResult> {
     let t0 = Instant::now();
@@ -75,7 +75,7 @@ pub fn tune_prefix(session: &Session, prefix_tokens: &[i32],
                     HostValue::scalar_f32(cfg.lambda),
                     HostValue::scalar_f32(cfg.lr),
                     HostValue::scalar_f32(cfg.levels),
-                    HostValue::F32(session.inv_smooth.clone()),
+                    HostValue::F32(session.inv_smooth().clone()),
                 ],
             )?;
             anyhow::ensure!(out.len() == 5, "tune_step: expected 5 outputs");
@@ -106,7 +106,7 @@ pub fn tune_prefix(session: &Session, prefix_tokens: &[i32],
 pub fn install_tuned(session: &mut Session, prefix_tokens: &[i32],
                      cfg: &TuneCfg) -> crate::Result<TuneResult> {
     let res = tune_prefix(session, prefix_tokens, cfg)?;
-    session.cushion = Some(Cushion {
+    session.set_cushion(Cushion {
         tokens: prefix_tokens.to_vec(),
         len: prefix_tokens.len(),
         kv: res.kv.clone(),

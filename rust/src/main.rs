@@ -143,7 +143,7 @@ fn run() -> anyhow::Result<()> {
             } else {
                 cushion::tune::tune_prefix(&s, &res.prefix, &TuneCfg::default())?.kv
             };
-            s.cushion = Some(Cushion {
+            s.set_cushion(Cushion {
                 tokens: res.prefix.clone(),
                 len: res.prefix.len(),
                 kv,
@@ -156,7 +156,7 @@ fn run() -> anyhow::Result<()> {
                 s.manifest.variant,
                 scheme.label()
             );
-            let c = s.cushion.clone().unwrap();
+            let c = s.cushion().cloned().unwrap();
             let path = cushion::save_cushion(&s.manifest.variant, args.get("save"), &c)?;
             println!("saved {}", path.display());
             Ok(())
@@ -212,7 +212,7 @@ fn load_session(args: &cushioncache::util::cli::Args) -> anyhow::Result<Session>
     if !name.is_empty() {
         let c = cushion::load_cushion(&s.manifest.variant, name)?;
         log::info!("loaded cushion '{name}' ({} tokens)", c.len);
-        s.cushion = Some(c);
+        s.set_cushion(c);
     }
     Ok(s)
 }
@@ -248,6 +248,6 @@ fn maybe_smooth(s: &mut Session, args: &cushioncache::util::cli::Args) -> anyhow
         SMOOTH_ALPHA,
     )?;
     s.set_weights(w);
-    s.inv_smooth = inv;
+    s.set_inv_smooth(inv);
     Ok(())
 }

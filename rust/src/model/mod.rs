@@ -1,10 +1,12 @@
 //! Model metadata + weight bundle handling.
 
 pub mod manifest;
+pub mod resident;
 pub mod session;
 pub mod weights;
 
 pub use manifest::Manifest;
+pub use resident::ResidentPool;
 pub use session::{Cushion, Session, StatsOut};
 pub use weights::Weights;
 

@@ -1,0 +1,176 @@
+//! ResidentPool: device-resident caching of loop-invariant operands.
+//!
+//! Every graph in this system takes the same handful of operands on every
+//! call of a serving/eval loop: the weight bundle, the calibration
+//! `ranges`, the SmoothQuant `inv_smooth` scales, the cushion prefix KV,
+//! and (for the search scorer) the padded prefix tokens. The seed runtime
+//! re-uploaded all of them per call; this pool uploads each exactly once
+//! per (re)configuration and hands out shared `Rc<PjRtBuffer>` handles.
+//!
+//! Invalidation rules (dirty-tracking is by construction — the Session
+//! setters are the only mutation paths and each invalidates exactly the
+//! entries derived from what changed):
+//! * `Session::set_weights` / `reset_weights`  -> weights
+//! * `Session::set_ranges` (calibrate_into)    -> KEY_RANGES
+//! * `Session::set_inv_smooth`                 -> KEY_INV_SMOOTH
+//! * cushion install/clear (`set_cushion`,
+//!   `set_cushion_tokens`, `clear_cushion`)    -> KEY_PREFIX_KV + KEY_PREFIX_LEN
+//! * padded prefix tokens are content-keyed: a lookup with different
+//!   tokens replaces the entry automatically.
+//!
+//! Per-key upload counts are kept for observability: the residency tests
+//! and `benches/perf_hotpath.rs` assert "uploaded exactly once per
+//! configuration" through them.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::Mutex;
+
+use crate::runtime::literalx::HostValue;
+use crate::runtime::Client;
+
+use super::weights::Weights;
+
+/// Pool key: static-range calibration result, [n_sites, 2].
+pub const KEY_RANGES: &str = "ranges";
+/// Pool key: SmoothQuant inverse migration scales, [L, 2, d].
+pub const KEY_INV_SMOOTH: &str = "inv_smooth";
+/// Pool key: cushion prefix KV (or the all-zero empty prefix).
+pub const KEY_PREFIX_KV: &str = "prefix_kv";
+/// Pool key: the cushion prefix length scalar. Invalidated together with
+/// KEY_PREFIX_KV so the (KV, len) pair a graph sees is always coherent.
+pub const KEY_PREFIX_LEN: &str = "prefix_len";
+/// Upload-count key for the weight bundle (one count per full upload).
+pub const KEY_WEIGHTS: &str = "weights";
+/// Upload-count key for the padded prefix-token buffer.
+pub const KEY_PREFIX_TOKENS: &str = "prefix_tokens";
+
+// Locking note: `Rc<PjRtBuffer>` makes the pool (like the rest of the
+// PJRT-touching types here) !Send/!Sync, so these Mutexes can never be
+// contended — they are kept for consistency with the seed's idiom
+// (Session's old `weight_bufs: Mutex<..>`, Registry's compile cache) and
+// so that a future Rc->Arc swap (multi-engine scheduler) only has to
+// change the handle type, not the interior-mutability story.
+pub struct ResidentPool {
+    client: Client,
+    weights: Mutex<Option<Vec<Rc<xla::PjRtBuffer>>>>,
+    single: Mutex<HashMap<&'static str, Rc<xla::PjRtBuffer>>>,
+    /// Content-keyed cache of the padded prefix-token vector (the greedy
+    /// search scores thousands of candidate batches under one prefix).
+    tokens: Mutex<Option<(Vec<i32>, Rc<xla::PjRtBuffer>)>>,
+    uploads: Mutex<HashMap<&'static str, u64>>,
+}
+
+impl ResidentPool {
+    pub fn new(client: Client) -> Self {
+        Self {
+            client,
+            weights: Mutex::new(None),
+            single: Mutex::new(HashMap::new()),
+            tokens: Mutex::new(None),
+            uploads: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn client(&self) -> &Client {
+        &self.client
+    }
+
+    fn count_upload(&self, key: &'static str) {
+        *self.uploads.lock().unwrap().entry(key).or_insert(0) += 1;
+    }
+
+    /// How many times the entry under `key` has been uploaded since the
+    /// pool was created (KEY_WEIGHTS counts full-bundle uploads).
+    pub fn upload_count(&self, key: &str) -> u64 {
+        self.uploads.lock().unwrap().get(key).copied().unwrap_or(0)
+    }
+
+    // -- weight bundle ----------------------------------------------------
+
+    /// The device-resident weight bundle, uploading on first use.
+    pub fn weight_buffers(&self, w: &Weights) -> crate::Result<Vec<Rc<xla::PjRtBuffer>>> {
+        let mut guard = self.weights.lock().unwrap();
+        if guard.is_none() {
+            let bufs = w
+                .tensors
+                .iter()
+                .map(|t| Ok(Rc::new(self.client.upload(t)?)))
+                .collect::<crate::Result<Vec<_>>>()?;
+            self.count_upload(KEY_WEIGHTS);
+            *guard = Some(bufs);
+        }
+        Ok(guard.as_ref().unwrap().clone())
+    }
+
+    pub fn invalidate_weights(&self) {
+        *self.weights.lock().unwrap() = None;
+    }
+
+    // -- single-tensor invariants -----------------------------------------
+
+    /// The resident buffer under `key`, uploading `make()` on first use
+    /// (or after `invalidate(key)`).
+    pub fn get_or_upload(
+        &self,
+        key: &'static str,
+        make: impl FnOnce() -> HostValue,
+    ) -> crate::Result<Rc<xla::PjRtBuffer>> {
+        let mut guard = self.single.lock().unwrap();
+        if let Some(b) = guard.get(key) {
+            return Ok(b.clone());
+        }
+        let buf = self.client.upload_host(&make())?;
+        self.count_upload(key);
+        let rc = Rc::new(buf);
+        guard.insert(key, rc.clone());
+        Ok(rc)
+    }
+
+    pub fn invalidate(&self, key: &str) {
+        self.single.lock().unwrap().remove(key);
+    }
+
+    // -- padded prefix tokens (content-keyed) ------------------------------
+
+    /// Resident buffer for a padded prefix-token vector; re-uploaded only
+    /// when the tokens differ from the cached entry.
+    pub fn prefix_tokens(&self, padded: &[i32]) -> crate::Result<Rc<xla::PjRtBuffer>> {
+        let mut guard = self.tokens.lock().unwrap();
+        if let Some((cached, buf)) = guard.as_ref() {
+            if cached == padded {
+                return Ok(buf.clone());
+            }
+        }
+        let buf = Rc::new(self.client.upload_i32(padded, &[padded.len()])?);
+        self.count_upload(KEY_PREFIX_TOKENS);
+        *guard = Some((padded.to_vec(), buf.clone()));
+        Ok(buf)
+    }
+
+    /// Drop every resident entry (weights included).
+    pub fn clear(&self) {
+        self.invalidate_weights();
+        self.single.lock().unwrap().clear();
+        *self.tokens.lock().unwrap() = None;
+    }
+
+    /// Keys currently resident (debugging / tests).
+    pub fn resident_keys(&self) -> Vec<String> {
+        let mut keys: Vec<String> = self
+            .single
+            .lock()
+            .unwrap()
+            .keys()
+            .map(|k| k.to_string())
+            .collect();
+        if self.weights.lock().unwrap().is_some() {
+            keys.push(KEY_WEIGHTS.to_string());
+        }
+        if self.tokens.lock().unwrap().is_some() {
+            keys.push(KEY_PREFIX_TOKENS.to_string());
+        }
+        keys.sort();
+        keys
+    }
+}

@@ -5,21 +5,24 @@
 //! CushionCache drivers (cushion::search / cushion::tune), the evaluation
 //! harness (eval::*), and the serving engine (coordinator::engine).
 //!
-//! Weights are uploaded to the device once and reused across calls;
-//! `set_weights` (after a SmoothQuant/AWQ/QuaRot/weight-qdq transform)
-//! invalidates the cached device buffers.
-
-use std::sync::Mutex;
+//! Loop-invariant operands — the weight bundle, the calibration `ranges`,
+//! the SmoothQuant `inv_smooth` scales, the cushion prefix KV, the padded
+//! prefix tokens — live in a `ResidentPool` of device buffers, uploaded
+//! once and reused across calls. The quantization state is therefore
+//! private with invalidating setters (`set_ranges`, `set_inv_smooth`,
+//! `set_cushion*`), mirroring `set_weights`: each setter evicts exactly
+//! the pool entries derived from what changed.
 
 use crate::data::corpus::Corpus;
 use crate::quant::scales;
 use crate::quant::scheme::Scheme;
-use crate::runtime::literalx::{self, HostValue, IntTensor};
+use crate::runtime::literalx::{HostValue, IntTensor, Outputs, Value};
 use crate::runtime::{Client, Registry};
 use crate::util::fsutil;
 use crate::util::tensor::Tensor;
 
 use super::manifest::Manifest;
+use super::resident::{self, ResidentPool};
 use super::weights::Weights;
 
 /// A discovered CushionCache: the searched prefix tokens and their
@@ -34,15 +37,17 @@ pub struct Cushion {
 pub struct Session {
     pub manifest: Manifest,
     pub base_weights: Weights,
+    /// Current (possibly transformed) weights. Mutate via `set_weights`
+    /// only — direct writes would bypass the resident pool.
     pub weights: Weights,
     pub registry: Registry,
     pub corpus: Corpus,
     /// Static-range calibration result, [n_sites, 2] (lo, scale).
-    pub ranges: Tensor,
+    ranges: Tensor,
     /// SmoothQuant inverse migration scales, [L, 2, d] (ones = off).
-    pub inv_smooth: Tensor,
-    pub cushion: Option<Cushion>,
-    weight_bufs: Mutex<Option<Vec<xla::PjRtBuffer>>>,
+    inv_smooth: Tensor,
+    cushion: Option<Cushion>,
+    pool: ResidentPool,
 }
 
 pub struct StatsOut {
@@ -65,6 +70,7 @@ impl Session {
         let manifest = Manifest::load(&dir.join("manifest.json"))?;
         let weights = Weights::load(&dir.join("weights.bin"), &manifest)?;
         let corpus = Corpus::load(&dir.join("corpus.bin"))?;
+        let pool = ResidentPool::new(client.clone());
         let registry = Registry::new(client, dir);
         let n_sites = manifest.n_sites;
         let l = manifest.n_layers;
@@ -78,15 +84,20 @@ impl Session {
             ranges: scales::unit_ranges(n_sites),
             inv_smooth: Tensor::full(&[l, 2, d], 1.0),
             cushion: None,
-            weight_bufs: Mutex::new(None),
+            pool,
         })
+    }
+
+    /// The device-resident operand pool (observability / tests).
+    pub fn pool(&self) -> &ResidentPool {
+        &self.pool
     }
 
     // -- weight management ------------------------------------------------
 
     pub fn set_weights(&mut self, w: Weights) {
         self.weights = w;
-        *self.weight_bufs.lock().unwrap() = None;
+        self.pool.invalidate_weights();
     }
 
     pub fn reset_weights(&mut self) {
@@ -94,38 +105,98 @@ impl Session {
         self.set_weights(base);
     }
 
-    fn ensure_weight_bufs(&self) -> crate::Result<()> {
-        let mut guard = self.weight_bufs.lock().unwrap();
-        if guard.is_none() {
-            let client = self.registry.client();
-            let bufs = self
-                .weights
-                .tensors
-                .iter()
-                .map(|t| client.upload(t))
-                .collect::<crate::Result<Vec<_>>>()?;
-            *guard = Some(bufs);
-        }
-        Ok(())
+    // -- quantization state -----------------------------------------------
+
+    pub fn ranges(&self) -> &Tensor {
+        &self.ranges
     }
 
-    /// Execute graph `name` with the resident weights + these extra args.
-    /// Returns all outputs as host f32 tensors (XLA's root tuple is
-    /// decomposed transparently — see literalx::fetch_all_f32).
-    pub fn run(&self, name: &str, extra: &[HostValue]) -> crate::Result<Vec<Tensor>> {
-        self.ensure_weight_bufs()?;
+    /// Install new static calibration ranges (quant::calibrate_into).
+    pub fn set_ranges(&mut self, ranges: Tensor) {
+        self.ranges = ranges;
+        self.pool.invalidate(resident::KEY_RANGES);
+    }
+
+    pub fn inv_smooth(&self) -> &Tensor {
+        &self.inv_smooth
+    }
+
+    /// Install SmoothQuant inverse migration scales.
+    pub fn set_inv_smooth(&mut self, inv: Tensor) {
+        self.inv_smooth = inv;
+        self.pool.invalidate(resident::KEY_INV_SMOOTH);
+    }
+
+    // -- graph execution --------------------------------------------------
+
+    /// Execute graph `name` with the resident weights + these operands.
+    /// Outputs stay in runtime form; fetch only what you need (see
+    /// literalx::Outputs).
+    pub fn run_values(&self, name: &str, extra: Vec<Value>) -> crate::Result<Outputs> {
         let exe = self.registry.get(name)?;
-        let extra_bufs: Vec<xla::PjRtBuffer> = extra
-            .iter()
-            .map(|a| exe.upload(a))
-            .collect::<crate::Result<_>>()?;
-        let guard = self.weight_bufs.lock().unwrap();
-        let weights = guard.as_ref().unwrap();
-        let mut refs: Vec<&xla::PjRtBuffer> = weights.iter().collect();
-        refs.extend(extra_bufs.iter());
-        let outs = exe.run_buffers(&refs)?;
-        drop(guard);
-        literalx::fetch_all_f32(&outs)
+        let client = self.registry.client();
+        let mut bufs = self.pool.weight_buffers(&self.weights)?;
+        bufs.reserve(extra.len());
+        for v in extra {
+            bufs.push(v.into_buffer(client)?);
+        }
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().map(|b| b.as_ref()).collect();
+        exe.run_outputs(&refs)
+    }
+
+    /// Execute graph `name` with host args, fetching all outputs as f32
+    /// host tensors (compat path for drivers that consume everything).
+    /// Uploads straight from the borrowed args — no tensor clones.
+    pub fn run(&self, name: &str, extra: &[HostValue]) -> crate::Result<Vec<Tensor>> {
+        let exe = self.registry.get(name)?;
+        let client = self.registry.client();
+        let mut bufs = self.pool.weight_buffers(&self.weights)?;
+        bufs.reserve(extra.len());
+        for v in extra {
+            bufs.push(std::rc::Rc::new(client.upload_host(v)?));
+        }
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().map(|b| b.as_ref()).collect();
+        exe.run_outputs(&refs)?.into_tensors()
+    }
+
+    // -- pooled operand handles -------------------------------------------
+
+    /// Device-resident calibration ranges.
+    pub fn ranges_value(&self) -> crate::Result<Value> {
+        let buf = self
+            .pool
+            .get_or_upload(resident::KEY_RANGES, || HostValue::F32(self.ranges.clone()))?;
+        Ok(Value::Device(buf))
+    }
+
+    /// Device-resident SmoothQuant scales.
+    pub fn inv_smooth_value(&self) -> crate::Result<Value> {
+        let buf = self.pool.get_or_upload(resident::KEY_INV_SMOOTH, || {
+            HostValue::F32(self.inv_smooth.clone())
+        })?;
+        Ok(Value::Device(buf))
+    }
+
+    /// Device-resident cushion prefix KV (the all-zero empty prefix when
+    /// no cushion is installed).
+    pub fn prefix_kv_value(&self) -> crate::Result<Value> {
+        let buf = self.pool.get_or_upload(resident::KEY_PREFIX_KV, || {
+            HostValue::F32(match &self.cushion {
+                Some(c) => c.kv.clone(),
+                None => self.empty_prefix(),
+            })
+        })?;
+        Ok(Value::Device(buf))
+    }
+
+    /// Device-resident prefix length scalar. Pooled under the same
+    /// invalidation as the prefix KV, so a graph can never observe a new
+    /// KV with a stale length (or vice versa).
+    pub fn prefix_len_value(&self) -> crate::Result<Value> {
+        let buf = self.pool.get_or_upload(resident::KEY_PREFIX_LEN, || {
+            HostValue::scalar_i32(self.prefix_len())
+        })?;
+        Ok(Value::Device(buf))
     }
 
     // -- prefix helpers ---------------------------------------------------
@@ -134,7 +205,16 @@ impl Session {
         self.manifest.m_max
     }
 
-    /// (prefix_kv, prefix_len) inputs reflecting the current cushion.
+    pub fn cushion(&self) -> Option<&Cushion> {
+        self.cushion.as_ref()
+    }
+
+    pub fn prefix_len(&self) -> i32 {
+        self.cushion.as_ref().map(|c| c.len as i32).unwrap_or(0)
+    }
+
+    /// Host-side (prefix_kv, prefix_len) reflecting the current cushion
+    /// (analysis/bench path; the hot paths use `prefix_kv_value`).
     pub fn prefix_args(&self) -> (Tensor, i32) {
         match &self.cushion {
             Some(c) => (c.kv.clone(), c.len as i32),
@@ -163,15 +243,24 @@ impl Session {
         Ok(out.into_iter().next().unwrap())
     }
 
+    /// Install a cushion directly (search/tune/store results).
+    pub fn set_cushion(&mut self, c: Cushion) {
+        self.cushion = Some(c);
+        self.pool.invalidate(resident::KEY_PREFIX_KV);
+        self.pool.invalidate(resident::KEY_PREFIX_LEN);
+    }
+
     /// Install a cushion from prefix tokens (computes its KV).
     pub fn set_cushion_tokens(&mut self, tokens: &[i32]) -> crate::Result<()> {
         let kv = self.compute_prefix_kv(tokens)?;
-        self.cushion = Some(Cushion { tokens: tokens.to_vec(), len: tokens.len(), kv });
+        self.set_cushion(Cushion { tokens: tokens.to_vec(), len: tokens.len(), kv });
         Ok(())
     }
 
     pub fn clear_cushion(&mut self) {
         self.cushion = None;
+        self.pool.invalidate(resident::KEY_PREFIX_KV);
+        self.pool.invalidate(resident::KEY_PREFIX_LEN);
     }
 
     // -- eval forwards ----------------------------------------------------
@@ -183,36 +272,42 @@ impl Session {
         let m = &self.manifest;
         let b = m.eval_batch;
         anyhow::ensure!(tokens.len() == b * m.seq_len, "bad token batch size");
-        let (pkv, plen) = self.prefix_args();
         let name = format!("fwd_{}", scheme.gran.graph_suffix());
-        let mut out = self.run(
+        let out = self.run_values(
             &name,
-            &[
-                HostValue::F32(pkv),
-                HostValue::scalar_i32(plen),
-                HostValue::I32(IntTensor::new(vec![b, m.seq_len], tokens.to_vec())),
-                HostValue::F32(self.ranges.clone()),
-                HostValue::scalar_f32(scheme.act_levels()),
-                HostValue::F32(self.inv_smooth.clone()),
+            vec![
+                self.prefix_kv_value()?,
+                self.prefix_len_value()?,
+                Value::Host(HostValue::I32(IntTensor::new(
+                    vec![b, m.seq_len],
+                    tokens.to_vec(),
+                ))),
+                self.ranges_value()?,
+                Value::scalar_f32(scheme.act_levels()),
+                self.inv_smooth_value()?,
             ],
         )?;
         anyhow::ensure!(out.len() == 1, "fwd: expected 1 output");
-        Ok(out.pop().unwrap())
+        out.host_f32(0)
     }
 
     /// Analysis forward (stats graph) over one token batch.
     pub fn stats(&self, tokens: &[i32]) -> crate::Result<StatsOut> {
         let m = &self.manifest;
         let b = m.eval_batch;
-        let (pkv, plen) = self.prefix_args();
-        let out = self.run(
-            "stats",
-            &[
-                HostValue::F32(pkv),
-                HostValue::scalar_i32(plen),
-                HostValue::I32(IntTensor::new(vec![b, m.seq_len], tokens.to_vec())),
-            ],
-        )?;
+        let out = self
+            .run_values(
+                "stats",
+                vec![
+                    self.prefix_kv_value()?,
+                    self.prefix_len_value()?,
+                    Value::Host(HostValue::I32(IntTensor::new(
+                        vec![b, m.seq_len],
+                        tokens.to_vec(),
+                    ))),
+                ],
+            )?
+            .into_tensors()?;
         anyhow::ensure!(out.len() == 6, "stats: expected 6 outputs");
         let mut it = out.into_iter();
         Ok(StatsOut {
@@ -226,6 +321,9 @@ impl Session {
     }
 
     /// Greedy-search scorer: L_q for each candidate continuation token.
+    /// The padded prefix and the smoothing scales are device-resident —
+    /// one scoring round sweeps the whole vocab under a fixed prefix, so
+    /// only the candidate/text batches cross to the device per call.
     pub fn score_candidates(
         &self,
         prefix: &[i32],
@@ -238,17 +336,20 @@ impl Session {
         anyhow::ensure!(text.len() == m.score_text_len);
         let mut padded = prefix.to_vec();
         padded.resize(m.m_max, crate::data::PAD);
-        let out = self.run(
-            "score_lq",
-            &[
-                HostValue::I32(IntTensor::vec(padded)),
-                HostValue::scalar_i32(prefix.len() as i32),
-                HostValue::I32(IntTensor::vec(cands.to_vec())),
-                HostValue::I32(IntTensor::vec(text.to_vec())),
-                HostValue::scalar_f32(levels),
-                HostValue::F32(self.inv_smooth.clone()),
-            ],
-        )?;
+        let ptok = self.pool.prefix_tokens(&padded)?;
+        let out = self
+            .run_values(
+                "score_lq",
+                vec![
+                    Value::Device(ptok),
+                    Value::scalar_i32(prefix.len() as i32),
+                    Value::Host(HostValue::I32(IntTensor::vec(cands.to_vec()))),
+                    Value::Host(HostValue::I32(IntTensor::vec(text.to_vec()))),
+                    Value::scalar_f32(levels),
+                    self.inv_smooth_value()?,
+                ],
+            )?
+            .into_tensors()?;
         Ok(out.into_iter().next().unwrap().data)
     }
 }

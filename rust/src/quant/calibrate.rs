@@ -76,7 +76,7 @@ pub fn calibrate(session: &Session, max_batches: usize) -> crate::Result<CalibRe
 pub fn calibrate_into(session: &mut Session, levels: f32,
                       max_batches: usize) -> crate::Result<CalibResult> {
     let res = calibrate(session, max_batches)?;
-    session.ranges = res.minmax.to_ranges(levels);
+    session.set_ranges(res.minmax.to_ranges(levels));
     Ok(res)
 }
 

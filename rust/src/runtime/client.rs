@@ -2,6 +2,7 @@
 
 use std::sync::Arc;
 
+use super::transfer;
 use crate::util::tensor::Tensor;
 
 /// Shared PJRT client handle. `xla::PjRtClient` is internally
@@ -32,15 +33,36 @@ impl Client {
 
     /// Upload an f32 host tensor to the device.
     pub fn upload(&self, t: &Tensor) -> crate::Result<xla::PjRtBuffer> {
+        transfer::note_upload(4 * t.data.len());
         self.inner
             .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
             .map_err(|e| anyhow::anyhow!("upload f32 {:?}: {e:?}", t.shape))
     }
 
+    /// Upload either flavor of host value to the device.
+    pub fn upload_host(&self, v: &super::literalx::HostValue) -> crate::Result<xla::PjRtBuffer> {
+        use super::literalx::HostValue;
+        match v {
+            HostValue::F32(t) => self.upload(t),
+            HostValue::I32(t) => self.upload_i32(&t.data, &t.shape),
+        }
+    }
+
     /// Upload an i32 host tensor to the device.
     pub fn upload_i32(&self, data: &[i32], shape: &[usize]) -> crate::Result<xla::PjRtBuffer> {
+        transfer::note_upload(4 * data.len());
         self.inner
             .buffer_from_host_buffer::<i32>(data, shape, None)
             .map_err(|e| anyhow::anyhow!("upload i32 {shape:?}: {e:?}"))
+    }
+
+    /// Upload a literal as-is — the pass-through path for root-tuple
+    /// elements (e.g. the serving KV cache) that go straight back into the
+    /// next execute call without an f32 round-trip through `Tensor`.
+    pub fn upload_literal(&self, lit: &xla::Literal) -> crate::Result<xla::PjRtBuffer> {
+        transfer::note_upload(4 * super::literalx::literal_elems(lit));
+        self.inner
+            .buffer_from_host_literal(lit, None)
+            .map_err(|e| anyhow::anyhow!("upload literal: {e:?}"))
     }
 }

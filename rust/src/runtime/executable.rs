@@ -5,7 +5,7 @@ use std::path::Path;
 use std::time::Instant;
 
 use super::client::Client;
-use super::literalx::{self, HostValue};
+use super::literalx::{self, HostValue, Outputs};
 use crate::util::tensor::Tensor;
 
 pub struct Executable {
@@ -47,10 +47,7 @@ impl Executable {
 
     /// Upload a host value to a device buffer.
     pub fn upload(&self, v: &HostValue) -> crate::Result<xla::PjRtBuffer> {
-        match v {
-            HostValue::F32(t) => self.client.upload(t),
-            HostValue::I32(t) => self.client.upload_i32(&t.data, &t.shape),
-        }
+        self.client.upload_host(v)
     }
 
     /// Execute on device buffers; returns one buffer per graph output.
@@ -69,6 +66,12 @@ impl Executable {
         Ok(out.swap_remove(0))
     }
 
+    /// Execute on device buffers; outputs stay in runtime form so callers
+    /// fetch only what they need (see literalx::Outputs).
+    pub fn run_outputs(&self, args: &[&xla::PjRtBuffer]) -> crate::Result<Outputs> {
+        Outputs::from_execute(self.run_buffers(args)?)
+    }
+
     /// Convenience: upload host args, execute, fetch all outputs as f32.
     pub fn run_host(&self, args: &[HostValue]) -> crate::Result<Vec<Tensor>> {
         let bufs: Vec<xla::PjRtBuffer> = args
@@ -77,7 +80,7 @@ impl Executable {
             .collect::<crate::Result<_>>()?;
         let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
         let outs = self.run_buffers(&refs)?;
-        literalx::fetch_all_f32(&outs)
+        literalx::fetch_all_f32(outs)
     }
 
     pub fn mean_call_seconds(&self) -> f64 {

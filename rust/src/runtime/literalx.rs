@@ -1,5 +1,12 @@
-//! Host <-> PJRT marshalling helpers.
+//! Host <-> PJRT marshalling: host tensors, the `Value` abstraction for
+//! graph operands (host data vs device-resident buffers), and the
+//! `Outputs` view that keeps execute results in runtime form so callers
+//! fetch only the elements they actually need on the host.
 
+use std::rc::Rc;
+
+use super::client::Client;
+use super::transfer;
 use crate::util::tensor::Tensor;
 
 /// An i32 host tensor (token ids, lengths).
@@ -48,15 +55,174 @@ impl HostValue {
     }
 }
 
+/// A graph operand in runtime form: per-call host data that must be
+/// uploaded, or a device-resident buffer (weights, calibration ranges,
+/// smoothing scales, the cushion prefix KV, the serving KV cache) that is
+/// reused across calls without touching host memory. `Rc` because
+/// PjRtBuffer is not clonable but resident buffers are shared between the
+/// pool, the engine, and in-flight argument lists (the PJRT handles are
+/// single-threaded anyway — see model::resident for the locking story).
+#[derive(Clone)]
+pub enum Value {
+    Host(HostValue),
+    Device(Rc<xla::PjRtBuffer>),
+}
+
+impl Value {
+    pub fn scalar_f32(v: f32) -> Self {
+        Value::Host(HostValue::scalar_f32(v))
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Value::Host(HostValue::scalar_i32(v))
+    }
+
+    /// Materialize as a device buffer: uploads `Host`, passes `Device`
+    /// through untouched (no transfer).
+    pub fn into_buffer(self, client: &Client) -> crate::Result<Rc<xla::PjRtBuffer>> {
+        match self {
+            Value::Host(v) => Ok(Rc::new(client.upload_host(&v)?)),
+            Value::Device(b) => Ok(b),
+        }
+    }
+
+    pub fn is_device(&self) -> bool {
+        matches!(self, Value::Device(_))
+    }
+}
+
+impl std::fmt::Debug for Value {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Value::Host(h) => write!(f, "Value::Host({h:?})"),
+            Value::Device(_) => write!(f, "Value::Device(<PjRtBuffer>)"),
+        }
+    }
+}
+
+/// One output of an execute call, still in runtime form: a device buffer
+/// (PJRT returned per-output buffers), or an element literal of the
+/// fetched root tuple (xla_extension 0.5.1 cannot split the tuple
+/// on-device, so multi-output programs come back as one tuple literal —
+/// see `Outputs::from_execute`). A `Literal` element can be re-uploaded
+/// verbatim via `into_value` without converting through f32 host tensors.
+pub enum OutValue {
+    Device(xla::PjRtBuffer),
+    Literal(xla::Literal),
+}
+
+impl OutValue {
+    /// Bring this output to the host as an f32 tensor. `Device` incurs a
+    /// fetch; `Literal` is already host-side and only converts.
+    pub fn to_tensor(&self) -> crate::Result<Tensor> {
+        match self {
+            OutValue::Device(b) => fetch_f32(b),
+            OutValue::Literal(l) => literal_f32(l),
+        }
+    }
+
+    /// Keep this output on device for the next call: `Device` is wrapped
+    /// as-is; `Literal` is uploaded without an f32 conversion.
+    pub fn into_value(self, client: &Client) -> crate::Result<Value> {
+        match self {
+            OutValue::Device(b) => Ok(Value::Device(Rc::new(b))),
+            OutValue::Literal(l) => Ok(Value::Device(Rc::new(client.upload_literal(&l)?))),
+        }
+    }
+}
+
+/// The outputs of one execute call. Elements stay in runtime form until a
+/// caller fetches (`host_f32`) or claims (`take`) them, so pass-through
+/// state (the serving KV cache) never converts through host f32 vectors.
+pub struct Outputs {
+    vals: Vec<Option<OutValue>>,
+}
+
+impl Outputs {
+    /// Wrap raw execute outputs. XLA wraps multi-output programs in a
+    /// root tuple which PJRT returns as a single tuple-shaped buffer; it
+    /// is materialized to a host literal *once* here and decomposed into
+    /// element literals (the 0.5.1 wrapper offers no on-device split).
+    pub fn from_execute(bufs: Vec<xla::PjRtBuffer>) -> crate::Result<Outputs> {
+        if bufs.len() == 1 {
+            let mut lit = bufs[0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+            if lit.array_shape().is_err() {
+                // tuple output: decompose into element literals. One
+                // physical boundary crossing -> one fetch, total bytes.
+                let parts = lit
+                    .decompose_tuple()
+                    .map_err(|e| anyhow::anyhow!("decompose_tuple: {e:?}"))?;
+                let bytes: usize = parts.iter().map(|p| 4 * literal_elems(p)).sum();
+                transfer::note_fetch(bytes);
+                return Ok(Outputs {
+                    vals: parts.into_iter().map(|p| Some(OutValue::Literal(p))).collect(),
+                });
+            }
+            transfer::note_fetch(4 * literal_elems(&lit));
+            return Ok(Outputs { vals: vec![Some(OutValue::Literal(lit))] });
+        }
+        Ok(Outputs {
+            vals: bufs.into_iter().map(|b| Some(OutValue::Device(b))).collect(),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+
+    /// Claim output `i` in runtime form (for pass-through state).
+    pub fn take(&mut self, i: usize) -> crate::Result<OutValue> {
+        self.vals
+            .get_mut(i)
+            .and_then(|v| v.take())
+            .ok_or_else(|| anyhow::anyhow!("output {i} missing or already taken"))
+    }
+
+    /// Fetch output `i` to the host as an f32 tensor (leaves it in place).
+    pub fn host_f32(&self, i: usize) -> crate::Result<Tensor> {
+        self.vals
+            .get(i)
+            .and_then(|v| v.as_ref())
+            .ok_or_else(|| anyhow::anyhow!("output {i} missing or already taken"))?
+            .to_tensor()
+    }
+
+    /// Fetch every remaining output as an f32 host tensor, in order.
+    pub fn into_tensors(self) -> crate::Result<Vec<Tensor>> {
+        self.vals
+            .into_iter()
+            .enumerate()
+            .map(|(i, v)| {
+                v.ok_or_else(|| anyhow::anyhow!("output {i} already taken"))?
+                    .to_tensor()
+            })
+            .collect()
+    }
+}
+
+/// Element count of an array literal (0 for tuple shapes).
+pub(crate) fn literal_elems(lit: &xla::Literal) -> usize {
+    lit.array_shape()
+        .map(|s| s.dims().iter().map(|&d| d as usize).product())
+        .unwrap_or(0)
+}
+
 /// Download a PJRT output buffer into an f32 host tensor.
 pub fn fetch_f32(buf: &xla::PjRtBuffer) -> crate::Result<Tensor> {
     let lit = buf
         .to_literal_sync()
         .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+    transfer::note_fetch(4 * literal_elems(&lit));
     literal_f32(&lit)
 }
 
-/// Literal -> f32 host tensor.
+/// Literal -> f32 host tensor (host-side conversion, no device transfer).
 pub fn literal_f32(lit: &xla::Literal) -> crate::Result<Tensor> {
     let shape = lit
         .array_shape()
@@ -68,24 +234,10 @@ pub fn literal_f32(lit: &xla::Literal) -> crate::Result<Tensor> {
     Ok(Tensor::new(dims, data))
 }
 
-/// Fetch all outputs of an execute call as f32 host tensors. XLA wraps
-/// multi-output programs in a root tuple, which PJRT returns as a single
-/// tuple-shaped buffer — decompose it transparently.
-pub fn fetch_all_f32(outs: &[xla::PjRtBuffer]) -> crate::Result<Vec<Tensor>> {
-    if outs.len() == 1 {
-        let mut lit = outs[0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
-        if lit.array_shape().is_err() {
-            // tuple output: decompose into element literals
-            let parts = lit
-                .decompose_tuple()
-                .map_err(|e| anyhow::anyhow!("decompose_tuple: {e:?}"))?;
-            return parts.iter().map(literal_f32).collect();
-        }
-        return Ok(vec![literal_f32(&lit)?]);
-    }
-    outs.iter().map(fetch_f32).collect()
+/// Fetch all outputs of an execute call as f32 host tensors (the analysis
+/// path; the serving hot path uses `Outputs` and fetches selectively).
+pub fn fetch_all_f32(outs: Vec<xla::PjRtBuffer>) -> crate::Result<Vec<Tensor>> {
+    Outputs::from_execute(outs)?.into_tensors()
 }
 
 /// Download a PJRT output buffer into an i32 host tensor.
@@ -100,6 +252,7 @@ pub fn fetch_i32(buf: &xla::PjRtBuffer) -> crate::Result<IntTensor> {
     let data = lit
         .to_vec::<i32>()
         .map_err(|e| anyhow::anyhow!("to_vec<i32>: {e:?}"))?;
+    transfer::note_fetch(4 * data.len());
     Ok(IntTensor::new(dims, data))
 }
 
@@ -118,5 +271,11 @@ mod tests {
     #[should_panic]
     fn int_tensor_shape_checked() {
         IntTensor::new(vec![2, 2], vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn value_scalar_constructors_are_host() {
+        assert!(!Value::scalar_f32(1.0).is_device());
+        assert!(!Value::scalar_i32(3).is_device());
     }
 }

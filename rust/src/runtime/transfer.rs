@@ -1,0 +1,81 @@
+//! Process-wide host<->device transfer accounting.
+//!
+//! Every upload (`Client::upload*`) and every fetch (`literalx::fetch_*`,
+//! the root-tuple materialization in `Outputs::from_execute`) bumps these
+//! counters, so the serving metrics and the perf benches can attribute
+//! step time to marshalling vs graph execution and — more importantly —
+//! prove that loop-invariant operands (weights, ranges, inv_smooth, the
+//! cushion prefix KV) are *not* re-crossing the PCIe/host boundary per
+//! step. See model::resident for the per-operand upload counts.
+//!
+//! Counters are process-global atomics: cheap, always on, and safe to
+//! read from any thread. Consumers take a `snapshot()` before a region
+//! and `delta_since` after it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static UPLOADS: AtomicU64 = AtomicU64::new(0);
+static BYTES_UPLOADED: AtomicU64 = AtomicU64::new(0);
+static FETCHES: AtomicU64 = AtomicU64::new(0);
+static BYTES_FETCHED: AtomicU64 = AtomicU64::new(0);
+
+/// A point-in-time (or delta) view of the transfer counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransferStats {
+    pub uploads: u64,
+    pub bytes_uploaded: u64,
+    pub fetches: u64,
+    pub bytes_fetched: u64,
+}
+
+impl TransferStats {
+    /// Counter movement since `base` (an earlier snapshot).
+    pub fn delta_since(&self, base: &TransferStats) -> TransferStats {
+        TransferStats {
+            uploads: self.uploads - base.uploads,
+            bytes_uploaded: self.bytes_uploaded - base.bytes_uploaded,
+            fetches: self.fetches - base.fetches,
+            bytes_fetched: self.bytes_fetched - base.bytes_fetched,
+        }
+    }
+}
+
+/// Record one host->device upload of `bytes`.
+pub fn note_upload(bytes: usize) {
+    UPLOADS.fetch_add(1, Ordering::Relaxed);
+    BYTES_UPLOADED.fetch_add(bytes as u64, Ordering::Relaxed);
+}
+
+/// Record one device->host fetch of `bytes`.
+pub fn note_fetch(bytes: usize) {
+    FETCHES.fetch_add(1, Ordering::Relaxed);
+    BYTES_FETCHED.fetch_add(bytes as u64, Ordering::Relaxed);
+}
+
+/// Current cumulative counters.
+pub fn snapshot() -> TransferStats {
+    TransferStats {
+        uploads: UPLOADS.load(Ordering::Relaxed),
+        bytes_uploaded: BYTES_UPLOADED.load(Ordering::Relaxed),
+        fetches: FETCHES.load(Ordering::Relaxed),
+        bytes_fetched: BYTES_FETCHED.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deltas_track_notes() {
+        let base = snapshot();
+        note_upload(128);
+        note_upload(64);
+        note_fetch(256);
+        let d = snapshot().delta_since(&base);
+        assert_eq!(d.uploads, 2);
+        assert_eq!(d.bytes_uploaded, 192);
+        assert_eq!(d.fetches, 1);
+        assert_eq!(d.bytes_fetched, 256);
+    }
+}

@@ -81,11 +81,14 @@ impl Tensor {
 
     /// Per-column absolute maximum of a rank-2 tensor.
     pub fn col_absmax(&self) -> Vec<f32> {
-        let (r, c) = self.dims2();
+        let (_, c) = self.dims2();
         let mut out = vec![0.0f32; c];
-        for i in 0..r {
-            for (j, o) in out.iter_mut().enumerate() {
-                *o = o.max(self.data[i * c + j].abs());
+        if c == 0 {
+            return out;
+        }
+        for row in self.data.chunks_exact(c) {
+            for (o, &v) in out.iter_mut().zip(row) {
+                *o = o.max(v.abs());
             }
         }
         out
@@ -120,11 +123,14 @@ impl Tensor {
             }
             return;
         }
-        let (r, c) = self.dims2();
+        let (_, c) = self.dims2();
         assert_eq!(s.len(), c);
-        for i in 0..r {
-            for j in 0..c {
-                self.data[i * c + j] *= s[j];
+        if c == 0 {
+            return;
+        }
+        for row in self.data.chunks_exact_mut(c) {
+            for (v, &f) in row.iter_mut().zip(s) {
+                *v *= f;
             }
         }
     }

@@ -173,7 +173,7 @@ fn smoothquant_preserves_fp_function() {
     )
     .unwrap();
     s.set_weights(w);
-    s.inv_smooth = inv;
+    s.set_inv_smooth(inv);
     let after = perplexity(&s, &fp, "heldout", 1).unwrap();
     assert!(
         (before - after).abs() / before < 5e-3,

@@ -1,0 +1,216 @@
+//! Residency tests for the device-resident value pool: loop-invariant
+//! operands (weights, ranges, inv_smooth, cushion prefix KV) are uploaded
+//! exactly once per (re)configuration, the Session setters invalidate
+//! exactly what changed, and the device-resident decode path is
+//! token-for-token identical to the seed's host-round-trip semantics.
+//!
+//! Like the other integration tests these skip when `make artifacts` has
+//! not run, and each test owns its PJRT client. The transfer counters
+//! are process-global, so every test in this binary serializes on one
+//! lock to keep the byte-level assertions deterministic.
+
+use std::sync::{Mutex, MutexGuard};
+
+use cushioncache::coordinator::Engine;
+use cushioncache::model::resident;
+use cushioncache::model::session::Session;
+use cushioncache::quant::calibrate;
+use cushioncache::quant::scheme::{Algorithm, Granularity, Scheme};
+use cushioncache::runtime::transfer;
+use cushioncache::runtime::Client;
+use cushioncache::util::fsutil;
+
+static XFER_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize the whole binary's tests (poison-proof: a failed test must
+/// not cascade into lock panics elsewhere).
+fn serial() -> MutexGuard<'static, ()> {
+    XFER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn have_artifacts() -> bool {
+    fsutil::variant_dir("tl-llama").join("manifest.json").exists()
+}
+
+fn session() -> Session {
+    Session::load_with_client("tl-llama", Client::cpu().unwrap()).unwrap()
+}
+
+fn eval_tokens(s: &Session) -> Vec<i32> {
+    let split = s.corpus.split("heldout").unwrap();
+    (0..s.manifest.eval_batch)
+        .flat_map(|i| split.seq(i).to_vec())
+        .collect()
+}
+
+#[test]
+fn session_uploads_invariants_once() {
+    if !have_artifacts() {
+        return;
+    }
+    let _guard = serial();
+    let mut s = session();
+    let scheme = Scheme::w8a8(Granularity::PerTensorStatic, Algorithm::Naive);
+    calibrate::calibrate_into(&mut s, scheme.act_levels(), 1).unwrap();
+    let tokens = eval_tokens(&s);
+    for _ in 0..3 {
+        s.fwd(&scheme, &tokens).unwrap();
+    }
+    for key in [
+        resident::KEY_WEIGHTS,
+        resident::KEY_RANGES,
+        resident::KEY_INV_SMOOTH,
+        resident::KEY_PREFIX_KV,
+    ] {
+        assert_eq!(
+            s.pool().upload_count(key),
+            1,
+            "invariant '{key}' must upload exactly once across repeated runs"
+        );
+    }
+}
+
+#[test]
+fn setters_invalidate_exactly_what_changed() {
+    if !have_artifacts() {
+        return;
+    }
+    let _guard = serial();
+    let mut s = session();
+    let scheme = Scheme::w8a8(Granularity::PerTensorStatic, Algorithm::Naive);
+    calibrate::calibrate_into(&mut s, scheme.act_levels(), 1).unwrap();
+    let tokens = eval_tokens(&s);
+    s.fwd(&scheme, &tokens).unwrap();
+
+    // installing a cushion must re-upload only the prefix KV
+    s.set_cushion_tokens(&[cushioncache::data::BOS]).unwrap();
+    s.fwd(&scheme, &tokens).unwrap();
+    assert_eq!(s.pool().upload_count(resident::KEY_PREFIX_KV), 2);
+    assert_eq!(s.pool().upload_count(resident::KEY_RANGES), 1);
+    assert_eq!(s.pool().upload_count(resident::KEY_INV_SMOOTH), 1);
+    assert_eq!(s.pool().upload_count(resident::KEY_WEIGHTS), 1);
+
+    // recalibration must re-upload only the ranges
+    calibrate::calibrate_into(&mut s, scheme.act_levels(), 1).unwrap();
+    s.fwd(&scheme, &tokens).unwrap();
+    assert_eq!(s.pool().upload_count(resident::KEY_RANGES), 2);
+    assert_eq!(s.pool().upload_count(resident::KEY_PREFIX_KV), 2);
+    assert_eq!(s.pool().upload_count(resident::KEY_WEIGHTS), 1);
+
+    // swapping weights must re-upload only the bundle
+    let w = s.base_weights.clone();
+    s.set_weights(w);
+    s.fwd(&scheme, &tokens).unwrap();
+    assert_eq!(s.pool().upload_count(resident::KEY_WEIGHTS), 2);
+    assert_eq!(s.pool().upload_count(resident::KEY_RANGES), 2);
+    assert_eq!(s.pool().upload_count(resident::KEY_INV_SMOOTH), 1);
+
+    // clearing the cushion must drop the prefix KV entry again
+    s.clear_cushion();
+    s.fwd(&scheme, &tokens).unwrap();
+    assert_eq!(s.pool().upload_count(resident::KEY_PREFIX_KV), 3);
+}
+
+#[test]
+fn decode_steps_do_not_reupload_invariants() {
+    if !have_artifacts() {
+        return;
+    }
+    let _guard = serial();
+    let mut s = session();
+    let scheme = Scheme::w8a8(Granularity::PerTensorStatic, Algorithm::Naive);
+    calibrate::calibrate_into(&mut s, scheme.act_levels(), 1).unwrap();
+    let prompt: Vec<i32> = s.corpus.split("heldout").unwrap().seq(0)[..16].to_vec();
+    let weight_bytes: usize =
+        s.weights.tensors.iter().map(|t| 4 * t.data.len()).sum();
+    let cache_bytes = {
+        let m = &s.manifest;
+        4 * m.n_layers * 2 * m.serve_batch * m.n_kv_heads * m.cache_cap * m.d_head
+    };
+
+    let mut engine = Engine::new(s, scheme).unwrap();
+    let slot = engine.kv.alloc(1, prompt.len()).unwrap();
+    let mut last = engine.prefill(slot, &prompt).unwrap();
+    let b = engine.session.manifest.serve_batch;
+
+    let base = transfer::snapshot();
+    let steps = 4usize;
+    for _ in 0..steps {
+        let mut toks = vec![cushioncache::data::PAD; b];
+        toks[slot] = last;
+        last = engine.decode_step(&toks).unwrap()[slot];
+        engine.kv.push_token(slot);
+    }
+    let d = transfer::snapshot().delta_since(&base);
+
+    // per-step upload traffic: the (fallback) cache literal + tokens +
+    // lens; never the weight bundle or the other invariants.
+    let per_step_up = d.bytes_uploaded as usize / steps;
+    assert!(
+        per_step_up < cache_bytes + 64 * 1024,
+        "decode step uploads {per_step_up} B — invariants are leaking \
+         (cache is {cache_bytes} B, weights {weight_bytes} B)"
+    );
+    for key in [
+        resident::KEY_WEIGHTS,
+        resident::KEY_RANGES,
+        resident::KEY_INV_SMOOTH,
+        resident::KEY_PREFIX_KV,
+    ] {
+        assert_eq!(
+            engine.session.pool().upload_count(key),
+            1,
+            "'{key}' re-uploaded during decode"
+        );
+    }
+}
+
+#[test]
+fn device_resident_decode_matches_host_roundtrip() {
+    if !have_artifacts() {
+        return;
+    }
+    let _guard = serial();
+    let prompt_len = 20usize;
+    let steps = 6usize;
+    let run = |host_roundtrip: bool| -> (Vec<i32>, cushioncache::util::tensor::Tensor) {
+        let mut s = session();
+        let scheme = Scheme::w8a8(Granularity::PerTensorStatic, Algorithm::Naive);
+        calibrate::calibrate_into(&mut s, scheme.act_levels(), 1).unwrap();
+        s.set_cushion_tokens(&[cushioncache::data::BOS]).unwrap();
+        let prompt: Vec<i32> =
+            s.corpus.split("heldout").unwrap().seq(1)[..prompt_len].to_vec();
+        let mut engine = Engine::new(s, scheme).unwrap();
+        engine.set_host_roundtrip(host_roundtrip);
+        let slot = engine.kv.alloc(1, prompt.len()).unwrap();
+        let mut out = Vec::new();
+        let mut last = engine.prefill(slot, &prompt).unwrap();
+        out.push(last);
+        let b = engine.session.manifest.serve_batch;
+        for _ in 0..steps {
+            let mut toks = vec![cushioncache::data::PAD; b];
+            toks[slot] = last;
+            last = engine.decode_step(&toks).unwrap()[slot];
+            engine.kv.push_token(slot);
+            out.push(last);
+        }
+        (out, engine.cache_host().unwrap())
+    };
+    let (resident_toks, resident_cache) = run(false);
+    let (host_toks, host_cache) = run(true);
+    assert_eq!(
+        resident_toks, host_toks,
+        "device-resident decode diverges from host-round-trip semantics"
+    );
+    assert_eq!(resident_cache.shape, host_cache.shape);
+    let max_diff = resident_cache
+        .data
+        .iter()
+        .zip(&host_cache.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(
+        max_diff <= 1e-5,
+        "cache state diverges between residency modes (max |Δ| = {max_diff})"
+    );
+}
