@@ -177,6 +177,28 @@ fn main() -> anyhow::Result<()> {
             .join(" ")
     );
 
+    // ---- fault path: hostile requests under full load -------------------
+    // all 8 slots are busy with never-stopping requests; the bad ones
+    // must still drain as per-request errors on the next step, and the
+    // engine (and its 8 tenants) must stay alive.
+    let seq_len = sched.engine.session.manifest.seq_len;
+    let vocab = sched.engine.session.manifest.vocab as i32;
+    sched.submit(vec![5; seq_len + 1], 4); // prompt too long
+    sched.submit(vec![0, vocab + 9], 4); // out-of-vocab token
+    let (fault, _) = time_with_xfer(0, 1, || {
+        sched.step().unwrap();
+    });
+    row!("step w/ 2 rejections (batch 8)", &fault);
+    let faults = sched.take_finished();
+    let errored_now = faults.iter().filter(|r| r.finished.is_error()).count();
+    assert_eq!(errored_now, 2, "expected 2 per-request errors, engine alive");
+    assert_eq!(sched.running_count(), 8, "tenants lost to a bad request");
+    println!(
+        "[perf] fault path: {} per-request errors, {} running unharmed",
+        errored_now,
+        sched.running_count()
+    );
+
     // marshalling cost: cache-sized host<->device round trip
     let m = &sched.engine.session.manifest;
     let cache_elems =
@@ -232,6 +254,13 @@ fn main() -> anyhow::Result<()> {
     extras.push((
         "resident_upload_counts".to_string(),
         format!("{{{counts_json}}}"),
+    ));
+    extras.push((
+        "fault_path".to_string(),
+        format!(
+            "{{\"errored\": {}, \"rejected\": {}, \"cancelled\": {}}}",
+            sched.metrics.errored, sched.metrics.rejected, sched.metrics.cancelled
+        ),
     ));
     emit_bench_json("perf_hotpath", &components, &extras);
     Ok(())

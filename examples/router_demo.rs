@@ -45,17 +45,33 @@ fn main() -> anyhow::Result<()> {
         router.route(mode, req)?;
         sent.push((i + 1, mode));
     }
+    // fault isolation: an unknown mode fails at routing (per-request)…
+    assert!(router.route("w4", Request::new(90, g.document(8, &mut rng), 4)).is_err());
+    // …and an oversized prompt errors inside its engine without touching
+    // the other mode's traffic
+    let seq_len = router
+        .scheduler_mut("int8")
+        .unwrap()
+        .engine
+        .session
+        .manifest
+        .seq_len;
+    router.route("int8", Request::new(11, vec![5; seq_len + 1], 4))?;
+    sent.push((11, "int8"));
+
     let mut responses = router.run_to_completion()?;
     responses.sort_by_key(|r| r.id);
     for r in &responses {
         let mode = sent.iter().find(|(id, _)| *id == r.id).unwrap().1;
         println!(
-            "req {:2} [{:4}] {} tokens, ttft {:5.1} ms",
-            r.id, mode, r.tokens.len(), r.ttft * 1e3
+            "req {:2} [{:4}] {} tokens, ttft {:5.1} ms, finish {}",
+            r.id, mode, r.tokens.len(), r.ttft * 1e3, r.finished.as_str()
         );
     }
-    assert_eq!(responses.len(), 10);
+    assert_eq!(responses.len(), 11);
+    assert_eq!(responses.iter().filter(|r| r.finished.is_error()).count(), 1);
+    assert!(responses[..10].iter().all(|r| !r.finished.is_error()));
     assert_eq!(router.pending_assignments(), 0);
-    println!("all requests served; router drained cleanly");
+    println!("all requests served; bad ones errored alone; router drained cleanly");
     Ok(())
 }

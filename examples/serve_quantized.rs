@@ -76,6 +76,12 @@ fn main() -> anyhow::Result<()> {
             sched.submit(p, n);
         }
     }
+    // hostile traffic mixed in: an oversized prompt and an out-of-vocab
+    // token — both must become per-request errors, not engine failures
+    let seq_len = sched.engine.session.manifest.seq_len;
+    let vocab = sched.engine.session.manifest.vocab as i32;
+    sched.submit(vec![5; seq_len + 1], 4);
+    sched.submit(vec![cushioncache::data::BOS, vocab + 9], 4);
     while sched.has_work() || !pending.is_empty() {
         if let Some((_, p, n)) = pending.pop() {
             sched.submit(p, n);
@@ -83,8 +89,11 @@ fn main() -> anyhow::Result<()> {
         sched.step()?;
     }
     let m = sched.metrics.summary();
+    assert_eq!(m.errored, 2, "hostile requests should error per-request");
+    assert_eq!(m.completed, n_reqs, "valid requests must all survive");
     println!("\n== serve_quantized: {variant} / {} ==", scheme.label());
-    println!("requests          : {}", m.completed);
+    println!("requests          : {} ok, {} errored, {} rejected",
+             m.completed, m.errored, m.rejected);
     println!("wall-clock        : {:.2}s", t0.elapsed().as_secs_f64());
     println!("throughput        : {:.1} tok/s", m.tokens_per_second());
     println!("TTFT  mean / p99  : {:.1} / {:.1} ms", m.ttft_mean * 1e3, m.ttft_p99 * 1e3);

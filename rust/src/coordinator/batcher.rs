@@ -69,6 +69,7 @@ impl Running {
             ttft,
             tpot: self.tpot,
             finished,
+            echo_text: self.request.echo_text,
         }
     }
 }
@@ -101,6 +102,19 @@ impl Batcher {
         self.waiting.pop_front()
     }
 
+    /// Return a popped request to the head of the queue (admission saw
+    /// it but has no free slot yet; FIFO order is preserved).
+    pub fn push_front(&mut self, r: Request) {
+        self.waiting.push_front(r);
+    }
+
+    /// Remove a still-queued request (client disconnected before its
+    /// prefill was admitted).
+    pub fn remove(&mut self, id: RequestId) -> Option<Request> {
+        let pos = self.waiting.iter().position(|r| r.id == id)?;
+        self.waiting.remove(pos)
+    }
+
     pub fn waiting(&self) -> usize {
         self.waiting.len()
     }
@@ -119,6 +133,19 @@ mod tests {
         assert_eq!(b.pop().unwrap().id, a);
         assert_eq!(b.pop().unwrap().id, c);
         assert!(b.pop().is_none());
+    }
+
+    #[test]
+    fn remove_plucks_from_queue() {
+        let mut b = Batcher::new();
+        let a = b.submit(vec![1], 4);
+        let c = b.submit(vec![2], 4);
+        let d = b.submit(vec![3], 4);
+        assert_eq!(b.remove(c).unwrap().id, c);
+        assert!(b.remove(c).is_none());
+        assert_eq!(b.waiting(), 2);
+        assert_eq!(b.pop().unwrap().id, a);
+        assert_eq!(b.pop().unwrap().id, d);
     }
 
     #[test]

@@ -23,6 +23,13 @@ pub struct Metrics {
     pub tpot: Vec<f64>,
     pub completed: usize,
     pub tokens_out: usize,
+    /// Requests that ended with `FinishReason::Error` (admission
+    /// rejections and per-request execution failures).
+    pub errored: usize,
+    /// Requests refused before admission (bounded-queue overload).
+    pub rejected: usize,
+    /// Requests cancelled in flight (client disconnect / shutdown).
+    pub cancelled: usize,
 }
 
 impl Metrics {
@@ -37,6 +44,9 @@ impl Metrics {
             tpot: Vec::new(),
             completed: 0,
             tokens_out: 0,
+            errored: 0,
+            rejected: 0,
+            cancelled: 0,
         }
     }
 
@@ -56,10 +66,25 @@ impl Metrics {
     }
 
     pub fn record_finished(&mut self, r: &Response) {
+        if r.finished.is_error() {
+            self.errored += 1;
+            self.tokens_out += r.tokens.len();
+            return;
+        }
         self.completed += 1;
         self.tokens_out += r.tokens.len();
         self.ttft.push(r.ttft);
         self.tpot.extend_from_slice(&r.tpot);
+    }
+
+    /// A request refused before admission (queue overload).
+    pub fn record_rejected(&mut self) {
+        self.rejected += 1;
+    }
+
+    /// A request cancelled in flight.
+    pub fn record_cancelled(&mut self) {
+        self.cancelled += 1;
     }
 
     pub fn summary(&self) -> MetricsSummary {
@@ -70,6 +95,9 @@ impl Metrics {
             fetches: xfer.fetches,
             bytes_fetched: xfer.bytes_fetched,
             completed: self.completed,
+            errored: self.errored,
+            rejected: self.rejected,
+            cancelled: self.cancelled,
             tokens_out: self.tokens_out,
             elapsed: self.started.elapsed().as_secs_f64(),
             ttft_mean: stats::mean(&self.ttft),
@@ -95,6 +123,9 @@ impl Default for Metrics {
 #[derive(Clone, Debug)]
 pub struct MetricsSummary {
     pub completed: usize,
+    pub errored: usize,
+    pub rejected: usize,
+    pub cancelled: usize,
     pub uploads: u64,
     pub bytes_uploaded: u64,
     pub fetches: u64,
@@ -137,9 +168,23 @@ mod tests {
             ttft: 0.12,
             tpot: vec![0.05, 0.06],
             finished: FinishReason::MaxTokens,
+            echo_text: false,
         });
+        m.record_finished(&Response {
+            id: 2,
+            tokens: vec![],
+            ttft: 0.0,
+            tpot: vec![],
+            finished: FinishReason::Error("prompt does not fit".into()),
+            echo_text: false,
+        });
+        m.record_rejected();
+        m.record_cancelled();
         let s = m.summary();
         assert_eq!(s.completed, 1);
+        assert_eq!(s.errored, 1);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.cancelled, 1);
         assert_eq!(s.tokens_out, 3);
         assert!((s.tpot_mean - 0.055).abs() < 1e-9);
         assert!((s.mean_batch - 3.0).abs() < 1e-9);

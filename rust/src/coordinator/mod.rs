@@ -8,11 +8,16 @@
 //! * `engine`    — PJRT execution of prefill/decode with the cache kept
 //!                 on device between steps
 //! * `batcher`   — FIFO admission queue with continuous-batching policy
-//! * `scheduler` — the step loop: admit-one-prefill, decode-all-running
+//! * `scheduler` — the step loop: admit-prefills-into-every-free-slot,
+//!                 decode-all-running; request-level faults become
+//!                 `FinishReason::Error` responses, never engine errors
 //! * `router`    — routes requests across engines (per quantization mode
-//!                 or replicas)
-//! * `server`    — TCP line-protocol front end
-//! * `metrics`   — TTFT / TPOT / throughput accounting (Table 8)
+//!                 or replicas); `ServeBackend` abstracts one-vs-many for
+//!                 the server
+//! * `server`    — TCP line-protocol front end: streaming per-token
+//!                 lines, bounded admission, disconnect cancellation
+//! * `metrics`   — TTFT / TPOT / throughput accounting (Table 8) plus
+//!                 errored / rejected / cancelled fault-path counters
 
 pub mod batcher;
 pub mod engine;
@@ -24,5 +29,6 @@ pub mod scheduler;
 pub mod server;
 
 pub use engine::Engine;
-pub use request::{Request, RequestId, Response};
+pub use request::{FinishReason, Request, RequestId, Response};
+pub use router::{Router, ServeBackend};
 pub use scheduler::Scheduler;

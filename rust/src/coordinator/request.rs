@@ -1,4 +1,9 @@
 //! Request/response types of the serving path.
+//!
+//! `FinishReason::Error` is the fault-isolation boundary: anything wrong
+//! with a *single* request (oversized prompt, out-of-vocab token, a
+//! prefill that fails on its input) is reported here, as a per-request
+//! response, and must never surface as an engine/server error.
 
 use std::time::Instant;
 
@@ -11,6 +16,11 @@ pub struct Request {
     pub max_new_tokens: usize,
     /// Stop generation at this token (besides max_new_tokens).
     pub stop_token: Option<i32>,
+    /// Render the generated tokens as text in the summary line.
+    pub echo_text: bool,
+    /// Deliver each generated token as its own wire line before the
+    /// summary (the server reads this; the scheduler ignores it).
+    pub stream: bool,
     pub submitted: Instant,
 }
 
@@ -21,6 +31,8 @@ impl Request {
             prompt,
             max_new_tokens,
             stop_token: Some(crate::data::NL),
+            echo_text: false,
+            stream: false,
             submitted: Instant::now(),
         }
     }
@@ -35,13 +47,59 @@ pub struct Response {
     /// Per-output-token latencies (decode steps), seconds.
     pub tpot: Vec<f64>,
     pub finished: FinishReason,
+    /// Carried over from the request so the renderer knows whether to
+    /// detokenize into a "text" field.
+    pub echo_text: bool,
 }
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+impl Response {
+    /// A generation-free response for a request rejected at admission.
+    pub fn rejection(id: RequestId, echo_text: bool, why: String) -> Self {
+        Self::unserved(id, echo_text, FinishReason::Error(why))
+    }
+
+    /// A generation-free response for a request cancelled while still
+    /// queued (client disconnect / shutdown before admission).
+    pub fn cancelled(id: RequestId, echo_text: bool) -> Self {
+        Self::unserved(id, echo_text, FinishReason::Cancelled)
+    }
+
+    fn unserved(id: RequestId, echo_text: bool, finished: FinishReason) -> Self {
+        Self {
+            id,
+            tokens: Vec::new(),
+            ttft: 0.0,
+            tpot: Vec::new(),
+            finished,
+            echo_text,
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum FinishReason {
     MaxTokens,
     StopToken,
     Cancelled,
+    /// Request-level failure (admission rejection or per-request
+    /// execution failure). The request died; the engine did not.
+    Error(String),
+}
+
+impl FinishReason {
+    /// Wire label for the summary line's "finish" field.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::MaxTokens => "max_tokens",
+            FinishReason::StopToken => "stop_token",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::Error(_) => "error",
+        }
+    }
+
+    pub fn is_error(&self) -> bool {
+        matches!(self, FinishReason::Error(_))
+    }
 }
 
 #[cfg(test)]
@@ -53,5 +111,23 @@ mod tests {
         let r = Request::new(1, vec![0, 5, 6], 16);
         assert_eq!(r.stop_token, Some(crate::data::NL));
         assert_eq!(r.max_new_tokens, 16);
+        assert!(!r.echo_text);
+        assert!(!r.stream);
+    }
+
+    #[test]
+    fn finish_reason_labels() {
+        assert_eq!(FinishReason::MaxTokens.as_str(), "max_tokens");
+        assert_eq!(FinishReason::Error("x".into()).as_str(), "error");
+        assert!(FinishReason::Error("x".into()).is_error());
+        assert!(!FinishReason::Cancelled.is_error());
+    }
+
+    #[test]
+    fn rejection_is_empty_and_errored() {
+        let r = Response::rejection(9, true, "too big".into());
+        assert!(r.tokens.is_empty());
+        assert!(r.echo_text);
+        assert_eq!(r.finished, FinishReason::Error("too big".into()));
     }
 }

@@ -6,6 +6,75 @@ use std::collections::HashMap;
 use super::request::{Request, RequestId, Response};
 use super::scheduler::Scheduler;
 
+/// The front end serves either one scheduler or a mode router; this
+/// trait is the surface the serving loop needs from both.
+pub trait ServeBackend {
+    /// Submit a request, optionally to a named quantization mode.
+    /// `Err` carries a *routing* message (unknown mode) that the server
+    /// turns into a per-request error line — never a loop failure.
+    fn submit(&mut self, mode: Option<&str>, req: Request) -> Result<(), String>;
+    fn has_work(&self) -> bool;
+    fn step(&mut self) -> crate::Result<usize>;
+    fn take_finished(&mut self) -> Vec<Response>;
+    fn take_token_events(&mut self) -> Vec<(RequestId, i32)>;
+    fn cancel(&mut self, id: RequestId) -> bool;
+    fn cancel_all(&mut self);
+    /// Queued + running requests (the bounded-admission load measure).
+    fn load(&self) -> usize;
+    fn vocab(&self) -> usize;
+    fn record_rejected(&mut self);
+}
+
+impl ServeBackend for Scheduler {
+    fn submit(&mut self, mode: Option<&str>, req: Request) -> Result<(), String> {
+        match mode {
+            None => {
+                self.submit_request(req);
+                Ok(())
+            }
+            Some(m) => Err(format!(
+                "mode '{m}' unavailable: single-engine server (use the router)"
+            )),
+        }
+    }
+
+    fn has_work(&self) -> bool {
+        Scheduler::has_work(self)
+    }
+
+    fn step(&mut self) -> crate::Result<usize> {
+        Scheduler::step(self)
+    }
+
+    fn take_finished(&mut self) -> Vec<Response> {
+        Scheduler::take_finished(self)
+    }
+
+    fn take_token_events(&mut self) -> Vec<(RequestId, i32)> {
+        Scheduler::take_token_events(self)
+    }
+
+    fn cancel(&mut self, id: RequestId) -> bool {
+        Scheduler::cancel(self, id)
+    }
+
+    fn cancel_all(&mut self) {
+        Scheduler::cancel_all(self)
+    }
+
+    fn load(&self) -> usize {
+        self.batcher.waiting() + self.running_count()
+    }
+
+    fn vocab(&self) -> usize {
+        self.engine.session.manifest.vocab
+    }
+
+    fn record_rejected(&mut self) {
+        self.metrics.record_rejected();
+    }
+}
+
 pub struct Router {
     engines: Vec<(String, Scheduler)>,
     by_mode: HashMap<String, Vec<usize>>,
@@ -87,6 +156,110 @@ impl Router {
 
     pub fn pending_assignments(&self) -> usize {
         self.assignments.len()
+    }
+
+    /// Default mode when a request names none: the alphabetically first
+    /// (stable, independent of registration order).
+    pub fn default_mode(&self) -> Option<String> {
+        self.modes().into_iter().next()
+    }
+
+    /// Cancel a routed request wherever it currently lives.
+    pub fn cancel(&mut self, id: RequestId) -> bool {
+        if let Some(idx) = self.assignments.remove(&id) {
+            return self.engines[idx].1.cancel(id);
+        }
+        false
+    }
+
+    pub fn cancel_all(&mut self) {
+        for (_, sched) in self.engines.iter_mut() {
+            sched.cancel_all();
+        }
+        self.assignments.clear();
+    }
+
+    pub fn take_token_events(&mut self) -> Vec<(RequestId, i32)> {
+        let mut out = Vec::new();
+        for (_, sched) in self.engines.iter_mut() {
+            out.extend(sched.take_token_events());
+        }
+        out
+    }
+
+    /// Queued + running requests across every engine.
+    pub fn load(&self) -> usize {
+        self.engines
+            .iter()
+            .map(|(_, s)| s.batcher.waiting() + s.running_count())
+            .sum()
+    }
+}
+
+impl ServeBackend for Router {
+    fn submit(&mut self, mode: Option<&str>, req: Request) -> Result<(), String> {
+        let mode = match mode {
+            Some(m) => m.to_string(),
+            None => self
+                .default_mode()
+                .ok_or_else(|| "router has no engines".to_string())?,
+        };
+        self.route(&mode, req).map_err(|e| format!("{e:#}"))
+    }
+
+    fn has_work(&self) -> bool {
+        Router::has_work(self)
+    }
+
+    fn step(&mut self) -> crate::Result<usize> {
+        let mut produced = 0;
+        for (_, sched) in self.engines.iter_mut() {
+            if sched.has_work() {
+                produced += sched.step()?;
+            }
+        }
+        Ok(produced)
+    }
+
+    fn take_finished(&mut self) -> Vec<Response> {
+        let mut out = Vec::new();
+        for (_, sched) in self.engines.iter_mut() {
+            for r in sched.take_finished() {
+                self.assignments.remove(&r.id);
+                out.push(r);
+            }
+        }
+        out
+    }
+
+    fn take_token_events(&mut self) -> Vec<(RequestId, i32)> {
+        Router::take_token_events(self)
+    }
+
+    fn cancel(&mut self, id: RequestId) -> bool {
+        Router::cancel(self, id)
+    }
+
+    fn cancel_all(&mut self) {
+        Router::cancel_all(self)
+    }
+
+    fn load(&self) -> usize {
+        Router::load(self)
+    }
+
+    fn vocab(&self) -> usize {
+        self.engines
+            .first()
+            .map(|(_, s)| s.engine.session.manifest.vocab)
+            .unwrap_or(0)
+    }
+
+    fn record_rejected(&mut self) {
+        if let Some((_, s)) = self.engines.first_mut() {
+            // process-level counter; by convention it lives on engine 0
+            s.metrics.record_rejected();
+        }
     }
 }
 

@@ -1,6 +1,13 @@
-//! The continuous-batching step loop (vLLM-style): each step admits at
-//! most one waiting prefill into a free slot (prefill-priority keeps
-//! TTFT low), then runs one batched decode step over every running slot.
+//! The continuous-batching step loop (vLLM-style): each step admits
+//! waiting prefills into *every* free slot (prefill-priority keeps TTFT
+//! low), then runs one batched decode step over every running slot.
+//!
+//! Fault isolation: `step()` returning `Err` means the *engine* failed
+//! (a batched decode aborted — systemic, affects every slot). Anything
+//! wrong with a single request — an oversized or empty prompt, an
+//! out-of-vocab token, a prefill that rejects its input — is converted
+//! at admission into a `FinishReason::Error` response in `finished` and
+//! the loop keeps serving everyone else.
 
 use std::collections::HashMap;
 
@@ -17,6 +24,12 @@ pub struct Scheduler {
     pub metrics: Metrics,
     running: HashMap<usize, Running>, // slot -> running request
     finished: Vec<Response>,
+    /// (request, token) pairs in generation order since the last
+    /// `take_token_events` — the streaming front end drains these to
+    /// emit one wire line per generated token. Only requests submitted
+    /// with `stream: true` record events, so offline consumers that
+    /// never drain (benches, run_to_completion) accumulate nothing.
+    token_events: Vec<(RequestId, i32)>,
 }
 
 impl Scheduler {
@@ -27,6 +40,7 @@ impl Scheduler {
             metrics: Metrics::new(),
             running: HashMap::new(),
             finished: Vec::new(),
+            token_events: Vec::new(),
         }
     }
 
@@ -42,28 +56,96 @@ impl Scheduler {
         self.batcher.waiting() > 0 || !self.running.is_empty()
     }
 
+    /// Why `req` can never be served, if so: checked before a KV slot is
+    /// committed. `None` means the request is admissible (and with a
+    /// free slot, `kv.alloc` cannot fail).
+    pub fn admission_error(&self, req: &Request) -> Option<String> {
+        let m = &self.engine.session.manifest;
+        let kv = &self.engine.kv;
+        if req.prompt.is_empty() {
+            return Some("empty prompt".to_string());
+        }
+        if req.prompt.len() > m.seq_len {
+            return Some(format!(
+                "prompt too long: {} tokens exceeds the prefill window {}",
+                req.prompt.len(),
+                m.seq_len
+            ));
+        }
+        if kv.m_max + req.prompt.len() > kv.cap {
+            return Some(format!(
+                "prompt does not fit a kv slot: {} prefix + {} prompt > cap {}",
+                kv.m_max,
+                req.prompt.len(),
+                kv.cap
+            ));
+        }
+        if let Some(&t) = req
+            .prompt
+            .iter()
+            .find(|&&t| t < 0 || t as usize >= m.vocab)
+        {
+            return Some(format!("token {t} outside vocab [0, {})", m.vocab));
+        }
+        None
+    }
+
+    /// Finish `req` with a per-request error response (never an engine
+    /// error): the "one bad request crashes the fleet" class dies here.
+    fn reject(&mut self, req: Request, why: String) {
+        log::debug!("request {} rejected: {why}", req.id);
+        let resp = Response::rejection(req.id, req.echo_text, why);
+        self.metrics.record_finished(&resp);
+        self.finished.push(resp);
+    }
+
     /// One scheduler step. Returns the number of tokens produced.
+    /// `Err` is reserved for engine-level (batch-wide) failures.
     pub fn step(&mut self) -> crate::Result<usize> {
         let mut produced = 0;
 
-        // 1) admit one prefill if a slot is free
-        if self.engine.kv.free_count() > 0 {
-            if let Some(req) = self.batcher.pop() {
-                let slot = self
-                    .engine
-                    .kv
-                    .alloc(req.id, req.prompt.len())
-                    .ok_or_else(|| anyhow::anyhow!("prompt does not fit cache"))?;
-                let t0 = std::time::Instant::now();
-                let first = self.engine.prefill(slot, &req.prompt)?;
-                self.metrics.record_prefill(t0.elapsed().as_secs_f64());
-                let mut running = Running::new(req, slot);
-                // NOTE: `first` is generated but its KV is not cached yet;
-                // kv.tok_len stays at prompt_len until the decode step that
-                // feeds it (the cache invariant: tok_len == cached tokens).
-                running.push_token(first);
-                produced += 1;
-                self.maybe_finish(slot, running);
+        // 1) admit waiting prefills into every free slot. Inadmissible
+        //    requests are rejected even when no slot is free — a poisoned
+        //    queue must drain instead of festering behind long runners.
+        loop {
+            let Some(req) = self.batcher.pop() else { break };
+            if let Some(why) = self.admission_error(&req) {
+                self.reject(req, why);
+                continue;
+            }
+            if self.engine.kv.free_count() == 0 {
+                self.batcher.push_front(req);
+                break;
+            }
+            let Some(slot) = self.engine.kv.alloc(req.id, req.prompt.len()) else {
+                // unreachable after admission_error + free_count guard,
+                // but a rejection is still strictly better than a crash
+                self.reject(req, "no free kv slot".to_string());
+                continue;
+            };
+            let t0 = std::time::Instant::now();
+            match self.engine.prefill(slot, &req.prompt) {
+                Ok(first) => {
+                    self.metrics.record_prefill(t0.elapsed().as_secs_f64());
+                    let mut running = Running::new(req, slot);
+                    // NOTE: `first` is generated but its KV is not cached
+                    // yet; kv.tok_len stays at prompt_len until the decode
+                    // step that feeds it (the cache invariant: tok_len ==
+                    // cached tokens).
+                    running.push_token(first);
+                    if running.request.stream {
+                        self.token_events.push((running.request.id, first));
+                    }
+                    produced += 1;
+                    self.maybe_finish(slot, running);
+                }
+                Err(e) => {
+                    // prefill consumes only this request's input, so its
+                    // failure is request-scoped: free the slot, error the
+                    // request, keep the engine alive.
+                    self.engine.kv.free(slot);
+                    self.reject(req, format!("prefill failed: {e:#}"));
+                }
             }
         }
 
@@ -85,6 +167,9 @@ impl Scheduler {
                 // the token we just fed is now cached at position tok_len
                 self.engine.kv.push_token(slot);
                 run.push_token(next[slot]);
+                if run.request.stream {
+                    self.token_events.push((run.request.id, next[slot]));
+                }
                 produced += 1;
                 self.maybe_finish(slot, run);
             }
@@ -118,8 +203,39 @@ impl Scheduler {
         std::mem::take(&mut self.finished)
     }
 
+    /// Drain the per-token stream events accumulated since the last call.
+    pub fn take_token_events(&mut self) -> Vec<(RequestId, i32)> {
+        std::mem::take(&mut self.token_events)
+    }
+
     pub fn running_count(&self) -> usize {
         self.running.len()
+    }
+
+    /// Cancel one request (client disconnect): drops it from the waiting
+    /// queue, or frees its KV slot if already running. Returns true if
+    /// the request was found in either place.
+    pub fn cancel(&mut self, id: RequestId) -> bool {
+        if let Some(req) = self.batcher.remove(id) {
+            self.metrics.record_cancelled();
+            self.finished.push(Response::cancelled(req.id, req.echo_text));
+            return true;
+        }
+        let slot = self
+            .running
+            .iter()
+            .find(|(_, run)| run.request.id == id)
+            .map(|(&slot, _)| slot);
+        match slot {
+            Some(slot) => {
+                let run = self.running.remove(&slot).unwrap();
+                self.engine.kv.free(slot);
+                self.metrics.record_cancelled();
+                self.finished.push(run.into_response(FinishReason::Cancelled));
+                true
+            }
+            None => false,
+        }
     }
 
     /// Cancel everything in flight (server shutdown).
@@ -128,7 +244,12 @@ impl Scheduler {
         for slot in slots {
             let run = self.running.remove(&slot).unwrap();
             self.engine.kv.free(slot);
+            self.metrics.record_cancelled();
             self.finished.push(run.into_response(FinishReason::Cancelled));
+        }
+        while let Some(req) = self.batcher.pop() {
+            self.metrics.record_cancelled();
+            self.finished.push(Response::cancelled(req.id, req.echo_text));
         }
     }
 }

@@ -2,12 +2,46 @@
 //! vendor has no HTTP/tokio stack, and a line protocol keeps the demo
 //! client trivial: `nc localhost 7199`).
 //!
-//! Request:  {"prompt": [1, 2, 3], "max_new": 16}\n
-//! Response: {"id": 7, "tokens": [4, 5], "ttft_ms": 12.1, "text": "..."}\n
+//! ## Protocol (one JSON object per line, both directions)
+//!
+//! Request:
+//!   {"prompt": [1, 2, 3], "max_new": 16}
+//! with optional per-request fields:
+//!   "stream": true        — one line per generated token before the summary
+//!   "echo_text": true     — detokenize the output into a "text" field
+//!   "stop_token": 7|null  — override the default stop token (null = none)
+//!   "mode": "pts"         — quantization mode (multi-engine router only)
+//!
+//! Stream line (only with "stream": true), one per generated token:
+//!   {"id": 7, "token": 42, "index": 0}
+//!
+//! Summary line (always the request's final line):
+//!   {"id": 7, "tokens": [42, 17], "finish": "max_tokens",
+//!    "ttft_ms": 12.1, "tpot_ms": 4.0, "text": "..."}
+//! where "finish" is one of "max_tokens" | "stop_token" | "cancelled" |
+//! "error"; on "error" the line also carries "error": "<why>" and "text"
+//! appears only when "echo_text" was set.
+//!
+//! Error line (unparseable request — no id was ever assigned):
+//!   {"error": "json: ..."}
+//! Overload line (bounded admission queue full):
+//!   {"id": 7, "finish": "error", "error": "overloaded", ...}
+//!
+//! ## Fault isolation
+//!
+//! Every request-level failure — malformed JSON, non-integer or
+//! out-of-vocab prompt tokens, an oversized prompt, queue overload, a
+//! client disconnect mid-generation — is answered (or logged) on that
+//! request alone. The scheduler loop only propagates *engine* failures
+//! (a batched decode aborting); a bad request can never take the serving
+//! loop down.
 //!
 //! One acceptor thread; per-connection reader threads submit into an
-//! mpsc channel; the scheduler thread owns the engine and steps
-//! continuously, pushing responses back through per-request channels.
+//! mpsc channel; the scheduler thread owns the engine(s) and steps
+//! continuously. Responses and stream lines are rendered on the
+//! scheduler thread (which owns the tokenizer) and travel back through
+//! per-request channels as finished strings; a failed client write
+//! cancels the in-flight request and frees its KV slot.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -20,36 +54,84 @@ use crate::data::tokenizer::Tokenizer;
 use crate::util::json::{self, Value};
 
 use super::request::{Request, RequestId, Response};
+use super::router::{Router, ServeBackend};
 use super::scheduler::Scheduler;
 
+/// Default bound on queued+running requests before `overloaded`.
+pub const DEFAULT_QUEUE_LIMIT: usize = 64;
+
 enum Inbound {
-    Submit(Request, Sender<Response>),
+    Submit {
+        req: Request,
+        mode: Option<String>,
+        back: Sender<Outbound>,
+    },
+    Cancel(RequestId),
     Shutdown,
+}
+
+/// Pre-rendered wire lines headed back to one connection.
+enum Outbound {
+    /// A stream line; more lines follow for this request.
+    Line(String),
+    /// The request's final line (summary or error).
+    Done(String),
+}
+
+struct Waiter {
+    back: Sender<Outbound>,
+    stream: bool,
+    n_sent: usize,
 }
 
 pub struct Server {
     addr: String,
+    queue_limit: usize,
 }
 
 impl Server {
     pub fn new(addr: &str) -> Self {
-        Self { addr: addr.to_string() }
+        Self {
+            addr: addr.to_string(),
+            queue_limit: DEFAULT_QUEUE_LIMIT,
+        }
     }
 
-    /// Serve until `stop` flips. Blocks the calling thread.
-    pub fn serve(&self, mut sched: Scheduler, stop: Arc<AtomicBool>) -> crate::Result<()> {
+    /// Bound on queued+running requests before new ones are refused
+    /// with an `overloaded` error line.
+    pub fn with_queue_limit(mut self, limit: usize) -> Self {
+        self.queue_limit = limit.max(1);
+        self
+    }
+
+    /// Serve a single scheduler until `stop` flips. Blocks.
+    pub fn serve(&self, sched: Scheduler, stop: Arc<AtomicBool>) -> crate::Result<()> {
+        self.serve_backend(sched, stop)
+    }
+
+    /// Serve a multi-mode router (one process, several quantization
+    /// variants; requests pick a variant via "mode"). Blocks.
+    pub fn serve_router(&self, router: Router, stop: Arc<AtomicBool>) -> crate::Result<()> {
+        self.serve_backend(router, stop)
+    }
+
+    fn serve_backend<B: ServeBackend>(
+        &self,
+        mut backend: B,
+        stop: Arc<AtomicBool>,
+    ) -> crate::Result<()> {
         let listener = TcpListener::bind(&self.addr)?;
         listener.set_nonblocking(true)?;
         log::info!("cushiond listening on {}", self.addr);
         let (tx, rx): (Sender<Inbound>, Receiver<Inbound>) = channel();
         let next_id = Arc::new(AtomicU64::new(1));
-        let tokenizer = Tokenizer::new(sched.engine.session.manifest.vocab);
+        let vocab = backend.vocab();
+        let tokenizer = Tokenizer::new(vocab);
 
         // scheduler loop on this thread; acceptor inline (non-blocking)
-        let mut waiters: HashMap<RequestId, Sender<Response>> = HashMap::new();
+        let mut waiters: HashMap<RequestId, Waiter> = HashMap::new();
         loop {
             if stop.load(Ordering::Relaxed) {
-                sched.cancel_all();
                 break;
             }
             // accept new connections
@@ -59,7 +141,7 @@ impl Server {
                     let tx = tx.clone();
                     let ids = next_id.clone();
                     std::thread::spawn(move || {
-                        if let Err(e) = handle_conn(stream, tx, ids) {
+                        if let Err(e) = handle_conn(stream, tx, ids, vocab) {
                             log::warn!("connection error: {e:#}");
                         }
                     });
@@ -67,37 +149,101 @@ impl Server {
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
                 Err(e) => log::warn!("accept: {e}"),
             }
-            // drain inbound submissions
+            // drain inbound submissions / cancellations
             while let Ok(msg) = rx.try_recv() {
                 match msg {
-                    Inbound::Submit(req, back) => {
-                        waiters.insert(req.id, back);
-                        sched.submit_request(req);
+                    Inbound::Submit { req, mode, back } => {
+                        if backend.load() >= self.queue_limit {
+                            backend.record_rejected();
+                            let resp = Response::rejection(
+                                req.id,
+                                req.echo_text,
+                                "overloaded".to_string(),
+                            );
+                            let _ = back.send(Outbound::Done(render_response(
+                                &resp, None,
+                            )));
+                            continue;
+                        }
+                        let id = req.id;
+                        let waiter = Waiter {
+                            back,
+                            stream: req.stream,
+                            n_sent: 0,
+                        };
+                        match backend.submit(mode.as_deref(), req) {
+                            Ok(()) => {
+                                waiters.insert(id, waiter);
+                            }
+                            Err(why) => {
+                                // routing failure (e.g. unknown mode):
+                                // per-request error, loop stays alive
+                                let resp = Response::rejection(id, false, why);
+                                let _ = waiter
+                                    .back
+                                    .send(Outbound::Done(render_response(&resp, None)));
+                            }
+                        }
+                    }
+                    Inbound::Cancel(id) => {
+                        waiters.remove(&id);
+                        if backend.cancel(id) {
+                            log::debug!("request {id} cancelled (client gone)");
+                        }
                     }
                     Inbound::Shutdown => {
                         stop.store(true, Ordering::Relaxed);
                     }
                 }
             }
-            // advance the engine
-            if sched.has_work() {
-                sched.step()?;
-                for resp in sched.take_finished() {
-                    if let Some(back) = waiters.remove(&resp.id) {
-                        let _ = back.send(resp);
+            // advance the engine(s)
+            if backend.has_work() {
+                backend.step()?;
+                // stream lines first: a request's tokens must all be on
+                // the wire before its summary line
+                for (id, token) in backend.take_token_events() {
+                    if let Some(w) = waiters.get_mut(&id) {
+                        let index = w.n_sent;
+                        w.n_sent += 1;
+                        if w.stream {
+                            let line = render_token_line(id, token, index);
+                            if w.back.send(Outbound::Line(line)).is_err() {
+                                // conn thread is gone: free the slot now
+                                waiters.remove(&id);
+                                backend.cancel(id);
+                            }
+                        }
+                    }
+                }
+                for resp in backend.take_finished() {
+                    if let Some(w) = waiters.remove(&resp.id) {
+                        let line = render_response(&resp, Some(&tokenizer));
+                        let _ = w.back.send(Outbound::Done(line));
                     }
                 }
             } else {
                 std::thread::sleep(std::time::Duration::from_millis(2));
             }
         }
-        let _ = tokenizer;
+        // shutdown: cancel in-flight work and tell every waiter
+        backend.cancel_all();
+        for resp in backend.take_finished() {
+            if let Some(w) = waiters.remove(&resp.id) {
+                let _ = w
+                    .back
+                    .send(Outbound::Done(render_response(&resp, Some(&tokenizer))));
+            }
+        }
         Ok(())
     }
 }
 
-fn handle_conn(stream: TcpStream, tx: Sender<Inbound>,
-               ids: Arc<AtomicU64>) -> crate::Result<()> {
+fn handle_conn(
+    stream: TcpStream,
+    tx: Sender<Inbound>,
+    ids: Arc<AtomicU64>,
+    vocab: usize,
+) -> crate::Result<()> {
     let peer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     let mut writer = peer;
@@ -110,85 +256,251 @@ fn handle_conn(stream: TcpStream, tx: Sender<Inbound>,
             let _ = tx.send(Inbound::Shutdown);
             break;
         }
-        match parse_request(&line, &ids) {
-            Ok(req) => {
+        match parse_request(&line, &ids, vocab) {
+            Ok((req, mode)) => {
+                let id = req.id;
                 let (back_tx, back_rx) = channel();
-                tx.send(Inbound::Submit(req, back_tx))
-                    .map_err(|_| anyhow::anyhow!("scheduler gone"))?;
-                match back_rx.recv() {
-                    Ok(resp) => {
-                        writeln!(writer, "{}", render_response(&resp))?;
-                    }
-                    Err(_) => {
-                        writeln!(writer, "{{\"error\":\"cancelled\"}}")?;
-                        break;
+                if tx
+                    .send(Inbound::Submit {
+                        req,
+                        mode,
+                        back: back_tx,
+                    })
+                    .is_err()
+                {
+                    let _ = writeln!(writer, "{}", render_error_line(None, "scheduler gone"));
+                    break;
+                }
+                loop {
+                    match back_rx.recv() {
+                        Ok(Outbound::Line(l)) => {
+                            if writeln!(writer, "{l}").and_then(|_| writer.flush()).is_err()
+                            {
+                                // client disconnected mid-stream: cancel
+                                // the request so its KV slot frees up
+                                let _ = tx.send(Inbound::Cancel(id));
+                                return Ok(());
+                            }
+                        }
+                        Ok(Outbound::Done(l)) => {
+                            if writeln!(writer, "{l}").is_err() {
+                                return Ok(());
+                            }
+                            break;
+                        }
+                        Err(_) => {
+                            let _ = writeln!(
+                                writer,
+                                "{}",
+                                render_error_line(Some(id), "cancelled")
+                            );
+                            return Ok(());
+                        }
                     }
                 }
             }
             Err(e) => {
-                writeln!(writer, "{{\"error\":{}}}", json::s(&format!("{e:#}")))?;
+                writeln!(writer, "{}", render_error_line(None, &format!("{e:#}")))?;
             }
         }
     }
     Ok(())
 }
 
-pub fn parse_request(line: &str, ids: &AtomicU64) -> crate::Result<Request> {
-    let v = json::parse(line)?;
-    let prompt: Vec<i32> = v
+/// Parse one request line. Strict about the prompt: every entry must be
+/// an integer token id inside `[0, vocab)` — a hostile prompt must not
+/// be able to index outside the embedding table, and silently dropping
+/// bad entries (the old `filter_map`) hid client bugs.
+pub fn parse_request(
+    line: &str,
+    ids: &AtomicU64,
+    vocab: usize,
+) -> crate::Result<(Request, Option<String>)> {
+    let v = json::parse(line).map_err(|e| anyhow::anyhow!("json: {e:#}"))?;
+    let arr = v
         .req("prompt")?
         .as_arr()
-        .ok_or_else(|| anyhow::anyhow!("prompt must be an array"))?
-        .iter()
-        .filter_map(Value::as_i64)
-        .map(|t| t as i32)
-        .collect();
+        .ok_or_else(|| anyhow::anyhow!("prompt must be an array"))?;
+    let mut prompt = Vec::with_capacity(arr.len());
+    for (i, el) in arr.iter().enumerate() {
+        let n = el
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("prompt[{i}] is not a number"))?;
+        if !n.is_finite() || n.fract() != 0.0 {
+            anyhow::bail!("prompt[{i}] is not an integer token id: {n}");
+        }
+        if n < 0.0 || n >= vocab as f64 {
+            anyhow::bail!("prompt[{i}] = {n} outside vocab [0, {vocab})");
+        }
+        prompt.push(n as i32);
+    }
     anyhow::ensure!(!prompt.is_empty(), "empty prompt");
     let max_new = v.get("max_new").and_then(Value::as_usize).unwrap_or(16);
-    Ok(Request::new(ids.fetch_add(1, Ordering::Relaxed), prompt, max_new))
+    let mut req = Request::new(ids.fetch_add(1, Ordering::Relaxed), prompt, max_new);
+    if let Some(stop) = v.get("stop_token") {
+        req.stop_token = match stop {
+            Value::Null => None,
+            Value::Num(n) if n.fract() == 0.0 => Some(*n as i32),
+            other => anyhow::bail!("stop_token must be an integer or null, got {other}"),
+        };
+    }
+    req.echo_text = v.get("echo_text").and_then(Value::as_bool).unwrap_or(false);
+    req.stream = v.get("stream").and_then(Value::as_bool).unwrap_or(false);
+    let mode = match v.get("mode") {
+        None | Some(Value::Null) => None,
+        Some(Value::Str(s)) => Some(s.clone()),
+        Some(other) => anyhow::bail!("mode must be a string, got {other}"),
+    };
+    Ok((req, mode))
 }
 
-pub fn render_response(r: &Response) -> String {
+/// One stream line per generated token.
+pub fn render_token_line(id: RequestId, token: i32, index: usize) -> String {
     json::obj(vec![
+        ("id", json::num(id as f64)),
+        ("token", json::num(token as f64)),
+        ("index", json::num(index as f64)),
+    ])
+    .to_string()
+}
+
+/// An error line for a request that never got (or lost) an id.
+pub fn render_error_line(id: Option<RequestId>, msg: &str) -> String {
+    let mut kvs = Vec::new();
+    if let Some(id) = id {
+        kvs.push(("id", json::num(id as f64)));
+    }
+    kvs.push(("error", json::s(msg)));
+    json::obj(kvs).to_string()
+}
+
+/// The request's final summary line. `tokenizer` enables the "text"
+/// field for responses whose request set `echo_text`.
+pub fn render_response(r: &Response, tokenizer: Option<&Tokenizer>) -> String {
+    let mut kvs = vec![
         ("id", json::num(r.id as f64)),
         ("tokens", json::arr(r.tokens.iter().map(|&t| json::num(t as f64)))),
+        ("finish", json::s(r.finished.as_str())),
         ("ttft_ms", json::num(r.ttft * 1e3)),
         (
             "tpot_ms",
             json::num(crate::util::stats::mean(&r.tpot) * 1e3),
         ),
-    ])
-    .to_string()
+    ];
+    if let super::request::FinishReason::Error(why) = &r.finished {
+        kvs.push(("error", json::s(why)));
+    }
+    if r.echo_text {
+        if let Some(tok) = tokenizer {
+            kvs.push(("text", json::s(&tok.detokenize(&r.tokens))));
+        }
+    }
+    json::obj(kvs).to_string()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::FinishReason;
+
+    const VOCAB: usize = 512;
 
     #[test]
     fn parse_and_render() {
         let ids = AtomicU64::new(5);
-        let r = parse_request(r#"{"prompt": [0, 9, 12], "max_new": 4}"#, &ids).unwrap();
+        let (r, mode) =
+            parse_request(r#"{"prompt": [0, 9, 12], "max_new": 4}"#, &ids, VOCAB).unwrap();
         assert_eq!(r.prompt, vec![0, 9, 12]);
         assert_eq!(r.max_new_tokens, 4);
+        assert_eq!(r.stop_token, Some(crate::data::NL));
+        assert!(!r.stream && !r.echo_text);
+        assert!(mode.is_none());
         let resp = Response {
             id: r.id,
             tokens: vec![1, 2],
             ttft: 0.011,
             tpot: vec![0.004],
-            finished: crate::coordinator::request::FinishReason::MaxTokens,
+            finished: FinishReason::MaxTokens,
+            echo_text: false,
         };
-        let s = render_response(&resp);
+        let s = render_response(&resp, None);
         let v = json::parse(&s).unwrap();
         assert_eq!(v.req_usize("id").unwrap() as u64, r.id);
         assert_eq!(v.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.req_str("finish").unwrap(), "max_tokens");
+        assert!(v.get("error").is_none());
+        assert!(v.get("text").is_none());
+    }
+
+    #[test]
+    fn parse_request_options() {
+        let ids = AtomicU64::new(1);
+        let (r, mode) = parse_request(
+            r#"{"prompt": [4], "stream": true, "echo_text": true,
+                "stop_token": null, "mode": "pts"}"#,
+            &ids,
+            VOCAB,
+        )
+        .unwrap();
+        assert!(r.stream && r.echo_text);
+        assert_eq!(r.stop_token, None);
+        assert_eq!(mode.as_deref(), Some("pts"));
+
+        let (r, _) =
+            parse_request(r#"{"prompt": [4], "stop_token": 7}"#, &ids, VOCAB).unwrap();
+        assert_eq!(r.stop_token, Some(7));
     }
 
     #[test]
     fn bad_requests_rejected() {
         let ids = AtomicU64::new(1);
-        assert!(parse_request("{}", &ids).is_err());
-        assert!(parse_request(r#"{"prompt": []}"#, &ids).is_err());
-        assert!(parse_request("not json", &ids).is_err());
+        assert!(parse_request("{}", &ids, VOCAB).is_err());
+        assert!(parse_request(r#"{"prompt": []}"#, &ids, VOCAB).is_err());
+        assert!(parse_request("not json", &ids, VOCAB).is_err());
+        // non-integer entries must error, not be silently dropped
+        assert!(parse_request(r#"{"prompt": [1, 2.5]}"#, &ids, VOCAB).is_err());
+        assert!(parse_request(r#"{"prompt": [1, "x"]}"#, &ids, VOCAB).is_err());
+        assert!(parse_request(r#"{"prompt": [1, null]}"#, &ids, VOCAB).is_err());
+        // out-of-vocab token ids must be refused at the door
+        assert!(parse_request(r#"{"prompt": [-1]}"#, &ids, VOCAB).is_err());
+        assert!(parse_request(r#"{"prompt": [512]}"#, &ids, VOCAB).is_err());
+        assert!(parse_request(r#"{"prompt": [4], "stop_token": "x"}"#, &ids, VOCAB)
+            .is_err());
+        assert!(parse_request(r#"{"prompt": [4], "mode": 3}"#, &ids, VOCAB).is_err());
+    }
+
+    #[test]
+    fn render_error_and_text() {
+        let tok = Tokenizer::new(VOCAB);
+        let resp = Response {
+            id: 3,
+            tokens: vec![4, 5, crate::data::DOT],
+            ttft: 0.0,
+            tpot: vec![],
+            finished: FinishReason::Error("prompt does not fit".into()),
+            echo_text: true,
+        };
+        let v = json::parse(&render_response(&resp, Some(&tok))).unwrap();
+        assert_eq!(v.req_str("finish").unwrap(), "error");
+        assert_eq!(v.req_str("error").unwrap(), "prompt does not fit");
+        let text = v.req_str("text").unwrap();
+        assert!(text.contains('.'), "detokenized text missing: {text}");
+
+        // without a tokenizer the text field is simply absent
+        let v = json::parse(&render_response(&resp, None)).unwrap();
+        assert!(v.get("text").is_none());
+    }
+
+    #[test]
+    fn token_and_error_lines_are_valid_json() {
+        let v = json::parse(&render_token_line(7, 42, 0)).unwrap();
+        assert_eq!(v.req_usize("id").unwrap(), 7);
+        assert_eq!(v.req_usize("token").unwrap(), 42);
+        assert_eq!(v.req_usize("index").unwrap(), 0);
+        let v = json::parse(&render_error_line(None, "json: bad \"escape\"")).unwrap();
+        assert!(v.get("id").is_none());
+        assert!(v.req_str("error").unwrap().contains("escape"));
+        let v = json::parse(&render_error_line(Some(9), "overloaded")).unwrap();
+        assert_eq!(v.req_usize("id").unwrap(), 9);
     }
 }

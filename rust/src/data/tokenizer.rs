@@ -12,12 +12,18 @@ impl Tokenizer {
     pub fn new(vocab: usize) -> Self {
         Self {
             vocab,
-            tokens_per_topic: (vocab - N_SPECIAL as usize) / N_TOPICS,
+            tokens_per_topic: vocab.saturating_sub(N_SPECIAL as usize) / N_TOPICS,
         }
     }
 
     pub fn is_special(&self, id: i32) -> bool {
         id < N_SPECIAL
+    }
+
+    /// Is `id` a valid embedding-table index for this vocabulary?
+    /// The serving front end checks every prompt token against this.
+    pub fn in_vocab(&self, id: i32) -> bool {
+        id >= 0 && (id as usize) < self.vocab
     }
 
     pub fn topic_of(&self, id: i32) -> usize {
@@ -41,6 +47,11 @@ impl Tokenizer {
             x if x == NL => "<nl>".into(),
             x if x == DOT => "<dot>".into(),
             x if x == PAD => "<pad>".into(),
+            // total on arbitrary ids: echo_text renders model output,
+            // and rendering must never be the thing that panics
+            x if !self.in_vocab(x) || self.tokens_per_topic == 0 => {
+                format!("<unk{id}>")
+            }
             _ => format!("t{:02}w{:03}", self.topic_of(id), self.index_of(id)),
         }
     }
@@ -113,6 +124,20 @@ mod tests {
         assert!(s.contains('.'));
         assert!(s.contains('\n'));
         assert!(!s.contains("<bos>"));
+    }
+
+    #[test]
+    fn out_of_vocab_ids_render_totally() {
+        let t = Tokenizer::new(512);
+        assert!(t.in_vocab(0) && t.in_vocab(511));
+        assert!(!t.in_vocab(-1) && !t.in_vocab(512));
+        assert_eq!(t.id_to_str(512), "<unk512>");
+        assert_eq!(t.id_to_str(-7), "<unk-7>");
+        // tiny vocab: no topic blocks at all, still total
+        let tiny = Tokenizer::new(4);
+        assert_eq!(tiny.tokens_per_topic, 0);
+        assert_eq!(tiny.id_to_str(3), "<pad>");
+        assert_eq!(tiny.id_to_str(5), "<unk5>");
     }
 
     #[test]

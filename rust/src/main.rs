@@ -11,7 +11,7 @@ use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 use cushioncache::coordinator::server::Server;
-use cushioncache::coordinator::{Engine, Scheduler};
+use cushioncache::coordinator::{Engine, Router, Scheduler};
 use cushioncache::cushion::{self, SearchCfg, TuneCfg};
 use cushioncache::eval::{perplexity, tasks as evtasks};
 use cushioncache::model::session::{Cushion, Session};
@@ -54,6 +54,10 @@ fn run() -> anyhow::Result<()> {
     .opt("tau", "0.5", "search early-stop threshold")
     .opt("epochs", "2", "prefix-tuning epochs")
     .opt("addr", "127.0.0.1:7199", "serve address")
+    .opt("modes", "", "serve: comma-separated granularities behind one \
+         router (e.g. 'fp,pts'); '' = single engine with --gran")
+    .opt("queue-limit", "64", "serve: max queued+running requests before \
+         'overloaded' rejections")
     .flag("smooth", "apply SmoothQuant (alpha 0.8)")
     .flag("no-tune", "pipeline: skip the tuning stage");
     let args = cli.parse_env()?;
@@ -188,16 +192,35 @@ fn run() -> anyhow::Result<()> {
             Ok(())
         }
         "serve" => {
-            let mut s = load_session(&args)?;
-            maybe_smooth(&mut s, &args)?;
-            let scheme = scheme_of(&args)?;
-            if scheme.gran.needs_calibration() {
-                calibrate::calibrate_into(&mut s, scheme.act_levels(), 8)?;
+            let server = Server::new(args.get("addr"))
+                .with_queue_limit(args.get_usize("queue-limit")?);
+            let stop = Arc::new(AtomicBool::new(false));
+            let modes = args.get("modes");
+            if modes.is_empty() {
+                let mut s = load_session(&args)?;
+                maybe_smooth(&mut s, &args)?;
+                let scheme = scheme_of(&args)?;
+                if scheme.gran.needs_calibration() {
+                    calibrate::calibrate_into(&mut s, scheme.act_levels(), 8)?;
+                }
+                let engine = Engine::new(s, scheme)?;
+                server.serve(Scheduler::new(engine), stop)
+            } else {
+                // one process, several quantization variants: requests
+                // pick one with {"mode": "<gran>"}
+                let mut router = Router::new();
+                for mode in modes.split(',').map(str::trim).filter(|m| !m.is_empty()) {
+                    let mut s = load_session(&args)?;
+                    maybe_smooth(&mut s, &args)?;
+                    let scheme = scheme_for(gran_of(mode)?, &args)?;
+                    if scheme.gran.needs_calibration() {
+                        calibrate::calibrate_into(&mut s, scheme.act_levels(), 8)?;
+                    }
+                    router.add_engine(mode, Scheduler::new(Engine::new(s, scheme)?));
+                }
+                log::info!("router serving modes: {:?}", router.modes());
+                server.serve_router(router, stop)
             }
-            let engine = Engine::new(s, scheme)?;
-            let sched = Scheduler::new(engine);
-            let server = Server::new(args.get("addr"));
-            server.serve(sched, Arc::new(AtomicBool::new(false)))
         }
         other => anyhow::bail!(
             "unknown command '{other}'\ncommands: list | calibrate | search | \
@@ -218,7 +241,15 @@ fn load_session(args: &cushioncache::util::cli::Args) -> anyhow::Result<Session>
 }
 
 fn scheme_of(args: &cushioncache::util::cli::Args) -> anyhow::Result<Scheme> {
-    let gran = gran_of(args.get("gran"))?;
+    scheme_for(gran_of(args.get("gran"))?, args)
+}
+
+/// Scheme for one granularity, honoring the shared --bits/--smooth flags
+/// (the router serve path builds one per --modes entry).
+fn scheme_for(
+    gran: Granularity,
+    args: &cushioncache::util::cli::Args,
+) -> anyhow::Result<Scheme> {
     let bits = args.get_usize("bits")? as u32;
     let algorithm = if args.flag("smooth") {
         Algorithm::SmoothQuant { alpha: SMOOTH_ALPHA }

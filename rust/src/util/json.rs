@@ -97,7 +97,11 @@ impl fmt::Display for Value {
             Value::Null => write!(f, "null"),
             Value::Bool(b) => write!(f, "{b}"),
             Value::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literal; a bare `NaN` on
+                    // the wire is unparseable by any client
+                    write!(f, "null")
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -253,12 +257,7 @@ impl<'a> Parser<'a> {
                         b't' => out.push('\t'),
                         b'b' => out.push('\u{8}'),
                         b'f' => out.push('\u{c}'),
-                        b'u' => {
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
-                            let cp = u32::from_str_radix(hex, 16)?;
-                            self.i += 4;
-                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
-                        }
+                        b'u' => out.push(self.unicode_escape()?),
                         _ => anyhow::bail!("bad escape at byte {}", self.i),
                     }
                 }
@@ -276,6 +275,49 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Four hex digits of a `\u` escape, bounds-checked: truncated
+    /// input (`"\u12`) is a parse error, never a slice panic.
+    fn hex4(&mut self) -> crate::Result<u32> {
+        anyhow::ensure!(
+            self.i + 4 <= self.b.len(),
+            "truncated \\u escape at byte {}",
+            self.i
+        );
+        let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+        let cp = u32::from_str_radix(hex, 16)
+            .map_err(|_| anyhow::anyhow!("bad \\u escape '{hex}' at byte {}", self.i))?;
+        self.i += 4;
+        Ok(cp)
+    }
+
+    /// A `\u` escape, positioned just past the `u`. Decodes UTF-16
+    /// surrogate pairs (`\ud83d\ude00` -> one U+1F600) into the real
+    /// code point; a lone surrogate becomes U+FFFD (tolerated),
+    /// while truncation is an error (never a panic).
+    fn unicode_escape(&mut self) -> crate::Result<char> {
+        let cp = self.hex4()?;
+        if (0xD800..0xDC00).contains(&cp) {
+            // high surrogate: pairs with an immediately following
+            // \uDC00..\uDFFF low surrogate
+            if self.b.get(self.i) == Some(&b'\\') && self.b.get(self.i + 1) == Some(&b'u')
+            {
+                let save = self.i;
+                self.i += 2;
+                let lo = self.hex4()?;
+                if (0xDC00..0xE000).contains(&lo) {
+                    let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                    return Ok(char::from_u32(c).unwrap_or('\u{fffd}'));
+                }
+                // not a low surrogate: rewind and let the main loop
+                // handle that escape on its own
+                self.i = save;
+            }
+            return Ok('\u{fffd}');
+        }
+        // char::from_u32 is None exactly for lone low surrogates here
+        Ok(char::from_u32(cp).unwrap_or('\u{fffd}'))
     }
 
     fn number(&mut self) -> crate::Result<Value> {
@@ -381,6 +423,47 @@ mod tests {
     fn unicode_escape() {
         let v = parse(r#""Aé""#).unwrap();
         assert_eq!(v.as_str().unwrap(), "Aé");
+    }
+
+    #[test]
+    fn truncated_unicode_escape_is_err_not_panic() {
+        // every prefix of a \u escape at end-of-input must Err cleanly
+        for t in [r#""\u"#, r#""\u1"#, r#""\u12"#, r#""\u123"#, r#""\ud83d\ud"#] {
+            assert!(parse(t).is_err(), "{t:?} should be a parse error");
+        }
+        // in-bounds but non-hex is an error too (the closing quote is
+        // swallowed by the 4-byte window)
+        assert!(parse(r#""\u12g4""#).is_err());
+        assert!(parse(r#""\u12"x"#).is_err());
+    }
+
+    #[test]
+    fn surrogate_pairs_decode() {
+        let v = parse(r#""\ud83d\ude00""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{1F600}");
+        // astral round trip through an actual UTF-8 literal
+        let v = parse("\"\u{1F600}\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{1F600}");
+        // lone surrogates tolerate as replacement chars
+        assert_eq!(parse(r#""\ud83dx""#).unwrap().as_str().unwrap(), "\u{fffd}x");
+        assert_eq!(parse(r#""\ude00""#).unwrap().as_str().unwrap(), "\u{fffd}");
+        // high surrogate followed by a non-surrogate escape: both decode
+        assert_eq!(
+            parse(r#""\ud83dA""#).unwrap().as_str().unwrap(),
+            "\u{fffd}A"
+        );
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        assert_eq!(Value::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Value::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Value::Num(f64::NEG_INFINITY).to_string(), "null");
+        // and stay parseable inside a document
+        let doc = obj(vec![("tpot_ms", num(f64::NAN)), ("n", num(2.0))]);
+        let v = parse(&doc.to_string()).unwrap();
+        assert_eq!(v.get("tpot_ms"), Some(&Value::Null));
+        assert_eq!(v.req_usize("n").unwrap(), 2);
     }
 
     #[test]

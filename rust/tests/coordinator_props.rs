@@ -12,6 +12,49 @@ use cushioncache::util::prng::SplitMix64;
 use cushioncache::util::tensor::Tensor;
 
 #[test]
+fn json_parse_never_panics_on_mutated_documents() {
+    // the parser feeds on untrusted network bytes: arbitrary byte
+    // mutations (and truncations) of valid documents must parse or Err,
+    // never panic. This is the regression net for the `\u` slice panic.
+    check(
+        "json no-panic fuzz",
+        400,
+        pair(usize_in(0..1_000_000), vec_u32(0..12, u32::MAX)),
+        |&(seed, ref muts)| {
+            let mut rng = SplitMix64::new(seed as u64);
+            let doc = format!(
+                concat!(
+                    r#"{{"prompt":[{},{},-3,1.5e2],"s":"aé 😀 \n \ud83d\ude00 \u00e9 x","#,
+                    r#""n":{}.25,"b":[true,false,null,{{"k":"\t\\"}}],"#,
+                    r#""u":"😀 héllo"}}"#
+                ),
+                rng.next_below(10_000),
+                rng.next_below(100),
+                rng.next_below(1000),
+            );
+            let mut bytes = doc.into_bytes();
+            for &m in muts {
+                let pos = (m as usize) % bytes.len();
+                if m % 7 == 0 {
+                    bytes.truncate(pos.max(1));
+                } else if m % 3 == 0 {
+                    bytes[pos] = ((m >> 8) % 128) as u8; // ascii clobber
+                } else {
+                    bytes[pos] = (m >> 8) as u8; // arbitrary clobber
+                }
+            }
+            let Ok(s) = std::str::from_utf8(&bytes) else {
+                return true; // parse() takes &str; invalid utf-8 never reaches it
+            };
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _ = cushioncache::util::json::parse(s);
+            }))
+            .is_ok()
+        },
+    );
+}
+
+#[test]
 fn kv_manager_never_oversubscribes() {
     check("kv alloc/free", 300, vec_u32(0..64, 3), |ops| {
         // ops: 0 = alloc, 1 = free first busy, 2 = push token

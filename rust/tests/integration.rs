@@ -6,7 +6,7 @@
 //! cross the test harness's threads); they skip gracefully when
 //! `make artifacts` has not run.
 
-use cushioncache::coordinator::{Engine, Scheduler};
+use cushioncache::coordinator::{Engine, FinishReason, Request, Router, Scheduler, ServeBackend};
 use cushioncache::data::PAD;
 use cushioncache::eval::perplexity::{argmax, perplexity};
 use cushioncache::model::session::Session;
@@ -236,6 +236,223 @@ fn tcp_server_roundtrip() {
     let toks = v.get("tokens").unwrap().as_arr().unwrap();
     assert!(!toks.is_empty() && toks.len() <= 3, "bad response: {line}");
     assert!(v.get("ttft_ms").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn scheduler_isolates_bad_requests() {
+    if !have_artifacts() {
+        return;
+    }
+    // one bad request must never kill the serving loop: oversized and
+    // out-of-vocab prompts become per-request FinishReason::Error
+    // responses while a concurrently queued valid request completes.
+    let engine = Engine::new(session(), Scheme::fp()).unwrap();
+    let mut sched = Scheduler::new(engine);
+    let seq_len = sched.engine.session.manifest.seq_len;
+    let vocab = sched.engine.session.manifest.vocab as i32;
+    let good_prompt: Vec<i32> =
+        sched.engine.session.corpus.split("heldout").unwrap().seq(1)[..12].to_vec();
+
+    sched.submit_request(Request::new(101, vec![5; seq_len + 1], 4));
+    sched.submit_request(Request::new(102, vec![0, vocab + 7], 4));
+    let mut good = Request::new(103, good_prompt, 3);
+    good.stop_token = None;
+    sched.submit_request(good);
+
+    let mut resp = sched.run_to_completion().unwrap();
+    resp.sort_by_key(|r| r.id);
+    assert_eq!(resp.len(), 3);
+    assert!(resp[0].finished.is_error(), "oversized: {:?}", resp[0].finished);
+    assert!(resp[0].tokens.is_empty());
+    assert!(resp[1].finished.is_error(), "out-of-vocab: {:?}", resp[1].finished);
+    assert_eq!(resp[2].finished, FinishReason::MaxTokens);
+    assert_eq!(resp[2].tokens.len(), 3, "valid request starved by bad ones");
+    assert_eq!(sched.metrics.errored, 2);
+    assert_eq!(sched.metrics.completed, 1);
+}
+
+#[test]
+fn scheduler_admits_into_every_free_slot() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::new(session(), Scheme::fp()).unwrap();
+    let mut sched = Scheduler::new(engine);
+    let n_slots = sched.engine.kv.n_slots;
+    let prompt: Vec<i32> =
+        sched.engine.session.corpus.split("heldout").unwrap().seq(0)[..16].to_vec();
+    for i in 0..n_slots + 2 {
+        let mut r = Request::new(200 + i as u64, prompt.clone(), 8);
+        r.stop_token = None;
+        sched.submit_request(r);
+    }
+    sched.step().unwrap();
+    assert_eq!(
+        sched.running_count(),
+        n_slots,
+        "one step must admit a prefill into every free slot"
+    );
+    assert_eq!(sched.batcher.waiting(), 2);
+    sched.run_to_completion().unwrap();
+}
+
+#[test]
+fn scheduler_cancel_frees_slot() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::new(session(), Scheme::fp()).unwrap();
+    let mut sched = Scheduler::new(engine);
+    let prompt: Vec<i32> =
+        sched.engine.session.corpus.split("heldout").unwrap().seq(0)[..16].to_vec();
+    let mut r = Request::new(301, prompt.clone(), 1_000_000);
+    r.stop_token = None; // would run (nearly) forever
+    sched.submit_request(r);
+    sched.step().unwrap();
+    let free_before = sched.engine.kv.free_count();
+    assert!(sched.cancel(301), "in-flight request not found");
+    assert_eq!(sched.engine.kv.free_count(), free_before + 1);
+    assert!(!sched.cancel(301), "double-cancel should be a no-op");
+    let resp = sched.take_finished();
+    assert!(resp.iter().any(|r| r.id == 301 && r.finished == FinishReason::Cancelled));
+    assert_eq!(sched.metrics.cancelled, 1);
+}
+
+#[test]
+fn router_backend_isolates_routing_errors() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut router = Router::new();
+    router.add_engine("fp", Scheduler::new(Engine::new(session(), Scheme::fp()).unwrap()));
+    let prompt: Vec<i32> =
+        sessionless_prompt(&mut router);
+    // unknown mode: a routing error string, not an engine failure
+    let err = ServeBackend::submit(&mut router, Some("int3"), Request::new(1, prompt.clone(), 2))
+        .unwrap_err();
+    assert!(err.contains("int3"), "routing error should name the mode: {err}");
+    // no mode: defaults to the only engine and completes
+    ServeBackend::submit(&mut router, None, Request::new(2, prompt, 2)).unwrap();
+    while ServeBackend::has_work(&router) {
+        ServeBackend::step(&mut router).unwrap();
+    }
+    let resp = ServeBackend::take_finished(&mut router);
+    assert_eq!(resp.len(), 1);
+    assert_eq!(resp[0].id, 2);
+    assert!(!resp[0].finished.is_error());
+}
+
+fn sessionless_prompt(router: &mut Router) -> Vec<i32> {
+    router
+        .scheduler_mut("fp")
+        .unwrap()
+        .engine
+        .session
+        .corpus
+        .split("heldout")
+        .unwrap()
+        .seq(2)[..10]
+        .to_vec()
+}
+
+#[test]
+fn tcp_server_fault_isolation_and_streaming() {
+    if !have_artifacts() {
+        return;
+    }
+    use std::io::{BufRead, BufReader, Write};
+    let engine = Engine::new(session(), Scheme::fp()).unwrap();
+    let seq_len = engine.session.manifest.seq_len;
+    let sched = Scheduler::new(engine);
+    let addr = "127.0.0.1:7392";
+    let server = cushioncache::coordinator::server::Server::new(addr);
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+
+    let handle = std::thread::spawn(move || {
+        let mut conn = None;
+        for _ in 0..100 {
+            if let Ok(c) = std::net::TcpStream::connect(addr) {
+                conn = Some(c);
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(100));
+        }
+        let mut conn = conn.expect("server did not bind");
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        let mut read = |line: &mut String| {
+            line.clear();
+            reader.read_line(line).unwrap();
+            cushioncache::util::json::parse(line.trim()).unwrap()
+        };
+
+        // 1) malformed JSON: error line, loop survives
+        writeln!(conn, "this is not json").unwrap();
+        let v = read(&mut line);
+        assert!(v.get("error").is_some(), "no error field: {line}");
+        assert!(v.get("id").is_none());
+
+        // 2) truncated \u escape (the old parser panicked here)
+        writeln!(conn, "{}", r#"{"prompt": [0], "bad": "\u12"#).unwrap();
+        let v = read(&mut line);
+        assert!(v.get("error").is_some(), "no error field: {line}");
+
+        // 3) out-of-vocab token: refused at the door
+        writeln!(conn, r#"{{"prompt": [0, 99999]}}"#).unwrap();
+        let v = read(&mut line);
+        assert!(
+            v.get("error").unwrap().as_str().unwrap().contains("vocab"),
+            "bad rejection: {line}"
+        );
+
+        // 4) oversized prompt: parses fine, errors per-request at admission
+        let huge: Vec<String> = (0..seq_len + 1).map(|_| "5".to_string()).collect();
+        writeln!(conn, r#"{{"prompt": [{}]}}"#, huge.join(",")).unwrap();
+        let v = read(&mut line);
+        assert_eq!(v.req_str("finish").unwrap(), "error", "line: {line}");
+        assert!(v.get("id").is_some());
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("prompt"));
+
+        // 5) the loop must still serve a valid streaming request fully
+        let req = concat!(
+            r#"{"prompt": [0, 10, 11, 12], "max_new": 3, "stream": true, "#,
+            r#""stop_token": null, "echo_text": true}"#
+        );
+        writeln!(conn, "{req}").unwrap();
+        let mut streamed = Vec::new();
+        let summary = loop {
+            let v = read(&mut line);
+            if v.get("finish").is_some() {
+                break v;
+            }
+            streamed.push(v.req_usize("token").unwrap() as i32);
+            assert_eq!(
+                v.req_usize("index").unwrap(),
+                streamed.len() - 1,
+                "stream indices must be dense and ordered"
+            );
+        };
+        assert_eq!(summary.req_str("finish").unwrap(), "max_tokens");
+        let toks: Vec<i32> = summary
+            .get("tokens")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| t.as_i64().unwrap() as i32)
+            .collect();
+        assert_eq!(
+            streamed, toks,
+            "every generated token must stream before the summary"
+        );
+        assert_eq!(toks.len(), 3);
+        assert!(summary.get("text").is_some(), "echo_text missing: {line}");
+
+        writeln!(conn, "quit").unwrap();
+    });
+
+    server.serve(sched, stop).unwrap();
+    handle.join().unwrap();
 }
 
 #[test]
