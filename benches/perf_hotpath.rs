@@ -1,14 +1,18 @@
 //! §Perf micro-bench: where does a serving step's time go?
 //!
-//! Breaks the hot paths into components — eval forward, decode step,
-//! prefill, and the isolated cache-sized upload/download — and, per
-//! component, reports the host<->device transfer traffic per iteration
-//! (runtime::transfer counters). With the device-resident value pool the
-//! loop-invariant operands (weights, ranges, inv_smooth, cushion prefix
-//! KV) are uploaded exactly once per (re)configuration: the bench asserts
-//! this via the pool's per-key upload counts and emits the whole
-//! breakdown as `BENCH_perf_hotpath.json` at the repo root so the perf
-//! trajectory is tracked across PRs.
+//! Breaks the hot paths into components — eval forward, decode step (in
+//! all three serving modes: device-sampled/resident default, host-argmax
+//! fallback, and the seed's host-roundtrip), bucketed vs full prefill,
+//! and the isolated cache-sized upload/download — and, per component,
+//! reports the host<->device transfer traffic per iteration
+//! (runtime::transfer counters). Asserted invariants: loop-invariant
+//! operands (weights, ranges, inv_smooth, cushion prefix KV) upload
+//! exactly once per (re)configuration, and the default decode step moves
+//! <= 64 KB/step combined across the host boundary (ISSUE 3 budget;
+//! steady state is ~100 B — tokens+lens up, [B] token ids down). Emits
+//! `BENCH_perf_hotpath.json` at the repo root so the perf trajectory is
+//! tracked across PRs — gate regressions with `cushiond bench-diff` /
+//! scripts/bench_diff.sh.
 
 use cushioncache::bench::{emit_bench_json, summarize, time_n, Table, Timing};
 use cushioncache::coordinator::{Engine, Scheduler};
@@ -137,19 +141,51 @@ fn main() -> anyhow::Result<()> {
     calibrate::calibrate_into(&mut s2, scheme.act_levels(), 2)?;
     let prompt: Vec<i32> = s2.corpus.split("heldout")?.seq(0)[..96].to_vec();
     let engine = Engine::new(s2, scheme)?;
+    let device_sampled = engine.sampled_decode_available();
     let mut sched = Scheduler::new(engine);
     sched.submit(prompt.clone(), 8);
     sched.run_to_completion()?; // warm
-    // fill all 8 slots and measure a full decode step
+    // fill all 8 slots and measure a full decode step. A 32-token prompt
+    // leaves ~96 decode steps of KV headroom per slot — enough for all
+    // three measured decode modes without any tenant finishing mid-bench.
     for _ in 0..8 {
-        sched.submit(prompt.clone(), 10_000_000); // never self-stop
+        sched.submit(prompt[..32].to_vec(), 10_000_000); // never self-stop
     }
     for _ in 0..9 {
         sched.step()?; // admit all prefills + first decodes
     }
+    // default mode: device-resident cache + device-side token selection
     let (dec, dec_x) =
         time_with_xfer(0, iters, || { sched.step().unwrap(); });
     row!("decode step (batch 8)", &dec, dec_x, iters);
+    // the ISSUE-3 transfer budget: <= 64 KB/step combined in the default
+    // mode (steady state is ~100 B: tokens+lens up, B ids down)
+    if device_sampled {
+        let per_step =
+            (dec_x.bytes_uploaded + dec_x.bytes_fetched) / iters as u64;
+        assert!(
+            per_step <= 64 * 1024,
+            "decode step moved {per_step} B/step (budget 64 KB)"
+        );
+        println!("[perf] decode-step transfer budget: {per_step} B/step (<= 64 KB)");
+    } else {
+        println!(
+            "[perf] note: artifacts predate *_sampled_* graphs — decode \
+             ran in host-argmax fallback mode (no budget assertion)"
+        );
+    }
+    // comparison modes: host argmax over fetched logits, then the seed's
+    // full per-step cache round-trip
+    sched.engine.set_device_sampling(false);
+    let (dec_host, dec_host_x) =
+        time_with_xfer(1, iters, || { sched.step().unwrap(); });
+    row!("decode step host-argmax (batch 8)", &dec_host, dec_host_x, iters);
+    sched.engine.set_host_roundtrip(true);
+    let (dec_rt, dec_rt_x) =
+        time_with_xfer(1, iters, || { sched.step().unwrap(); });
+    row!("decode step host-roundtrip (batch 8)", &dec_rt, dec_rt_x, iters);
+    sched.engine.set_host_roundtrip(false);
+    sched.engine.set_device_sampling(true);
 
     // residency: the loop invariants must have crossed to the device
     // exactly once for this engine's whole serving history.
@@ -214,7 +250,8 @@ fn main() -> anyhow::Result<()> {
     });
     row!("cache download (alone)", &down);
 
-    // prefill
+    // prefill: full-length prompt, then a short prompt that lands in the
+    // smallest bucket (the bucketed-prefill win: no seq_len-wide forward)
     let mut s3 = Session::load_with_client(&variant, client.clone())?;
     calibrate::calibrate_into(&mut s3, scheme.act_levels(), 1)?;
     let mut engine3 = Engine::new(s3, scheme)?;
@@ -222,6 +259,24 @@ fn main() -> anyhow::Result<()> {
         engine3.prefill(0, &prompt).unwrap();
     });
     row!("prefill (prompt 96)", &pre, pre_x, iters);
+    let buckets = engine3.sampled_prefill_buckets().to_vec();
+    if let Some(&b0) = buckets.first().filter(|&&b| b < prompt.len()) {
+        let short = &prompt[..b0.saturating_sub(8).max(1)];
+        let (pre_b, pre_b_x) = time_with_xfer(1, iters, || {
+            engine3.prefill(1, short).unwrap();
+        });
+        row!(
+            &format!("prefill (prompt {}, bucket {b0})", short.len()),
+            &pre_b,
+            pre_b_x,
+            iters
+        );
+    } else {
+        println!(
+            "[perf] note: no prefill bucket below the prompt length — \
+             bucketed prefill row skipped"
+        );
+    }
 
     table.emit("perf_hotpath");
     print!("{}", xfer_table.render());
@@ -260,6 +315,17 @@ fn main() -> anyhow::Result<()> {
         format!(
             "{{\"errored\": {}, \"rejected\": {}, \"cancelled\": {}}}",
             sched.metrics.errored, sched.metrics.rejected, sched.metrics.cancelled
+        ),
+    ));
+    extras.push((
+        "serving_mode".to_string(),
+        format!(
+            "{{\"device_sampled\": {device_sampled}, \"prefill_buckets\": [{}]}}",
+            buckets
+                .iter()
+                .map(usize::to_string)
+                .collect::<Vec<_>>()
+                .join(", ")
         ),
     ));
     emit_bench_json("perf_hotpath", &components, &extras);

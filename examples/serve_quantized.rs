@@ -98,7 +98,15 @@ fn main() -> anyhow::Result<()> {
     println!("throughput        : {:.1} tok/s", m.tokens_per_second());
     println!("TTFT  mean / p99  : {:.1} / {:.1} ms", m.ttft_mean * 1e3, m.ttft_p99 * 1e3);
     println!("TPOT  mean / p99  : {:.1} / {:.1} ms", m.tpot_mean * 1e3, m.tpot_p99 * 1e3);
-    println!("decode step mean  : {:.1} ms at batch {:.1}", m.decode_mean * 1e3, m.mean_batch);
+    println!(
+        "decode step       : mean {:.1} / p50 {:.1} / p99 {:.1} ms at batch {:.1}",
+        m.decode_mean * 1e3, m.decode_p50 * 1e3, m.decode_p99 * 1e3, m.mean_batch
+    );
+    println!("decode histogram  : {}", sched.metrics.decode_histogram_line());
+    println!(
+        "steady-state xfer : {:.0} B up + {:.0} B down per decode step",
+        m.decode_bytes_up_per_step, m.decode_bytes_down_per_step
+    );
     println!("prefill mean      : {:.1} ms", m.prefill_mean * 1e3);
     Ok(())
 }

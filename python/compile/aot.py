@@ -77,6 +77,7 @@ def manifest_for(cfg: C.ModelCfg, graph_names):
         "window": cfg.window if cfg.window is not None else 0,
         "n_sites": cfg.n_sites,
         "seq_len": C.SEQ_LEN,
+        "prefill_buckets": list(C.PREFILL_BUCKETS),
         "m_max": C.M_MAX,
         "cache_cap": C.CACHE_CAP,
         "serve_batch": C.SERVE_BATCH,

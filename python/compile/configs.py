@@ -23,6 +23,11 @@ SEQ_LEN = 128          # training / eval sequence length
 M_MAX = 16             # maximum CushionCache prefix length
 CACHE_CAP = M_MAX + SEQ_LEN  # KV slot capacity in the serving graphs
 SERVE_BATCH = 8        # decode batch (slot count) in the serving graphs
+# Prefill bucket lengths: one prefill_sampled graph is lowered per bucket
+# and the serving engine picks the smallest bucket >= prompt length, so a
+# short prompt does not pay a SEQ_LEN-wide forward (nor upload SEQ_LEN
+# padded tokens). Must be ascending and end at SEQ_LEN.
+PREFILL_BUCKETS = (32, 64, SEQ_LEN)
 EVAL_BATCH = 8         # batch of the eval fwd graphs
 SCORE_BATCH = 64       # candidate batch of the greedy-search scorer
 SCORE_TEXT_LEN = 96    # text length n used by the scorer (paper uses 512)

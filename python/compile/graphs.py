@@ -14,6 +14,19 @@ Graph inventory per variant (DESIGN.md §5):
     tune_step                               — Adam QAT prefix-tuning step
     prefill_{fp,pts,ptd,ptk}                — serving prompt ingestion
     decode_{fp,pts,ptd,ptk}                 — serving batched decode step
+    decode_sampled_{mode}                   — decode + in-graph token
+                                              selection: (cache, ids, top)
+    prefill_sampled_{mode}_b{bucket}        — bucketed prefill + in-graph
+                                              selection, one graph per
+                                              PREFILL_BUCKETS length
+
+Naming scheme: `<op>[_sampled]_<mode>[_b<bucket>]`. The `_sampled`
+variants move greedy token selection (serving.select_tokens) into the
+graph so only [B] i32 ids cross to the host instead of [B, V] f32
+logits; `_b<bucket>` prefill variants take a bucket-length token vector
+(smallest bucket >= prompt length, picked by the serving engine) instead
+of a full SEQ_LEN pad. The logits-emitting base graphs stay in the
+inventory as the parity/fallback path.
 """
 
 import jax
@@ -226,6 +239,36 @@ def make_prefill(cfg, mode, use_pallas=False):
     return fn, specs
 
 
+def make_prefill_sampled(cfg, mode, s_bucket, use_pallas=False):
+    """Bucketed prefill with in-graph token selection.
+
+    Same operands as prefill but with a `s_bucket`-length token vector;
+    outputs (cache', next_id i32 scalar, top_logit f32 scalar) — the
+    [V] last-position logits never leave the device.
+    """
+
+    def fn(*args):
+        n = len(M.param_spec(cfg))
+        params = _unflatten(cfg, args[:n])
+        (cache, prefix_kv, cushion_len, slot, tokens, tok_len, ranges,
+         levels, kv_levels, inv_smooth) = args[n:]
+        qctx = QuantCtx(mode=mode, levels=levels, static_ranges=ranges,
+                        use_pallas=use_pallas, inv_smooth=inv_smooth,
+                        collect_stats=False)
+        cache2, last, _ = serving.prefill(
+            cfg, params, cache, prefix_kv, cushion_len, slot, tokens,
+            tok_len, qctx, kv_levels, use_pallas=use_pallas)
+        next_id, top = serving.select_tokens(last)
+        return cache2, next_id, top
+
+    specs = weight_specs(cfg) + [
+        _cache_spec(cfg), _prefix_spec(cfg), _i32(), _i32(),
+        _i32(s_bucket), _i32(), _f32(cfg.n_sites, 2), _f32(), _f32(),
+        _smooth_spec(cfg),
+    ]
+    return fn, specs
+
+
 def make_decode(cfg, mode, use_pallas=False):
     def fn(*args):
         n = len(M.param_spec(cfg))
@@ -247,6 +290,32 @@ def make_decode(cfg, mode, use_pallas=False):
     return fn, specs
 
 
+def make_decode_sampled(cfg, mode, use_pallas=False):
+    """Batched decode with in-graph token selection: outputs
+    (cache', next_ids [B] i32, top_logits [B] f32) so the decode step's
+    device->host traffic is B token ids, not B*V f32 logits."""
+
+    def fn(*args):
+        n = len(M.param_spec(cfg))
+        params = _unflatten(cfg, args[:n])
+        (cache, cache_tok_len, cushion_len, tokens, ranges, levels,
+         kv_levels, inv_smooth) = args[n:]
+        qctx = QuantCtx(mode=mode, levels=levels, static_ranges=ranges,
+                        use_pallas=use_pallas, inv_smooth=inv_smooth,
+                        collect_stats=False)
+        cache2, logits = serving.decode(
+            cfg, params, cache, cache_tok_len, cushion_len, tokens, qctx,
+            kv_levels, use_pallas=use_pallas)
+        ids, top = serving.select_tokens(logits)
+        return cache2, ids, top
+
+    specs = weight_specs(cfg) + [
+        _cache_spec(cfg), _i32(C.SERVE_BATCH), _i32(), _i32(C.SERVE_BATCH),
+        _f32(cfg.n_sites, 2), _f32(), _f32(), _smooth_spec(cfg),
+    ]
+    return fn, specs
+
+
 MODES = ("fp", "pts", "ptd", "ptk")
 
 
@@ -259,6 +328,10 @@ def graph_inventory(cfg, pallas_variants=False):
         inv[f"fwd_{mode}"] = make_fwd(cfg, mode)
         inv[f"prefill_{mode}"] = make_prefill(cfg, mode)
         inv[f"decode_{mode}"] = make_decode(cfg, mode)
+        inv[f"decode_sampled_{mode}"] = make_decode_sampled(cfg, mode)
+        for bucket in C.PREFILL_BUCKETS:
+            inv[f"prefill_sampled_{mode}_b{bucket}"] = \
+                make_prefill_sampled(cfg, mode, bucket)
     inv["stats"] = make_stats(cfg)
     inv["score_lq"] = make_score(cfg)
     inv["prefix_kv"] = make_prefix_kv(cfg)

@@ -22,6 +22,27 @@ from . import model as M
 from .quantlib import QuantCtx, kivi_qdq_kv
 
 
+def select_tokens(logits, temperature=1.0, top_k=0):
+    """In-graph greedy token selection over the last axis.
+
+    Returns (ids i32, top_logit f32) with the leading axes of `logits`
+    preserved — the `*_sampled_*` graphs emit these instead of the full
+    [..., V] logits, so only token ids (4 B each) cross to the host.
+
+    `temperature` and `top_k` are compile-time scaffolding for future
+    stochastic sampling: argmax is invariant under positive temperature
+    and under a top-k>=1 mask, so the lowered graphs stay exactly greedy;
+    a sampler would thread a PRNG key here and replace the argmax.
+    """
+    x = logits / temperature
+    if top_k:
+        kth = jax.lax.top_k(x, top_k)[0][..., -1:]
+        x = jnp.where(x >= kth, x, -jnp.inf)
+    ids = jnp.argmax(x, axis=-1).astype(jnp.int32)
+    top = jnp.take_along_axis(logits, ids[..., None], axis=-1)[..., 0]
+    return ids, top
+
+
 def _kv_maybe_quant(k, v, kv_levels):
     kq, vq = kivi_qdq_kv(k, v, kv_levels)
     on = kv_levels < 2.0 ** 20

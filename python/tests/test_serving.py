@@ -123,6 +123,84 @@ def test_prefill_with_cushion_matches_fwd_with_prefix(setup):
     np.testing.assert_allclose(np.array(last), want, rtol=1e-4, atol=1e-4)
 
 
+def test_select_tokens_matches_host_argmax(setup):
+    """The in-graph selection must be exactly host argmax, and the
+    temperature/top-k scaffolding must not perturb the greedy choice."""
+    rng = np.random.default_rng(7)
+    logits = jnp.asarray(rng.normal(size=(C.SERVE_BATCH, 512)), jnp.float32)
+    ids, top = S.select_tokens(logits)
+    want = np.argmax(np.array(logits), axis=-1)
+    np.testing.assert_array_equal(np.array(ids), want)
+    np.testing.assert_allclose(
+        np.array(top), np.array(logits).max(axis=-1), rtol=1e-6)
+    for t, k in ((0.5, 0), (2.0, 0), (1.0, 5), (0.7, 3)):
+        ids2, _ = S.select_tokens(logits, temperature=t, top_k=k)
+        np.testing.assert_array_equal(np.array(ids2), want)
+    # 1-D (prefill last-position) logits select a scalar
+    one, top1 = S.select_tokens(logits[0])
+    assert int(one) == int(want[0])
+    assert float(top1) == pytest.approx(float(np.array(logits)[0].max()))
+
+
+def test_decode_sampled_graph_matches_decode(setup):
+    """decode_sampled must produce the cache of decode plus the argmax of
+    its logits — the Rust engine's device-side selection contract."""
+    cfg, params = setup
+    from compile import graphs
+    flat = [params[n] for n, _ in M.param_spec(cfg)]
+    prompt = toks(cfg, 9, seed=6)
+    cache = fresh_cache(cfg)
+    padded = jnp.asarray(prompt + [C.PAD] * (C.SEQ_LEN - len(prompt)), jnp.int32)
+    cache, _, _ = S.prefill(
+        cfg, params, cache, M.empty_prefix(cfg), jnp.asarray(0, jnp.int32),
+        jnp.asarray(0, jnp.int32), padded, jnp.asarray(len(prompt), jnp.int32),
+        QuantCtx(mode="fp"), BIG)
+    lens = jnp.zeros((C.SERVE_BATCH,), jnp.int32).at[0].set(len(prompt))
+    step_tok = jnp.full((C.SERVE_BATCH,), C.PAD, jnp.int32).at[0].set(prompt[-1])
+    smooth = jnp.ones((cfg.n_layers, 2, cfg.d_model), jnp.float32)
+    ranges = jnp.zeros((cfg.n_sites, 2), jnp.float32)
+    common = (cache, lens, jnp.asarray(0, jnp.int32), step_tok, ranges,
+              jnp.asarray(255.0), jnp.asarray(BIG), smooth)
+    fn_ref, _ = graphs.make_decode(cfg, "fp")
+    cache_ref, logits_ref = fn_ref(*flat, *common)
+    fn_s, _ = graphs.make_decode_sampled(cfg, "fp")
+    cache_s, ids, top = fn_s(*flat, *common)
+    np.testing.assert_allclose(np.array(cache_s), np.array(cache_ref),
+                               atol=1e-6)
+    np.testing.assert_array_equal(
+        np.array(ids), np.argmax(np.array(logits_ref), axis=-1))
+    assert ids.dtype == jnp.int32
+
+
+def test_bucketed_prefill_first_token_matches_full(setup):
+    """Every bucket >= the prompt length must select the same first token
+    as the full-SEQ_LEN prefill (at/below/above each boundary)."""
+    cfg, params = setup
+    from compile import graphs
+    flat = [params[n] for n, _ in M.param_spec(cfg)]
+    smooth = jnp.ones((cfg.n_layers, 2, cfg.d_model), jnp.float32)
+    ranges = jnp.zeros((cfg.n_sites, 2), jnp.float32)
+
+    def first_token(prompt, bucket):
+        fn, _ = graphs.make_prefill_sampled(cfg, "fp", bucket)
+        padded = jnp.asarray(prompt + [C.PAD] * (bucket - len(prompt)),
+                             jnp.int32)
+        _, next_id, _ = fn(
+            *flat, fresh_cache(cfg), M.empty_prefix(cfg),
+            jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32), padded,
+            jnp.asarray(len(prompt), jnp.int32), ranges, jnp.asarray(255.0),
+            jnp.asarray(BIG), smooth)
+        return int(next_id)
+
+    b0 = C.PREFILL_BUCKETS[0]
+    for plen in (b0 - 1, b0, b0 + 1):
+        prompt = toks(cfg, plen, seed=40 + plen)
+        want = first_token(prompt, C.SEQ_LEN)
+        for bucket in C.PREFILL_BUCKETS:
+            if bucket >= plen:
+                assert first_token(prompt, bucket) == want, (plen, bucket)
+
+
 def test_kivi_levels_gate(setup):
     """kv_levels >= 2^20 must be exactly the FP path; low levels differ."""
     cfg, params = setup

@@ -1,0 +1,183 @@
+//! Bench-snapshot regression diff: compare two `BENCH_*.json` files
+//! (the cross-PR perf trail emitted by `emit_bench_json`) and flag
+//!
+//! * a component's `mean_ms` growing by more than a tolerance (default
+//!   10%) — the latency gate, applied to every component present in
+//!   both files plus a must-exist "key component" (the decode step), and
+//! * ANY growth in a `transfers_per_iter` gauge (uploads / kb_up /
+//!   fetches / kb_down) — the transfer budget is a hard invariant of
+//!   the device-resident serving design, so there is no tolerance.
+//!
+//! Consumed by `cushiond bench-diff <base.json> <new.json>` and
+//! `scripts/bench_diff.sh`, the documented pre-merge check.
+
+use crate::util::json::{self, Value};
+
+/// Default mean-latency regression tolerance (fraction).
+pub const DEFAULT_TOL: f64 = 0.10;
+/// The component the diff refuses to silently lose track of.
+pub const KEY_COMPONENT: &str = "decode step (batch 8)";
+/// Absolute slack (KB / count) for transfer gauges: absorbs rounding in
+/// the emitted 0.1-precision values, nothing more.
+const XFER_EPS: f64 = 0.05;
+
+/// The outcome of one base-vs-new comparison.
+#[derive(Clone, Debug, Default)]
+pub struct DiffReport {
+    /// Human-readable regression lines; empty = pass.
+    pub regressions: Vec<String>,
+    /// Non-fatal observations (improvements, skipped components).
+    pub notes: Vec<String>,
+}
+
+impl DiffReport {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+}
+
+fn component_mean(v: &Value, name: &str) -> Option<f64> {
+    v.get("components")?.get(name)?.get("mean_ms")?.as_f64()
+}
+
+fn component_names(v: &Value) -> Vec<String> {
+    match v.get("components") {
+        Some(Value::Obj(kvs)) => kvs.iter().map(|(k, _)| k.clone()).collect(),
+        _ => Vec::new(),
+    }
+}
+
+/// Diff two parsed bench snapshots. `tol` is the fractional mean-latency
+/// tolerance; transfer gauges tolerate no growth.
+pub fn diff_values(base: &Value, new: &Value, tol: f64) -> DiffReport {
+    let mut r = DiffReport::default();
+
+    // latency: every component in both files, and the key component
+    // must not disappear (a renamed hot-path row would otherwise make
+    // the gate vacuously green)
+    if component_mean(base, KEY_COMPONENT).is_some()
+        && component_mean(new, KEY_COMPONENT).is_none()
+    {
+        r.regressions.push(format!(
+            "key component '{KEY_COMPONENT}' missing from the new snapshot"
+        ));
+    }
+    for name in component_names(base) {
+        let Some(b) = component_mean(base, &name) else { continue };
+        let Some(n) = component_mean(new, &name) else {
+            r.notes.push(format!("component '{name}' dropped (not compared)"));
+            continue;
+        };
+        if b > 0.0 && n > b * (1.0 + tol) {
+            r.regressions.push(format!(
+                "'{name}' mean {b:.2} ms -> {n:.2} ms ({:+.1}% > {:.0}% tolerance)",
+                (n - b) / b * 100.0,
+                tol * 100.0
+            ));
+        } else if b > 0.0 && n < b * 0.9 {
+            r.notes
+                .push(format!("'{name}' improved {b:.2} ms -> {n:.2} ms"));
+        }
+    }
+
+    // transfer gauges: any growth fails
+    let (bx, nx) = (base.get("transfers_per_iter"), new.get("transfers_per_iter"));
+    if let (Some(Value::Obj(bkvs)), Some(nxv)) = (bx, nx) {
+        for (name, brow) in bkvs {
+            let Some(nrow) = nxv.get(name) else {
+                r.notes.push(format!(
+                    "transfer row '{name}' dropped (not compared)"
+                ));
+                continue;
+            };
+            for gauge in ["uploads", "kb_up", "fetches", "kb_down"] {
+                let b = brow.get(gauge).and_then(Value::as_f64).unwrap_or(0.0);
+                let n = nrow.get(gauge).and_then(Value::as_f64).unwrap_or(0.0);
+                if n > b + XFER_EPS {
+                    r.regressions.push(format!(
+                        "'{name}' {gauge} grew {b:.1} -> {n:.1} \
+                         (per-iter transfer growth is a hard failure)"
+                    ));
+                }
+            }
+        }
+    }
+    r
+}
+
+/// Diff two bench snapshot files. Errors on unreadable/unparseable
+/// input (a missing baseline is a setup problem, not a pass).
+pub fn diff_files(base: &str, new: &str, tol: f64) -> crate::Result<DiffReport> {
+    let read = |p: &str| -> crate::Result<Value> {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| anyhow::anyhow!("reading {p}: {e}"))?;
+        json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {p}: {e:#}"))
+    };
+    Ok(diff_values(&read(base)?, &read(new)?, tol))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(decode_ms: f64, kb_up: f64, kb_down: f64) -> Value {
+        json::parse(&format!(
+            r#"{{
+              "bench": "perf_hotpath",
+              "components": {{
+                "decode step (batch 8)": {{"mean_ms": {decode_ms}, "p50_ms": 1.0, "p99_ms": 2.0}},
+                "prefill (prompt 96)": {{"mean_ms": 9.0, "p50_ms": 9.0, "p99_ms": 9.9}}
+              }},
+              "transfers_per_iter": {{
+                "decode step (batch 8)": {{"uploads": 2.0, "kb_up": {kb_up}, "fetches": 1.0, "kb_down": {kb_down}}}
+              }}
+            }}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn identical_snapshots_pass() {
+        let a = snap(1.5, 0.1, 0.1);
+        let r = diff_values(&a, &a, DEFAULT_TOL);
+        assert!(r.passed(), "{:?}", r.regressions);
+    }
+
+    #[test]
+    fn latency_regression_over_tolerance_fails() {
+        let r = diff_values(&snap(1.5, 0.1, 0.1), &snap(1.7, 0.1, 0.1), 0.10);
+        assert!(!r.passed());
+        assert!(r.regressions[0].contains("decode step"));
+        // within tolerance passes
+        let r = diff_values(&snap(1.5, 0.1, 0.1), &snap(1.6, 0.1, 0.1), 0.10);
+        assert!(r.passed(), "{:?}", r.regressions);
+    }
+
+    #[test]
+    fn any_transfer_growth_fails() {
+        let r = diff_values(&snap(1.5, 0.1, 0.1), &snap(1.5, 0.3, 0.1), 0.10);
+        assert!(!r.passed());
+        assert!(r.regressions[0].contains("kb_up"));
+        let r = diff_values(&snap(1.5, 0.1, 0.1), &snap(1.5, 0.1, 4096.0), 0.10);
+        assert!(!r.passed());
+    }
+
+    #[test]
+    fn transfer_shrink_and_latency_improvement_pass_with_notes() {
+        let r = diff_values(&snap(4.7, 4608.0, 4640.0), &snap(1.4, 0.1, 0.1), 0.10);
+        assert!(r.passed(), "{:?}", r.regressions);
+        assert!(r.notes.iter().any(|n| n.contains("improved")));
+    }
+
+    #[test]
+    fn missing_key_component_fails() {
+        let a = snap(1.5, 0.1, 0.1);
+        let b = json::parse(
+            r#"{"components": {"something else": {"mean_ms": 1.0}}}"#,
+        )
+        .unwrap();
+        let r = diff_values(&a, &b, DEFAULT_TOL);
+        assert!(!r.passed());
+        assert!(r.regressions[0].contains("missing"));
+    }
+}

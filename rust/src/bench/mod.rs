@@ -2,6 +2,7 @@
 //! table/CSV emitters shared by `benches/*` — one bench per paper
 //! table/figure (DESIGN.md §6).
 
+pub mod diff;
 pub mod scenario;
 
 use std::io::Write;

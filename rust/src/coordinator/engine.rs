@@ -3,26 +3,43 @@
 //! One engine = one quantization scheme (the router owns several). The KV
 //! cache is threaded functionally through each graph call — the graph
 //! returns the updated cache as output 0 — and is held as a *device*
-//! value between steps: loop-invariant operands (weights, ranges,
-//! inv_smooth, the cushion prefix KV, the scheme's level scalars) are
-//! device-resident via the session's ResidentPool, and only the logits
-//! are materialized to host f32 per step (for argmax). xla_extension
-//! 0.5.1 still returns multi-output programs as one tuple literal, so the
-//! cache element crosses the boundary once per step as a raw literal —
-//! but without the seed's f32 `to_vec` conversion, `Tensor` re-alloc, or
-//! the per-step re-upload of every constant operand (that was ~10 MB of
-//! avoidable memcpy per step; see benches/perf_hotpath.rs for the
-//! before/after breakdown and BENCH_perf_hotpath.json for the trail).
-//! `set_host_roundtrip(true)` restores the seed's host round-trip
-//! semantics for parity tests; `cache_host()` fetches the cache for
-//! inspection.
+//! value between steps. Three mechanisms keep the steady-state decode
+//! step's host traffic at a few kilobytes (see README "Serving hot
+//! path" and benches/perf_hotpath.rs for the budget):
+//!
+//! 1. **Resident invariants** (PR 1): weights, ranges, inv_smooth, the
+//!    cushion prefix KV, and the scheme's level scalars live in the
+//!    session's ResidentPool, uploaded once per configuration.
+//! 2. **Device-side token selection**: when the variant ships
+//!    `decode_sampled_*` / `prefill_sampled_*` graphs, greedy argmax
+//!    runs in-graph and only `[B]` i32 token ids are fetched per step
+//!    instead of `[B, vocab]` f32 logits (`Outputs::host_i32`).
+//! 3. **Donated cache residency**: a `runtime::split::TupleSplitter`
+//!    per output signature decomposes the result tuple into per-output
+//!    *device* buffers, so the cache element never materializes as a
+//!    host literal between steps (xla_extension 0.5.1 returns root
+//!    tuples as one buffer and exposes no aliasing config; the splitter
+//!    replaces the seed's fetch+re-upload with a device-side copy).
+//!
+//! Prefill is additionally **bucketed**: the engine picks the smallest
+//! `prefill_sampled_*_b<n>` bucket >= the prompt length (manifest
+//! `prefill_buckets`), so short prompts neither pad to `seq_len` nor pay
+//! a full-width forward.
+//!
+//! All three are independently degradable: missing sampled artifacts
+//! fall back to the logits graphs + host argmax, a failed splitter falls
+//! back to host materialization, and `set_host_roundtrip(true)` restores
+//! the seed's full per-step host round-trip for parity tests
+//! (`cache_host()` fetches the cache for inspection in any mode).
 
 use std::rc::Rc;
 
 use crate::data::PAD;
+use crate::eval::perplexity::{argmax, argmax_rows};
 use crate::model::session::Session;
 use crate::quant::scheme::Scheme;
 use crate::runtime::literalx::{self, HostValue, IntTensor, OutValue, Value};
+use crate::runtime::split::{OutSpec, TupleSplitter};
 use crate::util::tensor::Tensor;
 
 use super::kvcache::KvManager;
@@ -35,15 +52,33 @@ pub struct Engine {
     /// after reset, a device value across prefill/decode steps.
     cache: Value,
     /// Parity/debug knob: when set, the cache makes the seed's full
-    /// host round-trip (fetch to f32, re-upload next step) per step.
+    /// host round-trip (fetch to f32, re-upload next step) per step and
+    /// tuple splitting is bypassed.
     host_roundtrip: bool,
+    /// Use the `*_sampled_*` graphs (in-graph argmax) when present.
+    device_sampling: bool,
+    /// Use bucketed prefill graphs when present (off = full seq_len).
+    prefill_bucketing: bool,
     /// Engine-invariant scalar operands, uploaded once per engine. The
     /// cushion-length scalar lives in the session's pool (keyed with the
     /// prefix KV) so the (KV, len) pair is always coherent.
     act_levels_buf: Rc<xla::PjRtBuffer>,
     kv_levels_buf: Rc<xla::PjRtBuffer>,
+    suffix: String,
     prefill_graph: String,
     decode_graph: String,
+    /// Present iff the artifact exists on disk.
+    decode_sampled_graph: Option<String>,
+    /// Ascending bucket lengths whose `prefill_sampled_*_b<n>` artifact
+    /// exists (empty = no sampled prefill available).
+    sampled_buckets: Vec<usize>,
+    /// On-device tuple splitters, one per output signature the engine
+    /// executes. `None` = that signature degrades to host
+    /// materialization (logged once at construction).
+    split_decode: Option<TupleSplitter>,
+    split_prefill: Option<TupleSplitter>,
+    split_decode_sampled: Option<TupleSplitter>,
+    split_prefill_sampled: Option<TupleSplitter>,
 }
 
 impl Engine {
@@ -60,13 +95,87 @@ impl Engine {
         let client = session.registry.client();
         let act_levels_buf = Rc::new(client.upload(&Tensor::scalar(scheme.act_levels()))?);
         let kv_levels_buf = Rc::new(client.upload(&Tensor::scalar(scheme.kv_levels()))?);
-        let suffix = scheme.gran.graph_suffix();
+        let suffix = scheme.gran.graph_suffix().to_string();
+
+        let decode_sampled = format!("decode_sampled_{suffix}");
+        let decode_sampled_graph = session
+            .registry
+            .has(&decode_sampled)
+            .then_some(decode_sampled);
+        let sampled_buckets: Vec<usize> = m
+            .prefill_buckets
+            .iter()
+            .copied()
+            .filter(|b| {
+                session
+                    .registry
+                    .has(&format!("prefill_sampled_{suffix}_b{b}"))
+            })
+            .collect();
+
+        // splitters keyed by output signature (shared across buckets)
+        let cache_dims = [
+            m.n_layers, 2, m.serve_batch, m.n_kv_heads, m.cache_cap, m.d_head,
+        ];
+        let b = m.serve_batch;
+        let v = m.vocab;
+        let mk = |spec: &[OutSpec], what: &str| -> Option<TupleSplitter> {
+            match TupleSplitter::new(client, spec) {
+                Ok(s) => Some(s),
+                Err(e) => {
+                    log::warn!(
+                        "tuple splitter for {what} unavailable ({e:#}); \
+                         that path will materialize outputs on host"
+                    );
+                    None
+                }
+            }
+        };
+        let split_decode = mk(
+            &[OutSpec::f32(&cache_dims), OutSpec::f32(&[b, v])],
+            "decode",
+        );
+        let split_prefill = mk(
+            &[OutSpec::f32(&cache_dims), OutSpec::f32(&[v])],
+            "prefill",
+        );
+        let split_decode_sampled = decode_sampled_graph.is_some().then(|| {
+            mk(
+                &[
+                    OutSpec::f32(&cache_dims),
+                    OutSpec::i32(&[b]),
+                    OutSpec::f32(&[b]),
+                ],
+                "decode_sampled",
+            )
+        }).flatten();
+        let split_prefill_sampled = (!sampled_buckets.is_empty()).then(|| {
+            mk(
+                &[
+                    OutSpec::f32(&cache_dims),
+                    OutSpec::i32(&[]),
+                    OutSpec::f32(&[]),
+                ],
+                "prefill_sampled",
+            )
+        }).flatten();
+
         Ok(Self {
             prefill_graph: format!("prefill_{suffix}"),
             decode_graph: format!("decode_{suffix}"),
+            device_sampling: decode_sampled_graph.is_some()
+                || !sampled_buckets.is_empty(),
+            decode_sampled_graph,
+            sampled_buckets,
+            split_decode,
+            split_prefill,
+            split_decode_sampled,
+            split_prefill_sampled,
+            suffix,
             kv,
             cache: Value::Host(HostValue::F32(cache)),
             host_roundtrip: false,
+            prefill_bucketing: true,
             act_levels_buf,
             kv_levels_buf,
             scheme,
@@ -94,6 +203,29 @@ impl Engine {
         self.host_roundtrip = on;
     }
 
+    /// Toggle in-graph token selection (effective only when the variant
+    /// ships `*_sampled_*` artifacts). Off = fetch logits, argmax on
+    /// host — the parity reference for the sampling tests.
+    pub fn set_device_sampling(&mut self, on: bool) {
+        self.device_sampling = on;
+    }
+
+    /// Whether the sampled decode graph is actually available.
+    pub fn sampled_decode_available(&self) -> bool {
+        self.decode_sampled_graph.is_some()
+    }
+
+    /// Bucket lengths with a sampled prefill artifact (ascending).
+    pub fn sampled_prefill_buckets(&self) -> &[usize] {
+        &self.sampled_buckets
+    }
+
+    /// Toggle bucketed prefill (off = always the full seq_len bucket;
+    /// the bucket-boundary parity tests compare the two).
+    pub fn set_prefill_bucketing(&mut self, on: bool) {
+        self.prefill_bucketing = on;
+    }
+
     pub fn cushion_len(&self) -> usize {
         self.session.cushion().map(|c| c.len).unwrap_or(0)
     }
@@ -116,14 +248,51 @@ impl Engine {
         Ok(())
     }
 
+    /// The plan for one prefill: (graph name, padded length, sampled?).
+    /// Sampled + bucketed when artifacts allow, else the legacy
+    /// full-length logits graph.
+    fn prefill_plan(&self, prompt_len: usize) -> (String, usize, bool) {
+        let seq_len = self.session.manifest.seq_len;
+        if self.device_sampling {
+            let candidates: &[usize] = if self.prefill_bucketing {
+                &self.sampled_buckets
+            } else {
+                // full-length only: the last bucket is seq_len by
+                // construction when bucketed artifacts exist
+                match self.sampled_buckets.last() {
+                    Some(last) if *last == seq_len => {
+                        std::slice::from_ref(self.sampled_buckets.last().unwrap())
+                    }
+                    _ => &[],
+                }
+            };
+            if let Some(&b) = candidates.iter().find(|&&b| b >= prompt_len) {
+                return (
+                    format!("prefill_sampled_{}_b{b}", self.suffix),
+                    b,
+                    true,
+                );
+            }
+        }
+        (self.prefill_graph.clone(), seq_len, false)
+    }
+
     /// Prefill `tokens` into `slot`; returns the first generated token.
     pub fn prefill(&mut self, slot: usize, tokens: &[i32]) -> crate::Result<i32> {
         let m = &self.session.manifest;
         anyhow::ensure!(tokens.len() <= m.seq_len, "prompt too long");
+        let (graph, bucket, sampled) = self.prefill_plan(tokens.len());
         let mut padded = tokens.to_vec();
-        padded.resize(m.seq_len, PAD);
-        let mut outs = self.session.run_values(
-            &self.prefill_graph,
+        padded.resize(bucket, PAD);
+        let splitter = if self.host_roundtrip {
+            None
+        } else if sampled {
+            self.split_prefill_sampled.as_ref()
+        } else {
+            self.split_prefill.as_ref()
+        };
+        let mut outs = self.session.run_values_split(
+            &graph,
             vec![
                 self.cache_arg(),
                 self.session.prefix_kv_value()?,
@@ -136,11 +305,20 @@ impl Engine {
                 Value::Device(self.kv_levels_buf.clone()),
                 self.session.inv_smooth_value()?,
             ],
+            splitter,
         )?;
-        anyhow::ensure!(outs.len() == 2, "prefill: expected 2 outputs");
-        let logits = outs.host_f32(1)?;
-        self.store_cache(outs.take(0)?)?;
-        Ok(crate::eval::perplexity::argmax(&logits.data) as i32)
+        if sampled {
+            anyhow::ensure!(outs.len() == 3, "prefill_sampled: expected 3 outputs");
+            let ids = outs.host_i32(1)?;
+            anyhow::ensure!(ids.data.len() == 1, "prefill_sampled: want 1 id");
+            self.store_cache(outs.take(0)?)?;
+            Ok(ids.data[0])
+        } else {
+            anyhow::ensure!(outs.len() == 2, "prefill: expected 2 outputs");
+            let logits = outs.host_f32(1)?;
+            self.store_cache(outs.take(0)?)?;
+            Ok(argmax(&logits.data) as i32)
+        }
     }
 
     /// One decode step for all slots; `tokens[b]` is the last generated
@@ -149,8 +327,20 @@ impl Engine {
         let (serve_batch, v) =
             (self.session.manifest.serve_batch, self.session.manifest.vocab);
         anyhow::ensure!(tokens.len() == serve_batch);
-        let mut outs = self.session.run_values(
-            &self.decode_graph,
+        let sampled = self.device_sampling && self.decode_sampled_graph.is_some();
+        let graph = match (&self.decode_sampled_graph, sampled) {
+            (Some(g), true) => g.clone(),
+            _ => self.decode_graph.clone(),
+        };
+        let splitter = if self.host_roundtrip {
+            None
+        } else if sampled {
+            self.split_decode_sampled.as_ref()
+        } else {
+            self.split_decode.as_ref()
+        };
+        let mut outs = self.session.run_values_split(
+            &graph,
             vec![
                 self.cache_arg(),
                 Value::Host(HostValue::I32(IntTensor::vec(self.kv.lens_i32()))),
@@ -161,16 +351,23 @@ impl Engine {
                 Value::Device(self.kv_levels_buf.clone()),
                 self.session.inv_smooth_value()?,
             ],
+            splitter,
         )?;
-        anyhow::ensure!(outs.len() == 2, "decode: expected 2 outputs");
-        let logits = outs.host_f32(1)?;
-        self.store_cache(outs.take(0)?)?;
-        Ok((0..serve_batch)
-            .map(|b| {
-                crate::eval::perplexity::argmax(&logits.data[b * v..(b + 1) * v])
-                    as i32
-            })
-            .collect())
+        if sampled {
+            anyhow::ensure!(outs.len() == 3, "decode_sampled: expected 3 outputs");
+            let ids = outs.host_i32(1)?;
+            anyhow::ensure!(
+                ids.data.len() == serve_batch,
+                "decode_sampled: want [B] ids"
+            );
+            self.store_cache(outs.take(0)?)?;
+            Ok(ids.data)
+        } else {
+            anyhow::ensure!(outs.len() == 2, "decode: expected 2 outputs");
+            let logits = outs.host_f32(1)?;
+            self.store_cache(outs.take(0)?)?;
+            Ok(argmax_rows(&logits.data, serve_batch, v))
+        }
     }
 
     /// Host view of the cache (tests / debugging): fetches from device

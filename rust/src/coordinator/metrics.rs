@@ -1,7 +1,10 @@
 //! Serving metrics: TTFT, TPOT, throughput (the Table 8 quantities),
-//! plus host<->device transfer accounting (bytes uploaded/fetched since
-//! the metrics were created) so the residency of loop-invariant operands
-//! is observable — see runtime::transfer and model::resident.
+//! decode-step latency distribution (histogram + p50/p99) and
+//! steady-state bytes-per-step gauges, plus host<->device transfer
+//! accounting (bytes uploaded/fetched since the metrics were created) so
+//! both the residency of loop-invariant operands *and* the per-step
+//! transfer budget are observable in `serve` output — see
+//! runtime::transfer, model::resident, and README "Serving hot path".
 
 use std::time::Instant;
 
@@ -9,6 +12,11 @@ use crate::runtime::transfer::{self, TransferStats};
 use crate::util::stats;
 
 use super::request::Response;
+
+/// Upper bucket bounds (ms) of the decode-step latency histogram; the
+/// final implicit bucket is +inf. Log-spaced: a CPU decode step lands
+/// mid-range, a PCIe-bound or recompiling step in the tail.
+pub const DECODE_HIST_MS: [f64; 8] = [0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0];
 
 #[derive(Debug)]
 pub struct Metrics {
@@ -19,6 +27,10 @@ pub struct Metrics {
     pub prefill_seconds: Vec<f64>,
     pub decode_seconds: Vec<f64>,
     pub decode_batch_sizes: Vec<usize>,
+    /// Per-decode-step transfer deltas (scheduler-metered): the
+    /// steady-state bytes-per-step gauges derive from these.
+    pub decode_bytes_up: Vec<u64>,
+    pub decode_bytes_down: Vec<u64>,
     pub ttft: Vec<f64>,
     pub tpot: Vec<f64>,
     pub completed: usize,
@@ -40,6 +52,8 @@ impl Metrics {
             prefill_seconds: Vec::new(),
             decode_seconds: Vec::new(),
             decode_batch_sizes: Vec::new(),
+            decode_bytes_up: Vec::new(),
+            decode_bytes_down: Vec::new(),
             ttft: Vec::new(),
             tpot: Vec::new(),
             completed: 0,
@@ -60,9 +74,14 @@ impl Metrics {
         self.prefill_seconds.push(sec);
     }
 
-    pub fn record_decode(&mut self, sec: f64, batch: usize) {
+    /// Record one batched decode step: wall-clock, running batch size,
+    /// and the transfer-counter delta over the step (what actually
+    /// crossed the host boundary — runtime::transfer::measure).
+    pub fn record_decode(&mut self, sec: f64, batch: usize, xfer: TransferStats) {
         self.decode_seconds.push(sec);
         self.decode_batch_sizes.push(batch);
+        self.decode_bytes_up.push(xfer.bytes_uploaded);
+        self.decode_bytes_down.push(xfer.bytes_fetched);
     }
 
     pub fn record_finished(&mut self, r: &Response) {
@@ -87,8 +106,47 @@ impl Metrics {
         self.cancelled += 1;
     }
 
+    /// Decode-step latency histogram: counts per DECODE_HIST_MS bucket
+    /// plus the trailing +inf bucket.
+    pub fn decode_histogram(&self) -> [usize; DECODE_HIST_MS.len() + 1] {
+        let mut h = [0usize; DECODE_HIST_MS.len() + 1];
+        for &s in &self.decode_seconds {
+            let ms = s * 1e3;
+            let i = DECODE_HIST_MS
+                .iter()
+                .position(|&b| ms <= b)
+                .unwrap_or(DECODE_HIST_MS.len());
+            h[i] += 1;
+        }
+        h
+    }
+
+    /// One-line rendering of `decode_histogram` for serve output, e.g.
+    /// `<=0.5ms:0 <=1ms:3 ... >64ms:0`.
+    pub fn decode_histogram_line(&self) -> String {
+        let h = self.decode_histogram();
+        let mut parts: Vec<String> = DECODE_HIST_MS
+            .iter()
+            .zip(&h)
+            .map(|(b, n)| format!("<={b}ms:{n}"))
+            .collect();
+        parts.push(format!(
+            ">{}ms:{}",
+            DECODE_HIST_MS[DECODE_HIST_MS.len() - 1],
+            h[DECODE_HIST_MS.len()]
+        ));
+        parts.join(" ")
+    }
+
     pub fn summary(&self) -> MetricsSummary {
         let xfer = self.transfer();
+        let mean_u64 = |xs: &[u64]| {
+            if xs.is_empty() {
+                0.0
+            } else {
+                xs.iter().sum::<u64>() as f64 / xs.len() as f64
+            }
+        };
         MetricsSummary {
             uploads: xfer.uploads,
             bytes_uploaded: xfer.bytes_uploaded,
@@ -106,6 +164,10 @@ impl Metrics {
             tpot_std: stats::std(&self.tpot),
             tpot_p99: stats::percentile(&self.tpot, 99.0),
             decode_mean: stats::mean(&self.decode_seconds),
+            decode_p50: stats::percentile(&self.decode_seconds, 50.0),
+            decode_p99: stats::percentile(&self.decode_seconds, 99.0),
+            decode_bytes_up_per_step: mean_u64(&self.decode_bytes_up),
+            decode_bytes_down_per_step: mean_u64(&self.decode_bytes_down),
             prefill_mean: stats::mean(&self.prefill_seconds),
             mean_batch: stats::mean(
                 &self.decode_batch_sizes.iter().map(|&b| b as f64).collect::<Vec<_>>(),
@@ -138,6 +200,14 @@ pub struct MetricsSummary {
     pub tpot_std: f64,
     pub tpot_p99: f64,
     pub decode_mean: f64,
+    pub decode_p50: f64,
+    pub decode_p99: f64,
+    /// Steady-state transfer budget gauges: mean bytes crossing the host
+    /// boundary per decode step (up = uploads, down = fetches). In the
+    /// default device-resident + device-sampled mode these sit in the
+    /// low hundreds of bytes; the seed round-tripped ~9 MB.
+    pub decode_bytes_up_per_step: f64,
+    pub decode_bytes_down_per_step: f64,
     pub prefill_mean: f64,
     pub mean_batch: f64,
 }
@@ -150,6 +220,11 @@ impl MetricsSummary {
             self.tokens_out as f64 / self.elapsed
         }
     }
+
+    /// Combined (up + down) steady-state bytes per decode step.
+    pub fn decode_bytes_per_step(&self) -> f64 {
+        self.decode_bytes_up_per_step + self.decode_bytes_down_per_step
+    }
 }
 
 #[cfg(test)]
@@ -161,7 +236,16 @@ mod tests {
     fn summary_aggregates() {
         let mut m = Metrics::new();
         m.record_prefill(0.1);
-        m.record_decode(0.05, 3);
+        m.record_decode(
+            0.05,
+            3,
+            TransferStats {
+                uploads: 2,
+                bytes_uploaded: 64,
+                fetches: 1,
+                bytes_fetched: 32,
+            },
+        );
         m.record_finished(&Response {
             id: 1,
             tokens: vec![1, 2, 3],
@@ -189,5 +273,36 @@ mod tests {
         assert!((s.tpot_mean - 0.055).abs() < 1e-9);
         assert!((s.mean_batch - 3.0).abs() < 1e-9);
         assert!(s.tokens_per_second() > 0.0);
+        assert!((s.decode_bytes_up_per_step - 64.0).abs() < 1e-9);
+        assert!((s.decode_bytes_down_per_step - 32.0).abs() < 1e-9);
+        assert!((s.decode_bytes_per_step() - 96.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_histogram_buckets() {
+        let mut m = Metrics::new();
+        for &s in &[0.0003, 0.0018, 0.0018, 0.030, 9.0] {
+            m.record_decode(s, 1, TransferStats::default());
+        }
+        let h = m.decode_histogram();
+        assert_eq!(h[0], 1, "0.3ms -> <=0.5ms");
+        assert_eq!(h[2], 2, "1.8ms -> <=2ms");
+        assert_eq!(h[6], 1, "30ms -> <=32ms");
+        assert_eq!(h[DECODE_HIST_MS.len()], 1, "9s -> +inf");
+        assert_eq!(h.iter().sum::<usize>(), 5);
+        let line = m.decode_histogram_line();
+        assert!(line.starts_with("<=0.5ms:1"));
+        assert!(line.ends_with(">64ms:1"));
+    }
+
+    #[test]
+    fn decode_percentiles_in_summary() {
+        let mut m = Metrics::new();
+        for i in 1..=100 {
+            m.record_decode(i as f64 / 1000.0, 4, TransferStats::default());
+        }
+        let s = m.summary();
+        assert!((s.decode_p50 - 0.0505).abs() < 1e-6);
+        assert!(s.decode_p99 > 0.098 && s.decode_p99 <= 0.100);
     }
 }

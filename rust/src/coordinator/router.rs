@@ -23,6 +23,32 @@ pub trait ServeBackend {
     fn load(&self) -> usize;
     fn vocab(&self) -> usize;
     fn record_rejected(&mut self);
+    /// Log the serving metrics (decode latency p50/p99 + histogram and
+    /// the steady-state bytes-per-step transfer gauges) — called by the
+    /// server at shutdown so the transfer budget is visible in `serve`
+    /// output, not just the perf bench.
+    fn log_metrics(&self);
+}
+
+/// One engine's metrics line for serve output.
+fn log_scheduler_metrics(tag: &str, sched: &Scheduler) {
+    let s = sched.metrics.summary();
+    log::info!(
+        "{tag}: {} ok / {} err / {} rej / {} cancel; {:.1} tok/s; \
+         decode mean {:.2} ms p50 {:.2} ms p99 {:.2} ms; \
+         steady-state {:.0} B up + {:.0} B down per step",
+        s.completed,
+        s.errored,
+        s.rejected,
+        s.cancelled,
+        s.tokens_per_second(),
+        s.decode_mean * 1e3,
+        s.decode_p50 * 1e3,
+        s.decode_p99 * 1e3,
+        s.decode_bytes_up_per_step,
+        s.decode_bytes_down_per_step,
+    );
+    log::info!("{tag}: decode latency histogram {}", sched.metrics.decode_histogram_line());
 }
 
 impl ServeBackend for Scheduler {
@@ -72,6 +98,10 @@ impl ServeBackend for Scheduler {
 
     fn record_rejected(&mut self) {
         self.metrics.record_rejected();
+    }
+
+    fn log_metrics(&self) {
+        log_scheduler_metrics("serve", self);
     }
 }
 
@@ -259,6 +289,12 @@ impl ServeBackend for Router {
         if let Some((_, s)) = self.engines.first_mut() {
             // process-level counter; by convention it lives on engine 0
             s.metrics.record_rejected();
+        }
+    }
+
+    fn log_metrics(&self) {
+        for (mode, sched) in &self.engines {
+            log_scheduler_metrics(&format!("serve[{mode}]"), sched);
         }
     }
 }

@@ -157,9 +157,13 @@ impl Scheduler {
                 tokens[slot] = *run.generated.last().unwrap();
             }
             let t0 = std::time::Instant::now();
-            let next = self.engine.decode_step(&tokens)?;
+            // meter the step's host-boundary traffic alongside its
+            // latency: the bytes-per-step gauges in the serve metrics
+            let (next, xfer) =
+                crate::runtime::transfer::measure(|| self.engine.decode_step(&tokens));
+            let next = next?;
             let dt = t0.elapsed().as_secs_f64();
-            self.metrics.record_decode(dt, self.running.len());
+            self.metrics.record_decode(dt, self.running.len(), xfer);
 
             let slots: Vec<usize> = self.running.keys().copied().collect();
             for slot in slots {

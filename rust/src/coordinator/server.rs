@@ -225,7 +225,10 @@ impl Server {
                 std::thread::sleep(std::time::Duration::from_millis(2));
             }
         }
-        // shutdown: cancel in-flight work and tell every waiter
+        // shutdown: cancel in-flight work and tell every waiter, then
+        // leave the serving metrics (latency histogram + per-step
+        // transfer gauges) in the log — after cancel_all, so the
+        // cancelled count includes the requests shutdown just cancelled
         backend.cancel_all();
         for resp in backend.take_finished() {
             if let Some(w) = waiters.remove(&resp.id) {
@@ -234,6 +237,7 @@ impl Server {
                     .send(Outbound::Done(render_response(&resp, Some(&tokenizer))));
             }
         }
+        backend.log_metrics();
         Ok(())
     }
 }

@@ -9,6 +9,18 @@
 //! no longer reduces the error below tau * previous (eq. 10), or at
 //! m_max. Optionally warm-start from non-semantic tokens (<bos>), the
 //! heuristic the paper §4.1 recommends.
+//!
+//! The eq.-10 comparison is made on a *single* text sample: slot 0 of
+//! the first candidate chunk carries a PAD sentinel (PAD is masked out
+//! of L_q, so that row scores the incumbent prefix itself), giving the
+//! incumbent's error on exactly the sample the sweep is scored on. The
+//! seed compared the new best against the error remembered from the
+//! previous iteration's freshly drawn sample — two numbers from
+//! different texts — which made the early stop fire (or not) on sample
+//! noise rather than on the candidate's actual improvement. The sentinel
+//! also rides along in the first sweep chunk, so the incumbent costs no
+//! extra graph call (the seed's `score_one` paid a whole SCORE_BATCH
+//! forward for that one scalar).
 
 use std::time::Instant;
 
@@ -69,53 +81,62 @@ pub fn greedy_search(session: &Session, cfg: &SearchCfg) -> crate::Result<Search
     let mut scored = 0usize;
     let mut lq_trace = Vec::new();
 
-    // baseline error with the current prefix (scored with a PAD candidate
-    // slot appended — the candidate position is masked out of L_q anyway,
-    // but we need *some* token there; PAD has an inert embedding).
     let draw_text = |rng: &mut SplitMix64| -> Vec<i32> {
         let i = rng.next_below(calib.n_seqs as u64) as usize;
         calib.seq(i)[..m.score_text_len].to_vec()
     };
 
-    let text0 = draw_text(&mut rng);
-    let base = score_one(session, &prefix, data::PAD, &text0, cfg.levels)?;
-    lq_trace.push(base);
-    let mut prev_lq = base;
-    log::info!("[search] start lq={base:.5} prefix={prefix:?}");
+    // The candidate list is loop-invariant — build it once, with a PAD
+    // sentinel at slot 0: PAD's position is masked out of L_q, so that
+    // row scores the *incumbent* prefix on the iteration's text sample
+    // for free (one slot of the first chunk, not an extra graph call).
+    let mut cands_all: Vec<i32> = Vec::with_capacity(m.vocab / cfg.vocab_stride.max(1) + 1);
+    cands_all.push(data::PAD);
+    cands_all.extend(
+        (0..m.vocab as i32)
+            .step_by(cfg.vocab_stride)
+            .filter(|&t| t != data::PAD),
+    );
 
     while prefix.len() < max_len {
         let text = draw_text(&mut rng);
         // sweep the embedding table in score_batch-sized chunks
+        let mut incumbent = f32::INFINITY;
         let mut best: (i32, f32) = (data::PAD, f32::INFINITY);
-        let vocab: Vec<i32> = (0..m.vocab as i32)
-            .step_by(cfg.vocab_stride)
-            .filter(|&t| t != data::PAD)
-            .collect();
-        for chunk in vocab.chunks(m.score_batch) {
+        for (ci, chunk) in cands_all.chunks(m.score_batch).enumerate() {
             let mut cands = chunk.to_vec();
             cands.resize(m.score_batch, data::PAD);
             let lqs = session.score_candidates(&prefix, &cands, &text, cfg.levels)?;
-            scored += chunk.len();
-            for (i, &t) in chunk.iter().enumerate() {
+            // slot 0 of chunk 0 is the sentinel, not a candidate
+            let skip = usize::from(ci == 0);
+            if ci == 0 {
+                incumbent = lqs[0];
+            }
+            scored += chunk.len() - skip;
+            for (i, &t) in chunk.iter().enumerate().skip(skip) {
                 if lqs[i] < best.1 {
                     best = (t, lqs[i]);
                 }
             }
         }
-        // eq. 10: accept only if the error drops below tau * previous
-        if best.1 > cfg.tau * prev_lq && !prefix.is_empty() {
+        if lq_trace.is_empty() {
+            lq_trace.push(incumbent);
+            log::info!("[search] start lq={incumbent:.5} prefix={prefix:?}");
+        }
+        // eq. 10: accept only if the error drops below tau * the
+        // incumbent's error on the SAME sample (comparable numbers)
+        if best.1 > cfg.tau * incumbent && !prefix.is_empty() {
             log::info!(
                 "[search] stop: best lq {:.5} > tau*{:.5}",
-                best.1, prev_lq
+                best.1, incumbent
             );
             break;
         }
         log::info!(
             "[search] += token {} (lq {:.5} -> {:.5})",
-            best.0, prev_lq, best.1
+            best.0, incumbent, best.1
         );
         prefix.push(best.0);
-        prev_lq = best.1;
         lq_trace.push(best.1);
     }
 
@@ -125,14 +146,6 @@ pub fn greedy_search(session: &Session, cfg: &SearchCfg) -> crate::Result<Search
         candidates_scored: scored,
         seconds: t0.elapsed().as_secs_f64(),
     })
-}
-
-/// Score a single (prefix, candidate) pair on a text sample.
-fn score_one(session: &Session, prefix: &[i32], cand: i32, text: &[i32],
-             levels: f32) -> crate::Result<f32> {
-    let m = &session.manifest;
-    let cands = vec![cand; m.score_batch];
-    Ok(session.score_candidates(prefix, &cands, text, levels)?[0])
 }
 
 #[cfg(test)]

@@ -61,6 +61,17 @@ pub fn argmax(row: &[f32]) -> usize {
     best.0
 }
 
+/// Per-row argmax over a flattened [b, v] logit matrix — the host-side
+/// reference for (and fallback of) the engine's device-side token
+/// selection. Ties resolve to the lowest index, matching both `argmax`
+/// and jnp.argmax in the `decode_sampled_*` graphs.
+pub fn argmax_rows(logits: &[f32], b: usize, v: usize) -> Vec<i32> {
+    assert_eq!(logits.len(), b * v, "argmax_rows: bad [b, v] layout");
+    (0..b)
+        .map(|bi| argmax(&logits[bi * v..(bi + 1) * v]) as i32)
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -93,5 +104,13 @@ mod tests {
     #[test]
     fn argmax_basic() {
         assert_eq!(argmax(&[0.1, 3.0, -2.0]), 1);
+    }
+
+    #[test]
+    fn argmax_rows_matches_per_row_argmax() {
+        let logits = [0.1, 3.0, -2.0, 5.0, 4.0, 4.0];
+        assert_eq!(argmax_rows(&logits, 2, 3), vec![1, 0]);
+        // ties resolve low, matching jnp.argmax in the sampled graphs
+        assert_eq!(argmax_rows(&[7.0, 7.0], 1, 2), vec![0]);
     }
 }

@@ -41,7 +41,8 @@ fn gran_of(s: &str) -> anyhow::Result<Granularity> {
 fn run() -> anyhow::Result<()> {
     let cli = Cli::new(
         "cushiond — CushionCache (EMNLP 2024) coordinator\n\
-         commands: list | calibrate | search | tune | pipeline | eval | serve",
+         commands: list | calibrate | search | tune | pipeline | eval | serve\n\
+         | bench-diff <base.json> <new.json>",
     )
     .positional("command", "subcommand")
     .opt("variant", "tl-llama", "model variant (see `list`)")
@@ -58,6 +59,8 @@ fn run() -> anyhow::Result<()> {
          router (e.g. 'fp,pts'); '' = single engine with --gran")
     .opt("queue-limit", "64", "serve: max queued+running requests before \
          'overloaded' rejections")
+    .opt("tol", "0.10", "bench-diff: mean-latency regression tolerance \
+         (fraction; transfer growth always fails)")
     .flag("smooth", "apply SmoothQuant (alpha 0.8)")
     .flag("no-tune", "pipeline: skip the tuning stage");
     let args = cli.parse_env()?;
@@ -222,9 +225,38 @@ fn run() -> anyhow::Result<()> {
                 server.serve_router(router, stop)
             }
         }
+        "bench-diff" => {
+            // pre-merge perf gate: diff two BENCH_*.json snapshots and
+            // fail (exit 1) on a latency regression beyond --tol or on
+            // any per-iteration transfer growth (see scripts/bench_diff.sh)
+            let pos = args.positionals();
+            let (base, new) = match (pos.get(1), pos.get(2)) {
+                (Some(b), Some(n)) => (b.as_str(), n.as_str()),
+                _ => anyhow::bail!(
+                    "usage: cushiond bench-diff <base.json> <new.json> [--tol 0.10]"
+                ),
+            };
+            let tol = args.get_f64("tol")?;
+            let report = cushioncache::bench::diff::diff_files(base, new, tol)?;
+            for n in &report.notes {
+                println!("note: {n}");
+            }
+            if report.passed() {
+                println!("bench-diff: OK ({base} -> {new}, tol {:.0}%)", tol * 100.0);
+                Ok(())
+            } else {
+                for r in &report.regressions {
+                    eprintln!("REGRESSION: {r}");
+                }
+                anyhow::bail!(
+                    "bench-diff: {} regression(s) ({base} -> {new})",
+                    report.regressions.len()
+                );
+            }
+        }
         other => anyhow::bail!(
             "unknown command '{other}'\ncommands: list | calibrate | search | \
-             tune | pipeline | eval | serve (--help for options)"
+             tune | pipeline | eval | serve | bench-diff (--help for options)"
         ),
     }
 }

@@ -27,6 +27,11 @@ pub struct Manifest {
     pub window: usize, // 0 = full attention
     pub n_sites: usize,
     pub seq_len: usize,
+    /// Prefill bucket lengths (ascending, last == seq_len): one
+    /// `prefill_sampled_*_b<n>` graph is lowered per bucket and the
+    /// serving engine picks the smallest bucket >= prompt length.
+    /// Manifests written before buckets existed default to `[seq_len]`.
+    pub prefill_buckets: Vec<usize>,
     pub m_max: usize,
     pub cache_cap: usize,
     pub serve_batch: usize,
@@ -65,6 +70,18 @@ impl Manifest {
                 })
             })
             .collect::<crate::Result<Vec<_>>>()?;
+        let seq_len = v.req_usize("seq_len")?;
+        let mut prefill_buckets: Vec<usize> = v
+            .get("prefill_buckets")
+            .and_then(Value::as_arr)
+            .map(|a| a.iter().filter_map(Value::as_usize).collect())
+            .unwrap_or_default();
+        prefill_buckets.retain(|&b| b > 0 && b <= seq_len);
+        prefill_buckets.sort_unstable();
+        prefill_buckets.dedup();
+        if prefill_buckets.is_empty() {
+            prefill_buckets = vec![seq_len];
+        }
         let graphs = v
             .req("graphs")?
             .as_arr()
@@ -86,7 +103,8 @@ impl Manifest {
             pos: v.req_str("pos")?.to_string(),
             window: v.req_usize("window")?,
             n_sites: v.req_usize("n_sites")?,
-            seq_len: v.req_usize("seq_len")?,
+            seq_len,
+            prefill_buckets,
             m_max: v.req_usize("m_max")?,
             cache_cap: v.req_usize("cache_cap")?,
             serve_batch: v.req_usize("serve_batch")?,
@@ -137,6 +155,20 @@ mod tests {
         assert!(m.is_pre_norm());
         assert_eq!(m.site_name(5), "layer1.attn_out");
         assert_eq!(m.graphs.len(), 2);
+        // pre-bucket manifests degrade to one full-length bucket
+        assert_eq!(m.prefill_buckets, vec![128]);
+    }
+
+    #[test]
+    fn prefill_buckets_parse_sorted_and_bounded() {
+        let with = SAMPLE.replacen(
+            "\"seq_len\": 128,",
+            "\"seq_len\": 128, \"prefill_buckets\": [128, 32, 64, 999, 32],",
+            1,
+        );
+        let m = Manifest::parse(&with).unwrap();
+        // sorted, deduped, clamped to seq_len (the 999 entry is dropped)
+        assert_eq!(m.prefill_buckets, vec![32, 64, 128]);
     }
 
     #[test]

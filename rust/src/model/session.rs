@@ -17,6 +17,7 @@ use crate::data::corpus::Corpus;
 use crate::quant::scales;
 use crate::quant::scheme::Scheme;
 use crate::runtime::literalx::{HostValue, IntTensor, Outputs, Value};
+use crate::runtime::split::TupleSplitter;
 use crate::runtime::{Client, Registry};
 use crate::util::fsutil;
 use crate::util::tensor::Tensor;
@@ -133,6 +134,19 @@ impl Session {
     /// Outputs stay in runtime form; fetch only what you need (see
     /// literalx::Outputs).
     pub fn run_values(&self, name: &str, extra: Vec<Value>) -> crate::Result<Outputs> {
+        self.run_values_split(name, extra, None)
+    }
+
+    /// `run_values` with an optional on-device tuple splitter for the
+    /// graph's output signature (runtime::split): the hot-path variant
+    /// where a tuple-shaped result decomposes into per-output *device*
+    /// buffers instead of materializing as one host literal.
+    pub fn run_values_split(
+        &self,
+        name: &str,
+        extra: Vec<Value>,
+        splitter: Option<&TupleSplitter>,
+    ) -> crate::Result<Outputs> {
         let exe = self.registry.get(name)?;
         let client = self.registry.client();
         let mut bufs = self.pool.weight_buffers(&self.weights)?;
@@ -141,7 +155,7 @@ impl Session {
             bufs.push(v.into_buffer(client)?);
         }
         let refs: Vec<&xla::PjRtBuffer> = bufs.iter().map(|b| b.as_ref()).collect();
-        exe.run_outputs(&refs)
+        exe.run_outputs_with(&refs, splitter)
     }
 
     /// Execute graph `name` with host args, fetching all outputs as f32

@@ -72,6 +72,18 @@ impl Executable {
         Outputs::from_execute(self.run_buffers(args)?)
     }
 
+    /// Execute on device buffers, decomposing a tuple-shaped result into
+    /// per-output *device* buffers via `splitter` (runtime::split) — the
+    /// hot-path variant where pass-through state (the serving KV cache)
+    /// must never materialize on the host.
+    pub fn run_outputs_with(
+        &self,
+        args: &[&xla::PjRtBuffer],
+        splitter: Option<&crate::runtime::split::TupleSplitter>,
+    ) -> crate::Result<Outputs> {
+        Outputs::from_execute_split(self.run_buffers(args)?, splitter)
+    }
+
     /// Convenience: upload host args, execute, fetch all outputs as f32.
     pub fn run_host(&self, args: &[HostValue]) -> crate::Result<Vec<Tensor>> {
         let bufs: Vec<xla::PjRtBuffer> = args

@@ -6,6 +6,7 @@
 use std::rc::Rc;
 
 use super::client::Client;
+use super::split::TupleSplitter;
 use super::transfer;
 use crate::util::tensor::Tensor;
 
@@ -121,6 +122,16 @@ impl OutValue {
         }
     }
 
+    /// Bring this output to the host as an i32 tensor (token ids). The
+    /// device-side-selection fetch path: a decode step fetches [B] ids
+    /// through here instead of [B, vocab] f32 logits.
+    pub fn to_int_tensor(&self) -> crate::Result<IntTensor> {
+        match self {
+            OutValue::Device(b) => fetch_i32(b),
+            OutValue::Literal(l) => literal_i32(l),
+        }
+    }
+
     /// Keep this output on device for the next call: `Device` is wrapped
     /// as-is; `Literal` is uploaded without an f32 conversion.
     pub fn into_value(self, client: &Client) -> crate::Result<Value> {
@@ -139,10 +150,49 @@ pub struct Outputs {
 }
 
 impl Outputs {
+    /// Wrap raw execute outputs, decomposing a root tuple on device when
+    /// a `TupleSplitter` for the graph's output signature is supplied:
+    /// every element stays a `Device` buffer and nothing crosses to the
+    /// host (the serving hot path — the KV cache element in particular
+    /// never materializes as a host literal between steps). Without a
+    /// splitter, or if the split fails, this degrades to the host
+    /// materialization of `from_execute`.
+    pub fn from_execute_split(
+        bufs: Vec<xla::PjRtBuffer>,
+        splitter: Option<&TupleSplitter>,
+    ) -> crate::Result<Outputs> {
+        if bufs.len() == 1 {
+            if let Some(sp) = splitter.filter(|s| s.usable()) {
+                match sp.split(&bufs[0]) {
+                    Ok(parts) => {
+                        return Ok(Outputs {
+                            vals: parts
+                                .into_iter()
+                                .map(|b| Some(OutValue::Device(b)))
+                                .collect(),
+                        });
+                    }
+                    Err(e) => {
+                        // latch the splitter off: one warn, no doomed
+                        // device execution retried every step
+                        sp.disable();
+                        log::warn!(
+                            "on-device tuple split failed ({e:#}); this \
+                             signature will materialize on host from now on"
+                        );
+                    }
+                }
+            }
+        }
+        Self::from_execute(bufs)
+    }
+
     /// Wrap raw execute outputs. XLA wraps multi-output programs in a
     /// root tuple which PJRT returns as a single tuple-shaped buffer; it
     /// is materialized to a host literal *once* here and decomposed into
-    /// element literals (the 0.5.1 wrapper offers no on-device split).
+    /// element literals (the 0.5.1 wrapper offers no native on-device
+    /// split — `runtime::split` works around that for signatures the
+    /// caller declares; this is the fallback).
     pub fn from_execute(bufs: Vec<xla::PjRtBuffer>) -> crate::Result<Outputs> {
         if bufs.len() == 1 {
             let mut lit = bufs[0]
@@ -193,6 +243,16 @@ impl Outputs {
             .to_tensor()
     }
 
+    /// Fetch output `i` to the host as an i32 tensor (leaves it in
+    /// place) — the token-id fetch path of the `*_sampled_*` graphs.
+    pub fn host_i32(&self, i: usize) -> crate::Result<IntTensor> {
+        self.vals
+            .get(i)
+            .and_then(|v| v.as_ref())
+            .ok_or_else(|| anyhow::anyhow!("output {i} missing or already taken"))?
+            .to_int_tensor()
+    }
+
     /// Fetch every remaining output as an f32 host tensor, in order.
     pub fn into_tensors(self) -> crate::Result<Vec<Tensor>> {
         self.vals
@@ -234,6 +294,18 @@ pub fn literal_f32(lit: &xla::Literal) -> crate::Result<Tensor> {
     Ok(Tensor::new(dims, data))
 }
 
+/// Literal -> i32 host tensor (host-side conversion, no device transfer).
+pub fn literal_i32(lit: &xla::Literal) -> crate::Result<IntTensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit
+        .to_vec::<i32>()
+        .map_err(|e| anyhow::anyhow!("to_vec<i32>: {e:?}"))?;
+    Ok(IntTensor::new(dims, data))
+}
+
 /// Fetch all outputs of an execute call as f32 host tensors (the analysis
 /// path; the serving hot path uses `Outputs` and fetches selectively).
 pub fn fetch_all_f32(outs: Vec<xla::PjRtBuffer>) -> crate::Result<Vec<Tensor>> {
@@ -245,15 +317,9 @@ pub fn fetch_i32(buf: &xla::PjRtBuffer) -> crate::Result<IntTensor> {
     let lit = buf
         .to_literal_sync()
         .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
-    let shape = lit
-        .array_shape()
-        .map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    let data = lit
-        .to_vec::<i32>()
-        .map_err(|e| anyhow::anyhow!("to_vec<i32>: {e:?}"))?;
-    transfer::note_fetch(4 * data.len());
-    Ok(IntTensor::new(dims, data))
+    let t = literal_i32(&lit)?;
+    transfer::note_fetch(4 * t.data.len());
+    Ok(t)
 }
 
 #[cfg(test)]

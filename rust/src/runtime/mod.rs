@@ -7,19 +7,23 @@
 //!            --execute_b(device buffers)--> output buffers
 //!
 //! Everything big (weights, KV cache) lives as device buffers; only small
-//! outputs (logits, losses) are fetched to the host per call. Operands are
-//! `literalx::Value`s — per-call host data or device-resident buffers
-//! (model::resident::ResidentPool caches the loop-invariant ones) — and
-//! every host<->device crossing is metered by `transfer`.
+//! outputs (token ids, logits, losses) are fetched to the host per call.
+//! Operands are `literalx::Value`s — per-call host data or device-resident
+//! buffers (model::resident::ResidentPool caches the loop-invariant ones);
+//! tuple-shaped results decompose into per-output device buffers via
+//! `split::TupleSplitter` so pass-through state never materializes on the
+//! host — and every host<->device crossing is metered by `transfer`.
 
 pub mod client;
 pub mod executable;
 pub mod literalx;
 pub mod registry;
+pub mod split;
 pub mod transfer;
 
 pub use client::Client;
 pub use executable::Executable;
 pub use literalx::{HostValue, IntTensor, OutValue, Outputs, Value};
 pub use registry::Registry;
+pub use split::{DType, OutSpec, TupleSplitter};
 pub use transfer::TransferStats;

@@ -1,4 +1,25 @@
 //! Artifact registry: lazily compiles a variant's graphs by name.
+//!
+//! ## Graph-variant naming scheme
+//!
+//! Artifacts follow `<op>[_sampled]_<mode>[_b<bucket>]` (mirrored in
+//! python/compile/graphs.py, which lowers them):
+//!
+//! * `<op>` — `fwd` | `prefill` | `decode` | `stats` | `score_lq` |
+//!   `prefix_kv` | `tune_step`
+//! * `_sampled` — greedy token selection runs *in-graph*; the graph
+//!   outputs `(cache, next_token_ids i32, top_logit f32)` instead of
+//!   `(cache, logits)`, so only token ids cross to the host.
+//! * `<mode>` — activation-quantization granularity: `fp` | `pts` |
+//!   `ptd` | `ptk`.
+//! * `_b<bucket>` — prefill lowered at a shorter token-vector length
+//!   (manifest `prefill_buckets`); the engine picks the smallest bucket
+//!   >= prompt length.
+//!
+//! Examples: `decode_sampled_pts`, `prefill_sampled_fp_b32`,
+//! `fwd_ptk_pallas` (Pallas-kernel eval build). The logits-emitting base
+//! graphs (`decode_pts`, `prefill_pts`) remain the parity/fallback path
+//! for artifacts produced before a variant existed.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -21,6 +42,15 @@ impl Registry {
 
     pub fn dir(&self) -> &PathBuf {
         &self.dir
+    }
+
+    /// Whether the named graph's artifact exists on disk. Callers use
+    /// this (not just the manifest's graph list) to pick optional
+    /// variants — e.g. `decode_sampled_*` — so a stale manifest or a
+    /// partially regenerated artifact dir degrades to the base graphs
+    /// instead of failing at execute time.
+    pub fn has(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
     }
 
     /// Get (compiling on first use) the named graph.

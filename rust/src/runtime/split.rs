@@ -1,0 +1,204 @@
+//! On-device decomposition of tuple-shaped execute results.
+//!
+//! xla_extension 0.5.1 returns a multi-output program's root tuple as a
+//! single tuple-shaped `PjRtBuffer` and offers no native on-device
+//! split, so the seed runtime materialized the whole tuple to a host
+//! literal per call — for the serving decode step that meant the ~4.5 MB
+//! KV cache crossed the host boundary twice per token (fetch + re-upload)
+//! even though no host code ever read it.
+//!
+//! `TupleSplitter` closes that hole with the one primitive the wrapper
+//! *does* expose: compiling HLO text. For a declared output signature it
+//! synthesizes one tiny `get-tuple-element` program per element
+//!
+//! ```text
+//! HloModule cushion_split_e0
+//! ENTRY main {
+//!   arg = (f32[4,2,8,2,144,64], s32[8], f32[8]) parameter(0)
+//!   ROOT out = f32[4,2,8,2,144,64] get-tuple-element(arg), index=0
+//! }
+//! ```
+//!
+//! and executes each against the tuple buffer, yielding per-output
+//! *device* buffers: the cache element never materializes as a host
+//! literal between steps (a device-to-device copy replaces two PCIe
+//! crossings; input donation would also elide the copy, but the 0.5.1
+//! wrapper exposes no aliasing config — see DESIGN.md §Perf). Where the
+//! runtime already returns per-output buffers (`return_tuple=False`
+//! lowering honored by the PJRT client) the splitter is simply unused.
+//!
+//! Construction is fallible by design: if the wrapper rejects
+//! tuple-shaped parameters, callers degrade to the host-literal
+//! materialization path (`Outputs::from_execute` without a splitter) and
+//! the system behaves exactly like the seed.
+
+use super::client::Client;
+use super::executable::Executable;
+
+/// Element type of one graph output (everything this system moves is
+/// f32 or i32).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn hlo(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "s32",
+        }
+    }
+}
+
+/// Declared shape of one output of a multi-output graph.
+#[derive(Clone, Debug)]
+pub struct OutSpec {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl OutSpec {
+    pub fn f32(dims: &[usize]) -> Self {
+        Self { dtype: DType::F32, dims: dims.to_vec() }
+    }
+
+    pub fn i32(dims: &[usize]) -> Self {
+        Self { dtype: DType::I32, dims: dims.to_vec() }
+    }
+
+    /// HLO shape string, e.g. `f32[8,144]` (`f32[]` for scalars).
+    fn hlo(&self) -> String {
+        let dims: Vec<String> = self.dims.iter().map(usize::to_string).collect();
+        format!("{}[{}]", self.dtype.hlo(), dims.join(","))
+    }
+
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// HLO text of the get-tuple-element program for element `index`.
+fn gte_module_text(spec: &[OutSpec], index: usize) -> String {
+    let tuple: Vec<String> = spec.iter().map(OutSpec::hlo).collect();
+    format!(
+        "HloModule cushion_split_e{index}\n\n\
+         ENTRY main {{\n  \
+           arg = ({tuple}) parameter(0)\n  \
+           ROOT out = {elem} get-tuple-element(arg), index={index}\n\
+         }}\n",
+        tuple = tuple.join(", "),
+        elem = spec[index].hlo(),
+    )
+}
+
+/// One compiled extractor per tuple element. Splitters are keyed by the
+/// output *signature*, so graphs sharing one (every prefill bucket, for
+/// instance) share one splitter.
+pub struct TupleSplitter {
+    spec: Vec<OutSpec>,
+    parts: Vec<Executable>,
+    /// Latched on the first *runtime* split failure (compile succeeded
+    /// but execute rejected the tuple argument): callers skip the
+    /// splitter from then on instead of re-running a doomed device
+    /// execution — and re-warning — every step. Cell is fine here: the
+    /// PJRT-touching types are !Sync already (see model::resident).
+    dead: std::cell::Cell<bool>,
+}
+
+impl TupleSplitter {
+    /// Compile the per-element extractors for `spec`. Errors (the HLO
+    /// parser or PJRT rejecting tuple parameters) leave the caller on
+    /// the host-materialization fallback — never fatal.
+    pub fn new(client: &Client, spec: &[OutSpec]) -> crate::Result<Self> {
+        anyhow::ensure!(spec.len() > 1, "splitter needs a multi-output spec");
+        // pid + process-wide counter: several engines (or parallel
+        // tests) building splitters concurrently must never write the
+        // same scratch path, or one would compile the other's signature.
+        static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let dir = std::env::temp_dir();
+        let tag = format!(
+            "{}_{}",
+            std::process::id(),
+            SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        );
+        let mut parts = Vec::with_capacity(spec.len());
+        for i in 0..spec.len() {
+            let text = gte_module_text(spec, i);
+            // HloModuleProto only parses from a file in this wrapper.
+            let path = dir.join(format!("cushion_split_{tag}_{i}.hlo.txt"));
+            std::fs::write(&path, &text)
+                .map_err(|e| anyhow::anyhow!("writing {path:?}: {e}"))?;
+            let loaded = Executable::load(client, &format!("split_e{i}"), &path);
+            let _ = std::fs::remove_file(&path);
+            parts.push(loaded?);
+        }
+        Ok(Self {
+            spec: spec.to_vec(),
+            parts,
+            dead: std::cell::Cell::new(false),
+        })
+    }
+
+    pub fn arity(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn spec(&self) -> &[OutSpec] {
+        &self.spec
+    }
+
+    /// False once a runtime split has failed; callers fall back to host
+    /// materialization without retrying.
+    pub fn usable(&self) -> bool {
+        !self.dead.get()
+    }
+
+    /// Latch this splitter off after a runtime failure (warned once by
+    /// the caller).
+    pub fn disable(&self) {
+        self.dead.set(true);
+    }
+
+    /// Decompose a tuple-shaped result buffer into per-element device
+    /// buffers. Pure device-side: no transfer counters move.
+    pub fn split(&self, tuple: &xla::PjRtBuffer) -> crate::Result<Vec<xla::PjRtBuffer>> {
+        let mut out = Vec::with_capacity(self.parts.len());
+        for (i, part) in self.parts.iter().enumerate() {
+            let mut bufs = part.run_buffers(&[tuple])?;
+            anyhow::ensure!(
+                bufs.len() == 1,
+                "split element {i}: expected 1 output, got {}",
+                bufs.len()
+            );
+            out.push(bufs.pop().unwrap());
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gte_text_shapes() {
+        let spec = vec![
+            OutSpec::f32(&[4, 2, 8]),
+            OutSpec::i32(&[8]),
+            OutSpec::f32(&[]),
+        ];
+        let t = gte_module_text(&spec, 1);
+        assert!(t.contains("(f32[4,2,8], s32[8], f32[])"));
+        assert!(t.contains("ROOT out = s32[8] get-tuple-element(arg), index=1"));
+        let t0 = gte_module_text(&spec, 2);
+        assert!(t0.contains("ROOT out = f32[] get-tuple-element(arg), index=2"));
+    }
+
+    #[test]
+    fn out_spec_elems() {
+        assert_eq!(OutSpec::f32(&[3, 4]).elems(), 12);
+        assert_eq!(OutSpec::i32(&[]).elems(), 1);
+    }
+}

@@ -52,6 +52,15 @@ pub fn note_fetch(bytes: usize) {
     BYTES_FETCHED.fetch_add(bytes as u64, Ordering::Relaxed);
 }
 
+/// Run `f` and return its result with the transfer-counter delta over
+/// the call — the metering idiom of the scheduler's per-step gauges and
+/// the perf benches.
+pub fn measure<R>(f: impl FnOnce() -> R) -> (R, TransferStats) {
+    let base = snapshot();
+    let r = f();
+    (r, snapshot().delta_since(&base))
+}
+
 /// Current cumulative counters.
 pub fn snapshot() -> TransferStats {
     TransferStats {
@@ -66,8 +75,13 @@ pub fn snapshot() -> TransferStats {
 mod tests {
     use super::*;
 
+    // The counters are process-global; serialize the tests that bump
+    // them so the exact-equality assertions stay deterministic.
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
     #[test]
     fn deltas_track_notes() {
+        let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
         let base = snapshot();
         note_upload(128);
         note_upload(64);
@@ -77,5 +91,18 @@ mod tests {
         assert_eq!(d.bytes_uploaded, 192);
         assert_eq!(d.fetches, 1);
         assert_eq!(d.bytes_fetched, 256);
+    }
+
+    #[test]
+    fn measure_scopes_delta() {
+        let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let (r, d) = measure(|| {
+            note_upload(32);
+            7
+        });
+        assert_eq!(r, 7);
+        assert_eq!(d.uploads, 1);
+        assert_eq!(d.bytes_uploaded, 32);
+        assert_eq!(d.fetches, 0);
     }
 }

@@ -1,0 +1,175 @@
+//! Sampling / bucketing parity for the device-side-selection serving
+//! path: device-selected token ids must equal host argmax over fetched
+//! logits in every residency mode, and bucketed prefill must pick the
+//! same first token as the full-length prefill at/below/above each
+//! bucket boundary.
+//!
+//! Like the other integration tests these skip when `make artifacts` has
+//! not run; the sampled-graph tests additionally skip (loudly) when the
+//! artifact set predates the `*_sampled_*` variants, so a stale artifact
+//! dir degrades to "nothing to check" instead of a false failure.
+
+use std::sync::{Mutex, MutexGuard};
+
+use cushioncache::coordinator::Engine;
+use cushioncache::data::PAD;
+use cushioncache::model::session::Session;
+use cushioncache::quant::calibrate;
+use cushioncache::quant::scheme::{Algorithm, Granularity, Scheme};
+use cushioncache::runtime::transfer;
+use cushioncache::runtime::Client;
+use cushioncache::util::fsutil;
+
+const VARIANT: &str = "tl-llama";
+
+/// The transfer counters are process-global; serialize this binary's
+/// tests (poison-proof) so the byte-budget assertion is deterministic.
+static XFER_LOCK: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    XFER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn have_artifacts() -> bool {
+    fsutil::variant_dir(VARIANT).join("manifest.json").exists()
+}
+
+fn engine() -> Engine {
+    let mut s =
+        Session::load_with_client(VARIANT, Client::cpu().unwrap()).unwrap();
+    let scheme = Scheme::w8a8(Granularity::PerTensorStatic, Algorithm::Naive);
+    calibrate::calibrate_into(&mut s, scheme.act_levels(), 1).unwrap();
+    s.set_cushion_tokens(&[cushioncache::data::BOS]).unwrap();
+    Engine::new(s, scheme).unwrap()
+}
+
+fn prompt(len: usize, seq: usize) -> Vec<i32> {
+    let s = Session::load_with_client(VARIANT, Client::cpu().unwrap()).unwrap();
+    s.corpus.split("heldout").unwrap().seq(seq)[..len].to_vec()
+}
+
+/// Generate `steps` tokens from `prompt` on a fresh engine configured by
+/// `setup`; returns the full token stream (first token included).
+fn generate(prompt: &[i32], steps: usize, setup: impl Fn(&mut Engine)) -> Vec<i32> {
+    let mut e = engine();
+    setup(&mut e);
+    let slot = e.kv.alloc(1, prompt.len()).unwrap();
+    let mut out = Vec::new();
+    let mut last = e.prefill(slot, prompt).unwrap();
+    out.push(last);
+    let b = e.session.manifest.serve_batch;
+    for _ in 0..steps {
+        let mut toks = vec![PAD; b];
+        toks[slot] = last;
+        last = e.decode_step(&toks).unwrap()[slot];
+        e.kv.push_token(slot);
+        out.push(last);
+    }
+    out
+}
+
+#[test]
+fn device_selected_ids_match_host_argmax_in_every_residency_mode() {
+    let _guard = serial();
+    if !have_artifacts() {
+        return;
+    }
+    if !engine().sampled_decode_available() {
+        eprintln!("skipping: artifacts predate the *_sampled_* graphs");
+        return;
+    }
+    let p = prompt(20, 1);
+    for host_roundtrip in [false, true] {
+        // host argmax over fetched logits (the reference semantics)
+        let host = generate(&p, 6, |e| {
+            e.set_device_sampling(false);
+            e.set_host_roundtrip(host_roundtrip);
+        });
+        // in-graph selection, only ids fetched
+        let device = generate(&p, 6, |e| {
+            e.set_device_sampling(true);
+            e.set_host_roundtrip(host_roundtrip);
+        });
+        assert_eq!(
+            device, host,
+            "device-selected ids diverge from host argmax \
+             (host_roundtrip={host_roundtrip})"
+        );
+    }
+}
+
+#[test]
+fn bucketed_prefill_matches_full_length_at_boundaries() {
+    let _guard = serial();
+    if !have_artifacts() {
+        return;
+    }
+    let probe = engine();
+    let buckets: Vec<usize> = probe.sampled_prefill_buckets().to_vec();
+    if buckets.len() < 2 {
+        eprintln!("skipping: artifacts carry no bucketed prefill graphs");
+        return;
+    }
+    let seq_len = probe.session.manifest.seq_len;
+    drop(probe);
+    // prompts at/below/above every interior bucket boundary
+    let mut lens = Vec::new();
+    for &b in &buckets {
+        for l in [b.saturating_sub(1), b, (b + 1).min(seq_len)] {
+            if l >= 1 && !lens.contains(&l) {
+                lens.push(l);
+            }
+        }
+    }
+    for len in lens {
+        let p = prompt(len, 2);
+        let full = generate(&p, 0, |e| e.set_prefill_bucketing(false));
+        let bucketed = generate(&p, 0, |e| e.set_prefill_bucketing(true));
+        assert_eq!(
+            bucketed, full,
+            "bucketed prefill first token diverges at prompt len {len} \
+             (buckets {buckets:?})"
+        );
+    }
+}
+
+#[test]
+fn device_sampled_decode_steps_fetch_kilobytes_not_logits() {
+    let _guard = serial();
+    if !have_artifacts() {
+        return;
+    }
+    let mut e = engine();
+    if !e.sampled_decode_available() {
+        eprintln!("skipping: artifacts predate the *_sampled_* graphs");
+        return;
+    }
+    let p = prompt(16, 0);
+    let slot = e.kv.alloc(1, p.len()).unwrap();
+    let mut last = e.prefill(slot, &p).unwrap();
+    let b = e.session.manifest.serve_batch;
+    // warm one step (first decode may compile / upload one-time state)
+    let mut toks = vec![PAD; b];
+    toks[slot] = last;
+    last = e.decode_step(&toks).unwrap()[slot];
+    e.kv.push_token(slot);
+
+    let steps = 4u64;
+    let base = transfer::snapshot();
+    for _ in 0..steps {
+        let mut toks = vec![PAD; b];
+        toks[slot] = last;
+        last = e.decode_step(&toks).unwrap()[slot];
+        e.kv.push_token(slot);
+    }
+    let d = transfer::snapshot().delta_since(&base);
+    let per_step = (d.bytes_uploaded + d.bytes_fetched) / steps;
+    // the ISSUE-3 budget: <= 64 KB combined per step (actual steady
+    // state is ~100 B; the slack covers counter noise from parallel
+    // tests sharing the process-global meters)
+    assert!(
+        per_step <= 64 * 1024,
+        "decode step moved {per_step} B across the host boundary \
+         (budget 64 KB): cache residency or device sampling regressed"
+    );
+}

@@ -1,0 +1,48 @@
+#!/usr/bin/env bash
+# Pre-merge perf gate: diff two BENCH_perf_hotpath.json snapshots and
+# fail on a >10% regression in the decode-step mean or on ANY growth in
+# a transfers_per_iter gauge (the transfer budget is a hard invariant of
+# the device-resident serving design — see README "Serving hot path").
+#
+# Usage:
+#   scripts/bench_diff.sh <base.json> [<new.json>] [--tol 0.10]
+#
+# <new.json> defaults to the BENCH_perf_hotpath.json at the repo root
+# (i.e. "did my branch regress the committed baseline?" is:
+#   git show main:BENCH_perf_hotpath.json > /tmp/base.json
+#   cargo bench --bench perf_hotpath            # rewrites the snapshot
+#   scripts/bench_diff.sh /tmp/base.json).
+#
+# The comparison itself is `cushiond bench-diff` (rust/src/bench/diff.rs);
+# this wrapper just finds/builds the binary and forwards arguments.
+
+set -euo pipefail
+
+repo_root="$(cd "$(dirname "$0")/.." && pwd)"
+base="${1:?usage: bench_diff.sh <base.json> [<new.json>] [--tol F]}"
+shift
+new="${repo_root}/BENCH_perf_hotpath.json"
+if [[ $# -gt 0 && "$1" != --* ]]; then
+    new="$1"
+    shift
+fi
+
+cushiond=""
+for cand in \
+    "${repo_root}/target/release/cushiond" \
+    "${repo_root}/target/debug/cushiond"; do
+    if [[ -x "$cand" ]]; then
+        cushiond="$cand"
+        break
+    fi
+done
+
+if [[ -n "$cushiond" ]]; then
+    exec "$cushiond" bench-diff "$base" "$new" "$@"
+elif command -v cargo >/dev/null 2>&1; then
+    exec cargo run --quiet --release --bin cushiond -- \
+        bench-diff "$base" "$new" "$@"
+else
+    echo "bench_diff.sh: no cushiond binary and no cargo toolchain" >&2
+    exit 2
+fi
