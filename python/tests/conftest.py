@@ -1,3 +1,4 @@
+import json
 import os
 import sys
 
@@ -11,3 +12,314 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0xC0FFEE)
+
+
+# ---------------------------------------------------------------------------
+# Interpreter golden-fixture dumper (rust/tests/interp_parity.rs)
+# ---------------------------------------------------------------------------
+#
+# The Rust reference backend (rust/src/runtime/interp.rs + model/forward.rs)
+# re-implements the model/serving/quantlib forward passes on host tensors so
+# the whole system runs without XLA artifacts. These fixtures pin it to the
+# JAX oracle: for a set of *mini* model configs (every norm/act/pos/window/
+# GQA combination the real variants use, at toy sizes) we dump the weights,
+# the inputs, and the outputs of each graph entry point in graphs.py —
+# fwd_{fp,pts,ptd,ptk}, stats, score_lq, prefix_kv, tune_step, prefill /
+# prefill_sampled, decode / decode_sampled (+ a KV-quant decode) — as JSON.
+#
+# Regenerate with:   cd python && python3 tests/dump_fixtures.py
+# (writes python/tests/fixtures/interp/<config>.json; commit the result)
+#
+# Numerical-robustness contract: every golden is recomputed under x64 and
+# the f32/f64 deviation must stay below X64_DELTA_TOL. This guarantees the
+# fixtures sit far from quantization rounding boundaries, so any faithful
+# f32/f64 re-implementation (the Rust interpreter accumulates in f64) lands
+# within the 1e-4 parity budget instead of flipping a quantization bucket.
+# If the check trips after an edit, bump FIXTURE_SEED until it passes.
+
+FIXTURE_SEED = 11
+X64_DELTA_TOL = 2e-5
+# mini sizes patched into compile.configs while dumping (the graph bodies
+# read C.M_MAX / C.CACHE_CAP / C.SCORE_* / C.SERVE_BATCH at call time)
+MINI_SIZES = dict(M_MAX=4, CACHE_CAP=20, SCORE_BATCH=8, SCORE_TEXT_LEN=12,
+                  SERVE_BATCH=2)
+MINI_SEQ = 16
+MINI_EVAL_BATCH = 2
+MINI_PREFILL_BUCKET = 8
+
+FIXTURE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "fixtures", "interp")
+
+
+def mini_configs():
+    """Toy configs covering the architectural axes of configs.VARIANTS:
+    pre-RMSNorm/SwiGLU/RoPE/GQA, post-LN/GELU/ALiBi, and sliding-window/
+    learned-positions/ReLU."""
+    from compile import configs as C
+
+    base = dict(vocab=64, d_model=32, n_layers=2, n_heads=2, d_head=16,
+                d_ff=48)
+    return {
+        "mini-pre": C.ModelCfg(name="mini-pre", n_kv_heads=1, **base),
+        "mini-post": C.ModelCfg(name="mini-post", n_kv_heads=2,
+                                norm="ln_post", act="gelu", pos="alibi",
+                                **base),
+        "mini-win": C.ModelCfg(name="mini-win", n_kv_heads=2, act="relu",
+                               pos="learned", window=8, **base),
+    }
+
+
+def _arr(x):
+    """Tensor -> {"shape": [...], "data": [flat f32-exact floats]}."""
+    a = np.asarray(x)
+    if a.dtype.kind == "f":
+        a = a.astype(np.float32)
+        return {"shape": list(a.shape),
+                "data": [float(v) for v in a.reshape(-1)]}
+    return {"shape": list(a.shape), "data": [int(v) for v in a.reshape(-1)]}
+
+
+def _mini_manifest(cfg):
+    from compile import configs as C
+    from compile import model as M
+
+    return {
+        "variant": cfg.name,
+        "vocab": cfg.vocab, "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+        "n_kv_heads": cfg.n_kv_heads, "d_head": cfg.d_head,
+        "d_ff": cfg.d_ff, "norm": cfg.norm, "act": cfg.act, "pos": cfg.pos,
+        "window": cfg.window or 0, "n_sites": cfg.n_sites,
+        "seq_len": MINI_SEQ,
+        "prefill_buckets": [MINI_PREFILL_BUCKET, MINI_SEQ],
+        "m_max": C.M_MAX, "cache_cap": C.CACHE_CAP,
+        "serve_batch": C.SERVE_BATCH, "eval_batch": MINI_EVAL_BATCH,
+        "score_batch": C.SCORE_BATCH, "score_text_len": C.SCORE_TEXT_LEN,
+        "tune_batch": MINI_EVAL_BATCH,
+        "params": [{"name": n, "shape": list(s)}
+                   for n, s in M.param_spec(cfg)],
+        "graphs": [],
+    }
+
+
+def _initial_cache(cfg, prefix_kv):
+    """Host-built serving cache with the cushion KV broadcast into every
+    slot's prefix region (mirrors KvManager::initial_cache)."""
+    from compile import configs as C
+
+    cache = np.zeros((cfg.n_layers, 2, C.SERVE_BATCH, cfg.n_kv_heads,
+                      C.CACHE_CAP, cfg.d_head), np.float32)
+    for b in range(C.SERVE_BATCH):
+        cache[:, :, b, :, :C.M_MAX, :] = np.asarray(prefix_kv)
+    return cache
+
+
+def _dump_one(cfg, out_path):
+    from compile import serving
+
+    # kivi_qdq_kv groups keys along d_head in blocks of 32; the mini head
+    # dim is 16, so serving's KV-quant path needs group == d_head (the Rust
+    # interpreter uses the same rule: 32 when d_head % 32 == 0, else d_head)
+    saved_kivi = serving.kivi_qdq_kv
+    try:
+        if cfg.d_head % 32 != 0:
+            from compile import quantlib
+            serving.kivi_qdq_kv = \
+                lambda k, v, lv: quantlib.kivi_qdq_kv(k, v, lv,
+                                                      key_group=cfg.d_head)
+        return _dump_one_inner(cfg, out_path)
+    finally:
+        serving.kivi_qdq_kv = saved_kivi
+
+
+def _dump_one_inner(cfg, out_path):
+    import jax
+    import jax.numpy as jnp
+
+    from compile import configs as C
+    from compile import graphs as G
+    from compile import model as M
+    from compile import quantlib
+
+    rng = np.random.default_rng(FIXTURE_SEED)
+    params = M.init_params(cfg, jax.random.PRNGKey(FIXTURE_SEED))
+    flat = [params[n] for n, _ in M.param_spec(cfg)]
+    weights = {n: _arr(params[n]) for n, _ in M.param_spec(cfg)}
+
+    i32 = lambda x: jnp.asarray(x, jnp.int32)
+    f32 = lambda x: jnp.asarray(x, jnp.float32)
+
+    tokens = rng.integers(0, cfg.vocab, size=(MINI_EVAL_BATCH, MINI_SEQ))
+    prefix_len = 3
+    prefix_tokens = list(rng.integers(4, cfg.vocab, size=prefix_len)) \
+        + [C.PAD] * (C.M_MAX - prefix_len)
+    levels = 255.0
+    inv_smooth = np.exp(
+        0.25 * rng.standard_normal((cfg.n_layers, 2, cfg.d_model))
+    ).astype(np.float32)
+    score_cands = rng.integers(0, cfg.vocab, size=C.SCORE_BATCH)
+    score_text = rng.integers(0, cfg.vocab, size=C.SCORE_TEXT_LEN)
+    adam_m = (0.001 * rng.standard_normal(
+        (cfg.n_layers, 2, cfg.n_kv_heads, C.M_MAX, cfg.d_head))
+    ).astype(np.float32)
+    adam_v = np.square(0.01 * rng.standard_normal(adam_m.shape)) \
+        .astype(np.float32)
+    prefill_tok_len = 5
+    prefill_tokens = list(rng.integers(0, cfg.vocab, size=prefill_tok_len))
+    kv_off = float(2 ** 24)
+    dec_tokens = [int(t) for t in rng.integers(0, cfg.vocab,
+                                               size=C.SERVE_BATCH)]
+    dec_lens = [0] * (C.SERVE_BATCH - 1) + [prefill_tok_len]
+
+    def compute(tag):
+        """Run every graph entry point; returns {name: np array or scalar}.
+        `tag` is only used for logging."""
+        out = {}
+        pkv = G.make_prefix_kv(cfg)[0](*flat, i32(prefix_tokens),
+                                       i32(prefix_len))
+        out["prefix_kv"] = pkv
+
+        st = G.make_stats(cfg)[0](*flat, f32(pkv), i32(prefix_len),
+                                  i32(tokens))
+        for k, v in zip(("minmax", "chan_d", "chan_f", "acts_grid",
+                         "act_stats", "probs"), st):
+            out[f"stats.{k}"] = v
+
+        ranges = quantlib.ranges_from_minmax(f32(st[0]), levels)
+        out["ranges"] = ranges
+        for mode in ("fp", "pts", "ptd", "ptk"):
+            (logits,) = G.make_fwd(cfg, mode)[0](
+                *flat, f32(pkv), i32(prefix_len), i32(tokens), f32(ranges),
+                f32(levels), f32(inv_smooth))
+            out[f"fwd_{mode}"] = logits
+
+        out["score_lq"] = G.make_score(cfg)[0](
+            *flat, i32(prefix_tokens), i32(prefix_len), i32(score_cands),
+            i32(score_text), f32(levels), f32(inv_smooth))
+
+        pkv2, m2, v2, loss, lq = G.make_tune_step(cfg)[0](
+            *flat, f32(pkv), f32(adam_m), f32(adam_v), i32(5), i32(tokens),
+            i32(prefix_len), f32(0.01), f32(3e-3), f32(levels),
+            f32(inv_smooth))
+        out["tune.pkv2"], out["tune.m2"], out["tune.v2"] = pkv2, m2, v2
+        out["tune.loss"], out["tune.lq"] = loss, lq
+
+        cache0 = _initial_cache(cfg, pkv)
+        padded = prefill_tokens + [C.PAD] * (MINI_SEQ - prefill_tok_len)
+        cache1, last = G.make_prefill(cfg, "pts")[0](
+            *flat, f32(cache0), f32(pkv), i32(prefix_len), i32(1),
+            i32(padded), i32(prefill_tok_len), f32(ranges), f32(levels),
+            f32(kv_off), f32(inv_smooth))
+        out["prefill.cache"], out["prefill.last"] = cache1, last
+
+        bucket = prefill_tokens + [C.PAD] * (MINI_PREFILL_BUCKET
+                                             - prefill_tok_len)
+        _, nid, top = G.make_prefill_sampled(cfg, "fp",
+                                             MINI_PREFILL_BUCKET)[0](
+            *flat, f32(cache0), f32(pkv), i32(prefix_len), i32(1),
+            i32(bucket), i32(prefill_tok_len), f32(ranges), f32(levels),
+            f32(kv_off), f32(inv_smooth))
+        out["prefill_sampled.next_id"], out["prefill_sampled.top"] = nid, top
+
+        cache2, logits = G.make_decode(cfg, "ptk")[0](
+            *flat, f32(cache1), i32(dec_lens), i32(prefix_len),
+            i32(dec_tokens), f32(ranges), f32(levels), f32(kv_off),
+            f32(inv_smooth))
+        out["decode.cache"], out["decode.logits"] = cache2, logits
+
+        _, ids, tops = G.make_decode_sampled(cfg, "pts")[0](
+            *flat, f32(cache1), i32(dec_lens), i32(prefix_len),
+            i32(dec_tokens), f32(ranges), f32(levels), f32(kv_off),
+            f32(inv_smooth))
+        out["decode_sampled.ids"], out["decode_sampled.top"] = ids, tops
+
+        _, kivi_logits = G.make_decode(cfg, "fp")[0](
+            *flat, f32(cache1), i32(dec_lens), i32(prefix_len),
+            i32(dec_tokens), f32(ranges), f32(levels), f32(levels),
+            f32(inv_smooth))
+        out["decode_kivi.logits"] = kivi_logits
+        return {k: np.asarray(v) for k, v in out.items()}
+
+    golden = compute("f32")
+    # x64 margin pass: far-from-rounding-boundary guarantee (see header)
+    jax.config.update("jax_enable_x64", True)
+    try:
+        flat = [jnp.asarray(np.asarray(w), jnp.float64) for w in flat]
+        f32 = lambda x: jnp.asarray(np.asarray(x), jnp.float64)  # noqa: E731
+        i32 = lambda x: jnp.asarray(x, jnp.int64)  # noqa: E731
+        golden64 = compute("f64")
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+    x64_delta = {}
+    for k, v in golden.items():
+        if v.dtype.kind != "f":
+            assert np.array_equal(v, golden64[k]), \
+                f"{cfg.name}/{k}: integer outputs diverge between f32/f64"
+            continue
+        d = float(np.max(np.abs(v.astype(np.float64) - golden64[k])))
+        scale = max(1.0, float(np.max(np.abs(v))))
+        x64_delta[k] = d
+        assert d <= X64_DELTA_TOL * scale, (
+            f"{cfg.name}/{k}: f32 vs f64 golden deviation {d:.3e} exceeds "
+            f"{X64_DELTA_TOL:.0e} x {scale:.1f} — too close to a rounding "
+            f"boundary; bump FIXTURE_SEED and re-dump")
+
+    fixture = {
+        "config": cfg.name,
+        "seed": FIXTURE_SEED,
+        "manifest": _mini_manifest(cfg),
+        "weights": weights,
+        "inputs": {
+            "tokens": _arr(tokens),
+            "prefix_tokens": [int(t) for t in prefix_tokens],
+            "prefix_len": prefix_len,
+            "levels": levels,
+            "ranges": _arr(golden["ranges"]),
+            "inv_smooth": _arr(inv_smooth),
+            "score_cands": [int(t) for t in score_cands],
+            "score_text": [int(t) for t in score_text],
+            "tune": {"step": 5, "lam": 0.01, "lr": 3e-3,
+                     "adam_m": _arr(adam_m), "adam_v": _arr(adam_v)},
+            "prefill": {"slot": 1, "tok_len": prefill_tok_len,
+                        "tokens": [int(t) for t in prefill_tokens],
+                        "bucket": MINI_PREFILL_BUCKET,
+                        "kv_levels": kv_off},
+            "decode": {"tokens": dec_tokens, "cache_tok_len": dec_lens,
+                       "kv_levels": kv_off},
+        },
+        "golden": {},
+        "x64_max_delta": x64_delta,
+    }
+    golden.pop("ranges")
+    for k, v in golden.items():
+        if v.ndim == 0 and v.dtype.kind == "f":
+            fixture["golden"][k] = float(v)
+        elif v.ndim == 0:
+            fixture["golden"][k] = int(v)
+        else:
+            fixture["golden"][k] = _arr(v)
+
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(fixture, f)
+    return fixture
+
+
+def dump_interp_fixtures(out_dir=FIXTURE_DIR):
+    """Write one golden fixture per mini config (see module header)."""
+    from compile import configs as C
+
+    saved = {k: getattr(C, k) for k in MINI_SIZES}
+    for k, v in MINI_SIZES.items():
+        setattr(C, k, v)
+    try:
+        paths = []
+        for name, cfg in mini_configs().items():
+            path = os.path.join(out_dir, f"{name}.json")
+            _dump_one(cfg, path)
+            paths.append(path)
+        return paths
+    finally:
+        for k, v in saved.items():
+            setattr(C, k, v)

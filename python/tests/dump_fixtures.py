@@ -1,0 +1,17 @@
+"""Regenerate the interpreter golden fixtures (see conftest.py header).
+
+Usage:  cd python && python3 tests/dump_fixtures.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))          # tests/
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import conftest  # noqa: E402
+
+
+if __name__ == "__main__":
+    for path in conftest.dump_interp_fixtures():
+        print(f"wrote {path} ({os.path.getsize(path) // 1024} KiB)")

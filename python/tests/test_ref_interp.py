@@ -1,0 +1,159 @@
+"""The numpy reference interpreter (ref_interp.py) must reproduce every
+committed JAX golden fixture — the same contract rust/tests/interp_parity.rs
+enforces for the Rust interpreter backend, so this suite is the
+cross-language bridge: if it passes here and interp_parity passes there,
+the Rust interpreter agrees with the JAX graphs.
+
+Budget: 1e-4 scaled by max(1, |golden|_inf) per output, matching the Rust
+side. The fixtures' committed x64-margin check keeps every golden at least
+5x farther from a quantization rounding boundary than this budget."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import ref_interp as R
+
+FIXTURE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "fixtures", "interp")
+CONFIGS = ("mini-pre", "mini-post", "mini-win")
+TOL = 1e-4
+
+
+def load(name):
+    path = os.path.join(FIXTURE_DIR, f"{name}.json")
+    if not os.path.exists(path):
+        pytest.skip("fixtures not generated (tests/dump_fixtures.py)")
+    with open(path) as f:
+        fx = json.load(f)
+    cfg = R.Cfg(fx["manifest"])
+    params = {k: R.tensor(v) for k, v in fx["weights"].items()}
+    return fx, cfg, params
+
+
+def check(name, got, want_spec, what):
+    got = np.asarray(got, np.float64)
+    want = R.tensor(want_spec) if isinstance(want_spec, dict) \
+        else np.asarray(want_spec, np.float64)
+    assert got.shape == tuple(want.shape), \
+        f"{name}/{what}: shape {got.shape} vs {want.shape}"
+    scale = max(1.0, float(np.max(np.abs(want))) if want.size else 1.0)
+    d = float(np.max(np.abs(got - want))) if want.size else 0.0
+    assert d <= TOL * scale, \
+        f"{name}/{what}: max |delta| {d:.3e} > {TOL:.0e} * {scale:.2f}"
+
+
+@pytest.mark.parametrize("name", CONFIGS)
+def test_prefix_kv_and_fwd_modes(name):
+    fx, cfg, params = load(name)
+    inp, gold = fx["inputs"], fx["golden"]
+    pkv = R.run_prefix_kv(cfg, params, inp["prefix_tokens"],
+                          inp["prefix_len"])
+    check(name, pkv, gold["prefix_kv"], "prefix_kv")
+
+    tokens = np.asarray(R.tensor(inp["tokens"]), np.int64)
+    ranges = R.tensor(inp["ranges"])
+    inv = R.tensor(inp["inv_smooth"])
+    gold_pkv = R.tensor(gold["prefix_kv"])
+    for mode in ("fp", "pts", "ptd", "ptk"):
+        logits = R.run_fwd(cfg, params, mode, gold_pkv, inp["prefix_len"],
+                           tokens, ranges, inp["levels"], inv)
+        check(name, logits, gold[f"fwd_{mode}"], f"fwd_{mode}")
+
+
+@pytest.mark.parametrize("name", CONFIGS)
+def test_stats(name):
+    fx, cfg, params = load(name)
+    inp, gold = fx["inputs"], fx["golden"]
+    tokens = np.asarray(R.tensor(inp["tokens"]), np.int64)
+    outs = R.run_stats(cfg, params, R.tensor(gold["prefix_kv"]),
+                       inp["prefix_len"], tokens)
+    for key, got in zip(("minmax", "chan_d", "chan_f", "acts_grid",
+                         "act_stats", "probs"), outs):
+        check(name, got, gold[f"stats.{key}"], f"stats.{key}")
+
+
+@pytest.mark.parametrize("name", CONFIGS)
+def test_score_lq(name):
+    fx, cfg, params = load(name)
+    inp, gold = fx["inputs"], fx["golden"]
+    lq = R.run_score(cfg, params, inp["prefix_tokens"], inp["prefix_len"],
+                     inp["score_cands"], inp["score_text"], inp["levels"],
+                     R.tensor(inp["inv_smooth"]))
+    check(name, lq, gold["score_lq"], "score_lq")
+
+
+@pytest.mark.parametrize("name", CONFIGS)
+def test_tune_step(name):
+    fx, cfg, params = load(name)
+    inp, gold = fx["inputs"], fx["golden"]
+    t = inp["tune"]
+    tokens = np.asarray(R.tensor(inp["tokens"]), np.int64)
+    pkv2, m2, v2, loss, lq = R.run_tune_step(
+        cfg, params, R.tensor(gold["prefix_kv"]), R.tensor(t["adam_m"]),
+        R.tensor(t["adam_v"]), t["step"], tokens, inp["prefix_len"],
+        t["lam"], t["lr"], inp["levels"], R.tensor(inp["inv_smooth"]))
+    check(name, pkv2, gold["tune.pkv2"], "tune.pkv2")
+    check(name, m2, gold["tune.m2"], "tune.m2")
+    check(name, v2, gold["tune.v2"], "tune.v2")
+    check(name, [loss], [gold["tune.loss"]], "tune.loss")
+    check(name, [lq], [gold["tune.lq"]], "tune.lq")
+
+
+@pytest.mark.parametrize("name", CONFIGS)
+def test_prefill_and_decode(name):
+    fx, cfg, params = load(name)
+    inp, gold = fx["inputs"], fx["golden"]
+    pkv = R.tensor(gold["prefix_kv"])
+    ranges = R.tensor(inp["ranges"])
+    inv = R.tensor(inp["inv_smooth"])
+    pf = inp["prefill"]
+
+    cache0 = np.zeros((cfg.n_layers, 2, cfg.serve_batch, cfg.n_kv_heads,
+                       cfg.cache_cap, cfg.d_head))
+    for b in range(cfg.serve_batch):
+        cache0[:, :, b, :, :cfg.m_max, :] = pkv
+
+    pad = fx["manifest"]["seq_len"] - pf["tok_len"]
+    tokens16 = pf["tokens"] + [3] * pad
+    cache1, last = R.run_prefill(cfg, params, "pts", cache0, pkv,
+                                 inp["prefix_len"], pf["slot"], tokens16,
+                                 pf["tok_len"], ranges, inp["levels"],
+                                 pf["kv_levels"], inv)
+    check(name, cache1, gold["prefill.cache"], "prefill.cache")
+    check(name, last, gold["prefill.last"], "prefill.last")
+
+    bucket_tokens = pf["tokens"] + [3] * (pf["bucket"] - pf["tok_len"])
+    _, blast = R.run_prefill(cfg, params, "fp", cache0, pkv,
+                             inp["prefix_len"], pf["slot"], bucket_tokens,
+                             pf["tok_len"], ranges, inp["levels"],
+                             pf["kv_levels"], inv)
+    nid, top = R.select_tokens(blast)
+    assert int(nid) == gold["prefill_sampled.next_id"]
+    check(name, [top], [gold["prefill_sampled.top"]], "prefill_sampled.top")
+
+    dc = inp["decode"]
+    gold_cache1 = R.tensor(gold["prefill.cache"])
+    cache2, logits = R.run_decode(cfg, params, "ptk", gold_cache1,
+                                  dc["cache_tok_len"], inp["prefix_len"],
+                                  dc["tokens"], ranges, inp["levels"],
+                                  dc["kv_levels"], inv)
+    check(name, cache2, gold["decode.cache"], "decode.cache")
+    check(name, logits, gold["decode.logits"], "decode.logits")
+
+    _, slogits = R.run_decode(cfg, params, "pts", gold_cache1,
+                              dc["cache_tok_len"], inp["prefix_len"],
+                              dc["tokens"], ranges, inp["levels"],
+                              dc["kv_levels"], inv)
+    ids, tops = R.select_tokens(slogits)
+    assert list(ids) == list(R.tensor(gold["decode_sampled.ids"])
+                             .astype(np.int64))
+    check(name, tops, gold["decode_sampled.top"], "decode_sampled.top")
+
+    _, klogits = R.run_decode(cfg, params, "fp", gold_cache1,
+                              dc["cache_tok_len"], inp["prefix_len"],
+                              dc["tokens"], ranges, inp["levels"],
+                              inp["levels"], inv)
+    check(name, klogits, gold["decode_kivi.logits"], "decode_kivi.logits")

@@ -40,6 +40,7 @@ use crate::model::session::Session;
 use crate::quant::scheme::Scheme;
 use crate::runtime::literalx::{self, HostValue, IntTensor, OutValue, Value};
 use crate::runtime::split::{OutSpec, TupleSplitter};
+use crate::runtime::DeviceBuf;
 use crate::util::tensor::Tensor;
 
 use super::kvcache::KvManager;
@@ -62,8 +63,8 @@ pub struct Engine {
     /// Engine-invariant scalar operands, uploaded once per engine. The
     /// cushion-length scalar lives in the session's pool (keyed with the
     /// prefix KV) so the (KV, len) pair is always coherent.
-    act_levels_buf: Rc<xla::PjRtBuffer>,
-    kv_levels_buf: Rc<xla::PjRtBuffer>,
+    act_levels_buf: Rc<DeviceBuf>,
+    kv_levels_buf: Rc<DeviceBuf>,
     suffix: String,
     prefill_graph: String,
     decode_graph: String,
@@ -97,19 +98,25 @@ impl Engine {
         let kv_levels_buf = Rc::new(client.upload(&Tensor::scalar(scheme.kv_levels()))?);
         let suffix = scheme.gran.graph_suffix().to_string();
 
+        // optional-variant probes go through has_upgrade so a partially
+        // regenerated artifact dir stays on the compiled base graphs
+        // (registry.rs docs) — on the reference backend everything
+        // resolves to the interpreter and the sampled paths light up
         let decode_sampled = format!("decode_sampled_{suffix}");
         let decode_sampled_graph = session
             .registry
-            .has(&decode_sampled)
+            .has_upgrade(&decode_sampled, &format!("decode_{suffix}"))
             .then_some(decode_sampled);
+        let prefill_base = format!("prefill_{suffix}");
         let sampled_buckets: Vec<usize> = m
             .prefill_buckets
             .iter()
             .copied()
             .filter(|b| {
-                session
-                    .registry
-                    .has(&format!("prefill_sampled_{suffix}_b{b}"))
+                session.registry.has_upgrade(
+                    &format!("prefill_sampled_{suffix}_b{b}"),
+                    &prefill_base,
+                )
             })
             .collect();
 
@@ -119,7 +126,14 @@ impl Engine {
         ];
         let b = m.serve_batch;
         let v = m.vocab;
+        // splitters exist to keep PJRT root tuples on device; the
+        // reference interpreter's outputs are already per-element, so on
+        // that backend none are built (and none warned about)
+        let splitters_apply = client.compiles_artifacts();
         let mk = |spec: &[OutSpec], what: &str| -> Option<TupleSplitter> {
+            if !splitters_apply {
+                return None;
+            }
             match TupleSplitter::new(client, spec) {
                 Ok(s) => Some(s),
                 Err(e) => {

@@ -4,11 +4,14 @@
 //! Three-layer architecture (see DESIGN.md):
 //! * L1/L2 (python, build-time only): Pallas kernels + JAX model variants,
 //!   AOT-lowered to HLO text under `artifacts/`.
-//! * L3 (this crate): the runtime — PJRT execution, quantization
-//!   calibration and weight-side transforms, the CushionCache greedy
-//!   search + prefix tuning drivers, the serving coordinator, the eval
-//!   harness, and the benchmark suite regenerating every table/figure of
-//!   the paper.
+//! * L3 (this crate): the runtime — graph execution behind
+//!   `runtime::backend::Backend` (PJRT over the AOT artifacts, or the
+//!   pure-Rust reference interpreter `runtime::interp` +
+//!   `model::forward`, which needs neither artifacts nor XLA — see
+//!   README "Backends"), quantization calibration and weight-side
+//!   transforms, the CushionCache greedy search + prefix tuning drivers,
+//!   the serving coordinator, the eval harness, and the benchmark suite
+//!   regenerating every table/figure of the paper.
 //!
 //! Entry points: the `cushiond` binary (`rust/src/main.rs`), the runnable
 //! `examples/`, and the `benches/` (one per paper table/figure).

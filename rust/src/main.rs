@@ -46,6 +46,9 @@ fn run() -> anyhow::Result<()> {
     )
     .positional("command", "subcommand")
     .opt("variant", "tl-llama", "model variant (see `list`)")
+    .opt("backend", "auto", "execution backend: auto|xla|ref (ref = the \
+         pure-Rust interpreter, no artifacts/XLA needed; also honors \
+         CUSHION_BACKEND)")
     .opt("gran", "pts", "activation quant granularity: fp|pts|ptd|ptk")
     .opt("bits", "8", "activation/weight bits")
     .opt("cushion", "", "cushion name to load ('' = none)")
@@ -64,6 +67,13 @@ fn run() -> anyhow::Result<()> {
     .flag("smooth", "apply SmoothQuant (alpha 0.8)")
     .flag("no-tune", "pipeline: skip the tuning stage");
     let args = cli.parse_env()?;
+    // `--backend` wins over the environment; Session::load and every
+    // Client::auto() constructed below read CUSHION_BACKEND
+    let backend = args.get("backend");
+    if backend != "auto" {
+        cushioncache::runtime::BackendKind::parse(backend)?; // validate
+        std::env::set_var("CUSHION_BACKEND", backend);
+    }
     let cmd = args
         .positionals()
         .first()

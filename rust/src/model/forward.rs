@@ -1,0 +1,1996 @@
+//! The reference forward pass: a pure-Rust implementation of the JAX
+//! model/serving/quantlib semantics (python/compile/{model,serving,
+//! quantlib}.py) on `util::tensor::Tensor`, powering the interpreter
+//! backend (`runtime::interp`).
+//!
+//! Three implementations of these semantics exist and are pinned
+//! together by golden fixtures (python/tests/fixtures/interp/*.json):
+//! the JAX graphs (the oracle, lowered to the AOT artifacts), the numpy
+//! reference (python/tests/ref_interp.py — this file is a
+//! statement-for-statement transliteration of it), and this module
+//! (checked by rust/tests/interp_parity.rs). Change semantics in all
+//! three places or the parity suites will say so.
+//!
+//! Numerics: f32 storage with f64 accumulation in reductions (dot
+//! products, sums, softmax denominators). The fixtures' committed
+//! x64-margin check guarantees every golden sits far enough from
+//! quantization rounding boundaries that this mix stays within the
+//! 1e-4 parity budget. Rounding is round-half-to-even, matching
+//! jnp.round.
+
+use std::collections::HashMap;
+
+use crate::model::manifest::Manifest;
+use crate::util::tensor::Tensor;
+
+pub const EPS: f32 = 1e-5;
+pub const BIG: f32 = 3.4e38;
+pub const NEG: f32 = -1e30;
+
+// ---------------------------------------------------------------------------
+// Model spec + parameter view
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NormKind {
+    RmsPre,
+    LnPost,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ActKind {
+    Swiglu,
+    Relu,
+    Gelu,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PosKind {
+    Rope,
+    Learned,
+    Alibi,
+}
+
+/// Activation-quantization granularity of a graph variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Fp,
+    Pts,
+    Ptd,
+    Ptk,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> crate::Result<Mode> {
+        Ok(match s {
+            "fp" => Mode::Fp,
+            "pts" => Mode::Pts,
+            "ptd" => Mode::Ptd,
+            "ptk" => Mode::Ptk,
+            other => anyhow::bail!("unknown quant mode '{other}'"),
+        })
+    }
+}
+
+/// Everything the interpreter needs to know about a variant's
+/// architecture — derived from the manifest (rope_theta is a constant of
+/// the model families, configs.py).
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub n_sites: usize,
+    pub m_max: usize,
+    pub norm: NormKind,
+    pub act: ActKind,
+    pub pos: PosKind,
+    pub window: Option<usize>,
+    pub rope_theta: f32,
+    /// Weight names in param_spec order (the graphs' leading-argument
+    /// order).
+    pub param_names: Vec<String>,
+}
+
+impl ModelSpec {
+    pub fn from_manifest(m: &Manifest) -> crate::Result<Self> {
+        let norm = match m.norm.as_str() {
+            "rmsnorm_pre" => NormKind::RmsPre,
+            "ln_post" => NormKind::LnPost,
+            other => anyhow::bail!("unknown norm '{other}'"),
+        };
+        let act = match m.act.as_str() {
+            "swiglu" => ActKind::Swiglu,
+            "relu" => ActKind::Relu,
+            "gelu" => ActKind::Gelu,
+            other => anyhow::bail!("unknown act '{other}'"),
+        };
+        let pos = match m.pos.as_str() {
+            "rope" => PosKind::Rope,
+            "learned" => PosKind::Learned,
+            "alibi" => PosKind::Alibi,
+            other => anyhow::bail!("unknown pos '{other}'"),
+        };
+        anyhow::ensure!(m.n_heads % m.n_kv_heads == 0, "bad GQA grouping");
+        Ok(ModelSpec {
+            vocab: m.vocab,
+            d_model: m.d_model,
+            n_layers: m.n_layers,
+            n_heads: m.n_heads,
+            n_kv_heads: m.n_kv_heads,
+            d_head: m.d_head,
+            d_ff: m.d_ff,
+            n_sites: m.n_sites,
+            m_max: m.m_max,
+            norm,
+            act,
+            pos,
+            window: (m.window > 0).then_some(m.window),
+            rope_theta: 10000.0,
+            param_names: m.params.iter().map(|p| p.name.clone()).collect(),
+        })
+    }
+
+    /// KV-head group size (GQA).
+    pub fn group(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+}
+
+/// Borrowed view of the weight tensors, keyed by param_spec name.
+pub struct Params<'a> {
+    map: HashMap<&'a str, &'a Tensor>,
+}
+
+impl<'a> Params<'a> {
+    pub fn new(spec: &'a ModelSpec, tensors: Vec<&'a Tensor>) -> crate::Result<Self> {
+        anyhow::ensure!(
+            tensors.len() == spec.param_names.len(),
+            "interp: got {} weights, spec has {}",
+            tensors.len(),
+            spec.param_names.len()
+        );
+        let map = spec
+            .param_names
+            .iter()
+            .map(String::as_str)
+            .zip(tensors)
+            .collect();
+        Ok(Self { map })
+    }
+
+    pub fn get(&self, name: &str) -> crate::Result<&'a Tensor> {
+        self.map
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("interp: weight '{name}' missing"))
+    }
+
+    pub fn layer(&self, l: usize, base: &str) -> crate::Result<&'a Tensor> {
+        self.get(&format!("layer{l}.{base}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense primitives (f64 accumulation)
+// ---------------------------------------------------------------------------
+
+/// [rows, k] @ [k, n] with f64 accumulation.
+fn matmul(x: &[f32], rows: usize, k: usize, w: &Tensor) -> Vec<f32> {
+    let (wk, n) = w.dims2();
+    assert_eq!(k, wk, "matmul contraction mismatch");
+    let mut out = vec![0.0f32; rows * n];
+    for r in 0..rows {
+        let xr = &x[r * k..(r + 1) * k];
+        let mut acc = vec![0.0f64; n];
+        for (p, &a) in xr.iter().enumerate() {
+            if a == 0.0 {
+                continue;
+            }
+            let wrow = &w.data[p * n..(p + 1) * n];
+            let a = a as f64;
+            for (dst, &ww) in acc.iter_mut().zip(wrow) {
+                *dst += a * ww as f64;
+            }
+        }
+        for (o, a) in out[r * n..(r + 1) * n].iter_mut().zip(&acc) {
+            *o = *a as f32;
+        }
+    }
+    out
+}
+
+/// [rows, n] @ [k, n]^T -> [rows, k] with f64 accumulation (backward).
+fn matmul_t(x: &[f32], rows: usize, n: usize, w: &Tensor) -> Vec<f32> {
+    let (k, wn) = w.dims2();
+    assert_eq!(n, wn, "matmul_t contraction mismatch");
+    let mut out = vec![0.0f32; rows * k];
+    for r in 0..rows {
+        let xr = &x[r * n..(r + 1) * n];
+        for p in 0..k {
+            let wrow = &w.data[p * n..(p + 1) * n];
+            let mut acc = 0.0f64;
+            for (&a, &ww) in xr.iter().zip(wrow) {
+                acc += a as f64 * ww as f64;
+            }
+            out[r * k + p] = acc as f32;
+        }
+    }
+    out
+}
+
+fn rmsnorm(x: &[f32], rows: usize, d: usize, g: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let ms: f64 = xr.iter().map(|&v| v as f64 * v as f64).sum::<f64>() / d as f64;
+        let rinv = 1.0 / (ms as f32 + EPS).sqrt();
+        for i in 0..d {
+            out[r * d + i] = xr[i] * rinv * g[i];
+        }
+    }
+    out
+}
+
+fn rmsnorm_bwd(dy: &[f32], x: &[f32], rows: usize, d: usize, g: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let dyr = &dy[r * d..(r + 1) * d];
+        let ms: f64 = xr.iter().map(|&v| v as f64 * v as f64).sum::<f64>() / d as f64;
+        let rinv = 1.0 / ((ms as f32 + EPS) as f64).sqrt();
+        let dot: f64 = (0..d)
+            .map(|i| dyr[i] as f64 * g[i] as f64 * xr[i] as f64)
+            .sum();
+        let r3 = rinv * rinv * rinv / d as f64;
+        for i in 0..d {
+            out[r * d + i] =
+                (dyr[i] as f64 * g[i] as f64 * rinv - xr[i] as f64 * r3 * dot) as f32;
+        }
+    }
+    out
+}
+
+fn layernorm(x: &[f32], rows: usize, d: usize, g: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let mu: f64 = xr.iter().map(|&v| v as f64).sum::<f64>() / d as f64;
+        let var: f64 = xr
+            .iter()
+            .map(|&v| (v as f64 - mu) * (v as f64 - mu))
+            .sum::<f64>()
+            / d as f64;
+        let rinv = 1.0 / (var as f32 + EPS).sqrt() as f64;
+        for i in 0..d {
+            out[r * d + i] =
+                (((xr[i] as f64 - mu) * rinv) as f32) * g[i] + b[i];
+        }
+    }
+    out
+}
+
+fn layernorm_bwd(dy: &[f32], x: &[f32], rows: usize, d: usize, g: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let dyr = &dy[r * d..(r + 1) * d];
+        let mu: f64 = xr.iter().map(|&v| v as f64).sum::<f64>() / d as f64;
+        let var: f64 = xr
+            .iter()
+            .map(|&v| (v as f64 - mu) * (v as f64 - mu))
+            .sum::<f64>()
+            / d as f64;
+        let rinv = 1.0 / ((var as f32 + EPS) as f64).sqrt();
+        let mut m_dxhat = 0.0f64;
+        let mut m_dx_xhat = 0.0f64;
+        for i in 0..d {
+            let xhat = (xr[i] as f64 - mu) * rinv;
+            let dxhat = dyr[i] as f64 * g[i] as f64;
+            m_dxhat += dxhat;
+            m_dx_xhat += dxhat * xhat;
+        }
+        m_dxhat /= d as f64;
+        m_dx_xhat /= d as f64;
+        for i in 0..d {
+            let xhat = (xr[i] as f64 - mu) * rinv;
+            let dxhat = dyr[i] as f64 * g[i] as f64;
+            out[r * d + i] = (rinv * (dxhat - m_dxhat - xhat * m_dx_xhat)) as f32;
+        }
+    }
+    out
+}
+
+/// jnp.round: round half to even.
+fn round_half_even(x: f32) -> f32 {
+    let f = x.floor();
+    let diff = x - f;
+    if diff > 0.5 {
+        f + 1.0
+    } else if diff < 0.5 {
+        f
+    } else if (f as i64) % 2 == 0 {
+        f
+    } else {
+        f + 1.0
+    }
+}
+
+/// Asymmetric quantize-dequantize with a given range (kernels/ref.py).
+pub fn qdq_asym(x: f32, lo: f32, scale: f32, levels: f32) -> f32 {
+    let q = round_half_even((x - lo) / scale).clamp(0.0, levels);
+    lo + q * scale
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+fn silu_grad(x: f32) -> f32 {
+    let sig = 1.0 / (1.0 + (-x).exp());
+    sig * (1.0 + x * (1.0 - sig))
+}
+
+const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
+
+fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (GELU_C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn gelu_grad(x: f32) -> f32 {
+    let t = (GELU_C * (x + 0.044715 * x * x * x)).tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * 0.044715 * x * x)
+}
+
+fn act_apply(act: ActKind, x: f32) -> f32 {
+    match act {
+        ActKind::Relu => x.max(0.0),
+        ActKind::Gelu => gelu(x),
+        ActKind::Swiglu => silu(x),
+    }
+}
+
+/// Reversed geometric ALiBi slopes (model.alibi_slopes): head 0 gets the
+/// smallest slope.
+pub fn alibi_slopes(n_heads: usize) -> Vec<f32> {
+    (0..n_heads)
+        .map(|h| {
+            let i = (n_heads - 1 - h) as f64;
+            (2.0f64).powf(-8.0 * (i + 1.0) / n_heads as f64) as f32
+        })
+        .collect()
+}
+
+/// RoPE rotation (model.rope); `inverse` applies the transpose (backward).
+fn rope_rotate(x: &mut [f32], heads: usize, s: usize, dh: usize,
+               positions: &[i32], theta: f32, inverse: bool) {
+    let half = dh / 2;
+    let freqs: Vec<f64> = (0..half)
+        .map(|i| (theta as f64).powf(-(i as f64) / half as f64))
+        .collect();
+    for h in 0..heads {
+        for si in 0..s {
+            let base = (h * s + si) * dh;
+            let pos = positions[si] as f64;
+            for i in 0..half {
+                let ang = pos * freqs[i];
+                let (sin, cos) = (ang.sin() as f32, ang.cos() as f32);
+                let x1 = x[base + i];
+                let x2 = x[base + half + i];
+                if inverse {
+                    x[base + i] = x1 * cos + x2 * sin;
+                    x[base + half + i] = -x1 * sin + x2 * cos;
+                } else {
+                    x[base + i] = x1 * cos - x2 * sin;
+                    x[base + half + i] = x1 * sin + x2 * cos;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Attention (kernels/ref.py + model._attend_probs)
+// ---------------------------------------------------------------------------
+
+/// [Hq, Sq, Skv] visibility mask (kernels/ref.attention semantics).
+fn attention_mask(spec: &ModelSpec, layer: usize, sq: usize, skv: usize,
+                  prefix_len: i32, causal_offset: i32,
+                  kv_valid: Option<&[bool]>) -> Vec<bool> {
+    let hq = spec.n_heads;
+    let m = spec.m_max as i32;
+    let mut mask = vec![false; hq * sq * skv];
+    for i in 0..sq {
+        let qpos = causal_offset + i as i32;
+        for j in 0..skv {
+            let ji = j as i32;
+            let kpos = ji - m;
+            let in_prefix = ji < m;
+            let prefix_ok = in_prefix && ji < prefix_len;
+            let tok_ok = !in_prefix && kpos <= qpos;
+            let tok_win = match spec.window {
+                Some(w) => tok_ok && kpos >= qpos - w as i32 + 1,
+                None => tok_ok,
+            };
+            let valid = kv_valid.map_or(true, |kv| kv[j]);
+            for h in 0..hq {
+                let mut ok = prefix_ok || tok_win;
+                if spec.window.is_some() && h == 0 {
+                    ok = prefix_ok || tok_ok; // head0_global
+                }
+                if layer == 0 && h == 0 && !in_prefix && kpos == qpos {
+                    ok = false; // strict-causal detector head
+                }
+                mask[(h * sq + i) * skv + j] = ok && valid;
+            }
+        }
+    }
+    mask
+}
+
+/// -slope_h * distance ALiBi bias at (h, i, j), or 0 without ALiBi.
+fn alibi_bias_at(spec: &ModelSpec, slopes: &[f32], h: usize, i: usize,
+                 j: usize, prefix_len: i32, causal_offset: i32) -> f32 {
+    let m = spec.m_max as i32;
+    let ji = j as i32;
+    let qpos = causal_offset + i as i32;
+    let kabs = if ji < m { ji } else { ji - m + prefix_len };
+    let dist = (qpos + prefix_len - kabs) as f32;
+    -slopes[h] * dist
+}
+
+/// One batch element of sink attention. q: [Hq, Sq, dh]; k, v:
+/// [Hkv, Skv, dh] with the first m_max key slots being the prefix
+/// region. Returns out [Hq, Sq, dh] and, when `want_probs`, the
+/// post-mask probabilities [Hq, Sq, Skv] (all-masked rows zeroed, as in
+/// ref.attention).
+fn attention(spec: &ModelSpec, layer: usize, q: &[f32], k: &[f32], v: &[f32],
+             sq: usize, skv: usize, prefix_len: i32, causal_offset: i32,
+             kv_valid: Option<&[bool]>, want_probs: bool)
+             -> (Vec<f32>, Option<Vec<f32>>) {
+    let (hq, dh, g) = (spec.n_heads, spec.d_head, spec.group());
+    let inv_sqrt = 1.0 / (dh as f64).sqrt();
+    let slopes = if spec.pos == PosKind::Alibi {
+        alibi_slopes(hq)
+    } else {
+        Vec::new()
+    };
+    let mask = attention_mask(spec, layer, sq, skv, prefix_len,
+                              causal_offset, kv_valid);
+    let mut out = vec![0.0f32; hq * sq * dh];
+    let mut probs_all = want_probs.then(|| vec![0.0f32; hq * sq * skv]);
+
+    let mut row = vec![0.0f32; skv];
+    let mut prow = vec![0.0f32; skv];
+    for h in 0..hq {
+        let kh = h / g;
+        for i in 0..sq {
+            let qrow = &q[(h * sq + i) * dh..(h * sq + i) * dh + dh];
+            let mrow = &mask[(h * sq + i) * skv..(h * sq + i) * skv + skv];
+            let mut any = false;
+            for j in 0..skv {
+                if !mrow[j] {
+                    row[j] = NEG;
+                    continue;
+                }
+                any = true;
+                let krow = &k[(kh * skv + j) * dh..(kh * skv + j) * dh + dh];
+                let mut acc = 0.0f64;
+                for (&a, &b) in qrow.iter().zip(krow) {
+                    acc += a as f64 * b as f64;
+                }
+                let mut l = (acc * inv_sqrt) as f32;
+                if !slopes.is_empty() {
+                    l += alibi_bias_at(spec, &slopes, h, i, j, prefix_len,
+                                       causal_offset);
+                }
+                row[j] = l;
+            }
+            softmax_row(&row, &mut prow);
+            if !any {
+                prow.iter_mut().for_each(|p| *p = 0.0);
+            }
+            if let Some(pa) = probs_all.as_mut() {
+                pa[(h * sq + i) * skv..(h * sq + i) * skv + skv]
+                    .copy_from_slice(&prow);
+            }
+            let orow = &mut out[(h * sq + i) * dh..(h * sq + i) * dh + dh];
+            for d in 0..dh {
+                let mut acc = 0.0f64;
+                for j in 0..skv {
+                    if prow[j] != 0.0 {
+                        acc += prow[j] as f64 * v[(kh * skv + j) * dh + d] as f64;
+                    }
+                }
+                orow[d] = acc as f32;
+            }
+        }
+    }
+    (out, probs_all)
+}
+
+/// Numerically-stable row softmax (f64 accumulation).
+fn softmax_row(row: &[f32], out: &mut [f32]) {
+    let mx = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+    let mut sum = 0.0f64;
+    for (o, &x) in out.iter_mut().zip(row) {
+        let e = ((x - mx) as f64).exp();
+        *o = e as f32;
+        sum += e;
+    }
+    for o in out.iter_mut() {
+        *o = (*o as f64 / sum) as f32;
+    }
+}
+
+/// model._attend_probs of batch element 0: same mask (no kv_valid), but
+/// — mirroring the JAX stats graph exactly — *without* the
+/// all-masked-row zeroing (such rows softmax to uniform).
+fn attend_probs(spec: &ModelSpec, layer: usize, q: &[f32], k: &[f32],
+                sq: usize, skv: usize, prefix_len: i32,
+                causal_offset: i32) -> Vec<f32> {
+    let (hq, dh, g) = (spec.n_heads, spec.d_head, spec.group());
+    let inv_sqrt = 1.0 / (dh as f64).sqrt();
+    let slopes = if spec.pos == PosKind::Alibi {
+        alibi_slopes(hq)
+    } else {
+        Vec::new()
+    };
+    let mask = attention_mask(spec, layer, sq, skv, prefix_len,
+                              causal_offset, None);
+    let mut probs = vec![0.0f32; hq * sq * skv];
+    let mut row = vec![0.0f32; skv];
+    let mut prow = vec![0.0f32; skv];
+    for h in 0..hq {
+        let kh = h / g;
+        for i in 0..sq {
+            let qrow = &q[(h * sq + i) * dh..(h * sq + i) * dh + dh];
+            for j in 0..skv {
+                let krow = &k[(kh * skv + j) * dh..(kh * skv + j) * dh + dh];
+                let mut acc = 0.0f64;
+                for (&a, &b) in qrow.iter().zip(krow) {
+                    acc += a as f64 * b as f64;
+                }
+                let mut l = (acc * inv_sqrt) as f32;
+                if !slopes.is_empty() {
+                    l += alibi_bias_at(spec, &slopes, h, i, j, prefix_len,
+                                       causal_offset);
+                }
+                if !mask[(h * sq + i) * skv + j] {
+                    l = NEG;
+                }
+                row[j] = l;
+            }
+            softmax_row(&row, &mut prow);
+            probs[(h * sq + i) * skv..(h * sq + i) * skv + skv]
+                .copy_from_slice(&prow);
+        }
+    }
+    probs
+}
+
+// ---------------------------------------------------------------------------
+// Quantization context (quantlib.QuantCtx)
+// ---------------------------------------------------------------------------
+
+/// What the tune backward needs to replay one site: STE passes the
+/// output gradient through, the L_q term adds 2 (x - xq) / denom (lo and
+/// scale are stop-gradded; round/clip have zero gradient a.e.).
+pub struct SiteRec {
+    x: Vec<f32>,
+    xq: Vec<f32>,
+    denom: f64,
+    layer: usize,
+    site: usize,
+}
+
+/// Per-forward quantization state + statistics accumulator, mirroring
+/// quantlib.QuantCtx field-for-field (ste is implicit: the tape records
+/// what the backward needs and the forward always returns xq).
+pub struct QuantCtx {
+    pub mode: Mode,
+    pub levels: f32,
+    pub ranges: Option<Tensor>,
+    /// [B*S] row-major validity mask (None = all valid).
+    pub valid: Option<Vec<bool>>,
+    pub per_example: bool,
+    pub inv_smooth: Option<Tensor>,
+    pub collect_stats: bool,
+    pub collect_chan: bool,
+    /// Scalar L_q accumulator ([B] when per_example).
+    pub lq: f64,
+    pub lq_per: Vec<f64>,
+    pub minmax: Vec<(f32, f32)>,
+    pub chan_absmax: Vec<Vec<f32>>,
+    /// One entry per site() call when taping (tune_step backward).
+    pub tape: Option<Vec<Option<SiteRec>>>,
+}
+
+impl QuantCtx {
+    pub fn new(mode: Mode, levels: f32) -> Self {
+        QuantCtx {
+            mode,
+            levels,
+            ranges: None,
+            valid: None,
+            per_example: false,
+            inv_smooth: None,
+            collect_stats: true,
+            collect_chan: false,
+            lq: 0.0,
+            lq_per: Vec::new(),
+            minmax: Vec::new(),
+            chan_absmax: Vec::new(),
+            tape: None,
+        }
+    }
+
+    pub fn serving(mode: Mode, levels: f32, ranges: &Tensor,
+                   inv_smooth: &Tensor) -> Self {
+        QuantCtx {
+            ranges: Some(ranges.clone()),
+            inv_smooth: Some(inv_smooth.clone()),
+            collect_stats: false,
+            ..QuantCtx::new(mode, levels)
+        }
+    }
+
+    /// Quantize one site. x: [b, s, f] row-major. Returns the tensor the
+    /// downstream matmul consumes.
+    pub fn site(&mut self, mut x: Vec<f32>, b: usize, s: usize, f: usize,
+                layer: usize, site: usize) -> Vec<f32> {
+        if let Some(inv) = &self.inv_smooth {
+            if site == 0 || site == 2 {
+                let which = if site == 0 { 0 } else { 1 };
+                let off = (layer * 2 + which) * f;
+                let row = &inv.data[off..off + f];
+                for r in 0..b * s {
+                    for (xi, &iv) in x[r * f..(r + 1) * f].iter_mut().zip(row) {
+                        *xi *= iv;
+                    }
+                }
+            }
+        }
+        let valid_row = |row: usize| -> bool {
+            self.valid.as_ref().map_or(true, |v| v[row])
+        };
+
+        let mut mn = f32::INFINITY;
+        let mut mx = f32::NEG_INFINITY;
+        if self.collect_stats || self.mode == Mode::Ptd {
+            for r in 0..b * s {
+                if !valid_row(r) {
+                    continue;
+                }
+                for &v in &x[r * f..(r + 1) * f] {
+                    mn = mn.min(v);
+                    mx = mx.max(v);
+                }
+            }
+            mn = mn.min(0.0);
+            mx = mx.max(0.0);
+        }
+        if self.collect_stats {
+            self.minmax.push((mn, mx));
+        }
+        if self.collect_chan {
+            let mut ch = vec![0.0f32; f];
+            for r in 0..b * s {
+                if !valid_row(r) {
+                    continue;
+                }
+                for (c, &v) in ch.iter_mut().zip(&x[r * f..(r + 1) * f]) {
+                    *c = c.max(v.abs());
+                }
+            }
+            self.chan_absmax.push(ch);
+        }
+        if self.mode == Mode::Fp {
+            if let Some(t) = self.tape.as_mut() {
+                t.push(None);
+            }
+            return x;
+        }
+
+        // (lo, scale) per the granularity; quantize
+        let mut xq = vec![0.0f32; x.len()];
+        match self.mode {
+            Mode::Pts => {
+                let idx = layer * 4 + site;
+                let ranges = self.ranges.as_ref().expect("pts needs ranges");
+                let lo = ranges.data[idx * 2];
+                let scale = ranges.data[idx * 2 + 1];
+                for (o, &v) in xq.iter_mut().zip(&x) {
+                    *o = qdq_asym(v, lo, scale, self.levels);
+                }
+            }
+            Mode::Ptd if self.per_example => {
+                for bi in 0..b {
+                    let mut emn = f32::INFINITY;
+                    let mut emx = f32::NEG_INFINITY;
+                    for si in 0..s {
+                        let r = bi * s + si;
+                        if !valid_row(r) {
+                            continue;
+                        }
+                        for &v in &x[r * f..(r + 1) * f] {
+                            emn = emn.min(v);
+                            emx = emx.max(v);
+                        }
+                    }
+                    emn = emn.min(0.0);
+                    emx = emx.max(0.0);
+                    let scale = (emx - emn).max(1e-8) / self.levels;
+                    for r in bi * s..(bi + 1) * s {
+                        for i in r * f..(r + 1) * f {
+                            xq[i] = qdq_asym(x[i], emn, scale, self.levels);
+                        }
+                    }
+                }
+            }
+            Mode::Ptd => {
+                let scale = (mx - mn).max(1e-8) / self.levels;
+                for (o, &v) in xq.iter_mut().zip(&x) {
+                    *o = qdq_asym(v, mn, scale, self.levels);
+                }
+            }
+            Mode::Ptk => {
+                for r in 0..b * s {
+                    let row_valid = valid_row(r);
+                    let mut rmn = f32::INFINITY;
+                    let mut rmx = f32::NEG_INFINITY;
+                    if row_valid {
+                        for &v in &x[r * f..(r + 1) * f] {
+                            rmn = rmn.min(v);
+                            rmx = rmx.max(v);
+                        }
+                    }
+                    let rmn = rmn.min(0.0);
+                    let rmx = rmx.max(0.0);
+                    let scale = (rmx - rmn).max(1e-8) / self.levels;
+                    for i in r * f..(r + 1) * f {
+                        xq[i] = qdq_asym(x[i], rmn, scale, self.levels);
+                    }
+                }
+            }
+            Mode::Fp => unreachable!(),
+        }
+
+        let mut denom_scalar = 1.0f64;
+        if self.collect_stats {
+            if self.per_example {
+                if self.lq_per.is_empty() {
+                    self.lq_per = vec![0.0; b];
+                }
+                for bi in 0..b {
+                    let mut err = 0.0f64;
+                    let mut cnt = 0.0f64;
+                    for si in 0..s {
+                        let r = bi * s + si;
+                        if !valid_row(r) {
+                            continue;
+                        }
+                        cnt += 1.0;
+                        for i in r * f..(r + 1) * f {
+                            let d = (x[i] - xq[i]) as f64;
+                            err += d * d;
+                        }
+                    }
+                    let denom = (cnt * f as f64).max(1.0);
+                    self.lq_per[bi] += err / denom;
+                }
+            } else {
+                let mut err = 0.0f64;
+                let mut cnt = 0.0f64;
+                for r in 0..b * s {
+                    if !valid_row(r) {
+                        continue;
+                    }
+                    cnt += 1.0;
+                    for i in r * f..(r + 1) * f {
+                        let d = (x[i] - xq[i]) as f64;
+                        err += d * d;
+                    }
+                }
+                denom_scalar = (cnt * f as f64).max(1.0);
+                self.lq += err / denom_scalar;
+            }
+        }
+        if let Some(t) = self.tape.as_mut() {
+            t.push(Some(SiteRec {
+                x: std::mem::take(&mut x),
+                xq: xq.clone(),
+                denom: denom_scalar,
+                layer,
+                site,
+            }));
+        }
+        xq
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Full forward (model.fwd)
+// ---------------------------------------------------------------------------
+
+struct LayerP<'a> {
+    ln1_g: &'a Tensor,
+    ln1_b: Option<&'a Tensor>,
+    wq: &'a Tensor,
+    wk: &'a Tensor,
+    wv: &'a Tensor,
+    wo: &'a Tensor,
+    ln2_g: &'a Tensor,
+    ln2_b: Option<&'a Tensor>,
+    wg: Option<&'a Tensor>,
+    wu: &'a Tensor,
+    wd: &'a Tensor,
+}
+
+fn layer_p<'a>(spec: &ModelSpec, params: &Params<'a>, l: usize)
+               -> crate::Result<LayerP<'a>> {
+    let ln = spec.norm == NormKind::LnPost;
+    Ok(LayerP {
+        ln1_g: params.layer(l, "ln1_g")?,
+        ln1_b: if ln { Some(params.layer(l, "ln1_b")?) } else { None },
+        wq: params.layer(l, "wq")?,
+        wk: params.layer(l, "wk")?,
+        wv: params.layer(l, "wv")?,
+        wo: params.layer(l, "wo")?,
+        ln2_g: params.layer(l, "ln2_g")?,
+        ln2_b: if ln { Some(params.layer(l, "ln2_b")?) } else { None },
+        wg: if spec.act == ActKind::Swiglu {
+            Some(params.layer(l, "wg")?)
+        } else {
+            None
+        },
+        wu: params.layer(l, "wu")?,
+        wd: params.layer(l, "wd")?,
+    })
+}
+
+/// [b*s, H*dh] row-major -> [b, H, s, dh].
+fn to_heads(y: &[f32], b: usize, s: usize, heads: usize, dh: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; b * heads * s * dh];
+    for bi in 0..b {
+        for si in 0..s {
+            for h in 0..heads {
+                let src = (bi * s + si) * heads * dh + h * dh;
+                let dst = ((bi * heads + h) * s + si) * dh;
+                out[dst..dst + dh].copy_from_slice(&y[src..src + dh]);
+            }
+        }
+    }
+    out
+}
+
+/// [b, H, s, dh] -> [b*s, H*dh] row-major.
+fn from_heads(q: &[f32], b: usize, s: usize, heads: usize, dh: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; b * s * heads * dh];
+    for bi in 0..b {
+        for h in 0..heads {
+            for si in 0..s {
+                let src = ((bi * heads + h) * s + si) * dh;
+                let dst = (bi * s + si) * heads * dh + h * dh;
+                out[dst..dst + dh].copy_from_slice(&q[src..src + dh]);
+            }
+        }
+    }
+    out
+}
+
+/// Build the concatenated [Hkv, m+s, dh] key-or-value rows of one batch
+/// element: prefix slots from the cushion KV, token slots from k/v.
+fn concat_prefix(spec: &ModelSpec, prefix_kv: &Tensor, l: usize, which: usize,
+                 tok: &[f32], bi: usize, s: usize) -> Vec<f32> {
+    let (hkv, m, dh) = (spec.n_kv_heads, spec.m_max, spec.d_head);
+    let mut out = vec![0.0f32; hkv * (m + s) * dh];
+    let pbase = ((l * 2 + which) * hkv) * m * dh;
+    for kh in 0..hkv {
+        let dst = kh * (m + s) * dh;
+        let src = pbase + kh * m * dh;
+        out[dst..dst + m * dh].copy_from_slice(&prefix_kv.data[src..src + m * dh]);
+        let tsrc = ((bi * hkv + kh) * s) * dh;
+        out[dst + m * dh..dst + (m + s) * dh]
+            .copy_from_slice(&tok[tsrc..tsrc + s * dh]);
+    }
+    out
+}
+
+/// Auxiliary outputs of a collect-enabled forward.
+pub struct FwdAux {
+    /// [L+1][b*s*d] block inputs (+ final residual).
+    pub acts: Vec<Vec<f32>>,
+    /// [L][Hq*S*(m+S)] attention probabilities of batch element 0.
+    pub probs: Vec<Vec<f32>>,
+    /// [L][2*b*Hkv*S*dh] per-layer roped token K/V.
+    pub kv: Vec<Vec<f32>>,
+}
+
+/// model.fwd: tokens [b, s] -> logits [b, s, vocab] (+ aux collections).
+#[allow(clippy::too_many_arguments)]
+pub fn fwd(spec: &ModelSpec, params: &Params, qctx: &mut QuantCtx,
+           tokens: &[i32], b: usize, s: usize, prefix_kv: &Tensor,
+           prefix_len: i32, kv_valid: Option<&[bool]>,
+           positions: Option<&[i32]>, causal_offset: i32,
+           collect_acts: bool, collect_probs: bool, collect_kv: bool)
+           -> crate::Result<(Tensor, FwdAux)> {
+    let (d, dh, hq, hkv, m) = (spec.d_model, spec.d_head, spec.n_heads,
+                               spec.n_kv_heads, spec.m_max);
+    anyhow::ensure!(tokens.len() == b * s, "fwd: bad token count");
+    let embed = params.get("embed")?;
+    anyhow::ensure!(embed.shape == vec![spec.vocab, d], "embed shape");
+
+    let default_pos: Vec<i32>;
+    let positions: &[i32] = match positions {
+        Some(p) => p,
+        None => {
+            default_pos = (0..b * s)
+                .map(|i| prefix_len + (i % s) as i32)
+                .collect();
+            &default_pos
+        }
+    };
+
+    let mut x = vec![0.0f32; b * s * d];
+    for (r, &t) in tokens.iter().enumerate() {
+        anyhow::ensure!(
+            t >= 0 && (t as usize) < spec.vocab,
+            "fwd: token {t} outside vocab"
+        );
+        x[r * d..(r + 1) * d].copy_from_slice(embed.row(t as usize));
+    }
+    if spec.pos == PosKind::Learned {
+        let pos_emb = params.get("pos_emb")?;
+        let cap = pos_emb.shape[0];
+        for r in 0..b * s {
+            let p = positions[r];
+            anyhow::ensure!(
+                p >= 0 && (p as usize) < cap,
+                "fwd: position {p} outside pos_emb table"
+            );
+            for i in 0..d {
+                x[r * d + i] += pos_emb.data[p as usize * d + i];
+            }
+        }
+    }
+
+    // in-band kv validity over the token region, shared across batch
+    let kvv_full: Option<Vec<bool>> = kv_valid.map(|kv| {
+        assert_eq!(kv.len(), s, "kv_valid must cover the token region");
+        let mut full = Vec::with_capacity(m + s);
+        for j in 0..m {
+            full.push((j as i32) < prefix_len);
+        }
+        full.extend_from_slice(kv);
+        full
+    });
+
+    let mut aux = FwdAux { acts: Vec::new(), probs: Vec::new(), kv: Vec::new() };
+    for l in 0..spec.n_layers {
+        if collect_acts {
+            aux.acts.push(x.clone());
+        }
+        let p = layer_p(spec, params, l)?;
+
+        let h = match spec.norm {
+            NormKind::RmsPre => rmsnorm(&x, b * s, d, &p.ln1_g.data),
+            NormKind::LnPost => x.clone(),
+        };
+        let h = qctx.site(h, b, s, d, l, 0);
+        let mut q = to_heads(&matmul(&h, b * s, d, p.wq), b, s, hq, dh);
+        let mut k = to_heads(&matmul(&h, b * s, d, p.wk), b, s, hkv, dh);
+        let v = to_heads(&matmul(&h, b * s, d, p.wv), b, s, hkv, dh);
+        if spec.pos == PosKind::Rope {
+            for bi in 0..b {
+                let pos = &positions[bi * s..(bi + 1) * s];
+                rope_rotate(&mut q[bi * hq * s * dh..(bi + 1) * hq * s * dh],
+                            hq, s, dh, pos, spec.rope_theta, false);
+                rope_rotate(&mut k[bi * hkv * s * dh..(bi + 1) * hkv * s * dh],
+                            hkv, s, dh, pos, spec.rope_theta, false);
+            }
+        }
+        if collect_kv {
+            let mut kv_rec = Vec::with_capacity(2 * b * hkv * s * dh);
+            kv_rec.extend_from_slice(&k);
+            kv_rec.extend_from_slice(&v);
+            aux.kv.push(kv_rec);
+        }
+
+        let mut o = vec![0.0f32; b * hq * s * dh];
+        let mut probs0: Option<Vec<f32>> = None;
+        for bi in 0..b {
+            let kf = concat_prefix(spec, prefix_kv, l, 0, &k, bi, s);
+            let vf = concat_prefix(spec, prefix_kv, l, 1, &v, bi, s);
+            let qb = &q[bi * hq * s * dh..(bi + 1) * hq * s * dh];
+            let (ob, _) = attention(spec, l, qb, &kf, &vf, s, m + s,
+                                    prefix_len, causal_offset,
+                                    kvv_full.as_deref(), false);
+            o[bi * hq * s * dh..(bi + 1) * hq * s * dh].copy_from_slice(&ob);
+            if collect_probs && bi == 0 {
+                probs0 = Some(attend_probs(spec, l, qb, &kf, s, m + s,
+                                           prefix_len, causal_offset));
+            }
+        }
+        if let Some(pr) = probs0 {
+            aux.probs.push(pr);
+        }
+
+        let o = from_heads(&o, b, s, hq, dh);
+        let o = qctx.site(o, b, s, hq * dh, l, 1);
+        let attn_out = matmul(&o, b * s, hq * dh, p.wo);
+
+        match spec.norm {
+            NormKind::RmsPre => {
+                for (xi, a) in x.iter_mut().zip(&attn_out) {
+                    *xi += a;
+                }
+                let h2 = rmsnorm(&x, b * s, d, &p.ln2_g.data);
+                let mlp_out = mlp_fwd(spec, qctx, &p, h2, b, s, l)?;
+                for (xi, a) in x.iter_mut().zip(&mlp_out) {
+                    *xi += a;
+                }
+            }
+            NormKind::LnPost => {
+                let mut pre1 = x;
+                for (xi, a) in pre1.iter_mut().zip(&attn_out) {
+                    *xi += a;
+                }
+                let x_mid = layernorm(&pre1, b * s, d, &p.ln1_g.data,
+                                      &p.ln1_b.unwrap().data);
+                let mlp_out = mlp_fwd(spec, qctx, &p, x_mid.clone(), b, s, l)?;
+                let mut pre2 = x_mid;
+                for (xi, a) in pre2.iter_mut().zip(&mlp_out) {
+                    *xi += a;
+                }
+                x = layernorm(&pre2, b * s, d, &p.ln2_g.data,
+                              &p.ln2_b.unwrap().data);
+            }
+        }
+    }
+    if collect_acts {
+        aux.acts.push(x.clone());
+    }
+
+    let h = match spec.norm {
+        NormKind::RmsPre => rmsnorm(&x, b * s, d, &params.get("lnf_g")?.data),
+        NormKind::LnPost => layernorm(&x, b * s, d, &params.get("lnf_g")?.data,
+                                      &params.get("lnf_b")?.data),
+    };
+    let logits = matmul(&h, b * s, d, params.get("lm_head")?);
+    Ok((Tensor::new(vec![b, s, spec.vocab], logits), aux))
+}
+
+/// model.mlp: site 2 (mlp_in) -> activation -> site 3 (mlp_hidden) -> wd.
+fn mlp_fwd(spec: &ModelSpec, qctx: &mut QuantCtx, p: &LayerP, h: Vec<f32>,
+           b: usize, s: usize, l: usize) -> crate::Result<Vec<f32>> {
+    let d = spec.d_model;
+    let h = qctx.site(h, b, s, d, l, 2);
+    let hidden = match spec.act {
+        ActKind::Swiglu => {
+            let ga = matmul(&h, b * s, d, p.wg.unwrap());
+            let ub = matmul(&h, b * s, d, p.wu);
+            ga.iter().zip(&ub).map(|(&a, &u)| silu(a) * u).collect()
+        }
+        _ => {
+            let a = matmul(&h, b * s, d, p.wu);
+            a.iter().map(|&v| act_apply(spec.act, v)).collect::<Vec<f32>>()
+        }
+    };
+    let hidden = qctx.site(hidden, b, s, spec.d_ff, l, 3);
+    Ok(matmul(&hidden, b * s, spec.d_ff, p.wd))
+}
+
+// ---------------------------------------------------------------------------
+// Graph entry points: eval/analysis (graphs.py make_fwd / make_stats /
+// make_score / make_prefix_kv)
+// ---------------------------------------------------------------------------
+
+/// fwd_{mode}: logits [b, s, vocab].
+#[allow(clippy::too_many_arguments)]
+pub fn run_fwd(spec: &ModelSpec, params: &Params, mode: Mode,
+               prefix_kv: &Tensor, prefix_len: i32, tokens: &[i32],
+               b: usize, s: usize, ranges: &Tensor, levels: f32,
+               inv_smooth: &Tensor) -> crate::Result<Tensor> {
+    let mut qctx = QuantCtx::serving(mode, levels, ranges, inv_smooth);
+    let (logits, _) = fwd(spec, params, &mut qctx, tokens, b, s, prefix_kv,
+                          prefix_len, None, None, 0, false, false, false)?;
+    Ok(logits)
+}
+
+/// jnp.percentile with the default linear interpolation.
+fn percentile(sorted: &[f32], q: f64) -> f32 {
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let pos = q / 100.0 * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = (lo + 1).min(n - 1);
+    let frac = pos - lo as f64;
+    (sorted[lo] as f64 * (1.0 - frac) + sorted[hi] as f64 * frac) as f32
+}
+
+/// stats: (minmax [n_sites,2], chan_d [3L,d], chan_f [L,d_ff],
+/// acts_grid [L+1,b,s], act_stats [L+1,3], probs [L,Hq,s,m+s]).
+pub fn run_stats(spec: &ModelSpec, params: &Params, prefix_kv: &Tensor,
+                 prefix_len: i32, tokens: &[i32], b: usize, s: usize)
+                 -> crate::Result<Vec<Tensor>> {
+    let mut qctx = QuantCtx::new(Mode::Fp, 255.0);
+    qctx.collect_chan = true;
+    let (_, aux) = fwd(spec, params, &mut qctx, tokens, b, s, prefix_kv,
+                       prefix_len, None, None, 0, true, true, false)?;
+
+    let lp1 = spec.n_layers + 1;
+    let d = spec.d_model;
+    let mut acts_grid = vec![0.0f32; lp1 * b * s];
+    let mut act_stats = vec![0.0f32; lp1 * 3];
+    for (li, act) in aux.acts.iter().enumerate() {
+        let mut mags: Vec<f32> = act.iter().map(|v| v.abs()).collect();
+        for r in 0..b * s {
+            let row = &mags[r * d..(r + 1) * d];
+            acts_grid[li * b * s + r] =
+                row.iter().fold(0.0f32, |a, &v| a.max(v));
+        }
+        mags.sort_unstable_by(f32::total_cmp);
+        act_stats[li * 3] = *mags.last().unwrap();
+        act_stats[li * 3 + 1] = percentile(&mags, 90.0);
+        act_stats[li * 3 + 2] = percentile(&mags, 50.0);
+    }
+
+    let n_sites = spec.n_sites;
+    let mut minmax = vec![0.0f32; n_sites * 2];
+    anyhow::ensure!(qctx.minmax.len() == n_sites, "stats: bad site count");
+    for (i, &(mn, mx)) in qctx.minmax.iter().enumerate() {
+        minmax[i * 2] = mn;
+        minmax[i * 2 + 1] = mx;
+    }
+    let mut chan_d: Vec<f32> = Vec::with_capacity(3 * spec.n_layers * d);
+    let mut chan_f: Vec<f32> = Vec::with_capacity(spec.n_layers * spec.d_ff);
+    for (i, ch) in qctx.chan_absmax.iter().enumerate() {
+        if i % 4 == 3 {
+            chan_f.extend_from_slice(ch);
+        } else {
+            chan_d.extend_from_slice(ch);
+        }
+    }
+    let mut probs = Vec::with_capacity(spec.n_layers * spec.n_heads * s
+                                       * (spec.m_max + s));
+    for pr in &aux.probs {
+        probs.extend_from_slice(pr);
+    }
+    Ok(vec![
+        Tensor::new(vec![n_sites, 2], minmax),
+        Tensor::new(vec![3 * spec.n_layers, d], chan_d),
+        Tensor::new(vec![spec.n_layers, spec.d_ff], chan_f),
+        Tensor::new(vec![lp1, b, s], acts_grid),
+        Tensor::new(vec![lp1, 3], act_stats),
+        Tensor::new(vec![spec.n_layers, spec.n_heads, s, spec.m_max + s],
+                    probs),
+    ])
+}
+
+/// score_lq: L_q of the text under [prefix ++ candidate] per candidate —
+/// per-example dynamic per-tensor ranges over the text region only.
+pub fn run_score(spec: &ModelSpec, params: &Params, prefix_tokens: &[i32],
+                 prefix_len: i32, cands: &[i32], text: &[i32], levels: f32,
+                 inv_smooth: &Tensor) -> crate::Result<Tensor> {
+    let m = spec.m_max;
+    anyhow::ensure!(prefix_tokens.len() == m, "score: bad prefix pad");
+    let bc = cands.len();
+    let tl = text.len();
+    let s_total = m + 1 + tl;
+    let mut rows = Vec::with_capacity(bc * s_total);
+    for &c in cands {
+        rows.extend_from_slice(prefix_tokens);
+        rows.push(c);
+        rows.extend_from_slice(text);
+    }
+    let kv_valid: Vec<bool> = (0..s_total)
+        .map(|i| (i as i32) < prefix_len || i >= m)
+        .collect();
+    let gap = m as i32 - prefix_len;
+    let pos_row: Vec<i32> = (0..s_total as i32)
+        .map(|i| if (i as usize) < m { i } else { i - gap })
+        .collect();
+    let mut positions = Vec::with_capacity(bc * s_total);
+    for _ in 0..bc {
+        positions.extend_from_slice(&pos_row);
+    }
+    let valid: Vec<bool> = (0..bc * s_total)
+        .map(|i| i % s_total >= m + 1)
+        .collect();
+
+    let empty = Tensor::zeros(&[spec.n_layers, 2, spec.n_kv_heads, m,
+                                spec.d_head]);
+    let mut qctx = QuantCtx::new(Mode::Ptd, levels);
+    qctx.per_example = true;
+    qctx.valid = Some(valid);
+    qctx.inv_smooth = Some(inv_smooth.clone());
+    fwd(spec, params, &mut qctx, &rows, bc, s_total, &empty, 0,
+        Some(&kv_valid), Some(&positions), 0, false, false, false)?;
+    let lq: Vec<f32> = qctx.lq_per.iter().map(|&v| v as f32).collect();
+    anyhow::ensure!(lq.len() == bc, "score: lq batch mismatch");
+    Ok(Tensor::new(vec![bc], lq))
+}
+
+/// prefix_kv: CushionCache KV [L, 2, Hkv, m_max, dh] from padded prefix
+/// token ids, roped at positions 0..len-1, padding slots zeroed.
+pub fn run_prefix_kv(spec: &ModelSpec, params: &Params,
+                     prefix_tokens: &[i32], prefix_len: i32)
+                     -> crate::Result<Tensor> {
+    let m = spec.m_max;
+    anyhow::ensure!(prefix_tokens.len() == m, "prefix_kv: bad prefix pad");
+    let (hkv, dh) = (spec.n_kv_heads, spec.d_head);
+    let kv_valid: Vec<bool> = (0..m).map(|i| (i as i32) < prefix_len).collect();
+    let positions: Vec<i32> = (0..m as i32).collect();
+    let empty = Tensor::zeros(&[spec.n_layers, 2, hkv, m, dh]);
+    let mut qctx = QuantCtx::new(Mode::Fp, 255.0);
+    let (_, aux) = fwd(spec, params, &mut qctx, prefix_tokens, 1, m, &empty,
+                       0, Some(&kv_valid), Some(&positions), 0, false,
+                       false, true)?;
+    // aux.kv[l] is [2, 1, Hkv, m, dh]; zero the padding slots
+    let mut out = vec![0.0f32; spec.n_layers * 2 * hkv * m * dh];
+    for (l, rec) in aux.kv.iter().enumerate() {
+        for w in 0..2 {
+            for kh in 0..hkv {
+                for p in 0..m {
+                    if !kv_valid[p] {
+                        continue;
+                    }
+                    let src = ((w * hkv + kh) * m + p) * dh;
+                    let dst = (((l * 2 + w) * hkv + kh) * m + p) * dh;
+                    out[dst..dst + dh].copy_from_slice(&rec[src..src + dh]);
+                }
+            }
+        }
+    }
+    Ok(Tensor::new(vec![spec.n_layers, 2, hkv, m, dh], out))
+}
+
+// ---------------------------------------------------------------------------
+// Serving (serving.py): prefill / decode over the slot cache
+// ---------------------------------------------------------------------------
+
+/// serving.select_tokens (greedy): per-row argmax over the last axis
+/// (ties resolve to the lowest index, like jnp.argmax) + the winning
+/// logit.
+pub fn select_tokens(logits: &[f32], rows: usize, v: usize)
+                     -> (Vec<i32>, Vec<f32>) {
+    let mut ids = Vec::with_capacity(rows);
+    let mut tops = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let row = &logits[r * v..(r + 1) * v];
+        let mut best = (0usize, f32::NEG_INFINITY);
+        for (i, &x) in row.iter().enumerate() {
+            if x > best.1 {
+                best = (i, x);
+            }
+        }
+        ids.push(best.0 as i32);
+        tops.push(best.1);
+    }
+    (ids, tops)
+}
+
+/// quantlib.kivi_qdq_kv: keys asym per-channel-group along d_head
+/// (group 32 when divisible, else d_head — the rule the fixture dumper
+/// patches in for mini head dims), values asym per-token. In place over
+/// [heads, s, dh] rows.
+fn kivi_qdq(k: &mut [f32], v: &mut [f32], heads: usize, s: usize, dh: usize,
+            levels: f32) {
+    let group = if dh % 32 == 0 { 32 } else { dh };
+    for h in 0..heads {
+        for si in 0..s {
+            let base = (h * s + si) * dh;
+            for g0 in (0..dh).step_by(group) {
+                qdq_dynamic_span(&mut k[base + g0..base + g0 + group], levels);
+            }
+            qdq_dynamic_span(&mut v[base..base + dh], levels);
+        }
+    }
+}
+
+/// ref.qdq_dynamic over one contiguous span (axis = the span).
+fn qdq_dynamic_span(span: &mut [f32], levels: f32) {
+    let mut mn = f32::INFINITY;
+    let mut mx = f32::NEG_INFINITY;
+    for &x in span.iter() {
+        mn = mn.min(x);
+        mx = mx.max(x);
+    }
+    let mn = mn.min(0.0);
+    let mx = mx.max(0.0);
+    let scale = (mx - mn).max(1e-8) / levels;
+    for x in span.iter_mut() {
+        *x = qdq_asym(*x, mn, scale, levels);
+    }
+}
+
+/// serving._kv_maybe_quant: kv_levels >= 2^20 disables KV quantization.
+fn kv_maybe_quant(k: &mut [f32], v: &mut [f32], heads: usize, s: usize,
+                  dh: usize, kv_levels: f32) {
+    if kv_levels < (1u32 << 20) as f32 {
+        kivi_qdq(k, v, heads, s, dh, kv_levels);
+    }
+}
+
+/// serving.prefill: one prompt into cache slot `slot`.
+/// cache: [L, 2, B, Hkv, CAP, dh]. Returns (cache', last_logits [V]).
+#[allow(clippy::too_many_arguments)]
+pub fn run_prefill(spec: &ModelSpec, params: &Params, mode: Mode,
+                   cache: &Tensor, prefix_kv: &Tensor, cushion_len: i32,
+                   slot: usize, tokens: &[i32], tok_len: i32,
+                   ranges: &Tensor, levels: f32, kv_levels: f32,
+                   inv_smooth: &Tensor) -> crate::Result<(Tensor, Tensor)> {
+    let (d, dh, hq, hkv, m) = (spec.d_model, spec.d_head, spec.n_heads,
+                               spec.n_kv_heads, spec.m_max);
+    let s = tokens.len();
+    anyhow::ensure!(cache.shape.len() == 6, "prefill: bad cache rank");
+    let (bsz, cap) = (cache.shape[2], cache.shape[4]);
+    anyhow::ensure!(slot < bsz, "prefill: slot out of range");
+    anyhow::ensure!(m + s <= cap, "prefill: tokens exceed cache capacity");
+    let mut cache = cache.clone();
+
+    let mut qctx = QuantCtx::serving(mode, levels, ranges, inv_smooth);
+    qctx.valid = Some((0..s).map(|i| (i as i32) < tok_len).collect());
+
+    let embed = params.get("embed")?;
+    let mut x = vec![0.0f32; s * d];
+    for (r, &t) in tokens.iter().enumerate() {
+        anyhow::ensure!(t >= 0 && (t as usize) < spec.vocab,
+                        "prefill: token {t} outside vocab");
+        x[r * d..(r + 1) * d].copy_from_slice(embed.row(t as usize));
+    }
+    let positions: Vec<i32> = (0..s as i32).map(|i| cushion_len + i).collect();
+    if spec.pos == PosKind::Learned {
+        let pos_emb = params.get("pos_emb")?;
+        for r in 0..s {
+            let p = positions[r] as usize;
+            anyhow::ensure!(p < pos_emb.shape[0], "prefill: position overflow");
+            for i in 0..d {
+                x[r * d + i] += pos_emb.data[p * d + i];
+            }
+        }
+    }
+
+    for l in 0..spec.n_layers {
+        let p = layer_p(spec, params, l)?;
+        let h = match spec.norm {
+            NormKind::RmsPre => rmsnorm(&x, s, d, &p.ln1_g.data),
+            NormKind::LnPost => x.clone(),
+        };
+        let h = qctx.site(h, 1, s, d, l, 0);
+        let mut q = to_heads(&matmul(&h, s, d, p.wq), 1, s, hq, dh);
+        let mut k = to_heads(&matmul(&h, s, d, p.wk), 1, s, hkv, dh);
+        let mut v = to_heads(&matmul(&h, s, d, p.wv), 1, s, hkv, dh);
+        if spec.pos == PosKind::Rope {
+            rope_rotate(&mut q, hq, s, dh, &positions, spec.rope_theta, false);
+            rope_rotate(&mut k, hkv, s, dh, &positions, spec.rope_theta, false);
+        }
+        kv_maybe_quant(&mut k, &mut v, hkv, s, dh, kv_levels);
+        // write this layer's token KV into the slot
+        for (which, t) in [(0usize, &k), (1usize, &v)] {
+            for kh in 0..hkv {
+                for si in 0..s {
+                    let src = (kh * s + si) * dh;
+                    let dst = ((((l * 2 + which) * bsz + slot) * hkv + kh)
+                        * cap + m + si) * dh;
+                    cache.data[dst..dst + dh]
+                        .copy_from_slice(&t[src..src + dh]);
+                }
+            }
+        }
+        let kf = concat_prefix(spec, prefix_kv, l, 0, &k, 0, s);
+        let vf = concat_prefix(spec, prefix_kv, l, 1, &v, 0, s);
+        let (o, _) = attention(spec, l, &q, &kf, &vf, s, m + s, cushion_len,
+                               0, None, false);
+        let o = from_heads(&o, 1, s, hq, dh);
+        let o = qctx.site(o, 1, s, hq * dh, l, 1);
+        let attn_out = matmul(&o, s, hq * dh, p.wo);
+        x = block_tail(spec, &mut qctx, &p, x, &attn_out, 1, s, l)?;
+    }
+
+    let hfin = match spec.norm {
+        NormKind::RmsPre => rmsnorm(&x, s, d, &params.get("lnf_g")?.data),
+        NormKind::LnPost => layernorm(&x, s, d, &params.get("lnf_g")?.data,
+                                      &params.get("lnf_b")?.data),
+    };
+    let logits = matmul(&hfin, s, d, params.get("lm_head")?);
+    let last_row = (tok_len - 1).max(0) as usize;
+    let v = spec.vocab;
+    let last = logits[last_row * v..(last_row + 1) * v].to_vec();
+    Ok((cache, Tensor::new(vec![v], last)))
+}
+
+/// The shared residual/MLP tail of a serving block (serving._block_tail).
+fn block_tail(spec: &ModelSpec, qctx: &mut QuantCtx, p: &LayerP,
+              mut x: Vec<f32>, attn_out: &[f32], b: usize, s: usize,
+              l: usize) -> crate::Result<Vec<f32>> {
+    let d = spec.d_model;
+    match spec.norm {
+        NormKind::RmsPre => {
+            for (xi, a) in x.iter_mut().zip(attn_out) {
+                *xi += a;
+            }
+            let h2 = rmsnorm(&x, b * s, d, &p.ln2_g.data);
+            let mlp_out = mlp_fwd(spec, qctx, p, h2, b, s, l)?;
+            for (xi, a) in x.iter_mut().zip(&mlp_out) {
+                *xi += a;
+            }
+            Ok(x)
+        }
+        NormKind::LnPost => {
+            for (xi, a) in x.iter_mut().zip(attn_out) {
+                *xi += a;
+            }
+            let x_mid = layernorm(&x, b * s, d, &p.ln1_g.data,
+                                  &p.ln1_b.unwrap().data);
+            let mlp_out = mlp_fwd(spec, qctx, p, x_mid.clone(), b, s, l)?;
+            let mut pre2 = x_mid;
+            for (xi, a) in pre2.iter_mut().zip(&mlp_out) {
+                *xi += a;
+            }
+            Ok(layernorm(&pre2, b * s, d, &p.ln2_g.data,
+                         &p.ln2_b.unwrap().data))
+        }
+    }
+}
+
+/// serving.decode: one decode step for all B slots.
+/// Returns (cache', logits [B, V]).
+#[allow(clippy::too_many_arguments)]
+pub fn run_decode(spec: &ModelSpec, params: &Params, mode: Mode,
+                  cache: &Tensor, cache_tok_len: &[i32], cushion_len: i32,
+                  tokens: &[i32], ranges: &Tensor, levels: f32,
+                  kv_levels: f32, inv_smooth: &Tensor)
+                  -> crate::Result<(Tensor, Tensor)> {
+    let (d, dh, hq, hkv, m) = (spec.d_model, spec.d_head, spec.n_heads,
+                               spec.n_kv_heads, spec.m_max);
+    let b = tokens.len();
+    anyhow::ensure!(cache.shape.len() == 6, "decode: bad cache rank");
+    let (bsz, cap) = (cache.shape[2], cache.shape[4]);
+    anyhow::ensure!(b == bsz, "decode: token batch != cache slots");
+    anyhow::ensure!(cache_tok_len.len() == b, "decode: bad lens");
+    let mut cache = cache.clone();
+
+    let mut qctx = QuantCtx::serving(mode, levels, ranges, inv_smooth);
+
+    let embed = params.get("embed")?;
+    let mut x = vec![0.0f32; b * d];
+    for (bi, &t) in tokens.iter().enumerate() {
+        anyhow::ensure!(t >= 0 && (t as usize) < spec.vocab,
+                        "decode: token {t} outside vocab");
+        x[bi * d..(bi + 1) * d].copy_from_slice(embed.row(t as usize));
+    }
+    let positions: Vec<i32> = cache_tok_len
+        .iter()
+        .map(|&len| cushion_len + len)
+        .collect();
+    if spec.pos == PosKind::Learned {
+        let pos_emb = params.get("pos_emb")?;
+        for bi in 0..b {
+            let p = positions[bi] as usize;
+            anyhow::ensure!(p < pos_emb.shape[0], "decode: position overflow");
+            for i in 0..d {
+                x[bi * d + i] += pos_emb.data[p * d + i];
+            }
+        }
+    }
+
+    for l in 0..spec.n_layers {
+        let p = layer_p(spec, params, l)?;
+        let h = match spec.norm {
+            NormKind::RmsPre => rmsnorm(&x, b, d, &p.ln1_g.data),
+            NormKind::LnPost => x.clone(),
+        };
+        let h = qctx.site(h, b, 1, d, l, 0);
+        let mut q = to_heads(&matmul(&h, b, d, p.wq), b, 1, hq, dh);
+        let mut k = to_heads(&matmul(&h, b, d, p.wk), b, 1, hkv, dh);
+        let mut v = to_heads(&matmul(&h, b, d, p.wv), b, 1, hkv, dh);
+        if spec.pos == PosKind::Rope {
+            for bi in 0..b {
+                rope_rotate(&mut q[bi * hq * dh..(bi + 1) * hq * dh], hq, 1,
+                            dh, &positions[bi..bi + 1], spec.rope_theta,
+                            false);
+                rope_rotate(&mut k[bi * hkv * dh..(bi + 1) * hkv * dh], hkv,
+                            1, dh, &positions[bi..bi + 1], spec.rope_theta,
+                            false);
+            }
+        }
+        kv_maybe_quant(&mut k, &mut v, b * hkv, 1, dh, kv_levels);
+        // scatter each slot's new KV at its own length offset
+        for bi in 0..b {
+            let off = m + cache_tok_len[bi] as usize;
+            anyhow::ensure!(off < cap, "decode: slot {bi} cache overflow");
+            for which in 0..2 {
+                let t = if which == 0 { &k } else { &v };
+                for kh in 0..hkv {
+                    let src = (bi * hkv + kh) * dh;
+                    let dst = ((((l * 2 + which) * bsz + bi) * hkv + kh)
+                        * cap + off) * dh;
+                    cache.data[dst..dst + dh]
+                        .copy_from_slice(&t[src..src + dh]);
+                }
+            }
+        }
+        let mut o = vec![0.0f32; b * hq * dh];
+        for bi in 0..b {
+            let kbase = (((l * 2) * bsz + bi) * hkv) * cap * dh;
+            let vbase = (((l * 2 + 1) * bsz + bi) * hkv) * cap * dh;
+            let kf = &cache.data[kbase..kbase + hkv * cap * dh];
+            let vf = &cache.data[vbase..vbase + hkv * cap * dh];
+            let qb = &q[bi * hq * dh..(bi + 1) * hq * dh];
+            let (ob, _) = attention(spec, l, qb, kf, vf, 1, cap, cushion_len,
+                                    cache_tok_len[bi], None, false);
+            o[bi * hq * dh..(bi + 1) * hq * dh].copy_from_slice(&ob);
+        }
+        let o = from_heads(&o, b, 1, hq, dh);
+        let o = qctx.site(o, b, 1, hq * dh, l, 1);
+        let attn_out = matmul(&o, b, hq * dh, p.wo);
+        x = block_tail(spec, &mut qctx, &p, x, &attn_out, b, 1, l)?;
+    }
+
+    let hfin = match spec.norm {
+        NormKind::RmsPre => rmsnorm(&x, b, d, &params.get("lnf_g")?.data),
+        NormKind::LnPost => layernorm(&x, b, d, &params.get("lnf_g")?.data,
+                                      &params.get("lnf_b")?.data),
+    };
+    let logits = matmul(&hfin, b, d, params.get("lm_head")?);
+    Ok((cache, Tensor::new(vec![b, spec.vocab], logits)))
+}
+
+// ---------------------------------------------------------------------------
+// tune_step (graphs.make_tune_step): one Adam step of quantization-aware
+// prefix tuning — forward with a tape, hand-derived backward wrt the
+// prefix KV only (the weights are constants here), exactly the gradient
+// jax.value_and_grad computes through the ptd+STE forward. Verified
+// against jax.grad by python/tests/ref_interp.py + the tune_step goldens.
+// ---------------------------------------------------------------------------
+
+struct LayerTape<'a> {
+    p: LayerP<'a>,
+    x_in: Vec<f32>,
+    q: Vec<f32>,
+    kf: Vec<f32>,
+    vf: Vec<f32>,
+    probs: Vec<f32>,
+    x_mid: Vec<f32>,
+    pre_ln1: Vec<f32>,
+    pre_ln2: Vec<f32>,
+    ga: Vec<f32>,
+    ub: Vec<f32>,
+}
+
+/// STE site backward: d loss / d site-input-(pre-smoothing) given
+/// d loss / d site-output and the taped record.
+fn site_bwd(inv_smooth: &Tensor, d_model: usize, rec: &Option<SiteRec>,
+            g_out: &[f32], lam: f32) -> Vec<f32> {
+    let Some(rec) = rec else {
+        return g_out.to_vec();
+    };
+    let mut g: Vec<f32> = g_out
+        .iter()
+        .zip(rec.x.iter().zip(&rec.xq))
+        .map(|(&go, (&x, &xq))| {
+            (go as f64 + lam as f64 * 2.0 * (x - xq) as f64 / rec.denom) as f32
+        })
+        .collect();
+    if rec.site == 0 || rec.site == 2 {
+        let which = if rec.site == 0 { 0 } else { 1 };
+        let off = (rec.layer * 2 + which) * d_model;
+        let row = &inv_smooth.data[off..off + d_model];
+        let f = d_model;
+        for r in 0..g.len() / f {
+            for (gi, &iv) in g[r * f..(r + 1) * f].iter_mut().zip(row) {
+                *gi *= iv;
+            }
+        }
+    }
+    g
+}
+
+/// tune_step: (prefix_kv', m', v', loss, lq).
+#[allow(clippy::too_many_arguments)]
+pub fn run_tune_step(spec: &ModelSpec, params: &Params, prefix_kv: &Tensor,
+                     adam_m: &Tensor, adam_v: &Tensor, step: i32,
+                     tokens: &[i32], b: usize, s: usize, prefix_len: i32,
+                     lam: f32, lr: f32, levels: f32, inv_smooth: &Tensor)
+                     -> crate::Result<(Tensor, Tensor, Tensor, f32, f32)> {
+    let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+    let (d, dh, hq, hkv, m) = (spec.d_model, spec.d_head, spec.n_heads,
+                               spec.n_kv_heads, spec.m_max);
+    let g = spec.group();
+    let pre = spec.norm == NormKind::RmsPre;
+    let skv = m + s;
+
+    let mut qctx = QuantCtx::new(Mode::Ptd, levels);
+    qctx.inv_smooth = Some(inv_smooth.clone());
+    qctx.tape = Some(Vec::new());
+    let positions: Vec<i32> = (0..b * s)
+        .map(|i| prefix_len + (i % s) as i32)
+        .collect();
+
+    // ---- forward with tape ------------------------------------------------
+    let embed = params.get("embed")?;
+    let mut x = vec![0.0f32; b * s * d];
+    for (r, &t) in tokens.iter().enumerate() {
+        anyhow::ensure!(t >= 0 && (t as usize) < spec.vocab,
+                        "tune: token outside vocab");
+        x[r * d..(r + 1) * d].copy_from_slice(embed.row(t as usize));
+    }
+    if spec.pos == PosKind::Learned {
+        let pos_emb = params.get("pos_emb")?;
+        for r in 0..b * s {
+            let p = positions[r] as usize;
+            for i in 0..d {
+                x[r * d + i] += pos_emb.data[p * d + i];
+            }
+        }
+    }
+
+    let mut tape: Vec<LayerTape> = Vec::with_capacity(spec.n_layers);
+    for l in 0..spec.n_layers {
+        let p = layer_p(spec, params, l)?;
+        let x_in = x.clone();
+        let h1 = if pre {
+            rmsnorm(&x, b * s, d, &p.ln1_g.data)
+        } else {
+            x.clone()
+        };
+        let a_in = qctx.site(h1, b, s, d, l, 0);
+        let mut q = to_heads(&matmul(&a_in, b * s, d, p.wq), b, s, hq, dh);
+        let mut k = to_heads(&matmul(&a_in, b * s, d, p.wk), b, s, hkv, dh);
+        let v = to_heads(&matmul(&a_in, b * s, d, p.wv), b, s, hkv, dh);
+        if spec.pos == PosKind::Rope {
+            for bi in 0..b {
+                let pos = &positions[bi * s..(bi + 1) * s];
+                rope_rotate(&mut q[bi * hq * s * dh..(bi + 1) * hq * s * dh],
+                            hq, s, dh, pos, spec.rope_theta, false);
+                rope_rotate(&mut k[bi * hkv * s * dh..(bi + 1) * hkv * s * dh],
+                            hkv, s, dh, pos, spec.rope_theta, false);
+            }
+        }
+        let mut kf = vec![0.0f32; b * hkv * skv * dh];
+        let mut vf = vec![0.0f32; b * hkv * skv * dh];
+        let mut probs = vec![0.0f32; b * hq * s * skv];
+        let mut o = vec![0.0f32; b * hq * s * dh];
+        for bi in 0..b {
+            let kfb = concat_prefix(spec, prefix_kv, l, 0, &k, bi, s);
+            let vfb = concat_prefix(spec, prefix_kv, l, 1, &v, bi, s);
+            let qb = &q[bi * hq * s * dh..(bi + 1) * hq * s * dh];
+            let (ob, pb) = attention(spec, l, qb, &kfb, &vfb, s, skv,
+                                     prefix_len, 0, None, true);
+            o[bi * hq * s * dh..(bi + 1) * hq * s * dh].copy_from_slice(&ob);
+            probs[bi * hq * s * skv..(bi + 1) * hq * s * skv]
+                .copy_from_slice(&pb.unwrap());
+            kf[bi * hkv * skv * dh..(bi + 1) * hkv * skv * dh]
+                .copy_from_slice(&kfb);
+            vf[bi * hkv * skv * dh..(bi + 1) * hkv * skv * dh]
+                .copy_from_slice(&vfb);
+        }
+        let o = from_heads(&o, b, s, hq, dh);
+        let o_q = qctx.site(o, b, s, hq * dh, l, 1);
+        let attn_out = matmul(&o_q, b * s, hq * dh, p.wo);
+
+        let (x_mid, pre_ln1, h2);
+        if pre {
+            let mut xm = x.clone();
+            for (xi, a) in xm.iter_mut().zip(&attn_out) {
+                *xi += a;
+            }
+            h2 = rmsnorm(&xm, b * s, d, &p.ln2_g.data);
+            x_mid = xm;
+            pre_ln1 = Vec::new();
+        } else {
+            let mut p1 = x.clone();
+            for (xi, a) in p1.iter_mut().zip(&attn_out) {
+                *xi += a;
+            }
+            let xm = layernorm(&p1, b * s, d, &p.ln1_g.data,
+                               &p.ln1_b.unwrap().data);
+            h2 = xm.clone();
+            x_mid = xm;
+            pre_ln1 = p1;
+        }
+        let m_in = qctx.site(h2, b, s, d, l, 2);
+        let (ga, ub, hidden): (Vec<f32>, Vec<f32>, Vec<f32>);
+        match spec.act {
+            ActKind::Swiglu => {
+                ga = matmul(&m_in, b * s, d, p.wg.unwrap());
+                ub = matmul(&m_in, b * s, d, p.wu);
+                hidden = ga.iter().zip(&ub).map(|(&a, &u)| silu(a) * u)
+                    .collect();
+            }
+            _ => {
+                ga = matmul(&m_in, b * s, d, p.wu);
+                ub = Vec::new();
+                hidden = ga.iter().map(|&a| act_apply(spec.act, a)).collect();
+            }
+        }
+        let hidden_q = qctx.site(hidden, b, s, spec.d_ff, l, 3);
+        let mlp_out = matmul(&hidden_q, b * s, spec.d_ff, p.wd);
+
+        let pre_ln2;
+        if pre {
+            let mut xo = x_mid.clone();
+            for (xi, a) in xo.iter_mut().zip(&mlp_out) {
+                *xi += a;
+            }
+            x = xo;
+            pre_ln2 = Vec::new();
+        } else {
+            let mut p2 = x_mid.clone();
+            for (xi, a) in p2.iter_mut().zip(&mlp_out) {
+                *xi += a;
+            }
+            x = layernorm(&p2, b * s, d, &p.ln2_g.data,
+                          &p.ln2_b.unwrap().data);
+            pre_ln2 = p2;
+        }
+        tape.push(LayerTape {
+            p, x_in, q, kf, vf, probs, x_mid, pre_ln1, pre_ln2, ga, ub,
+        });
+    }
+
+    let x_final = x;
+    let hfin = match spec.norm {
+        NormKind::RmsPre => rmsnorm(&x_final, b * s, d,
+                                    &params.get("lnf_g")?.data),
+        NormKind::LnPost => layernorm(&x_final, b * s, d,
+                                      &params.get("lnf_g")?.data,
+                                      &params.get("lnf_b")?.data),
+    };
+    let lm_head = params.get("lm_head")?;
+    let logits = matmul(&hfin, b * s, d, lm_head);
+    let vocab = spec.vocab;
+
+    // loss_pred: mean next-token NLL over positions 0..s-1
+    let count = (b * (s - 1)) as f64;
+    let mut l_pred = 0.0f64;
+    let mut dlogits = vec![0.0f32; b * s * vocab];
+    for bi in 0..b {
+        for si in 0..s - 1 {
+            let r = bi * s + si;
+            let row = &logits[r * vocab..(r + 1) * vocab];
+            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+            let mut sum = 0.0f64;
+            for &v in row {
+                sum += ((v - mx) as f64).exp();
+            }
+            let tgt = tokens[bi * s + si + 1] as usize;
+            l_pred -= (row[tgt] - mx) as f64 - sum.ln();
+            let drow = &mut dlogits[r * vocab..(r + 1) * vocab];
+            for (j, dv) in drow.iter_mut().enumerate() {
+                let sm = ((row[j] - mx) as f64).exp() / sum;
+                let one = if j == tgt { 1.0 } else { 0.0 };
+                *dv = ((sm - one) / count) as f32;
+            }
+        }
+    }
+    l_pred /= count;
+    let lq = qctx.lq;
+    let loss = (l_pred + lam as f64 * lq) as f32;
+
+    // ---- backward ---------------------------------------------------------
+    let sites = qctx.tape.take().unwrap();
+    let inv = inv_smooth;
+    let dh_fin = matmul_t(&dlogits, b * s, vocab, lm_head);
+    let mut dx = match spec.norm {
+        NormKind::RmsPre => rmsnorm_bwd(&dh_fin, &x_final, b * s, d,
+                                        &params.get("lnf_g")?.data),
+        NormKind::LnPost => layernorm_bwd(&dh_fin, &x_final, b * s, d,
+                                          &params.get("lnf_g")?.data),
+    };
+
+    let mut d_pkv = vec![0.0f64; prefix_kv.data.len()];
+    let inv_sqrt = 1.0 / (dh as f64).sqrt();
+    for l in (0..spec.n_layers).rev() {
+        let t = &tape[l];
+        let p = &t.p;
+        let (s0, s1, s2, s3) = (&sites[4 * l], &sites[4 * l + 1],
+                                &sites[4 * l + 2], &sites[4 * l + 3]);
+        let (mut dx_mid, dmlp_out);
+        if pre {
+            dx_mid = dx.clone();
+            dmlp_out = dx;
+        } else {
+            let d2 = layernorm_bwd(&dx, &t.pre_ln2, b * s, d, &p.ln2_g.data);
+            dx_mid = d2.clone();
+            dmlp_out = d2;
+        }
+        let dhidden_q = matmul_t(&dmlp_out, b * s, d, p.wd);
+        let dhidden = site_bwd(inv, d, s3, &dhidden_q, lam);
+        let dm_in = match spec.act {
+            ActKind::Swiglu => {
+                let mut dga = vec![0.0f32; t.ga.len()];
+                let mut dub = vec![0.0f32; t.ub.len()];
+                for i in 0..t.ga.len() {
+                    dga[i] = dhidden[i] * t.ub[i] * silu_grad(t.ga[i]);
+                    dub[i] = dhidden[i] * silu(t.ga[i]);
+                }
+                let a = matmul_t(&dga, b * s, spec.d_ff, p.wg.unwrap());
+                let u = matmul_t(&dub, b * s, spec.d_ff, p.wu);
+                a.iter().zip(&u).map(|(&x1, &x2)| x1 + x2).collect::<Vec<_>>()
+            }
+            ActKind::Relu => {
+                let dga: Vec<f32> = dhidden
+                    .iter()
+                    .zip(&t.ga)
+                    .map(|(&dv, &a)| if a > 0.0 { dv } else { 0.0 })
+                    .collect();
+                matmul_t(&dga, b * s, spec.d_ff, p.wu)
+            }
+            ActKind::Gelu => {
+                let dga: Vec<f32> = dhidden
+                    .iter()
+                    .zip(&t.ga)
+                    .map(|(&dv, &a)| dv * gelu_grad(a))
+                    .collect();
+                matmul_t(&dga, b * s, spec.d_ff, p.wu)
+            }
+        };
+        let dh2 = site_bwd(inv, d, s2, &dm_in, lam);
+        let dattn_out;
+        if pre {
+            let dxm2 = rmsnorm_bwd(&dh2, &t.x_mid, b * s, d, &p.ln2_g.data);
+            for (a, &v) in dx_mid.iter_mut().zip(&dxm2) {
+                *a += v;
+            }
+            dattn_out = dx_mid.clone();
+            dx = dx_mid;
+        } else {
+            for (a, &v) in dx_mid.iter_mut().zip(&dh2) {
+                *a += v;
+            }
+            let d1 = layernorm_bwd(&dx_mid, &t.pre_ln1, b * s, d,
+                                   &p.ln1_g.data);
+            dattn_out = d1.clone();
+            dx = d1;
+        }
+
+        // attention backward
+        let do_q = matmul_t(&dattn_out, b * s, d, p.wo);
+        let do_flat = site_bwd(inv, d, s1, &do_q, lam);
+        let dout = to_heads(&do_flat, b, s, hq, dh); // [b, hq, s, dh]
+        let mut dq = vec![0.0f32; b * hq * s * dh];
+        let mut dkf = vec![0.0f64; b * hkv * skv * dh];
+        let mut dvf = vec![0.0f64; b * hkv * skv * dh];
+        let mut dp_row = vec![0.0f64; skv];
+        let mut dlog = vec![0.0f64; skv];
+        for bi in 0..b {
+            for h in 0..hq {
+                let kh = h / g;
+                let kfb = &t.kf[((bi * hkv + kh) * skv) * dh
+                    ..((bi * hkv + kh) * skv + skv) * dh];
+                let vfb = &t.vf[((bi * hkv + kh) * skv) * dh
+                    ..((bi * hkv + kh) * skv + skv) * dh];
+                for i in 0..s {
+                    let prow = &t.probs[((bi * hq + h) * s + i) * skv
+                        ..((bi * hq + h) * s + i) * skv + skv];
+                    let dorow = &dout[((bi * hq + h) * s + i) * dh
+                        ..((bi * hq + h) * s + i) * dh + dh];
+                    let mut dot_pp = 0.0f64;
+                    for j in 0..skv {
+                        let mut acc = 0.0f64;
+                        for dd in 0..dh {
+                            acc += dorow[dd] as f64 * vfb[j * dh + dd] as f64;
+                        }
+                        dp_row[j] = acc;
+                        dot_pp += acc * prow[j] as f64;
+                        if prow[j] != 0.0 {
+                            let pj = prow[j] as f64;
+                            for dd in 0..dh {
+                                dvf[((bi * hkv + kh) * skv + j) * dh + dd] +=
+                                    pj * dorow[dd] as f64;
+                            }
+                        }
+                    }
+                    for j in 0..skv {
+                        dlog[j] = prow[j] as f64 * (dp_row[j] - dot_pp);
+                    }
+                    let qrow = &t.q[((bi * hq + h) * s + i) * dh
+                        ..((bi * hq + h) * s + i) * dh + dh];
+                    let dqrow = &mut dq[((bi * hq + h) * s + i) * dh
+                        ..((bi * hq + h) * s + i) * dh + dh];
+                    for j in 0..skv {
+                        if dlog[j] == 0.0 {
+                            continue;
+                        }
+                        let w = dlog[j] * inv_sqrt;
+                        for dd in 0..dh {
+                            dqrow[dd] =
+                                (dqrow[dd] as f64 + w * kfb[j * dh + dd] as f64)
+                                    as f32;
+                            dkf[((bi * hkv + kh) * skv + j) * dh + dd] +=
+                                w * qrow[dd] as f64;
+                        }
+                    }
+                }
+            }
+        }
+        // prefix slots -> d prefix_kv (summed over batch); token slots ->
+        // backward through rope into the projections
+        let mut dk = vec![0.0f32; b * hkv * s * dh];
+        let mut dv = vec![0.0f32; b * hkv * s * dh];
+        for bi in 0..b {
+            for kh in 0..hkv {
+                for j in 0..skv {
+                    let src = ((bi * hkv + kh) * skv + j) * dh;
+                    if j < m {
+                        let kdst = (((l * 2) * hkv + kh) * m + j) * dh;
+                        let vdst = (((l * 2 + 1) * hkv + kh) * m + j) * dh;
+                        for dd in 0..dh {
+                            d_pkv[kdst + dd] += dkf[src + dd];
+                            d_pkv[vdst + dd] += dvf[src + dd];
+                        }
+                    } else {
+                        let dst = ((bi * hkv + kh) * s + (j - m)) * dh;
+                        for dd in 0..dh {
+                            dk[dst + dd] = dkf[src + dd] as f32;
+                            dv[dst + dd] = dvf[src + dd] as f32;
+                        }
+                    }
+                }
+            }
+        }
+        if spec.pos == PosKind::Rope {
+            for bi in 0..b {
+                let pos = &positions[bi * s..(bi + 1) * s];
+                rope_rotate(&mut dq[bi * hq * s * dh..(bi + 1) * hq * s * dh],
+                            hq, s, dh, pos, spec.rope_theta, true);
+                rope_rotate(&mut dk[bi * hkv * s * dh..(bi + 1) * hkv * s * dh],
+                            hkv, s, dh, pos, spec.rope_theta, true);
+            }
+        }
+        let dq_flat = from_heads(&dq, b, s, hq, dh);
+        let dk_flat = from_heads(&dk, b, s, hkv, dh);
+        let dv_flat = from_heads(&dv, b, s, hkv, dh);
+        let mut da_in = matmul_t(&dq_flat, b * s, hq * dh, p.wq);
+        let dak = matmul_t(&dk_flat, b * s, hkv * dh, p.wk);
+        let dav = matmul_t(&dv_flat, b * s, hkv * dh, p.wv);
+        for i in 0..da_in.len() {
+            da_in[i] += dak[i] + dav[i];
+        }
+        let dh1 = site_bwd(inv, d, s0, &da_in, lam);
+        if pre {
+            let dx1 = rmsnorm_bwd(&dh1, &t.x_in, b * s, d, &p.ln1_g.data);
+            for (a, &v) in dx.iter_mut().zip(&dx1) {
+                *a += v;
+            }
+        } else {
+            for (a, &v) in dx.iter_mut().zip(&dh1) {
+                *a += v;
+            }
+        }
+    }
+
+    // ---- Adam -------------------------------------------------------------
+    let t_f = step as f32 + 1.0;
+    let n = prefix_kv.data.len();
+    let mut m2 = vec![0.0f32; n];
+    let mut v2 = vec![0.0f32; n];
+    let mut pkv2 = vec![0.0f32; n];
+    let bc1 = 1.0 - b1.powf(t_f);
+    let bc2 = 1.0 - b2.powf(t_f);
+    for i in 0..n {
+        let gi = d_pkv[i] as f32;
+        m2[i] = b1 * adam_m.data[i] + (1.0 - b1) * gi;
+        v2[i] = b2 * adam_v.data[i] + (1.0 - b2) * gi * gi;
+        let mhat = m2[i] / bc1;
+        let vhat = v2[i] / bc2;
+        pkv2[i] = prefix_kv.data[i] - lr * mhat / (vhat.sqrt() + eps);
+    }
+    let shape = prefix_kv.shape.clone();
+    Ok((
+        Tensor::new(shape.clone(), pkv2),
+        Tensor::new(shape.clone(), m2),
+        Tensor::new(shape, v2),
+        loss,
+        lq as f32,
+    ))
+}

@@ -1,5 +1,6 @@
 //! Model metadata + weight bundle handling.
 
+pub mod forward;
 pub mod manifest;
 pub mod resident;
 pub mod session;

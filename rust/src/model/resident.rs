@@ -5,7 +5,9 @@
 //! `ranges`, the SmoothQuant `inv_smooth` scales, the cushion prefix KV,
 //! and (for the search scorer) the padded prefix tokens. The seed runtime
 //! re-uploaded all of them per call; this pool uploads each exactly once
-//! per (re)configuration and hands out shared `Rc<PjRtBuffer>` handles.
+//! per (re)configuration and hands out shared `Rc<DeviceBuf>` handles
+//! (backend-resident on PJRT *and* on the reference interpreter, where
+//! residency is host memory but the upload-once contract is identical).
 //!
 //! Invalidation rules (dirty-tracking is by construction — the Session
 //! setters are the only mutation paths and each invalidates exactly the
@@ -27,7 +29,7 @@ use std::rc::Rc;
 use std::sync::Mutex;
 
 use crate::runtime::literalx::HostValue;
-use crate::runtime::Client;
+use crate::runtime::{Client, DeviceBuf};
 
 use super::weights::Weights;
 
@@ -45,19 +47,19 @@ pub const KEY_WEIGHTS: &str = "weights";
 /// Upload-count key for the padded prefix-token buffer.
 pub const KEY_PREFIX_TOKENS: &str = "prefix_tokens";
 
-// Locking note: `Rc<PjRtBuffer>` makes the pool (like the rest of the
-// PJRT-touching types here) !Send/!Sync, so these Mutexes can never be
+// Locking note: `Rc<DeviceBuf>` makes the pool (like the rest of the
+// runtime-touching types here) !Send/!Sync, so these Mutexes can never be
 // contended — they are kept for consistency with the seed's idiom
 // (Session's old `weight_bufs: Mutex<..>`, Registry's compile cache) and
 // so that a future Rc->Arc swap (multi-engine scheduler) only has to
 // change the handle type, not the interior-mutability story.
 pub struct ResidentPool {
     client: Client,
-    weights: Mutex<Option<Vec<Rc<xla::PjRtBuffer>>>>,
-    single: Mutex<HashMap<&'static str, Rc<xla::PjRtBuffer>>>,
+    weights: Mutex<Option<Vec<Rc<DeviceBuf>>>>,
+    single: Mutex<HashMap<&'static str, Rc<DeviceBuf>>>,
     /// Content-keyed cache of the padded prefix-token vector (the greedy
     /// search scores thousands of candidate batches under one prefix).
-    tokens: Mutex<Option<(Vec<i32>, Rc<xla::PjRtBuffer>)>>,
+    tokens: Mutex<Option<(Vec<i32>, Rc<DeviceBuf>)>>,
     uploads: Mutex<HashMap<&'static str, u64>>,
 }
 
@@ -89,7 +91,7 @@ impl ResidentPool {
     // -- weight bundle ----------------------------------------------------
 
     /// The device-resident weight bundle, uploading on first use.
-    pub fn weight_buffers(&self, w: &Weights) -> crate::Result<Vec<Rc<xla::PjRtBuffer>>> {
+    pub fn weight_buffers(&self, w: &Weights) -> crate::Result<Vec<Rc<DeviceBuf>>> {
         let mut guard = self.weights.lock().unwrap();
         if guard.is_none() {
             let bufs = w
@@ -115,7 +117,7 @@ impl ResidentPool {
         &self,
         key: &'static str,
         make: impl FnOnce() -> HostValue,
-    ) -> crate::Result<Rc<xla::PjRtBuffer>> {
+    ) -> crate::Result<Rc<DeviceBuf>> {
         let mut guard = self.single.lock().unwrap();
         if let Some(b) = guard.get(key) {
             return Ok(b.clone());
@@ -135,7 +137,7 @@ impl ResidentPool {
 
     /// Resident buffer for a padded prefix-token vector; re-uploaded only
     /// when the tokens differ from the cached entry.
-    pub fn prefix_tokens(&self, padded: &[i32]) -> crate::Result<Rc<xla::PjRtBuffer>> {
+    pub fn prefix_tokens(&self, padded: &[i32]) -> crate::Result<Rc<DeviceBuf>> {
         let mut guard = self.tokens.lock().unwrap();
         if let Some((cached, buf)) = guard.as_ref() {
             if cached == padded {

@@ -61,8 +61,11 @@ pub struct StatsOut {
 }
 
 impl Session {
+    /// Load a variant from its artifact directory on the backend the
+    /// environment selects (`Client::auto`: CUSHION_BACKEND / PJRT
+    /// availability — see runtime::backend).
     pub fn load(variant: &str) -> crate::Result<Self> {
-        let client = Client::cpu()?;
+        let client = Client::auto()?;
         Self::load_with_client(variant, client)
     }
 
@@ -71,8 +74,26 @@ impl Session {
         let manifest = Manifest::load(&dir.join("manifest.json"))?;
         let weights = Weights::load(&dir.join("weights.bin"), &manifest)?;
         let corpus = Corpus::load(&dir.join("corpus.bin"))?;
+        Self::from_parts_at(manifest, weights, corpus, client, dir)
+    }
+
+    /// Assemble a session from in-memory parts — no artifact directory
+    /// at all. Graphs resolve to reference-interpreter programs (the
+    /// hermetic test path: testkit::tiny builds manifest/weights/corpus
+    /// from thin air).
+    pub fn from_parts(manifest: Manifest, weights: Weights, corpus: Corpus,
+                      client: Client) -> crate::Result<Self> {
+        let dir = fsutil::variant_dir(&manifest.variant);
+        Self::from_parts_at(manifest, weights, corpus, client, dir)
+    }
+
+    fn from_parts_at(manifest: Manifest, weights: Weights, corpus: Corpus,
+                     client: Client, dir: std::path::PathBuf)
+                     -> crate::Result<Self> {
         let pool = ResidentPool::new(client.clone());
         let registry = Registry::new(client, dir);
+        // every load path can fall back to the interpreter per-graph
+        registry.enable_interp(crate::runtime::interp::spec_for(&manifest)?);
         let n_sites = manifest.n_sites;
         let l = manifest.n_layers;
         let d = manifest.d_model;
@@ -154,8 +175,7 @@ impl Session {
         for v in extra {
             bufs.push(v.into_buffer(client)?);
         }
-        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().map(|b| b.as_ref()).collect();
-        exe.run_outputs_with(&refs, splitter)
+        client.backend().execute(&exe, &bufs, splitter)
     }
 
     /// Execute graph `name` with host args, fetching all outputs as f32
@@ -169,8 +189,7 @@ impl Session {
         for v in extra {
             bufs.push(std::rc::Rc::new(client.upload_host(v)?));
         }
-        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().map(|b| b.as_ref()).collect();
-        exe.run_outputs(&refs)?.into_tensors()
+        client.backend().execute(&exe, &bufs, None)?.into_tensors()
     }
 
     // -- pooled operand handles -------------------------------------------

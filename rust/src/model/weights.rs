@@ -54,6 +54,32 @@ impl Weights {
         Ok(Self { names, tensors, index })
     }
 
+    /// Assemble a bundle from in-memory tensors in manifest param order
+    /// (the hermetic test path — no weights.bin on disk).
+    pub fn from_tensors(manifest: &Manifest, tensors: Vec<Tensor>)
+                        -> crate::Result<Self> {
+        anyhow::ensure!(
+            tensors.len() == manifest.params.len(),
+            "got {} tensors, manifest expects {}",
+            tensors.len(),
+            manifest.params.len()
+        );
+        let mut names = Vec::with_capacity(tensors.len());
+        let mut index = HashMap::new();
+        for (spec, t) in manifest.params.iter().zip(&tensors) {
+            anyhow::ensure!(
+                t.shape == spec.shape,
+                "{}: shape {:?} != {:?}",
+                spec.name,
+                t.shape,
+                spec.shape
+            );
+            index.insert(spec.name.clone(), names.len());
+            names.push(spec.name.clone());
+        }
+        Ok(Self { names, tensors, index })
+    }
+
     pub fn load_variant(variant: &str, manifest: &Manifest) -> crate::Result<Self> {
         Self::load(
             &crate::util::fsutil::variant_dir(variant).join("weights.bin"),

@@ -1,0 +1,269 @@
+//! Execution-backend abstraction: one trait (`Backend`) with two
+//! implementations —
+//!
+//! * **PJRT** (`PjrtBackend`, `xla` cargo feature): uploads host tensors
+//!   to device buffers and executes AOT-compiled HLO artifacts, exactly
+//!   as the seed runtime did.
+//! * **Reference interpreter** (`RefBackend`, always available): a pure
+//!   Rust implementation where "device residency" is host memory
+//!   (`DeviceBuf::Host`) and graphs resolve to `runtime::interp` programs
+//!   that run the tiny-transformer forward pass directly on
+//!   `util::tensor::Tensor` (`model::forward`). No artifacts, no XLA
+//!   toolchain, bit-identical semantics to the lowered graphs within the
+//!   float budget pinned by `rust/tests/interp_parity.rs`.
+//!
+//! ## Selection rules (see also README "Backends")
+//!
+//! 1. `CUSHION_BACKEND=ref` (or `--backend ref` on the CLI, which sets
+//!    it) forces the interpreter.
+//! 2. `CUSHION_BACKEND=xla` (alias `pjrt`) forces PJRT; client
+//!    construction failure is a hard error.
+//! 3. Unset / `auto`: try PJRT, fall back to the interpreter with one
+//!    log line. The stub `xla` crate build (third_party/xla) always
+//!    lands here, so a toolchain-less checkout transparently runs on the
+//!    interpreter.
+//!
+//! Graph-level fallback is separate and finer-grained: even under a PJRT
+//! client, `runtime::registry` resolves any graph whose artifact is
+//! missing on disk to an interpreter program (see the registry docs for
+//! the resolution order), so a stale or partial artifact directory
+//! degrades per-graph instead of failing.
+//!
+//! The interpreter backend meters `runtime::transfer` exactly like PJRT
+//! — an upload or fetch models the host/device boundary crossing the
+//! real backend would pay — so residency invariants (ResidentPool upload
+//! counts, per-step byte budgets) stay observable hermetically.
+
+use std::rc::Rc;
+
+use super::literalx::{HostValue, IntTensor};
+use super::transfer;
+use crate::util::tensor::Tensor;
+
+/// A backend-resident value: what `Value::Device` wraps and what execute
+/// calls consume/produce. The PJRT arm only exists with the `xla`
+/// feature; the `Host` arm is the reference backend's residency (and is
+/// what a stale-artifact interpreter fallback produces under PJRT).
+pub enum DeviceBuf {
+    #[cfg(feature = "xla")]
+    Pjrt(xla::PjRtBuffer),
+    Host(HostValue),
+}
+
+impl DeviceBuf {
+    /// Element count when known host-side (None for PJRT buffers, whose
+    /// shape lives on device until fetched).
+    pub fn host_elems(&self) -> Option<usize> {
+        match self {
+            #[cfg(feature = "xla")]
+            DeviceBuf::Pjrt(_) => None,
+            DeviceBuf::Host(HostValue::F32(t)) => Some(t.data.len()),
+            DeviceBuf::Host(HostValue::I32(t)) => Some(t.data.len()),
+        }
+    }
+
+    /// Borrow the host value (reference backend residency).
+    pub fn as_host(&self) -> Option<&HostValue> {
+        match self {
+            DeviceBuf::Host(v) => Some(v),
+            #[cfg(feature = "xla")]
+            DeviceBuf::Pjrt(_) => None,
+        }
+    }
+
+    /// Bring this value to the host, metering the fetch.
+    pub fn fetch_f32(&self) -> crate::Result<Tensor> {
+        match self {
+            #[cfg(feature = "xla")]
+            DeviceBuf::Pjrt(b) => super::literalx::pjrt_fetch_f32(b),
+            DeviceBuf::Host(HostValue::F32(t)) => {
+                transfer::note_fetch(4 * t.data.len());
+                Ok(t.clone())
+            }
+            DeviceBuf::Host(HostValue::I32(_)) => {
+                anyhow::bail!("fetch_f32 on an i32 resident value")
+            }
+        }
+    }
+
+    /// Bring this value to the host as i32 ids, metering the fetch.
+    pub fn fetch_i32(&self) -> crate::Result<IntTensor> {
+        match self {
+            #[cfg(feature = "xla")]
+            DeviceBuf::Pjrt(b) => super::literalx::pjrt_fetch_i32(b),
+            DeviceBuf::Host(HostValue::I32(t)) => {
+                transfer::note_fetch(4 * t.data.len());
+                Ok(t.clone())
+            }
+            DeviceBuf::Host(HostValue::F32(_)) => {
+                anyhow::bail!("fetch_i32 on an f32 resident value")
+            }
+        }
+    }
+}
+
+/// The execution backend: upload host values into residency, fetch them
+/// back, and execute resolved programs (`runtime::Executable`). The
+/// `Client` handle wraps one of these behind `Rc<dyn Backend>` and is
+/// what the registry/session/engine thread around.
+pub trait Backend {
+    /// Short name for logs/metrics ("pjrt" | "ref").
+    fn name(&self) -> &'static str;
+
+    /// Whether this backend can load + execute compiled HLO artifacts
+    /// (drives the registry's resolution order).
+    fn compiles_artifacts(&self) -> bool;
+
+    /// Move a host value into backend residency (meters the upload).
+    fn upload(&self, v: &HostValue) -> crate::Result<DeviceBuf>;
+
+    /// Fetch a resident value to the host as f32 (meters the fetch).
+    fn fetch_f32(&self, b: &DeviceBuf) -> crate::Result<Tensor> {
+        b.fetch_f32()
+    }
+
+    /// Fetch a resident value to the host as i32 (meters the fetch).
+    fn fetch_i32(&self, b: &DeviceBuf) -> crate::Result<IntTensor> {
+        b.fetch_i32()
+    }
+
+    /// Execute a resolved program on resident operands; outputs stay in
+    /// runtime form (`literalx::Outputs`).
+    fn execute(
+        &self,
+        exe: &super::executable::Executable,
+        args: &[Rc<DeviceBuf>],
+        splitter: Option<&super::split::TupleSplitter>,
+    ) -> crate::Result<super::literalx::Outputs> {
+        exe.run_values(args, splitter)
+    }
+
+    /// Backend platform string (diagnostics).
+    fn platform(&self) -> String {
+        self.name().to_string()
+    }
+
+    fn device_count(&self) -> usize {
+        1
+    }
+
+    /// The raw PJRT client, when this backend has one (compilation of
+    /// artifacts and tuple-splitter programs needs it).
+    #[cfg(feature = "xla")]
+    fn pjrt(&self) -> Option<&std::sync::Arc<xla::PjRtClient>> {
+        None
+    }
+}
+
+/// The pure-Rust reference backend: residency is host memory and
+/// programs are `runtime::interp` interpreter ops.
+pub struct RefBackend;
+
+impl Backend for RefBackend {
+    fn name(&self) -> &'static str {
+        "ref"
+    }
+
+    fn compiles_artifacts(&self) -> bool {
+        false
+    }
+
+    fn upload(&self, v: &HostValue) -> crate::Result<DeviceBuf> {
+        let elems = match v {
+            HostValue::F32(t) => t.data.len(),
+            HostValue::I32(t) => t.data.len(),
+        };
+        transfer::note_upload(4 * elems);
+        Ok(DeviceBuf::Host(v.clone()))
+    }
+
+    fn device_count(&self) -> usize {
+        1
+    }
+}
+
+/// The PJRT CPU backend over the `xla` crate.
+#[cfg(feature = "xla")]
+pub struct PjrtBackend {
+    pub(crate) inner: std::sync::Arc<xla::PjRtClient>,
+}
+
+#[cfg(feature = "xla")]
+impl PjrtBackend {
+    pub fn cpu() -> crate::Result<Self> {
+        let inner = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { inner: std::sync::Arc::new(inner) })
+    }
+}
+
+#[cfg(feature = "xla")]
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn compiles_artifacts(&self) -> bool {
+        true
+    }
+
+    fn upload(&self, v: &HostValue) -> crate::Result<DeviceBuf> {
+        let buf = match v {
+            HostValue::F32(t) => {
+                transfer::note_upload(4 * t.data.len());
+                self.inner
+                    .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+                    .map_err(|e| anyhow::anyhow!("upload f32 {:?}: {e:?}", t.shape))?
+            }
+            HostValue::I32(t) => {
+                transfer::note_upload(4 * t.data.len());
+                self.inner
+                    .buffer_from_host_buffer::<i32>(&t.data, &t.shape, None)
+                    .map_err(|e| anyhow::anyhow!("upload i32 {:?}: {e:?}", t.shape))?
+            }
+        };
+        Ok(DeviceBuf::Pjrt(buf))
+    }
+
+    fn platform(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    fn device_count(&self) -> usize {
+        self.inner.device_count()
+    }
+
+    fn pjrt(&self) -> Option<&std::sync::Arc<xla::PjRtClient>> {
+        Some(&self.inner)
+    }
+}
+
+/// Which backend `Client::auto()` / the CLI should construct.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Auto,
+    Pjrt,
+    Reference,
+}
+
+impl BackendKind {
+    /// Parse a `--backend` / `CUSHION_BACKEND` value.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
+            "" | "auto" => BackendKind::Auto,
+            "xla" | "pjrt" => BackendKind::Pjrt,
+            "ref" | "interp" | "reference" => BackendKind::Reference,
+            other => anyhow::bail!(
+                "unknown backend '{other}' (auto | xla | ref)"
+            ),
+        })
+    }
+
+    /// The kind requested by `CUSHION_BACKEND` (Auto when unset).
+    pub fn from_env() -> crate::Result<Self> {
+        match std::env::var("CUSHION_BACKEND") {
+            Ok(v) => Self::parse(&v),
+            Err(_) => Ok(BackendKind::Auto),
+        }
+    }
+}

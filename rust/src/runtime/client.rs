@@ -1,68 +1,129 @@
-//! Thin wrapper over the PJRT CPU client.
+//! The runtime client: a cloneable handle over the active execution
+//! backend (`runtime::backend::Backend`) — PJRT when the `xla` feature
+//! is enabled and the native client comes up, the pure-Rust reference
+//! interpreter otherwise. All uploads go through here so the transfer
+//! counters and the `DeviceBuf` residency model are uniform across
+//! backends.
 
-use std::sync::Arc;
+use std::rc::Rc;
 
-use super::transfer;
+use super::backend::{Backend, BackendKind, DeviceBuf, RefBackend};
 use crate::util::tensor::Tensor;
 
-/// Shared PJRT client handle. `xla::PjRtClient` is internally
-/// reference-counted; we add an Arc so engines/replicas can clone freely.
+/// Shared backend handle. `Rc` (not `Arc`): the PJRT buffer types are
+/// single-threaded and every runtime structure above this is already
+/// per-thread (see model::resident's locking note).
 #[derive(Clone)]
 pub struct Client {
-    inner: Arc<xla::PjRtClient>,
+    backend: Rc<dyn Backend>,
 }
 
 impl Client {
+    /// The PJRT CPU backend. Errors when the `xla` feature is off or the
+    /// native client cannot be constructed (e.g. the vendored API stub).
+    #[cfg(feature = "xla")]
     pub fn cpu() -> crate::Result<Self> {
-        let inner = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Self { inner: Arc::new(inner) })
+        let b = super::backend::PjrtBackend::cpu()?;
+        Ok(Self { backend: Rc::new(b) })
     }
 
-    pub fn raw(&self) -> &xla::PjRtClient {
-        &self.inner
+    /// The PJRT CPU backend (unavailable in this build: no `xla` feature).
+    #[cfg(not(feature = "xla"))]
+    pub fn cpu() -> crate::Result<Self> {
+        anyhow::bail!(
+            "PJRT backend unavailable: built without the `xla` feature \
+             (use Client::reference() or CUSHION_BACKEND=ref)"
+        )
     }
 
-    pub fn platform(&self) -> String {
-        self.inner.platform_name()
+    /// The pure-Rust reference interpreter backend.
+    pub fn reference() -> Self {
+        Self { backend: Rc::new(RefBackend) }
     }
 
-    pub fn device_count(&self) -> usize {
-        self.inner.device_count()
+    /// Construct per the selection rules (backend.rs module docs):
+    /// honor `CUSHION_BACKEND`, else try PJRT and fall back to the
+    /// interpreter with one log line.
+    pub fn auto() -> crate::Result<Self> {
+        Self::of_kind(BackendKind::from_env()?)
     }
 
-    /// Upload an f32 host tensor to the device.
-    pub fn upload(&self, t: &Tensor) -> crate::Result<xla::PjRtBuffer> {
-        transfer::note_upload(4 * t.data.len());
-        self.inner
-            .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
-            .map_err(|e| anyhow::anyhow!("upload f32 {:?}: {e:?}", t.shape))
-    }
-
-    /// Upload either flavor of host value to the device.
-    pub fn upload_host(&self, v: &super::literalx::HostValue) -> crate::Result<xla::PjRtBuffer> {
-        use super::literalx::HostValue;
-        match v {
-            HostValue::F32(t) => self.upload(t),
-            HostValue::I32(t) => self.upload_i32(&t.data, &t.shape),
+    pub fn of_kind(kind: BackendKind) -> crate::Result<Self> {
+        match kind {
+            BackendKind::Reference => Ok(Self::reference()),
+            BackendKind::Pjrt => Self::cpu(),
+            BackendKind::Auto => match Self::cpu() {
+                Ok(c) => Ok(c),
+                Err(e) => {
+                    log::info!(
+                        "PJRT unavailable ({e:#}); using the reference \
+                         interpreter backend"
+                    );
+                    Ok(Self::reference())
+                }
+            },
         }
     }
 
-    /// Upload an i32 host tensor to the device.
-    pub fn upload_i32(&self, data: &[i32], shape: &[usize]) -> crate::Result<xla::PjRtBuffer> {
-        transfer::note_upload(4 * data.len());
-        self.inner
-            .buffer_from_host_buffer::<i32>(data, shape, None)
-            .map_err(|e| anyhow::anyhow!("upload i32 {shape:?}: {e:?}"))
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
+    }
+
+    /// Whether this client executes compiled HLO artifacts (false = the
+    /// reference interpreter, where graphs resolve to interp programs).
+    pub fn compiles_artifacts(&self) -> bool {
+        self.backend.compiles_artifacts()
+    }
+
+    pub fn is_reference(&self) -> bool {
+        !self.backend.compiles_artifacts()
+    }
+
+    pub fn platform(&self) -> String {
+        self.backend.platform()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.backend.device_count()
+    }
+
+    /// Upload an f32 host tensor into backend residency.
+    pub fn upload(&self, t: &Tensor) -> crate::Result<DeviceBuf> {
+        self.backend
+            .upload(&super::literalx::HostValue::F32(t.clone()))
+    }
+
+    /// Upload either flavor of host value.
+    pub fn upload_host(&self, v: &super::literalx::HostValue) -> crate::Result<DeviceBuf> {
+        self.backend.upload(v)
+    }
+
+    /// Upload an i32 host tensor.
+    pub fn upload_i32(&self, data: &[i32], shape: &[usize]) -> crate::Result<DeviceBuf> {
+        self.backend.upload(&super::literalx::HostValue::I32(
+            super::literalx::IntTensor::new(shape.to_vec(), data.to_vec()),
+        ))
     }
 
     /// Upload a literal as-is — the pass-through path for root-tuple
-    /// elements (e.g. the serving KV cache) that go straight back into the
-    /// next execute call without an f32 round-trip through `Tensor`.
-    pub fn upload_literal(&self, lit: &xla::Literal) -> crate::Result<xla::PjRtBuffer> {
-        transfer::note_upload(4 * super::literalx::literal_elems(lit));
-        self.inner
+    /// elements (e.g. the serving KV cache) that go straight back into
+    /// the next execute call without an f32 round-trip through `Tensor`.
+    #[cfg(feature = "xla")]
+    pub fn upload_literal(&self, lit: &xla::Literal) -> crate::Result<DeviceBuf> {
+        let raw = self.raw()?;
+        super::transfer::note_upload(4 * super::literalx::literal_elems(lit));
+        let buf = raw
             .buffer_from_host_literal(lit, None)
-            .map_err(|e| anyhow::anyhow!("upload literal: {e:?}"))
+            .map_err(|e| anyhow::anyhow!("upload literal: {e:?}"))?;
+        Ok(DeviceBuf::Pjrt(buf))
+    }
+
+    /// The raw PJRT client (artifact compilation, tuple splitters).
+    #[cfg(feature = "xla")]
+    pub fn raw(&self) -> crate::Result<&xla::PjRtClient> {
+        self.backend
+            .pjrt()
+            .map(|a| a.as_ref())
+            .ok_or_else(|| anyhow::anyhow!("not a PJRT-backed client"))
     }
 }

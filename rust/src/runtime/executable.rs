@@ -1,24 +1,41 @@
-//! A compiled artifact: HLO text -> XlaComputation -> PjRtLoadedExecutable,
-//! with buffer-level execution so large state stays on device.
+//! A resolved graph: either a compiled PJRT artifact (HLO text ->
+//! XlaComputation -> PjRtLoadedExecutable, `xla` feature) or a reference
+//! interpreter program (`runtime::interp`). Execution dispatches on the
+//! program form, so one `Session`/`Engine` can mix both — the registry
+//! resolves per graph, and a missing artifact degrades to the
+//! interpreter instead of failing.
 
 use std::path::Path;
+use std::rc::Rc;
 use std::time::Instant;
 
+use super::backend::DeviceBuf;
 use super::client::Client;
-use super::literalx::{self, HostValue, Outputs};
+use super::interp::InterpProgram;
+use super::literalx::{HostValue, Outputs};
 use crate::util::tensor::Tensor;
+
+/// The executable form of a graph.
+pub enum Program {
+    /// A compiled PJRT executable (the artifact path).
+    #[cfg(feature = "xla")]
+    Pjrt(xla::PjRtLoadedExecutable),
+    /// A reference-interpreter program (the hermetic path).
+    Interp(InterpProgram),
+}
 
 pub struct Executable {
     pub name: String,
     client: Client,
-    exe: xla::PjRtLoadedExecutable,
+    program: Program,
     /// Cumulative (calls, seconds) — feeds the coordinator metrics.
     pub calls: std::sync::atomic::AtomicU64,
     pub nanos: std::sync::atomic::AtomicU64,
 }
 
 impl Executable {
-    /// Load + compile an HLO-text artifact.
+    /// Load + compile an HLO-text artifact (PJRT clients only).
+    #[cfg(feature = "xla")]
     pub fn load(client: &Client, name: &str, path: &Path) -> crate::Result<Self> {
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(
@@ -28,71 +45,158 @@ impl Executable {
         .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = client
-            .raw()
+            .raw()?
             .compile(&comp)
             .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
         log::debug!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
-        Ok(Self {
+        Ok(Self::from_program(client, name, Program::Pjrt(exe)))
+    }
+
+    #[cfg(not(feature = "xla"))]
+    pub fn load(_client: &Client, name: &str, path: &Path) -> crate::Result<Self> {
+        anyhow::bail!(
+            "cannot load artifact {name} from {path:?}: built without the \
+             `xla` feature (the reference interpreter resolves graphs by \
+             name instead)"
+        )
+    }
+
+    /// Wrap a resolved program (the interpreter path goes through here).
+    pub fn from_program(client: &Client, name: &str, program: Program) -> Self {
+        Self {
             name: name.to_string(),
             client: client.clone(),
-            exe,
+            program,
             calls: 0.into(),
             nanos: 0.into(),
-        })
+        }
     }
 
     pub fn client(&self) -> &Client {
         &self.client
     }
 
-    /// Upload a host value to a device buffer.
-    pub fn upload(&self, v: &HostValue) -> crate::Result<xla::PjRtBuffer> {
+    /// Whether this graph executes on the reference interpreter.
+    pub fn is_interp(&self) -> bool {
+        matches!(self.program, Program::Interp(_))
+    }
+
+    /// Upload a host value into backend residency.
+    pub fn upload(&self, v: &HostValue) -> crate::Result<DeviceBuf> {
         self.client.upload_host(v)
     }
 
-    /// Execute on device buffers; returns one buffer per graph output.
+    /// Execute on raw PJRT buffers; returns one buffer per graph output
+    /// (the tuple-splitter building block).
+    #[cfg(feature = "xla")]
     pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> crate::Result<Vec<xla::PjRtBuffer>> {
+        let Program::Pjrt(exe) = &self.program else {
+            anyhow::bail!("{}: run_buffers on an interpreter program", self.name);
+        };
         let t0 = Instant::now();
-        let mut out = self
-            .exe
+        let mut out = exe
             .execute_b(args)
             .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.name))?;
+        self.note_call(t0);
+        anyhow::ensure!(!out.is_empty(), "no replica outputs from {}", self.name);
+        Ok(out.swap_remove(0))
+    }
+
+    fn note_call(&self, t0: Instant) {
         self.calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.nanos.fetch_add(
             t0.elapsed().as_nanos() as u64,
             std::sync::atomic::Ordering::Relaxed,
         );
-        anyhow::ensure!(!out.is_empty(), "no replica outputs from {}", self.name);
-        Ok(out.swap_remove(0))
     }
 
-    /// Execute on device buffers; outputs stay in runtime form so callers
-    /// fetch only what they need (see literalx::Outputs).
-    pub fn run_outputs(&self, args: &[&xla::PjRtBuffer]) -> crate::Result<Outputs> {
-        Outputs::from_execute(self.run_buffers(args)?)
-    }
-
-    /// Execute on device buffers, decomposing a tuple-shaped result into
-    /// per-output *device* buffers via `splitter` (runtime::split) — the
-    /// hot-path variant where pass-through state (the serving KV cache)
-    /// must never materialize on the host.
-    pub fn run_outputs_with(
+    /// Execute on resident operands; outputs stay in runtime form so
+    /// callers fetch only what they need (see literalx::Outputs). The
+    /// splitter (when given, PJRT only) decomposes a tuple-shaped result
+    /// into per-output *device* buffers — the hot-path variant where
+    /// pass-through state (the serving KV cache) must never materialize
+    /// on the host. Interpreter programs ignore it: their outputs are
+    /// already per-element.
+    pub fn run_values(
         &self,
-        args: &[&xla::PjRtBuffer],
-        splitter: Option<&crate::runtime::split::TupleSplitter>,
+        args: &[Rc<DeviceBuf>],
+        splitter: Option<&super::split::TupleSplitter>,
     ) -> crate::Result<Outputs> {
-        Outputs::from_execute_split(self.run_buffers(args)?, splitter)
+        match &self.program {
+            #[cfg(feature = "xla")]
+            Program::Pjrt(_) => {
+                // upload any host-resident operand (state produced by an
+                // interpreter-resolved graph in a mixed artifact dir) so
+                // per-graph degradation keeps serving
+                let mut uploaded: Vec<DeviceBuf> = Vec::new();
+                let mut slot: Vec<Option<usize>> = Vec::with_capacity(args.len());
+                for a in args {
+                    match a.as_ref() {
+                        DeviceBuf::Pjrt(_) => slot.push(None),
+                        DeviceBuf::Host(v) => {
+                            uploaded.push(self.client.upload_host(v)?);
+                            slot.push(Some(uploaded.len() - 1));
+                        }
+                    }
+                }
+                let mut refs = Vec::with_capacity(args.len());
+                for (a, ix) in args.iter().zip(&slot) {
+                    let buf = match ix {
+                        Some(i) => &uploaded[*i],
+                        None => a.as_ref(),
+                    };
+                    match buf {
+                        DeviceBuf::Pjrt(b) => refs.push(b),
+                        DeviceBuf::Host(_) => anyhow::bail!(
+                            "{}: upload did not produce a PJRT buffer",
+                            self.name
+                        ),
+                    }
+                }
+                Outputs::from_execute_split(self.run_buffers(&refs)?, splitter)
+            }
+            Program::Interp(ip) => {
+                let _ = splitter;
+                let t0 = Instant::now();
+                // host-ify operands: reference-backend residency is free;
+                // a PJRT-resident operand (mixed fallback) pays one fetch
+                let mut host: Vec<HostValue> = Vec::with_capacity(args.len());
+                for a in args {
+                    match a.as_ref() {
+                        DeviceBuf::Host(v) => host.push(v.clone()),
+                        #[cfg(feature = "xla")]
+                        DeviceBuf::Pjrt(b) => {
+                            // the element type is only known on device:
+                            // materialize the literal once, convert by
+                            // type, meter the single crossing
+                            let lit = b.to_literal_sync().map_err(|e| {
+                                anyhow::anyhow!("to_literal: {e:?}")
+                            })?;
+                            let hv = match super::literalx::literal_f32(&lit) {
+                                Ok(t) => HostValue::F32(t),
+                                Err(_) => HostValue::I32(
+                                    super::literalx::literal_i32(&lit)?,
+                                ),
+                            };
+                            super::transfer::note_fetch(4 * hv.elems());
+                            host.push(hv);
+                        }
+                    }
+                }
+                let outs = ip.execute(&host)?;
+                self.note_call(t0);
+                Ok(Outputs::from_host(outs))
+            }
+        }
     }
 
     /// Convenience: upload host args, execute, fetch all outputs as f32.
     pub fn run_host(&self, args: &[HostValue]) -> crate::Result<Vec<Tensor>> {
-        let bufs: Vec<xla::PjRtBuffer> = args
+        let bufs: Vec<Rc<DeviceBuf>> = args
             .iter()
-            .map(|a| self.upload(a))
+            .map(|a| Ok(Rc::new(self.upload(a)?)))
             .collect::<crate::Result<_>>()?;
-        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
-        let outs = self.run_buffers(&refs)?;
-        literalx::fetch_all_f32(outs)
+        self.run_values(&bufs, None)?.into_tensors()
     }
 
     pub fn mean_call_seconds(&self) -> f64 {

@@ -1,0 +1,376 @@
+//! Reference-interpreter programs: the hermetic execution path behind
+//! `runtime::backend`.
+//!
+//! An `InterpProgram` is the interpreter's counterpart of a compiled
+//! artifact: parsed from the same graph name the registry resolves
+//! (`<op>[_sampled]_<mode>[_b<bucket>][_pallas]`, see registry.rs), it
+//! takes the same operand list — the flat weight bundle in param_spec
+//! order followed by the graph-specific inputs — and produces the same
+//! outputs, computed by `model::forward` on host tensors. Bucketed
+//! prefill variants need no per-bucket programs: the interpreter reads
+//! the token-vector length from the argument itself.
+//!
+//! Parity with the lowered JAX graphs is pinned by the golden fixtures
+//! (python/tests/fixtures/interp/) via rust/tests/interp_parity.rs.
+
+use std::rc::Rc;
+
+use crate::model::forward::{self, Mode, ModelSpec, Params};
+use crate::model::manifest::Manifest;
+use crate::runtime::literalx::{HostValue, IntTensor};
+use crate::util::tensor::Tensor;
+
+/// The graph inventory the interpreter implements (graphs.py).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Fwd(Mode),
+    Stats,
+    ScoreLq,
+    PrefixKv,
+    TuneStep,
+    Prefill { mode: Mode, sampled: bool },
+    Decode { mode: Mode, sampled: bool },
+}
+
+/// A resolved interpreter program: the variant's architecture plus the
+/// op parsed from the graph name.
+pub struct InterpProgram {
+    pub spec: Rc<ModelSpec>,
+    pub op: Op,
+    name: String,
+}
+
+impl InterpProgram {
+    /// Parse a registry graph name into an interpreter op. Unknown names
+    /// (custom artifacts the interpreter has no implementation for)
+    /// return an error, which the registry surfaces as "no artifact and
+    /// no interpreter program".
+    pub fn parse(spec: Rc<ModelSpec>, name: &str) -> crate::Result<Self> {
+        let base = name.strip_suffix("_pallas").unwrap_or(name);
+        let op = if base == "stats" {
+            Op::Stats
+        } else if base == "score_lq" {
+            Op::ScoreLq
+        } else if base == "prefix_kv" {
+            Op::PrefixKv
+        } else if base == "tune_step" {
+            Op::TuneStep
+        } else if let Some(mode) = base.strip_prefix("fwd_") {
+            Op::Fwd(Mode::parse(mode)?)
+        } else if let Some(rest) = base.strip_prefix("prefill_sampled_") {
+            Op::Prefill { mode: Mode::parse(strip_bucket(rest))?, sampled: true }
+        } else if let Some(mode) = base.strip_prefix("prefill_") {
+            Op::Prefill { mode: Mode::parse(mode)?, sampled: false }
+        } else if let Some(rest) = base.strip_prefix("decode_sampled_") {
+            Op::Decode { mode: Mode::parse(strip_bucket(rest))?, sampled: true }
+        } else if let Some(mode) = base.strip_prefix("decode_") {
+            Op::Decode { mode: Mode::parse(mode)?, sampled: false }
+        } else {
+            anyhow::bail!("no interpreter program for graph '{name}'")
+        };
+        Ok(Self { spec, op, name: name.to_string() })
+    }
+
+    /// Whether `name` resolves to an interpreter op under `spec`
+    /// (registry `has` support, no allocation of the program).
+    pub fn resolvable(spec: &Rc<ModelSpec>, name: &str) -> bool {
+        Self::parse(spec.clone(), name).is_ok()
+    }
+
+    /// Execute on host operands: the weight bundle (param_spec order)
+    /// followed by the op's inputs, exactly the compiled graph's operand
+    /// list. Returns one host value per graph output.
+    pub fn execute(&self, args: &[HostValue]) -> crate::Result<Vec<HostValue>> {
+        let spec = self.spec.as_ref();
+        let n = spec.param_names.len();
+        anyhow::ensure!(
+            args.len() >= n,
+            "{}: {} operands given, the weight bundle alone is {n}",
+            self.name,
+            args.len()
+        );
+        let mut weights: Vec<&Tensor> = Vec::with_capacity(n);
+        for (i, a) in args[..n].iter().enumerate() {
+            match a {
+                HostValue::F32(t) => weights.push(t),
+                HostValue::I32(_) => anyhow::bail!(
+                    "{}: weight operand {i} ({}) is not f32",
+                    self.name,
+                    spec.param_names[i]
+                ),
+            }
+        }
+        let params = Params::new(spec, weights)?;
+        let x = Extractor { name: &self.name, args: &args[n..] };
+
+        match self.op {
+            Op::Fwd(mode) => {
+                x.arity(6)?;
+                let prefix_kv = x.f32(0, "prefix_kv")?;
+                let prefix_len = x.scalar_i32(1, "prefix_len")?;
+                let tokens = x.i32(2, "tokens")?;
+                let (b, s) = dims2(&tokens.shape, "tokens")?;
+                let logits = forward::run_fwd(
+                    spec, &params, mode, prefix_kv, prefix_len, &tokens.data,
+                    b, s, x.f32(3, "ranges")?, x.scalar_f32(4, "levels")?,
+                    x.f32(5, "inv_smooth")?,
+                )?;
+                Ok(vec![HostValue::F32(logits)])
+            }
+            Op::Stats => {
+                x.arity(3)?;
+                let prefix_kv = x.f32(0, "prefix_kv")?;
+                let prefix_len = x.scalar_i32(1, "prefix_len")?;
+                let tokens = x.i32(2, "tokens")?;
+                let (b, s) = dims2(&tokens.shape, "tokens")?;
+                let outs = forward::run_stats(spec, &params, prefix_kv,
+                                              prefix_len, &tokens.data, b, s)?;
+                Ok(outs.into_iter().map(HostValue::F32).collect())
+            }
+            Op::ScoreLq => {
+                x.arity(6)?;
+                let prefix_tokens = x.i32(0, "prefix_tokens")?;
+                let prefix_len = x.scalar_i32(1, "prefix_len")?;
+                let cands = x.i32(2, "cands")?;
+                let text = x.i32(3, "text")?;
+                let lq = forward::run_score(
+                    spec, &params, &prefix_tokens.data, prefix_len,
+                    &cands.data, &text.data, x.scalar_f32(4, "levels")?,
+                    x.f32(5, "inv_smooth")?,
+                )?;
+                Ok(vec![HostValue::F32(lq)])
+            }
+            Op::PrefixKv => {
+                x.arity(2)?;
+                let prefix_tokens = x.i32(0, "prefix_tokens")?;
+                let prefix_len = x.scalar_i32(1, "prefix_len")?;
+                let kv = forward::run_prefix_kv(spec, &params,
+                                                &prefix_tokens.data,
+                                                prefix_len)?;
+                Ok(vec![HostValue::F32(kv)])
+            }
+            Op::TuneStep => {
+                x.arity(10)?;
+                let tokens = x.i32(4, "tokens")?;
+                let (b, s) = dims2(&tokens.shape, "tokens")?;
+                let (pkv2, m2, v2, loss, lq) = forward::run_tune_step(
+                    spec,
+                    &params,
+                    x.f32(0, "prefix_kv")?,
+                    x.f32(1, "adam_m")?,
+                    x.f32(2, "adam_v")?,
+                    x.scalar_i32(3, "step")?,
+                    &tokens.data,
+                    b,
+                    s,
+                    x.scalar_i32(5, "prefix_len")?,
+                    x.scalar_f32(6, "lambda")?,
+                    x.scalar_f32(7, "lr")?,
+                    x.scalar_f32(8, "levels")?,
+                    x.f32(9, "inv_smooth")?,
+                )?;
+                Ok(vec![
+                    HostValue::F32(pkv2),
+                    HostValue::F32(m2),
+                    HostValue::F32(v2),
+                    HostValue::F32(Tensor::scalar(loss)),
+                    HostValue::F32(Tensor::scalar(lq)),
+                ])
+            }
+            Op::Prefill { mode, sampled } => {
+                x.arity(10)?;
+                let tokens = x.i32(4, "tokens")?;
+                let (cache, last) = forward::run_prefill(
+                    spec,
+                    &params,
+                    mode,
+                    x.f32(0, "cache")?,
+                    x.f32(1, "prefix_kv")?,
+                    x.scalar_i32(2, "cushion_len")?,
+                    x.scalar_i32(3, "slot")? as usize,
+                    &tokens.data,
+                    x.scalar_i32(5, "tok_len")?,
+                    x.f32(6, "ranges")?,
+                    x.scalar_f32(7, "levels")?,
+                    x.scalar_f32(8, "kv_levels")?,
+                    x.f32(9, "inv_smooth")?,
+                )?;
+                if sampled {
+                    let (ids, tops) =
+                        forward::select_tokens(&last.data, 1, spec.vocab);
+                    Ok(vec![
+                        HostValue::F32(cache),
+                        HostValue::I32(IntTensor::scalar(ids[0])),
+                        HostValue::F32(Tensor::scalar(tops[0])),
+                    ])
+                } else {
+                    Ok(vec![HostValue::F32(cache), HostValue::F32(last)])
+                }
+            }
+            Op::Decode { mode, sampled } => {
+                x.arity(8)?;
+                let lens = x.i32(1, "cache_tok_len")?;
+                let tokens = x.i32(3, "tokens")?;
+                let (cache, logits) = forward::run_decode(
+                    spec,
+                    &params,
+                    mode,
+                    x.f32(0, "cache")?,
+                    &lens.data,
+                    x.scalar_i32(2, "cushion_len")?,
+                    &tokens.data,
+                    x.f32(4, "ranges")?,
+                    x.scalar_f32(5, "levels")?,
+                    x.scalar_f32(6, "kv_levels")?,
+                    x.f32(7, "inv_smooth")?,
+                )?;
+                if sampled {
+                    let b = tokens.data.len();
+                    let (ids, tops) =
+                        forward::select_tokens(&logits.data, b, spec.vocab);
+                    Ok(vec![
+                        HostValue::F32(cache),
+                        HostValue::I32(IntTensor::vec(ids)),
+                        HostValue::F32(Tensor::new(vec![b], tops)),
+                    ])
+                } else {
+                    Ok(vec![HostValue::F32(cache), HostValue::F32(logits)])
+                }
+            }
+        }
+    }
+}
+
+/// `prefill_sampled_<mode>_b<bucket>` -> `<mode>` (the interpreter is
+/// length-polymorphic, the bucket is only part of the artifact name).
+fn strip_bucket(rest: &str) -> &str {
+    match rest.rfind("_b") {
+        Some(i) if rest[i + 2..].chars().all(|c| c.is_ascii_digit())
+            && i + 2 < rest.len() =>
+        {
+            &rest[..i]
+        }
+        _ => rest,
+    }
+}
+
+fn dims2(shape: &[usize], what: &str) -> crate::Result<(usize, usize)> {
+    anyhow::ensure!(shape.len() == 2, "{what}: expected rank 2, got {shape:?}");
+    Ok((shape[0], shape[1]))
+}
+
+/// Typed operand accessors with op-contextual errors.
+struct Extractor<'a> {
+    name: &'a str,
+    args: &'a [HostValue],
+}
+
+impl<'a> Extractor<'a> {
+    fn arity(&self, want: usize) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.args.len() == want,
+            "{}: expected {want} operands after the weights, got {}",
+            self.name,
+            self.args.len()
+        );
+        Ok(())
+    }
+
+    fn f32(&self, i: usize, what: &str) -> crate::Result<&'a Tensor> {
+        match self.args.get(i) {
+            Some(HostValue::F32(t)) => Ok(t),
+            Some(HostValue::I32(_)) => {
+                anyhow::bail!("{}: operand {what} is i32, expected f32", self.name)
+            }
+            None => anyhow::bail!("{}: operand {what} missing", self.name),
+        }
+    }
+
+    fn i32(&self, i: usize, what: &str) -> crate::Result<&'a IntTensor> {
+        match self.args.get(i) {
+            Some(HostValue::I32(t)) => Ok(t),
+            Some(HostValue::F32(_)) => {
+                anyhow::bail!("{}: operand {what} is f32, expected i32", self.name)
+            }
+            None => anyhow::bail!("{}: operand {what} missing", self.name),
+        }
+    }
+
+    fn scalar_f32(&self, i: usize, what: &str) -> crate::Result<f32> {
+        let t = self.f32(i, what)?;
+        anyhow::ensure!(t.data.len() == 1, "{}: {what} not a scalar", self.name);
+        Ok(t.data[0])
+    }
+
+    fn scalar_i32(&self, i: usize, what: &str) -> crate::Result<i32> {
+        let t = self.i32(i, what)?;
+        anyhow::ensure!(t.data.len() == 1, "{}: {what} not a scalar", self.name);
+        Ok(t.data[0])
+    }
+}
+
+/// Derive the interpreter spec for a variant (manifest + constants).
+pub fn spec_for(manifest: &Manifest) -> crate::Result<Rc<ModelSpec>> {
+    Ok(Rc::new(ModelSpec::from_manifest(manifest)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Rc<ModelSpec> {
+        let m = Manifest::parse(
+            r#"{"variant":"t","vocab":8,"d_model":4,"n_layers":1,"n_heads":1,
+             "n_kv_heads":1,"d_head":4,"d_ff":8,"norm":"rmsnorm_pre",
+             "act":"swiglu","pos":"rope","window":0,"n_sites":4,
+             "seq_len":8,"m_max":2,"cache_cap":10,"serve_batch":2,
+             "eval_batch":2,"score_batch":4,"score_text_len":6,
+             "tune_batch":2,"params":[],"graphs":[]}"#,
+        )
+        .unwrap();
+        spec_for(&m).unwrap()
+    }
+
+    #[test]
+    fn parses_graph_names() {
+        let s = spec();
+        for (name, op) in [
+            ("fwd_fp", Op::Fwd(Mode::Fp)),
+            ("fwd_ptk_pallas", Op::Fwd(Mode::Ptk)),
+            ("stats", Op::Stats),
+            ("score_lq", Op::ScoreLq),
+            ("prefix_kv", Op::PrefixKv),
+            ("tune_step", Op::TuneStep),
+            ("prefill_pts", Op::Prefill { mode: Mode::Pts, sampled: false }),
+            (
+                "prefill_sampled_fp_b32",
+                Op::Prefill { mode: Mode::Fp, sampled: true },
+            ),
+            (
+                "prefill_sampled_ptd_b128",
+                Op::Prefill { mode: Mode::Ptd, sampled: true },
+            ),
+            ("decode_fp", Op::Decode { mode: Mode::Fp, sampled: false }),
+            (
+                "decode_sampled_ptk",
+                Op::Decode { mode: Mode::Ptk, sampled: true },
+            ),
+        ] {
+            let p = InterpProgram::parse(s.clone(), name).unwrap();
+            assert_eq!(p.op, op, "{name}");
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_names() {
+        let s = spec();
+        for name in ["fwd_int3", "warmup", "prefill_", "decode_sampled_zzz"] {
+            assert!(
+                InterpProgram::parse(s.clone(), name).is_err(),
+                "{name} should not parse"
+            );
+            assert!(!InterpProgram::resolvable(&s, name));
+        }
+        assert!(InterpProgram::resolvable(&s, "decode_sampled_pts"));
+    }
+}

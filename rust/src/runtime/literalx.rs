@@ -1,11 +1,19 @@
-//! Host <-> PJRT marshalling: host tensors, the `Value` abstraction for
-//! graph operands (host data vs device-resident buffers), and the
-//! `Outputs` view that keeps execute results in runtime form so callers
-//! fetch only the elements they actually need on the host.
+//! Host <-> backend marshalling: host tensors, the `Value` abstraction
+//! for graph operands (host data vs backend-resident `DeviceBuf`s), and
+//! the `Outputs` view that keeps execute results in runtime form so
+//! callers fetch only the elements they actually need on the host.
+//!
+//! Everything here is backend-polymorphic: under PJRT a resident value
+//! is a device buffer and a fetch is a PCIe crossing; under the
+//! reference interpreter a resident value is host memory and the
+//! "crossing" is a copy — metered identically (`runtime::transfer`) so
+//! residency budgets mean the same thing on both backends.
 
 use std::rc::Rc;
 
+use super::backend::DeviceBuf;
 use super::client::Client;
+#[cfg(feature = "xla")]
 use super::split::TupleSplitter;
 use super::transfer;
 use crate::util::tensor::Tensor;
@@ -54,19 +62,26 @@ impl HostValue {
             HostValue::I32(t) => &t.shape,
         }
     }
+
+    pub fn elems(&self) -> usize {
+        match self {
+            HostValue::F32(t) => t.data.len(),
+            HostValue::I32(t) => t.data.len(),
+        }
+    }
 }
 
 /// A graph operand in runtime form: per-call host data that must be
-/// uploaded, or a device-resident buffer (weights, calibration ranges,
+/// uploaded, or a backend-resident buffer (weights, calibration ranges,
 /// smoothing scales, the cushion prefix KV, the serving KV cache) that is
-/// reused across calls without touching host memory. `Rc` because
-/// PjRtBuffer is not clonable but resident buffers are shared between the
+/// reused across calls without touching host memory. `Rc` because PJRT
+/// buffers are not clonable but resident buffers are shared between the
 /// pool, the engine, and in-flight argument lists (the PJRT handles are
 /// single-threaded anyway — see model::resident for the locking story).
 #[derive(Clone)]
 pub enum Value {
     Host(HostValue),
-    Device(Rc<xla::PjRtBuffer>),
+    Device(Rc<DeviceBuf>),
 }
 
 impl Value {
@@ -78,9 +93,9 @@ impl Value {
         Value::Host(HostValue::scalar_i32(v))
     }
 
-    /// Materialize as a device buffer: uploads `Host`, passes `Device`
+    /// Materialize as a resident buffer: uploads `Host`, passes `Device`
     /// through untouched (no transfer).
-    pub fn into_buffer(self, client: &Client) -> crate::Result<Rc<xla::PjRtBuffer>> {
+    pub fn into_buffer(self, client: &Client) -> crate::Result<Rc<DeviceBuf>> {
         match self {
             Value::Host(v) => Ok(Rc::new(client.upload_host(&v)?)),
             Value::Device(b) => Ok(b),
@@ -96,29 +111,48 @@ impl std::fmt::Debug for Value {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             Value::Host(h) => write!(f, "Value::Host({h:?})"),
-            Value::Device(_) => write!(f, "Value::Device(<PjRtBuffer>)"),
+            Value::Device(_) => write!(f, "Value::Device(<DeviceBuf>)"),
         }
     }
 }
 
-/// One output of an execute call, still in runtime form: a device buffer
-/// (PJRT returned per-output buffers), or an element literal of the
-/// fetched root tuple (xla_extension 0.5.1 cannot split the tuple
-/// on-device, so multi-output programs come back as one tuple literal —
-/// see `Outputs::from_execute`). A `Literal` element can be re-uploaded
-/// verbatim via `into_value` without converting through f32 host tensors.
+/// One output of an execute call, still in runtime form:
+///
+/// * `Device` — a PJRT buffer (per-output execute results, or one the
+///   tuple splitter decomposed on device).
+/// * `Literal` — an element literal of a fetched root tuple
+///   (xla_extension 0.5.1 cannot split the tuple on-device, so
+///   multi-output programs come back as one tuple literal — see
+///   `Outputs::from_execute`). Re-uploads verbatim via `into_value`
+///   without converting through f32 host tensors.
+/// * `Host` — a reference-interpreter output: conceptually resident on
+///   the backend; converting to a host tensor meters a fetch, while
+///   `into_value` keeps it resident for free.
 pub enum OutValue {
+    #[cfg(feature = "xla")]
     Device(xla::PjRtBuffer),
+    #[cfg(feature = "xla")]
     Literal(xla::Literal),
+    Host(HostValue),
 }
 
 impl OutValue {
-    /// Bring this output to the host as an f32 tensor. `Device` incurs a
-    /// fetch; `Literal` is already host-side and only converts.
+    /// Bring this output to the host as an f32 tensor. `Device` and
+    /// `Host` incur a (metered) fetch; `Literal` is already host-side
+    /// and only converts.
     pub fn to_tensor(&self) -> crate::Result<Tensor> {
         match self {
-            OutValue::Device(b) => fetch_f32(b),
+            #[cfg(feature = "xla")]
+            OutValue::Device(b) => pjrt_fetch_f32(b),
+            #[cfg(feature = "xla")]
             OutValue::Literal(l) => literal_f32(l),
+            OutValue::Host(HostValue::F32(t)) => {
+                transfer::note_fetch(4 * t.data.len());
+                Ok(t.clone())
+            }
+            OutValue::Host(HostValue::I32(_)) => {
+                anyhow::bail!("to_tensor on an i32 output (use to_int_tensor)")
+            }
         }
     }
 
@@ -127,17 +161,35 @@ impl OutValue {
     /// through here instead of [B, vocab] f32 logits.
     pub fn to_int_tensor(&self) -> crate::Result<IntTensor> {
         match self {
-            OutValue::Device(b) => fetch_i32(b),
+            #[cfg(feature = "xla")]
+            OutValue::Device(b) => pjrt_fetch_i32(b),
+            #[cfg(feature = "xla")]
             OutValue::Literal(l) => literal_i32(l),
+            OutValue::Host(HostValue::I32(t)) => {
+                transfer::note_fetch(4 * t.data.len());
+                Ok(t.clone())
+            }
+            OutValue::Host(HostValue::F32(_)) => {
+                anyhow::bail!("to_int_tensor on an f32 output")
+            }
         }
     }
 
-    /// Keep this output on device for the next call: `Device` is wrapped
-    /// as-is; `Literal` is uploaded without an f32 conversion.
+    /// Keep this output resident for the next call: `Device`/`Host` wrap
+    /// as-is (no transfer); `Literal` is uploaded without an f32
+    /// conversion.
     pub fn into_value(self, client: &Client) -> crate::Result<Value> {
         match self {
-            OutValue::Device(b) => Ok(Value::Device(Rc::new(b))),
-            OutValue::Literal(l) => Ok(Value::Device(Rc::new(client.upload_literal(&l)?))),
+            #[cfg(feature = "xla")]
+            OutValue::Device(b) => Ok(Value::Device(Rc::new(DeviceBuf::Pjrt(b)))),
+            #[cfg(feature = "xla")]
+            OutValue::Literal(l) => {
+                Ok(Value::Device(Rc::new(client.upload_literal(&l)?)))
+            }
+            OutValue::Host(v) => {
+                let _ = client;
+                Ok(Value::Device(Rc::new(DeviceBuf::Host(v))))
+            }
         }
     }
 }
@@ -150,6 +202,14 @@ pub struct Outputs {
 }
 
 impl Outputs {
+    /// Wrap reference-interpreter results. The values are conceptually
+    /// backend-resident — nothing is metered until a caller fetches.
+    pub fn from_host(vals: Vec<HostValue>) -> Outputs {
+        Outputs {
+            vals: vals.into_iter().map(|v| Some(OutValue::Host(v))).collect(),
+        }
+    }
+
     /// Wrap raw execute outputs, decomposing a root tuple on device when
     /// a `TupleSplitter` for the graph's output signature is supplied:
     /// every element stays a `Device` buffer and nothing crosses to the
@@ -157,6 +217,7 @@ impl Outputs {
     /// never materializes as a host literal between steps). Without a
     /// splitter, or if the split fails, this degrades to the host
     /// materialization of `from_execute`.
+    #[cfg(feature = "xla")]
     pub fn from_execute_split(
         bufs: Vec<xla::PjRtBuffer>,
         splitter: Option<&TupleSplitter>,
@@ -193,6 +254,7 @@ impl Outputs {
     /// element literals (the 0.5.1 wrapper offers no native on-device
     /// split — `runtime::split` works around that for signatures the
     /// caller declares; this is the fallback).
+    #[cfg(feature = "xla")]
     pub fn from_execute(bufs: Vec<xla::PjRtBuffer>) -> crate::Result<Outputs> {
         if bufs.len() == 1 {
             let mut lit = bufs[0]
@@ -267,6 +329,7 @@ impl Outputs {
 }
 
 /// Element count of an array literal (0 for tuple shapes).
+#[cfg(feature = "xla")]
 pub(crate) fn literal_elems(lit: &xla::Literal) -> usize {
     lit.array_shape()
         .map(|s| s.dims().iter().map(|&d| d as usize).product())
@@ -274,7 +337,8 @@ pub(crate) fn literal_elems(lit: &xla::Literal) -> usize {
 }
 
 /// Download a PJRT output buffer into an f32 host tensor.
-pub fn fetch_f32(buf: &xla::PjRtBuffer) -> crate::Result<Tensor> {
+#[cfg(feature = "xla")]
+pub fn pjrt_fetch_f32(buf: &xla::PjRtBuffer) -> crate::Result<Tensor> {
     let lit = buf
         .to_literal_sync()
         .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
@@ -283,6 +347,7 @@ pub fn fetch_f32(buf: &xla::PjRtBuffer) -> crate::Result<Tensor> {
 }
 
 /// Literal -> f32 host tensor (host-side conversion, no device transfer).
+#[cfg(feature = "xla")]
 pub fn literal_f32(lit: &xla::Literal) -> crate::Result<Tensor> {
     let shape = lit
         .array_shape()
@@ -295,6 +360,7 @@ pub fn literal_f32(lit: &xla::Literal) -> crate::Result<Tensor> {
 }
 
 /// Literal -> i32 host tensor (host-side conversion, no device transfer).
+#[cfg(feature = "xla")]
 pub fn literal_i32(lit: &xla::Literal) -> crate::Result<IntTensor> {
     let shape = lit
         .array_shape()
@@ -306,20 +372,32 @@ pub fn literal_i32(lit: &xla::Literal) -> crate::Result<IntTensor> {
     Ok(IntTensor::new(dims, data))
 }
 
-/// Fetch all outputs of an execute call as f32 host tensors (the analysis
-/// path; the serving hot path uses `Outputs` and fetches selectively).
-pub fn fetch_all_f32(outs: Vec<xla::PjRtBuffer>) -> crate::Result<Vec<Tensor>> {
-    Outputs::from_execute(outs)?.into_tensors()
-}
-
 /// Download a PJRT output buffer into an i32 host tensor.
-pub fn fetch_i32(buf: &xla::PjRtBuffer) -> crate::Result<IntTensor> {
+#[cfg(feature = "xla")]
+pub fn pjrt_fetch_i32(buf: &xla::PjRtBuffer) -> crate::Result<IntTensor> {
     let lit = buf
         .to_literal_sync()
         .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
     let t = literal_i32(&lit)?;
     transfer::note_fetch(4 * t.data.len());
     Ok(t)
+}
+
+/// Fetch a resident value to the host (any backend).
+pub fn fetch_f32(buf: &DeviceBuf) -> crate::Result<Tensor> {
+    buf.fetch_f32()
+}
+
+/// Fetch a resident value to the host as i32 ids (any backend).
+pub fn fetch_i32(buf: &DeviceBuf) -> crate::Result<IntTensor> {
+    buf.fetch_i32()
+}
+
+/// Fetch all outputs of an execute call as f32 host tensors (the analysis
+/// path; the serving hot path uses `Outputs` and fetches selectively).
+#[cfg(feature = "xla")]
+pub fn fetch_all_f32(outs: Vec<xla::PjRtBuffer>) -> crate::Result<Vec<Tensor>> {
+    Outputs::from_execute(outs)?.into_tensors()
 }
 
 #[cfg(test)]
@@ -343,5 +421,28 @@ mod tests {
     fn value_scalar_constructors_are_host() {
         assert!(!Value::scalar_f32(1.0).is_device());
         assert!(!Value::scalar_i32(3).is_device());
+    }
+
+    #[test]
+    fn host_outputs_fetch_and_typecheck() {
+        let outs = Outputs::from_host(vec![
+            HostValue::F32(Tensor::new(vec![2], vec![1.0, 2.0])),
+            HostValue::I32(IntTensor::vec(vec![7, 8])),
+        ]);
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs.host_f32(0).unwrap().data, vec![1.0, 2.0]);
+        assert_eq!(outs.host_i32(1).unwrap().data, vec![7, 8]);
+        // fetching with the wrong element type is an error, not a cast
+        assert!(outs.host_i32(0).is_err());
+        assert!(outs.host_f32(1).is_err());
+    }
+
+    #[test]
+    fn host_outputs_take_then_refetch_errors() {
+        let mut outs = Outputs::from_host(vec![HostValue::scalar_f32(5.0)]);
+        let v = outs.take(0).unwrap();
+        assert!(matches!(v, OutValue::Host(HostValue::F32(_))));
+        assert!(outs.take(0).is_err());
+        assert!(outs.host_f32(0).is_err());
     }
 }

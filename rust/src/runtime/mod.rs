@@ -1,26 +1,35 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile them on the CPU
-//! PJRT client, and execute them from the coordinator's hot path.
+//! Runtime: execute a variant's graphs on one of two backends behind the
+//! `Backend` trait — the PJRT client over AOT HLO-text artifacts (`xla`
+//! feature), or the pure-Rust reference interpreter (`interp` +
+//! `model::forward`), which needs no artifacts and no XLA toolchain.
 //!
-//! Flow (see /opt/xla-example and DESIGN.md §2):
+//! PJRT flow (see /opt/xla-example and DESIGN.md §2):
 //!   HLO text --HloModuleProto::from_text_file--> XlaComputation
 //!            --client.compile--> PjRtLoadedExecutable
 //!            --execute_b(device buffers)--> output buffers
 //!
-//! Everything big (weights, KV cache) lives as device buffers; only small
-//! outputs (token ids, logits, losses) are fetched to the host per call.
-//! Operands are `literalx::Value`s — per-call host data or device-resident
-//! buffers (model::resident::ResidentPool caches the loop-invariant ones);
-//! tuple-shaped results decompose into per-output device buffers via
-//! `split::TupleSplitter` so pass-through state never materializes on the
-//! host — and every host<->device crossing is metered by `transfer`.
+//! Everything big (weights, KV cache) lives as backend-resident
+//! `DeviceBuf`s; only small outputs (token ids, logits, losses) are
+//! fetched to the host per call. Operands are `literalx::Value`s —
+//! per-call host data or resident buffers (model::resident::ResidentPool
+//! caches the loop-invariant ones); on PJRT, tuple-shaped results
+//! decompose into per-output device buffers via `split::TupleSplitter`
+//! so pass-through state never materializes on the host — and every
+//! host<->device crossing is metered by `transfer` on both backends.
+//!
+//! Backend selection and the per-graph interpreter fallback are
+//! documented in `backend` and `registry` respectively.
 
+pub mod backend;
 pub mod client;
 pub mod executable;
+pub mod interp;
 pub mod literalx;
 pub mod registry;
 pub mod split;
 pub mod transfer;
 
+pub use backend::{Backend, BackendKind, DeviceBuf};
 pub use client::Client;
 pub use executable::Executable;
 pub use literalx::{HostValue, IntTensor, OutValue, Outputs, Value};

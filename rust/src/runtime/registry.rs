@@ -1,4 +1,4 @@
-//! Artifact registry: lazily compiles a variant's graphs by name.
+//! Artifact registry: resolves a variant's graphs by name, lazily.
 //!
 //! ## Graph-variant naming scheme
 //!
@@ -20,55 +20,151 @@
 //! `fwd_ptk_pallas` (Pallas-kernel eval build). The logits-emitting base
 //! graphs (`decode_pts`, `prefill_pts`) remain the parity/fallback path
 //! for artifacts produced before a variant existed.
+//!
+//! ## Resolution order (interpreter fallback)
+//!
+//! `get(name)` resolves, in order:
+//!
+//! 1. **Compiled artifact** — when the client's backend executes
+//!    artifacts (PJRT) *and* `<name>.hlo.txt` exists in the variant
+//!    directory: compile and cache it (the seed behavior).
+//! 2. **Interpreter program** — when a model spec has been installed
+//!    (`enable_interp`, done by `Session::load*`): parse the name into a
+//!    `runtime::interp` op and run it on the reference interpreter. This
+//!    is the *only* path on the `ref` backend, and the per-graph
+//!    degradation path on PJRT when an artifact is missing (stale or
+//!    partially regenerated artifact dirs keep serving).
+//! 3. Error naming both failures.
+//!
+//! `has(name)` answers "would `get` succeed" under the same order, so
+//! engine feature probes (`decode_sampled_*` availability, prefill
+//! buckets) automatically see the interpreter's full inventory on the
+//! reference backend.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::Mutex;
+use std::rc::Rc;
 use std::sync::Arc;
+use std::sync::Mutex;
 
 use super::client::Client;
-use super::executable::Executable;
+use super::executable::{Executable, Program};
+use super::interp::InterpProgram;
+use crate::model::forward::ModelSpec;
 
 pub struct Registry {
     client: Client,
     dir: PathBuf,
     cache: Mutex<HashMap<String, Arc<Executable>>>,
+    /// Installed by `Session::load*`; enables interpreter resolution.
+    interp: Mutex<Option<Rc<ModelSpec>>>,
 }
 
 impl Registry {
     pub fn new(client: Client, dir: PathBuf) -> Self {
-        Self { client, dir, cache: Mutex::new(HashMap::new()) }
+        Self {
+            client,
+            dir,
+            cache: Mutex::new(HashMap::new()),
+            interp: Mutex::new(None),
+        }
     }
 
     pub fn dir(&self) -> &PathBuf {
         &self.dir
     }
 
-    /// Whether the named graph's artifact exists on disk. Callers use
-    /// this (not just the manifest's graph list) to pick optional
-    /// variants — e.g. `decode_sampled_*` — so a stale manifest or a
-    /// partially regenerated artifact dir degrades to the base graphs
-    /// instead of failing at execute time.
-    pub fn has(&self, name: &str) -> bool {
-        self.dir.join(format!("{name}.hlo.txt")).exists()
+    /// Install the model spec that lets unresolved graph names fall back
+    /// to reference-interpreter programs.
+    pub fn enable_interp(&self, spec: Rc<ModelSpec>) {
+        *self.interp.lock().unwrap() = Some(spec);
     }
 
-    /// Get (compiling on first use) the named graph.
+    /// The interpreter spec, when installed.
+    pub fn interp_spec(&self) -> Option<Rc<ModelSpec>> {
+        self.interp.lock().unwrap().clone()
+    }
+
+    /// Whether the named graph's compiled artifact exists on disk (and
+    /// this client can execute it).
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.client.compiles_artifacts()
+            && self.dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    /// Whether `get(name)` would resolve — compiled artifact or
+    /// interpreter program.
+    pub fn has(&self, name: &str) -> bool {
+        if self.has_artifact(name) {
+            return true;
+        }
+        self.interp
+            .lock()
+            .unwrap()
+            .as_ref()
+            .is_some_and(|spec| InterpProgram::resolvable(spec, name))
+    }
+
+    /// Whether the *optional* graph `name` should be picked over its
+    /// `base` fallback: true when `name` resolves without downgrading
+    /// the execution class — it has a compiled artifact, or `base`
+    /// would itself run on the interpreter. Engine feature probes
+    /// (`decode_sampled_*`, bucketed prefill) go through this rather
+    /// than `has`, so a partially regenerated artifact dir keeps the
+    /// hot path on the compiled base graphs instead of silently moving
+    /// it onto the (much slower, host-resident) interpreter, while a
+    /// fully artifact-less checkout still gets the interpreter's full
+    /// inventory.
+    pub fn has_upgrade(&self, name: &str, base: &str) -> bool {
+        if self.has_artifact(name) {
+            return true;
+        }
+        !self.has_artifact(base) && self.has(name)
+    }
+
+    /// Get (resolving on first use) the named graph.
     pub fn get(&self, name: &str) -> crate::Result<Arc<Executable>> {
         if let Some(e) = self.cache.lock().unwrap().get(name) {
             return Ok(e.clone());
         }
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        anyhow::ensure!(
-            path.exists(),
-            "artifact {name} not found at {path:?}; run `make artifacts`"
-        );
-        let exe = Arc::new(Executable::load(&self.client, name, &path)?);
+        let exe = Arc::new(self.resolve(name)?);
         self.cache
             .lock()
             .unwrap()
             .insert(name.to_string(), exe.clone());
         Ok(exe)
+    }
+
+    fn resolve(&self, name: &str) -> crate::Result<Executable> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if self.client.compiles_artifacts() && path.exists() {
+            return Executable::load(&self.client, name, &path);
+        }
+        let spec = self.interp.lock().unwrap().clone();
+        if let Some(spec) = spec {
+            match InterpProgram::parse(spec, name) {
+                Ok(ip) => {
+                    if self.client.compiles_artifacts() {
+                        log::debug!(
+                            "artifact {name} not found at {path:?}; \
+                             resolving to the reference interpreter"
+                        );
+                    }
+                    return Ok(Executable::from_program(
+                        &self.client,
+                        name,
+                        Program::Interp(ip),
+                    ));
+                }
+                Err(e) => anyhow::bail!(
+                    "graph {name}: no artifact at {path:?} and no \
+                     interpreter program ({e:#}); run `make artifacts`"
+                ),
+            }
+        }
+        anyhow::bail!(
+            "artifact {name} not found at {path:?}; run `make artifacts`"
+        )
     }
 
     pub fn client(&self) -> &Client {

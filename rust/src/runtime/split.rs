@@ -32,6 +32,12 @@
 //! materialization path (`Outputs::from_execute` without a splitter) and
 //! the system behaves exactly like the seed.
 
+//! Feature note: splitter *construction* requires a PJRT client (`xla`
+//! feature); the shape declarations (`OutSpec`, `DType`) and the HLO
+//! text synthesis stay available in hermetic builds, where the engine
+//! simply never constructs a splitter (interpreter outputs are already
+//! per-element).
+
 use super::client::Client;
 use super::executable::Executable;
 
@@ -108,11 +114,21 @@ pub struct TupleSplitter {
 }
 
 impl TupleSplitter {
-    /// Compile the per-element extractors for `spec`. Errors (the HLO
-    /// parser or PJRT rejecting tuple parameters) leave the caller on
-    /// the host-materialization fallback — never fatal.
+    /// Compile the per-element extractors for `spec`. Errors (no PJRT
+    /// client, the HLO parser or PJRT rejecting tuple parameters) leave
+    /// the caller on the host-materialization fallback — never fatal.
+    #[cfg(not(feature = "xla"))]
+    pub fn new(_client: &Client, _spec: &[OutSpec]) -> crate::Result<Self> {
+        anyhow::bail!("tuple splitter requires the `xla` feature")
+    }
+
+    #[cfg(feature = "xla")]
     pub fn new(client: &Client, spec: &[OutSpec]) -> crate::Result<Self> {
         anyhow::ensure!(spec.len() > 1, "splitter needs a multi-output spec");
+        anyhow::ensure!(
+            client.compiles_artifacts(),
+            "tuple splitter requires a PJRT client"
+        );
         // pid + process-wide counter: several engines (or parallel
         // tests) building splitters concurrently must never write the
         // same scratch path, or one would compile the other's signature.
@@ -163,6 +179,7 @@ impl TupleSplitter {
 
     /// Decompose a tuple-shaped result buffer into per-element device
     /// buffers. Pure device-side: no transfer counters move.
+    #[cfg(feature = "xla")]
     pub fn split(&self, tuple: &xla::PjRtBuffer) -> crate::Result<Vec<xla::PjRtBuffer>> {
         let mut out = Vec::with_capacity(self.parts.len());
         for (i, part) in self.parts.iter().enumerate() {

@@ -1,3 +1,5 @@
-//! Testing substrates (the offline vendor has no proptest).
+//! Testing substrates: a property-testing harness (the offline vendor
+//! has no proptest) and an artifact-free tiny model for hermetic tests.
 
 pub mod prop;
+pub mod tiny;

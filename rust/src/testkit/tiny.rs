@@ -1,0 +1,254 @@
+//! An artifact-free tiny model: manifest, deterministic random weights,
+//! and a synwiki corpus, assembled fully in memory so hermetic tests
+//! (rust/tests/hermetic_serve.rs) and examples can build a working
+//! `Session` on the reference backend with **no artifact directory** and
+//! no XLA toolchain.
+//!
+//! The dimensions mirror the golden-fixture mini configs
+//! (python/tests/conftest.py::mini_configs) so anything validated by
+//! interp_parity.rs is exercised at the same scale here.
+
+use crate::data::corpus::{Corpus, Split};
+use crate::data::grammar::{self, corpus_split};
+use crate::model::manifest::Manifest;
+use crate::model::session::Session;
+use crate::model::weights::Weights;
+use crate::runtime::Client;
+use crate::util::prng::SplitMix64;
+use crate::util::tensor::Tensor;
+
+/// Dimensions of the in-memory tiny model.
+#[derive(Clone, Debug)]
+pub struct TinyCfg {
+    pub variant: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub norm: &'static str,
+    pub act: &'static str,
+    pub pos: &'static str,
+    pub window: usize,
+    pub seq_len: usize,
+    pub m_max: usize,
+    pub serve_batch: usize,
+    pub eval_batch: usize,
+    pub score_batch: usize,
+    pub score_text_len: usize,
+    pub seed: u64,
+}
+
+impl Default for TinyCfg {
+    fn default() -> Self {
+        TinyCfg {
+            variant: "tiny-hermetic".to_string(),
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            d_head: 16,
+            d_ff: 48,
+            norm: "rmsnorm_pre",
+            act: "swiglu",
+            pos: "rope",
+            window: 0,
+            seq_len: 16,
+            m_max: 4,
+            serve_batch: 2,
+            eval_batch: 2,
+            score_batch: 8,
+            score_text_len: 12,
+            seed: 0x7157,
+        }
+    }
+}
+
+impl TinyCfg {
+    pub fn cache_cap(&self) -> usize {
+        self.m_max + self.seq_len
+    }
+
+    /// The (name, shape) weight spec in param_spec order
+    /// (python/compile/model.py::param_spec).
+    pub fn param_spec(&self) -> Vec<(String, Vec<usize>)> {
+        let (d, dh) = (self.d_model, self.d_head);
+        let (hq, hkv, f) = (self.n_heads, self.n_kv_heads, self.d_ff);
+        let ln = self.norm == "ln_post";
+        let mut spec = vec![("embed".to_string(), vec![self.vocab, d])];
+        if self.pos == "learned" {
+            spec.push(("pos_emb".to_string(), vec![self.cache_cap(), d]));
+        }
+        for l in 0..self.n_layers {
+            let p = |base: &str| format!("layer{l}.{base}");
+            spec.push((p("ln1_g"), vec![d]));
+            if ln {
+                spec.push((p("ln1_b"), vec![d]));
+            }
+            spec.push((p("wq"), vec![d, hq * dh]));
+            spec.push((p("wk"), vec![d, hkv * dh]));
+            spec.push((p("wv"), vec![d, hkv * dh]));
+            spec.push((p("wo"), vec![hq * dh, d]));
+            spec.push((p("ln2_g"), vec![d]));
+            if ln {
+                spec.push((p("ln2_b"), vec![d]));
+            }
+            if self.act == "swiglu" {
+                spec.push((p("wg"), vec![d, f]));
+            }
+            spec.push((p("wu"), vec![d, f]));
+            spec.push((p("wd"), vec![f, d]));
+        }
+        spec.push(("lnf_g".to_string(), vec![d]));
+        if ln {
+            spec.push(("lnf_b".to_string(), vec![d]));
+        }
+        spec.push(("lm_head".to_string(), vec![d, self.vocab]));
+        spec
+    }
+
+    pub fn manifest(&self) -> crate::Result<Manifest> {
+        let params: Vec<String> = self
+            .param_spec()
+            .iter()
+            .map(|(name, shape)| {
+                let dims: Vec<String> =
+                    shape.iter().map(usize::to_string).collect();
+                format!(
+                    r#"{{"name": "{name}", "shape": [{}]}}"#,
+                    dims.join(", ")
+                )
+            })
+            .collect();
+        Manifest::parse(&format!(
+            r#"{{
+              "variant": "{v}", "vocab": {vocab}, "d_model": {d},
+              "n_layers": {l}, "n_heads": {hq}, "n_kv_heads": {hkv},
+              "d_head": {dh}, "d_ff": {ff}, "norm": "{norm}",
+              "act": "{act}", "pos": "{pos}", "window": {w},
+              "n_sites": {sites}, "seq_len": {s},
+              "prefill_buckets": [{half}, {s}],
+              "m_max": {m}, "cache_cap": {cap}, "serve_batch": {sb},
+              "eval_batch": {eb}, "score_batch": {scb},
+              "score_text_len": {stl}, "tune_batch": {eb},
+              "params": [{params}], "graphs": []
+            }}"#,
+            v = self.variant,
+            vocab = self.vocab,
+            d = self.d_model,
+            l = self.n_layers,
+            hq = self.n_heads,
+            hkv = self.n_kv_heads,
+            dh = self.d_head,
+            ff = self.d_ff,
+            norm = self.norm,
+            act = self.act,
+            pos = self.pos,
+            w = self.window,
+            sites = self.n_layers * 4,
+            s = self.seq_len,
+            half = self.seq_len / 2,
+            m = self.m_max,
+            cap = self.cache_cap(),
+            sb = self.serve_batch,
+            eb = self.eval_batch,
+            scb = self.score_batch,
+            stl = self.score_text_len,
+            params = params.join(", ")
+        ))
+    }
+
+    /// Deterministic random weights (model.init_params conventions:
+    /// gains one, biases zero, embeddings 0.02 sigma, matrices
+    /// 1/sqrt(fan_in) sigma).
+    pub fn weights(&self, manifest: &Manifest) -> crate::Result<Weights> {
+        let mut rng = SplitMix64::new(self.seed);
+        let tensors: Vec<Tensor> = self
+            .param_spec()
+            .into_iter()
+            .map(|(name, shape)| {
+                let n: usize = shape.iter().product();
+                let data: Vec<f32> = if name.ends_with("_g") {
+                    vec![1.0; n]
+                } else if name.ends_with("_b") {
+                    vec![0.0; n]
+                } else {
+                    let sigma = if name == "embed" || name == "pos_emb" {
+                        0.02
+                    } else {
+                        1.0 / (shape[0] as f64).sqrt()
+                    };
+                    (0..n).map(|_| (sigma * gauss(&mut rng)) as f32).collect()
+                };
+                Tensor::new(shape, data)
+            })
+            .collect();
+        Weights::from_tensors(manifest, tensors)
+    }
+
+    /// A corpus with the splits the drivers expect (calib, heldout),
+    /// generated by the synwiki grammar at this vocab.
+    pub fn corpus(&self, n_seqs: usize) -> Corpus {
+        let mut corpus = Corpus::default();
+        for (name, stream) in [
+            ("calib", grammar::STREAM_CALIB),
+            ("heldout", grammar::STREAM_HELDOUT),
+        ] {
+            let seqs = corpus_split(self.vocab, n_seqs, self.seq_len, stream,
+                                    grammar::CORPUS_SEED);
+            let tokens: Vec<i32> = seqs.into_iter().flatten().collect();
+            corpus.splits.insert(
+                name.to_string(),
+                Split { n_seqs, seq_len: self.seq_len, tokens },
+            );
+        }
+        corpus
+    }
+
+    /// A fully in-memory session on the reference backend: no artifact
+    /// directory, no XLA.
+    pub fn session(&self) -> crate::Result<Session> {
+        let manifest = self.manifest()?;
+        let weights = self.weights(&manifest)?;
+        let corpus = self.corpus(8);
+        Session::from_parts(manifest, weights, corpus, Client::reference())
+    }
+}
+
+/// Standard normal via Box-Muller over the SplitMix64 stream.
+fn gauss(rng: &mut SplitMix64) -> f64 {
+    let u1 = rng.next_f64().max(1e-12);
+    let u2 = rng.next_f64();
+    (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_session_builds_without_artifacts() {
+        let s = TinyCfg::default().session().unwrap();
+        assert_eq!(s.manifest.vocab, 64);
+        assert!(s.registry.client().is_reference());
+        assert!(s.registry.has("decode_sampled_fp"), "interp inventory");
+        assert!(!s.registry.has_artifact("decode_sampled_fp"));
+        assert_eq!(s.corpus.split("calib").unwrap().seq_len, 16);
+    }
+
+    #[test]
+    fn tiny_weights_follow_init_conventions() {
+        let cfg = TinyCfg::default();
+        let m = cfg.manifest().unwrap();
+        let w = cfg.weights(&m).unwrap();
+        assert!(w.get("layer0.ln1_g").unwrap().data.iter().all(|&v| v == 1.0));
+        let emb = w.get("embed").unwrap();
+        assert!(emb.absmax() < 0.2, "embedding sigma should be small");
+        // deterministic across builds
+        let w2 = cfg.weights(&m).unwrap();
+        assert_eq!(w.get("embed").unwrap().data, w2.get("embed").unwrap().data);
+    }
+}

@@ -1,0 +1,42 @@
+#!/usr/bin/env bash
+# Hermetic pre-merge gate: build + test the crate with NO XLA toolchain,
+# no PjRt crate, and no compiled artifacts — everything runs on the
+# pure-Rust reference interpreter backend (README "Backends").
+#
+#   scripts/test_hermetic.sh            # from the repo root
+#
+# What runs:
+#   1. cargo fmt --check (advisory: reports divergence, does not gate —
+#      run `cargo fmt` before merging; the hermetic gate is the tests)
+#   2. cargo test --no-default-features --features ref
+#      - unit tests (incl. testkit::prop quantization properties)
+#      - rust/tests/interp_parity.rs  (interpreter vs committed JAX
+#        goldens, 1e-4 across all four quant modes)
+#      - rust/tests/hermetic_serve.rs (scheduler/streaming/search with
+#        no artifact directory)
+#
+# CUSHION_ARTIFACTS points at an empty scratch dir so a developer's
+# local `artifacts/` cannot leak into the hermetic run.
+
+set -u
+cd "$(dirname "$0")/.."
+
+if command -v cargo >/dev/null 2>&1 && cargo fmt --version >/dev/null 2>&1; then
+    echo "[hermetic] cargo fmt --check"
+    if ! cargo fmt --check; then
+        echo "[hermetic] warning: formatting divergence (run 'cargo fmt'); not gating"
+    fi
+fi
+
+scratch="$(mktemp -d)"
+trap 'rm -rf "$scratch"' EXIT
+export CUSHION_ARTIFACTS="$scratch/artifacts"
+export CUSHION_BACKEND=ref
+
+echo "[hermetic] cargo test --no-default-features --features ref"
+cargo test -q --no-default-features --features ref
+status=$?
+if [ $status -eq 0 ]; then
+    echo "[hermetic] OK — full suite passed with no artifacts and no XLA"
+fi
+exit $status
