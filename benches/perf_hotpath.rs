@@ -7,9 +7,12 @@
 //! reports the host<->device transfer traffic per iteration
 //! (runtime::transfer counters). Asserted invariants: loop-invariant
 //! operands (weights, ranges, inv_smooth, cushion prefix KV) upload
-//! exactly once per (re)configuration, and the default decode step moves
+//! exactly once per (re)configuration, the default decode step moves
 //! <= 64 KB/step combined across the host boundary (ISSUE 3 budget;
-//! steady state is ~100 B — tokens+lens up, [B] token ids down). Emits
+//! steady state is ~100 B — tokens+lens up, [B] token ids down), and an
+//! oversubscribed paged-KV pool (pool churn scenario: many short
+//! requests over a third-size block pool) completes everything via
+//! preemption/resume with zero rejections. Emits
 //! `BENCH_perf_hotpath.json` at the repo root so the perf trajectory is
 //! tracked across PRs — gate regressions with `cushiond bench-diff` /
 //! scripts/bench_diff.sh.
@@ -235,6 +238,40 @@ fn main() -> anyhow::Result<()> {
         sched.running_count()
     );
 
+    // ---- pool churn: oversubscribed paged KV pool ------------------------
+    // many short requests against a pool sized at a third of the default:
+    // the
+    // scheduler must admit by block availability and preempt/resume
+    // instead of rejecting; completion is asserted, end-to-end latency
+    // plus preemption/sharing gauges recorded.
+    let mut s_churn = Session::load_with_client(&variant, client.clone())?;
+    calibrate::calibrate_into(&mut s_churn, scheme.act_levels(), 1)?;
+    let mut churn_engine = Engine::new(s_churn, scheme)?;
+    churn_engine.set_pool_blocks(churn_engine.kv.total_blocks() / 3);
+    let churn_blocks = churn_engine.kv.total_blocks();
+    let mut churn_sched = Scheduler::new(churn_engine);
+    let churn_reqs = 24usize;
+    let (churn_t, churn_x) = time_with_xfer(0, 1, || {
+        for _ in 0..churn_reqs {
+            churn_sched.submit(prompt[..16].to_vec(), 48);
+        }
+        churn_sched.run_to_completion().unwrap();
+    });
+    row!("pool churn (24 reqs, third pool)", &churn_t, churn_x, 1);
+    let churn_sum = churn_sched.metrics.summary();
+    assert_eq!(
+        churn_sum.completed, churn_reqs,
+        "oversubscribed pool must complete everything via preemption"
+    );
+    assert_eq!(churn_sum.errored, 0, "paged admission must queue, not reject");
+    println!(
+        "[perf] pool churn: {churn_reqs} reqs over {churn_blocks} blocks, \
+         {} preemptions, peak pool util {:.0}%, sharing saved {} allocations",
+        churn_sum.preempted,
+        churn_sum.pool_peak_utilization() * 100.0,
+        churn_sum.pool_blocks_saved_peak,
+    );
+
     // marshalling cost: cache-sized host<->device round trip
     let m = &sched.engine.session.manifest;
     let cache_elems =
@@ -315,6 +352,16 @@ fn main() -> anyhow::Result<()> {
         format!(
             "{{\"errored\": {}, \"rejected\": {}, \"cancelled\": {}}}",
             sched.metrics.errored, sched.metrics.rejected, sched.metrics.cancelled
+        ),
+    ));
+    extras.push((
+        "kv_pool".to_string(),
+        format!(
+            "{{\"blocks\": {churn_blocks}, \"preempted\": {}, \
+              \"peak_utilization\": {:.2}, \"shared_saved_peak\": {}}}",
+            churn_sum.preempted,
+            churn_sum.pool_peak_utilization(),
+            churn_sum.pool_blocks_saved_peak,
         ),
     ));
     extras.push((

@@ -33,7 +33,7 @@ fn main() -> anyhow::Result<()> {
         &s, &SearchCfg { vocab_stride: stride, max_len: 6, ..Default::default() })?;
     let kv = s.compute_prefix_kv(&res.prefix)?;
     s.set_cushion(Cushion { tokens: res.prefix.clone(),
-                            len: res.prefix.len(), kv });
+                            len: res.prefix.len(), kv })?;
     let (ppl1, acc1) = eval_cell(&mut s, &scheme, true)?;
     table.row(vec!["+ Greedy-searched init.".into(), format!("{ppl1:.2}"),
                    format!("{acc1:.2}")]);
@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     let t0 = cushion::tune::tune_prefix(
         &s, &res.prefix, &TuneCfg { lambda: 0.0, ..Default::default() })?;
     s.set_cushion(Cushion { tokens: res.prefix.clone(),
-                            len: res.prefix.len(), kv: t0.kv });
+                            len: res.prefix.len(), kv: t0.kv })?;
     let (ppl2, acc2) = eval_cell(&mut s, &scheme, true)?;
     table.row(vec!["+ Prefix tuning".into(), format!("{ppl2:.2}"),
                    format!("{acc2:.2}")]);
@@ -50,7 +50,7 @@ fn main() -> anyhow::Result<()> {
     // + quantization-aware loss (the full method, lambda = 0.01)
     let t1 = cushion::tune::tune_prefix(&s, &res.prefix, &TuneCfg::default())?;
     s.set_cushion(Cushion { tokens: res.prefix.clone(),
-                            len: res.prefix.len(), kv: t1.kv });
+                            len: res.prefix.len(), kv: t1.kv })?;
     let (ppl3, acc3) = eval_cell(&mut s, &scheme, true)?;
     table.row(vec!["+ Quantization-aware loss".into(), format!("{ppl3:.2}"),
                    format!("{acc3:.2}")]);

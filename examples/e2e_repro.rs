@@ -66,7 +66,7 @@ fn main() -> anyhow::Result<()> {
         tokens: search.prefix.clone(),
         len: search.prefix.len(),
         kv: tuned.kv,
-    });
+    })?;
     cushion::save_cushion(&variant, "e2e", s.cushion().unwrap())?;
 
     // ---- final evaluation with the cushion ------------------------------

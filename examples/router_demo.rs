@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
     ] {
         let mut s = Session::load(&variant)?;
         if let Ok(c) = cushioncache::cushion::load_cushion(&variant, "default") {
-            s.set_cushion(c);
+            s.set_cushion(c)?;
         }
         if scheme.gran.needs_calibration() {
             calibrate::calibrate_into(&mut s, scheme.act_levels(), 2)?;

@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
     let mut session = Session::load(&variant)?;
     if let Ok(c) = cushioncache::cushion::load_cushion(&variant, "default") {
         println!("using stored cushion ({} tokens)", c.len);
-        session.set_cushion(c);
+        session.set_cushion(c)?;
     }
     if scheme.gran.needs_calibration() {
         calibrate::calibrate_into(&mut session, scheme.act_levels(), 4)?;

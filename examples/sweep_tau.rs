@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
             tokens: res.prefix.clone(),
             len: res.prefix.len(),
             kv,
-        });
+        })?;
         calibrate::calibrate_into(&mut s, scheme.act_levels(), 4)?;
         let ppl = perplexity(&s, &scheme, "heldout", 4)?;
         table.row(vec![

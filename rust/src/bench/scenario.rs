@@ -43,7 +43,7 @@ pub fn prepared(client: &Client, variant: &str, smooth: bool,
     }
     if with_cushion {
         let c = ensure_cushion(&mut s)?;
-        s.set_cushion(c);
+        s.set_cushion(c)?;
     }
     Ok(s)
 }

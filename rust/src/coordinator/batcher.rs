@@ -51,9 +51,19 @@ impl Running {
             return Some(FinishReason::MaxTokens);
         }
         if remaining_cache == 0 {
-            return Some(FinishReason::MaxTokens);
+            return Some(FinishReason::Length);
         }
         None
+    }
+
+    /// The token sequence a resume-prefill must process: the original
+    /// prompt plus everything generated so far (re-prefilling recomputes
+    /// the KV the preemption freed; the next decode token falls out of
+    /// the prefill's last position).
+    pub fn resume_tokens(&self) -> Vec<i32> {
+        let mut t = self.request.prompt.clone();
+        t.extend_from_slice(&self.generated);
+        t
     }
 
     /// Finalize with the real finish reason (from `should_stop`, or
@@ -74,10 +84,26 @@ impl Running {
     }
 }
 
-/// FIFO waiting queue.
+/// What admission should work on next: a fresh request or a preempted
+/// sequence to resume.
+#[derive(Debug)]
+pub enum Admit {
+    New(Request),
+    Resume(Running),
+}
+
+/// FIFO waiting queue plus the resume queue of preempted sequences.
+///
+/// Anti-starvation is age-based: `pop_next` always yields the earliest-
+/// *submitted* work across both queues, so a sequence the scheduler
+/// preempted (which is, by the youngest-victim policy, younger than
+/// every survivor) can never leapfrog an older fresh request, and a
+/// fresh request can never starve a long-waiting preempted one.
 #[derive(Debug, Default)]
 pub struct Batcher {
     waiting: VecDeque<Request>,
+    /// Preempted sequences awaiting re-prefill, oldest submission first.
+    resumes: VecDeque<Running>,
     next_id: RequestId,
 }
 
@@ -98,14 +124,47 @@ impl Batcher {
         self.waiting.push_back(r);
     }
 
+    /// Pop the oldest *fresh* request only — a test/diagnostic accessor.
+    /// Production admission must use `pop_next`, which is resume-aware:
+    /// draining via `pop` would starve preempted sequences forever.
     pub fn pop(&mut self) -> Option<Request> {
         self.waiting.pop_front()
+    }
+
+    /// The next admission candidate by submission age (see the struct
+    /// docs). Ties (same instant) prefer the resume — it already spent
+    /// scheduler work.
+    pub fn pop_next(&mut self) -> Option<Admit> {
+        let take_new = match (self.waiting.front(), self.resumes.front()) {
+            (Some(w), Some(r)) => {
+                (w.submitted, w.id) < (r.request.submitted, r.request.id)
+            }
+            (Some(_), None) => true,
+            (None, _) => false,
+        };
+        if take_new {
+            self.waiting.pop_front().map(Admit::New)
+        } else {
+            self.resumes.pop_front().map(Admit::Resume)
+        }
     }
 
     /// Return a popped request to the head of the queue (admission saw
     /// it but has no free slot yet; FIFO order is preserved).
     pub fn push_front(&mut self, r: Request) {
         self.waiting.push_front(r);
+    }
+
+    /// Queue a preempted sequence for resume, keeping the resume queue
+    /// ordered oldest-submission-first.
+    pub fn push_resume(&mut self, run: Running) {
+        let key = (run.request.submitted, run.request.id);
+        let pos = self
+            .resumes
+            .iter()
+            .position(|r| (r.request.submitted, r.request.id) > key)
+            .unwrap_or(self.resumes.len());
+        self.resumes.insert(pos, run);
     }
 
     /// Remove a still-queued request (client disconnected before its
@@ -115,8 +174,20 @@ impl Batcher {
         self.waiting.remove(pos)
     }
 
+    /// Remove a preempted sequence awaiting resume (cancellation).
+    pub fn remove_resume(&mut self, id: RequestId) -> Option<Running> {
+        let pos = self.resumes.iter().position(|r| r.request.id == id)?;
+        self.resumes.remove(pos)
+    }
+
+    /// Pending work items: fresh requests plus preempted sequences.
     pub fn waiting(&self) -> usize {
-        self.waiting.len()
+        self.waiting.len() + self.resumes.len()
+    }
+
+    /// Preempted sequences awaiting resume.
+    pub fn resume_count(&self) -> usize {
+        self.resumes.len()
     }
 }
 
@@ -163,7 +234,57 @@ mod tests {
 
         let mut r = Running::new(Request::new(3, vec![0], 50), 0);
         r.push_token(7);
-        assert_eq!(r.should_stop(0), Some(FinishReason::MaxTokens));
+        assert_eq!(r.should_stop(0), Some(FinishReason::Length));
+        assert_eq!(r.resume_tokens(), vec![0, 7], "prompt ++ generated");
+    }
+
+    #[test]
+    fn pop_next_is_age_ordered_across_queues() {
+        // distinct submission instants even on coarse monotonic clocks
+        let tick = || std::thread::sleep(std::time::Duration::from_millis(2));
+        let mut b = Batcher::new();
+        let old = b.submit(vec![1], 4); // oldest submission
+        tick();
+        let mid = b.submit(vec![2], 4);
+        // `mid` gets admitted, then preempted back into the resume queue
+        let mid_req = {
+            let _ = b.pop(); // old (pretend admitted elsewhere)
+            b.pop().unwrap()
+        };
+        tick();
+        let young = b.submit(vec![3], 4);
+        tick();
+        b.push_resume(Running::new(mid_req, 0));
+        b.push_front(Request::new(old, vec![1], 4)); // put old back… not aged
+        assert_eq!(b.waiting(), 3);
+        assert_eq!(b.resume_count(), 1);
+        // old's re-pushed Request has a *new* submitted instant, so the
+        // preempted `mid` (older submission) must come first
+        match b.pop_next().unwrap() {
+            Admit::Resume(r) => assert_eq!(r.request.id, mid),
+            Admit::New(r) => panic!("resume starved by {:?}", r.id),
+        }
+        match b.pop_next().unwrap() {
+            Admit::New(r) => assert_eq!(r.id, old),
+            Admit::Resume(_) => panic!("unexpected resume"),
+        }
+        match b.pop_next().unwrap() {
+            Admit::New(r) => assert_eq!(r.id, young),
+            Admit::Resume(_) => panic!("unexpected resume"),
+        }
+        assert!(b.pop_next().is_none());
+    }
+
+    #[test]
+    fn remove_resume_plucks_preempted() {
+        let mut b = Batcher::new();
+        let id = b.submit(vec![1], 4);
+        let req = b.pop().unwrap();
+        b.push_resume(Running::new(req, 0));
+        assert!(b.remove(id).is_none(), "not in the fresh queue");
+        assert_eq!(b.remove_resume(id).unwrap().request.id, id);
+        assert!(b.remove_resume(id).is_none());
+        assert_eq!(b.waiting(), 0);
     }
 
     #[test]

@@ -26,11 +26,30 @@
 //! `prefill_buckets`), so short prompts neither pad to `seq_len` nor pay
 //! a full-width forward.
 //!
-//! All three are independently degradable: missing sampled artifacts
+//! Since the paged-KV refactor (coordinator::kvpool) the logical cache
+//! is a block pool: the cushion prefix is stored once in a pinned shared
+//! block run and sequences hold refcounted block tables. The contiguous
+//! `[L, 2, B, Hkv, CAP, dh]` tensor the graphs consume is a per-batch
+//! *gather view* of that pool, materialized at engine setup and then
+//! carried functionally through the graphs exactly as before — so the
+//! device-residency story (and the per-step transfer budget) is
+//! unchanged. Execution modes:
+//!
+//! * default — device-resident gather view; the pool carries cushion
+//!   contents plus block accounting (sharing/eviction/preemption math).
+//! * `set_host_roundtrip(true)` — the seed's host round-trip, now also
+//!   *mirroring* every written KV row back into the owning sequence's
+//!   blocks, keeping pool contents authoritative (parity tests
+//!   cross-check the gather view against the pool).
+//! * `set_paged_attention(true)` — the native block-table path: decode
+//!   and prefill run the `*_paged_*` interpreter graphs straight over
+//!   the pool tensor + block tables, no contiguous view at all
+//!   (hermetic end-to-end paging tests).
+//!
+//! All paths are independently degradable: missing sampled artifacts
 //! fall back to the logits graphs + host argmax, a failed splitter falls
-//! back to host materialization, and `set_host_roundtrip(true)` restores
-//! the seed's full per-step host round-trip for parity tests
-//! (`cache_host()` fetches the cache for inspection in any mode).
+//! back to host materialization, and `cache_host()` fetches the
+//! contiguous view for inspection in any mode.
 
 use std::rc::Rc;
 
@@ -43,19 +62,36 @@ use crate::runtime::split::{OutSpec, TupleSplitter};
 use crate::runtime::DeviceBuf;
 use crate::util::tensor::Tensor;
 
-use super::kvcache::KvManager;
+use super::kvpool::PagedKv;
+
+/// Which pool mirror a cache store should perform (host-resident modes).
+enum Mirror {
+    /// A prefill wrote prompt positions of this slot.
+    Prefill(usize),
+    /// A decode step wrote one KV row per busy slot.
+    Decode,
+}
 
 pub struct Engine {
     pub session: Session,
     pub scheme: Scheme,
-    pub kv: KvManager,
-    /// The physical KV cache [L, 2, B, Hkv, CAP, dh]: host only at init /
-    /// after reset, a device value across prefill/decode steps.
+    pub kv: PagedKv,
+    /// The contiguous per-batch gather view [L, 2, B, Hkv, CAP, dh]:
+    /// host only at init / after reset, a device value across
+    /// prefill/decode steps (unused while `paged_attention` is on).
     cache: Value,
     /// Parity/debug knob: when set, the cache makes the seed's full
-    /// host round-trip (fetch to f32, re-upload next step) per step and
-    /// tuple splitting is bypassed.
+    /// host round-trip (fetch to f32, re-upload next step) per step,
+    /// tuple splitting is bypassed, and written KV rows mirror into the
+    /// block pool.
     host_roundtrip: bool,
+    /// Native block-table execution (`prefill_paged_*`/`decode_paged_*`
+    /// over the pool tensor) — the hermetic true-paging path. Set it on
+    /// a fresh engine, before any sequence runs.
+    paged_attention: bool,
+    /// Pool-size override (None = manifest/derived), kept for
+    /// `reset_cache`.
+    pool_blocks: Option<usize>,
     /// Use the `*_sampled_*` graphs (in-graph argmax) when present.
     device_sampling: bool,
     /// Use bucketed prefill graphs when present (off = full seq_len).
@@ -86,13 +122,15 @@ impl Engine {
     pub fn new(session: Session, scheme: Scheme) -> crate::Result<Self> {
         let m = &session.manifest;
         let cushion_len = session.cushion().map(|c| c.len).unwrap_or(0);
-        let kv = KvManager::new(m.serve_batch, m.m_max, m.cache_cap, cushion_len);
-        let cache = kv.initial_cache(
-            m.n_layers,
-            m.n_kv_heads,
-            m.d_head,
+        // the cushion KV is written once into the pool's pinned shared
+        // block run; the contiguous view below is gathered from it
+        let kv = PagedKv::for_manifest(
+            m,
             session.cushion().map(|c| &c.kv),
+            cushion_len,
+            None,
         );
+        let cache = kv.gather_view();
         let client = session.registry.client();
         let act_levels_buf = Rc::new(client.upload(&Tensor::scalar(scheme.act_levels()))?);
         let kv_levels_buf = Rc::new(client.upload(&Tensor::scalar(scheme.kv_levels()))?);
@@ -189,6 +227,8 @@ impl Engine {
             kv,
             cache: Value::Host(HostValue::F32(cache)),
             host_roundtrip: false,
+            paged_attention: false,
+            pool_blocks: None,
             prefill_bucketing: true,
             act_levels_buf,
             kv_levels_buf,
@@ -197,24 +237,48 @@ impl Engine {
         })
     }
 
-    /// Rebuild the cache with the session's (possibly new) cushion.
+    /// Rebuild the pool + view with the session's (possibly new)
+    /// cushion. Drops every live sequence and the prefix cache.
     pub fn reset_cache(&mut self) {
         let m = &self.session.manifest;
         let cushion_len = self.session.cushion().map(|c| c.len).unwrap_or(0);
-        self.kv = KvManager::new(m.serve_batch, m.m_max, m.cache_cap, cushion_len);
-        let cache = self.kv.initial_cache(
-            m.n_layers,
-            m.n_kv_heads,
-            m.d_head,
+        self.kv = PagedKv::for_manifest(
+            m,
             self.session.cushion().map(|c| &c.kv),
+            cushion_len,
+            self.pool_blocks,
         );
-        self.cache = Value::Host(HostValue::F32(cache));
+        self.cache = Value::Host(HostValue::F32(self.kv.gather_view()));
+    }
+
+    /// Override the KV pool size (blocks) and rebuild — the pool-churn /
+    /// preemption harness: a pool smaller than aggregate demand makes
+    /// the scheduler preempt instead of reject. Floored so one lane can
+    /// always reach `cache_cap`.
+    pub fn set_pool_blocks(&mut self, n_blocks: usize) {
+        self.pool_blocks = Some(n_blocks);
+        self.reset_cache();
     }
 
     /// Force the seed's per-step host round-trip of the cache (decode
-    /// parity tests); the device-resident path is the default.
+    /// parity tests); the device-resident path is the default. Also
+    /// mirrors written KV rows into the block pool, making pool contents
+    /// authoritative.
     pub fn set_host_roundtrip(&mut self, on: bool) {
         self.host_roundtrip = on;
+    }
+
+    /// Execute via the native block-table graphs (`*_paged_*`) over the
+    /// pool tensor — true paging end-to-end, no contiguous view. A
+    /// hermetic/reference-backend mode: enable it on a fresh engine
+    /// before any sequence runs (pool contents must be authoritative
+    /// from the start).
+    pub fn set_paged_attention(&mut self, on: bool) {
+        self.paged_attention = on;
+    }
+
+    pub fn paged_attention(&self) -> bool {
+        self.paged_attention
     }
 
     /// Toggle in-graph token selection (effective only when the variant
@@ -252,13 +316,26 @@ impl Engine {
         self.cache.clone()
     }
 
-    /// Store the cache output of a step per the residency mode.
-    fn store_cache(&mut self, out: OutValue) -> crate::Result<()> {
-        self.cache = if self.host_roundtrip {
-            Value::Host(HostValue::F32(out.to_tensor()?))
+    /// Store the cache output of a step per the residency mode. In the
+    /// host-round-trip mode the rows the graph just wrote are mirrored
+    /// into the owning sequences' pool blocks (shared blocks excluded —
+    /// their contents are identical by construction), so the pool stays
+    /// the authoritative store.
+    fn store_cache(&mut self, out: OutValue, mirror: Mirror) -> crate::Result<()> {
+        if self.host_roundtrip {
+            let t = out.to_tensor()?;
+            match mirror {
+                Mirror::Prefill(slot) => self.kv.scatter_prefill(&t, slot),
+                Mirror::Decode => {
+                    for slot in self.kv.busy_slots() {
+                        self.kv.scatter_decode_row(&t, slot);
+                    }
+                }
+            }
+            self.cache = Value::Host(HostValue::F32(t));
         } else {
-            out.into_value(self.session.registry.client())?
-        };
+            self.cache = out.into_value(self.session.registry.client())?;
+        }
         Ok(())
     }
 
@@ -292,9 +369,23 @@ impl Engine {
     }
 
     /// Prefill `tokens` into `slot`; returns the first generated token.
+    /// When the slot holds an allocated sequence its full prompt blocks
+    /// are published into the prefix cache afterwards (and, in mirrored
+    /// modes, its block contents are brought up to date first).
     pub fn prefill(&mut self, slot: usize, tokens: &[i32]) -> crate::Result<i32> {
         let m = &self.session.manifest;
         anyhow::ensure!(tokens.len() <= m.seq_len, "prompt too long");
+        if self.kv.request_of(slot).is_some() {
+            anyhow::ensure!(
+                self.kv.tok_len(slot) == tokens.len(),
+                "prefill length {} != allocated prompt length {}",
+                tokens.len(),
+                self.kv.tok_len(slot)
+            );
+        }
+        if self.paged_attention {
+            return self.prefill_paged(slot, tokens);
+        }
         let (graph, bucket, sampled) = self.prefill_plan(tokens.len());
         let mut padded = tokens.to_vec();
         padded.resize(bucket, PAD);
@@ -321,18 +412,50 @@ impl Engine {
             ],
             splitter,
         )?;
-        if sampled {
+        let first = if sampled {
             anyhow::ensure!(outs.len() == 3, "prefill_sampled: expected 3 outputs");
             let ids = outs.host_i32(1)?;
             anyhow::ensure!(ids.data.len() == 1, "prefill_sampled: want 1 id");
-            self.store_cache(outs.take(0)?)?;
-            Ok(ids.data[0])
+            self.store_cache(outs.take(0)?, Mirror::Prefill(slot))?;
+            ids.data[0]
         } else {
             anyhow::ensure!(outs.len() == 2, "prefill: expected 2 outputs");
             let logits = outs.host_f32(1)?;
-            self.store_cache(outs.take(0)?)?;
-            Ok(argmax(&logits.data) as i32)
-        }
+            self.store_cache(outs.take(0)?, Mirror::Prefill(slot))?;
+            argmax(&logits.data) as i32
+        };
+        self.kv.publish_prefix(slot);
+        Ok(first)
+    }
+
+    /// Native-path prefill: the `prefill_paged_*` graph writes this
+    /// sequence's prompt KV straight into its pool blocks via the block
+    /// table (no contiguous view).
+    fn prefill_paged(&mut self, slot: usize, tokens: &[i32]) -> crate::Result<i32> {
+        let table = self.kv.table_i32(slot).ok_or_else(|| {
+            anyhow::anyhow!("paged prefill needs an allocated sequence in slot {slot}")
+        })?;
+        let outs = self.session.run_values(
+            &format!("prefill_paged_{}", self.suffix),
+            vec![
+                Value::Host(HostValue::F32(self.kv.pool_tensor())),
+                Value::Host(HostValue::I32(table)),
+                self.session.prefix_kv_value()?,
+                self.session.prefix_len_value()?,
+                Value::Host(HostValue::I32(IntTensor::vec(tokens.to_vec()))),
+                Value::scalar_i32(tokens.len() as i32),
+                self.session.ranges_value()?,
+                Value::Device(self.act_levels_buf.clone()),
+                Value::Device(self.kv_levels_buf.clone()),
+                self.session.inv_smooth_value()?,
+            ],
+        )?;
+        anyhow::ensure!(outs.len() == 2, "prefill_paged: expected 2 outputs");
+        let logits = outs.host_f32(1)?;
+        let pool = outs.host_f32(0)?;
+        self.kv.install_pool(&pool)?;
+        self.kv.publish_prefix(slot);
+        Ok(argmax(&logits.data) as i32)
     }
 
     /// One decode step for all slots; `tokens[b]` is the last generated
@@ -341,6 +464,21 @@ impl Engine {
         let (serve_batch, v) =
             (self.session.manifest.serve_batch, self.session.manifest.vocab);
         anyhow::ensure!(tokens.len() == serve_batch);
+        if self.host_roundtrip || self.paged_attention {
+            // pool-writing modes: the block covering each busy slot's
+            // write position (m_max + tok_len) must exist up front. The
+            // scheduler already did this (with preemption on failure);
+            // direct engine drivers get the default ample pool.
+            for slot in self.kv.busy_slots() {
+                anyhow::ensure!(
+                    self.kv.ensure_append(slot),
+                    "kv block pool exhausted growing slot {slot}"
+                );
+            }
+        }
+        if self.paged_attention {
+            return self.decode_step_paged(tokens);
+        }
         let sampled = self.device_sampling && self.decode_sampled_graph.is_some();
         let graph = match (&self.decode_sampled_graph, sampled) {
             (Some(g), true) => g.clone(),
@@ -374,19 +512,50 @@ impl Engine {
                 ids.data.len() == serve_batch,
                 "decode_sampled: want [B] ids"
             );
-            self.store_cache(outs.take(0)?)?;
+            self.store_cache(outs.take(0)?, Mirror::Decode)?;
             Ok(ids.data)
         } else {
             anyhow::ensure!(outs.len() == 2, "decode: expected 2 outputs");
             let logits = outs.host_f32(1)?;
-            self.store_cache(outs.take(0)?)?;
+            self.store_cache(outs.take(0)?, Mirror::Decode)?;
             Ok(argmax_rows(&logits.data, serve_batch, v))
         }
     }
 
-    /// Host view of the cache (tests / debugging): fetches from device
-    /// when the cache is resident there.
+    /// Native-path decode: the `decode_paged_*` graph reads and writes
+    /// KV through the block tables over the pool tensor — true paged
+    /// attention, no contiguous per-batch cache.
+    fn decode_step_paged(&mut self, tokens: &[i32]) -> crate::Result<Vec<i32>> {
+        let (serve_batch, v) =
+            (self.session.manifest.serve_batch, self.session.manifest.vocab);
+        let outs = self.session.run_values(
+            &format!("decode_paged_{}", self.suffix),
+            vec![
+                Value::Host(HostValue::F32(self.kv.pool_tensor())),
+                Value::Host(HostValue::I32(self.kv.tables_tensor())),
+                Value::Host(HostValue::I32(IntTensor::vec(self.kv.lens_i32()))),
+                self.session.prefix_len_value()?,
+                Value::Host(HostValue::I32(IntTensor::vec(tokens.to_vec()))),
+                self.session.ranges_value()?,
+                Value::Device(self.act_levels_buf.clone()),
+                Value::Device(self.kv_levels_buf.clone()),
+                self.session.inv_smooth_value()?,
+            ],
+        )?;
+        anyhow::ensure!(outs.len() == 2, "decode_paged: expected 2 outputs");
+        let logits = outs.host_f32(1)?;
+        let pool = outs.host_f32(0)?;
+        self.kv.install_pool(&pool)?;
+        Ok(argmax_rows(&logits.data, serve_batch, v))
+    }
+
+    /// Host view of the contiguous cache (tests / debugging): fetches
+    /// from device when resident there; gathered from the pool in the
+    /// native paged mode (where no contiguous cache exists).
     pub fn cache_host(&self) -> crate::Result<Tensor> {
+        if self.paged_attention {
+            return Ok(self.kv.gather_view());
+        }
         match &self.cache {
             Value::Host(HostValue::F32(t)) => Ok(t.clone()),
             Value::Host(_) => anyhow::bail!("cache is not an f32 value"),

@@ -1,0 +1,240 @@
+//! The physical block pool: `n_blocks` fixed-size KV blocks, each
+//! holding `block_size` token positions of every layer's K and V —
+//! layout `[L, 2, Hkv, BS, dh]` per block, all blocks in one contiguous
+//! `data` buffer (so the whole pool can cross to a graph as one tensor).
+//!
+//! Blocks are refcounted: a sequence's block table holds one reference
+//! per entry, the prefix cache holds one per indexed block, and the
+//! pinned cushion run holds one per block forever. `release` is checked
+//! — a refcount can never underflow, and a pinned block can never reach
+//! zero — so double-free bugs surface as `Err`, not corruption
+//! (testkit::prop churn properties pin this down).
+
+use crate::util::tensor::Tensor;
+
+pub type BlockId = usize;
+
+/// Per-block tensor geometry (shared by every block in a pool).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockDims {
+    pub n_layers: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub block_size: usize,
+}
+
+impl BlockDims {
+    /// f32 elements per block: L * 2 * Hkv * BS * dh.
+    pub fn block_elems(&self) -> usize {
+        self.n_layers * 2 * self.n_kv_heads * self.block_size * self.d_head
+    }
+
+    /// Offset of one dh-row inside a block: (layer, k-or-v, head,
+    /// position-in-block).
+    pub fn row(&self, l: usize, which: usize, h: usize, q: usize) -> usize {
+        (((l * 2 + which) * self.n_kv_heads + h) * self.block_size + q)
+            * self.d_head
+    }
+}
+
+#[derive(Debug)]
+pub struct BlockPool {
+    dims: BlockDims,
+    n_blocks: usize,
+    data: Vec<f32>,
+    refs: Vec<u32>,
+    pinned: Vec<bool>,
+    free: Vec<BlockId>,
+}
+
+impl BlockPool {
+    pub fn new(n_blocks: usize, dims: BlockDims) -> Self {
+        Self {
+            data: vec![0.0; n_blocks * dims.block_elems()],
+            refs: vec![0; n_blocks],
+            pinned: vec![false; n_blocks],
+            free: (0..n_blocks).rev().collect(),
+            n_blocks,
+            dims,
+        }
+    }
+
+    pub fn dims(&self) -> &BlockDims {
+        &self.dims
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.n_blocks - self.free.len()
+    }
+
+    /// Take a free block (refcount 1, contents zeroed). `None` = pool
+    /// exhausted; the caller decides between eviction and preemption.
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        let id = self.free.pop()?;
+        debug_assert_eq!(self.refs[id], 0, "free-list block with live refs");
+        self.refs[id] = 1;
+        let e = self.dims.block_elems();
+        self.data[id * e..(id + 1) * e].fill(0.0);
+        Some(id)
+    }
+
+    /// Add one reference (table entry / prefix-cache hold / pin hold).
+    pub fn retain(&mut self, id: BlockId) {
+        assert!(self.refs[id] > 0, "retain of unallocated block {id}");
+        self.refs[id] += 1;
+    }
+
+    /// Drop one reference; returns whether the block became free. A
+    /// refcount underflow (releasing an already-free block) and a pinned
+    /// block reaching zero are both hard errors.
+    pub fn release(&mut self, id: BlockId) -> crate::Result<bool> {
+        anyhow::ensure!(id < self.n_blocks, "release of block {id} out of range");
+        anyhow::ensure!(self.refs[id] > 0, "refcount underflow on block {id}");
+        anyhow::ensure!(
+            self.refs[id] > 1 || !self.pinned[id],
+            "pinned block {id} would be freed"
+        );
+        self.refs[id] -= 1;
+        if self.refs[id] == 0 {
+            self.free.push(id);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Mark a block as pinned (the cushion run): its holder's reference
+    /// is permanent and `release` refuses to free it.
+    pub fn pin(&mut self, id: BlockId) {
+        assert!(self.refs[id] > 0, "pin of unallocated block {id}");
+        self.pinned[id] = true;
+    }
+
+    pub fn is_pinned(&self, id: BlockId) -> bool {
+        self.pinned[id]
+    }
+
+    pub fn ref_count(&self, id: BlockId) -> u32 {
+        self.refs[id]
+    }
+
+    pub fn block(&self, id: BlockId) -> &[f32] {
+        let e = self.dims.block_elems();
+        &self.data[id * e..(id + 1) * e]
+    }
+
+    pub fn block_mut(&mut self, id: BlockId) -> &mut [f32] {
+        let e = self.dims.block_elems();
+        &mut self.data[id * e..(id + 1) * e]
+    }
+
+    /// Copy-on-write substrate: duplicate `src`'s contents into `dst`.
+    pub fn copy_block(&mut self, src: BlockId, dst: BlockId) {
+        let e = self.dims.block_elems();
+        let (s0, d0) = (src * e, dst * e);
+        if src == dst {
+            return;
+        }
+        // split_at_mut needs ordered disjoint ranges
+        let (lo, hi, src_first) = if s0 < d0 {
+            (s0, d0, true)
+        } else {
+            (d0, s0, false)
+        };
+        let (a, b) = self.data.split_at_mut(hi);
+        if src_first {
+            b[..e].copy_from_slice(&a[lo..lo + e]);
+        } else {
+            a[lo..lo + e].copy_from_slice(&b[..e]);
+        }
+    }
+
+    /// The whole pool as one flat slice (paged-graph operand).
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Replace the whole pool contents (installing a paged graph's
+    /// functional output). Length must match exactly.
+    pub fn install_data(&mut self, data: &[f32]) -> crate::Result<()> {
+        anyhow::ensure!(
+            data.len() == self.data.len(),
+            "pool install: {} elements, expected {}",
+            data.len(),
+            self.data.len()
+        );
+        self.data.copy_from_slice(data);
+        Ok(())
+    }
+
+    /// The pool as a `[n_blocks, L, 2, Hkv, BS, dh]` tensor (clones the
+    /// data — the paged-graph operand path).
+    pub fn as_tensor(&self) -> Tensor {
+        let d = &self.dims;
+        Tensor::new(
+            vec![self.n_blocks, d.n_layers, 2, d.n_kv_heads, d.block_size,
+                 d.d_head],
+            self.data.clone(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> BlockDims {
+        BlockDims { n_layers: 2, n_kv_heads: 1, d_head: 3, block_size: 4 }
+    }
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut p = BlockPool::new(3, dims());
+        assert_eq!(p.free_blocks(), 3);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.blocks_in_use(), 2);
+        assert!(p.release(a).unwrap());
+        assert_eq!(p.free_blocks(), 2);
+        let c = p.alloc().unwrap();
+        assert_eq!(c, a, "LIFO free list reuses the freed block");
+        assert_eq!(p.ref_count(b), 1);
+    }
+
+    #[test]
+    fn refcounts_are_checked() {
+        let mut p = BlockPool::new(2, dims());
+        let a = p.alloc().unwrap();
+        p.retain(a);
+        assert!(!p.release(a).unwrap(), "still one holder");
+        assert!(p.release(a).unwrap());
+        assert!(p.release(a).is_err(), "underflow must error");
+        let b = p.alloc().unwrap();
+        p.pin(b);
+        assert!(p.release(b).is_err(), "pinned block cannot be freed");
+    }
+
+    #[test]
+    fn alloc_zeroes_and_copy_preserves_source() {
+        let mut p = BlockPool::new(2, dims());
+        let a = p.alloc().unwrap();
+        p.block_mut(a).iter_mut().for_each(|v| *v = 7.0);
+        assert!(p.release(a).unwrap());
+        let a2 = p.alloc().unwrap();
+        assert!(p.block(a2).iter().all(|&v| v == 0.0), "stale data leaked");
+        p.block_mut(a2)[0] = 3.0;
+        let b = p.alloc().unwrap();
+        p.copy_block(a2, b);
+        assert_eq!(p.block(b)[0], 3.0);
+        p.block_mut(b)[0] = 9.0;
+        assert_eq!(p.block(a2)[0], 3.0, "COW copy must not alias the source");
+    }
+}

@@ -1,0 +1,29 @@
+//! Paged KV pool with shared cushion-prefix blocks, prefix caching, and
+//! the admission/growth surface preemptive continuous batching runs on.
+//!
+//! The paper prepends one fixed CushionCache prefix to *every* sequence;
+//! pre-paging, the serving cache physically copied that identical prefix
+//! KV into all `B` slots and reserved a fixed capacity per slot, so
+//! memory scaled as `B x (m_max + cap)` regardless of live demand, and a
+//! full cache meant rejection. Here the physical cache is `n_blocks`
+//! fixed-size blocks (`[L, 2, Hkv, BS, dh]` each):
+//!
+//! * `block`  — the refcounted block pool (alloc/release/pin/COW)
+//! * `prefix` — content-keyed prefix cache over full prompt blocks
+//!              (chained hashes, LRU eviction of idle entries)
+//! * `paged`  — `PagedKv`: lanes + block tables + admission math +
+//!              block-by-block decode growth; the cushion lives in one
+//!              pinned shared block run every table points at
+//! * `view`   — gather/scatter bridge to the contiguous per-batch cache
+//!              the compiled graphs consume, plus operand plumbing for
+//!              the native block-table graphs (`*_paged_*`)
+
+pub mod block;
+pub mod paged;
+pub mod prefix;
+pub mod view;
+
+pub use block::{BlockDims, BlockId, BlockPool};
+pub use paged::{PagedKv, PoolStats, SeqKv};
+pub use prefix::{chain_hash, PrefixIndex};
+pub use view::cache_with_cushion;

@@ -1,0 +1,735 @@
+//! `PagedKv` — the paged replacement for the old per-slot `KvManager`.
+//!
+//! Two resources are managed separately:
+//!
+//! * **Lanes** (`n_slots`, the graphs' fixed batch width) — an
+//!   *execution* resource: which batch row a running sequence occupies.
+//! * **Blocks** (the pool) — the *memory* resource: `block_size`-token
+//!   KV pages, refcounted and shared.
+//!
+//! Every sequence's logical KV space is `[0, m_max)` cushion prefix +
+//! `[m_max, m_max + tok_len)` request tokens, mapped to physical blocks
+//! by its block table. The cushion KV is written **once** into a pinned
+//! shared run of blocks that every table starts with — the old
+//! `initial_cache` broadcast (one cushion copy per slot) is gone; per-
+//! batch execution views are materialized from the pool on demand
+//! (kvpool::view). When `m_max` is not a block multiple, the boundary
+//! block (cushion tail + first prompt tokens) is a shared template that
+//! each sequence copies on write (COW) at allocation.
+//!
+//! Full prompt blocks are content-keyed into the `PrefixIndex`, so
+//! concurrent or repeated prompts with a common head share physical
+//! blocks, copy-on-write at the first divergence. Admission is by block
+//! availability (`can_admit`), decode growth is block-by-block
+//! (`ensure_append`), and when the pool runs dry the scheduler preempts
+//! (see coordinator::scheduler) rather than rejecting.
+//!
+//! Block *contents* are authoritative in the mirrored execution modes
+//! (host-roundtrip arena and the native paged path); in the default
+//! device-resident arena mode the pool carries the cushion contents plus
+//! pure accounting, and the device arena holds the live KV.
+
+use crate::model::manifest::Manifest;
+use crate::util::tensor::Tensor;
+
+use super::block::{BlockDims, BlockId, BlockPool};
+use super::prefix::{chain_hash, PrefixIndex};
+
+/// One sequence's logical->physical mapping plus sharing bookkeeping.
+#[derive(Debug)]
+pub struct SeqKv {
+    pub request: u64,
+    /// Request tokens cached past the cushion region.
+    pub tok_len: usize,
+    /// Block table: logical block index -> pool block id.
+    pub blocks: Vec<BlockId>,
+    /// Chained content hash per block (Some only for full prompt
+    /// blocks — the publishable prefix-cache keys).
+    pub(super) hashes: Vec<Option<u64>>,
+    /// Shared blocks (cushion run / prefix-cache hits) are never
+    /// written by this sequence; writers COW first.
+    pub(super) shared: Vec<bool>,
+}
+
+/// Pool occupancy gauges for coordinator::metrics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    pub total: usize,
+    pub in_use: usize,
+    /// Blocks referenced by >= 2 live sequences.
+    pub shared: usize,
+    /// Block allocations avoided by sharing: sum over blocks of
+    /// (sequence holders - 1).
+    pub saved: usize,
+}
+
+#[derive(Debug)]
+pub struct PagedKv {
+    pub n_slots: usize,
+    pub m_max: usize,
+    pub cap: usize,
+    pub cushion_len: usize,
+    pub block_size: usize,
+    pool: BlockPool,
+    index: PrefixIndex,
+    seqs: Vec<Option<SeqKv>>,
+    /// Pinned shared blocks covering positions [0, m_max): the full
+    /// cushion run plus (when m_max % block_size != 0) the boundary
+    /// template.
+    cushion_blocks: Vec<BlockId>,
+    /// How many of `cushion_blocks` are fully inside the cushion region
+    /// (shareable as-is, never COW'd).
+    full_cushion_blocks: usize,
+    tick: u64,
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+impl PagedKv {
+    /// Geometry from the manifest: `kv_block_size` / `kv_pool_blocks`
+    /// when set (non-zero), otherwise a block size of min(16, m_max)
+    /// tokens and a pool sized so every lane can reach `cache_cap` with
+    /// the cushion run shared — the no-preemption parity configuration.
+    pub fn for_manifest(
+        m: &Manifest,
+        cushion_kv: Option<&Tensor>,
+        cushion_len: usize,
+        pool_blocks_override: Option<usize>,
+    ) -> Self {
+        let cap = m.cache_cap.max(1);
+        let bs = if m.kv_block_size > 0 {
+            m.kv_block_size
+        } else if m.m_max > 0 {
+            16.min(m.m_max)
+        } else {
+            16
+        }
+        .min(cap);
+        let full = m.m_max / bs;
+        let boundary = usize::from(m.m_max % bs != 0);
+        let per_lane = ceil_div(cap, bs) - full;
+        let derived = full + boundary + m.serve_batch * per_lane;
+        let n_blocks = pool_blocks_override
+            .or((m.kv_pool_blocks > 0).then_some(m.kv_pool_blocks))
+            .unwrap_or(derived);
+        Self::new(
+            m.serve_batch,
+            m.m_max,
+            m.cache_cap,
+            cushion_len,
+            bs,
+            n_blocks,
+            BlockDims {
+                n_layers: m.n_layers,
+                n_kv_heads: m.n_kv_heads,
+                d_head: m.d_head,
+                block_size: bs,
+            },
+            cushion_kv,
+        )
+    }
+
+    /// `cushion_kv`: `[L, 2, Hkv, m_max, dh]` (None = zero prefix KV,
+    /// matching the old zero-initialized cache).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        n_slots: usize,
+        m_max: usize,
+        cap: usize,
+        cushion_len: usize,
+        block_size: usize,
+        n_blocks: usize,
+        dims: BlockDims,
+        cushion_kv: Option<&Tensor>,
+    ) -> Self {
+        assert!(cushion_len <= m_max, "cushion longer than the prefix region");
+        assert_eq!(dims.block_size, block_size);
+        assert!(block_size > 0);
+        let n_cushion = ceil_div(m_max, block_size);
+        // floor: the cushion run plus one lane's full-capacity table must
+        // fit, or a lone max-length sequence could never run (the
+        // preemption policy guarantees progress only above this floor)
+        let lane_max = ceil_div(cap, block_size) - m_max / block_size;
+        let n_blocks = n_blocks.max(n_cushion + lane_max);
+        let mut pool = BlockPool::new(n_blocks, dims);
+        let mut cushion_blocks = Vec::with_capacity(n_cushion);
+        for bi in 0..n_cushion {
+            let id = pool.alloc().expect("pool smaller than the cushion run");
+            pool.pin(id);
+            if let Some(kv) = cushion_kv {
+                write_cushion_block(&mut pool, id, bi, m_max, kv);
+            }
+            cushion_blocks.push(id);
+        }
+        Self {
+            n_slots,
+            m_max,
+            cap,
+            cushion_len,
+            block_size,
+            pool,
+            index: PrefixIndex::new(),
+            seqs: (0..n_slots).map(|_| None).collect(),
+            full_cushion_blocks: m_max / block_size,
+            cushion_blocks,
+            tick: 0,
+        }
+    }
+
+    // -- lane-level surface (the old KvManager API) -----------------------
+
+    pub fn free_count(&self) -> usize {
+        self.seqs.iter().filter(|s| s.is_none()).count()
+    }
+
+    pub fn busy_slots(&self) -> Vec<usize> {
+        (0..self.n_slots).filter(|&s| self.seqs[s].is_some()).collect()
+    }
+
+    pub fn request_of(&self, slot: usize) -> Option<u64> {
+        self.seqs[slot].as_ref().map(|s| s.request)
+    }
+
+    pub fn tok_len(&self, slot: usize) -> usize {
+        self.seqs[slot].as_ref().map(|s| s.tok_len).unwrap_or(0)
+    }
+
+    /// Room left (in tokens) for this slot's logical sequence.
+    pub fn remaining(&self, slot: usize) -> usize {
+        self.cap - self.m_max - self.tok_len(slot)
+    }
+
+    /// Per-slot token lengths for the decode graphs' cache_tok_len input.
+    pub fn lens_i32(&self) -> Vec<i32> {
+        (0..self.n_slots).map(|s| self.tok_len(s) as i32).collect()
+    }
+
+    /// Allocate a lane + block table for a prompt known only by length
+    /// (no prefix caching — compat path for drivers that feed tokens to
+    /// `prefill` directly).
+    pub fn alloc(&mut self, request: u64, prompt_len: usize) -> Option<usize> {
+        self.alloc_seq(request, prompt_len, None)
+    }
+
+    /// Allocate with the actual prompt tokens: full prompt-head blocks
+    /// are looked up in the prefix cache and shared on a hit.
+    pub fn alloc_with_prompt(&mut self, request: u64, prompt: &[i32]) -> Option<usize> {
+        self.alloc_seq(request, prompt.len(), Some(prompt))
+    }
+
+    fn alloc_seq(
+        &mut self,
+        request: u64,
+        prompt_len: usize,
+        prompt: Option<&[i32]>,
+    ) -> Option<usize> {
+        if self.m_max + prompt_len > self.cap {
+            return None; // can never fit
+        }
+        let slot = self.seqs.iter().position(Option::is_none)?;
+        self.tick += 1;
+        let n_needed = ceil_div(self.m_max + prompt_len, self.block_size);
+        let mut blocks: Vec<BlockId> = Vec::with_capacity(n_needed);
+        let mut hashes: Vec<Option<u64>> = Vec::with_capacity(n_needed);
+        let mut shared: Vec<bool> = Vec::with_capacity(n_needed);
+
+        // the shared cushion run heads every table
+        for bi in 0..self.cushion_blocks.len().min(n_needed) {
+            let id = self.cushion_blocks[bi];
+            self.pool.retain(id);
+            blocks.push(id);
+            hashes.push(None);
+            shared.push(true);
+        }
+
+        // token-bearing blocks: boundary template -> COW, full blocks ->
+        // prefix-cache lookup, the rest -> fresh
+        let mut prev = 0u64;
+        let mut ok = true;
+        for bi in self.full_cushion_blocks..n_needed {
+            let span_lo = (bi * self.block_size).max(self.m_max);
+            let span_hi = ((bi + 1) * self.block_size).min(self.m_max + prompt_len);
+            let is_full = (bi + 1) * self.block_size <= self.m_max + prompt_len;
+            let hash = match (prompt, is_full) {
+                (Some(p), true) => {
+                    let toks = &p[span_lo - self.m_max..span_hi - self.m_max];
+                    prev = chain_hash(prev, bi, toks);
+                    Some(prev)
+                }
+                _ => None,
+            };
+            if let Some(h) = hash {
+                if let Some(id) = self.index.get(h, self.tick) {
+                    // prefix-cache hit: share, never write
+                    self.pool.retain(id);
+                    if bi < blocks.len() {
+                        // the boundary slot was pre-filled with the
+                        // template; the cached block replaces it
+                        let old = blocks[bi];
+                        self.pool.release(old).expect("cushion run hold");
+                        blocks[bi] = id;
+                        hashes[bi] = Some(h);
+                        // stays shared == true
+                    } else {
+                        blocks.push(id);
+                        hashes.push(Some(h));
+                        shared.push(true);
+                    }
+                    continue;
+                }
+            }
+            // miss: this sequence owns (and will write) the block
+            let Some(id) = self.alloc_block() else {
+                ok = false;
+                break;
+            };
+            if bi < blocks.len() {
+                // boundary template COW: carry the cushion tail over
+                let template = blocks[bi];
+                self.pool.copy_block(template, id);
+                self.pool.release(template).expect("cushion run hold");
+                blocks[bi] = id;
+                hashes[bi] = hash;
+                shared[bi] = false;
+            } else {
+                blocks.push(id);
+                hashes.push(hash);
+                shared.push(false);
+            }
+        }
+        if !ok {
+            for id in blocks {
+                self.pool.release(id).expect("rollback release");
+            }
+            return None;
+        }
+        self.seqs[slot] = Some(SeqKv {
+            request,
+            tok_len: prompt_len,
+            blocks,
+            hashes,
+            shared,
+        });
+        Some(slot)
+    }
+
+    /// Free a lane: donate full prompt blocks to the prefix cache, then
+    /// drop every table reference (shared blocks survive under their
+    /// other holders).
+    pub fn free(&mut self, slot: usize) {
+        let Some(seq) = self.seqs[slot].take() else { return };
+        self.tick += 1;
+        for (i, &id) in seq.blocks.iter().enumerate() {
+            if let Some(h) = seq.hashes[i] {
+                if !seq.shared[i] && self.index.insert(h, id, self.tick) {
+                    self.pool.retain(id);
+                }
+            }
+            self.pool.release(id).expect("table hold vanished");
+        }
+    }
+
+    /// Record one decoded token appended to `slot`. The covering block
+    /// must be allocatable; serving flows call `ensure_append` (with
+    /// preemption on failure) before the decode step, making this
+    /// infallible there.
+    pub fn push_token(&mut self, slot: usize) {
+        assert!(
+            self.ensure_append(slot),
+            "kv pool exhausted — ensure_append/preemption must run first"
+        );
+        let seq = self.seqs[slot].as_mut().expect("push_token on a free lane");
+        seq.tok_len += 1;
+        debug_assert!(self.m_max + seq.tok_len <= self.cap);
+    }
+
+    /// Make sure the block covering this slot's next KV write position
+    /// (`m_max + tok_len`) exists and is writable. Returns false when
+    /// the pool (free list + evictable prefix cache) is exhausted.
+    pub fn ensure_append(&mut self, slot: usize) -> bool {
+        let Some(seq) = self.seqs[slot].as_ref() else { return true };
+        let pos = self.m_max + seq.tok_len;
+        if pos >= self.cap {
+            return true; // sequence is at capacity; should_stop owns this
+        }
+        let bi = pos / self.block_size;
+        if bi < seq.blocks.len() {
+            if !seq.shared[bi] {
+                return true;
+            }
+            // defensive COW (normal flows COW shared blocks at alloc)
+            let Some(fresh) = self.alloc_block() else { return false };
+            let seq = self.seqs[slot].as_mut().unwrap();
+            let old = seq.blocks[bi];
+            seq.blocks[bi] = fresh;
+            seq.shared[bi] = false;
+            seq.hashes[bi] = None;
+            self.pool.copy_block(old, fresh);
+            self.pool.release(old).expect("shared hold vanished");
+            return true;
+        }
+        debug_assert_eq!(bi, seq.blocks.len(), "table gap");
+        let Some(id) = self.alloc_block() else { return false };
+        let seq = self.seqs[slot].as_mut().unwrap();
+        seq.blocks.push(id);
+        seq.hashes.push(None);
+        seq.shared.push(false);
+        true
+    }
+
+    /// Publish this sequence's full prompt blocks into the prefix cache
+    /// (called after a successful prefill, so concurrent identical
+    /// prompts share immediately).
+    pub fn publish_prefix(&mut self, slot: usize) {
+        let Some(seq) = self.seqs[slot].as_ref() else { return };
+        let entries: Vec<(u64, BlockId)> = seq
+            .blocks
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| !seq.shared[i])
+            .filter_map(|(i, &id)| seq.hashes[i].map(|h| (h, id)))
+            .collect();
+        self.tick += 1;
+        for (h, id) in entries {
+            if self.index.insert(h, id, self.tick) {
+                self.pool.retain(id);
+            }
+        }
+    }
+
+    // -- admission math ----------------------------------------------------
+
+    /// Can a prompt be admitted *now* on block availability alone?
+    /// Requires room for the prompt plus — unless the request finishes
+    /// at the cache limit or after its single prefill token — at least
+    /// one generated token's KV (the old `alloc` admitted prompts with
+    /// zero decode room and relied on overflow asserts downstream).
+    pub fn can_admit(&self, prompt: &[i32], max_new: usize) -> bool {
+        let plen = prompt.len();
+        if self.m_max + plen > self.cap {
+            return false;
+        }
+        let extra = usize::from(max_new > 1 && self.m_max + plen < self.cap);
+        let n_needed = ceil_div(self.m_max + plen + extra, self.block_size);
+        let mut needed_new = 0usize;
+        let mut prev = 0u64;
+        for bi in self.full_cushion_blocks..n_needed {
+            let is_full = (bi + 1) * self.block_size <= self.m_max + plen;
+            if is_full {
+                let span_lo = (bi * self.block_size).max(self.m_max);
+                let span_hi = (bi + 1) * self.block_size;
+                prev = chain_hash(
+                    prev,
+                    bi,
+                    &prompt[span_lo - self.m_max..span_hi - self.m_max],
+                );
+                if self.index.peek(prev).is_some() {
+                    continue; // shared on admission, no new block
+                }
+            }
+            needed_new += 1;
+        }
+        needed_new <= self.available_blocks()
+    }
+
+    /// Blocks obtainable right now: the free list plus prefix-cache
+    /// entries with no live sequence holder.
+    pub fn available_blocks(&self) -> usize {
+        self.pool.free_blocks() + self.index.evictable_count(&self.pool)
+    }
+
+    fn alloc_block(&mut self) -> Option<BlockId> {
+        if let Some(id) = self.pool.alloc() {
+            return Some(id);
+        }
+        self.index.evict_lru(&mut self.pool)?;
+        self.pool.alloc()
+    }
+
+    /// Drop every cached-but-idle prefix block (tests / memory pressure
+    /// hooks).
+    pub fn clear_prefix_cache(&mut self) {
+        while self.index.evict_lru(&mut self.pool).is_some() {}
+    }
+
+    // -- observability -----------------------------------------------------
+
+    pub fn total_blocks(&self) -> usize {
+        self.pool.n_blocks()
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.pool.blocks_in_use()
+    }
+
+    /// The table of a running sequence (tests / the paged graphs).
+    pub fn table(&self, slot: usize) -> Option<&[BlockId]> {
+        self.seqs[slot].as_ref().map(|s| s.blocks.as_slice())
+    }
+
+    /// The pinned shared cushion run (first `full_cushion_blocks` are
+    /// fully shared; a trailing boundary template COWs per sequence).
+    pub fn cushion_run(&self) -> &[BlockId] {
+        &self.cushion_blocks
+    }
+
+    pub fn full_cushion_blocks(&self) -> usize {
+        self.full_cushion_blocks
+    }
+
+    pub fn prefix_cache_len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn pool_stats(&self) -> PoolStats {
+        let mut shared = 0usize;
+        let mut saved = 0usize;
+        for id in 0..self.pool.n_blocks() {
+            let refs = self.pool.ref_count(id);
+            if refs == 0 {
+                continue;
+            }
+            let base = u32::from(self.pool.is_pinned(id))
+                + u32::from(self.index.contains_block(id));
+            let seq_refs = refs.saturating_sub(base);
+            if seq_refs >= 2 {
+                shared += 1;
+            }
+            saved += seq_refs.saturating_sub(1) as usize;
+        }
+        PoolStats {
+            total: self.pool.n_blocks(),
+            in_use: self.pool.blocks_in_use(),
+            shared,
+            saved,
+        }
+    }
+
+    // -- pool plumbing shared with kvpool::view ---------------------------
+
+    pub(super) fn pool_ref(&self) -> &BlockPool {
+        &self.pool
+    }
+
+    pub(super) fn pool_mut(&mut self) -> &mut BlockPool {
+        &mut self.pool
+    }
+
+    pub(super) fn seq(&self, slot: usize) -> Option<&SeqKv> {
+        self.seqs[slot].as_ref()
+    }
+}
+
+/// Write the cushion KV rows that fall inside cushion-run block `bi`.
+/// kv: [L, 2, Hkv, m_max, dh].
+fn write_cushion_block(
+    pool: &mut BlockPool,
+    id: BlockId,
+    bi: usize,
+    m_max: usize,
+    kv: &Tensor,
+) {
+    let d = *pool.dims();
+    assert_eq!(
+        kv.shape,
+        vec![d.n_layers, 2, d.n_kv_heads, m_max, d.d_head],
+        "cushion KV shape mismatch"
+    );
+    let (hkv, dh, bs) = (d.n_kv_heads, d.d_head, d.block_size);
+    let p0 = bi * bs;
+    let p1 = ((bi + 1) * bs).min(m_max);
+    let block = pool.block_mut(id);
+    for l in 0..d.n_layers {
+        for w in 0..2 {
+            for h in 0..hkv {
+                for p in p0..p1 {
+                    let src = (((l * 2 + w) * hkv + h) * m_max + p) * dh;
+                    let dst = d.row(l, w, h, p - p0);
+                    block[dst..dst + dh].copy_from_slice(&kv.data[src..src + dh]);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kv(n_slots: usize, n_blocks: usize) -> PagedKv {
+        // m_max 4, cap 20, bs 4: 1 full cushion block, 4 token blocks/lane
+        PagedKv::new(
+            n_slots,
+            4,
+            20,
+            2,
+            4,
+            n_blocks,
+            BlockDims { n_layers: 1, n_kv_heads: 1, d_head: 2, block_size: 4 },
+            None,
+        )
+    }
+
+    #[test]
+    fn alloc_free_cycle_lane_semantics() {
+        let mut p = kv(2, 9);
+        let a = p.alloc(10, 5).unwrap();
+        let b = p.alloc(11, 5).unwrap();
+        assert_ne!(a, b);
+        assert!(p.alloc(12, 5).is_none(), "no free lane");
+        p.free(a);
+        assert_eq!(p.free_count(), 1);
+        let c = p.alloc(12, 5).unwrap();
+        assert_eq!(c, a);
+        assert_eq!(p.request_of(c), Some(12));
+        assert!(p.alloc(13, 17).is_none(), "prompt longer than cap");
+    }
+
+    #[test]
+    fn capacity_and_growth() {
+        let mut p = kv(1, 9);
+        let s = p.alloc(1, 4).unwrap();
+        assert_eq!(p.remaining(s), 12);
+        // cushion block + 1 prompt block
+        assert_eq!(p.blocks_in_use(), 2);
+        for _ in 0..4 {
+            p.push_token(s);
+        }
+        assert_eq!(p.tok_len(s), 8);
+        assert_eq!(p.blocks_in_use(), 3, "decode growth allocates lazily");
+        assert_eq!(p.lens_i32(), vec![8]);
+        p.free(s);
+        assert_eq!(p.blocks_in_use(), 1, "only the pinned cushion remains");
+    }
+
+    #[test]
+    fn cushion_run_is_shared_across_lanes() {
+        let cushion = Tensor::new(
+            vec![1, 2, 1, 4, 2],
+            (0..16).map(|i| i as f32).collect(),
+        );
+        let mut p = PagedKv::new(
+            2,
+            4,
+            20,
+            4,
+            4,
+            9,
+            BlockDims { n_layers: 1, n_kv_heads: 1, d_head: 2, block_size: 4 },
+            Some(&cushion),
+        );
+        let a = p.alloc(1, 6).unwrap();
+        let b = p.alloc(2, 6).unwrap();
+        let (ta, tb) = (p.table(a).unwrap().to_vec(), p.table(b).unwrap().to_vec());
+        assert_eq!(ta[0], tb[0], "cushion block shared, not copied");
+        assert_eq!(p.cushion_run(), &[ta[0]]);
+        // cushion KV landed in the shared block (K of layer 0, pos 0)
+        assert_eq!(p.pool_ref().block(ta[0])[0], 0.0);
+        assert_eq!(p.pool_ref().block(ta[0])[2], 2.0, "pos 1 row");
+        let stats = p.pool_stats();
+        // 1 cushion + 2 * 2 prompt blocks, cushion counted once
+        assert_eq!(stats.in_use, 5);
+        assert_eq!(stats.shared, 1);
+        assert_eq!(stats.saved, 1);
+    }
+
+    #[test]
+    fn prefix_cache_shares_full_prompt_blocks() {
+        let mut p = kv(2, 9);
+        let prompt = vec![7, 8, 9, 10, 11, 12]; // 1.5 token blocks
+        let a = p.alloc_with_prompt(1, &prompt).unwrap();
+        p.publish_prefix(a);
+        assert_eq!(p.prefix_cache_len(), 1, "one full prompt block published");
+        let b = p.alloc_with_prompt(2, &prompt).unwrap();
+        let (ta, tb) = (p.table(a).unwrap().to_vec(), p.table(b).unwrap().to_vec());
+        assert_eq!(ta[1], tb[1], "full prompt block shared via the index");
+        assert_ne!(ta[2], tb[2], "partial tail block is private");
+        // divergent prompt shares nothing
+        p.free(b);
+        let c = p.alloc_with_prompt(3, &[7, 8, 9, 99, 11, 12]).unwrap();
+        assert_ne!(ta[1], p.table(c).unwrap()[1]);
+    }
+
+    #[test]
+    fn freed_prompt_blocks_stay_cached_and_evict_lru() {
+        let mut p = kv(1, 4); // cushion + 3 spare blocks
+        let a = p.alloc_with_prompt(1, &[1, 2, 3, 4, 5]).unwrap();
+        p.publish_prefix(a);
+        p.free(a);
+        assert_eq!(p.prefix_cache_len(), 1);
+        assert_eq!(p.blocks_in_use(), 2, "cached block survives the free");
+        // same prompt resumes on the cached block
+        let b = p.alloc_with_prompt(2, &[1, 2, 3, 4, 5]).unwrap();
+        assert!(p.table(b).unwrap().contains(&p.cushion_run()[0]));
+        p.free(b);
+        // pressure evicts the cached block once nothing references it
+        let c = p.alloc_with_prompt(3, &[9; 13]).unwrap(); // needs 4 blocks total
+        assert_eq!(p.prefix_cache_len(), 0, "LRU cache evicted under pressure");
+        p.free(c);
+        p.clear_prefix_cache();
+        assert_eq!(p.blocks_in_use(), 1, "full churn returns to the cushion");
+    }
+
+    #[test]
+    fn boundary_template_cows_per_sequence() {
+        // m_max 2, bs 4: the cushion tail lives in a boundary template
+        let cushion =
+            Tensor::new(vec![1, 2, 1, 2, 2], (0..8).map(|i| i as f32 + 1.0).collect());
+        let mut p = PagedKv::new(
+            2,
+            2,
+            10,
+            2,
+            4,
+            8,
+            BlockDims { n_layers: 1, n_kv_heads: 1, d_head: 2, block_size: 4 },
+            Some(&cushion),
+        );
+        assert_eq!(p.full_cushion_blocks(), 0);
+        assert_eq!(p.cushion_run().len(), 1);
+        let template = p.cushion_run()[0];
+        let a = p.alloc(1, 3).unwrap();
+        let owned = p.table(a).unwrap()[0];
+        assert_ne!(owned, template, "boundary block COWs at alloc");
+        // the cushion tail was carried over; the template is untouched
+        assert_eq!(p.pool_ref().block(owned)[..4], p.pool_ref().block(template)[..4]);
+        p.pool_mut().block_mut(owned)[0] = -1.0;
+        assert_eq!(p.pool_ref().block(template)[0], 1.0, "COW preserved source");
+    }
+
+    #[test]
+    fn can_admit_requires_decode_room() {
+        let p = kv(1, 9);
+        assert!(p.can_admit(&[1; 16], 8), "full-cap prompt finishes with Length");
+        assert!(!p.can_admit(&[1; 17], 8), "over cap");
+        assert!(p.can_admit(&[1; 15], 8), "room for one generated token");
+        let tiny = kv(1, 2); // floored to cushion + one lane's need = 5
+        assert_eq!(tiny.total_blocks(), 5);
+    }
+
+    #[test]
+    fn exhausted_pool_fails_ensure_append() {
+        // cushion + exactly 2 token blocks
+        let mut p = PagedKv::new(
+            2,
+            4,
+            20,
+            0,
+            4,
+            3,
+            BlockDims { n_layers: 1, n_kv_heads: 1, d_head: 2, block_size: 4 },
+            None,
+        );
+        // floor keeps one lane viable: 1 cushion + 4 token blocks... but we
+        // asked for 3 and the floor is 5
+        assert_eq!(p.total_blocks(), 5);
+        let a = p.alloc(1, 8).unwrap(); // 2 token blocks
+        let b = p.alloc(2, 8).unwrap(); // 2 token blocks -> pool full
+        assert_eq!(p.blocks_in_use(), 5);
+        assert!(!p.ensure_append(a), "no block for growth");
+        p.free(b);
+        assert!(p.ensure_append(a), "freed blocks enable growth");
+    }
+}

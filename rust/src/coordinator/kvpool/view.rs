@@ -1,0 +1,324 @@
+//! Execution views over the paged pool.
+//!
+//! The compiled/interpreted `prefill_*`/`decode_*` graphs consume one
+//! contiguous cache tensor `[L, 2, B, Hkv, CAP, dh]`. The pool stores
+//! KV once per *block*; this module bridges the two:
+//!
+//! * `gather_view` / `lane_view` — materialize the per-batch contiguous
+//!   view from block tables (engine init, parity cross-checks). Lanes
+//!   with no sequence show the shared cushion run. This is the only
+//!   place a cushion "broadcast" ever appears, and it is a transient
+//!   execution view — storage stays single-copy in the pool.
+//! * `scatter_prefill` / `scatter_decode_row` — mirror the positions a
+//!   graph just wrote in the contiguous view back into the owning
+//!   sequence's blocks (host-resident modes). Shared blocks are never
+//!   written: prefix-cache hits already hold identical contents by
+//!   construction (same tokens, same weights, same graph).
+//! * `tables_tensor` / `table_i32` / `pool_tensor` / `install_pool` —
+//!   operand plumbing for the *native* block-table graphs
+//!   (`prefill_paged_*` / `decode_paged_*`, runtime::interp), which
+//!   skip the contiguous view entirely.
+//! * `cache_with_cushion` — the standalone view builder (golden-fixture
+//!   tests build graph inputs without a pool).
+
+use crate::runtime::literalx::IntTensor;
+use crate::util::tensor::Tensor;
+
+use super::paged::PagedKv;
+
+/// Build a `[L, 2, B, Hkv, CAP, dh]` cache with the cushion KV
+/// replicated into every lane's prefix region — the execution-view
+/// equivalent of the pre-paging `initial_cache`, used where graph
+/// operands are assembled without a pool (fixture tests).
+pub fn cache_with_cushion(
+    n_layers: usize,
+    n_kv_heads: usize,
+    d_head: usize,
+    n_slots: usize,
+    cap: usize,
+    m_max: usize,
+    cushion_kv: Option<&Tensor>,
+) -> Tensor {
+    let mut cache =
+        Tensor::zeros(&[n_layers, 2, n_slots, n_kv_heads, cap, d_head]);
+    if let Some(kv) = cushion_kv {
+        assert_eq!(
+            kv.shape,
+            vec![n_layers, 2, n_kv_heads, m_max, d_head],
+            "cushion KV shape mismatch"
+        );
+        let src_block = m_max * d_head;
+        let dst_row = cap * d_head;
+        for l in 0..n_layers {
+            for w in 0..2 {
+                for h in 0..n_kv_heads {
+                    let s0 = ((l * 2 + w) * n_kv_heads + h) * src_block;
+                    let src = &kv.data[s0..s0 + src_block];
+                    for b in 0..n_slots {
+                        let d0 = (((l * 2 + w) * n_slots + b) * n_kv_heads + h)
+                            * dst_row;
+                        cache.data[d0..d0 + src_block].copy_from_slice(src);
+                    }
+                }
+            }
+        }
+    }
+    cache
+}
+
+impl PagedKv {
+    fn geometry(&self) -> (usize, usize, usize, usize) {
+        let d = self.pool_ref().dims();
+        (d.n_layers, d.n_kv_heads, d.d_head, d.block_size)
+    }
+
+    /// Gather the full per-batch execution view from block tables.
+    pub fn gather_view(&self) -> Tensor {
+        let (nl, hkv, dh, _) = self.geometry();
+        let mut cache =
+            Tensor::zeros(&[nl, 2, self.n_slots, hkv, self.cap, dh]);
+        for slot in 0..self.n_slots {
+            self.gather_into(&mut cache.data, slot);
+        }
+        cache
+    }
+
+    /// One lane's `[L, 2, Hkv, CAP, dh]` view (tests).
+    pub fn lane_view(&self, slot: usize) -> Tensor {
+        let full = self.gather_view();
+        let (nl, hkv, dh, _) = self.geometry();
+        let mut lane = Tensor::zeros(&[nl, 2, hkv, self.cap, dh]);
+        let row = self.cap * dh;
+        for l in 0..nl {
+            for w in 0..2 {
+                for h in 0..hkv {
+                    let src = (((l * 2 + w) * self.n_slots + slot) * hkv + h) * row;
+                    let dst = ((l * 2 + w) * hkv + h) * row;
+                    lane.data[dst..dst + row]
+                        .copy_from_slice(&full.data[src..src + row]);
+                }
+            }
+        }
+        lane
+    }
+
+    /// Copy a lane's mapped blocks into the contiguous buffer (helper of
+    /// `gather_view`). Unmapped positions stay zero.
+    fn gather_into(&self, data: &mut [f32], slot: usize) {
+        let (nl, hkv, dh, bs) = self.geometry();
+        let blocks: &[usize] = match self.seq(slot) {
+            Some(s) => &s.blocks,
+            None => self.cushion_run(),
+        };
+        for (bi, &id) in blocks.iter().enumerate() {
+            let p0 = bi * bs;
+            let p1 = ((bi + 1) * bs).min(self.cap);
+            if p0 >= p1 {
+                break;
+            }
+            let block = self.pool_ref().block(id);
+            for l in 0..nl {
+                for w in 0..2 {
+                    for h in 0..hkv {
+                        let src = self.pool_ref().dims().row(l, w, h, 0);
+                        let dst = ((((l * 2 + w) * self.n_slots + slot) * hkv
+                            + h)
+                            * self.cap
+                            + p0)
+                            * dh;
+                        let n = (p1 - p0) * dh;
+                        data[dst..dst + n].copy_from_slice(&block[src..src + n]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Mirror a prefill's written token positions `[m_max, m_max +
+    /// tok_len)` from the contiguous cache back into this sequence's
+    /// owned (non-shared) blocks.
+    pub fn scatter_prefill(&mut self, cache: &Tensor, slot: usize) {
+        let Some(seq) = self.seq(slot) else { return };
+        let tok_len = seq.tok_len;
+        self.scatter_range(cache, slot, self.m_max, self.m_max + tok_len);
+    }
+
+    /// Mirror the single KV row a decode step just wrote for this slot
+    /// (position `m_max + tok_len` — call *before* `push_token`).
+    pub fn scatter_decode_row(&mut self, cache: &Tensor, slot: usize) {
+        let Some(seq) = self.seq(slot) else { return };
+        let p = self.m_max + seq.tok_len;
+        if p >= self.cap {
+            return;
+        }
+        self.scatter_range(cache, slot, p, p + 1);
+    }
+
+    fn scatter_range(&mut self, cache: &Tensor, slot: usize, lo: usize, hi: usize) {
+        let (nl, hkv, dh, bs) = self.geometry();
+        assert_eq!(
+            cache.shape,
+            vec![nl, 2, self.n_slots, hkv, self.cap, dh],
+            "scatter: cache/view shape mismatch"
+        );
+        let Some(seq) = self.seq(slot) else { return };
+        let plan: Vec<(usize, usize, usize)> = seq
+            .blocks
+            .iter()
+            .enumerate()
+            .filter(|&(bi, _)| !seq.shared[bi])
+            .filter_map(|(bi, &id)| {
+                let p0 = (bi * bs).max(lo);
+                let p1 = ((bi + 1) * bs).min(hi).min(self.cap);
+                (p0 < p1).then_some((id, p0, p1))
+            })
+            .collect();
+        for (id, p0, p1) in plan {
+            for l in 0..nl {
+                for w in 0..2 {
+                    for h in 0..hkv {
+                        let src = ((((l * 2 + w) * self.n_slots + slot) * hkv
+                            + h)
+                            * self.cap
+                            + p0)
+                            * dh;
+                        let dst =
+                            self.pool_ref().dims().row(l, w, h, p0 % bs);
+                        let n = (p1 - p0) * dh;
+                        self.pool_mut().block_mut(id)[dst..dst + n]
+                            .copy_from_slice(&cache.data[src..src + n]);
+                    }
+                }
+            }
+        }
+    }
+
+    // -- native-path operand plumbing -------------------------------------
+
+    /// One lane's block table as i32 ids (native prefill operand).
+    pub fn table_i32(&self, slot: usize) -> Option<IntTensor> {
+        let seq = self.seq(slot)?;
+        Some(IntTensor::vec(seq.blocks.iter().map(|&b| b as i32).collect()))
+    }
+
+    /// All lanes' tables as `[B, W]`, -1-padded (native decode operand).
+    /// Lanes without a sequence are all -1.
+    pub fn tables_tensor(&self) -> IntTensor {
+        let w = (0..self.n_slots)
+            .filter_map(|s| self.seq(s).map(|q| q.blocks.len()))
+            .max()
+            .unwrap_or(0)
+            .max(1);
+        let mut data = vec![-1i32; self.n_slots * w];
+        for slot in 0..self.n_slots {
+            if let Some(seq) = self.seq(slot) {
+                for (i, &id) in seq.blocks.iter().enumerate() {
+                    data[slot * w + i] = id as i32;
+                }
+            }
+        }
+        IntTensor::new(vec![self.n_slots, w], data)
+    }
+
+    /// The pool as a `[n_blocks, L, 2, Hkv, BS, dh]` graph operand.
+    pub fn pool_tensor(&self) -> Tensor {
+        self.pool_ref().as_tensor()
+    }
+
+    /// Install a paged graph's functional pool output.
+    pub fn install_pool(&mut self, t: &Tensor) -> crate::Result<()> {
+        let (nl, hkv, dh, bs) = self.geometry();
+        let n = self.pool_ref().n_blocks();
+        anyhow::ensure!(
+            t.shape == vec![n, nl, 2, hkv, bs, dh],
+            "install_pool: shape {:?} does not match the pool",
+            t.shape
+        );
+        self.pool_mut().install_data(&t.data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::kvpool::block::BlockDims;
+
+    fn cushion() -> Tensor {
+        Tensor::new(vec![1, 2, 1, 4, 2], (0..16).map(|i| i as f32).collect())
+    }
+
+    fn paged(cushion_kv: Option<&Tensor>) -> PagedKv {
+        PagedKv::new(
+            2,
+            4,
+            12,
+            4,
+            4,
+            9,
+            BlockDims { n_layers: 1, n_kv_heads: 1, d_head: 2, block_size: 4 },
+            cushion_kv,
+        )
+    }
+
+    #[test]
+    fn gather_view_matches_broadcast_builder() {
+        let c = cushion();
+        let kv = paged(Some(&c));
+        let view = kv.gather_view();
+        let want = cache_with_cushion(1, 1, 2, 2, 12, 4, Some(&c));
+        assert_eq!(view.shape, want.shape);
+        assert_eq!(view.data, want.data, "fresh pool view == cushion broadcast");
+    }
+
+    #[test]
+    fn scatter_then_gather_roundtrips() {
+        let c = cushion();
+        let mut kv = paged(Some(&c));
+        let slot = kv.alloc(1, 3).unwrap();
+        // pretend a prefill wrote rows at positions [4, 7) of this lane
+        let mut cache = kv.gather_view();
+        for p in 4..7 {
+            for w in 0..2 {
+                let idx = (((w * 2 + slot) * 1) * 12 + p) * 2;
+                cache.data[idx] = 100.0 + (w * 10 + p) as f32;
+            }
+        }
+        kv.scatter_prefill(&cache, slot);
+        let view = kv.gather_view();
+        for p in 4..7 {
+            for w in 0..2 {
+                let idx = (((w * 2 + slot) * 1) * 12 + p) * 2;
+                assert_eq!(view.data[idx], 100.0 + (w * 10 + p) as f32);
+            }
+        }
+        // the other lane still shows the pristine cushion
+        let other = 1 - slot;
+        let want = cache_with_cushion(1, 1, 2, 2, 12, 4, Some(&c));
+        let lane = kv.lane_view(other);
+        for w in 0..2 {
+            for p in 0..4 {
+                let vi = ((w * 1) * 12 + p) * 2;
+                let wi = (((w * 2 + other) * 1) * 12 + p) * 2;
+                assert_eq!(lane.data[vi], want.data[wi]);
+            }
+        }
+    }
+
+    #[test]
+    fn tables_and_pool_tensor_shapes() {
+        let mut kv = paged(None);
+        let a = kv.alloc(1, 5).unwrap();
+        let t = kv.tables_tensor();
+        assert_eq!(t.shape, vec![2, 3]); // cushion + 2 token blocks
+        let row = &t.data[a * 3..(a + 1) * 3];
+        assert!(row.iter().all(|&v| v >= 0));
+        let empty = 1 - a;
+        assert!(t.data[empty * 3..(empty + 1) * 3].iter().all(|&v| v == -1));
+        let pt = kv.pool_tensor();
+        assert_eq!(pt.shape, vec![9, 1, 2, 1, 4, 2]);
+        assert!(kv.install_pool(&pt).is_ok());
+        assert!(kv
+            .install_pool(&Tensor::zeros(&[1, 1, 2, 1, 4, 2]))
+            .is_err());
+    }
+}

@@ -42,6 +42,20 @@ pub struct Metrics {
     pub rejected: usize,
     /// Requests cancelled in flight (client disconnect / shutdown).
     pub cancelled: usize,
+    /// Sequences preempted back to the queue because the KV block pool
+    /// ran dry (each resumes later via re-prefill).
+    pub preempted: usize,
+    /// KV pool gauges (coordinator::kvpool): sampled by the scheduler
+    /// each step; `pool_blocks_total` is fixed at engine setup.
+    pub pool_blocks_total: usize,
+    pub pool_blocks_in_use: usize,
+    pub pool_blocks_peak: usize,
+    /// Blocks currently referenced by >= 2 live sequences.
+    pub pool_blocks_shared: usize,
+    /// Block allocations avoided by sharing (cushion run + prefix-cache
+    /// hits), current and peak.
+    pub pool_blocks_saved: usize,
+    pub pool_blocks_saved_peak: usize,
 }
 
 impl Metrics {
@@ -61,6 +75,13 @@ impl Metrics {
             errored: 0,
             rejected: 0,
             cancelled: 0,
+            preempted: 0,
+            pool_blocks_total: 0,
+            pool_blocks_in_use: 0,
+            pool_blocks_peak: 0,
+            pool_blocks_shared: 0,
+            pool_blocks_saved: 0,
+            pool_blocks_saved_peak: 0,
         }
     }
 
@@ -104,6 +125,21 @@ impl Metrics {
     /// A request cancelled in flight.
     pub fn record_cancelled(&mut self) {
         self.cancelled += 1;
+    }
+
+    /// A running sequence preempted back to the queue (pool pressure).
+    pub fn record_preempted(&mut self) {
+        self.preempted += 1;
+    }
+
+    /// Sample the KV pool gauges (scheduler, once per step).
+    pub fn record_pool(&mut self, stats: crate::coordinator::kvpool::PoolStats) {
+        self.pool_blocks_total = stats.total;
+        self.pool_blocks_in_use = stats.in_use;
+        self.pool_blocks_peak = self.pool_blocks_peak.max(stats.in_use);
+        self.pool_blocks_shared = stats.shared;
+        self.pool_blocks_saved = stats.saved;
+        self.pool_blocks_saved_peak = self.pool_blocks_saved_peak.max(stats.saved);
     }
 
     /// Decode-step latency histogram: counts per DECODE_HIST_MS bucket
@@ -156,6 +192,13 @@ impl Metrics {
             errored: self.errored,
             rejected: self.rejected,
             cancelled: self.cancelled,
+            preempted: self.preempted,
+            pool_blocks_total: self.pool_blocks_total,
+            pool_blocks_in_use: self.pool_blocks_in_use,
+            pool_blocks_peak: self.pool_blocks_peak,
+            pool_blocks_shared: self.pool_blocks_shared,
+            pool_blocks_saved: self.pool_blocks_saved,
+            pool_blocks_saved_peak: self.pool_blocks_saved_peak,
             tokens_out: self.tokens_out,
             elapsed: self.started.elapsed().as_secs_f64(),
             ttft_mean: stats::mean(&self.ttft),
@@ -188,6 +231,17 @@ pub struct MetricsSummary {
     pub errored: usize,
     pub rejected: usize,
     pub cancelled: usize,
+    /// Pool-pressure preemptions (sequences later resumed by re-prefill).
+    pub preempted: usize,
+    /// Paged KV pool gauges: size, occupancy (last + peak), sharing
+    /// (blocks multi-referenced now), and the allocations sharing saved
+    /// (last + peak).
+    pub pool_blocks_total: usize,
+    pub pool_blocks_in_use: usize,
+    pub pool_blocks_peak: usize,
+    pub pool_blocks_shared: usize,
+    pub pool_blocks_saved: usize,
+    pub pool_blocks_saved_peak: usize,
     pub uploads: u64,
     pub bytes_uploaded: u64,
     pub fetches: u64,
@@ -224,6 +278,15 @@ impl MetricsSummary {
     /// Combined (up + down) steady-state bytes per decode step.
     pub fn decode_bytes_per_step(&self) -> f64 {
         self.decode_bytes_up_per_step + self.decode_bytes_down_per_step
+    }
+
+    /// Peak pool utilization (fraction of blocks in use).
+    pub fn pool_peak_utilization(&self) -> f64 {
+        if self.pool_blocks_total == 0 {
+            0.0
+        } else {
+            self.pool_blocks_peak as f64 / self.pool_blocks_total as f64
+        }
     }
 }
 
@@ -264,11 +327,31 @@ mod tests {
         });
         m.record_rejected();
         m.record_cancelled();
+        m.record_preempted();
+        m.record_pool(crate::coordinator::kvpool::PoolStats {
+            total: 16,
+            in_use: 9,
+            shared: 2,
+            saved: 3,
+        });
+        m.record_pool(crate::coordinator::kvpool::PoolStats {
+            total: 16,
+            in_use: 5,
+            shared: 1,
+            saved: 1,
+        });
         let s = m.summary();
         assert_eq!(s.completed, 1);
         assert_eq!(s.errored, 1);
         assert_eq!(s.rejected, 1);
         assert_eq!(s.cancelled, 1);
+        assert_eq!(s.preempted, 1);
+        assert_eq!(s.pool_blocks_in_use, 5, "gauges track the last sample");
+        assert_eq!(s.pool_blocks_peak, 9, "peak survives the drop");
+        assert_eq!(s.pool_blocks_shared, 1);
+        assert_eq!(s.pool_blocks_saved, 1);
+        assert_eq!(s.pool_blocks_saved_peak, 3);
+        assert!((s.pool_peak_utilization() - 9.0 / 16.0).abs() < 1e-9);
         assert_eq!(s.tokens_out, 3);
         assert!((s.tpot_mean - 0.055).abs() < 1e-9);
         assert!((s.mean_batch - 3.0).abs() < 1e-9);

@@ -2,26 +2,33 @@
 //!
 //! Shaped like a miniature vLLM router/engine split:
 //! * `request`   — request/response types and ids
-//! * `kvcache`   — slot manager over the device-resident paged KV cache,
-//!                 with the CushionCache preloaded into every slot's
-//!                 prefix region
-//! * `engine`    — PJRT execution of prefill/decode with the cache kept
-//!                 on device between steps
-//! * `batcher`   — FIFO admission queue with continuous-batching policy
-//! * `scheduler` — the step loop: admit-prefills-into-every-free-slot,
-//!                 decode-all-running; request-level faults become
-//!                 `FinishReason::Error` responses, never engine errors
+//! * `kvpool`    — paged KV pool: refcounted fixed-size blocks, the
+//!                 CushionCache prefix in one pinned shared block run,
+//!                 content-keyed prefix caching, and the gather/scatter
+//!                 views the execution graphs consume
+//! * `engine`    — prefill/decode execution with the per-batch cache
+//!                 view kept on device between steps (plus the native
+//!                 block-table path on the reference backend)
+//! * `batcher`   — admission queue with continuous-batching policy and
+//!                 an age-based anti-starvation rule over preempted
+//!                 (resumable) sequences
+//! * `scheduler` — the step loop: admit by lane *and block*
+//!                 availability, grow tables block-by-block, preempt the
+//!                 youngest running sequence when the pool runs dry;
+//!                 request-level faults become `FinishReason::Error`
+//!                 responses, never engine errors
 //! * `router`    — routes requests across engines (per quantization mode
 //!                 or replicas); `ServeBackend` abstracts one-vs-many for
 //!                 the server
 //! * `server`    — TCP line-protocol front end: streaming per-token
 //!                 lines, bounded admission, disconnect cancellation
-//! * `metrics`   — TTFT / TPOT / throughput accounting (Table 8) plus
-//!                 errored / rejected / cancelled fault-path counters
+//! * `metrics`   — TTFT / TPOT / throughput accounting (Table 8),
+//!                 errored / rejected / cancelled fault-path counters,
+//!                 and pool gauges (blocks in use / shared / preemptions)
 
 pub mod batcher;
 pub mod engine;
-pub mod kvcache;
+pub mod kvpool;
 pub mod metrics;
 pub mod request;
 pub mod router;
@@ -29,6 +36,7 @@ pub mod scheduler;
 pub mod server;
 
 pub use engine::Engine;
+pub use kvpool::{PagedKv, PoolStats};
 pub use request::{FinishReason, Request, RequestId, Response};
 pub use router::{Router, ServeBackend};
 pub use scheduler::Scheduler;

@@ -80,6 +80,15 @@ impl Response {
 pub enum FinishReason {
     MaxTokens,
     StopToken,
+    /// The sequence was truncated by KV capacity — distinct from
+    /// MaxTokens so capacity-bound truncation is observable. Fires when
+    /// a sequence fills its per-sequence KV space (`cache_cap`),
+    /// including the admission edge case of a prompt of exactly
+    /// `cap - m_max` tokens (served its prefill token, finished with
+    /// zero decode room), and in the last-resort scheduler case where
+    /// the block pool is dry and the sequence can never be resumed
+    /// (its re-prefill would exceed the prefill window).
+    Length,
     Cancelled,
     /// Request-level failure (admission rejection or per-request
     /// execution failure). The request died; the engine did not.
@@ -92,6 +101,7 @@ impl FinishReason {
         match self {
             FinishReason::MaxTokens => "max_tokens",
             FinishReason::StopToken => "stop_token",
+            FinishReason::Length => "length",
             FinishReason::Cancelled => "cancelled",
             FinishReason::Error(_) => "error",
         }
@@ -118,6 +128,7 @@ mod tests {
     #[test]
     fn finish_reason_labels() {
         assert_eq!(FinishReason::MaxTokens.as_str(), "max_tokens");
+        assert_eq!(FinishReason::Length.as_str(), "length");
         assert_eq!(FinishReason::Error("x".into()).as_str(), "error");
         assert!(FinishReason::Error("x".into()).is_error());
         assert!(!FinishReason::Cancelled.is_error());

@@ -30,7 +30,7 @@ pub trait ServeBackend {
     fn log_metrics(&self);
 }
 
-/// One engine's metrics line for serve output.
+/// One engine's metrics lines for serve output.
 fn log_scheduler_metrics(tag: &str, sched: &Scheduler) {
     let s = sched.metrics.summary();
     log::info!(
@@ -49,6 +49,23 @@ fn log_scheduler_metrics(tag: &str, sched: &Scheduler) {
         s.decode_bytes_down_per_step,
     );
     log::info!("{tag}: decode latency histogram {}", sched.metrics.decode_histogram_line());
+    // live pool stats (not the step-sampled gauges): accurate even when
+    // the server shuts down between steps
+    let pool = sched.engine.kv.pool_stats();
+    log::info!(
+        "{tag}: kv pool {}/{} blocks in use (peak {}, {:.0}% peak util); \
+         {} shared now, sharing saved {} allocations (peak {}); \
+         {} preemptions, {} prefix-cache entries",
+        pool.in_use,
+        pool.total,
+        s.pool_blocks_peak,
+        s.pool_peak_utilization() * 100.0,
+        pool.shared,
+        pool.saved,
+        s.pool_blocks_saved_peak,
+        s.preempted,
+        sched.engine.kv.prefix_cache_len(),
+    );
 }
 
 impl ServeBackend for Scheduler {

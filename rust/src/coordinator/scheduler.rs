@@ -1,6 +1,24 @@
-//! The continuous-batching step loop (vLLM-style): each step admits
-//! waiting prefills into *every* free slot (prefill-priority keeps TTFT
-//! low), then runs one batched decode step over every running slot.
+//! The continuous-batching step loop (vLLM-style), paged edition: each
+//! step admits work while a lane *and enough KV blocks* are available
+//! (prefill-priority keeps TTFT low), grows running sequences' block
+//! tables for the step's decode writes — preempting the youngest
+//! running sequence back to the queue when the pool runs dry — then
+//! runs one batched decode step over every running slot.
+//!
+//! Preemption frees the victim's non-shared blocks (full prompt blocks
+//! are donated to the prefix cache first, so the resume re-prefill can
+//! share them back) and requeues the sequence with everything it has
+//! generated; resuming re-prefills `prompt ++ generated`, whose
+//! last-position logits are exactly the decode step the preemption
+//! interrupted — in fp and statically-quantized modes the resumed token
+//! stream is bit-identical to an uninterrupted run (per-row arithmetic
+//! is batch-independent; the paged_kv preemption test pins this). In
+//! *dynamic* per-tensor modes (ptd/ptk) the re-prefill's dynamic ranges
+//! span a different activation batch, so resumed tokens may round
+//! differently — same model, same semantics, different batch shape.
+//! Starvation-freedom: victims are always strictly younger than the
+//! oldest running sequence (which therefore completes), and the batcher
+//! admits by submission age across fresh and preempted work.
 //!
 //! Fault isolation: `step()` returning `Err` means the *engine* failed
 //! (a batched decode aborted — systemic, affects every slot). Anything
@@ -13,7 +31,7 @@ use std::collections::HashMap;
 
 use crate::data::PAD;
 
-use super::batcher::{Batcher, Running};
+use super::batcher::{Admit, Batcher, Running};
 use super::engine::Engine;
 use super::metrics::Metrics;
 use super::request::{FinishReason, Request, RequestId, Response};
@@ -34,10 +52,12 @@ pub struct Scheduler {
 
 impl Scheduler {
     pub fn new(engine: Engine) -> Self {
+        let mut metrics = Metrics::new();
+        metrics.pool_blocks_total = engine.kv.total_blocks();
         Self {
             engine,
             batcher: Batcher::new(),
-            metrics: Metrics::new(),
+            metrics,
             running: HashMap::new(),
             finished: Vec::new(),
             token_events: Vec::new(),
@@ -56,9 +76,13 @@ impl Scheduler {
         self.batcher.waiting() > 0 || !self.running.is_empty()
     }
 
-    /// Why `req` can never be served, if so: checked before a KV slot is
-    /// committed. `None` means the request is admissible (and with a
-    /// free slot, `kv.alloc` cannot fail).
+    /// Why `req` can never be served, if so: checked before a KV lane is
+    /// committed. `None` means the request is admissible — though it may
+    /// still have to *wait* for lanes or blocks. A prompt of exactly
+    /// `cap - m_max` tokens is admissible with zero decode room: it is
+    /// served its prefill token and finished with `Length` immediately
+    /// (the pre-paging `alloc` admitted it and relied on overflow
+    /// asserts downstream).
     pub fn admission_error(&self, req: &Request) -> Option<String> {
         let m = &self.engine.session.manifest;
         let kv = &self.engine.kv;
@@ -74,7 +98,7 @@ impl Scheduler {
         }
         if kv.m_max + req.prompt.len() > kv.cap {
             return Some(format!(
-                "prompt does not fit a kv slot: {} prefix + {} prompt > cap {}",
+                "prompt does not fit the kv space: {} prefix + {} prompt > cap {}",
                 kv.m_max,
                 req.prompt.len(),
                 kv.cap
@@ -104,52 +128,68 @@ impl Scheduler {
     pub fn step(&mut self) -> crate::Result<usize> {
         let mut produced = 0;
 
-        // 1) admit waiting prefills into every free slot. Inadmissible
-        //    requests are rejected even when no slot is free — a poisoned
-        //    queue must drain instead of festering behind long runners.
+        // 1) admission, oldest-submission first across fresh requests
+        //    and preempted resumes. Inadmissible requests are rejected
+        //    even when nothing can be admitted — a poisoned queue must
+        //    drain instead of festering behind long runners. Admission
+        //    stops when a lane or the block pool says "wait".
         loop {
-            let Some(req) = self.batcher.pop() else { break };
-            if let Some(why) = self.admission_error(&req) {
-                self.reject(req, why);
-                continue;
-            }
-            if self.engine.kv.free_count() == 0 {
-                self.batcher.push_front(req);
-                break;
-            }
-            let Some(slot) = self.engine.kv.alloc(req.id, req.prompt.len()) else {
-                // unreachable after admission_error + free_count guard,
-                // but a rejection is still strictly better than a crash
-                self.reject(req, "no free kv slot".to_string());
-                continue;
-            };
-            let t0 = std::time::Instant::now();
-            match self.engine.prefill(slot, &req.prompt) {
-                Ok(first) => {
-                    self.metrics.record_prefill(t0.elapsed().as_secs_f64());
-                    let mut running = Running::new(req, slot);
-                    // NOTE: `first` is generated but its KV is not cached
-                    // yet; kv.tok_len stays at prompt_len until the decode
-                    // step that feeds it (the cache invariant: tok_len ==
-                    // cached tokens).
-                    running.push_token(first);
-                    if running.request.stream {
-                        self.token_events.push((running.request.id, first));
+            let Some(next) = self.batcher.pop_next() else { break };
+            match next {
+                Admit::New(req) => {
+                    if let Some(why) = self.admission_error(&req) {
+                        self.reject(req, why);
+                        continue;
                     }
-                    produced += 1;
-                    self.maybe_finish(slot, running);
+                    if self.engine.kv.free_count() == 0
+                        || !self.engine.kv.can_admit(&req.prompt, req.max_new_tokens)
+                    {
+                        self.batcher.push_front(req);
+                        break;
+                    }
+                    let Some(slot) =
+                        self.engine.kv.alloc_with_prompt(req.id, &req.prompt)
+                    else {
+                        // the pool moved between can_admit and alloc
+                        // (conservative math) — wait, don't reject
+                        self.batcher.push_front(req);
+                        break;
+                    };
+                    produced += self.admit_prefill(slot, Running::new(req, slot));
                 }
-                Err(e) => {
-                    // prefill consumes only this request's input, so its
-                    // failure is request-scoped: free the slot, error the
-                    // request, keep the engine alive.
-                    self.engine.kv.free(slot);
-                    self.reject(req, format!("prefill failed: {e:#}"));
+                Admit::Resume(run) => {
+                    let tokens = run.resume_tokens();
+                    // the real remaining budget: a resume one token shy
+                    // of max_new needs no decode room beyond its prefill
+                    let budget = run
+                        .request
+                        .max_new_tokens
+                        .saturating_sub(run.generated.len())
+                        .max(1);
+                    if self.engine.kv.free_count() == 0
+                        || !self.engine.kv.can_admit(&tokens, budget)
+                    {
+                        self.batcher.push_resume(run);
+                        break;
+                    }
+                    let Some(slot) = self
+                        .engine
+                        .kv
+                        .alloc_with_prompt(run.request.id, &tokens)
+                    else {
+                        self.batcher.push_resume(run);
+                        break;
+                    };
+                    produced += self.resume_prefill(slot, run, &tokens);
                 }
             }
         }
 
-        // 2) batched decode over all running slots
+        // 2) every running sequence must be able to cache the token this
+        //    step feeds it; preempt the youngest when the pool is dry
+        self.ensure_decode_room();
+
+        // 3) batched decode over all running slots
         if !self.running.is_empty() {
             let b = self.engine.kv.n_slots;
             let mut tokens = vec![PAD; b];
@@ -178,7 +218,155 @@ impl Scheduler {
                 self.maybe_finish(slot, run);
             }
         }
+        self.metrics.record_pool(self.engine.kv.pool_stats());
         Ok(produced)
+    }
+
+    /// Prefill a freshly admitted request; returns produced tokens (1 on
+    /// success).
+    fn admit_prefill(&mut self, slot: usize, mut running: Running) -> usize {
+        let t0 = std::time::Instant::now();
+        match self.engine.prefill(slot, &running.request.prompt) {
+            Ok(first) => {
+                self.metrics.record_prefill(t0.elapsed().as_secs_f64());
+                // NOTE: `first` is generated but its KV is not cached
+                // yet; kv.tok_len stays at prompt_len until the decode
+                // step that feeds it (the cache invariant: tok_len ==
+                // cached tokens).
+                running.push_token(first);
+                if running.request.stream {
+                    self.token_events.push((running.request.id, first));
+                }
+                self.maybe_finish(slot, running);
+                1
+            }
+            Err(e) => {
+                // prefill consumes only this request's input, so its
+                // failure is request-scoped: free the lane, error the
+                // request, keep the engine alive.
+                self.engine.kv.free(slot);
+                self.reject(running.request, format!("prefill failed: {e:#}"));
+                0
+            }
+        }
+    }
+
+    /// Re-prefill a preempted sequence (`prompt ++ generated`) and
+    /// continue it; returns produced tokens (1 on success).
+    fn resume_prefill(&mut self, slot: usize, mut run: Running, tokens: &[i32]) -> usize {
+        let t0 = std::time::Instant::now();
+        match self.engine.prefill(slot, tokens) {
+            Ok(next) => {
+                self.metrics.record_prefill(t0.elapsed().as_secs_f64());
+                run.slot = slot;
+                run.push_token(next);
+                if run.request.stream {
+                    self.token_events.push((run.request.id, next));
+                }
+                self.maybe_finish(slot, run);
+                1
+            }
+            Err(e) => {
+                self.engine.kv.free(slot);
+                let id = run.request.id;
+                log::debug!("resume of request {id} failed: {e:#}");
+                let resp = run
+                    .into_response(FinishReason::Error(format!("resume failed: {e:#}")));
+                self.metrics.record_finished(&resp);
+                self.finished.push(resp);
+                0
+            }
+        }
+    }
+
+    /// Guarantee each running sequence a block for this step's KV write,
+    /// preempting the youngest running sequence (never the oldest — the
+    /// anti-starvation invariant) while the pool is dry. When no other
+    /// victim exists the starved sequence preempts *itself* (waiting in
+    /// the resume queue costs latency, not tokens; progress is
+    /// guaranteed because a lone resume always fits the pool floor and
+    /// each resume cycle generates at least its prefill token). Only a
+    /// sequence that can never be resumed — its re-prefill would exceed
+    /// the prefill window — is finished early with `Length`.
+    fn ensure_decode_room(&mut self) {
+        let seq_len = self.engine.session.manifest.seq_len;
+        let mut slots: Vec<usize> = self.running.keys().copied().collect();
+        slots.sort_unstable();
+        for slot in slots {
+            if !self.running.contains_key(&slot) {
+                continue; // preempted while making room for an earlier slot
+            }
+            loop {
+                if self.engine.kv.ensure_append(slot) {
+                    break;
+                }
+                match self.pick_victim() {
+                    Some(victim) => {
+                        let preempted_self = victim == slot;
+                        self.preempt(victim);
+                        if preempted_self {
+                            break;
+                        }
+                    }
+                    None => {
+                        let run = &self.running[&slot];
+                        let resumable = run.request.prompt.len()
+                            + run.generated.len()
+                            <= seq_len;
+                        if resumable {
+                            self.preempt(slot);
+                        } else {
+                            // unresumable and the pool cannot grow it:
+                            // the only honest terminal is truncation
+                            let run = self.running.remove(&slot).unwrap();
+                            self.engine.kv.free(slot);
+                            let resp = run.into_response(FinishReason::Length);
+                            self.metrics.record_finished(&resp);
+                            self.finished.push(resp);
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    /// The preemption victim: the youngest-submitted running sequence
+    /// that can be resumed later (its re-prefill must fit the prefill
+    /// window), excluding the oldest running sequence.
+    fn pick_victim(&self) -> Option<usize> {
+        if self.running.len() < 2 {
+            return None;
+        }
+        let seq_len = self.engine.session.manifest.seq_len;
+        let oldest = self
+            .running
+            .iter()
+            .min_by_key(|(_, r)| (r.request.submitted, r.request.id))
+            .map(|(&s, _)| s)?;
+        self.running
+            .iter()
+            .filter(|&(&s, r)| {
+                s != oldest
+                    && r.request.prompt.len() + r.generated.len() <= seq_len
+            })
+            .max_by_key(|(_, r)| (r.request.submitted, r.request.id))
+            .map(|(&s, _)| s)
+    }
+
+    /// Move a running sequence back to the queue: free its lane and
+    /// non-shared blocks (full prompt blocks are donated to the prefix
+    /// cache on the way out) and let it resume by re-prefill.
+    fn preempt(&mut self, slot: usize) {
+        let run = self.running.remove(&slot).unwrap();
+        log::debug!(
+            "preempting request {} ({} generated) — kv pool dry",
+            run.request.id,
+            run.generated.len()
+        );
+        self.engine.kv.free(slot);
+        self.metrics.record_preempted();
+        self.batcher.push_resume(run);
     }
 
     fn maybe_finish(&mut self, slot: usize, run: Running) {
@@ -217,12 +405,17 @@ impl Scheduler {
     }
 
     /// Cancel one request (client disconnect): drops it from the waiting
-    /// queue, or frees its KV slot if already running. Returns true if
-    /// the request was found in either place.
+    /// queue (fresh or preempted), or frees its KV lane if running.
+    /// Returns true if the request was found anywhere.
     pub fn cancel(&mut self, id: RequestId) -> bool {
         if let Some(req) = self.batcher.remove(id) {
             self.metrics.record_cancelled();
             self.finished.push(Response::cancelled(req.id, req.echo_text));
+            return true;
+        }
+        if let Some(run) = self.batcher.remove_resume(id) {
+            self.metrics.record_cancelled();
+            self.finished.push(run.into_response(FinishReason::Cancelled));
             return true;
         }
         let slot = self
@@ -251,9 +444,16 @@ impl Scheduler {
             self.metrics.record_cancelled();
             self.finished.push(run.into_response(FinishReason::Cancelled));
         }
-        while let Some(req) = self.batcher.pop() {
+        while let Some(next) = self.batcher.pop_next() {
             self.metrics.record_cancelled();
-            self.finished.push(Response::cancelled(req.id, req.echo_text));
+            match next {
+                Admit::New(req) => {
+                    self.finished.push(Response::cancelled(req.id, req.echo_text));
+                }
+                Admit::Resume(run) => {
+                    self.finished.push(run.into_response(FinishReason::Cancelled));
+                }
+            }
         }
     }
 }

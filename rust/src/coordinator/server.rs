@@ -18,7 +18,8 @@
 //! Summary line (always the request's final line):
 //!   {"id": 7, "tokens": [42, 17], "finish": "max_tokens",
 //!    "ttft_ms": 12.1, "tpot_ms": 4.0, "text": "..."}
-//! where "finish" is one of "max_tokens" | "stop_token" | "cancelled" |
+//! where "finish" is one of "max_tokens" | "stop_token" | "length"
+//! (KV capacity reached) | "cancelled" |
 //! "error"; on "error" the line also carries "error": "<why>" and "text"
 //! appears only when "echo_text" was set.
 //!

@@ -15,6 +15,10 @@ pub fn cushion_path(variant: &str, name: &str) -> PathBuf {
         .join(format!("{name}.bin"))
 }
 
+/// Atomic save: the bytes land in `<name>.bin.tmp` and are renamed into
+/// place, so a crash mid-write can never leave a torn `<name>.bin` for
+/// the next load to install as the shared prefix KV (rename within one
+/// directory is atomic on POSIX).
 pub fn save_cushion(variant: &str, name: &str, c: &Cushion) -> crate::Result<PathBuf> {
     let path = cushion_path(variant, name);
     std::fs::create_dir_all(path.parent().unwrap())?;
@@ -31,7 +35,10 @@ pub fn save_cushion(variant: &str, name: &str, c: &Cushion) -> crate::Result<Pat
     for v in &c.kv.data {
         buf.extend_from_slice(&v.to_le_bytes());
     }
-    std::fs::write(&path, buf)?;
+    let tmp = path.with_extension("bin.tmp");
+    std::fs::write(&tmp, buf)?;
+    std::fs::rename(&tmp, &path)
+        .map_err(|e| anyhow::anyhow!("installing {path:?}: {e}"))?;
     Ok(path)
 }
 
@@ -64,11 +71,21 @@ mod tests {
             len: 3,
             kv: Tensor::new(vec![2, 2], vec![1.0, -2.0, 3.5, 0.0]),
         };
-        save_cushion("vtest", "default", &c).unwrap();
+        let path = save_cushion("vtest", "default", &c).unwrap();
+        assert!(
+            !path.with_extension("bin.tmp").exists(),
+            "atomic save must not leave the staging file behind"
+        );
         let back = load_cushion("vtest", "default").unwrap();
         assert_eq!(back.tokens, c.tokens);
         assert_eq!(back.kv, c.kv);
         assert!(load_cushion("vtest", "missing").is_err());
+
+        // a torn file (e.g. a partial copy) errors instead of yielding a
+        // silently-truncated cushion
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(load_cushion("vtest", "default").is_err(), "torn file");
         std::env::remove_var("CUSHION_ARTIFACTS");
     }
 }

@@ -110,7 +110,7 @@ pub fn install_tuned(session: &mut Session, prefix_tokens: &[i32],
         tokens: prefix_tokens.to_vec(),
         len: prefix_tokens.len(),
         kv: res.kv.clone(),
-    });
+    })?;
     Ok(res)
 }
 

@@ -164,7 +164,7 @@ fn run() -> anyhow::Result<()> {
                 tokens: res.prefix.clone(),
                 len: res.prefix.len(),
                 kv,
-            });
+            })?;
             // 4) recalibrate with the cushion in place + final eval
             calibrate::calibrate_into(&mut s, scheme.act_levels(), 8)?;
             let after = perplexity::perplexity(&s, &scheme, "heldout", 8)?;
@@ -277,7 +277,7 @@ fn load_session(args: &cushioncache::util::cli::Args) -> anyhow::Result<Session>
     if !name.is_empty() {
         let c = cushion::load_cushion(&s.manifest.variant, name)?;
         log::info!("loaded cushion '{name}' ({} tokens)", c.len);
-        s.set_cushion(c);
+        s.set_cushion(c)?;
     }
     Ok(s)
 }

@@ -1545,6 +1545,302 @@ pub fn run_decode(spec: &ModelSpec, params: &Params, mode: Mode,
 }
 
 // ---------------------------------------------------------------------------
+// Paged serving (coordinator::kvpool): block-table variants of prefill and
+// decode. KV lives in a pool tensor [n_blocks, L, 2, Hkv, BS, dh]; a
+// sequence's block table maps logical position p to pool row
+// (table[p / BS], p % BS). Positions [0, m_max) are the cushion region
+// (stored once in shared blocks), [m_max, ..) the request tokens. The
+// math is identical to run_prefill / run_decode — same embedding, RoPE,
+// quant sites, and the very same `attention` over a table-gathered
+// [Hkv, m + len + 1, dh] key/value window (positions past the window are
+// fully masked in the contiguous path, so the reduced window is
+// bit-identical; see the masking proof in `attention_mask`).
+// ---------------------------------------------------------------------------
+
+/// Pool geometry parsed (and validated) from the pool tensor shape.
+struct PoolView {
+    n_blocks: usize,
+    bs: usize,
+    block_elems: usize,
+}
+
+fn pool_view(spec: &ModelSpec, pool: &Tensor, what: &str) -> crate::Result<PoolView> {
+    anyhow::ensure!(
+        pool.shape.len() == 6
+            && pool.shape[1] == spec.n_layers
+            && pool.shape[2] == 2
+            && pool.shape[3] == spec.n_kv_heads
+            && pool.shape[5] == spec.d_head,
+        "{what}: pool shape {:?} does not match [n, L, 2, Hkv, BS, dh]",
+        pool.shape
+    );
+    let bs = pool.shape[4];
+    anyhow::ensure!(bs > 0, "{what}: zero block size");
+    Ok(PoolView {
+        n_blocks: pool.shape[0],
+        bs,
+        block_elems: spec.n_layers * 2 * spec.n_kv_heads * bs * spec.d_head,
+    })
+}
+
+impl PoolView {
+    /// Flat offset of the dh-row at (block id, layer, k|v, head,
+    /// in-block position).
+    fn row(&self, spec: &ModelSpec, id: usize, l: usize, w: usize, h: usize,
+           q: usize) -> usize {
+        id * self.block_elems
+            + (((l * 2 + w) * spec.n_kv_heads + h) * self.bs + q) * spec.d_head
+    }
+
+    /// Resolve logical position `p` through a block table.
+    fn locate(&self, table: &[i32], p: usize, what: &str)
+              -> crate::Result<(usize, usize)> {
+        let bi = p / self.bs;
+        let id = *table.get(bi).ok_or_else(|| {
+            anyhow::anyhow!("{what}: position {p} beyond the block table")
+        })?;
+        anyhow::ensure!(
+            id >= 0 && (id as usize) < self.n_blocks,
+            "{what}: position {p} maps to invalid block {id}"
+        );
+        Ok((id as usize, p % self.bs))
+    }
+}
+
+/// serving.prefill over the block pool: one prompt written through its
+/// block table. Returns (pool', last_logits [V]).
+#[allow(clippy::too_many_arguments)]
+pub fn run_prefill_paged(spec: &ModelSpec, params: &Params, mode: Mode,
+                         pool: &Tensor, table: &[i32], prefix_kv: &Tensor,
+                         cushion_len: i32, tokens: &[i32], tok_len: i32,
+                         ranges: &Tensor, levels: f32, kv_levels: f32,
+                         inv_smooth: &Tensor)
+                         -> crate::Result<(Tensor, Tensor)> {
+    let (d, dh, hq, hkv, m) = (spec.d_model, spec.d_head, spec.n_heads,
+                               spec.n_kv_heads, spec.m_max);
+    let s = tokens.len();
+    let pv = pool_view(spec, pool, "prefill_paged")?;
+    anyhow::ensure!(
+        table.len() * pv.bs >= m + s,
+        "prefill_paged: table covers {} positions, prompt needs {}",
+        table.len() * pv.bs,
+        m + s
+    );
+    let mut pool = pool.clone();
+
+    let mut qctx = QuantCtx::serving(mode, levels, ranges, inv_smooth);
+    qctx.valid = Some((0..s).map(|i| (i as i32) < tok_len).collect());
+
+    let embed = params.get("embed")?;
+    let mut x = vec![0.0f32; s * d];
+    for (r, &t) in tokens.iter().enumerate() {
+        anyhow::ensure!(t >= 0 && (t as usize) < spec.vocab,
+                        "prefill_paged: token {t} outside vocab");
+        x[r * d..(r + 1) * d].copy_from_slice(embed.row(t as usize));
+    }
+    let positions: Vec<i32> = (0..s as i32).map(|i| cushion_len + i).collect();
+    if spec.pos == PosKind::Learned {
+        let pos_emb = params.get("pos_emb")?;
+        for r in 0..s {
+            let p = positions[r] as usize;
+            anyhow::ensure!(p < pos_emb.shape[0],
+                            "prefill_paged: position overflow");
+            for i in 0..d {
+                x[r * d + i] += pos_emb.data[p * d + i];
+            }
+        }
+    }
+
+    for l in 0..spec.n_layers {
+        let p = layer_p(spec, params, l)?;
+        let h = match spec.norm {
+            NormKind::RmsPre => rmsnorm(&x, s, d, &p.ln1_g.data),
+            NormKind::LnPost => x.clone(),
+        };
+        let h = qctx.site(h, 1, s, d, l, 0);
+        let mut q = to_heads(&matmul(&h, s, d, p.wq), 1, s, hq, dh);
+        let mut k = to_heads(&matmul(&h, s, d, p.wk), 1, s, hkv, dh);
+        let mut v = to_heads(&matmul(&h, s, d, p.wv), 1, s, hkv, dh);
+        if spec.pos == PosKind::Rope {
+            rope_rotate(&mut q, hq, s, dh, &positions, spec.rope_theta, false);
+            rope_rotate(&mut k, hkv, s, dh, &positions, spec.rope_theta, false);
+        }
+        kv_maybe_quant(&mut k, &mut v, hkv, s, dh, kv_levels);
+        // write this layer's token KV through the block table
+        for (which, t) in [(0usize, &k), (1usize, &v)] {
+            for kh in 0..hkv {
+                for si in 0..s {
+                    let src = (kh * s + si) * dh;
+                    let (id, q_in) =
+                        pv.locate(table, m + si, "prefill_paged")?;
+                    let dst = pv.row(spec, id, l, which, kh, q_in);
+                    pool.data[dst..dst + dh]
+                        .copy_from_slice(&t[src..src + dh]);
+                }
+            }
+        }
+        let kf = concat_prefix(spec, prefix_kv, l, 0, &k, 0, s);
+        let vf = concat_prefix(spec, prefix_kv, l, 1, &v, 0, s);
+        let (o, _) = attention(spec, l, &q, &kf, &vf, s, m + s, cushion_len,
+                               0, None, false);
+        let o = from_heads(&o, 1, s, hq, dh);
+        let o = qctx.site(o, 1, s, hq * dh, l, 1);
+        let attn_out = matmul(&o, s, hq * dh, p.wo);
+        x = block_tail(spec, &mut qctx, &p, x, &attn_out, 1, s, l)?;
+    }
+
+    let hfin = match spec.norm {
+        NormKind::RmsPre => rmsnorm(&x, s, d, &params.get("lnf_g")?.data),
+        NormKind::LnPost => layernorm(&x, s, d, &params.get("lnf_g")?.data,
+                                      &params.get("lnf_b")?.data),
+    };
+    let logits = matmul(&hfin, s, d, params.get("lm_head")?);
+    let last_row = (tok_len - 1).max(0) as usize;
+    let v = spec.vocab;
+    let last = logits[last_row * v..(last_row + 1) * v].to_vec();
+    Ok((pool, Tensor::new(vec![v], last)))
+}
+
+/// serving.decode over the block pool: one step for all `B` lanes, KV
+/// read and written through per-lane block tables (true paged
+/// attention — only mapped blocks are touched, the attention window is
+/// [Hkv, m + len + 1, dh] instead of a full-capacity row).
+///
+/// Lanes whose table row is empty (all -1) are *inactive*: they skip the
+/// KV write and attend over nothing (zero attention output). Their
+/// logits are discarded by every caller. Note for the dynamic
+/// quantization modes (ptd/ptk): inactive-lane rows still participate in
+/// batch-wide dynamic ranges — exactly like the contiguous path — but
+/// their attention output differs from the contiguous path's
+/// stale-cache garbage, so cross-path parity on dynamic modes holds for
+/// fully-occupied batches (the parity tests use full occupancy).
+#[allow(clippy::too_many_arguments)]
+pub fn run_decode_paged(spec: &ModelSpec, params: &Params, mode: Mode,
+                        pool: &Tensor, tables: &[i32], n_lanes: usize,
+                        cache_tok_len: &[i32], cushion_len: i32,
+                        tokens: &[i32], ranges: &Tensor, levels: f32,
+                        kv_levels: f32, inv_smooth: &Tensor)
+                        -> crate::Result<(Tensor, Tensor)> {
+    let (d, dh, hq, hkv, m) = (spec.d_model, spec.d_head, spec.n_heads,
+                               spec.n_kv_heads, spec.m_max);
+    let b = tokens.len();
+    anyhow::ensure!(b == n_lanes, "decode_paged: token batch != table lanes");
+    anyhow::ensure!(cache_tok_len.len() == b, "decode_paged: bad lens");
+    anyhow::ensure!(b > 0 && tables.len() % b == 0,
+                    "decode_paged: ragged tables");
+    let width = tables.len() / b;
+    let pv = pool_view(spec, pool, "decode_paged")?;
+    let lane_table = |bi: usize| &tables[bi * width..(bi + 1) * width];
+    let active: Vec<bool> =
+        (0..b).map(|bi| lane_table(bi).iter().any(|&id| id >= 0)).collect();
+    let mut pool = pool.clone();
+
+    let mut qctx = QuantCtx::serving(mode, levels, ranges, inv_smooth);
+
+    let embed = params.get("embed")?;
+    let mut x = vec![0.0f32; b * d];
+    for (bi, &t) in tokens.iter().enumerate() {
+        anyhow::ensure!(t >= 0 && (t as usize) < spec.vocab,
+                        "decode_paged: token {t} outside vocab");
+        x[bi * d..(bi + 1) * d].copy_from_slice(embed.row(t as usize));
+    }
+    let positions: Vec<i32> = cache_tok_len
+        .iter()
+        .map(|&len| cushion_len + len)
+        .collect();
+    if spec.pos == PosKind::Learned {
+        let pos_emb = params.get("pos_emb")?;
+        for bi in 0..b {
+            let p = positions[bi] as usize;
+            anyhow::ensure!(p < pos_emb.shape[0],
+                            "decode_paged: position overflow");
+            for i in 0..d {
+                x[bi * d + i] += pos_emb.data[p * d + i];
+            }
+        }
+    }
+
+    for l in 0..spec.n_layers {
+        let p = layer_p(spec, params, l)?;
+        let h = match spec.norm {
+            NormKind::RmsPre => rmsnorm(&x, b, d, &p.ln1_g.data),
+            NormKind::LnPost => x.clone(),
+        };
+        let h = qctx.site(h, b, 1, d, l, 0);
+        let mut q = to_heads(&matmul(&h, b, d, p.wq), b, 1, hq, dh);
+        let mut k = to_heads(&matmul(&h, b, d, p.wk), b, 1, hkv, dh);
+        let mut v = to_heads(&matmul(&h, b, d, p.wv), b, 1, hkv, dh);
+        if spec.pos == PosKind::Rope {
+            for bi in 0..b {
+                rope_rotate(&mut q[bi * hq * dh..(bi + 1) * hq * dh], hq, 1,
+                            dh, &positions[bi..bi + 1], spec.rope_theta,
+                            false);
+                rope_rotate(&mut k[bi * hkv * dh..(bi + 1) * hkv * dh], hkv,
+                            1, dh, &positions[bi..bi + 1], spec.rope_theta,
+                            false);
+            }
+        }
+        kv_maybe_quant(&mut k, &mut v, b * hkv, 1, dh, kv_levels);
+        // scatter each active lane's new KV row through its table
+        for bi in 0..b {
+            if !active[bi] {
+                continue;
+            }
+            let off = m + cache_tok_len[bi] as usize;
+            for which in 0..2 {
+                let t = if which == 0 { &k } else { &v };
+                for kh in 0..hkv {
+                    let src = (bi * hkv + kh) * dh;
+                    let (id, q_in) =
+                        pv.locate(lane_table(bi), off, "decode_paged")?;
+                    let dst = pv.row(spec, id, l, which, kh, q_in);
+                    pool.data[dst..dst + dh]
+                        .copy_from_slice(&t[src..src + dh]);
+                }
+            }
+        }
+        // paged attention: gather only the mapped window per lane
+        let mut o = vec![0.0f32; b * hq * dh];
+        for bi in 0..b {
+            if !active[bi] {
+                continue; // zero attention output for empty lanes
+            }
+            let len = cache_tok_len[bi] as usize;
+            let skv = m + len + 1;
+            let mut kf = vec![0.0f32; hkv * skv * dh];
+            let mut vf = vec![0.0f32; hkv * skv * dh];
+            for j in 0..skv {
+                let (id, q_in) = pv.locate(lane_table(bi), j, "decode_paged")?;
+                for kh in 0..hkv {
+                    let ks = pv.row(spec, id, l, 0, kh, q_in);
+                    let vs = pv.row(spec, id, l, 1, kh, q_in);
+                    let dst = (kh * skv + j) * dh;
+                    kf[dst..dst + dh].copy_from_slice(&pool.data[ks..ks + dh]);
+                    vf[dst..dst + dh].copy_from_slice(&pool.data[vs..vs + dh]);
+                }
+            }
+            let qb = &q[bi * hq * dh..(bi + 1) * hq * dh];
+            let (ob, _) = attention(spec, l, qb, &kf, &vf, 1, skv,
+                                    cushion_len, cache_tok_len[bi], None,
+                                    false);
+            o[bi * hq * dh..(bi + 1) * hq * dh].copy_from_slice(&ob);
+        }
+        let o = from_heads(&o, b, 1, hq, dh);
+        let o = qctx.site(o, b, 1, hq * dh, l, 1);
+        let attn_out = matmul(&o, b, hq * dh, p.wo);
+        x = block_tail(spec, &mut qctx, &p, x, &attn_out, b, 1, l)?;
+    }
+
+    let hfin = match spec.norm {
+        NormKind::RmsPre => rmsnorm(&x, b, d, &params.get("lnf_g")?.data),
+        NormKind::LnPost => layernorm(&x, b, d, &params.get("lnf_g")?.data,
+                                      &params.get("lnf_b")?.data),
+    };
+    let logits = matmul(&hfin, b, d, params.get("lm_head")?);
+    Ok((pool, Tensor::new(vec![b, spec.vocab], logits)))
+}
+
+// ---------------------------------------------------------------------------
 // tune_step (graphs.make_tune_step): one Adam step of quantization-aware
 // prefix tuning — forward with a tape, hand-derived backward wrt the
 // prefix KV only (the weights are constants here), exactly the gradient

@@ -34,6 +34,11 @@ pub struct Manifest {
     pub prefill_buckets: Vec<usize>,
     pub m_max: usize,
     pub cache_cap: usize,
+    /// Paged KV pool geometry (coordinator::kvpool). 0 = derive: block
+    /// size min(16, m_max) tokens; pool sized so every serve lane can
+    /// reach cache_cap with the cushion run shared once.
+    pub kv_block_size: usize,
+    pub kv_pool_blocks: usize,
     pub serve_batch: usize,
     pub eval_batch: usize,
     pub score_batch: usize,
@@ -107,6 +112,14 @@ impl Manifest {
             prefill_buckets,
             m_max: v.req_usize("m_max")?,
             cache_cap: v.req_usize("cache_cap")?,
+            kv_block_size: v
+                .get("kv_block_size")
+                .and_then(Value::as_usize)
+                .unwrap_or(0),
+            kv_pool_blocks: v
+                .get("kv_pool_blocks")
+                .and_then(Value::as_usize)
+                .unwrap_or(0),
             serve_batch: v.req_usize("serve_batch")?,
             eval_batch: v.req_usize("eval_batch")?,
             score_batch: v.req_usize("score_batch")?,
@@ -157,6 +170,21 @@ mod tests {
         assert_eq!(m.graphs.len(), 2);
         // pre-bucket manifests degrade to one full-length bucket
         assert_eq!(m.prefill_buckets, vec![128]);
+        // pre-paging manifests derive the pool geometry (0 = auto)
+        assert_eq!(m.kv_block_size, 0);
+        assert_eq!(m.kv_pool_blocks, 0);
+    }
+
+    #[test]
+    fn kv_pool_fields_parse_when_present() {
+        let with = SAMPLE.replacen(
+            "\"cache_cap\": 144,",
+            "\"cache_cap\": 144, \"kv_block_size\": 8, \"kv_pool_blocks\": 40,",
+            1,
+        );
+        let m = Manifest::parse(&with).unwrap();
+        assert_eq!(m.kv_block_size, 8);
+        assert_eq!(m.kv_pool_blocks, 40);
     }
 
     #[test]

@@ -276,18 +276,47 @@ impl Session {
         Ok(out.into_iter().next().unwrap())
     }
 
-    /// Install a cushion directly (search/tune/store results).
-    pub fn set_cushion(&mut self, c: Cushion) {
+    /// Validate a cushion against this variant's geometry. The KV must
+    /// be exactly `[L, 2, Hkv, m_max, dh]` and finite — a torn or
+    /// cross-variant cushion file must error here, *before* it poisons
+    /// the serving pool's shared prefix blocks.
+    pub fn validate_cushion(&self, c: &Cushion) -> crate::Result<()> {
+        let m = &self.manifest;
+        let want = vec![m.n_layers, 2, m.n_kv_heads, m.m_max, m.d_head];
+        anyhow::ensure!(
+            c.kv.shape == want,
+            "cushion KV shape {:?} does not match this variant's \
+             [L, 2, Hkv, m_max, dh] = {want:?}",
+            c.kv.shape
+        );
+        anyhow::ensure!(
+            c.len == c.tokens.len() && c.len <= m.m_max,
+            "cushion length {} inconsistent ({} tokens, m_max {})",
+            c.len,
+            c.tokens.len(),
+            m.m_max
+        );
+        anyhow::ensure!(
+            c.kv.data.iter().all(|v| v.is_finite()),
+            "cushion KV contains non-finite values"
+        );
+        Ok(())
+    }
+
+    /// Install a cushion directly (search/tune/store results). Rejects
+    /// shape/length mismatches (`validate_cushion`).
+    pub fn set_cushion(&mut self, c: Cushion) -> crate::Result<()> {
+        self.validate_cushion(&c)?;
         self.cushion = Some(c);
         self.pool.invalidate(resident::KEY_PREFIX_KV);
         self.pool.invalidate(resident::KEY_PREFIX_LEN);
+        Ok(())
     }
 
     /// Install a cushion from prefix tokens (computes its KV).
     pub fn set_cushion_tokens(&mut self, tokens: &[i32]) -> crate::Result<()> {
         let kv = self.compute_prefix_kv(tokens)?;
-        self.set_cushion(Cushion { tokens: tokens.to_vec(), len: tokens.len(), kv });
-        Ok(())
+        self.set_cushion(Cushion { tokens: tokens.to_vec(), len: tokens.len(), kv })
     }
 
     pub fn clear_cushion(&mut self) {

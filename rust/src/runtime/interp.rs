@@ -20,7 +20,8 @@ use crate::model::manifest::Manifest;
 use crate::runtime::literalx::{HostValue, IntTensor};
 use crate::util::tensor::Tensor;
 
-/// The graph inventory the interpreter implements (graphs.py).
+/// The graph inventory the interpreter implements (graphs.py, plus the
+/// interpreter-native paged serving ops of coordinator::kvpool).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Op {
     Fwd(Mode),
@@ -30,6 +31,11 @@ pub enum Op {
     TuneStep,
     Prefill { mode: Mode, sampled: bool },
     Decode { mode: Mode, sampled: bool },
+    /// Block-table prefill over the pool tensor (`prefill_paged_<mode>`,
+    /// no compiled counterpart — the hermetic true-paging path).
+    PrefillPaged(Mode),
+    /// Block-table decode over the pool tensor (`decode_paged_<mode>`).
+    DecodePaged(Mode),
 }
 
 /// A resolved interpreter program: the variant's architecture plus the
@@ -59,10 +65,14 @@ impl InterpProgram {
             Op::Fwd(Mode::parse(mode)?)
         } else if let Some(rest) = base.strip_prefix("prefill_sampled_") {
             Op::Prefill { mode: Mode::parse(strip_bucket(rest))?, sampled: true }
+        } else if let Some(mode) = base.strip_prefix("prefill_paged_") {
+            Op::PrefillPaged(Mode::parse(mode)?)
         } else if let Some(mode) = base.strip_prefix("prefill_") {
             Op::Prefill { mode: Mode::parse(mode)?, sampled: false }
         } else if let Some(rest) = base.strip_prefix("decode_sampled_") {
             Op::Decode { mode: Mode::parse(strip_bucket(rest))?, sampled: true }
+        } else if let Some(mode) = base.strip_prefix("decode_paged_") {
+            Op::DecodePaged(Mode::parse(mode)?)
         } else if let Some(mode) = base.strip_prefix("decode_") {
             Op::Decode { mode: Mode::parse(mode)?, sampled: false }
         } else {
@@ -206,6 +216,50 @@ impl InterpProgram {
                 } else {
                     Ok(vec![HostValue::F32(cache), HostValue::F32(last)])
                 }
+            }
+            Op::PrefillPaged(mode) => {
+                x.arity(10)?;
+                let table = x.i32(1, "block_table")?;
+                let tokens = x.i32(4, "tokens")?;
+                let (pool, last) = forward::run_prefill_paged(
+                    spec,
+                    &params,
+                    mode,
+                    x.f32(0, "pool")?,
+                    &table.data,
+                    x.f32(2, "prefix_kv")?,
+                    x.scalar_i32(3, "cushion_len")?,
+                    &tokens.data,
+                    x.scalar_i32(5, "tok_len")?,
+                    x.f32(6, "ranges")?,
+                    x.scalar_f32(7, "levels")?,
+                    x.scalar_f32(8, "kv_levels")?,
+                    x.f32(9, "inv_smooth")?,
+                )?;
+                Ok(vec![HostValue::F32(pool), HostValue::F32(last)])
+            }
+            Op::DecodePaged(mode) => {
+                x.arity(9)?;
+                let tables = x.i32(1, "block_tables")?;
+                let lens = x.i32(2, "cache_tok_len")?;
+                let tokens = x.i32(4, "tokens")?;
+                let (n_lanes, _w) = dims2(&tables.shape, "block_tables")?;
+                let (pool, logits) = forward::run_decode_paged(
+                    spec,
+                    &params,
+                    mode,
+                    x.f32(0, "pool")?,
+                    &tables.data,
+                    n_lanes,
+                    &lens.data,
+                    x.scalar_i32(3, "cushion_len")?,
+                    &tokens.data,
+                    x.f32(5, "ranges")?,
+                    x.scalar_f32(6, "levels")?,
+                    x.scalar_f32(7, "kv_levels")?,
+                    x.f32(8, "inv_smooth")?,
+                )?;
+                Ok(vec![HostValue::F32(pool), HostValue::F32(logits)])
             }
             Op::Decode { mode, sampled } => {
                 x.arity(8)?;
@@ -355,6 +409,8 @@ mod tests {
                 "decode_sampled_ptk",
                 Op::Decode { mode: Mode::Ptk, sampled: true },
             ),
+            ("prefill_paged_fp", Op::PrefillPaged(Mode::Fp)),
+            ("decode_paged_pts", Op::DecodePaged(Mode::Pts)),
         ] {
             let p = InterpProgram::parse(s.clone(), name).unwrap();
             assert_eq!(p.op, op, "{name}");
@@ -364,7 +420,10 @@ mod tests {
     #[test]
     fn rejects_unknown_names() {
         let s = spec();
-        for name in ["fwd_int3", "warmup", "prefill_", "decode_sampled_zzz"] {
+        for name in [
+            "fwd_int3", "warmup", "prefill_", "decode_sampled_zzz",
+            "decode_paged_zzz", "prefill_paged_",
+        ] {
             assert!(
                 InterpProgram::parse(s.clone(), name).is_err(),
                 "{name} should not parse"

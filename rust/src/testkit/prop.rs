@@ -250,6 +250,129 @@ mod quant_props {
 }
 
 #[cfg(test)]
+mod kvpool_props {
+    //! Block-allocator invariants (coordinator::kvpool::BlockPool):
+    //! alloc/free never double-assigns, refcounts never underflow, full
+    //! churn restores the initial free count, and COW preserves the
+    //! shared original.
+
+    use super::*;
+    use crate::coordinator::kvpool::{BlockDims, BlockPool};
+
+    fn pool(n: usize) -> BlockPool {
+        BlockPool::new(
+            n,
+            BlockDims { n_layers: 1, n_kv_heads: 1, d_head: 2, block_size: 2 },
+        )
+    }
+
+    #[test]
+    fn alloc_free_churn_preserves_pool_invariants() {
+        check("block pool churn", 250, vec_u32(0..96, 4), |ops| {
+            const N: usize = 8;
+            let mut p = pool(N);
+            let initial_free = p.free_blocks();
+            let mut live: Vec<usize> = Vec::new(); // ids we hold one ref on
+            for &op in ops {
+                match op % 4 {
+                    0 => {
+                        if let Some(id) = p.alloc() {
+                            // never double-assigned: a fresh block cannot
+                            // already be live, and comes back zeroed
+                            if live.contains(&id) {
+                                return false;
+                            }
+                            if p.block(id).iter().any(|&v| v != 0.0) {
+                                return false;
+                            }
+                            p.block_mut(id).fill(id as f32 + 1.0);
+                            live.push(id);
+                        } else if live.len() != N {
+                            return false; // alloc failed with free blocks
+                        }
+                    }
+                    1 => {
+                        if let Some(id) = live.pop() {
+                            if p.release(id).is_err() {
+                                return false;
+                            }
+                        }
+                    }
+                    2 => {
+                        // retain + release is a no-op pair
+                        if let Some(&id) = live.first() {
+                            p.retain(id);
+                            if !matches!(p.release(id), Ok(false)) {
+                                return false;
+                            }
+                        }
+                    }
+                    _ => {
+                        // releasing a dead block must error, not underflow
+                        let dead = (0..N).find(|id| !live.contains(id));
+                        if let Some(id) = dead {
+                            if p.ref_count(id) == 0 && p.release(id).is_ok() {
+                                return false;
+                            }
+                        }
+                    }
+                }
+                // conservation: free + live == total, and every live
+                // block still carries its tag (no aliasing)
+                if p.free_blocks() + live.len() != N {
+                    return false;
+                }
+                if live
+                    .iter()
+                    .any(|&id| p.block(id).iter().any(|&v| v != id as f32 + 1.0))
+                {
+                    return false;
+                }
+            }
+            // full churn: drain everything, free count returns to start
+            while let Some(id) = live.pop() {
+                if p.release(id).is_err() {
+                    return false;
+                }
+            }
+            p.free_blocks() == initial_free
+        });
+    }
+
+    #[test]
+    fn cow_preserves_the_shared_original() {
+        check(
+            "COW preserves source",
+            150,
+            pair(vec_f64(4..5, -9.0, 9.0), vec_f64(4..5, -9.0, 9.0)),
+            |(orig, clobber)| {
+                let mut p = pool(4);
+                let shared = p.alloc().unwrap();
+                for (dst, &v) in
+                    p.block_mut(shared).iter_mut().zip(orig.iter())
+                {
+                    *dst = v as f32;
+                }
+                p.retain(shared); // second holder -> writers must COW
+                let before: Vec<f32> = p.block(shared).to_vec();
+                let copy = p.alloc().unwrap();
+                p.copy_block(shared, copy);
+                if !matches!(p.release(shared), Ok(false)) {
+                    return false; // still one holder
+                }
+                for (dst, &v) in
+                    p.block_mut(copy).iter_mut().zip(clobber.iter())
+                {
+                    *dst = v as f32;
+                }
+                p.block(shared) == before.as_slice()
+                    && p.ref_count(copy) == 1
+            },
+        )
+    }
+}
+
+#[cfg(test)]
 mod tests {
     use super::*;
 

@@ -34,6 +34,10 @@ pub struct TinyCfg {
     pub window: usize,
     pub seq_len: usize,
     pub m_max: usize,
+    /// Paged-KV pool knobs (0 = derive; see model::manifest). Tests
+    /// shrink `kv_pool_blocks` to force preemption.
+    pub kv_block_size: usize,
+    pub kv_pool_blocks: usize,
     pub serve_batch: usize,
     pub eval_batch: usize,
     pub score_batch: usize,
@@ -58,6 +62,8 @@ impl Default for TinyCfg {
             window: 0,
             seq_len: 16,
             m_max: 4,
+            kv_block_size: 0,
+            kv_pool_blocks: 0,
             serve_batch: 2,
             eval_batch: 2,
             score_batch: 8,
@@ -131,7 +137,9 @@ impl TinyCfg {
               "act": "{act}", "pos": "{pos}", "window": {w},
               "n_sites": {sites}, "seq_len": {s},
               "prefill_buckets": [{half}, {s}],
-              "m_max": {m}, "cache_cap": {cap}, "serve_batch": {sb},
+              "m_max": {m}, "cache_cap": {cap},
+              "kv_block_size": {kbs}, "kv_pool_blocks": {kpb},
+              "serve_batch": {sb},
               "eval_batch": {eb}, "score_batch": {scb},
               "score_text_len": {stl}, "tune_batch": {eb},
               "params": [{params}], "graphs": []
@@ -153,6 +161,8 @@ impl TinyCfg {
             half = self.seq_len / 2,
             m = self.m_max,
             cap = self.cache_cap(),
+            kbs = self.kv_block_size,
+            kpb = self.kv_pool_blocks,
             sb = self.serve_batch,
             eb = self.eval_batch,
             scb = self.score_batch,

@@ -2,7 +2,7 @@
 //! against the logical components (no PJRT needed).
 
 use cushioncache::coordinator::batcher::{Batcher, Running};
-use cushioncache::coordinator::kvcache::KvManager;
+use cushioncache::coordinator::kvpool::{BlockDims, PagedKv};
 use cushioncache::coordinator::request::Request;
 use cushioncache::data::grammar::Grammar;
 use cushioncache::data::tokenizer::Tokenizer;
@@ -55,10 +55,20 @@ fn json_parse_never_panics_on_mutated_documents() {
 }
 
 #[test]
-fn kv_manager_never_oversubscribes() {
-    check("kv alloc/free", 300, vec_u32(0..64, 3), |ops| {
+fn paged_kv_never_oversubscribes() {
+    check("paged kv alloc/free", 300, vec_u32(0..64, 3), |ops| {
         // ops: 0 = alloc, 1 = free first busy, 2 = push token
-        let mut kv = KvManager::new(4, 4, 20, 2);
+        let mut kv = PagedKv::new(
+            4,
+            4,
+            20,
+            2,
+            4,
+            21, // cushion block + 4 lanes x 5 token blocks: never dry
+            BlockDims { n_layers: 1, n_kv_heads: 1, d_head: 2, block_size: 4 },
+            None,
+        );
+        let baseline_blocks = kv.blocks_in_use(); // the pinned cushion run
         let mut live = 0usize;
         for (i, &op) in ops.iter().enumerate() {
             match op {
@@ -89,6 +99,10 @@ fn kv_manager_never_oversubscribes() {
                 if kv.m_max + kv.tok_len(s) > kv.cap {
                     return false;
                 }
+            }
+            // block accounting: nothing leaks past the live tables
+            if live == 0 && kv.blocks_in_use() != baseline_blocks {
+                return false;
             }
         }
         true

@@ -35,7 +35,8 @@ fn session_resolves_graphs_without_artifacts() {
     for g in [
         "fwd_fp", "fwd_pts", "fwd_ptd", "fwd_ptk", "stats", "score_lq",
         "prefix_kv", "tune_step", "prefill_fp", "decode_fp",
-        "decode_sampled_fp", "prefill_sampled_fp_b8",
+        "decode_sampled_fp", "prefill_sampled_fp_b8", "prefill_paged_fp",
+        "decode_paged_fp",
     ] {
         assert!(s.registry.has(g), "graph {g} should resolve hermetically");
         assert!(!s.registry.has_artifact(g), "no artifact may exist for {g}");

@@ -1,0 +1,346 @@
+//! Hermetic integration tests for the paged KV pool (coordinator::
+//! kvpool) on the reference backend — no artifacts, no XLA:
+//!
+//! * the cushion prefix KV lives in exactly one shared block run: N
+//!   concurrent requests use fewer blocks than N x (cushion blocks +
+//!   prompt blocks), and identical prompts share full prompt blocks via
+//!   the prefix cache (COW keeps shared contents intact at divergence);
+//! * paged decode output is token-identical across the device-resident
+//!   and host-roundtrip residency modes, and the native block-table
+//!   path (`*_paged_*` graphs) matches the contiguous gather-view path
+//!   token-for-token while the mirrored pool reproduces the contiguous
+//!   cache bit-for-bit;
+//! * a workload whose aggregate block demand exceeds the pool completes
+//!   via preemption/resume with outputs identical to an ample-pool run
+//!   (no rejection, no starvation);
+//! * the admission off-by-one is fixed: a prompt of exactly
+//!   `cap - m_max` tokens is served its prefill token and finished with
+//!   `Length` instead of tripping capacity asserts downstream.
+
+use cushioncache::coordinator::{Engine, FinishReason, Request, Scheduler};
+use cushioncache::data::PAD;
+use cushioncache::quant::scheme::{Algorithm, Granularity, Scheme};
+use cushioncache::testkit::tiny::TinyCfg;
+
+fn session_with_cushion(cfg: &TinyCfg) -> cushioncache::model::session::Session {
+    let mut s = cfg.session().unwrap();
+    s.set_cushion_tokens(&[cushioncache::data::BOS, cushioncache::data::DOT])
+        .unwrap();
+    s
+}
+
+fn prompt_from(s: &cushioncache::model::session::Session, seq: usize, len: usize) -> Vec<i32> {
+    s.corpus.split("heldout").unwrap().seq(seq)[..len].to_vec()
+}
+
+fn submit_all(sched: &mut Scheduler, prompts: &[Vec<i32>], max_new: usize) {
+    for (i, p) in prompts.iter().enumerate() {
+        let mut r = Request::new(1 + i as u64, p.clone(), max_new);
+        r.stop_token = None;
+        sched.submit_request(r);
+    }
+}
+
+#[test]
+fn cushion_prefix_is_stored_once_and_shared() {
+    // tiny geometry: m_max 4, block size 4 (auto: min(16, m_max)), cap 20
+    // -> 1 full cushion block, 4 token blocks per full lane
+    let cfg = TinyCfg::default();
+    let s = session_with_cushion(&cfg);
+    let n = s.manifest.serve_batch;
+    let prompts: Vec<Vec<i32>> = (0..n).map(|i| prompt_from(&s, i, 6)).collect();
+    let mut sched = Scheduler::new(Engine::new(s, Scheme::fp()).unwrap());
+    submit_all(&mut sched, &prompts, 6);
+    sched.step().unwrap(); // admit everyone + first decode
+    assert_eq!(sched.running_count(), n);
+
+    let kv = &sched.engine.kv;
+    assert_eq!(kv.cushion_run().len(), 1, "m_max/bs = one shared block");
+    assert_eq!(kv.full_cushion_blocks(), 1, "no boundary template at 4/4");
+    let tables: Vec<Vec<usize>> =
+        (0..n).map(|l| kv.table(l).unwrap().to_vec()).collect();
+    for t in &tables[1..] {
+        assert_eq!(
+            t[0], tables[0][0],
+            "every table must point at the one cushion block run"
+        );
+    }
+    assert_eq!(tables[0][0], kv.cushion_run()[0]);
+
+    // the acceptance inequality: shared storage beats per-slot broadcast
+    let per_seq_blocks = tables[0].len(); // cushion + prompt blocks
+    let stats = kv.pool_stats();
+    assert!(
+        stats.in_use < n * per_seq_blocks,
+        "{} blocks in use, per-slot broadcast would need {}",
+        stats.in_use,
+        n * per_seq_blocks
+    );
+    assert!(stats.shared >= 1, "cushion block must count as shared");
+    assert!(stats.saved >= n - 1, "sharing saved {} allocations", stats.saved);
+    assert_eq!(sched.metrics.pool_blocks_total, kv.total_blocks());
+    assert!(sched.metrics.pool_blocks_peak >= stats.in_use);
+
+    let responses = sched.run_to_completion().unwrap();
+    assert_eq!(responses.len(), n);
+    assert!(responses.iter().all(|r| r.finished == FinishReason::MaxTokens));
+}
+
+#[test]
+fn identical_prompts_share_prompt_blocks_with_cow_on_divergence() {
+    let cfg = TinyCfg::default();
+    let s = session_with_cushion(&cfg);
+    let shared_prompt = prompt_from(&s, 0, 6); // blocks: [cushion][full][tail]
+    let mut engine = Engine::new(s, Scheme::fp()).unwrap();
+    engine.set_host_roundtrip(true); // mirror KV into the pool
+
+    let a = engine.kv.alloc_with_prompt(1, &shared_prompt).unwrap();
+    engine.prefill(a, &shared_prompt).unwrap(); // publishes full blocks
+    assert!(engine.kv.prefix_cache_len() >= 1);
+    let ta = engine.kv.table(a).unwrap().to_vec();
+
+    let b = engine.kv.alloc_with_prompt(2, &shared_prompt).unwrap();
+    let tb = engine.kv.table(b).unwrap().to_vec();
+    assert_eq!(ta[1], tb[1], "identical prompt head shares the full block");
+    assert_ne!(ta[2], tb[2], "partial tail is copy-on-write private");
+
+    // prefilling the sharer must not corrupt the shared block: contents
+    // are recomputed identically and shared blocks are never rewritten
+    let before = engine.cache_host().unwrap();
+    engine.prefill(b, &shared_prompt).unwrap();
+    let after = engine.cache_host().unwrap();
+    let view = engine.kv.gather_view();
+    // lane a's whole mapped region is untouched by b's prefill
+    let m = engine.kv.m_max;
+    let tok = engine.kv.tok_len(a);
+    assert_lane_eq(&before, &after, a, m + tok);
+    assert_lane_eq(&view, &after, a, m + tok);
+
+    // divergent prompt: shares nothing past the divergence point
+    engine.kv.free(b);
+    let mut diverged = shared_prompt.clone();
+    diverged[2] = (diverged[2] + 1) % engine.session.manifest.vocab as i32;
+    let c = engine.kv.alloc_with_prompt(3, &diverged).unwrap();
+    assert_ne!(engine.kv.table(c).unwrap()[1], ta[1], "COW at first divergence");
+}
+
+/// Compare one lane of two [L, 2, B, Hkv, CAP, dh] caches over
+/// positions [0, upto).
+fn assert_lane_eq(x: &cushioncache::util::tensor::Tensor,
+                  y: &cushioncache::util::tensor::Tensor, lane: usize,
+                  upto: usize) {
+    assert_eq!(x.shape, y.shape);
+    let (l, b, hkv, cap, dh) =
+        (x.shape[0], x.shape[2], x.shape[3], x.shape[4], x.shape[5]);
+    for li in 0..l {
+        for w in 0..2 {
+            for h in 0..hkv {
+                for p in 0..upto {
+                    let i = (((((li * 2 + w) * b) + lane) * hkv + h) * cap + p) * dh;
+                    assert_eq!(
+                        x.data[i..i + dh],
+                        y.data[i..i + dh],
+                        "lane {lane} diverges at (l={li}, w={w}, h={h}, p={p})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Drive one engine over `prompts` (full occupancy) for `steps` decode
+/// steps; returns each lane's token stream.
+fn generate_batch(engine: &mut Engine, prompts: &[Vec<i32>], steps: usize) -> Vec<Vec<i32>> {
+    let b = engine.session.manifest.serve_batch;
+    assert_eq!(prompts.len(), b, "full occupancy required");
+    let mut slots = Vec::new();
+    let mut streams: Vec<Vec<i32>> = vec![Vec::new(); b];
+    for (i, p) in prompts.iter().enumerate() {
+        let slot = engine.kv.alloc_with_prompt(1 + i as u64, p).unwrap();
+        let first = engine.prefill(slot, p).unwrap();
+        streams[i].push(first);
+        slots.push(slot);
+    }
+    for _ in 0..steps {
+        let mut feed = vec![PAD; b];
+        for (i, &slot) in slots.iter().enumerate() {
+            feed[slot] = *streams[i].last().unwrap();
+        }
+        let next = engine.decode_step(&feed).unwrap();
+        for (i, &slot) in slots.iter().enumerate() {
+            engine.kv.push_token(slot);
+            streams[i].push(next[slot]);
+        }
+    }
+    streams
+}
+
+#[test]
+fn decode_is_token_identical_across_residency_and_paged_modes() {
+    // device-resident gather view (default), host-roundtrip mirror, and
+    // the native block-table path must agree token-for-token — in fp
+    // and in a statically quantized mode
+    for scheme in [
+        Scheme::fp(),
+        Scheme::w8a8(Granularity::PerTensorStatic, Algorithm::Naive),
+    ] {
+        let cfg = TinyCfg::default();
+        let run = |mode: &str| -> Vec<Vec<i32>> {
+            let s = session_with_cushion(&cfg);
+            let prompts: Vec<Vec<i32>> = (0..s.manifest.serve_batch)
+                .map(|i| prompt_from(&s, i, 5))
+                .collect();
+            let mut e = Engine::new(s, scheme.clone()).unwrap();
+            match mode {
+                "device" => {}
+                "host" => e.set_host_roundtrip(true),
+                "paged" => e.set_paged_attention(true),
+                _ => unreachable!(),
+            }
+            generate_batch(&mut e, &prompts, 6)
+        };
+        let device = run("device");
+        let host = run("host");
+        let paged = run("paged");
+        assert_eq!(device, host, "{}: residency parity", scheme.label());
+        assert_eq!(device, paged, "{}: native paged parity", scheme.label());
+    }
+}
+
+#[test]
+fn mirrored_pool_reproduces_the_contiguous_cache() {
+    // gather view vs native path cross-check at the *bit* level: after
+    // identical workloads, the mirrored pool (host-roundtrip mode) and
+    // the natively-written pool (paged mode) both gather back into the
+    // contiguous cache the arena path produced.
+    let cfg = TinyCfg::default();
+    let drive = |mode: &str| -> (Engine, Vec<usize>) {
+        let s = session_with_cushion(&cfg);
+        let prompts: Vec<Vec<i32>> = (0..s.manifest.serve_batch)
+            .map(|i| prompt_from(&s, i, 5))
+            .collect();
+        let mut e = Engine::new(s, Scheme::fp()).unwrap();
+        match mode {
+            "host" => e.set_host_roundtrip(true),
+            "paged" => e.set_paged_attention(true),
+            _ => unreachable!(),
+        }
+        generate_batch(&mut e, &prompts, 4);
+        let lens: Vec<usize> = (0..e.kv.n_slots)
+            .map(|s| e.kv.m_max + e.kv.tok_len(s))
+            .collect();
+        (e, lens)
+    };
+    let (host_engine, lens) = drive("host");
+    let (paged_engine, lens2) = drive("paged");
+    assert_eq!(lens, lens2);
+
+    let arena = host_engine.cache_host().unwrap(); // contiguous truth
+    let mirrored = host_engine.kv.gather_view(); // pool mirror
+    let native = paged_engine.kv.gather_view(); // natively-written pool
+    for lane in 0..host_engine.kv.n_slots {
+        assert_lane_eq(&arena, &mirrored, lane, lens[lane]);
+        assert_lane_eq(&arena, &native, lane, lens[lane]);
+    }
+}
+
+#[test]
+fn oversubscribed_pool_completes_via_preemption() {
+    // pool of 6 blocks; two lanes at prompt 6 / max_new 8 eventually
+    // need 1 + 2 x 4 = 9 -> the pool runs dry mid-decode and the
+    // scheduler must preempt + resume, never reject or starve
+    let small = TinyCfg { kv_pool_blocks: 6, ..TinyCfg::default() };
+    let ample = TinyCfg::default();
+    let run = |cfg: &TinyCfg| -> (Vec<(u64, Vec<i32>)>, usize, usize) {
+        let s = session_with_cushion(cfg);
+        let prompts: Vec<Vec<i32>> = (0..4).map(|i| prompt_from(&s, i, 6)).collect();
+        let mut sched = Scheduler::new(Engine::new(s, Scheme::fp()).unwrap());
+        submit_all(&mut sched, &prompts, 8);
+        let mut out: Vec<(u64, Vec<i32>)> = sched
+            .run_to_completion()
+            .unwrap()
+            .into_iter()
+            .map(|r| {
+                assert_eq!(
+                    r.finished,
+                    FinishReason::MaxTokens,
+                    "request {} must complete normally",
+                    r.id
+                );
+                (r.id, r.tokens)
+            })
+            .collect();
+        out.sort_by_key(|(id, _)| *id);
+        (out, sched.metrics.preempted, sched.metrics.errored)
+    };
+    let (small_out, preempted, errored) = run(&small);
+    let (ample_out, ample_preempted, _) = run(&ample);
+    assert_eq!(errored, 0, "no request may be rejected");
+    assert!(preempted > 0, "the small pool must force preemption");
+    assert_eq!(ample_preempted, 0, "the ample pool must not preempt");
+    assert_eq!(small_out.len(), 4);
+    assert_eq!(
+        small_out, ample_out,
+        "preemption/resume must not change any request's tokens"
+    );
+}
+
+#[test]
+fn admission_edge_prompt_filling_the_cache_finishes_with_length() {
+    // cap - m_max == seq_len for the tiny model: a prompt that exactly
+    // fills the per-sequence KV space is served its prefill token and
+    // finished with Length (the old admission path admitted it and
+    // relied on capacity asserts downstream)
+    let cfg = TinyCfg::default();
+    let s = session_with_cushion(&cfg);
+    let full_len = s.manifest.cache_cap - s.manifest.m_max;
+    let prompt = prompt_from(&s, 1, full_len);
+    let mut sched = Scheduler::new(Engine::new(s, Scheme::fp()).unwrap());
+    let mut r = Request::new(1, prompt, 8);
+    r.stop_token = None;
+    sched.submit_request(r);
+    let resp = sched.run_to_completion().unwrap().pop().unwrap();
+    assert_eq!(resp.finished, FinishReason::Length);
+    assert_eq!(resp.tokens.len(), 1, "prefill token only — zero decode room");
+
+    // one token shorter leaves exactly one decode step of room
+    let cfg = TinyCfg::default();
+    let s = session_with_cushion(&cfg);
+    let prompt = prompt_from(&s, 1, full_len - 1);
+    let mut sched = Scheduler::new(Engine::new(s, Scheme::fp()).unwrap());
+    let mut r = Request::new(1, prompt, 8);
+    r.stop_token = None;
+    sched.submit_request(r);
+    let resp = sched.run_to_completion().unwrap().pop().unwrap();
+    assert_eq!(resp.finished, FinishReason::Length);
+    assert_eq!(resp.tokens.len(), 2, "prefill token + one decode step");
+}
+
+#[test]
+fn sequential_repeats_reuse_cached_prefix_blocks() {
+    // router-demo / eval-sweep shape: the same prompt arrives again
+    // after the first request completed — its full prompt blocks are
+    // still cached (LRU) and get reused instead of reallocated
+    let cfg = TinyCfg::default();
+    let s = session_with_cushion(&cfg);
+    let prompt = prompt_from(&s, 2, 6);
+    let mut sched = Scheduler::new(Engine::new(s, Scheme::fp()).unwrap());
+    submit_all(&mut sched, std::slice::from_ref(&prompt), 4);
+    sched.run_to_completion().unwrap();
+    assert!(
+        sched.engine.kv.prefix_cache_len() >= 1,
+        "completed request must donate its full prompt blocks"
+    );
+    let cached = sched.engine.kv.blocks_in_use();
+    submit_all(&mut sched, std::slice::from_ref(&prompt), 4);
+    sched.step().unwrap();
+    // the repeat reuses the cached full block: only the private tail
+    // block is newly allocated
+    assert_eq!(
+        sched.engine.kv.blocks_in_use(),
+        cached + 1,
+        "repeat prompt must reuse the cached prefix block"
+    );
+    let resp = sched.run_to_completion().unwrap().pop().unwrap();
+    assert_eq!(resp.finished, FinishReason::MaxTokens);
+}

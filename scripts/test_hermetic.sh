@@ -9,11 +9,17 @@
 #   1. cargo fmt --check (advisory: reports divergence, does not gate —
 #      run `cargo fmt` before merging; the hermetic gate is the tests)
 #   2. cargo test --no-default-features --features ref
-#      - unit tests (incl. testkit::prop quantization properties)
+#      - unit tests (incl. testkit::prop quantization + block-allocator
+#        properties)
 #      - rust/tests/interp_parity.rs  (interpreter vs committed JAX
 #        goldens, 1e-4 across all four quant modes)
 #      - rust/tests/hermetic_serve.rs (scheduler/streaming/search with
 #        no artifact directory)
+#      - rust/tests/paged_kv.rs       (paged KV pool: shared cushion
+#        blocks, prefix caching, preemption/resume, residency + native
+#        block-table parity)
+#   3. an explicit focused re-run of the kvpool/preemption suites, so a
+#      filter-induced skip in step 2 can never silently pass the gate
 #
 # CUSHION_ARTIFACTS points at an empty scratch dir so a developer's
 # local `artifacts/` cannot leak into the hermetic run.
@@ -36,7 +42,20 @@ export CUSHION_BACKEND=ref
 echo "[hermetic] cargo test --no-default-features --features ref"
 cargo test -q --no-default-features --features ref
 status=$?
+
 if [ $status -eq 0 ]; then
-    echo "[hermetic] OK — full suite passed with no artifacts and no XLA"
+    echo "[hermetic] cargo test --no-default-features --features ref --test paged_kv"
+    cargo test -q --no-default-features --features ref --test paged_kv
+    status=$?
+fi
+if [ $status -eq 0 ]; then
+    echo "[hermetic] kvpool allocator + scheduler preemption properties"
+    cargo test -q --no-default-features --features ref \
+        --test coordinator_props paged_kv_never_oversubscribes
+    status=$?
+fi
+
+if [ $status -eq 0 ]; then
+    echo "[hermetic] OK — full suite (incl. paged KV pool + preemption) passed with no artifacts and no XLA"
 fi
 exit $status
