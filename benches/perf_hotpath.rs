@@ -12,10 +12,15 @@
 //! steady state is ~100 B — tokens+lens up, [B] token ids down), and an
 //! oversubscribed paged-KV pool (pool churn scenario: many short
 //! requests over a third-size block pool) completes everything via
-//! preemption/resume with zero rejections. Emits
+//! preemption/resume with zero rejections, and a fault-injection
+//! scenario (10% transient execute faults over a wrapped backend) keeps
+//! all tenants alive through the retry path while recording recovered
+//! throughput. Emits
 //! `BENCH_perf_hotpath.json` at the repo root so the perf trajectory is
 //! tracked across PRs — gate regressions with `cushiond bench-diff` /
 //! scripts/bench_diff.sh.
+
+use std::rc::Rc;
 
 use cushioncache::bench::{emit_bench_json, summarize, time_n, Table, Timing};
 use cushioncache::coordinator::{Engine, Scheduler};
@@ -25,7 +30,7 @@ use cushioncache::quant::calibrate;
 use cushioncache::quant::scheme::{Algorithm, Granularity, Scheme};
 use cushioncache::runtime::literalx::HostValue;
 use cushioncache::runtime::transfer::{self, TransferStats};
-use cushioncache::runtime::Client;
+use cushioncache::runtime::{faults, Client, FaultPlan, FaultyBackend};
 use cushioncache::util::tensor::Tensor;
 
 /// Time `iters` runs of `f` after `warmup`, with the transfer-counter
@@ -238,6 +243,43 @@ fn main() -> anyhow::Result<()> {
         sched.running_count()
     );
 
+    // ---- fault injection: recovered throughput under transient faults ----
+    // a fresh engine over a fault-wrapped backend (the main `sched` above
+    // is near its KV headroom); 10% of execute calls fail transiently and
+    // the scheduler's retry/backoff path must absorb them — all 8 tenants
+    // alive afterwards, throughput measured across the injected faults.
+    let mut s_fault = Session::load_with_client(
+        &variant,
+        Client::with_backend(Rc::new(FaultyBackend::wrap(client.backend_shared()))),
+    )?;
+    calibrate::calibrate_into(&mut s_fault, scheme.act_levels(), 1)?;
+    let mut fault_sched = Scheduler::new(Engine::new(s_fault, scheme)?);
+    for _ in 0..8 {
+        fault_sched.submit(prompt[..32].to_vec(), 10_000_000);
+    }
+    for _ in 0..9 {
+        fault_sched.step()?; // admit + settle before arming the plan
+    }
+    faults::arm(FaultPlan::parse("seed=11,execute=0.1")?);
+    let mut produced = 0usize;
+    let (dec_faulty, dec_faulty_x) = time_with_xfer(0, iters, || {
+        produced += fault_sched.step().unwrap();
+    });
+    let injected = faults::disarm().map(|st| st.total()).unwrap_or(0);
+    let retries = fault_sched.metrics.retries_total();
+    row!("decode step w/ faults (batch 8, 10% execute)", &dec_faulty, dec_faulty_x, iters);
+    for _ in 0..4 {
+        fault_sched.step()?; // clean steps re-admit anything preempted
+    }
+    assert_eq!(fault_sched.running_count(), 8, "tenants lost to injected faults");
+    let elapsed: f64 = dec_faulty.iter().sum();
+    let recovered_tps = produced as f64 / elapsed.max(1e-9);
+    println!(
+        "[perf] fault injection: {injected} injected, {retries} retries, \
+         {} preemption(s); recovered throughput {recovered_tps:.1} tok/s",
+        fault_sched.metrics.preempted
+    );
+
     // ---- pool churn: oversubscribed paged KV pool ------------------------
     // many short requests against a pool sized at a third of the default:
     // the
@@ -352,6 +394,14 @@ fn main() -> anyhow::Result<()> {
         format!(
             "{{\"errored\": {}, \"rejected\": {}, \"cancelled\": {}}}",
             sched.metrics.errored, sched.metrics.rejected, sched.metrics.cancelled
+        ),
+    ));
+    extras.push((
+        "fault_injection".to_string(),
+        format!(
+            "{{\"injected\": {injected}, \"retries\": {retries}, \
+              \"preempted\": {}, \"recovered_tok_per_s\": {recovered_tps:.1}}}",
+            fault_sched.metrics.preempted
         ),
     ));
     extras.push((

@@ -14,6 +14,11 @@ pub struct Running {
     pub first_token_at: Option<Instant>,
     pub last_token_at: Instant,
     pub tpot: Vec<f64>,
+    /// Prefix-cache hashes this sequence donated to the index when it
+    /// was preempted (`PagedKv::free_donating`). A cancel while the
+    /// sequence waits for resume must drop exactly these entries —
+    /// nothing else still accounts for them. Cleared on resume.
+    pub donated: Vec<u64>,
 }
 
 impl Running {
@@ -25,6 +30,7 @@ impl Running {
             first_token_at: None,
             last_token_at: Instant::now(),
             tpot: Vec::new(),
+            donated: Vec::new(),
         }
     }
 
@@ -178,6 +184,34 @@ impl Batcher {
     pub fn remove_resume(&mut self, id: RequestId) -> Option<Running> {
         let pos = self.resumes.iter().position(|r| r.request.id == id)?;
         self.resumes.remove(pos)
+    }
+
+    /// Pluck every queued work item whose request matches `expired`
+    /// (the scheduler's deadline sweep): returns the plucked fresh
+    /// requests and preempted sequences.
+    pub fn expire_where(
+        &mut self,
+        mut expired: impl FnMut(&Request) -> bool,
+    ) -> (Vec<Request>, Vec<Running>) {
+        let mut fresh = Vec::new();
+        let mut i = 0;
+        while i < self.waiting.len() {
+            if expired(&self.waiting[i]) {
+                fresh.push(self.waiting.remove(i).unwrap());
+            } else {
+                i += 1;
+            }
+        }
+        let mut preempted = Vec::new();
+        let mut i = 0;
+        while i < self.resumes.len() {
+            if expired(&self.resumes[i].request) {
+                preempted.push(self.resumes.remove(i).unwrap());
+            } else {
+                i += 1;
+            }
+        }
+        (fresh, preempted)
     }
 
     /// Pending work items: fresh requests plus preempted sequences.

@@ -319,16 +319,48 @@ impl PagedKv {
     /// drop every table reference (shared blocks survive under their
     /// other holders).
     pub fn free(&mut self, slot: usize) {
-        let Some(seq) = self.seqs[slot].take() else { return };
+        let _ = self.free_donating(slot);
+    }
+
+    /// `free`, additionally returning the prefix-cache hashes whose
+    /// index entries this sequence accounts for — blocks it donated
+    /// right now, plus blocks it published earlier (`publish_prefix`)
+    /// that still map to its table. The scheduler stores these on a
+    /// preempted `Running` so a cancel-before-resume can release the
+    /// donation via `drop_cached` exactly once.
+    pub fn free_donating(&mut self, slot: usize) -> Vec<u64> {
+        let Some(seq) = self.seqs[slot].take() else { return Vec::new() };
         self.tick += 1;
+        let mut donated = Vec::new();
         for (i, &id) in seq.blocks.iter().enumerate() {
             if let Some(h) = seq.hashes[i] {
-                if !seq.shared[i] && self.index.insert(h, id, self.tick) {
-                    self.pool.retain(id);
+                if !seq.shared[i] {
+                    if self.index.insert(h, id, self.tick) {
+                        self.pool.retain(id);
+                        donated.push(h);
+                    } else if self.index.peek(h) == Some(id) {
+                        donated.push(h);
+                    }
                 }
             }
             self.pool.release(id).expect("table hold vanished");
         }
+        donated
+    }
+
+    /// Drop specific prefix-cache entries by hash (a cancelled
+    /// preempted sequence releases its donations). Returns how many
+    /// entries were present and removed — an entry may have been
+    /// LRU-evicted in the meantime, in which case eviction already
+    /// released the index's hold and this is a no-op for it.
+    pub fn drop_cached(&mut self, hashes: &[u64]) -> usize {
+        let mut n = 0;
+        for &h in hashes {
+            if self.index.remove(h, &mut self.pool).is_some() {
+                n += 1;
+            }
+        }
+        n
     }
 
     /// Record one decoded token appended to `slot`. The covering block
@@ -670,6 +702,37 @@ mod tests {
         p.free(c);
         p.clear_prefix_cache();
         assert_eq!(p.blocks_in_use(), 1, "full churn returns to the cushion");
+    }
+
+    #[test]
+    fn free_donating_reports_and_drop_cached_releases_exactly_once() {
+        let mut p = kv(2, 9);
+        let prompt = vec![7, 8, 9, 10, 11]; // 1 full token block + tail
+        let a = p.alloc_with_prompt(1, &prompt).unwrap();
+        let donated = p.free_donating(a);
+        assert_eq!(donated.len(), 1, "one full prompt block donated");
+        assert_eq!(p.prefix_cache_len(), 1);
+        let in_use = p.blocks_in_use();
+        assert_eq!(p.drop_cached(&donated), 1);
+        assert_eq!(p.prefix_cache_len(), 0);
+        assert_eq!(p.blocks_in_use(), in_use - 1, "donation hold released");
+        assert_eq!(p.drop_cached(&donated), 0, "second drop is a no-op");
+        assert_eq!(p.blocks_in_use(), 1, "back to the pinned cushion");
+
+        // a block published during the run (publish_prefix) is still
+        // reported as this sequence's donation at free time
+        let b = p.alloc_with_prompt(2, &prompt).unwrap();
+        p.publish_prefix(b);
+        assert_eq!(p.prefix_cache_len(), 1);
+        let donated = p.free_donating(b);
+        assert_eq!(donated.len(), 1);
+        // a live sharer must survive the donor's drop
+        let c = p.alloc_with_prompt(3, &prompt).unwrap();
+        assert_eq!(p.drop_cached(&donated), 1);
+        assert!(p.table(c).is_some());
+        p.free(c);
+        p.clear_prefix_cache();
+        assert_eq!(p.blocks_in_use(), 1, "no leaked holds after churn");
     }
 
     #[test]

@@ -116,6 +116,18 @@ impl PrefixIndex {
         Some(id)
     }
 
+    /// Drop one entry by hash, releasing the index's hold on its block
+    /// (cancellation of a preempted sequence returns the blocks it
+    /// donated). Unlike `evict_lru` this must tolerate live holders:
+    /// the block may still back another running sequence.
+    pub fn remove(&mut self, hash: u64, pool: &mut BlockPool) -> Option<BlockId> {
+        let id = self.by_hash.remove(&hash)?;
+        self.by_block.remove(&id);
+        self.touched.remove(&hash);
+        pool.release(id).expect("prefix-cache hold vanished");
+        Some(id)
+    }
+
     /// Drop every entry, releasing the index's holds (pool teardown /
     /// cushion change).
     pub fn clear(&mut self, pool: &mut BlockPool) {

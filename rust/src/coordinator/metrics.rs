@@ -56,6 +56,26 @@ pub struct Metrics {
     /// hits), current and peak.
     pub pool_blocks_saved: usize,
     pub pool_blocks_saved_peak: usize,
+    /// Engine-call retries under the bounded-backoff recovery policy,
+    /// by injected-fault cause (runtime::faults).
+    pub retries_execute: usize,
+    pub retries_upload: usize,
+    pub retries_fetch: usize,
+    /// Degradation-ladder downgrades survived (persistent faults that
+    /// moved the engine down a rung instead of killing it).
+    pub downgrades: usize,
+    /// Current ladder rung: 0 device-split, 1 host-roundtrip,
+    /// 2 interpreter.
+    pub backend_rung: u32,
+    /// Requests killed by their per-request deadline
+    /// (`FinishReason::Error("deadline")`).
+    pub deadline_expired: usize,
+    /// Graceful-shutdown drain duration (seconds; 0 until a drain ran).
+    pub drain_seconds: f64,
+    /// Faults the armed plan actually injected (gauge mirror of
+    /// `runtime::faults::stats().total()`, sampled per step) — chaos
+    /// tests assert injection happened.
+    pub faults_injected: u64,
 }
 
 impl Metrics {
@@ -82,6 +102,14 @@ impl Metrics {
             pool_blocks_shared: 0,
             pool_blocks_saved: 0,
             pool_blocks_saved_peak: 0,
+            retries_execute: 0,
+            retries_upload: 0,
+            retries_fetch: 0,
+            downgrades: 0,
+            backend_rung: 0,
+            deadline_expired: 0,
+            drain_seconds: 0.0,
+            faults_injected: 0,
         }
     }
 
@@ -130,6 +158,41 @@ impl Metrics {
     /// A running sequence preempted back to the queue (pool pressure).
     pub fn record_preempted(&mut self) {
         self.preempted += 1;
+    }
+
+    /// One engine-call retry under the bounded-backoff policy, by the
+    /// injected fault's cause ("execute" | "upload" | "fetch").
+    pub fn record_retry(&mut self, cause: &str) {
+        match cause {
+            "execute" => self.retries_execute += 1,
+            "upload" => self.retries_upload += 1,
+            _ => self.retries_fetch += 1,
+        }
+    }
+
+    pub fn retries_total(&self) -> usize {
+        self.retries_execute + self.retries_upload + self.retries_fetch
+    }
+
+    /// A degradation-ladder downgrade to `rung`.
+    pub fn record_downgrade(&mut self, rung: u32) {
+        self.downgrades += 1;
+        self.backend_rung = rung;
+    }
+
+    /// A request killed by its deadline.
+    pub fn record_deadline_expired(&mut self) {
+        self.deadline_expired += 1;
+    }
+
+    /// Graceful-shutdown drain completed in `seconds`.
+    pub fn record_drain(&mut self, seconds: f64) {
+        self.drain_seconds = seconds;
+    }
+
+    /// Mirror the armed fault plan's injection total (gauge).
+    pub fn record_faults_injected(&mut self, total: u64) {
+        self.faults_injected = total;
     }
 
     /// Sample the KV pool gauges (scheduler, once per step).
@@ -199,6 +262,14 @@ impl Metrics {
             pool_blocks_shared: self.pool_blocks_shared,
             pool_blocks_saved: self.pool_blocks_saved,
             pool_blocks_saved_peak: self.pool_blocks_saved_peak,
+            retries_execute: self.retries_execute,
+            retries_upload: self.retries_upload,
+            retries_fetch: self.retries_fetch,
+            downgrades: self.downgrades,
+            backend_rung: self.backend_rung,
+            deadline_expired: self.deadline_expired,
+            drain_seconds: self.drain_seconds,
+            faults_injected: self.faults_injected,
             tokens_out: self.tokens_out,
             elapsed: self.started.elapsed().as_secs_f64(),
             ttft_mean: stats::mean(&self.ttft),
@@ -242,6 +313,17 @@ pub struct MetricsSummary {
     pub pool_blocks_shared: usize,
     pub pool_blocks_saved: usize,
     pub pool_blocks_saved_peak: usize,
+    /// Fault-recovery counters: retries by injected cause, ladder
+    /// downgrades (+ current rung), deadline kills, drain duration, and
+    /// the injection total the armed plan reported.
+    pub retries_execute: usize,
+    pub retries_upload: usize,
+    pub retries_fetch: usize,
+    pub downgrades: usize,
+    pub backend_rung: u32,
+    pub deadline_expired: usize,
+    pub drain_seconds: f64,
+    pub faults_injected: u64,
     pub uploads: u64,
     pub bytes_uploaded: u64,
     pub fetches: u64,
@@ -328,6 +410,15 @@ mod tests {
         m.record_rejected();
         m.record_cancelled();
         m.record_preempted();
+        m.record_retry("execute");
+        m.record_retry("execute");
+        m.record_retry("upload");
+        m.record_retry("fetch");
+        m.record_downgrade(1);
+        m.record_downgrade(2);
+        m.record_deadline_expired();
+        m.record_drain(1.5);
+        m.record_faults_injected(7);
         m.record_pool(crate::coordinator::kvpool::PoolStats {
             total: 16,
             in_use: 9,
@@ -352,6 +443,15 @@ mod tests {
         assert_eq!(s.pool_blocks_saved, 1);
         assert_eq!(s.pool_blocks_saved_peak, 3);
         assert!((s.pool_peak_utilization() - 9.0 / 16.0).abs() < 1e-9);
+        assert_eq!(s.retries_execute, 2);
+        assert_eq!(s.retries_upload, 1);
+        assert_eq!(s.retries_fetch, 1);
+        assert_eq!(m.retries_total(), 4);
+        assert_eq!(s.downgrades, 2);
+        assert_eq!(s.backend_rung, 2, "rung tracks the last downgrade");
+        assert_eq!(s.deadline_expired, 1);
+        assert!((s.drain_seconds - 1.5).abs() < 1e-9);
+        assert_eq!(s.faults_injected, 7);
         assert_eq!(s.tokens_out, 3);
         assert!((s.tpot_mean - 0.055).abs() < 1e-9);
         assert!((s.mean_batch - 3.0).abs() < 1e-9);

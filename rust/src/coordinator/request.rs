@@ -5,7 +5,7 @@
 //! prefill that fails on its input) is reported here, as a per-request
 //! response, and must never surface as an engine/server error.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 pub type RequestId = u64;
 
@@ -22,6 +22,11 @@ pub struct Request {
     /// summary (the server reads this; the scheduler ignores it).
     pub stream: bool,
     pub submitted: Instant,
+    /// Per-request deadline, measured from `submitted` (`"deadline_ms"`
+    /// on the wire). An expired request — queued, preempted, or running
+    /// — finishes with `FinishReason::Error("deadline")` and its slot
+    /// and pool blocks are freed.
+    pub deadline: Option<Duration>,
 }
 
 impl Request {
@@ -34,7 +39,14 @@ impl Request {
             echo_text: false,
             stream: false,
             submitted: Instant::now(),
+            deadline: None,
         }
+    }
+
+    /// Whether this request's deadline has passed at `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline
+            .is_some_and(|d| now.duration_since(self.submitted) > d)
     }
 }
 
@@ -123,6 +135,17 @@ mod tests {
         assert_eq!(r.max_new_tokens, 16);
         assert!(!r.echo_text);
         assert!(!r.stream);
+        assert!(r.deadline.is_none());
+        assert!(!r.expired(Instant::now()), "no deadline never expires");
+    }
+
+    #[test]
+    fn deadline_expiry_is_relative_to_submission() {
+        let mut r = Request::new(2, vec![0], 4);
+        r.deadline = Some(Duration::from_millis(5));
+        assert!(!r.expired(r.submitted));
+        assert!(r.expired(r.submitted + Duration::from_millis(6)));
+        assert!(!r.expired(r.submitted + Duration::from_millis(4)));
     }
 
     #[test]

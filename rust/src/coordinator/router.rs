@@ -19,6 +19,11 @@ pub trait ServeBackend {
     fn take_token_events(&mut self) -> Vec<(RequestId, i32)>;
     fn cancel(&mut self, id: RequestId) -> bool;
     fn cancel_all(&mut self);
+    /// Enter drain mode (graceful shutdown): accepted work finishes,
+    /// new submissions are rejected with "overloaded".
+    fn drain(&mut self);
+    /// Record how long the shutdown drain took.
+    fn record_drain(&mut self, seconds: f64);
     /// Queued + running requests (the bounded-admission load measure).
     fn load(&self) -> usize;
     fn vocab(&self) -> usize;
@@ -66,6 +71,19 @@ fn log_scheduler_metrics(tag: &str, sched: &Scheduler) {
         s.preempted,
         sched.engine.kv.prefix_cache_len(),
     );
+    log::info!(
+        "{tag}: fault recovery: {} fault(s) injected; retries {} execute \
+         / {} upload / {} fetch; {} downgrade(s) (rung {}); {} deadline \
+         kill(s); drain {:.2} s",
+        s.faults_injected,
+        s.retries_execute,
+        s.retries_upload,
+        s.retries_fetch,
+        s.downgrades,
+        s.backend_rung,
+        s.deadline_expired,
+        s.drain_seconds,
+    );
 }
 
 impl ServeBackend for Scheduler {
@@ -103,6 +121,14 @@ impl ServeBackend for Scheduler {
 
     fn cancel_all(&mut self) {
         Scheduler::cancel_all(self)
+    }
+
+    fn drain(&mut self) {
+        Scheduler::drain(self)
+    }
+
+    fn record_drain(&mut self, seconds: f64) {
+        self.metrics.record_drain(seconds);
     }
 
     fn load(&self) -> usize {
@@ -289,6 +315,19 @@ impl ServeBackend for Router {
 
     fn cancel_all(&mut self) {
         Router::cancel_all(self)
+    }
+
+    fn drain(&mut self) {
+        for (_, sched) in self.engines.iter_mut() {
+            sched.drain();
+        }
+    }
+
+    fn record_drain(&mut self, seconds: f64) {
+        if let Some((_, s)) = self.engines.first_mut() {
+            // process-level gauge; by convention it lives on engine 0
+            s.metrics.record_drain(seconds);
+        }
     }
 
     fn load(&self) -> usize {

@@ -26,6 +26,17 @@
 //! out-of-vocab token, a prefill that rejects its input — is converted
 //! at admission into a `FinishReason::Error` response in `finished` and
 //! the loop keeps serving everyone else.
+//!
+//! Fault *recovery* (runtime::faults): injected engine faults are
+//! retried in place with bounded exponential backoff — a failed engine
+//! call leaves the cache untouched, so a retry replays the identical
+//! computation. When retries exhaust, the affected sequences are
+//! preempted back to the resume queue (the bit-identical re-prefill
+//! path above), and a *persistent* fault first walks the degradation
+//! ladder down a rung: device-split → host-roundtrip → interpreter.
+//! Per-request deadlines are swept at the top of each step, and
+//! `drain()` turns the loop into a graceful-shutdown mode that finishes
+//! accepted work while rejecting new submissions.
 
 use std::collections::HashMap;
 
@@ -35,6 +46,11 @@ use super::batcher::{Admit, Batcher, Running};
 use super::engine::Engine;
 use super::metrics::Metrics;
 use super::request::{FinishReason, Request, RequestId, Response};
+
+/// Bounded-retry policy for injected engine faults: total attempts per
+/// engine call, with exponential backoff between them (1ms, then 2ms).
+const RETRY_ATTEMPTS: usize = 3;
+const RETRY_BACKOFF: std::time::Duration = std::time::Duration::from_millis(1);
 
 pub struct Scheduler {
     pub engine: Engine,
@@ -48,6 +64,15 @@ pub struct Scheduler {
     /// with `stream: true` record events, so offline consumers that
     /// never drain (benches, run_to_completion) accumulate nothing.
     token_events: Vec<(RequestId, i32)>,
+    /// Graceful-shutdown drain: when set, new submissions are rejected
+    /// with "overloaded" while already-accepted work (queued, preempted,
+    /// running) is finished normally.
+    draining: bool,
+    /// Degradation-ladder rung this scheduler has fallen to: 0
+    /// device-split, 1 host-roundtrip, 2 interpreter. Never climbs back
+    /// up within a process — a path that faulted persistently stays
+    /// shed.
+    rung: u32,
 }
 
 impl Scheduler {
@@ -61,6 +86,8 @@ impl Scheduler {
             running: HashMap::new(),
             finished: Vec::new(),
             token_events: Vec::new(),
+            draining: false,
+            rung: 0,
         }
     }
 
@@ -69,7 +96,30 @@ impl Scheduler {
     }
 
     pub fn submit_request(&mut self, r: Request) {
+        if self.draining {
+            self.metrics.record_rejected();
+            self.finished
+                .push(Response::rejection(r.id, r.echo_text, "overloaded".into()));
+            return;
+        }
         self.batcher.submit_request(r);
+    }
+
+    /// Enter drain mode (graceful shutdown): accepted work finishes
+    /// normally, new submissions are rejected with "overloaded". The
+    /// server steps the scheduler until `has_work()` clears, then exits.
+    pub fn drain(&mut self) {
+        self.draining = true;
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining
+    }
+
+    /// The degradation-ladder rung currently in effect (0 = full
+    /// device-split path).
+    pub fn rung(&self) -> u32 {
+        self.rung
     }
 
     pub fn has_work(&self) -> bool {
@@ -128,6 +178,10 @@ impl Scheduler {
     pub fn step(&mut self) -> crate::Result<usize> {
         let mut produced = 0;
 
+        // 0) deadline sweep before admission: an expired request must
+        //    not cost a prefill
+        self.expire_deadlines();
+
         // 1) admission, oldest-submission first across fresh requests
         //    and preempted resumes. Inadmissible requests are rejected
         //    even when nothing can be admitted — a poisoned queue must
@@ -155,7 +209,13 @@ impl Scheduler {
                         self.batcher.push_front(req);
                         break;
                     };
-                    produced += self.admit_prefill(slot, Running::new(req, slot));
+                    match self.admit_prefill(slot, Running::new(req, slot)) {
+                        Some(n) => produced += n,
+                        // fault-requeued: stop admitting this step so
+                        // the retry happens under the next step's (maybe
+                        // downgraded) mode
+                        None => break,
+                    }
                 }
                 Admit::Resume(run) => {
                     let tokens = run.resume_tokens();
@@ -180,7 +240,10 @@ impl Scheduler {
                         self.batcher.push_resume(run);
                         break;
                     };
-                    produced += self.resume_prefill(slot, run, &tokens);
+                    match self.resume_prefill(slot, run, &tokens) {
+                        Some(n) => produced += n,
+                        None => break,
+                    }
                 }
             }
         }
@@ -199,34 +262,205 @@ impl Scheduler {
             let t0 = std::time::Instant::now();
             // meter the step's host-boundary traffic alongside its
             // latency: the bytes-per-step gauges in the serve metrics
-            let (next, xfer) =
-                crate::runtime::transfer::measure(|| self.engine.decode_step(&tokens));
-            let next = next?;
-            let dt = t0.elapsed().as_secs_f64();
-            self.metrics.record_decode(dt, self.running.len(), xfer);
+            let (res, xfer) = crate::runtime::transfer::measure(|| {
+                self.with_retry("batched decode", |eng| eng.decode_step(&tokens))
+            });
+            match res {
+                Ok(next) => {
+                    let dt = t0.elapsed().as_secs_f64();
+                    self.metrics.record_decode(dt, self.running.len(), xfer);
 
-            let slots: Vec<usize> = self.running.keys().copied().collect();
-            for slot in slots {
-                let mut run = self.running.remove(&slot).unwrap();
-                // the token we just fed is now cached at position tok_len
-                self.engine.kv.push_token(slot);
-                run.push_token(next[slot]);
-                if run.request.stream {
-                    self.token_events.push((run.request.id, next[slot]));
+                    let slots: Vec<usize> = self.running.keys().copied().collect();
+                    for slot in slots {
+                        let mut run = self.running.remove(&slot).unwrap();
+                        // the token we just fed is now cached at
+                        // position tok_len
+                        self.engine.kv.push_token(slot);
+                        run.push_token(next[slot]);
+                        if run.request.stream {
+                            self.token_events.push((run.request.id, next[slot]));
+                        }
+                        produced += 1;
+                        self.maybe_finish(slot, run);
+                    }
                 }
-                produced += 1;
-                self.maybe_finish(slot, run);
+                Err(e) => self.recover_decode_fault(e)?,
             }
+        }
+        if crate::runtime::faults::armed() {
+            self.metrics
+                .record_faults_injected(crate::runtime::faults::stats().total());
         }
         self.metrics.record_pool(self.engine.kv.pool_stats());
         Ok(produced)
     }
 
-    /// Prefill a freshly admitted request; returns produced tokens (1 on
-    /// success).
-    fn admit_prefill(&mut self, slot: usize, mut running: Running) -> usize {
+    /// Run `call` against the engine under the bounded-retry policy:
+    /// *transient injected* faults are retried with exponential backoff
+    /// (a failed engine call leaves the KV cache untouched — the engine
+    /// clones its cache argument — so a retry replays the identical
+    /// computation). Persistent faults and genuine engine errors return
+    /// immediately; exhausted retries return the last error.
+    fn with_retry<T>(
+        &mut self,
+        what: &str,
+        mut call: impl FnMut(&mut Engine) -> crate::Result<T>,
+    ) -> crate::Result<T> {
+        let mut attempt = 1;
+        loop {
+            match call(&mut self.engine) {
+                Ok(v) => return Ok(v),
+                Err(e) => match crate::runtime::faults::classify(&e) {
+                    Some((op, true)) if attempt < RETRY_ATTEMPTS => {
+                        self.metrics.record_retry(op.as_str());
+                        log::debug!(
+                            "{what}: transient {} fault (attempt \
+                             {attempt}/{RETRY_ATTEMPTS}), backing off: {e:#}",
+                            op.as_str()
+                        );
+                        std::thread::sleep(RETRY_BACKOFF * (1u32 << (attempt - 1)));
+                        attempt += 1;
+                    }
+                    _ => return Err(e),
+                },
+            }
+        }
+    }
+
+    /// A batched decode exhausted its retries. Injected faults are
+    /// recoverable: a persistent one first takes the degradation ladder
+    /// down a rung, then every running sequence is preempted back to
+    /// the resume queue — the resume path re-prefills bit-identically
+    /// (fp/static modes), so the fault costs latency, not correctness.
+    /// Genuine (non-injected) engine errors still propagate: retrying a
+    /// deterministic bug forever would only hide it.
+    fn recover_decode_fault(&mut self, e: anyhow::Error) -> crate::Result<()> {
+        let Some((op, transient)) = crate::runtime::faults::classify(&e) else {
+            return Err(e);
+        };
+        log::warn!(
+            "batched decode faulted past retries ({} {}): requeueing {} \
+             running sequence(s): {e:#}",
+            if transient { "transient" } else { "persistent" },
+            op.as_str(),
+            self.running.len()
+        );
+        if !transient && !self.downgrade() {
+            // ladder floor and the fault persists: fail the affected
+            // batch honestly rather than spinning on it forever
+            let slots: Vec<usize> = self.running.keys().copied().collect();
+            for slot in slots {
+                let run = self.running.remove(&slot).unwrap();
+                self.engine.kv.free(slot);
+                let resp = run.into_response(FinishReason::Error(format!(
+                    "decode failed past the ladder floor: {e:#}"
+                )));
+                self.metrics.record_finished(&resp);
+                self.finished.push(resp);
+            }
+            return Ok(());
+        }
+        let slots: Vec<usize> = self.running.keys().copied().collect();
+        for slot in slots {
+            self.preempt_or_finish(slot);
+        }
+        Ok(())
+    }
+
+    /// One rung down the degradation ladder on a persistent fault:
+    /// rung 0 device-split → 1 host-roundtrip → 2 interpreter. Every
+    /// running sequence is preempted first so its resume re-prefills
+    /// entirely under the downgraded mode (no sequence straddles two
+    /// execution modes mid-stream). Returns false at the ladder floor.
+    fn downgrade(&mut self) -> bool {
+        if self.rung >= 2 {
+            return false;
+        }
+        let slots: Vec<usize> = self.running.keys().copied().collect();
+        for slot in slots {
+            self.preempt_or_finish(slot);
+        }
+        self.rung += 1;
+        let mode = match self.rung {
+            1 => {
+                self.engine.set_host_roundtrip(true);
+                "host-roundtrip"
+            }
+            _ => {
+                self.engine.session.registry.force_interp(true);
+                "interpreter"
+            }
+        };
+        crate::runtime::faults::set_rung(self.rung);
+        self.metrics.record_downgrade(self.rung);
+        log::warn!(
+            "persistent fault: engine downgraded to rung {} ({mode}); \
+             serving continues",
+            self.rung
+        );
+        true
+    }
+
+    /// Preempt `slot` for fault recovery when its resume can re-prefill,
+    /// else finish it with `Length` (the same policy pool-pressure
+    /// preemption applies to unresumable sequences).
+    fn preempt_or_finish(&mut self, slot: usize) {
+        let seq_len = self.engine.session.manifest.seq_len;
+        let run = &self.running[&slot];
+        if run.request.prompt.len() + run.generated.len() <= seq_len {
+            self.preempt(slot);
+        } else {
+            let run = self.running.remove(&slot).unwrap();
+            self.engine.kv.free(slot);
+            let resp = run.into_response(FinishReason::Length);
+            self.metrics.record_finished(&resp);
+            self.finished.push(resp);
+        }
+    }
+
+    /// Kill every request whose deadline has passed — queued, preempted,
+    /// or running — with `FinishReason::Error("deadline")`, freeing its
+    /// lane, pool blocks, and any preemption-donated cache entries.
+    fn expire_deadlines(&mut self) {
+        let now = std::time::Instant::now();
+        let (fresh, preempted) = self.batcher.expire_where(|r| r.expired(now));
+        for req in fresh {
+            self.metrics.record_deadline_expired();
+            let resp = Response::rejection(req.id, req.echo_text, "deadline".into());
+            self.metrics.record_finished(&resp);
+            self.finished.push(resp);
+        }
+        for run in preempted {
+            self.metrics.record_deadline_expired();
+            self.engine.kv.drop_cached(&run.donated);
+            let resp = run.into_response(FinishReason::Error("deadline".into()));
+            self.metrics.record_finished(&resp);
+            self.finished.push(resp);
+        }
+        let expired: Vec<usize> = self
+            .running
+            .iter()
+            .filter(|(_, run)| run.request.expired(now))
+            .map(|(&slot, _)| slot)
+            .collect();
+        for slot in expired {
+            let run = self.running.remove(&slot).unwrap();
+            self.engine.kv.free(slot);
+            self.metrics.record_deadline_expired();
+            let resp = run.into_response(FinishReason::Error("deadline".into()));
+            self.metrics.record_finished(&resp);
+            self.finished.push(resp);
+        }
+    }
+
+    /// Prefill a freshly admitted request; returns `Some(tokens
+    /// produced)` (1 on success), or `None` when an injected fault
+    /// survived the retries and the request was requeued — the caller
+    /// must stop admitting for this step.
+    fn admit_prefill(&mut self, slot: usize, mut running: Running) -> Option<usize> {
         let t0 = std::time::Instant::now();
-        match self.engine.prefill(slot, &running.request.prompt) {
+        match self.with_retry("prefill", |eng| eng.prefill(slot, &running.request.prompt))
+        {
             Ok(first) => {
                 self.metrics.record_prefill(t0.elapsed().as_secs_f64());
                 // NOTE: `first` is generated but its KV is not cached
@@ -238,43 +472,85 @@ impl Scheduler {
                     self.token_events.push((running.request.id, first));
                 }
                 self.maybe_finish(slot, running);
-                1
+                Some(1)
             }
             Err(e) => {
+                self.engine.kv.free(slot);
+                let retryable = match crate::runtime::faults::classify(&e) {
+                    Some((_, true)) => true,
+                    Some((_, false)) => self.downgrade(),
+                    None => false,
+                };
+                if retryable {
+                    log::warn!(
+                        "prefill of request {} fault-injected; requeued: {e:#}",
+                        running.request.id
+                    );
+                    self.batcher.push_front(running.request);
+                    return None;
+                }
                 // prefill consumes only this request's input, so its
                 // failure is request-scoped: free the lane, error the
                 // request, keep the engine alive.
-                self.engine.kv.free(slot);
                 self.reject(running.request, format!("prefill failed: {e:#}"));
-                0
+                Some(0)
             }
         }
     }
 
     /// Re-prefill a preempted sequence (`prompt ++ generated`) and
-    /// continue it; returns produced tokens (1 on success).
-    fn resume_prefill(&mut self, slot: usize, mut run: Running, tokens: &[i32]) -> usize {
+    /// continue it; returns `Some(tokens produced)` (1 on success), or
+    /// `None` when an injected fault requeued the sequence.
+    fn resume_prefill(
+        &mut self,
+        slot: usize,
+        mut run: Running,
+        tokens: &[i32],
+    ) -> Option<usize> {
         let t0 = std::time::Instant::now();
-        match self.engine.prefill(slot, tokens) {
+        match self.with_retry("resume prefill", |eng| eng.prefill(slot, tokens)) {
             Ok(next) => {
                 self.metrics.record_prefill(t0.elapsed().as_secs_f64());
                 run.slot = slot;
+                // the blocks donated at preemption were re-shared into
+                // the new table by alloc_with_prompt (or evicted);
+                // either way they are ordinary cache entries now, no
+                // longer this run's to drop
+                run.donated.clear();
                 run.push_token(next);
                 if run.request.stream {
                     self.token_events.push((run.request.id, next));
                 }
                 self.maybe_finish(slot, run);
-                1
+                Some(1)
             }
             Err(e) => {
-                self.engine.kv.free(slot);
+                // this attempt's free may donate *new* full blocks (the
+                // generated suffix); track them with the originals so a
+                // later cancel/deadline drops exactly one hold per entry
+                let newly = self.engine.kv.free_donating(slot);
+                run.donated.extend(newly);
+                let retryable = match crate::runtime::faults::classify(&e) {
+                    Some((_, true)) => true,
+                    Some((_, false)) => self.downgrade(),
+                    None => false,
+                };
+                if retryable {
+                    log::warn!(
+                        "resume of request {} fault-injected; requeued: {e:#}",
+                        run.request.id
+                    );
+                    self.batcher.push_resume(run);
+                    return None;
+                }
+                self.engine.kv.drop_cached(&run.donated);
                 let id = run.request.id;
                 log::debug!("resume of request {id} failed: {e:#}");
                 let resp = run
                     .into_response(FinishReason::Error(format!("resume failed: {e:#}")));
                 self.metrics.record_finished(&resp);
                 self.finished.push(resp);
-                0
+                Some(0)
             }
         }
     }
@@ -358,13 +634,16 @@ impl Scheduler {
     /// non-shared blocks (full prompt blocks are donated to the prefix
     /// cache on the way out) and let it resume by re-prefill.
     fn preempt(&mut self, slot: usize) {
-        let run = self.running.remove(&slot).unwrap();
+        let mut run = self.running.remove(&slot).unwrap();
         log::debug!(
-            "preempting request {} ({} generated) — kv pool dry",
+            "preempting request {} ({} generated)",
             run.request.id,
             run.generated.len()
         );
-        self.engine.kv.free(slot);
+        // remember which blocks this sequence donated to the prefix
+        // cache on the way out: a cancel while it waits for resume must
+        // drop exactly these entries (nothing else accounts for them)
+        run.donated = self.engine.kv.free_donating(slot);
         self.metrics.record_preempted();
         self.batcher.push_resume(run);
     }
@@ -414,6 +693,10 @@ impl Scheduler {
             return true;
         }
         if let Some(run) = self.batcher.remove_resume(id) {
+            // a preempted sequence's only remaining pool footprint is
+            // the blocks it donated to the prefix cache — drop exactly
+            // those holds (sharers, if any, keep the blocks alive)
+            self.engine.kv.drop_cached(&run.donated);
             self.metrics.record_cancelled();
             self.finished.push(run.into_response(FinishReason::Cancelled));
             return true;
@@ -451,6 +734,7 @@ impl Scheduler {
                     self.finished.push(Response::cancelled(req.id, req.echo_text));
                 }
                 Admit::Resume(run) => {
+                    self.engine.kv.drop_cached(&run.donated);
                     self.finished.push(run.into_response(FinishReason::Cancelled));
                 }
             }

@@ -11,6 +11,10 @@
 //!   "echo_text": true     — detokenize the output into a "text" field
 //!   "stop_token": 7|null  — override the default stop token (null = none)
 //!   "mode": "pts"         — quantization mode (multi-engine router only)
+//!   "deadline_ms": 250    — per-request deadline from submission; an
+//!                           expired request (queued, preempted, or
+//!                           running) finishes with "error": "deadline"
+//!                           and its slot and pool blocks are freed
 //!
 //! Stream line (only with "stream": true), one per generated token:
 //!   {"id": 7, "token": 42, "index": 0}
@@ -60,6 +64,55 @@ use super::scheduler::Scheduler;
 
 /// Default bound on queued+running requests before `overloaded`.
 pub const DEFAULT_QUEUE_LIMIT: usize = 64;
+
+/// Read/write timeout on accepted connections: a stuck or byzantine
+/// client can hold a reader thread (and, mid-stream, a KV slot) for at
+/// most this long before the connection is closed and the request
+/// cancelled.
+const CONN_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(30);
+
+/// Upper bound on the graceful-shutdown drain: in-flight requests get
+/// this long to finish before the remainder is cancelled.
+const DRAIN_DEADLINE: std::time::Duration = std::time::Duration::from_secs(30);
+
+/// SIGINT/SIGTERM → graceful drain. The vendored build has no signal
+/// crate, so this uses the raw libc `signal` entry point directly; the
+/// handler only stores to an atomic, which is async-signal-safe.
+#[cfg(unix)]
+mod signals {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    pub static STOP: AtomicBool = AtomicBool::new(false);
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" fn on_signal(_sig: i32) {
+        STOP.store(true, Ordering::Relaxed);
+    }
+
+    pub fn install() {
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        unsafe {
+            signal(SIGINT, on_signal as usize);
+            signal(SIGTERM, on_signal as usize);
+        }
+    }
+
+    pub fn pending() -> bool {
+        STOP.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(not(unix))]
+mod signals {
+    pub fn install() {}
+
+    pub fn pending() -> bool {
+        false
+    }
+}
 
 enum Inbound {
     Submit {
@@ -123,6 +176,7 @@ impl Server {
     ) -> crate::Result<()> {
         let listener = TcpListener::bind(&self.addr)?;
         listener.set_nonblocking(true)?;
+        signals::install();
         log::info!("cushiond listening on {}", self.addr);
         let (tx, rx): (Sender<Inbound>, Receiver<Inbound>) = channel();
         let next_id = Arc::new(AtomicU64::new(1));
@@ -132,7 +186,7 @@ impl Server {
         // scheduler loop on this thread; acceptor inline (non-blocking)
         let mut waiters: HashMap<RequestId, Waiter> = HashMap::new();
         loop {
-            if stop.load(Ordering::Relaxed) {
+            if stop.load(Ordering::Relaxed) || signals::pending() {
                 break;
             }
             // accept new connections
@@ -200,36 +254,46 @@ impl Server {
             // advance the engine(s)
             if backend.has_work() {
                 backend.step()?;
-                // stream lines first: a request's tokens must all be on
-                // the wire before its summary line
-                for (id, token) in backend.take_token_events() {
-                    if let Some(w) = waiters.get_mut(&id) {
-                        let index = w.n_sent;
-                        w.n_sent += 1;
-                        if w.stream {
-                            let line = render_token_line(id, token, index);
-                            if w.back.send(Outbound::Line(line)).is_err() {
-                                // conn thread is gone: free the slot now
-                                waiters.remove(&id);
-                                backend.cancel(id);
-                            }
-                        }
-                    }
-                }
-                for resp in backend.take_finished() {
-                    if let Some(w) = waiters.remove(&resp.id) {
-                        let line = render_response(&resp, Some(&tokenizer));
-                        let _ = w.back.send(Outbound::Done(line));
-                    }
-                }
+                flush_output(&mut backend, &mut waiters, &tokenizer);
             } else {
                 std::thread::sleep(std::time::Duration::from_millis(2));
             }
         }
-        // shutdown: cancel in-flight work and tell every waiter, then
-        // leave the serving metrics (latency histogram + per-step
-        // transfer gauges) in the log — after cancel_all, so the
-        // cancelled count includes the requests shutdown just cancelled
+        // graceful shutdown: drain — finish the work already accepted
+        // (queued, preempted, running) while rejecting new submissions
+        // with "overloaded"; anything still unfinished at the drain
+        // deadline is cancelled. Then leave the serving metrics in the
+        // log — after the drain, so its counters include everything the
+        // shutdown finished or cancelled.
+        let drain_t0 = std::time::Instant::now();
+        backend.drain();
+        log::info!(
+            "shutting down: draining {} in-flight request(s)",
+            backend.load()
+        );
+        while backend.has_work() && drain_t0.elapsed() < DRAIN_DEADLINE {
+            while let Ok(msg) = rx.try_recv() {
+                match msg {
+                    Inbound::Submit { req, back, .. } => {
+                        backend.record_rejected();
+                        let resp = Response::rejection(
+                            req.id,
+                            req.echo_text,
+                            "overloaded".to_string(),
+                        );
+                        let _ =
+                            back.send(Outbound::Done(render_response(&resp, None)));
+                    }
+                    Inbound::Cancel(id) => {
+                        waiters.remove(&id);
+                        backend.cancel(id);
+                    }
+                    Inbound::Shutdown => {}
+                }
+            }
+            backend.step()?;
+            flush_output(&mut backend, &mut waiters, &tokenizer);
+        }
         backend.cancel_all();
         for resp in backend.take_finished() {
             if let Some(w) = waiters.remove(&resp.id) {
@@ -238,8 +302,39 @@ impl Server {
                     .send(Outbound::Done(render_response(&resp, Some(&tokenizer))));
             }
         }
+        backend.record_drain(drain_t0.elapsed().as_secs_f64());
         backend.log_metrics();
         Ok(())
+    }
+}
+
+/// Push this step's stream lines and summaries back to their waiters.
+/// Stream lines go first: a request's tokens must all be on the wire
+/// before its summary line.
+fn flush_output<B: ServeBackend>(
+    backend: &mut B,
+    waiters: &mut HashMap<RequestId, Waiter>,
+    tokenizer: &Tokenizer,
+) {
+    for (id, token) in backend.take_token_events() {
+        if let Some(w) = waiters.get_mut(&id) {
+            let index = w.n_sent;
+            w.n_sent += 1;
+            if w.stream {
+                let line = render_token_line(id, token, index);
+                if w.back.send(Outbound::Line(line)).is_err() {
+                    // conn thread is gone: free the slot now
+                    waiters.remove(&id);
+                    backend.cancel(id);
+                }
+            }
+        }
+    }
+    for resp in backend.take_finished() {
+        if let Some(w) = waiters.remove(&resp.id) {
+            let line = render_response(&resp, Some(tokenizer));
+            let _ = w.back.send(Outbound::Done(line));
+        }
     }
 }
 
@@ -249,11 +344,31 @@ fn handle_conn(
     ids: Arc<AtomicU64>,
     vocab: usize,
 ) -> crate::Result<()> {
+    // bound how long a stuck client can hold this thread: reads and
+    // writes both time out, after which the connection is closed (and
+    // any in-flight request cancelled by the writer path below)
+    stream.set_read_timeout(Some(CONN_TIMEOUT))?;
+    stream.set_write_timeout(Some(CONN_TIMEOUT))?;
     let peer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
+    let mut reader = BufReader::new(stream);
     let mut writer = peer;
-    for line in reader.lines() {
-        let line = line?;
+    loop {
+        let mut raw = String::new();
+        match reader.read_line(&mut raw) {
+            Ok(0) => break, // EOF: client closed the connection
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                log::debug!("connection idle past {CONN_TIMEOUT:?}; closing");
+                break;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        let line: &str = raw.trim_end_matches(['\r', '\n']);
         if line.trim().is_empty() {
             continue;
         }
@@ -261,7 +376,7 @@ fn handle_conn(
             let _ = tx.send(Inbound::Shutdown);
             break;
         }
-        match parse_request(&line, &ids, vocab) {
+        match parse_request(line, &ids, vocab) {
             Ok((req, mode)) => {
                 let id = req.id;
                 let (back_tx, back_rx) = channel();
@@ -351,6 +466,15 @@ pub fn parse_request(
     }
     req.echo_text = v.get("echo_text").and_then(Value::as_bool).unwrap_or(false);
     req.stream = v.get("stream").and_then(Value::as_bool).unwrap_or(false);
+    if let Some(d) = v.get("deadline_ms") {
+        let n = d
+            .as_f64()
+            .filter(|n| n.is_finite() && *n > 0.0 && n.fract() == 0.0)
+            .ok_or_else(|| {
+                anyhow::anyhow!("deadline_ms must be a positive integer, got {d}")
+            })?;
+        req.deadline = Some(std::time::Duration::from_millis(n as u64));
+    }
     let mode = match v.get("mode") {
         None | Some(Value::Null) => None,
         Some(Value::Str(s)) => Some(s.clone()),
@@ -454,6 +578,13 @@ mod tests {
         let (r, _) =
             parse_request(r#"{"prompt": [4], "stop_token": 7}"#, &ids, VOCAB).unwrap();
         assert_eq!(r.stop_token, Some(7));
+
+        let (r, _) =
+            parse_request(r#"{"prompt": [4], "deadline_ms": 250}"#, &ids, VOCAB)
+                .unwrap();
+        assert_eq!(r.deadline, Some(std::time::Duration::from_millis(250)));
+        let (r, _) = parse_request(r#"{"prompt": [4]}"#, &ids, VOCAB).unwrap();
+        assert!(r.deadline.is_none(), "deadline is opt-in");
     }
 
     #[test]
@@ -472,6 +603,19 @@ mod tests {
         assert!(parse_request(r#"{"prompt": [4], "stop_token": "x"}"#, &ids, VOCAB)
             .is_err());
         assert!(parse_request(r#"{"prompt": [4], "mode": 3}"#, &ids, VOCAB).is_err());
+        // a deadline must be a positive whole number of milliseconds
+        assert!(parse_request(r#"{"prompt": [4], "deadline_ms": 0}"#, &ids, VOCAB)
+            .is_err());
+        assert!(parse_request(r#"{"prompt": [4], "deadline_ms": -5}"#, &ids, VOCAB)
+            .is_err());
+        assert!(
+            parse_request(r#"{"prompt": [4], "deadline_ms": 1.5}"#, &ids, VOCAB)
+                .is_err()
+        );
+        assert!(
+            parse_request(r#"{"prompt": [4], "deadline_ms": "soon"}"#, &ids, VOCAB)
+                .is_err()
+        );
     }
 
     #[test]

@@ -15,10 +15,9 @@ pub fn cushion_path(variant: &str, name: &str) -> PathBuf {
         .join(format!("{name}.bin"))
 }
 
-/// Atomic save: the bytes land in `<name>.bin.tmp` and are renamed into
-/// place, so a crash mid-write can never leave a torn `<name>.bin` for
-/// the next load to install as the shared prefix KV (rename within one
-/// directory is atomic on POSIX).
+/// Atomic save via `fsutil::write_atomic`: a crash mid-write (real or
+/// fault-injected) can never leave a torn `<name>.bin` for the next
+/// load to install as the shared prefix KV.
 pub fn save_cushion(variant: &str, name: &str, c: &Cushion) -> crate::Result<PathBuf> {
     let path = cushion_path(variant, name);
     std::fs::create_dir_all(path.parent().unwrap())?;
@@ -35,10 +34,7 @@ pub fn save_cushion(variant: &str, name: &str, c: &Cushion) -> crate::Result<Pat
     for v in &c.kv.data {
         buf.extend_from_slice(&v.to_le_bytes());
     }
-    let tmp = path.with_extension("bin.tmp");
-    std::fs::write(&tmp, buf)?;
-    std::fs::rename(&tmp, &path)
-        .map_err(|e| anyhow::anyhow!("installing {path:?}: {e}"))?;
+    fsutil::write_atomic(&path, &buf)?;
     Ok(path)
 }
 
@@ -86,6 +82,21 @@ mod tests {
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
         assert!(load_cushion("vtest", "default").is_err(), "torn file");
+
+        // crash consistency under the fault harness: a torn-write
+        // injection mid-save errors out, leaves no renamed file, and an
+        // existing good cushion survives byte-identical
+        let good = save_cushion("vtest", "crashy", &c).unwrap();
+        let before = std::fs::read(&good).unwrap();
+        crate::runtime::faults::arm(
+            crate::runtime::faults::FaultPlan::parse("seed=2,torn=1").unwrap(),
+        );
+        let err = save_cushion("vtest", "crashy", &c).unwrap_err();
+        let stats = crate::runtime::faults::disarm().unwrap();
+        assert!(format!("{err:#}").contains("fault-injected(torn)"), "{err:#}");
+        assert_eq!(stats.torn, 1);
+        assert_eq!(std::fs::read(&good).unwrap(), before, "target file torn");
+        assert!(load_cushion("vtest", "crashy").is_ok());
         std::env::remove_var("CUSHION_ARTIFACTS");
     }
 }

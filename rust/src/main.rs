@@ -64,6 +64,9 @@ fn run() -> anyhow::Result<()> {
          'overloaded' rejections")
     .opt("tol", "0.10", "bench-diff: mean-latency regression tolerance \
          (fraction; transfer growth always fails)")
+    .opt("faults", "", "fault-injection plan, e.g. \
+         'seed=1,execute=0.1,stall_ms=5' (see runtime::faults; also \
+         honors CUSHION_FAULTS; '' = off)")
     .flag("smooth", "apply SmoothQuant (alpha 0.8)")
     .flag("no-tune", "pipeline: skip the tuning stage");
     let args = cli.parse_env()?;
@@ -73,6 +76,13 @@ fn run() -> anyhow::Result<()> {
     if backend != "auto" {
         cushioncache::runtime::BackendKind::parse(backend)?; // validate
         std::env::set_var("CUSHION_BACKEND", backend);
+    }
+    // `--faults` wins over the environment the same way; every Client
+    // constructed below arms the plan and wraps its backend
+    let faults = args.get("faults");
+    if !faults.is_empty() {
+        cushioncache::runtime::FaultPlan::parse(faults)?; // validate
+        std::env::set_var("CUSHION_FAULTS", faults);
     }
     let cmd = args
         .positionals()

@@ -49,24 +49,59 @@ impl Client {
     }
 
     pub fn of_kind(kind: BackendKind) -> crate::Result<Self> {
-        match kind {
-            BackendKind::Reference => Ok(Self::reference()),
-            BackendKind::Pjrt => Self::cpu(),
+        let base = match kind {
+            BackendKind::Reference => Self::reference(),
+            BackendKind::Pjrt => Self::cpu()?,
             BackendKind::Auto => match Self::cpu() {
-                Ok(c) => Ok(c),
+                Ok(c) => c,
                 Err(e) => {
                     log::info!(
                         "PJRT unavailable ({e:#}); using the reference \
                          interpreter backend"
                     );
-                    Ok(Self::reference())
+                    Self::reference()
                 }
             },
+        };
+        base.with_env_faults()
+    }
+
+    /// Wrap the backend in `runtime::faults::FaultyBackend` (arming the
+    /// plan on this thread if none is armed yet) when `CUSHION_FAULTS`
+    /// requests injection. No-op otherwise.
+    fn with_env_faults(self) -> crate::Result<Self> {
+        match super::faults::FaultPlan::from_env()? {
+            None => Ok(self),
+            Some(plan) => {
+                if !super::faults::armed() {
+                    super::faults::arm(plan);
+                }
+                log::info!(
+                    "fault injection armed (CUSHION_FAULTS): wrapping the \
+                     {} backend",
+                    self.backend.name()
+                );
+                Ok(Self::with_backend(Rc::new(
+                    super::faults::FaultyBackend::wrap(self.backend),
+                )))
+            }
         }
+    }
+
+    /// Wrap an arbitrary backend implementation — the hook the fault
+    /// harness and tests use to interpose at the trait boundary.
+    pub fn with_backend(backend: Rc<dyn Backend>) -> Self {
+        Self { backend }
     }
 
     pub fn backend(&self) -> &dyn Backend {
         self.backend.as_ref()
+    }
+
+    /// The shared backend handle — the hook for interposing a decorator
+    /// (e.g. `faults::FaultyBackend::wrap`) over an existing client.
+    pub fn backend_shared(&self) -> Rc<dyn Backend> {
+        self.backend.clone()
     }
 
     /// Whether this client executes compiled HLO artifacts (false = the

@@ -1,0 +1,533 @@
+//! Deterministic fault injection at the `Backend` trait boundary.
+//!
+//! A seeded, schedule-driven `FaultPlan` (env `CUSHION_FAULTS`, CLI
+//! `--faults`) arms a **thread-local** fault state; `FaultyBackend`
+//! wraps any `Backend` and consults that state on every `execute` /
+//! `upload` / `fetch_*` call, injecting:
+//!
+//! * **transient faults** — each call independently fails with
+//!   probability `execute=` / `upload=` / `fetch=`; a retry can succeed;
+//! * **persistent faults** — `persistent=<op>` fails *every* call of
+//!   that op until the degradation ladder reaches `heal=<rung>`
+//!   (modeling a fault that lives in the device path: once the engine
+//!   downgrades past it, calls succeed again);
+//! * **transfer stalls** — `stall_ms=` injects latency into every
+//!   upload/fetch;
+//! * **torn writes** — `torn=` makes `util::fsutil::write_atomic` crash
+//!   mid-write (truncated temp file, no rename), proving the
+//!   crash-consistency of `cushion::store`.
+//!
+//! State is thread-local on purpose: `cargo test` runs tests on
+//! separate threads, so one test's armed plan can never leak into
+//! another, while the serving stack (scheduler/engine/backend) is
+//! single-threaded per serve loop and sees the plan it armed.
+//!
+//! Injected errors carry a typed payload (`InjectedFault`) and a
+//! greppable `Display` (`fault-injected(transient): execute fault #3`)
+//! so `classify` survives `anyhow` re-wrapping at any layer.
+
+use std::cell::RefCell;
+use std::fmt;
+use std::rc::Rc;
+use std::time::Duration;
+
+use super::backend::{Backend, DeviceBuf};
+use super::literalx::{HostValue, IntTensor, Outputs};
+use crate::util::prng::SplitMix64;
+use crate::util::tensor::Tensor;
+
+/// Which backend operation a fault targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultOp {
+    Execute,
+    Upload,
+    Fetch,
+}
+
+impl FaultOp {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultOp::Execute => "execute",
+            FaultOp::Upload => "upload",
+            FaultOp::Fetch => "fetch",
+        }
+    }
+
+    fn parse(s: &str) -> crate::Result<Self> {
+        Ok(match s {
+            "execute" => FaultOp::Execute,
+            "upload" => FaultOp::Upload,
+            "fetch" => FaultOp::Fetch,
+            other => anyhow::bail!(
+                "unknown fault op '{other}' (execute | upload | fetch)"
+            ),
+        })
+    }
+}
+
+/// The typed error an injection produces. Survives as the anyhow root
+/// cause unless a layer re-formats it, in which case the `Display`
+/// prefix keeps it classifiable (`classify`).
+#[derive(Clone, Copy, Debug)]
+pub struct InjectedFault {
+    pub op: FaultOp,
+    pub transient: bool,
+    /// Injection sequence number (1-based) under the armed plan.
+    pub seq: u64,
+}
+
+impl fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "fault-injected({}): {} fault #{}",
+            if self.transient { "transient" } else { "persistent" },
+            self.op.as_str(),
+            self.seq
+        )
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+/// A parsed fault schedule. Deterministic given `seed`: the same plan
+/// over the same call sequence injects the same faults.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Per-call transient failure probability by op.
+    pub p_execute: f64,
+    pub p_upload: f64,
+    pub p_fetch: f64,
+    /// An op that fails on *every* call until the ladder heals it.
+    pub persistent: Option<FaultOp>,
+    /// Ladder rung at which injection stops (`set_rung`): models a
+    /// fault localized to the path the ladder downgrades away from.
+    pub heal_rung: u32,
+    /// Injected latency per upload/fetch (transfer stall).
+    pub stall: Duration,
+    /// Torn-write probability for `fsutil::write_atomic`.
+    pub p_torn: f64,
+    /// Cap on total injections (0 = unlimited).
+    pub max_injections: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            p_execute: 0.0,
+            p_upload: 0.0,
+            p_fetch: 0.0,
+            persistent: None,
+            heal_rung: 1,
+            stall: Duration::ZERO,
+            p_torn: 0.0,
+            max_injections: 0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse a comma-separated `key=value` spec:
+    ///
+    /// `seed=N,execute=P,upload=P,fetch=P,persistent=<op>,heal=N,`
+    /// `stall_ms=N,torn=P,max=N`
+    pub fn parse(spec: &str) -> crate::Result<Self> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, val) = part.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("fault spec '{part}': expected key=value")
+            })?;
+            let prob = |v: &str| -> crate::Result<f64> {
+                let p: f64 = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("fault spec {key}={v}: not a number"))?;
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&p),
+                    "fault spec {key}={v}: probability must be in [0, 1]"
+                );
+                Ok(p)
+            };
+            let int = |v: &str| -> crate::Result<u64> {
+                v.parse()
+                    .map_err(|_| anyhow::anyhow!("fault spec {key}={v}: not an integer"))
+            };
+            match key {
+                "seed" => plan.seed = int(val)?,
+                "execute" => plan.p_execute = prob(val)?,
+                "upload" => plan.p_upload = prob(val)?,
+                "fetch" => plan.p_fetch = prob(val)?,
+                "persistent" => plan.persistent = Some(FaultOp::parse(val)?),
+                "heal" => plan.heal_rung = int(val)? as u32,
+                "stall_ms" => plan.stall = Duration::from_millis(int(val)?),
+                "torn" => plan.p_torn = prob(val)?,
+                "max" => plan.max_injections = int(val)?,
+                other => anyhow::bail!(
+                    "unknown fault spec key '{other}' (seed | execute | upload \
+                     | fetch | persistent | heal | stall_ms | torn | max)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// The plan requested by `CUSHION_FAULTS` (None when unset/empty).
+    pub fn from_env() -> crate::Result<Option<Self>> {
+        match std::env::var("CUSHION_FAULTS") {
+            Ok(v) if !v.trim().is_empty() => Ok(Some(Self::parse(&v)?)),
+            _ => Ok(None),
+        }
+    }
+}
+
+/// Counters for what the armed plan actually injected — chaos tests
+/// assert injection happened; `coordinator::metrics` mirrors the total.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    pub execute: u64,
+    pub upload: u64,
+    pub fetch: u64,
+    pub stalls: u64,
+    pub torn: u64,
+}
+
+impl FaultStats {
+    /// Total injected *failures* (stalls add latency, not failure).
+    pub fn total(&self) -> u64 {
+        self.execute + self.upload + self.fetch + self.torn
+    }
+}
+
+struct FaultState {
+    plan: FaultPlan,
+    rng: SplitMix64,
+    stats: FaultStats,
+    rung: u32,
+    seq: u64,
+}
+
+thread_local! {
+    static STATE: RefCell<Option<FaultState>> = const { RefCell::new(None) };
+}
+
+/// Arm `plan` on this thread (replaces any armed plan, resets stats).
+pub fn arm(plan: FaultPlan) {
+    let rng = SplitMix64::new(plan.seed ^ 0xFA_017);
+    STATE.with(|s| {
+        *s.borrow_mut() = Some(FaultState {
+            plan,
+            rng,
+            stats: FaultStats::default(),
+            rung: 0,
+            seq: 0,
+        });
+    });
+}
+
+/// Disarm this thread's plan, returning its final stats.
+pub fn disarm() -> Option<FaultStats> {
+    STATE.with(|s| s.borrow_mut().take().map(|st| st.stats))
+}
+
+pub fn armed() -> bool {
+    STATE.with(|s| s.borrow().is_some())
+}
+
+/// Stats of the armed plan (zeros when unarmed).
+pub fn stats() -> FaultStats {
+    STATE.with(|s| s.borrow().as_ref().map(|st| st.stats).unwrap_or_default())
+}
+
+/// Record the degradation ladder's current rung: once
+/// `rung >= plan.heal_rung`, injection stops (the fault has been
+/// downgraded around). Called by the scheduler on each downgrade.
+pub fn set_rung(r: u32) {
+    STATE.with(|s| {
+        if let Some(st) = s.borrow_mut().as_mut() {
+            st.rung = r;
+        }
+    });
+}
+
+pub fn rung() -> u32 {
+    STATE.with(|s| s.borrow().as_ref().map(|st| st.rung).unwrap_or(0))
+}
+
+/// Roll the dice for one backend call of `op`.
+fn roll(op: FaultOp) -> Option<InjectedFault> {
+    STATE.with(|s| {
+        let mut s = s.borrow_mut();
+        let st = s.as_mut()?;
+        if st.rung >= st.plan.heal_rung {
+            return None;
+        }
+        if st.plan.max_injections > 0 && st.stats.total() >= st.plan.max_injections {
+            return None;
+        }
+        let transient = if st.plan.persistent == Some(op) {
+            false
+        } else {
+            let p = match op {
+                FaultOp::Execute => st.plan.p_execute,
+                FaultOp::Upload => st.plan.p_upload,
+                FaultOp::Fetch => st.plan.p_fetch,
+            };
+            if p <= 0.0 || st.rng.next_f64() >= p {
+                return None;
+            }
+            true
+        };
+        st.seq += 1;
+        match op {
+            FaultOp::Execute => st.stats.execute += 1,
+            FaultOp::Upload => st.stats.upload += 1,
+            FaultOp::Fetch => st.stats.fetch += 1,
+        }
+        Some(InjectedFault { op, transient, seq: st.seq })
+    })
+}
+
+/// Sleep out the plan's transfer stall, if any (upload/fetch latency).
+fn maybe_stall() {
+    let stall = STATE.with(|s| {
+        let mut s = s.borrow_mut();
+        let st = s.as_mut()?;
+        if st.plan.stall.is_zero() || st.rung >= st.plan.heal_rung {
+            return None;
+        }
+        st.stats.stalls += 1;
+        Some(st.plan.stall)
+    });
+    if let Some(d) = stall {
+        std::thread::sleep(d);
+    }
+}
+
+/// Whether `fsutil::write_atomic` should simulate a crash mid-write
+/// this call (counts toward stats when it fires).
+pub fn should_tear() -> bool {
+    STATE.with(|s| {
+        let mut s = s.borrow_mut();
+        let Some(st) = s.as_mut() else { return false };
+        if st.plan.p_torn <= 0.0 || st.rung >= st.plan.heal_rung {
+            return false;
+        }
+        if st.plan.max_injections > 0 && st.stats.total() >= st.plan.max_injections {
+            return false;
+        }
+        if st.rng.next_f64() < st.plan.p_torn {
+            st.stats.torn += 1;
+            true
+        } else {
+            false
+        }
+    })
+}
+
+/// Classify an error as an injected fault: `(op, transient)`. Typed
+/// downcast first; falls back to the greppable `Display` prefix so
+/// classification survives `anyhow!("...: {e}")` re-wrapping.
+pub fn classify(e: &anyhow::Error) -> Option<(FaultOp, bool)> {
+    if let Some(f) = e.downcast_ref::<InjectedFault>() {
+        return Some((f.op, f.transient));
+    }
+    let msg = format!("{e:#}");
+    let transient = if msg.contains("fault-injected(transient)") {
+        true
+    } else if msg.contains("fault-injected(persistent)") {
+        false
+    } else {
+        return None;
+    };
+    let op = if msg.contains("execute fault") {
+        FaultOp::Execute
+    } else if msg.contains("upload fault") {
+        FaultOp::Upload
+    } else if msg.contains("fetch fault") {
+        FaultOp::Fetch
+    } else {
+        return None;
+    };
+    Some((op, transient))
+}
+
+/// A `Backend` decorator that injects the armed thread-local plan's
+/// faults at the trait boundary. Transparent (name aside) when no plan
+/// is armed.
+pub struct FaultyBackend {
+    inner: Rc<dyn Backend>,
+}
+
+impl FaultyBackend {
+    pub fn wrap(inner: Rc<dyn Backend>) -> Self {
+        Self { inner }
+    }
+}
+
+impl Backend for FaultyBackend {
+    fn name(&self) -> &'static str {
+        "faulty"
+    }
+
+    fn compiles_artifacts(&self) -> bool {
+        self.inner.compiles_artifacts()
+    }
+
+    fn upload(&self, v: &HostValue) -> crate::Result<DeviceBuf> {
+        maybe_stall();
+        if let Some(f) = roll(FaultOp::Upload) {
+            return Err(f.into());
+        }
+        self.inner.upload(v)
+    }
+
+    fn fetch_f32(&self, b: &DeviceBuf) -> crate::Result<Tensor> {
+        maybe_stall();
+        if let Some(f) = roll(FaultOp::Fetch) {
+            return Err(f.into());
+        }
+        self.inner.fetch_f32(b)
+    }
+
+    fn fetch_i32(&self, b: &DeviceBuf) -> crate::Result<IntTensor> {
+        maybe_stall();
+        if let Some(f) = roll(FaultOp::Fetch) {
+            return Err(f.into());
+        }
+        self.inner.fetch_i32(b)
+    }
+
+    fn execute(
+        &self,
+        exe: &super::executable::Executable,
+        args: &[Rc<DeviceBuf>],
+        splitter: Option<&super::split::TupleSplitter>,
+    ) -> crate::Result<Outputs> {
+        if let Some(f) = roll(FaultOp::Execute) {
+            return Err(f.into());
+        }
+        self.inner.execute(exe, args, splitter)
+    }
+
+    fn platform(&self) -> String {
+        format!("{}+faults", self.inner.platform())
+    }
+
+    fn device_count(&self) -> usize {
+        self.inner.device_count()
+    }
+
+    #[cfg(feature = "xla")]
+    fn pjrt(&self) -> Option<&std::sync::Arc<xla::PjRtClient>> {
+        self.inner.pjrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::RefBackend;
+    use crate::util::tensor::Tensor;
+
+    fn host_scalar() -> HostValue {
+        HostValue::F32(Tensor::full(&[1], 1.0))
+    }
+
+    #[test]
+    fn parse_full_spec() {
+        let p = FaultPlan::parse(
+            "seed=7,execute=0.5,upload=0.25,fetch=1,persistent=fetch,\
+             heal=2,stall_ms=3,torn=0.1,max=9",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.p_execute, 0.5);
+        assert_eq!(p.p_upload, 0.25);
+        assert_eq!(p.p_fetch, 1.0);
+        assert_eq!(p.persistent, Some(FaultOp::Fetch));
+        assert_eq!(p.heal_rung, 2);
+        assert_eq!(p.stall, Duration::from_millis(3));
+        assert_eq!(p.p_torn, 0.1);
+        assert_eq!(p.max_injections, 9);
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(FaultPlan::parse("bogus=1").is_err());
+        assert!(FaultPlan::parse("execute=1.5").is_err());
+        assert!(FaultPlan::parse("persistent=flux").is_err());
+        assert!(FaultPlan::parse("seed").is_err());
+        // empty / whitespace spec is the default plan
+        let p = FaultPlan::parse(" ").unwrap();
+        assert_eq!(p.p_execute, 0.0);
+        assert!(p.persistent.is_none());
+    }
+
+    #[test]
+    fn transient_upload_fault_injects_and_classifies() {
+        arm(FaultPlan::parse("seed=1,upload=1").unwrap());
+        let b = FaultyBackend::wrap(Rc::new(RefBackend));
+        let err = b.upload(&host_scalar()).unwrap_err();
+        assert_eq!(classify(&err), Some((FaultOp::Upload, true)));
+        // classification survives anyhow re-wrapping that loses the type
+        let rewrapped = anyhow::anyhow!("uploading weights: {err:#}");
+        assert!(rewrapped.downcast_ref::<InjectedFault>().is_none());
+        assert_eq!(classify(&rewrapped), Some((FaultOp::Upload, true)));
+        let stats = disarm().unwrap();
+        assert_eq!(stats.upload, 1);
+        assert_eq!(stats.total(), 1);
+    }
+
+    #[test]
+    fn persistent_fault_heals_at_rung() {
+        arm(FaultPlan::parse("seed=3,persistent=upload,heal=1").unwrap());
+        let b = FaultyBackend::wrap(Rc::new(RefBackend));
+        for _ in 0..3 {
+            let err = b.upload(&host_scalar()).unwrap_err();
+            assert_eq!(classify(&err), Some((FaultOp::Upload, false)));
+        }
+        set_rung(1);
+        assert!(b.upload(&host_scalar()).is_ok(), "healed past the fault");
+        let stats = disarm().unwrap();
+        assert_eq!(stats.upload, 3);
+    }
+
+    #[test]
+    fn max_injections_caps_the_schedule() {
+        arm(FaultPlan::parse("seed=5,upload=1,max=2").unwrap());
+        let b = FaultyBackend::wrap(Rc::new(RefBackend));
+        assert!(b.upload(&host_scalar()).is_err());
+        assert!(b.upload(&host_scalar()).is_err());
+        assert!(b.upload(&host_scalar()).is_ok(), "cap reached");
+        assert_eq!(disarm().unwrap().upload, 2);
+    }
+
+    #[test]
+    fn unarmed_backend_is_transparent() {
+        assert!(!armed());
+        let b = FaultyBackend::wrap(Rc::new(RefBackend));
+        assert!(b.upload(&host_scalar()).is_ok());
+        assert!(!should_tear());
+        assert_eq!(stats(), FaultStats::default());
+    }
+
+    #[test]
+    fn seeded_schedule_is_deterministic() {
+        let run = || {
+            arm(FaultPlan::parse("seed=11,upload=0.5").unwrap());
+            let b = FaultyBackend::wrap(Rc::new(RefBackend));
+            let pat: Vec<bool> =
+                (0..32).map(|_| b.upload(&host_scalar()).is_err()).collect();
+            disarm();
+            pat
+        };
+        let a = run();
+        assert_eq!(a, run());
+        assert!(a.iter().any(|&x| x) && !a.iter().all(|&x| x));
+    }
+}

@@ -23,6 +23,7 @@
 pub mod backend;
 pub mod client;
 pub mod executable;
+pub mod faults;
 pub mod interp;
 pub mod literalx;
 pub mod registry;
@@ -31,6 +32,7 @@ pub mod transfer;
 
 pub use backend::{Backend, BackendKind, DeviceBuf};
 pub use client::Client;
+pub use faults::{FaultPlan, FaultyBackend};
 pub use executable::Executable;
 pub use literalx::{HostValue, IntTensor, OutValue, Outputs, Value};
 pub use registry::Registry;

@@ -58,6 +58,10 @@ pub struct Registry {
     cache: Mutex<HashMap<String, Arc<Executable>>>,
     /// Installed by `Session::load*`; enables interpreter resolution.
     interp: Mutex<Option<Rc<ModelSpec>>>,
+    /// Degradation-ladder bottom rung: when set, every graph resolves
+    /// to its interpreter program even where a compiled artifact exists
+    /// (the artifact path is what keeps faulting).
+    force_interp: std::sync::atomic::AtomicBool,
 }
 
 impl Registry {
@@ -67,7 +71,24 @@ impl Registry {
             dir,
             cache: Mutex::new(HashMap::new()),
             interp: Mutex::new(None),
+            force_interp: std::sync::atomic::AtomicBool::new(false),
         }
+    }
+
+    /// Force (or stop forcing) interpreter resolution for every graph —
+    /// the ladder's last rung. Enabling drops cached compiled
+    /// executables so already-resolved graphs re-resolve under the new
+    /// policy on their next use.
+    pub fn force_interp(&self, on: bool) {
+        use std::sync::atomic::Ordering;
+        let was = self.force_interp.swap(on, Ordering::Relaxed);
+        if on != was {
+            self.cache.lock().unwrap().clear();
+        }
+    }
+
+    pub fn interp_forced(&self) -> bool {
+        self.force_interp.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     pub fn dir(&self) -> &PathBuf {
@@ -89,6 +110,7 @@ impl Registry {
     /// this client can execute it).
     pub fn has_artifact(&self, name: &str) -> bool {
         self.client.compiles_artifacts()
+            && !self.interp_forced()
             && self.dir.join(format!("{name}.hlo.txt")).exists()
     }
 
@@ -137,7 +159,7 @@ impl Registry {
 
     fn resolve(&self, name: &str) -> crate::Result<Executable> {
         let path = self.dir.join(format!("{name}.hlo.txt"));
-        if self.client.compiles_artifacts() && path.exists() {
+        if self.has_artifact(name) {
             return Executable::load(&self.client, name, &path);
         }
         let spec = self.interp.lock().unwrap().clone();

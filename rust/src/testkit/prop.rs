@@ -373,6 +373,101 @@ mod kvpool_props {
 }
 
 #[cfg(test)]
+mod chaos_props {
+    //! End-to-end fault-recovery chaos property (runtime::faults + the
+    //! scheduler's retry/requeue machinery): a batch served over an
+    //! undersized pool under a seeded, randomized fault schedule must
+    //! terminate with one response per request, fully restore the block
+    //! pool, and — in fp mode, where preempt/resume re-prefill is
+    //! bit-identical — produce exactly the fault-free token streams.
+
+    use std::rc::Rc;
+
+    use super::*;
+    use crate::coordinator::{Engine, FinishReason, Request, Scheduler};
+    use crate::quant::scheme::Scheme;
+    use crate::runtime::backend::RefBackend;
+    use crate::runtime::{faults, Client, FaultPlan, FaultyBackend};
+    use crate::testkit::tiny::TinyCfg;
+
+    struct ChaosRun {
+        /// (id, finish, tokens) per request, id-sorted.
+        outputs: Vec<(u64, FinishReason, Vec<i32>)>,
+        pool_restored: bool,
+        injected: u64,
+    }
+
+    /// Serve 4 requests over a 6-block pool (preemption guaranteed),
+    /// optionally under `plan`. The plan is armed only for the serving
+    /// phase — faulting the setup would abort in the `unwrap`s instead
+    /// of exercising recovery.
+    fn run_batch(plan: Option<FaultPlan>) -> ChaosRun {
+        let cfg = TinyCfg { kv_pool_blocks: 6, ..TinyCfg::default() };
+        let client =
+            Client::with_backend(Rc::new(FaultyBackend::wrap(Rc::new(RefBackend))));
+        let mut s = cfg.session_with_client(client).unwrap();
+        s.set_cushion_tokens(&[crate::data::BOS, crate::data::DOT])
+            .unwrap();
+        let prompts: Vec<Vec<i32>> = (0..4)
+            .map(|i| s.corpus.split("heldout").unwrap().seq(i)[..6].to_vec())
+            .collect();
+        let mut sched = Scheduler::new(Engine::new(s, Scheme::fp()).unwrap());
+        let base_blocks = sched.engine.kv.blocks_in_use();
+        if let Some(p) = plan {
+            faults::arm(p);
+        }
+        for (i, p) in prompts.iter().enumerate() {
+            let mut r = Request::new(1 + i as u64, p.clone(), 6);
+            r.stop_token = None;
+            sched.submit_request(r);
+        }
+        let mut outputs: Vec<(u64, FinishReason, Vec<i32>)> = sched
+            .run_to_completion()
+            .unwrap()
+            .into_iter()
+            .map(|r| (r.id, r.finished, r.tokens))
+            .collect();
+        outputs.sort_by_key(|(id, _, _)| *id);
+        let injected = faults::disarm().map(|s| s.total()).unwrap_or(0);
+        sched.engine.kv.clear_prefix_cache();
+        let pool_restored = sched.engine.kv.blocks_in_use() == base_blocks
+            && sched.engine.kv.free_count() == sched.engine.kv.n_slots;
+        ChaosRun { outputs, pool_restored, injected }
+    }
+
+    #[test]
+    fn chaos_transient_faults_recover_bit_identically() {
+        let clean = run_batch(None);
+        assert!(clean.pool_restored, "fault-free run must restore the pool");
+        assert_eq!(clean.injected, 0);
+        assert_eq!(clean.outputs.len(), 4);
+        assert!(clean
+            .outputs
+            .iter()
+            .all(|(_, f, _)| *f == FinishReason::MaxTokens));
+
+        let any_injected = std::cell::Cell::new(false);
+        check("chaos recovery", 8, usize_in(0..10_000), |&seed| {
+            // transient-only schedule, capped so every case terminates;
+            // the seed randomizes which engine calls fault
+            let plan = FaultPlan::parse(&format!(
+                "seed={seed},execute=0.15,upload=0.08,fetch=0.08,max=6"
+            ))
+            .unwrap();
+            let run = run_batch(Some(plan));
+            if run.injected > 0 {
+                any_injected.set(true);
+            }
+            run.pool_restored && run.outputs == clean.outputs
+        });
+        assert!(
+            any_injected.get(),
+            "no case injected a fault — the schedule never exercised recovery"
+        );
+    }
+}
+
+#[cfg(test)]
 mod tests {
     use super::*;
 

@@ -221,10 +221,17 @@ impl TinyCfg {
     /// A fully in-memory session on the reference backend: no artifact
     /// directory, no XLA.
     pub fn session(&self) -> crate::Result<Session> {
+        self.session_with_client(Client::reference())
+    }
+
+    /// Like `session`, but on a caller-supplied client — chaos tests
+    /// pass a fault-wrapped reference client here so injection stays
+    /// scoped to one test without touching `CUSHION_FAULTS`.
+    pub fn session_with_client(&self, client: Client) -> crate::Result<Session> {
         let manifest = self.manifest()?;
         let weights = self.weights(&manifest)?;
         let corpus = self.corpus(8);
-        Session::from_parts(manifest, weights, corpus, Client::reference())
+        Session::from_parts(manifest, weights, corpus, client)
     }
 }
 

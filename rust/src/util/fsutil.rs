@@ -85,6 +85,35 @@ pub fn read(path: &Path) -> crate::Result<Vec<u8>> {
     std::fs::read(path).map_err(|e| anyhow::anyhow!("reading {path:?}: {e}"))
 }
 
+/// Crash-consistent write: the bytes land in `<path>.tmp` and are
+/// renamed into place (rename within one directory is atomic on POSIX),
+/// so a crash mid-write can never leave a torn `<path>` behind — the
+/// old contents, if any, survive intact.
+///
+/// Under an armed fault plan with `torn=` set, this simulates exactly
+/// that crash: a *truncated* temp file is written, the rename never
+/// happens, and the call errors — `should_tear` proves the target file
+/// is untouched.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> crate::Result<()> {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    let tmp = PathBuf::from(os);
+    if crate::runtime::faults::should_tear() {
+        let cut = bytes.len() / 2;
+        std::fs::write(&tmp, &bytes[..cut])?;
+        anyhow::bail!(
+            "fault-injected(torn): simulated crash mid-write of {path:?} \
+             ({cut}/{} bytes in {tmp:?}, never renamed)",
+            bytes.len()
+        );
+    }
+    std::fs::write(&tmp, bytes)
+        .map_err(|e| anyhow::anyhow!("writing {tmp:?}: {e}"))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("installing {path:?}: {e}"))?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -8,6 +8,7 @@
 //! the same invariants the artifact-gated suites assert under PJRT.
 
 use std::io::{BufRead, BufReader, Write};
+use std::rc::Rc;
 
 use cushioncache::coordinator::{Engine, FinishReason, Request, Scheduler};
 use cushioncache::cushion::{self, SearchCfg};
@@ -16,12 +17,23 @@ use cushioncache::eval::perplexity::{argmax, perplexity};
 use cushioncache::model::session::Session;
 use cushioncache::quant::calibrate;
 use cushioncache::quant::scheme::{Algorithm, Granularity, Scheme};
-use cushioncache::runtime::transfer;
+use cushioncache::runtime::backend::RefBackend;
+use cushioncache::runtime::{faults, transfer, Client, FaultPlan, FaultyBackend};
 use cushioncache::testkit::tiny::TinyCfg;
 use cushioncache::util::json;
 
 fn tiny_session() -> Session {
     TinyCfg::default().session().unwrap()
+}
+
+/// A tiny session whose backend injects this thread's armed fault plan
+/// (runtime::faults) — nothing is injected until `faults::arm` runs.
+fn faulty_session() -> Session {
+    TinyCfg::default()
+        .session_with_client(Client::with_backend(Rc::new(FaultyBackend::wrap(
+            Rc::new(RefBackend),
+        ))))
+        .unwrap()
 }
 
 fn prompt_from(s: &Session, seq: usize, len: usize) -> Vec<i32> {
@@ -155,6 +167,96 @@ fn scheduler_fills_slots_and_cancels_hermetically() {
     assert!(resp
         .iter()
         .any(|r| r.id == 200 && r.finished == FinishReason::Cancelled));
+}
+
+#[test]
+fn chaos_fixed_seed_transient_faults_serve_bit_identically() {
+    // a 100% execute-fault plan capped at 2 injections: the first engine
+    // call fails twice, the bounded-backoff retry absorbs both, and the
+    // batch finishes exactly as the fault-free run does
+    let run = |faulted: bool| -> (Vec<Vec<i32>>, usize, u64) {
+        let s = if faulted { faulty_session() } else { tiny_session() };
+        let prompts: Vec<Vec<i32>> = (0..s.manifest.serve_batch)
+            .map(|i| prompt_from(&s, i, 6))
+            .collect();
+        let mut sched = Scheduler::new(Engine::new(s, Scheme::fp()).unwrap());
+        if faulted {
+            faults::arm(FaultPlan::parse("seed=1,execute=1,max=2").unwrap());
+        }
+        for (i, p) in prompts.iter().enumerate() {
+            let mut r = Request::new(1 + i as u64, p.clone(), 6);
+            r.stop_token = None;
+            sched.submit_request(r);
+        }
+        let mut resp = sched.run_to_completion().unwrap();
+        let injected = faults::disarm().map(|st| st.total()).unwrap_or(0);
+        resp.sort_by_key(|r| r.id);
+        assert!(resp.iter().all(|r| r.finished == FinishReason::MaxTokens));
+        (
+            resp.into_iter().map(|r| r.tokens).collect(),
+            sched.metrics.retries_total(),
+            injected,
+        )
+    };
+    let (clean, _, _) = run(false);
+    let (faulted, retries, injected) = run(true);
+    assert_eq!(injected, 2, "the capped plan must inject exactly twice");
+    assert_eq!(retries, 2, "both transient faults must be retried in place");
+    assert_eq!(faulted, clean, "recovered run must be bit-identical");
+}
+
+#[test]
+fn persistent_fault_walks_the_degradation_ladder_and_still_serves() {
+    // every execute call fails persistently until the ladder reaches
+    // rung 2 (heal=2): retries can't help, so the scheduler must walk
+    // device-split -> host-roundtrip -> interpreter and keep serving
+    let s = faulty_session();
+    let prompts: Vec<Vec<i32>> = (0..s.manifest.serve_batch)
+        .map(|i| prompt_from(&s, i, 6))
+        .collect();
+    let mut sched = Scheduler::new(Engine::new(s, Scheme::fp()).unwrap());
+    faults::arm(FaultPlan::parse("seed=3,persistent=execute,heal=2").unwrap());
+    for (i, p) in prompts.iter().enumerate() {
+        let mut r = Request::new(1 + i as u64, p.clone(), 6);
+        r.stop_token = None;
+        sched.submit_request(r);
+    }
+    let mut resp = sched.run_to_completion().unwrap();
+    let injected = faults::disarm().map(|st| st.total()).unwrap_or(0);
+    resp.sort_by_key(|r| r.id);
+    assert!(injected >= 2, "one persistent fault per rung below heal");
+    assert_eq!(resp.len(), prompts.len());
+    assert!(
+        resp.iter().all(|r| r.finished == FinishReason::MaxTokens),
+        "the ladder floor must still serve: {:?}",
+        resp.iter().map(|r| &r.finished).collect::<Vec<_>>()
+    );
+    assert_eq!(sched.rung(), 2, "device-split -> host-roundtrip -> interp");
+    assert_eq!(sched.metrics.downgrades, 2);
+    assert_eq!(sched.metrics.backend_rung, 2);
+    assert!(sched.engine.session.registry.interp_forced());
+}
+
+#[test]
+fn expired_deadline_kills_queued_request_and_serves_the_rest() {
+    let engine = Engine::new(tiny_session(), Scheme::fp()).unwrap();
+    let mut sched = Scheduler::new(engine);
+    let prompt = prompt_from(&sched.engine.session, 1, 6);
+    let mut doomed = Request::new(1, prompt.clone(), 4);
+    doomed.stop_token = None;
+    doomed.deadline = Some(std::time::Duration::ZERO);
+    sched.submit_request(doomed);
+    let mut ok = Request::new(2, prompt, 4);
+    ok.stop_token = None;
+    sched.submit_request(ok);
+    std::thread::sleep(std::time::Duration::from_millis(2));
+    let mut resp = sched.run_to_completion().unwrap();
+    resp.sort_by_key(|r| r.id);
+    assert_eq!(resp.len(), 2);
+    assert_eq!(resp[0].finished, FinishReason::Error("deadline".into()));
+    assert!(resp[0].tokens.is_empty(), "killed before any generation");
+    assert_eq!(resp[1].finished, FinishReason::MaxTokens);
+    assert_eq!(sched.metrics.deadline_expired, 1);
 }
 
 #[test]

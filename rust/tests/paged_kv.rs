@@ -286,6 +286,58 @@ fn oversubscribed_pool_completes_via_preemption() {
 }
 
 #[test]
+fn cancel_of_preempted_request_releases_donated_blocks_exactly_once() {
+    // same oversubscribed geometry as above: the 6-block pool forces a
+    // preemption, which frees the victim's lane and donates its full
+    // blocks to the prefix cache. Cancelling the victim while it sits
+    // in the resume queue must release those donations exactly once —
+    // a leaked hold shows up as blocks_in_use above baseline after the
+    // run, a double release panics inside the pool.
+    let cfg = TinyCfg { kv_pool_blocks: 6, ..TinyCfg::default() };
+    let s = session_with_cushion(&cfg);
+    let prompts: Vec<Vec<i32>> = (0..4).map(|i| prompt_from(&s, i, 6)).collect();
+    let mut sched = Scheduler::new(Engine::new(s, Scheme::fp()).unwrap());
+    let base = sched.engine.kv.blocks_in_use(); // the pinned cushion run
+    submit_all(&mut sched, &prompts, 8);
+
+    let mut guard = 0;
+    while sched.batcher.resume_count() == 0 {
+        sched.step().unwrap();
+        guard += 1;
+        assert!(guard < 200, "small pool never preempted");
+    }
+
+    // find the preempted request by probing: only its cancel shrinks
+    // the resume queue (queued/running cancels leave it unchanged)
+    let mut preempted_id = None;
+    for id in 1..=4u64 {
+        let before = sched.batcher.resume_count();
+        if sched.cancel(id) && sched.batcher.resume_count() < before {
+            preempted_id = Some(id);
+            break;
+        }
+    }
+    let preempted_id = preempted_id.expect("a preempted request must exist");
+    assert!(
+        !sched.cancel(preempted_id),
+        "cancelling twice must be a no-op (blocks released exactly once)"
+    );
+
+    // survivors still complete; afterwards every lane is free and —
+    // once the cache is flushed — only the pinned cushion remains
+    for r in sched.run_to_completion().unwrap() {
+        assert_eq!(r.finished, FinishReason::MaxTokens);
+    }
+    assert_eq!(sched.engine.kv.free_count(), sched.engine.kv.n_slots);
+    sched.engine.kv.clear_prefix_cache();
+    assert_eq!(
+        sched.engine.kv.blocks_in_use(),
+        base,
+        "cancelled preempted request leaked block holds"
+    );
+}
+
+#[test]
 fn admission_edge_prompt_filling_the_cache_finishes_with_length() {
     // cap - m_max == seq_len for the tiny model: a prompt that exactly
     // fills the per-sequence KV space is served its prefill token and

@@ -20,6 +20,10 @@
 #        block-table parity)
 #   3. an explicit focused re-run of the kvpool/preemption suites, so a
 #      filter-induced skip in step 2 can never silently pass the gate
+#   4. the chaos suite under three fault seeds (PROP_SEED shifts the
+#      property harness; the fault schedules inside each case are still
+#      derived from the per-case seed) — end-to-end recovery must hold
+#      bit-identically across seeds, not just on the default one
 #
 # CUSHION_ARTIFACTS points at an empty scratch dir so a developer's
 # local `artifacts/` cannot leak into the hermetic run.
@@ -56,6 +60,16 @@ if [ $status -eq 0 ]; then
 fi
 
 if [ $status -eq 0 ]; then
-    echo "[hermetic] OK — full suite (incl. paged KV pool + preemption) passed with no artifacts and no XLA"
+    echo "[hermetic] chaos suite across 3 fault seeds"
+    for seed in 1 2 3; do
+        echo "[hermetic]   PROP_SEED=$seed chaos + fault-recovery tests"
+        PROP_SEED=$seed cargo test -q --no-default-features --features ref chaos
+        status=$?
+        [ $status -ne 0 ] && break
+    done
+fi
+
+if [ $status -eq 0 ]; then
+    echo "[hermetic] OK — full suite (incl. paged KV pool, preemption, and fault-injection chaos) passed with no artifacts and no XLA"
 fi
 exit $status
