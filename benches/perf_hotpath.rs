@@ -15,7 +15,10 @@
 //! preemption/resume with zero rejections, and a fault-injection
 //! scenario (10% transient execute faults over a wrapped backend) keeps
 //! all tenants alive through the retry path while recording recovered
-//! throughput. Emits
+//! throughput. A tensor-parallel scenario decodes on a 2-shard
+//! reference group, asserting the host budget is shard-invariant and
+//! recording all-gather/all-reduce traffic per step
+//! (`collective_per_iter`, hard-gated by bench-diff). Emits
 //! `BENCH_perf_hotpath.json` at the repo root so the perf trajectory is
 //! tracked across PRs — gate regressions with `cushiond bench-diff` /
 //! scripts/bench_diff.sh.
@@ -29,6 +32,7 @@ use cushioncache::model::session::Session;
 use cushioncache::quant::calibrate;
 use cushioncache::quant::scheme::{Algorithm, Granularity, Scheme};
 use cushioncache::runtime::literalx::HostValue;
+use cushioncache::runtime::collective;
 use cushioncache::runtime::transfer::{self, TransferStats};
 use cushioncache::runtime::{faults, Client, FaultPlan, FaultyBackend};
 use cushioncache::util::tensor::Tensor;
@@ -314,6 +318,76 @@ fn main() -> anyhow::Result<()> {
         churn_sum.pool_blocks_saved_peak,
     );
 
+    // ---- tensor-parallel: sharded decode on the reference group ----------
+    // a 2-shard lock-step group over the hermetic tiny model (the
+    // interpreter is the sharded substrate on every toolchain, so this
+    // row never depends on artifacts): times the group decode step and
+    // meters its collective traffic. The host-transfer gauges must stay
+    // inside the unsharded 64 KB/step budget — all-gather/all-reduce
+    // bytes ride the separate collective meter, gated by bench-diff.
+    let shard_iters = 8usize; // tiny cache_cap bounds the decode run
+    let tiny = cushioncache::testkit::tiny::TinyCfg {
+        n_heads: 4,
+        n_kv_heads: 4,
+        d_head: 8,
+        n_shards: 2,
+        ..Default::default()
+    };
+    let mut shard_engine = Engine::new(tiny.session()?, Scheme::fp())?;
+    let tiny_prompt: Vec<i32> =
+        shard_engine.session.corpus.split("heldout")?.seq(0)[..5].to_vec();
+    let tiny_b = shard_engine.session.manifest.serve_batch;
+    let tiny_slot = shard_engine
+        .kv
+        .alloc(1, tiny_prompt.len())
+        .ok_or_else(|| anyhow::anyhow!("tiny KV pool rejected one sequence"))?;
+    let mut tiny_last = shard_engine.prefill(tiny_slot, &tiny_prompt)?;
+    // warm one step so the timed region is steady-state
+    {
+        let mut feed = vec![cushioncache::data::PAD; tiny_b];
+        feed[tiny_slot] = tiny_last;
+        tiny_last = shard_engine.decode_step(&feed)?[tiny_slot];
+        shard_engine.kv.push_token(tiny_slot);
+    }
+    let coll_base = collective::snapshot();
+    let (shard_dec, shard_dec_x) = time_with_xfer(0, shard_iters, || {
+        let mut feed = vec![cushioncache::data::PAD; tiny_b];
+        feed[tiny_slot] = tiny_last;
+        tiny_last = shard_engine.decode_step(&feed).unwrap()[tiny_slot];
+        shard_engine.kv.push_token(tiny_slot);
+    });
+    let dcoll = collective::snapshot().delta_since(&coll_base);
+    row!(
+        "sharded decode step (tiny, 2 shards)",
+        &shard_dec,
+        shard_dec_x,
+        shard_iters
+    );
+    let shard_per_step = (shard_dec_x.bytes_uploaded + shard_dec_x.bytes_fetched)
+        / shard_iters as u64;
+    assert!(
+        shard_per_step <= 64 * 1024,
+        "sharded decode moved {shard_per_step} B/step over the host \
+         boundary (budget 64 KB; collectives are metered separately)"
+    );
+    let per_shard_iter = |v: u64| v as f64 / shard_iters as f64;
+    let collective_json = format!(
+        "{{\"sharded decode step (tiny, 2 shards)\": {{\"all_gathers\": \
+         {:.1}, \"kb_gathered\": {:.2}, \"all_reduces\": {:.1}, \
+         \"kb_reduced\": {:.2}}}}}",
+        per_shard_iter(dcoll.all_gathers),
+        per_shard_iter(dcoll.bytes_gathered) / 1024.0,
+        per_shard_iter(dcoll.all_reduces),
+        per_shard_iter(dcoll.bytes_reduced) / 1024.0,
+    );
+    println!(
+        "[perf] sharded decode: {:.1} all-gathers and {:.2} KB gathered \
+         per step, {} B/step host traffic",
+        per_shard_iter(dcoll.all_gathers),
+        per_shard_iter(dcoll.bytes_gathered) / 1024.0,
+        shard_per_step
+    );
+
     // marshalling cost: cache-sized host<->device round trip
     let m = &sched.engine.session.manifest;
     let cache_elems =
@@ -380,6 +454,7 @@ fn main() -> anyhow::Result<()> {
     }
     xfer_json.push('}');
     extras.push(("transfers_per_iter".to_string(), xfer_json));
+    extras.push(("collective_per_iter".to_string(), collective_json));
     let counts_json = resident_counts
         .iter()
         .map(|(k, n)| format!("\"{k}\": {n}"))

@@ -6,7 +6,10 @@
 //!   both files plus a must-exist "key component" (the decode step), and
 //! * ANY growth in a `transfers_per_iter` gauge (uploads / kb_up /
 //!   fetches / kb_down) — the transfer budget is a hard invariant of
-//!   the device-resident serving design, so there is no tolerance.
+//!   the device-resident serving design, so there is no tolerance — and
+//!   likewise in a `collective_per_iter` gauge (all_gathers /
+//!   kb_gathered / all_reduces / kb_reduced), the tensor-parallel
+//!   decode step's collective traffic.
 //!
 //! Consumed by `cushiond bench-diff <base.json> <new.json>` and
 //! `scripts/bench_diff.sh`, the documented pre-merge check.
@@ -80,23 +83,39 @@ pub fn diff_values(base: &Value, new: &Value, tol: f64) -> DiffReport {
         }
     }
 
-    // transfer gauges: any growth fails
-    let (bx, nx) = (base.get("transfers_per_iter"), new.get("transfers_per_iter"));
-    if let (Some(Value::Obj(bkvs)), Some(nxv)) = (bx, nx) {
+    // transfer and collective gauges: any growth fails. The collective
+    // section meters all-gather/all-reduce bytes of the tensor-parallel
+    // decode step, which is a design invariant exactly like the
+    // host-transfer budget.
+    let sections: [(&str, &str, &[&str]); 2] = [
+        (
+            "transfers_per_iter",
+            "transfer",
+            &["uploads", "kb_up", "fetches", "kb_down"],
+        ),
+        (
+            "collective_per_iter",
+            "collective",
+            &["all_gathers", "kb_gathered", "all_reduces", "kb_reduced"],
+        ),
+    ];
+    for (section, kind, gauges) in sections {
+        let (bx, nx) = (base.get(section), new.get(section));
+        let (Some(Value::Obj(bkvs)), Some(nxv)) = (bx, nx) else { continue };
         for (name, brow) in bkvs {
             let Some(nrow) = nxv.get(name) else {
                 r.notes.push(format!(
-                    "transfer row '{name}' dropped (not compared)"
+                    "{kind} row '{name}' dropped (not compared)"
                 ));
                 continue;
             };
-            for gauge in ["uploads", "kb_up", "fetches", "kb_down"] {
+            for gauge in gauges {
                 let b = brow.get(gauge).and_then(Value::as_f64).unwrap_or(0.0);
                 let n = nrow.get(gauge).and_then(Value::as_f64).unwrap_or(0.0);
                 if n > b + XFER_EPS {
                     r.regressions.push(format!(
                         "'{name}' {gauge} grew {b:.1} -> {n:.1} \
-                         (per-iter transfer growth is a hard failure)"
+                         (per-iter {kind} growth is a hard failure)"
                     ));
                 }
             }
@@ -167,6 +186,32 @@ mod tests {
         let r = diff_values(&snap(4.7, 4608.0, 4640.0), &snap(1.4, 0.1, 0.1), 0.10);
         assert!(r.passed(), "{:?}", r.regressions);
         assert!(r.notes.iter().any(|n| n.contains("improved")));
+    }
+
+    #[test]
+    fn collective_traffic_growth_fails() {
+        let snap_coll = |kb_gathered: f64, kb_reduced: f64| -> Value {
+            json::parse(&format!(
+                r#"{{
+                  "components": {{
+                    "sharded decode step (tiny, 2 shards)": {{"mean_ms": 3.0, "p50_ms": 3.0, "p99_ms": 3.5}}
+                  }},
+                  "collective_per_iter": {{
+                    "sharded decode step (tiny, 2 shards)": {{"all_gathers": 4.0, "kb_gathered": {kb_gathered}, "all_reduces": 0.0, "kb_reduced": {kb_reduced}}}
+                  }}
+                }}"#
+            ))
+            .unwrap()
+        };
+        let a = snap_coll(1.25, 0.0);
+        assert!(diff_values(&a, &a, DEFAULT_TOL).passed());
+        let r = diff_values(&a, &snap_coll(2.5, 0.0), DEFAULT_TOL);
+        assert!(!r.passed());
+        assert!(r.regressions[0].contains("kb_gathered"));
+        // a new all-reduce sneaking onto the hot path is a regression
+        let r = diff_values(&a, &snap_coll(1.25, 0.5), DEFAULT_TOL);
+        assert!(!r.passed());
+        assert!(r.regressions[0].contains("kb_reduced"));
     }
 
     #[test]

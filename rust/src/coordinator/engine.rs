@@ -55,11 +55,13 @@ use std::rc::Rc;
 
 use crate::data::PAD;
 use crate::eval::perplexity::{argmax, argmax_rows};
+use crate::model::forward::ModelSpec;
 use crate::model::session::Session;
 use crate::quant::scheme::Scheme;
+use crate::runtime::interp::InterpProgram;
 use crate::runtime::literalx::{self, HostValue, IntTensor, OutValue, Value};
 use crate::runtime::split::{OutSpec, TupleSplitter};
-use crate::runtime::DeviceBuf;
+use crate::runtime::{DeviceBuf, DeviceGroup};
 use crate::util::tensor::Tensor;
 
 use super::kvpool::PagedKv;
@@ -70,6 +72,19 @@ enum Mirror {
     Prefill(usize),
     /// A decode step wrote one KV row per busy slot.
     Decode,
+}
+
+/// Tensor-parallel state (manifest `n_shards` > 1): the shard group and
+/// the per-shard contiguous caches `[L, 2, B, Hkv/n, CAP, dh]`. The
+/// caches are host-held — shard threads are the logical devices and
+/// execute interpreter programs on host values directly, so the
+/// host-transfer gauges stay honest (shard-to-shard traffic is metered
+/// by `runtime::collective` instead). Written KV rows are mirrored into
+/// the block pool per shard, so pool storage is per-shard along the
+/// `Hkv` axis while block tables stay global.
+struct ShardedState {
+    group: DeviceGroup,
+    caches: Vec<Tensor>,
 }
 
 pub struct Engine {
@@ -116,6 +131,9 @@ pub struct Engine {
     split_prefill: Option<TupleSplitter>,
     split_decode_sampled: Option<TupleSplitter>,
     split_prefill_sampled: Option<TupleSplitter>,
+    /// Tensor-parallel shard group. `None` = unsharded — every
+    /// pre-existing path is untouched.
+    shards: Option<ShardedState>,
 }
 
 impl Engine {
@@ -212,7 +230,32 @@ impl Engine {
             )
         }).flatten();
 
+        // tensor-parallel group (manifest n_shards / --shards): resolve
+        // the per-shard program names through the registry now, so a
+        // missing interpreter or bad geometry fails at construction
+        let n_shards = m.n_shards;
+        let shards = if n_shards > 1 {
+            for k in 0..n_shards {
+                for op in ["prefill", "decode"] {
+                    let name = format!("{op}_{suffix}_s{k}of{n_shards}");
+                    anyhow::ensure!(
+                        session.registry.has(&name),
+                        "sharded engine: graph '{name}' unresolvable \
+                         (sharded execution runs on the reference \
+                         interpreter)"
+                    );
+                }
+            }
+            let caches = (0..n_shards)
+                .map(|k| kv.gather_view_shard(k, n_shards))
+                .collect::<crate::Result<Vec<_>>>()?;
+            Some(ShardedState { group: DeviceGroup::new(n_shards), caches })
+        } else {
+            None
+        };
+
         Ok(Self {
+            shards,
             prefill_graph: format!("prefill_{suffix}"),
             decode_graph: format!("decode_{suffix}"),
             device_sampling: decode_sampled_graph.is_some()
@@ -249,6 +292,18 @@ impl Engine {
             self.pool_blocks,
         );
         self.cache = Value::Host(HostValue::F32(self.kv.gather_view()));
+        if let Some(sh) = &mut self.shards {
+            let n = sh.group.n_shards();
+            sh.caches = (0..n)
+                .map(|k| self.kv.gather_view_shard(k, n))
+                .collect::<crate::Result<_>>()
+                .expect("shard geometry validated at construction");
+        }
+    }
+
+    /// Shard count of this engine (1 = unsharded).
+    pub fn n_shards(&self) -> usize {
+        self.shards.as_ref().map_or(1, |s| s.group.n_shards())
     }
 
     /// Override the KV pool size (blocks) and rebuild — the pool-churn /
@@ -265,6 +320,13 @@ impl Engine {
     /// mirrors written KV rows into the block pool, making pool contents
     /// authoritative.
     pub fn set_host_roundtrip(&mut self, on: bool) {
+        if on && self.shards.is_some() {
+            log::warn!(
+                "host round-trip is a no-op on a sharded engine: per-shard \
+                 caches are host-held and pool-mirrored already"
+            );
+            return;
+        }
         self.host_roundtrip = on;
     }
 
@@ -274,6 +336,12 @@ impl Engine {
     /// before any sequence runs (pool contents must be authoritative
     /// from the start).
     pub fn set_paged_attention(&mut self, on: bool) {
+        if on && self.shards.is_some() {
+            log::warn!(
+                "native paged attention requires n_shards == 1; ignoring"
+            );
+            return;
+        }
         self.paged_attention = on;
     }
 
@@ -383,6 +451,9 @@ impl Engine {
                 self.kv.tok_len(slot)
             );
         }
+        if self.shards.is_some() {
+            return self.prefill_sharded(slot, tokens);
+        }
         if self.paged_attention {
             return self.prefill_paged(slot, tokens);
         }
@@ -458,12 +529,97 @@ impl Engine {
         Ok(argmax(&logits.data) as i32)
     }
 
+    /// Tensor-parallel prefill: every shard runs its
+    /// `prefill_<mode>_s<k>of<n>` slice of the forward lock-step through
+    /// the group's collective bus, prompts padded to `seq_len` so the
+    /// written cache matches the unsharded logits graph bit-for-bit.
+    /// Logits are replicated (post-gather math is identical on every
+    /// shard); the per-shard caches are mirrored into the pool's shard
+    /// of each block's `Hkv` axis.
+    fn prefill_sharded(&mut self, slot: usize, tokens: &[i32]) -> crate::Result<i32> {
+        let n = self.n_shards();
+        let spec_plain: ModelSpec = self
+            .session
+            .registry
+            .interp_spec()
+            .map(|rc| (*rc).clone())
+            .ok_or_else(|| {
+                anyhow::anyhow!("sharded execution needs the reference interpreter")
+            })?;
+        let weight_slices = self.session.shard_weight_slices(n)?;
+        let weight_refs: Vec<&Vec<Tensor>> =
+            weight_slices.iter().map(|r| r.as_ref()).collect();
+        let prefix_slices = self.session.shard_prefix_slices(n)?;
+        let prefix_refs: Vec<&Tensor> =
+            prefix_slices.iter().map(|r| r.as_ref()).collect();
+        let cushion_len = self.session.prefix_len();
+        let ranges = self.session.ranges();
+        let inv = self.session.inv_smooth();
+        let (act_levels, kv_levels) =
+            (self.scheme.act_levels(), self.scheme.kv_levels());
+        let suffix = self.suffix.clone();
+        let tok_len = tokens.len() as i32;
+        let mut padded = tokens.to_vec();
+        padded.resize(self.session.manifest.seq_len, PAD);
+
+        let sh = self.shards.as_ref().expect("sharded path");
+        let caches = &sh.caches;
+        let mut results = sh.group.run(|k, bus| {
+            crate::runtime::faults::inject_execute()?;
+            let prog = InterpProgram::parse(
+                Rc::new(spec_plain.clone()),
+                &format!("prefill_{suffix}_s{k}of{n}"),
+            )?;
+            let mut args: Vec<HostValue> = weight_refs[k]
+                .iter()
+                .map(|t| HostValue::F32(t.clone()))
+                .collect();
+            args.push(HostValue::F32(caches[k].clone()));
+            args.push(HostValue::F32(prefix_refs[k].clone()));
+            args.push(HostValue::scalar_i32(cushion_len));
+            args.push(HostValue::scalar_i32(slot as i32));
+            args.push(HostValue::I32(IntTensor::vec(padded.clone())));
+            args.push(HostValue::scalar_i32(tok_len));
+            args.push(HostValue::F32(ranges.clone()));
+            args.push(HostValue::F32(Tensor::scalar(act_levels)));
+            args.push(HostValue::F32(Tensor::scalar(kv_levels)));
+            args.push(HostValue::F32(inv.clone()));
+            let mut outs = prog.execute_sharded(&args, bus)?;
+            anyhow::ensure!(outs.len() == 2, "prefill shard: expected 2 outputs");
+            let logits = outs.pop().unwrap();
+            let cache = outs.pop().unwrap();
+            match (cache, logits) {
+                (HostValue::F32(c), HostValue::F32(l)) => Ok((c, l)),
+                _ => anyhow::bail!("prefill shard: non-f32 outputs"),
+            }
+        })?;
+        anyhow::ensure!(results.len() == n, "prefill shard: missing results");
+        let first = argmax(&results[0].1.data) as i32;
+        let sh = self.shards.as_mut().expect("sharded path");
+        for (k, (c, _)) in results.drain(..).enumerate() {
+            sh.caches[k] = c;
+        }
+        for k in 0..n {
+            self.kv.scatter_prefill_shard(
+                &self.shards.as_ref().unwrap().caches[k],
+                slot,
+                k,
+                n,
+            )?;
+        }
+        self.kv.publish_prefix(slot);
+        Ok(first)
+    }
+
     /// One decode step for all slots; `tokens[b]` is the last generated
     /// token of slot b (PAD for inactive slots). Returns next tokens [B].
     pub fn decode_step(&mut self, tokens: &[i32]) -> crate::Result<Vec<i32>> {
         let (serve_batch, v) =
             (self.session.manifest.serve_batch, self.session.manifest.vocab);
         anyhow::ensure!(tokens.len() == serve_batch);
+        if self.shards.is_some() {
+            return self.decode_step_sharded(tokens);
+        }
         if self.host_roundtrip || self.paged_attention {
             // pool-writing modes: the block covering each busy slot's
             // write position (m_max + tok_len) must exist up front. The
@@ -549,10 +705,123 @@ impl Engine {
         Ok(argmax_rows(&logits.data, serve_batch, v))
     }
 
+    /// Tensor-parallel decode step: one `decode_<mode>_s<k>of<n>` run
+    /// per shard, lock-step through the collective bus. Like the
+    /// host-round-trip mode this is pool-writing — each shard's newly
+    /// written KV row is mirrored into its slice of every busy slot's
+    /// blocks before the scheduler advances lengths.
+    fn decode_step_sharded(&mut self, tokens: &[i32]) -> crate::Result<Vec<i32>> {
+        let (serve_batch, v) =
+            (self.session.manifest.serve_batch, self.session.manifest.vocab);
+        for slot in self.kv.busy_slots() {
+            anyhow::ensure!(
+                self.kv.ensure_append(slot),
+                "kv block pool exhausted growing slot {slot}"
+            );
+        }
+        let n = self.n_shards();
+        let spec_plain: ModelSpec = self
+            .session
+            .registry
+            .interp_spec()
+            .map(|rc| (*rc).clone())
+            .ok_or_else(|| {
+                anyhow::anyhow!("sharded execution needs the reference interpreter")
+            })?;
+        let weight_slices = self.session.shard_weight_slices(n)?;
+        let weight_refs: Vec<&Vec<Tensor>> =
+            weight_slices.iter().map(|r| r.as_ref()).collect();
+        let cushion_len = self.session.prefix_len();
+        let lens = self.kv.lens_i32();
+        let ranges = self.session.ranges();
+        let inv = self.session.inv_smooth();
+        let (act_levels, kv_levels) =
+            (self.scheme.act_levels(), self.scheme.kv_levels());
+        let suffix = self.suffix.clone();
+        let toks = tokens.to_vec();
+
+        let sh = self.shards.as_ref().expect("sharded path");
+        let caches = &sh.caches;
+        let mut results = sh.group.run(|k, bus| {
+            crate::runtime::faults::inject_execute()?;
+            let prog = InterpProgram::parse(
+                Rc::new(spec_plain.clone()),
+                &format!("decode_{suffix}_s{k}of{n}"),
+            )?;
+            let mut args: Vec<HostValue> = weight_refs[k]
+                .iter()
+                .map(|t| HostValue::F32(t.clone()))
+                .collect();
+            args.push(HostValue::F32(caches[k].clone()));
+            args.push(HostValue::I32(IntTensor::vec(lens.clone())));
+            args.push(HostValue::scalar_i32(cushion_len));
+            args.push(HostValue::I32(IntTensor::vec(toks.clone())));
+            args.push(HostValue::F32(ranges.clone()));
+            args.push(HostValue::F32(Tensor::scalar(act_levels)));
+            args.push(HostValue::F32(Tensor::scalar(kv_levels)));
+            args.push(HostValue::F32(inv.clone()));
+            let mut outs = prog.execute_sharded(&args, bus)?;
+            anyhow::ensure!(outs.len() == 2, "decode shard: expected 2 outputs");
+            let logits = outs.pop().unwrap();
+            let cache = outs.pop().unwrap();
+            match (cache, logits) {
+                (HostValue::F32(c), HostValue::F32(l)) => Ok((c, l)),
+                _ => anyhow::bail!("decode shard: non-f32 outputs"),
+            }
+        })?;
+        anyhow::ensure!(results.len() == n, "decode shard: missing results");
+        let next = argmax_rows(&results[0].1.data, serve_batch, v);
+        let sh = self.shards.as_mut().expect("sharded path");
+        for (k, (c, _)) in results.drain(..).enumerate() {
+            sh.caches[k] = c;
+        }
+        let busy = self.kv.busy_slots();
+        for k in 0..n {
+            for &slot in &busy {
+                self.kv.scatter_decode_row_shard(
+                    &self.shards.as_ref().unwrap().caches[k],
+                    slot,
+                    k,
+                    n,
+                )?;
+            }
+        }
+        Ok(next)
+    }
+
     /// Host view of the contiguous cache (tests / debugging): fetches
     /// from device when resident there; gathered from the pool in the
     /// native paged mode (where no contiguous cache exists).
     pub fn cache_host(&self) -> crate::Result<Tensor> {
+        if let Some(sh) = &self.shards {
+            // stitch the per-shard caches [L, 2, B, Hkv/n, CAP, dh]
+            // back into the full contiguous view along the head axis
+            let m = &self.session.manifest;
+            let (nl, b, hkv, cap, dh) = (
+                m.n_layers, m.serve_batch, m.n_kv_heads, m.cache_cap, m.d_head,
+            );
+            let n = sh.group.n_shards();
+            let loc = hkv / n;
+            let row = cap * dh;
+            let mut full = vec![0.0f32; nl * 2 * b * hkv * row];
+            for (k, c) in sh.caches.iter().enumerate() {
+                anyhow::ensure!(
+                    c.data.len() == nl * 2 * b * loc * row,
+                    "shard {k} cache has unexpected size"
+                );
+                for lw in 0..nl * 2 {
+                    for bi in 0..b {
+                        for h in 0..loc {
+                            let src = ((lw * b + bi) * loc + h) * row;
+                            let dst = ((lw * b + bi) * hkv + k * loc + h) * row;
+                            full[dst..dst + row]
+                                .copy_from_slice(&c.data[src..src + row]);
+                        }
+                    }
+                }
+            }
+            return Ok(Tensor::new(vec![nl, 2, b, hkv, cap, dh], full));
+        }
         if self.paged_attention {
             return Ok(self.kv.gather_view());
         }

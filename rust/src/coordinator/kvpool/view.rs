@@ -83,6 +83,85 @@ impl PagedKv {
         cache
     }
 
+    /// One shard's `[L, 2, B, Hkv/n, CAP, dh]` execution view: the same
+    /// gather as `gather_view` restricted to the shard's KV heads
+    /// (tensor-parallel serving). Block tables stay global — one
+    /// allocation, one prefix cache, one cushion run — only the head
+    /// axis of the materialized storage is per-shard.
+    pub fn gather_view_shard(
+        &self,
+        shard: usize,
+        n_shards: usize,
+    ) -> crate::Result<Tensor> {
+        let (nl, hkv, dh, _) = self.geometry();
+        anyhow::ensure!(
+            n_shards >= 1 && shard < n_shards && hkv % n_shards == 0,
+            "kvpool: shard {shard}/{n_shards} invalid for {hkv} KV heads"
+        );
+        let loc = hkv / n_shards;
+        let h0 = shard * loc;
+        let full = self.gather_view();
+        let mut out = Tensor::zeros(&[nl, 2, self.n_slots, loc, self.cap, dh]);
+        let row = self.cap * dh;
+        for lw in 0..nl * 2 {
+            for b in 0..self.n_slots {
+                for h in 0..loc {
+                    let src = ((lw * self.n_slots + b) * hkv + h0 + h) * row;
+                    let dst = ((lw * self.n_slots + b) * loc + h) * row;
+                    out.data[dst..dst + row]
+                        .copy_from_slice(&full.data[src..src + row]);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Mirror a sharded prefill's written positions back into the owned
+    /// blocks — `scatter_prefill` for a shard-local cache, writing only
+    /// the shard's KV-head rows of each block.
+    pub fn scatter_prefill_shard(
+        &mut self,
+        cache: &Tensor,
+        slot: usize,
+        shard: usize,
+        n_shards: usize,
+    ) -> crate::Result<()> {
+        let (h0, h1) = self.shard_heads(shard, n_shards)?;
+        let Some(seq) = self.seq(slot) else { return Ok(()) };
+        let tok_len = seq.tok_len;
+        self.scatter_range_heads(cache, slot, self.m_max,
+                                 self.m_max + tok_len, h0, h1);
+        Ok(())
+    }
+
+    /// `scatter_decode_row` for a shard-local cache.
+    pub fn scatter_decode_row_shard(
+        &mut self,
+        cache: &Tensor,
+        slot: usize,
+        shard: usize,
+        n_shards: usize,
+    ) -> crate::Result<()> {
+        let (h0, h1) = self.shard_heads(shard, n_shards)?;
+        let Some(seq) = self.seq(slot) else { return Ok(()) };
+        let p = self.m_max + seq.tok_len;
+        if p < self.cap {
+            self.scatter_range_heads(cache, slot, p, p + 1, h0, h1);
+        }
+        Ok(())
+    }
+
+    fn shard_heads(&self, shard: usize, n_shards: usize)
+                   -> crate::Result<(usize, usize)> {
+        let hkv = self.geometry().1;
+        anyhow::ensure!(
+            n_shards >= 1 && shard < n_shards && hkv % n_shards == 0,
+            "kvpool: shard {shard}/{n_shards} invalid for {hkv} KV heads"
+        );
+        let loc = hkv / n_shards;
+        Ok((shard * loc, (shard + 1) * loc))
+    }
+
     /// One lane's `[L, 2, Hkv, CAP, dh]` view (tests).
     pub fn lane_view(&self, slot: usize) -> Tensor {
         let full = self.gather_view();
@@ -155,10 +234,20 @@ impl PagedKv {
     }
 
     fn scatter_range(&mut self, cache: &Tensor, slot: usize, lo: usize, hi: usize) {
-        let (nl, hkv, dh, bs) = self.geometry();
+        let hkv = self.geometry().1;
+        self.scatter_range_heads(cache, slot, lo, hi, 0, hkv);
+    }
+
+    /// Scatter substrate shared by the full and sharded mirrors: `cache`
+    /// holds heads `[h0, h1)` only; block rows outside that range are
+    /// untouched (they belong to other shards).
+    fn scatter_range_heads(&mut self, cache: &Tensor, slot: usize, lo: usize,
+                           hi: usize, h0: usize, h1: usize) {
+        let (nl, _hkv, dh, bs) = self.geometry();
+        let loc = h1 - h0;
         assert_eq!(
             cache.shape,
-            vec![nl, 2, self.n_slots, hkv, self.cap, dh],
+            vec![nl, 2, self.n_slots, loc, self.cap, dh],
             "scatter: cache/view shape mismatch"
         );
         let Some(seq) = self.seq(slot) else { return };
@@ -176,14 +265,14 @@ impl PagedKv {
         for (id, p0, p1) in plan {
             for l in 0..nl {
                 for w in 0..2 {
-                    for h in 0..hkv {
-                        let src = ((((l * 2 + w) * self.n_slots + slot) * hkv
+                    for h in 0..loc {
+                        let src = ((((l * 2 + w) * self.n_slots + slot) * loc
                             + h)
                             * self.cap
                             + p0)
                             * dh;
                         let dst =
-                            self.pool_ref().dims().row(l, w, h, p0 % bs);
+                            self.pool_ref().dims().row(l, w, h0 + h, p0 % bs);
                         let n = (p1 - p0) * dh;
                         self.pool_mut().block_mut(id)[dst..dst + n]
                             .copy_from_slice(&cache.data[src..src + n]);
@@ -300,6 +389,52 @@ mod tests {
                 let vi = ((w * 1) * 12 + p) * 2;
                 let wi = (((w * 2 + other) * 1) * 12 + p) * 2;
                 assert_eq!(lane.data[vi], want.data[wi]);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_view_slices_heads_and_scatters_back() {
+        // 2 KV heads so a 2-way shard owns one head each
+        let c = Tensor::new(vec![1, 2, 2, 4, 2],
+                            (0..32).map(|i| i as f32).collect());
+        let dims = BlockDims {
+            n_layers: 1, n_kv_heads: 2, d_head: 2, block_size: 4,
+        };
+        let mut kv = PagedKv::new(2, 4, 12, 4, 4, 9, dims, Some(&c));
+        let full = kv.gather_view();
+        // per-shard views are exact head slices of the full view
+        for shard in 0..2 {
+            let sv = kv.gather_view_shard(shard, 2).unwrap();
+            assert_eq!(sv.shape, vec![1, 2, 2, 1, 12, 2]);
+            let row = 12 * 2;
+            for lw in 0..2 {
+                for b in 0..2 {
+                    let src = ((lw * 2 + b) * 2 + shard) * row;
+                    let dst = (lw * 2 + b) * row;
+                    assert_eq!(&sv.data[dst..dst + row],
+                               &full.data[src..src + row]);
+                }
+            }
+        }
+        assert!(kv.gather_view_shard(0, 3).is_err(),
+                "2 heads do not split 3 ways");
+        // per-shard scatters compose to the full scatter: each shard
+        // mirrors only its own head rows
+        let slot = kv.alloc(1, 3).unwrap();
+        for shard in 0..2 {
+            let mut cache = kv.gather_view_shard(shard, 2).unwrap();
+            for p in 4..7 {
+                let idx = (slot * 12 + p) * 2; // layer 0, K, local head 0
+                cache.data[idx] = 200.0 + (shard * 10 + p) as f32;
+            }
+            kv.scatter_prefill_shard(&cache, slot, shard, 2).unwrap();
+        }
+        let view = kv.gather_view();
+        for shard in 0..2 {
+            for p in 4..7 {
+                let idx = ((slot * 2 + shard) * 12 + p) * 2;
+                assert_eq!(view.data[idx], 200.0 + (shard * 10 + p) as f32);
             }
         }
     }

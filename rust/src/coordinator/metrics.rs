@@ -8,6 +8,7 @@
 
 use std::time::Instant;
 
+use crate::runtime::collective::CollectiveStats;
 use crate::runtime::transfer::{self, TransferStats};
 use crate::util::stats;
 
@@ -31,6 +32,14 @@ pub struct Metrics {
     /// steady-state bytes-per-step gauges derive from these.
     pub decode_bytes_up: Vec<u64>,
     pub decode_bytes_down: Vec<u64>,
+    /// Per-decode-step collective deltas (sharded engines): bytes moved
+    /// shard-to-shard per step, metered separately from host transfers
+    /// (runtime::collective::measure). Empty on unsharded engines.
+    pub decode_bytes_gathered: Vec<u64>,
+    pub decode_bytes_reduced: Vec<u64>,
+    /// Per-decode-step shard execute-time skew (max - min, seconds) of
+    /// the group run. Empty on unsharded engines.
+    pub decode_shard_skew: Vec<f64>,
     pub ttft: Vec<f64>,
     pub tpot: Vec<f64>,
     pub completed: usize,
@@ -88,6 +97,9 @@ impl Metrics {
             decode_batch_sizes: Vec::new(),
             decode_bytes_up: Vec::new(),
             decode_bytes_down: Vec::new(),
+            decode_bytes_gathered: Vec::new(),
+            decode_bytes_reduced: Vec::new(),
+            decode_shard_skew: Vec::new(),
             ttft: Vec::new(),
             tpot: Vec::new(),
             completed: 0,
@@ -124,13 +136,27 @@ impl Metrics {
     }
 
     /// Record one batched decode step: wall-clock, running batch size,
-    /// and the transfer-counter delta over the step (what actually
-    /// crossed the host boundary — runtime::transfer::measure).
-    pub fn record_decode(&mut self, sec: f64, batch: usize, xfer: TransferStats) {
+    /// the transfer-counter delta over the step (what actually crossed
+    /// the host boundary — runtime::transfer::measure), the collective
+    /// delta (shard-to-shard bytes, zero when unsharded) and the shard
+    /// execute-time skew of the step's group run.
+    pub fn record_decode(
+        &mut self,
+        sec: f64,
+        batch: usize,
+        xfer: TransferStats,
+        coll: CollectiveStats,
+        shard_skew: f64,
+    ) {
         self.decode_seconds.push(sec);
         self.decode_batch_sizes.push(batch);
         self.decode_bytes_up.push(xfer.bytes_uploaded);
         self.decode_bytes_down.push(xfer.bytes_fetched);
+        if coll != CollectiveStats::default() || shard_skew > 0.0 {
+            self.decode_bytes_gathered.push(coll.bytes_gathered);
+            self.decode_bytes_reduced.push(coll.bytes_reduced);
+            self.decode_shard_skew.push(shard_skew);
+        }
     }
 
     pub fn record_finished(&mut self, r: &Response) {
@@ -282,6 +308,13 @@ impl Metrics {
             decode_p99: stats::percentile(&self.decode_seconds, 99.0),
             decode_bytes_up_per_step: mean_u64(&self.decode_bytes_up),
             decode_bytes_down_per_step: mean_u64(&self.decode_bytes_down),
+            decode_bytes_gathered_per_step: mean_u64(&self.decode_bytes_gathered),
+            decode_bytes_reduced_per_step: mean_u64(&self.decode_bytes_reduced),
+            shard_skew_max: self
+                .decode_shard_skew
+                .iter()
+                .copied()
+                .fold(0.0, f64::max),
             prefill_mean: stats::mean(&self.prefill_seconds),
             mean_batch: stats::mean(
                 &self.decode_batch_sizes.iter().map(|&b| b as f64).collect::<Vec<_>>(),
@@ -344,6 +377,12 @@ pub struct MetricsSummary {
     /// low hundreds of bytes; the seed round-tripped ~9 MB.
     pub decode_bytes_up_per_step: f64,
     pub decode_bytes_down_per_step: f64,
+    /// Collective-traffic gauges (sharded engines, zero otherwise): mean
+    /// shard-to-shard bytes per decode step, by collective kind, and the
+    /// worst per-step shard execute-time skew (max - min, seconds).
+    pub decode_bytes_gathered_per_step: f64,
+    pub decode_bytes_reduced_per_step: f64,
+    pub shard_skew_max: f64,
     pub prefill_mean: f64,
     pub mean_batch: f64,
 }
@@ -390,6 +429,14 @@ mod tests {
                 fetches: 1,
                 bytes_fetched: 32,
             },
+            CollectiveStats {
+                all_gathers: 4,
+                bytes_gathered: 512,
+                all_reduces: 1,
+                bytes_reduced: 128,
+                ..Default::default()
+            },
+            0.002,
         );
         m.record_finished(&Response {
             id: 1,
@@ -459,13 +506,38 @@ mod tests {
         assert!((s.decode_bytes_up_per_step - 64.0).abs() < 1e-9);
         assert!((s.decode_bytes_down_per_step - 32.0).abs() < 1e-9);
         assert!((s.decode_bytes_per_step() - 96.0).abs() < 1e-9);
+        assert!((s.decode_bytes_gathered_per_step - 512.0).abs() < 1e-9);
+        assert!((s.decode_bytes_reduced_per_step - 128.0).abs() < 1e-9);
+        assert!((s.shard_skew_max - 0.002).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unsharded_steps_leave_collective_gauges_zero() {
+        let mut m = Metrics::new();
+        m.record_decode(
+            0.01,
+            2,
+            TransferStats::default(),
+            CollectiveStats::default(),
+            0.0,
+        );
+        let s = m.summary();
+        assert_eq!(s.decode_bytes_gathered_per_step, 0.0);
+        assert_eq!(s.decode_bytes_reduced_per_step, 0.0);
+        assert_eq!(s.shard_skew_max, 0.0);
     }
 
     #[test]
     fn decode_histogram_buckets() {
         let mut m = Metrics::new();
         for &s in &[0.0003, 0.0018, 0.0018, 0.030, 9.0] {
-            m.record_decode(s, 1, TransferStats::default());
+            m.record_decode(
+                s,
+                1,
+                TransferStats::default(),
+                CollectiveStats::default(),
+                0.0,
+            );
         }
         let h = m.decode_histogram();
         assert_eq!(h[0], 1, "0.3ms -> <=0.5ms");
@@ -482,7 +554,13 @@ mod tests {
     fn decode_percentiles_in_summary() {
         let mut m = Metrics::new();
         for i in 1..=100 {
-            m.record_decode(i as f64 / 1000.0, 4, TransferStats::default());
+            m.record_decode(
+                i as f64 / 1000.0,
+                4,
+                TransferStats::default(),
+                CollectiveStats::default(),
+                0.0,
+            );
         }
         let s = m.summary();
         assert!((s.decode_p50 - 0.0505).abs() < 1e-6);

@@ -1,5 +1,10 @@
 //! Multi-engine router: route requests to engines by quantization mode,
-//! with least-loaded selection among replicas of the same mode.
+//! with least-loaded-*blocks* selection among replicas of the same mode
+//! (free KV blocks first, queued+running load as the tie-break). A
+//! tensor-parallel engine registers as a single replica — one scheduler
+//! drives the whole shard group lock-step, so draining the router
+//! drains each shard group to completion with the same semantics as an
+//! unsharded engine.
 
 use std::collections::HashMap;
 
@@ -71,6 +76,17 @@ fn log_scheduler_metrics(tag: &str, sched: &Scheduler) {
         s.preempted,
         sched.engine.kv.prefix_cache_len(),
     );
+    if sched.engine.n_shards() > 1 {
+        log::info!(
+            "{tag}: tensor-parallel {} shard(s): {:.0} B all-gathered + \
+             {:.0} B all-reduced per decode step; worst shard step skew \
+             {:.3} ms",
+            sched.engine.n_shards(),
+            s.decode_bytes_gathered_per_step,
+            s.decode_bytes_reduced_per_step,
+            s.shard_skew_max * 1e3,
+        );
+    }
     log::info!(
         "{tag}: fault recovery: {} fault(s) injected; retries {} execute \
          / {} upload / {} fetch; {} downgrade(s) (rung {}); {} deadline \
@@ -177,7 +193,13 @@ impl Router {
         m
     }
 
-    /// Route to the least-loaded replica serving `mode`.
+    /// Route to the best replica serving `mode`: free KV blocks are the
+    /// primary key (the real admission bottleneck — a replica with a
+    /// deep queue but an empty pool is still the wrong place for a new
+    /// prompt), queued+running load breaks ties. A tensor-parallel
+    /// engine counts as *one* replica: its shards advance lock-step
+    /// behind one scheduler, so its pool/load gauges already describe
+    /// the whole group.
     pub fn route(&mut self, mode: &str, req: Request) -> crate::Result<()> {
         let idxs = self
             .by_mode
@@ -187,7 +209,12 @@ impl Router {
             .iter()
             .min_by_key(|&&i| {
                 let s = &self.engines[i].1;
-                s.batcher.waiting() + s.running_count()
+                let pool = s.engine.kv.pool_stats();
+                let free = pool.total.saturating_sub(pool.in_use);
+                (
+                    std::cmp::Reverse(free),
+                    s.batcher.waiting() + s.running_count(),
+                )
             })
             .unwrap();
         self.assignments.insert(req.id, idx);
@@ -358,5 +385,72 @@ impl ServeBackend for Router {
 impl Default for Router {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Engine, Scheduler};
+    use crate::quant::scheme::Scheme;
+    use crate::testkit::tiny::TinyCfg;
+
+    fn sched() -> Scheduler {
+        Scheduler::new(
+            Engine::new(TinyCfg::default().session().unwrap(), Scheme::fp())
+                .unwrap(),
+        )
+    }
+
+    fn prompt(s: &Scheduler) -> Vec<i32> {
+        s.engine.session.corpus.split("heldout").unwrap().seq(0)[..4].to_vec()
+    }
+
+    #[test]
+    fn block_starved_replica_stops_receiving_work() {
+        let mut r = Router::new();
+        r.add_engine("fp", sched());
+        r.add_engine("fp", sched());
+        // occupy replica 0's pool directly: fewer free blocks than the
+        // idle replica 1, while both queues stay empty — under pure
+        // load-based dispatch the replicas would look identical
+        {
+            let kv = &mut r.engines[0].1.engine.kv;
+            let mut id = 100u64;
+            while kv.alloc(id, 4).is_some() {
+                id += 1;
+            }
+            assert!(
+                kv.pool_stats().in_use > 0,
+                "allocation must consume blocks"
+            );
+        }
+        let free = |r: &Router, i: usize| {
+            let p = r.engines[i].1.engine.kv.pool_stats();
+            p.total - p.in_use
+        };
+        assert!(free(&r, 0) < free(&r, 1), "replica 0 must be starved");
+        let p = prompt(&r.engines[1].1);
+        for id in 0..3u64 {
+            r.route("fp", Request::new(id, p.clone(), 2)).unwrap();
+        }
+        assert_eq!(
+            r.engines[0].1.batcher.waiting(),
+            0,
+            "block-starved replica must stop receiving work"
+        );
+        assert_eq!(r.engines[1].1.batcher.waiting(), 3);
+    }
+
+    #[test]
+    fn equal_pools_tie_break_on_load() {
+        let mut r = Router::new();
+        r.add_engine("fp", sched());
+        r.add_engine("fp", sched());
+        let p = prompt(&r.engines[0].1);
+        r.route("fp", Request::new(1, p.clone(), 2)).unwrap();
+        r.route("fp", Request::new(2, p, 2)).unwrap();
+        assert_eq!(r.engines[0].1.batcher.waiting(), 1, "load breaks the tie");
+        assert_eq!(r.engines[1].1.batcher.waiting(), 1);
     }
 }

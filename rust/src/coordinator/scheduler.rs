@@ -261,14 +261,24 @@ impl Scheduler {
             }
             let t0 = std::time::Instant::now();
             // meter the step's host-boundary traffic alongside its
-            // latency: the bytes-per-step gauges in the serve metrics
-            let (res, xfer) = crate::runtime::transfer::measure(|| {
-                self.with_retry("batched decode", |eng| eng.decode_step(&tokens))
+            // latency: the bytes-per-step gauges in the serve metrics.
+            // Collective (shard-to-shard) traffic is metered separately
+            // on its own counters, plus the group run's execute skew.
+            let ((res, xfer), coll) = crate::runtime::collective::measure(|| {
+                crate::runtime::transfer::measure(|| {
+                    self.with_retry("batched decode", |eng| eng.decode_step(&tokens))
+                })
             });
+            let skew = if self.engine.n_shards() > 1 {
+                crate::runtime::collective::last_skew_seconds()
+            } else {
+                0.0
+            };
             match res {
                 Ok(next) => {
                     let dt = t0.elapsed().as_secs_f64();
-                    self.metrics.record_decode(dt, self.running.len(), xfer);
+                    self.metrics
+                        .record_decode(dt, self.running.len(), xfer, coll, skew);
 
                     let slots: Vec<usize> = self.running.keys().copied().collect();
                     for slot in slots {

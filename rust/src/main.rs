@@ -62,6 +62,10 @@ fn run() -> anyhow::Result<()> {
          router (e.g. 'fp,pts'); '' = single engine with --gran")
     .opt("queue-limit", "64", "serve: max queued+running requests before \
          'overloaded' rejections")
+    .opt("shards", "0", "serve: tensor-parallel shard count (0 = the \
+         manifest's n_shards; >1 runs attention heads / MLP columns \
+         split across a lock-step shard group on the reference \
+         interpreter)")
     .opt("tol", "0.10", "bench-diff: mean-latency regression tolerance \
          (fraction; transfer growth always fails)")
     .opt("faults", "", "fault-injection plan, e.g. \
@@ -222,11 +226,15 @@ fn run() -> anyhow::Result<()> {
             if modes.is_empty() {
                 let mut s = load_session(&args)?;
                 maybe_smooth(&mut s, &args)?;
+                apply_shards(&mut s, &args)?;
                 let scheme = scheme_of(&args)?;
                 if scheme.gran.needs_calibration() {
                     calibrate::calibrate_into(&mut s, scheme.act_levels(), 8)?;
                 }
                 let engine = Engine::new(s, scheme)?;
+                if engine.n_shards() > 1 {
+                    log::info!("tensor-parallel: {} shards", engine.n_shards());
+                }
                 server.serve(Scheduler::new(engine), stop)
             } else {
                 // one process, several quantization variants: requests
@@ -235,6 +243,7 @@ fn run() -> anyhow::Result<()> {
                 for mode in modes.split(',').map(str::trim).filter(|m| !m.is_empty()) {
                     let mut s = load_session(&args)?;
                     maybe_smooth(&mut s, &args)?;
+                    apply_shards(&mut s, &args)?;
                     let scheme = scheme_for(gran_of(mode)?, &args)?;
                     if scheme.gran.needs_calibration() {
                         calibrate::calibrate_into(&mut s, scheme.act_levels(), 8)?;
@@ -290,6 +299,24 @@ fn load_session(args: &cushioncache::util::cli::Args) -> anyhow::Result<Session>
         s.set_cushion(c)?;
     }
     Ok(s)
+}
+
+/// `--shards N` override for serve: validated against the model's head
+/// and MLP geometry before the engine resolves per-shard graphs.
+fn apply_shards(
+    s: &mut Session,
+    args: &cushioncache::util::cli::Args,
+) -> anyhow::Result<()> {
+    let n = args.get_usize("shards")?;
+    if n > 0 {
+        cushioncache::runtime::ShardPlan::validate(
+            s.manifest.n_kv_heads,
+            s.manifest.d_ff,
+            n,
+        )?;
+        s.manifest.n_shards = n;
+    }
+    Ok(())
 }
 
 fn scheme_of(args: &cushioncache::util::cli::Args) -> anyhow::Result<Scheme> {

@@ -1545,6 +1545,422 @@ pub fn run_decode(spec: &ModelSpec, params: &Params, mode: Mode,
 }
 
 // ---------------------------------------------------------------------------
+// Tensor-parallel serving (runtime::collective): shard-local variants of
+// prefill and decode. Each shard owns whole GQA groups (its query heads
+// plus their KV head) and a contiguous span of MLP columns; weights
+// arrive pre-sliced (Weights::shard_slices) so the per-column f64
+// accumulation order in `matmul` is untouched. Collective points per
+// layer: one all-gather of the attention head partials (before quant
+// site 1 and the replicated full `wo` matmul) and one all-gather of the
+// MLP hidden partials (before site 3 and the replicated full `wd`).
+// The residual stream, norms, quant sites, and lm_head are replicated —
+// every shard computes identical full-width tensors after each gather,
+// which is what makes sharded outputs bit-identical to unsharded in
+// every mode (fp and quantized alike). No all-reduce on this path: a
+// sum across shards would change f64 summation order.
+// ---------------------------------------------------------------------------
+
+use crate::runtime::collective::{CollectiveBus, ShardPlan};
+
+/// `attention` over this shard's heads only. `q`: [hq_loc, Sq, dh];
+/// `k`, `v`: [hkv_loc, Skv, dh]. Masks and ALiBi slopes are indexed by
+/// the *global* head id (`head_offset + h`): the strict-causal detector
+/// head, the head-0 global-window exception, and the per-head slopes
+/// must land on the same physical heads as the unsharded pass.
+#[allow(clippy::too_many_arguments)]
+fn attention_sharded(spec: &ModelSpec, layer: usize, q: &[f32], k: &[f32],
+                     v: &[f32], sq: usize, skv: usize, prefix_len: i32,
+                     causal_offset: i32, hq_loc: usize, head_offset: usize)
+                     -> Vec<f32> {
+    let (dh, g) = (spec.d_head, spec.group());
+    let inv_sqrt = 1.0 / (dh as f64).sqrt();
+    let slopes = if spec.pos == PosKind::Alibi {
+        alibi_slopes(spec.n_heads)
+    } else {
+        Vec::new()
+    };
+    let mask = attention_mask(spec, layer, sq, skv, prefix_len,
+                              causal_offset, None);
+    let mut out = vec![0.0f32; hq_loc * sq * dh];
+    let mut row = vec![0.0f32; skv];
+    let mut prow = vec![0.0f32; skv];
+    for h in 0..hq_loc {
+        let hg = head_offset + h;
+        // Local KV head: exact because the shard's first query head is
+        // group-aligned (q0 = kv0 * g, see ShardPlan::q_range).
+        let kh = h / g;
+        for i in 0..sq {
+            let qrow = &q[(h * sq + i) * dh..(h * sq + i) * dh + dh];
+            let mrow = &mask[(hg * sq + i) * skv..(hg * sq + i) * skv + skv];
+            let mut any = false;
+            for j in 0..skv {
+                if !mrow[j] {
+                    row[j] = NEG;
+                    continue;
+                }
+                any = true;
+                let krow = &k[(kh * skv + j) * dh..(kh * skv + j) * dh + dh];
+                let mut acc = 0.0f64;
+                for (&a, &b) in qrow.iter().zip(krow) {
+                    acc += a as f64 * b as f64;
+                }
+                let mut lg = (acc * inv_sqrt) as f32;
+                if !slopes.is_empty() {
+                    lg += alibi_bias_at(spec, &slopes, hg, i, j, prefix_len,
+                                        causal_offset);
+                }
+                row[j] = lg;
+            }
+            softmax_row(&row, &mut prow);
+            if !any {
+                prow.iter_mut().for_each(|p| *p = 0.0);
+            }
+            let orow = &mut out[(h * sq + i) * dh..(h * sq + i) * dh + dh];
+            for d in 0..dh {
+                let mut acc = 0.0f64;
+                for j in 0..skv {
+                    if prow[j] != 0.0 {
+                        acc += prow[j] as f64 * v[(kh * skv + j) * dh + d] as f64;
+                    }
+                }
+                orow[d] = acc as f32;
+            }
+        }
+    }
+    out
+}
+
+/// `concat_prefix` against a *sliced* prefix KV `[L, 2, hkv, m, dh]`
+/// holding only this shard's KV heads.
+fn concat_prefix_local(prefix_kv: &Tensor, m: usize, dh: usize, hkv: usize,
+                       l: usize, which: usize, tok: &[f32], bi: usize,
+                       s: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; hkv * (m + s) * dh];
+    let pbase = ((l * 2 + which) * hkv) * m * dh;
+    for kh in 0..hkv {
+        let dst = kh * (m + s) * dh;
+        let src = pbase + kh * m * dh;
+        out[dst..dst + m * dh].copy_from_slice(&prefix_kv.data[src..src + m * dh]);
+        let tsrc = ((bi * hkv + kh) * s) * dh;
+        out[dst + m * dh..dst + (m + s) * dh]
+            .copy_from_slice(&tok[tsrc..tsrc + s * dh]);
+    }
+    out
+}
+
+/// Stitch all-gathered row-major parts back into the unsharded layout:
+/// part `k` is `[rows, w_k]`, output row `r` is the shard-order
+/// concatenation of every part's row `r`. With `rows == 1` this is a
+/// plain concatenation (head-major attention partials of one prompt);
+/// with `rows == b` / `rows == b*s` it re-interleaves per-lane head
+/// rows / per-token MLP columns.
+fn stitch_gathered(parts: &[Vec<f32>], rows: usize) -> Vec<f32> {
+    let total: usize = parts.iter().map(|p| p.len() / rows).sum();
+    let mut out = vec![0.0f32; rows * total];
+    for r in 0..rows {
+        let mut off = 0;
+        for p in parts {
+            let w = p.len() / rows;
+            out[r * total + off..r * total + off + w]
+                .copy_from_slice(&p[r * w..(r + 1) * w]);
+            off += w;
+        }
+    }
+    out
+}
+
+/// `mlp_fwd` with column-sliced `wg`/`wu`: local columns + local
+/// elementwise activation, all-gather the hidden partials, then site 3
+/// and the replicated full `wd` on every shard.
+#[allow(clippy::too_many_arguments)]
+fn mlp_fwd_sharded(spec: &ModelSpec, qctx: &mut QuantCtx, p: &LayerP,
+                   h: Vec<f32>, b: usize, s: usize, l: usize, shard: usize,
+                   bus: &CollectiveBus) -> crate::Result<Vec<f32>> {
+    let d = spec.d_model;
+    let h = qctx.site(h, b, s, d, l, 2);
+    let hidden_loc: Vec<f32> = match spec.act {
+        ActKind::Swiglu => {
+            let ga = matmul(&h, b * s, d, p.wg.unwrap());
+            let ub = matmul(&h, b * s, d, p.wu);
+            ga.iter().zip(&ub).map(|(&a, &u)| silu(a) * u).collect()
+        }
+        _ => {
+            let a = matmul(&h, b * s, d, p.wu);
+            a.iter().map(|&v| act_apply(spec.act, v)).collect()
+        }
+    };
+    let parts = bus.all_gather(shard, hidden_loc)?;
+    let hidden = stitch_gathered(&parts, b * s);
+    let hidden = qctx.site(hidden, b, s, spec.d_ff, l, 3);
+    Ok(matmul(&hidden, b * s, spec.d_ff, p.wd))
+}
+
+/// `block_tail` routed through the sharded MLP.
+#[allow(clippy::too_many_arguments)]
+fn block_tail_sharded(spec: &ModelSpec, qctx: &mut QuantCtx, p: &LayerP,
+                      mut x: Vec<f32>, attn_out: &[f32], b: usize, s: usize,
+                      l: usize, shard: usize, bus: &CollectiveBus)
+                      -> crate::Result<Vec<f32>> {
+    let d = spec.d_model;
+    match spec.norm {
+        NormKind::RmsPre => {
+            for (xi, a) in x.iter_mut().zip(attn_out) {
+                *xi += a;
+            }
+            let h2 = rmsnorm(&x, b * s, d, &p.ln2_g.data);
+            let mlp_out = mlp_fwd_sharded(spec, qctx, p, h2, b, s, l, shard, bus)?;
+            for (xi, a) in x.iter_mut().zip(&mlp_out) {
+                *xi += a;
+            }
+            Ok(x)
+        }
+        NormKind::LnPost => {
+            for (xi, a) in x.iter_mut().zip(attn_out) {
+                *xi += a;
+            }
+            let x_mid = layernorm(&x, b * s, d, &p.ln1_g.data,
+                                  &p.ln1_b.unwrap().data);
+            let mlp_out =
+                mlp_fwd_sharded(spec, qctx, p, x_mid.clone(), b, s, l, shard, bus)?;
+            let mut pre2 = x_mid;
+            for (xi, a) in pre2.iter_mut().zip(&mlp_out) {
+                *xi += a;
+            }
+            Ok(layernorm(&pre2, b * s, d, &p.ln2_g.data,
+                         &p.ln2_b.unwrap().data))
+        }
+    }
+}
+
+/// `run_prefill` on one shard. `params` holds this shard's sliced
+/// bundle (Weights::shard_slices); `cache` is the per-shard slot cache
+/// [L, 2, B, hkv_loc, CAP, dh]; `prefix_kv` the per-shard cushion slice
+/// [L, 2, hkv_loc, m, dh]. Returns the updated local cache and the
+/// last-token logits [V] — identical on every shard.
+#[allow(clippy::too_many_arguments)]
+pub fn run_prefill_sharded(spec: &ModelSpec, params: &Params, mode: Mode,
+                           cache: &Tensor, prefix_kv: &Tensor,
+                           cushion_len: i32, slot: usize, tokens: &[i32],
+                           tok_len: i32, ranges: &Tensor, levels: f32,
+                           kv_levels: f32, inv_smooth: &Tensor,
+                           plan: ShardPlan, bus: &CollectiveBus)
+                           -> crate::Result<(Tensor, Tensor)> {
+    let (d, dh, hq, hkv, m) = (spec.d_model, spec.d_head, spec.n_heads,
+                               spec.n_kv_heads, spec.m_max);
+    ShardPlan::validate(hkv, spec.d_ff, plan.n_shards)?;
+    let (q0, q1) = plan.q_range(hq, hkv);
+    let (k0, k1) = plan.kv_range(hkv);
+    let (hq_loc, hkv_loc) = (q1 - q0, k1 - k0);
+    let s = tokens.len();
+    anyhow::ensure!(cache.shape.len() == 6, "prefill_shard: bad cache rank");
+    anyhow::ensure!(cache.shape[3] == hkv_loc,
+                    "prefill_shard: cache holds {} KV heads, shard owns {}",
+                    cache.shape[3], hkv_loc);
+    let (bsz, cap) = (cache.shape[2], cache.shape[4]);
+    anyhow::ensure!(slot < bsz, "prefill_shard: slot out of range");
+    anyhow::ensure!(m + s <= cap, "prefill_shard: tokens exceed capacity");
+    anyhow::ensure!(prefix_kv.shape == vec![spec.n_layers, 2, hkv_loc, m, dh],
+                    "prefill_shard: prefix slice shape {:?}", prefix_kv.shape);
+    let mut cache = cache.clone();
+
+    let mut qctx = QuantCtx::serving(mode, levels, ranges, inv_smooth);
+    qctx.valid = Some((0..s).map(|i| (i as i32) < tok_len).collect());
+
+    let embed = params.get("embed")?;
+    let mut x = vec![0.0f32; s * d];
+    for (r, &t) in tokens.iter().enumerate() {
+        anyhow::ensure!(t >= 0 && (t as usize) < spec.vocab,
+                        "prefill_shard: token {t} outside vocab");
+        x[r * d..(r + 1) * d].copy_from_slice(embed.row(t as usize));
+    }
+    let positions: Vec<i32> = (0..s as i32).map(|i| cushion_len + i).collect();
+    if spec.pos == PosKind::Learned {
+        let pos_emb = params.get("pos_emb")?;
+        for r in 0..s {
+            let p = positions[r] as usize;
+            anyhow::ensure!(p < pos_emb.shape[0],
+                            "prefill_shard: position overflow");
+            for i in 0..d {
+                x[r * d + i] += pos_emb.data[p * d + i];
+            }
+        }
+    }
+
+    for l in 0..spec.n_layers {
+        let p = layer_p(spec, params, l)?;
+        let h = match spec.norm {
+            NormKind::RmsPre => rmsnorm(&x, s, d, &p.ln1_g.data),
+            NormKind::LnPost => x.clone(),
+        };
+        let h = qctx.site(h, 1, s, d, l, 0);
+        // p.wq/wk/wv are column slices: local heads only
+        let mut q = to_heads(&matmul(&h, s, d, p.wq), 1, s, hq_loc, dh);
+        let mut k = to_heads(&matmul(&h, s, d, p.wk), 1, s, hkv_loc, dh);
+        let mut v = to_heads(&matmul(&h, s, d, p.wv), 1, s, hkv_loc, dh);
+        if spec.pos == PosKind::Rope {
+            rope_rotate(&mut q, hq_loc, s, dh, &positions, spec.rope_theta,
+                        false);
+            rope_rotate(&mut k, hkv_loc, s, dh, &positions, spec.rope_theta,
+                        false);
+        }
+        kv_maybe_quant(&mut k, &mut v, hkv_loc, s, dh, kv_levels);
+        // write this layer's token KV into the shard-local slot
+        for (which, t) in [(0usize, &k), (1usize, &v)] {
+            for kh in 0..hkv_loc {
+                for si in 0..s {
+                    let src = (kh * s + si) * dh;
+                    let dst = ((((l * 2 + which) * bsz + slot) * hkv_loc + kh)
+                        * cap + m + si) * dh;
+                    cache.data[dst..dst + dh]
+                        .copy_from_slice(&t[src..src + dh]);
+                }
+            }
+        }
+        let kf = concat_prefix_local(prefix_kv, m, dh, hkv_loc, l, 0, &k, 0, s);
+        let vf = concat_prefix_local(prefix_kv, m, dh, hkv_loc, l, 1, &v, 0, s);
+        let o = attention_sharded(spec, l, &q, &kf, &vf, s, m + s,
+                                  cushion_len, 0, hq_loc, q0);
+        // collective point 1: gather head partials, then identical
+        // full-width math (site 1, full wo) on every shard
+        let parts = bus.all_gather(plan.shard, o)?;
+        let o = from_heads(&stitch_gathered(&parts, 1), 1, s, hq, dh);
+        let o = qctx.site(o, 1, s, hq * dh, l, 1);
+        let attn_out = matmul(&o, s, hq * dh, p.wo);
+        x = block_tail_sharded(spec, &mut qctx, &p, x, &attn_out, 1, s, l,
+                               plan.shard, bus)?;
+    }
+
+    let hfin = match spec.norm {
+        NormKind::RmsPre => rmsnorm(&x, s, d, &params.get("lnf_g")?.data),
+        NormKind::LnPost => layernorm(&x, s, d, &params.get("lnf_g")?.data,
+                                      &params.get("lnf_b")?.data),
+    };
+    let logits = matmul(&hfin, s, d, params.get("lm_head")?);
+    let last_row = (tok_len - 1).max(0) as usize;
+    let v = spec.vocab;
+    let last = logits[last_row * v..(last_row + 1) * v].to_vec();
+    Ok((cache, Tensor::new(vec![v], last)))
+}
+
+/// `run_decode` on one shard: one step for all B slots over the
+/// per-shard cache [L, 2, B, hkv_loc, CAP, dh]. Returns the updated
+/// local cache and logits [B, V] — identical on every shard.
+#[allow(clippy::too_many_arguments)]
+pub fn run_decode_sharded(spec: &ModelSpec, params: &Params, mode: Mode,
+                          cache: &Tensor, cache_tok_len: &[i32],
+                          cushion_len: i32, tokens: &[i32], ranges: &Tensor,
+                          levels: f32, kv_levels: f32, inv_smooth: &Tensor,
+                          plan: ShardPlan, bus: &CollectiveBus)
+                          -> crate::Result<(Tensor, Tensor)> {
+    let (d, dh, hq, hkv, m) = (spec.d_model, spec.d_head, spec.n_heads,
+                               spec.n_kv_heads, spec.m_max);
+    ShardPlan::validate(hkv, spec.d_ff, plan.n_shards)?;
+    let (q0, q1) = plan.q_range(hq, hkv);
+    let (k0, k1) = plan.kv_range(hkv);
+    let (hq_loc, hkv_loc) = (q1 - q0, k1 - k0);
+    let b = tokens.len();
+    anyhow::ensure!(cache.shape.len() == 6, "decode_shard: bad cache rank");
+    anyhow::ensure!(cache.shape[3] == hkv_loc,
+                    "decode_shard: cache holds {} KV heads, shard owns {}",
+                    cache.shape[3], hkv_loc);
+    let (bsz, cap) = (cache.shape[2], cache.shape[4]);
+    anyhow::ensure!(b == bsz, "decode_shard: token batch != cache slots");
+    anyhow::ensure!(cache_tok_len.len() == b, "decode_shard: bad lens");
+    let mut cache = cache.clone();
+
+    let mut qctx = QuantCtx::serving(mode, levels, ranges, inv_smooth);
+
+    let embed = params.get("embed")?;
+    let mut x = vec![0.0f32; b * d];
+    for (bi, &t) in tokens.iter().enumerate() {
+        anyhow::ensure!(t >= 0 && (t as usize) < spec.vocab,
+                        "decode_shard: token {t} outside vocab");
+        x[bi * d..(bi + 1) * d].copy_from_slice(embed.row(t as usize));
+    }
+    let positions: Vec<i32> = cache_tok_len
+        .iter()
+        .map(|&len| cushion_len + len)
+        .collect();
+    if spec.pos == PosKind::Learned {
+        let pos_emb = params.get("pos_emb")?;
+        for bi in 0..b {
+            let p = positions[bi] as usize;
+            anyhow::ensure!(p < pos_emb.shape[0],
+                            "decode_shard: position overflow");
+            for i in 0..d {
+                x[bi * d + i] += pos_emb.data[p * d + i];
+            }
+        }
+    }
+
+    for l in 0..spec.n_layers {
+        let p = layer_p(spec, params, l)?;
+        let h = match spec.norm {
+            NormKind::RmsPre => rmsnorm(&x, b, d, &p.ln1_g.data),
+            NormKind::LnPost => x.clone(),
+        };
+        let h = qctx.site(h, b, 1, d, l, 0);
+        let mut q = to_heads(&matmul(&h, b, d, p.wq), b, 1, hq_loc, dh);
+        let mut k = to_heads(&matmul(&h, b, d, p.wk), b, 1, hkv_loc, dh);
+        let mut v = to_heads(&matmul(&h, b, d, p.wv), b, 1, hkv_loc, dh);
+        if spec.pos == PosKind::Rope {
+            for bi in 0..b {
+                rope_rotate(&mut q[bi * hq_loc * dh..(bi + 1) * hq_loc * dh],
+                            hq_loc, 1, dh, &positions[bi..bi + 1],
+                            spec.rope_theta, false);
+                rope_rotate(&mut k[bi * hkv_loc * dh..(bi + 1) * hkv_loc * dh],
+                            hkv_loc, 1, dh, &positions[bi..bi + 1],
+                            spec.rope_theta, false);
+            }
+        }
+        kv_maybe_quant(&mut k, &mut v, b * hkv_loc, 1, dh, kv_levels);
+        // scatter each slot's new KV at its own length offset
+        for bi in 0..b {
+            let off = m + cache_tok_len[bi] as usize;
+            anyhow::ensure!(off < cap, "decode_shard: slot {bi} overflow");
+            for which in 0..2 {
+                let t = if which == 0 { &k } else { &v };
+                for kh in 0..hkv_loc {
+                    let src = (bi * hkv_loc + kh) * dh;
+                    let dst = ((((l * 2 + which) * bsz + bi) * hkv_loc + kh)
+                        * cap + off) * dh;
+                    cache.data[dst..dst + dh]
+                        .copy_from_slice(&t[src..src + dh]);
+                }
+            }
+        }
+        let mut o = vec![0.0f32; b * hq_loc * dh];
+        for bi in 0..b {
+            let kbase = (((l * 2) * bsz + bi) * hkv_loc) * cap * dh;
+            let vbase = (((l * 2 + 1) * bsz + bi) * hkv_loc) * cap * dh;
+            let kf = &cache.data[kbase..kbase + hkv_loc * cap * dh];
+            let vf = &cache.data[vbase..vbase + hkv_loc * cap * dh];
+            let qb = &q[bi * hq_loc * dh..(bi + 1) * hq_loc * dh];
+            let ob = attention_sharded(spec, l, qb, kf, vf, 1, cap,
+                                       cushion_len, cache_tok_len[bi],
+                                       hq_loc, q0);
+            o[bi * hq_loc * dh..(bi + 1) * hq_loc * dh].copy_from_slice(&ob);
+        }
+        // collective point 1: per-lane head partials, re-interleaved to
+        // the unsharded [b, hq, dh] layout
+        let parts = bus.all_gather(plan.shard, o)?;
+        let o = from_heads(&stitch_gathered(&parts, b), b, 1, hq, dh);
+        let o = qctx.site(o, b, 1, hq * dh, l, 1);
+        let attn_out = matmul(&o, b, hq * dh, p.wo);
+        x = block_tail_sharded(spec, &mut qctx, &p, x, &attn_out, b, 1, l,
+                               plan.shard, bus)?;
+    }
+
+    let hfin = match spec.norm {
+        NormKind::RmsPre => rmsnorm(&x, b, d, &params.get("lnf_g")?.data),
+        NormKind::LnPost => layernorm(&x, b, d, &params.get("lnf_g")?.data,
+                                      &params.get("lnf_b")?.data),
+    };
+    let logits = matmul(&hfin, b, d, params.get("lm_head")?);
+    Ok((cache, Tensor::new(vec![b, spec.vocab], logits)))
+}
+
+// ---------------------------------------------------------------------------
 // Paged serving (coordinator::kvpool): block-table variants of prefill and
 // decode. KV lives in a pool tensor [n_blocks, L, 2, Hkv, BS, dh]; a
 // sequence's block table maps logical position p to pool row

@@ -39,6 +39,11 @@ pub struct Manifest {
     /// reach cache_cap with the cushion run shared once.
     pub kv_block_size: usize,
     pub kv_pool_blocks: usize,
+    /// Tensor-parallel shard count (runtime::collective). 1 = unsharded
+    /// (the default for manifests written before sharding existed).
+    /// Validated against head/column divisibility at parse time so a
+    /// bad count fails at load, not mid-forward.
+    pub n_shards: usize,
     pub serve_batch: usize,
     pub eval_batch: usize,
     pub score_batch: usize,
@@ -120,6 +125,15 @@ impl Manifest {
                 .get("kv_pool_blocks")
                 .and_then(Value::as_usize)
                 .unwrap_or(0),
+            n_shards: {
+                let n = v.get("n_shards").and_then(Value::as_usize).unwrap_or(1);
+                crate::runtime::collective::ShardPlan::validate(
+                    v.req_usize("n_kv_heads")?,
+                    v.req_usize("d_ff")?,
+                    n,
+                )?;
+                n
+            },
             serve_batch: v.req_usize("serve_batch")?,
             eval_batch: v.req_usize("eval_batch")?,
             score_batch: v.req_usize("score_batch")?,
@@ -173,6 +187,33 @@ mod tests {
         // pre-paging manifests derive the pool geometry (0 = auto)
         assert_eq!(m.kv_block_size, 0);
         assert_eq!(m.kv_pool_blocks, 0);
+        // pre-sharding manifests default to one shard
+        assert_eq!(m.n_shards, 1);
+    }
+
+    #[test]
+    fn n_shards_parses_and_validates_at_load() {
+        let with = SAMPLE.replacen(
+            "\"cache_cap\": 144,",
+            "\"cache_cap\": 144, \"n_shards\": 2,",
+            1,
+        );
+        assert_eq!(Manifest::parse(&with).unwrap().n_shards, 2);
+        // n_kv_heads = 2 is not divisible 4 ways: must fail at parse,
+        // not mid-forward
+        let bad = SAMPLE.replacen(
+            "\"cache_cap\": 144,",
+            "\"cache_cap\": 144, \"n_shards\": 4,",
+            1,
+        );
+        let err = Manifest::parse(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("n_kv_heads"), "{err:#}");
+        let zero = SAMPLE.replacen(
+            "\"cache_cap\": 144,",
+            "\"cache_cap\": 144, \"n_shards\": 0,",
+            1,
+        );
+        assert!(Manifest::parse(&zero).is_err());
     }
 
     #[test]

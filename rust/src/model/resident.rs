@@ -30,6 +30,7 @@ use std::sync::Mutex;
 
 use crate::runtime::literalx::HostValue;
 use crate::runtime::{Client, DeviceBuf};
+use crate::util::tensor::Tensor;
 
 use super::weights::Weights;
 
@@ -46,6 +47,11 @@ pub const KEY_PREFIX_LEN: &str = "prefix_len";
 pub const KEY_WEIGHTS: &str = "weights";
 /// Upload-count key for the padded prefix-token buffer.
 pub const KEY_PREFIX_TOKENS: &str = "prefix_tokens";
+/// Upload-count key for the per-shard weight slice bundles (one count
+/// per full re-slice of all shards).
+pub const KEY_SHARD_WEIGHTS: &str = "shard_weights";
+/// Upload-count key for the per-shard cushion/prefix KV slices.
+pub const KEY_SHARD_PREFIX_KV: &str = "shard_prefix_kv";
 
 // Locking note: `Rc<DeviceBuf>` makes the pool (like the rest of the
 // runtime-touching types here) !Send/!Sync, so these Mutexes can never be
@@ -60,6 +66,12 @@ pub struct ResidentPool {
     /// Content-keyed cache of the padded prefix-token vector (the greedy
     /// search scores thousands of candidate batches under one prefix).
     tokens: Mutex<Option<(Vec<i32>, Rc<DeviceBuf>)>>,
+    /// Tensor-parallel residency (host tensors: shard threads are the
+    /// logical devices and execute on host values directly). Keyed by
+    /// shard count; sliced once per (re)configuration like everything
+    /// else here. Invalidated with the full bundle / prefix KV.
+    shard_weights: Mutex<Option<(usize, Vec<Rc<Vec<Tensor>>>)>>,
+    shard_prefix: Mutex<Option<(usize, Vec<Rc<Tensor>>)>>,
     uploads: Mutex<HashMap<&'static str, u64>>,
 }
 
@@ -70,6 +82,8 @@ impl ResidentPool {
             weights: Mutex::new(None),
             single: Mutex::new(HashMap::new()),
             tokens: Mutex::new(None),
+            shard_weights: Mutex::new(None),
+            shard_prefix: Mutex::new(None),
             uploads: Mutex::new(HashMap::new()),
         }
     }
@@ -107,6 +121,64 @@ impl ResidentPool {
 
     pub fn invalidate_weights(&self) {
         *self.weights.lock().unwrap() = None;
+        *self.shard_weights.lock().unwrap() = None;
+    }
+
+    // -- per-shard slices (tensor-parallel residency) ----------------------
+
+    /// The per-shard weight slice bundles for an `n_shards` group,
+    /// slicing once on first use (re-sliced only after
+    /// `invalidate_weights`). Shard `k`'s bundle is `out[k]`, in param
+    /// order; the `Rc` stays on the driver thread — shard threads
+    /// borrow `&[Tensor]` through `std::thread::scope`.
+    pub fn shard_weight_slices(
+        &self,
+        w: &Weights,
+        manifest: &super::manifest::Manifest,
+        n_shards: usize,
+    ) -> crate::Result<Vec<Rc<Vec<Tensor>>>> {
+        let mut guard = self.shard_weights.lock().unwrap();
+        if let Some((n, slices)) = guard.as_ref() {
+            if *n == n_shards {
+                return Ok(slices.clone());
+            }
+        }
+        let slices = (0..n_shards)
+            .map(|k| {
+                let plan = crate::runtime::collective::ShardPlan::new(k, n_shards);
+                Ok(Rc::new(w.shard_slices(manifest, plan)?))
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        self.count_upload(KEY_SHARD_WEIGHTS);
+        *guard = Some((n_shards, slices.clone()));
+        Ok(slices)
+    }
+
+    /// The per-shard cushion/prefix KV slices (`[L, 2, Hkv/n, m, dh]`),
+    /// slicing `make()`'s full tensor once on first use. Invalidated
+    /// together with KEY_PREFIX_KV so the slices always match the
+    /// installed cushion.
+    pub fn shard_prefix_slices(
+        &self,
+        n_shards: usize,
+        make: impl FnOnce() -> Tensor,
+    ) -> crate::Result<Vec<Rc<Tensor>>> {
+        let mut guard = self.shard_prefix.lock().unwrap();
+        if let Some((n, slices)) = guard.as_ref() {
+            if *n == n_shards {
+                return Ok(slices.clone());
+            }
+        }
+        let full = make();
+        let slices = (0..n_shards)
+            .map(|k| {
+                let plan = crate::runtime::collective::ShardPlan::new(k, n_shards);
+                Ok(Rc::new(super::weights::shard_prefix_kv(&full, plan)?))
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        self.count_upload(KEY_SHARD_PREFIX_KV);
+        *guard = Some((n_shards, slices.clone()));
+        Ok(slices)
     }
 
     // -- single-tensor invariants -----------------------------------------
@@ -131,6 +203,9 @@ impl ResidentPool {
 
     pub fn invalidate(&self, key: &str) {
         self.single.lock().unwrap().remove(key);
+        if key == KEY_PREFIX_KV {
+            *self.shard_prefix.lock().unwrap() = None;
+        }
     }
 
     // -- padded prefix tokens (content-keyed) ------------------------------
@@ -155,6 +230,7 @@ impl ResidentPool {
         self.invalidate_weights();
         self.single.lock().unwrap().clear();
         *self.tokens.lock().unwrap() = None;
+        *self.shard_prefix.lock().unwrap() = None;
     }
 
     /// Keys currently resident (debugging / tests).

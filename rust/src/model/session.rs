@@ -232,6 +232,29 @@ impl Session {
         Ok(Value::Device(buf))
     }
 
+    /// Per-shard weight slice bundles for a tensor-parallel group,
+    /// sliced once per configuration (model::resident caching).
+    pub fn shard_weight_slices(
+        &self,
+        n_shards: usize,
+    ) -> crate::Result<Vec<std::rc::Rc<Vec<Tensor>>>> {
+        self.pool
+            .shard_weight_slices(&self.weights, &self.manifest, n_shards)
+    }
+
+    /// Per-shard cushion prefix KV slices `[L, 2, Hkv/n, m, dh]`,
+    /// sliced once per installed cushion (invalidated with the full
+    /// prefix KV so the pair can never go stale independently).
+    pub fn shard_prefix_slices(
+        &self,
+        n_shards: usize,
+    ) -> crate::Result<Vec<std::rc::Rc<Tensor>>> {
+        self.pool.shard_prefix_slices(n_shards, || match &self.cushion {
+            Some(c) => c.kv.clone(),
+            None => self.empty_prefix(),
+        })
+    }
+
     // -- prefix helpers ---------------------------------------------------
 
     pub fn m_max(&self) -> usize {

@@ -113,6 +113,89 @@ impl Weights {
     pub fn total_params(&self) -> usize {
         self.tensors.iter().map(Tensor::len).sum()
     }
+
+    /// This shard's slice of the bundle, in param order (the graphs'
+    /// leading-argument order, same as `tensors`): attention
+    /// projections sliced to the shard's query/KV head columns, MLP
+    /// up/gate to its `d_ff` columns, everything else — embeddings,
+    /// norm gains/biases, the output projections `wo`/`wd`, `lm_head` —
+    /// replicated whole. Column slicing preserves each output column's
+    /// f64 summation order in `forward::matmul`, which is what makes
+    /// sharded fp outputs bit-identical to unsharded.
+    ///
+    /// Returned as raw tensors, not a `Weights`: slice shapes
+    /// intentionally disagree with the manifest's (full) param spec.
+    pub fn shard_slices(
+        &self,
+        manifest: &Manifest,
+        plan: crate::runtime::collective::ShardPlan,
+    ) -> crate::Result<Vec<Tensor>> {
+        crate::runtime::collective::ShardPlan::validate(
+            manifest.n_kv_heads,
+            manifest.d_ff,
+            plan.n_shards,
+        )?;
+        let dh = manifest.d_head;
+        let (q0, q1) = plan.q_range(manifest.n_heads, manifest.n_kv_heads);
+        let (k0, k1) = plan.kv_range(manifest.n_kv_heads);
+        let (f0, f1) = plan.ff_range(manifest.d_ff);
+        self.names
+            .iter()
+            .zip(&self.tensors)
+            .map(|(name, t)| {
+                Ok(if name.ends_with(".wq") {
+                    slice_cols(t, q0 * dh, q1 * dh)?
+                } else if name.ends_with(".wk") || name.ends_with(".wv") {
+                    slice_cols(t, k0 * dh, k1 * dh)?
+                } else if name.ends_with(".wg") || name.ends_with(".wu") {
+                    slice_cols(t, f0, f1)?
+                } else {
+                    t.clone()
+                })
+            })
+            .collect()
+    }
+}
+
+/// Columns `[c0, c1)` of a `[rows, cols]` matrix.
+fn slice_cols(t: &Tensor, c0: usize, c1: usize) -> crate::Result<Tensor> {
+    let (rows, cols) = t.dims2();
+    anyhow::ensure!(
+        c0 < c1 && c1 <= cols,
+        "column slice [{c0}, {c1}) out of range for {cols} columns"
+    );
+    let w = c1 - c0;
+    let mut data = Vec::with_capacity(rows * w);
+    for r in 0..rows {
+        data.extend_from_slice(&t.data[r * cols + c0..r * cols + c1]);
+    }
+    Ok(Tensor::new(vec![rows, w], data))
+}
+
+/// The shard's slice of a cushion/prefix KV tensor
+/// `[L, 2, Hkv, m_max, dh]`: rows of the shard's KV heads, all layers.
+pub fn shard_prefix_kv(
+    kv: &Tensor,
+    plan: crate::runtime::collective::ShardPlan,
+) -> crate::Result<Tensor> {
+    anyhow::ensure!(kv.shape.len() == 5, "prefix KV must be rank 5, got {:?}", kv.shape);
+    let (l2, hkv, m, dh) = (
+        kv.shape[0] * kv.shape[1],
+        kv.shape[2],
+        kv.shape[3],
+        kv.shape[4],
+    );
+    let (h0, h1) = plan.kv_range(hkv);
+    let row = m * dh;
+    let mut data = Vec::with_capacity(l2 * (h1 - h0) * row);
+    for lw in 0..l2 {
+        let base = lw * hkv * row;
+        data.extend_from_slice(&kv.data[base + h0 * row..base + h1 * row]);
+    }
+    Ok(Tensor::new(
+        vec![kv.shape[0], kv.shape[1], h1 - h0, m, dh],
+        data,
+    ))
 }
 
 #[cfg(test)]

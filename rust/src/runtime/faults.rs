@@ -110,6 +110,10 @@ pub struct FaultPlan {
     pub p_torn: f64,
     /// Cap on total injections (0 = unlimited).
     pub max_injections: u64,
+    /// Restrict injection to one shard of a tensor-parallel group
+    /// (`runtime::collective::DeviceGroup` arms the plan only on the
+    /// matching shard thread). None = every shard / the whole process.
+    pub shard: Option<usize>,
 }
 
 impl Default for FaultPlan {
@@ -124,6 +128,7 @@ impl Default for FaultPlan {
             stall: Duration::ZERO,
             p_torn: 0.0,
             max_injections: 0,
+            shard: None,
         }
     }
 }
@@ -132,7 +137,7 @@ impl FaultPlan {
     /// Parse a comma-separated `key=value` spec:
     ///
     /// `seed=N,execute=P,upload=P,fetch=P,persistent=<op>,heal=N,`
-    /// `stall_ms=N,torn=P,max=N`
+    /// `stall_ms=N,torn=P,max=N,shard=K`
     pub fn parse(spec: &str) -> crate::Result<Self> {
         let mut plan = FaultPlan::default();
         for part in spec.split(',') {
@@ -167,9 +172,10 @@ impl FaultPlan {
                 "stall_ms" => plan.stall = Duration::from_millis(int(val)?),
                 "torn" => plan.p_torn = prob(val)?,
                 "max" => plan.max_injections = int(val)?,
+                "shard" => plan.shard = Some(int(val)? as usize),
                 other => anyhow::bail!(
                     "unknown fault spec key '{other}' (seed | execute | upload \
-                     | fetch | persistent | heal | stall_ms | torn | max)"
+                     | fetch | persistent | heal | stall_ms | torn | max | shard)"
                 ),
             }
         }
@@ -243,6 +249,28 @@ pub fn stats() -> FaultStats {
     STATE.with(|s| s.borrow().as_ref().map(|st| st.stats).unwrap_or_default())
 }
 
+/// The plan armed on this thread, if any. `DeviceGroup` uses this to
+/// re-arm the driver's plan on each shard thread (state is
+/// thread-local, so shard threads never see the driver's arming).
+pub fn plan() -> Option<FaultPlan> {
+    STATE.with(|s| s.borrow().as_ref().map(|st| st.plan.clone()))
+}
+
+/// Fold a shard thread's final stats into this thread's armed state so
+/// chaos tests (which disarm on the driver thread) see one aggregate
+/// injection count for the whole group. No-op when unarmed.
+pub fn absorb(extra: FaultStats) {
+    STATE.with(|s| {
+        if let Some(st) = s.borrow_mut().as_mut() {
+            st.stats.execute += extra.execute;
+            st.stats.upload += extra.upload;
+            st.stats.fetch += extra.fetch;
+            st.stats.stalls += extra.stalls;
+            st.stats.torn += extra.torn;
+        }
+    });
+}
+
 /// Record the degradation ladder's current rung: once
 /// `rung >= plan.heal_rung`, injection stops (the fault has been
 /// downgraded around). Called by the scheduler on each downgrade.
@@ -290,6 +318,19 @@ fn roll(op: FaultOp) -> Option<InjectedFault> {
         }
         Some(InjectedFault { op, transient, seq: st.seq })
     })
+}
+
+/// Execute-class injection point for paths that never cross a
+/// `Backend` boundary — the tensor-parallel shard threads execute
+/// interpreter programs directly on host values, so each shard consults
+/// the (per-thread re-armed) plan here, exactly as
+/// `FaultyBackend::execute` would.
+pub fn inject_execute() -> crate::Result<()> {
+    maybe_stall();
+    if let Some(f) = roll(FaultOp::Execute) {
+        return Err(f.into());
+    }
+    Ok(())
 }
 
 /// Sleep out the plan's transfer stall, if any (upload/fetch latency).
@@ -442,7 +483,7 @@ mod tests {
     fn parse_full_spec() {
         let p = FaultPlan::parse(
             "seed=7,execute=0.5,upload=0.25,fetch=1,persistent=fetch,\
-             heal=2,stall_ms=3,torn=0.1,max=9",
+             heal=2,stall_ms=3,torn=0.1,max=9,shard=1",
         )
         .unwrap();
         assert_eq!(p.seed, 7);
@@ -454,6 +495,8 @@ mod tests {
         assert_eq!(p.stall, Duration::from_millis(3));
         assert_eq!(p.p_torn, 0.1);
         assert_eq!(p.max_injections, 9);
+        assert_eq!(p.shard, Some(1));
+        assert_eq!(FaultPlan::parse("execute=1").unwrap().shard, None);
     }
 
     #[test]

@@ -36,6 +36,13 @@ pub enum Op {
     PrefillPaged(Mode),
     /// Block-table decode over the pool tensor (`decode_paged_<mode>`).
     DecodePaged(Mode),
+    /// One shard of a tensor-parallel prefill
+    /// (`prefill_<mode>_s<k>of<n>`, 0-based `k`). Executes through
+    /// `execute_sharded` — the forward pass rendezvouses on a
+    /// `CollectiveBus` at each all-gather point.
+    PrefillShard { mode: Mode, shard: usize, n_shards: usize },
+    /// One shard of a tensor-parallel decode (`decode_<mode>_s<k>of<n>`).
+    DecodeShard { mode: Mode, shard: usize, n_shards: usize },
 }
 
 /// A resolved interpreter program: the variant's architecture plus the
@@ -53,7 +60,26 @@ impl InterpProgram {
     /// no interpreter program".
     pub fn parse(spec: Rc<ModelSpec>, name: &str) -> crate::Result<Self> {
         let base = name.strip_suffix("_pallas").unwrap_or(name);
-        let op = if base == "stats" {
+        let op = if let Some((inner, k, n)) = strip_shard(base) {
+            // Sharded variants exist only for the logits-graph serving
+            // ops; divisibility and shard range fail at resolve time.
+            crate::runtime::collective::ShardPlan::validate(
+                spec.n_kv_heads, spec.d_ff, n,
+            )?;
+            anyhow::ensure!(
+                k < n,
+                "graph '{name}': shard {k} out of range for {n} shards"
+            );
+            if let Some(mode) = inner.strip_prefix("prefill_") {
+                Op::PrefillShard { mode: Mode::parse(mode)?, shard: k, n_shards: n }
+            } else if let Some(mode) = inner.strip_prefix("decode_") {
+                Op::DecodeShard { mode: Mode::parse(mode)?, shard: k, n_shards: n }
+            } else {
+                anyhow::bail!(
+                    "graph '{name}': only prefill/decode have sharded variants"
+                )
+            }
+        } else if base == "stats" {
             Op::Stats
         } else if base == "score_lq" {
             Op::ScoreLq
@@ -91,6 +117,13 @@ impl InterpProgram {
     /// followed by the op's inputs, exactly the compiled graph's operand
     /// list. Returns one host value per graph output.
     pub fn execute(&self, args: &[HostValue]) -> crate::Result<Vec<HostValue>> {
+        if matches!(self.op, Op::PrefillShard { .. } | Op::DecodeShard { .. }) {
+            anyhow::bail!(
+                "{}: sharded graph executes through a DeviceGroup \
+                 (execute_sharded), not the scalar path",
+                self.name
+            );
+        }
         let spec = self.spec.as_ref();
         let n = spec.param_names.len();
         anyhow::ensure!(
@@ -291,8 +324,126 @@ impl InterpProgram {
                     Ok(vec![HostValue::F32(cache), HostValue::F32(logits)])
                 }
             }
+            Op::PrefillShard { .. } | Op::DecodeShard { .. } => {
+                unreachable!("guarded above")
+            }
         }
     }
+
+    /// Execute one shard of a tensor-parallel serving op. Operands are
+    /// the shard's sliced weight bundle (param order, attention/MLP
+    /// columns only) followed by the op's inputs with the per-shard
+    /// cache/prefix slices; the forward pass all-gathers on `bus` at
+    /// each collective point. Outputs mirror the unsharded op: the
+    /// shard-local cache plus logits identical on every shard.
+    pub fn execute_sharded(
+        &self,
+        args: &[HostValue],
+        bus: &crate::runtime::collective::CollectiveBus,
+    ) -> crate::Result<Vec<HostValue>> {
+        let spec = self.spec.as_ref();
+        let n = spec.param_names.len();
+        anyhow::ensure!(
+            args.len() >= n,
+            "{}: {} operands given, the weight bundle alone is {n}",
+            self.name,
+            args.len()
+        );
+        let mut weights: Vec<&Tensor> = Vec::with_capacity(n);
+        for (i, a) in args[..n].iter().enumerate() {
+            match a {
+                HostValue::F32(t) => weights.push(t),
+                HostValue::I32(_) => anyhow::bail!(
+                    "{}: weight operand {i} ({}) is not f32",
+                    self.name,
+                    spec.param_names[i]
+                ),
+            }
+        }
+        let params = Params::new(spec, weights)?;
+        let x = Extractor { name: &self.name, args: &args[n..] };
+
+        match self.op {
+            Op::PrefillShard { mode, shard, n_shards } => {
+                anyhow::ensure!(
+                    bus.n_shards() == n_shards,
+                    "{}: bus has {} shards, graph wants {n_shards}",
+                    self.name,
+                    bus.n_shards()
+                );
+                let plan = crate::runtime::collective::ShardPlan::new(
+                    shard, n_shards,
+                );
+                x.arity(10)?;
+                let tokens = x.i32(4, "tokens")?;
+                let (cache, last) = forward::run_prefill_sharded(
+                    spec,
+                    &params,
+                    mode,
+                    x.f32(0, "cache")?,
+                    x.f32(1, "prefix_kv")?,
+                    x.scalar_i32(2, "cushion_len")?,
+                    x.scalar_i32(3, "slot")? as usize,
+                    &tokens.data,
+                    x.scalar_i32(5, "tok_len")?,
+                    x.f32(6, "ranges")?,
+                    x.scalar_f32(7, "levels")?,
+                    x.scalar_f32(8, "kv_levels")?,
+                    x.f32(9, "inv_smooth")?,
+                    plan,
+                    bus,
+                )?;
+                Ok(vec![HostValue::F32(cache), HostValue::F32(last)])
+            }
+            Op::DecodeShard { mode, shard, n_shards } => {
+                anyhow::ensure!(
+                    bus.n_shards() == n_shards,
+                    "{}: bus has {} shards, graph wants {n_shards}",
+                    self.name,
+                    bus.n_shards()
+                );
+                let plan = crate::runtime::collective::ShardPlan::new(
+                    shard, n_shards,
+                );
+                x.arity(8)?;
+                let lens = x.i32(1, "cache_tok_len")?;
+                let tokens = x.i32(3, "tokens")?;
+                let (cache, logits) = forward::run_decode_sharded(
+                    spec,
+                    &params,
+                    mode,
+                    x.f32(0, "cache")?,
+                    &lens.data,
+                    x.scalar_i32(2, "cushion_len")?,
+                    &tokens.data,
+                    x.f32(4, "ranges")?,
+                    x.scalar_f32(5, "levels")?,
+                    x.scalar_f32(6, "kv_levels")?,
+                    x.f32(7, "inv_smooth")?,
+                    plan,
+                    bus,
+                )?;
+                Ok(vec![HostValue::F32(cache), HostValue::F32(logits)])
+            }
+            _ => anyhow::bail!("{}: not a sharded graph", self.name),
+        }
+    }
+}
+
+/// `<op>_<mode>_s<k>of<n>` -> (`<op>_<mode>`, k, n). Returns None when
+/// the name carries no shard suffix (the unsharded graphs).
+fn strip_shard(base: &str) -> Option<(&str, usize, usize)> {
+    let i = base.rfind("_s")?;
+    let tail = &base[i + 2..];
+    let j = tail.find("of")?;
+    let (ks, ns) = (&tail[..j], &tail[j + 2..]);
+    if ks.is_empty() || ns.is_empty()
+        || !ks.bytes().all(|c| c.is_ascii_digit())
+        || !ns.bytes().all(|c| c.is_ascii_digit())
+    {
+        return None;
+    }
+    Some((&base[..i], ks.parse().ok()?, ns.parse().ok()?))
 }
 
 /// `prefill_sampled_<mode>_b<bucket>` -> `<mode>` (the interpreter is
@@ -415,6 +566,45 @@ mod tests {
             let p = InterpProgram::parse(s.clone(), name).unwrap();
             assert_eq!(p.op, op, "{name}");
         }
+    }
+
+    fn spec2() -> Rc<ModelSpec> {
+        let m = Manifest::parse(
+            r#"{"variant":"t2","vocab":8,"d_model":4,"n_layers":1,"n_heads":2,
+             "n_kv_heads":2,"d_head":2,"d_ff":8,"norm":"rmsnorm_pre",
+             "act":"swiglu","pos":"rope","window":0,"n_sites":4,
+             "seq_len":8,"m_max":2,"cache_cap":10,"serve_batch":2,
+             "eval_batch":2,"score_batch":4,"score_text_len":6,
+             "tune_batch":2,"params":[],"graphs":[]}"#,
+        )
+        .unwrap();
+        spec_for(&m).unwrap()
+    }
+
+    #[test]
+    fn parses_sharded_names() {
+        let s2 = spec2();
+        let p = InterpProgram::parse(s2.clone(), "decode_fp_s1of2").unwrap();
+        assert_eq!(p.op,
+                   Op::DecodeShard { mode: Mode::Fp, shard: 1, n_shards: 2 });
+        let p = InterpProgram::parse(s2.clone(), "prefill_ptk_s0of2").unwrap();
+        assert_eq!(p.op,
+                   Op::PrefillShard { mode: Mode::Ptk, shard: 0, n_shards: 2 });
+        // shard index out of range
+        assert!(InterpProgram::parse(s2.clone(), "decode_fp_s2of2").is_err());
+        // spec() has one KV head: indivisible counts fail at resolve
+        assert!(InterpProgram::parse(spec(), "decode_fp_s0of2").is_err());
+        // sampled/paged graphs have no sharded variants
+        assert!(
+            InterpProgram::parse(s2.clone(), "prefill_sampled_fp_s0of2").is_err()
+        );
+        assert!(
+            InterpProgram::parse(s2.clone(), "decode_paged_fp_s0of2").is_err()
+        );
+        // the scalar execute path refuses sharded ops outright
+        let p = InterpProgram::parse(s2, "decode_fp_s0of2").unwrap();
+        let err = p.execute(&[]).unwrap_err();
+        assert!(format!("{err:#}").contains("execute_sharded"), "{err:#}");
     }
 
     #[test]

@@ -22,6 +22,7 @@
 
 pub mod backend;
 pub mod client;
+pub mod collective;
 pub mod executable;
 pub mod faults;
 pub mod interp;
@@ -32,6 +33,7 @@ pub mod transfer;
 
 pub use backend::{Backend, BackendKind, DeviceBuf};
 pub use client::Client;
+pub use collective::{CollectiveBus, CollectiveStats, DeviceGroup, ShardPlan};
 pub use faults::{FaultPlan, FaultyBackend};
 pub use executable::Executable;
 pub use literalx::{HostValue, IntTensor, OutValue, Outputs, Value};

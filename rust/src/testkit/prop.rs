@@ -373,6 +373,79 @@ mod kvpool_props {
 }
 
 #[cfg(test)]
+mod shard_props {
+    //! Tensor-parallel shard-plan invariants (runtime::collective):
+    //! head/column assignments partition exactly, GQA groups are never
+    //! split across shards, and invalid divisibility fails at manifest
+    //! load — before any forward could run half-sharded.
+
+    use super::*;
+    use crate::runtime::collective::ShardPlan;
+    use crate::testkit::tiny::TinyCfg;
+
+    #[test]
+    fn shard_assignments_partition_and_respect_gqa() {
+        check(
+            "shard plan partitions heads/columns",
+            250,
+            pair(
+                pair(usize_in(1..7), usize_in(1..5)),
+                pair(usize_in(1..13), usize_in(1..9)),
+            ),
+            |&((hkv, g), (ffq, n))| {
+                let hq = hkv * g;
+                let d_ff = ffq * 8;
+                let valid = hkv % n == 0 && d_ff % n == 0;
+                if ShardPlan::validate(hkv, d_ff, n).is_ok() != valid {
+                    return false;
+                }
+                // manifest load must agree with the plan's validation
+                let cfg = TinyCfg {
+                    n_heads: hq,
+                    n_kv_heads: hkv,
+                    d_ff,
+                    n_shards: n,
+                    ..TinyCfg::default()
+                };
+                if cfg.manifest().is_ok() != valid {
+                    return false;
+                }
+                if !valid {
+                    return true;
+                }
+                // exact partition: every query head, KV head and MLP
+                // column owned by exactly one shard
+                let mut q_seen = vec![0usize; hq];
+                let mut kv_seen = vec![0usize; hkv];
+                let mut ff_seen = vec![0usize; d_ff];
+                for k in 0..n {
+                    let plan = ShardPlan::new(k, n);
+                    let (q0, q1) = plan.q_range(hq, hkv);
+                    let (k0, k1) = plan.kv_range(hkv);
+                    let (f0, f1) = plan.ff_range(d_ff);
+                    // a GQA group's query heads live with their KV head
+                    if q0 != k0 * g || q1 != k1 * g {
+                        return false;
+                    }
+                    for h in q0..q1 {
+                        q_seen[h] += 1;
+                    }
+                    for h in k0..k1 {
+                        kv_seen[h] += 1;
+                    }
+                    for c in f0..f1 {
+                        ff_seen[c] += 1;
+                    }
+                }
+                q_seen.iter().all(|&c| c == 1)
+                    && kv_seen.iter().all(|&c| c == 1)
+                    && ff_seen.iter().all(|&c| c == 1)
+            },
+        );
+    }
+}
+
+#[cfg(test)]
 mod chaos_props {
     //! End-to-end fault-recovery chaos property (runtime::faults + the
     //! scheduler's retry/requeue machinery): a batch served over an

@@ -42,6 +42,9 @@ pub struct TinyCfg {
     pub eval_batch: usize,
     pub score_batch: usize,
     pub score_text_len: usize,
+    /// Tensor-parallel shard count (1 = unsharded; must divide
+    /// `n_kv_heads` and `d_ff` — validated at manifest parse).
+    pub n_shards: usize,
     pub seed: u64,
 }
 
@@ -68,6 +71,7 @@ impl Default for TinyCfg {
             eval_batch: 2,
             score_batch: 8,
             score_text_len: 12,
+            n_shards: 1,
             seed: 0x7157,
         }
     }
@@ -139,7 +143,7 @@ impl TinyCfg {
               "prefill_buckets": [{half}, {s}],
               "m_max": {m}, "cache_cap": {cap},
               "kv_block_size": {kbs}, "kv_pool_blocks": {kpb},
-              "serve_batch": {sb},
+              "serve_batch": {sb}, "n_shards": {ns},
               "eval_batch": {eb}, "score_batch": {scb},
               "score_text_len": {stl}, "tune_batch": {eb},
               "params": [{params}], "graphs": []
@@ -164,6 +168,7 @@ impl TinyCfg {
             kbs = self.kv_block_size,
             kpb = self.kv_pool_blocks,
             sb = self.serve_batch,
+            ns = self.n_shards,
             eb = self.eval_batch,
             scb = self.score_batch,
             stl = self.score_text_len,

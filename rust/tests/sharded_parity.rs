@@ -1,0 +1,284 @@
+//! Tensor-parallel parity, hermetically: a sharded engine (attention
+//! heads and MLP columns split across a lock-step `DeviceGroup`, one
+//! interpreter instance per shard) must reproduce the unsharded engine
+//! exactly. fp mode is **bit-identical** across prefill + decode for
+//! shards in {1, 2, 4} on every attention/position axis the tiny model
+//! exposes; quantized modes stay within the interp-parity tolerance.
+//! Also asserted here: the 64 KiB/step host-transfer budget holds with
+//! `--shards > 1` (collective traffic is metered separately), and a
+//! killed shard surfaces exactly one typed engine-level error that the
+//! scheduler's retry path absorbs — no deadlocked peers.
+//!
+//! The transfer and collective meters are process-global, so every
+//! test in this binary serializes behind one mutex.
+
+use std::sync::Mutex;
+
+use cushioncache::coordinator::{Engine, FinishReason, Request, Scheduler};
+use cushioncache::data::PAD;
+use cushioncache::quant::scheme::{Algorithm, Granularity, Scheme};
+use cushioncache::runtime::faults::{self, FaultOp};
+use cushioncache::runtime::{collective, transfer, FaultPlan};
+use cushioncache::testkit::tiny::TinyCfg;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// MHA tiny config: 4 query heads == 4 KV heads, divisible by 1/2/4.
+fn cfg_mha() -> TinyCfg {
+    TinyCfg {
+        n_heads: 4,
+        n_kv_heads: 4,
+        d_head: 8,
+        d_ff: 48,
+        ..TinyCfg::default()
+    }
+}
+
+/// GQA tiny config: 8 query heads over 4 KV heads (group size 2), so
+/// shard boundaries must respect whole KV-head groups.
+fn cfg_gqa() -> TinyCfg {
+    TinyCfg {
+        n_heads: 8,
+        n_kv_heads: 4,
+        d_head: 4,
+        d_ff: 48,
+        ..TinyCfg::default()
+    }
+}
+
+/// Greedy prefill + `steps` decode steps on one engine; returns the
+/// emitted tokens and the final contiguous KV cache. The unsharded
+/// baseline disables sampled/bucketed prefill so both paths run the
+/// full-length logits prefill graph and write the same cache region.
+fn run_engine(
+    cfg: &TinyCfg,
+    scheme: Scheme,
+    n_shards: usize,
+    steps: usize,
+) -> (Vec<i32>, Vec<f32>) {
+    let mut cfg = cfg.clone();
+    cfg.n_shards = n_shards;
+    let s = cfg.session().unwrap();
+    let prompt: Vec<i32> = s.corpus.split("heldout").unwrap().seq(1)[..5].to_vec();
+    let mut e = Engine::new(s, scheme).unwrap();
+    e.set_device_sampling(false);
+    e.set_prefill_bucketing(false);
+    let b = e.session.manifest.serve_batch;
+    let slot = e.kv.alloc(1, prompt.len()).unwrap();
+    let mut last = e.prefill(slot, &prompt).unwrap();
+    let mut out = vec![last];
+    for _ in 0..steps {
+        let mut feed = vec![PAD; b];
+        feed[slot] = last;
+        last = e.decode_step(&feed).unwrap()[slot];
+        e.kv.push_token(slot);
+        out.push(last);
+    }
+    (out, e.cache_host().unwrap().data)
+}
+
+#[test]
+fn fp_sharded_serving_is_bit_identical_to_unsharded() {
+    let _g = serial();
+    for base in [cfg_mha(), cfg_gqa()] {
+        for pos in ["rope", "alibi", "learned"] {
+            for window in [0usize, 4] {
+                let mut cfg = base.clone();
+                cfg.pos = pos;
+                cfg.window = window;
+                let (want_toks, want_cache) =
+                    run_engine(&cfg, Scheme::fp(), 1, 3);
+                for n in [2usize, 4] {
+                    let (toks, cache) = run_engine(&cfg, Scheme::fp(), n, 3);
+                    let tag = format!(
+                        "{} heads/{} kv, pos={pos}, window={window}, \
+                         shards={n}",
+                        cfg.n_heads, cfg.n_kv_heads
+                    );
+                    assert_eq!(toks, want_toks, "greedy tokens diverge: {tag}");
+                    assert_eq!(
+                        cache, want_cache,
+                        "KV cache not bit-identical: {tag}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Drive both engines with the *same* forced continuation so quant
+/// noise can't fork the sampled trajectory; compare the caches they
+/// write within the interp-parity tolerance (1e-4, scaled).
+fn quantized_cache(cfg: &TinyCfg, scheme: Scheme, n_shards: usize) -> Vec<f32> {
+    let mut cfg = cfg.clone();
+    cfg.n_shards = n_shards;
+    let s = cfg.session().unwrap();
+    let prompt: Vec<i32> = s.corpus.split("heldout").unwrap().seq(1)[..5].to_vec();
+    let forced: Vec<i32> = s.corpus.split("heldout").unwrap().seq(2)[..3].to_vec();
+    let mut e = Engine::new(s, scheme).unwrap();
+    e.set_device_sampling(false);
+    e.set_prefill_bucketing(false);
+    let b = e.session.manifest.serve_batch;
+    let slot = e.kv.alloc(1, prompt.len()).unwrap();
+    e.prefill(slot, &prompt).unwrap();
+    for &t in &forced {
+        let mut feed = vec![PAD; b];
+        feed[slot] = t;
+        e.decode_step(&feed).unwrap();
+        e.kv.push_token(slot);
+    }
+    e.cache_host().unwrap().data
+}
+
+#[test]
+fn quantized_sharded_serving_stays_within_interp_parity_tolerance() {
+    let _g = serial();
+    const TOL: f32 = 1e-4;
+    for gran in [Granularity::PerTensorDynamic, Granularity::PerTokenDynamic] {
+        let scheme = Scheme::w8a8(gran, Algorithm::Naive);
+        let want = quantized_cache(&cfg_gqa(), scheme, 1);
+        let absmax = want.iter().fold(0f32, |a, &v| a.max(v.abs())).max(1.0);
+        for n in [2usize, 4] {
+            let got = quantized_cache(&cfg_gqa(), scheme, n);
+            assert_eq!(got.len(), want.len());
+            let worst = got
+                .iter()
+                .zip(&want)
+                .fold(0f32, |a, (x, y)| a.max((x - y).abs()));
+            assert!(
+                worst <= TOL * absmax,
+                "{gran:?} shards={n}: cache diverges by {worst} \
+                 (tol {})",
+                TOL * absmax
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_decode_holds_host_budget_and_meters_collectives() {
+    let _g = serial();
+    let mut cfg = cfg_mha();
+    cfg.n_shards = 2;
+    let nl = cfg.n_layers as u64;
+    let mut e = Engine::new(cfg.session().unwrap(), Scheme::fp()).unwrap();
+    let prompt: Vec<i32> =
+        e.session.corpus.split("heldout").unwrap().seq(3)[..5].to_vec();
+    let b = e.session.manifest.serve_batch;
+    let slot = e.kv.alloc(1, prompt.len()).unwrap();
+    let mut last = e.prefill(slot, &prompt).unwrap();
+    // warm one step so resident invariants are in steady state
+    let mut feed = vec![PAD; b];
+    feed[slot] = last;
+    last = e.decode_step(&feed).unwrap()[slot];
+    e.kv.push_token(slot);
+
+    let steps = 4u64;
+    let before_xfer = transfer::snapshot();
+    let before_coll = collective::snapshot();
+    for _ in 0..steps {
+        let mut feed = vec![PAD; b];
+        feed[slot] = last;
+        last = e.decode_step(&feed).unwrap()[slot];
+        e.kv.push_token(slot);
+    }
+    let dx = transfer::snapshot().delta_since(&before_xfer);
+    let dc = collective::snapshot().delta_since(&before_coll);
+
+    // the host<->device budget is unchanged by sharding: collective
+    // traffic rides its own meter, not the transfer gauges
+    let per_step = (dx.bytes_uploaded + dx.bytes_fetched) / steps;
+    assert!(
+        per_step <= 64 * 1024,
+        "sharded decode moves {per_step} B/step over the host boundary \
+         (budget 64 KiB)"
+    );
+    // two collective points per layer per step: attention head gather
+    // + MLP hidden gather; the hot path never all-reduces (summation
+    // order would stop being bit-identical)
+    assert!(
+        dc.all_gathers >= steps * 2 * nl,
+        "expected >= {} all-gathers, saw {}",
+        steps * 2 * nl,
+        dc.all_gathers
+    );
+    assert!(dc.bytes_gathered > 0, "gathered bytes must be metered");
+    assert_eq!(dc.bytes_reduced, 0, "no all-reduce on the decode hot path");
+    assert!(collective::last_skew_seconds() >= 0.0);
+}
+
+#[test]
+fn killed_shard_surfaces_one_typed_error_and_peers_survive() {
+    let _g = serial();
+    let mut cfg = cfg_mha();
+    cfg.n_shards = 2;
+    let mut e = Engine::new(cfg.session().unwrap(), Scheme::fp()).unwrap();
+    let prompt: Vec<i32> =
+        e.session.corpus.split("heldout").unwrap().seq(1)[..5].to_vec();
+    let b = e.session.manifest.serve_batch;
+    let slot = e.kv.alloc(1, prompt.len()).unwrap();
+
+    // kill shard 1 exactly once: shard 0, waiting at the first
+    // collective, must wake via bus poisoning (this call returning at
+    // all proves no deadlock) and the one error must be the injected
+    // fault, not a peer's secondary "collective aborted"
+    faults::arm(FaultPlan::parse("seed=5,execute=1,max=1,shard=1").unwrap());
+    let err = e.prefill(slot, &prompt).unwrap_err();
+    let (op, transient) =
+        faults::classify(&err).expect("engine error must stay typed");
+    assert_eq!(op, FaultOp::Execute);
+    assert!(transient, "injected shard fault should classify transient");
+
+    // the budget is global across group runs, so the retry runs clean
+    let mut last = e.prefill(slot, &prompt).unwrap();
+    for _ in 0..2 {
+        let mut feed = vec![PAD; b];
+        feed[slot] = last;
+        last = e.decode_step(&feed).unwrap()[slot];
+        e.kv.push_token(slot);
+    }
+    let injected = faults::disarm().map(|st| st.total()).unwrap_or(0);
+    assert_eq!(injected, 1, "shard=1 selector must inject exactly once");
+}
+
+#[test]
+fn sharded_scheduler_retries_shard_fault_and_serves_bit_identically() {
+    let _g = serial();
+    let run = |faulted: bool| -> (Vec<Vec<i32>>, usize, u64) {
+        let mut cfg = cfg_gqa();
+        cfg.n_shards = 2;
+        let s = cfg.session().unwrap();
+        let prompts: Vec<Vec<i32>> = (0..s.manifest.serve_batch)
+            .map(|i| s.corpus.split("heldout").unwrap().seq(i)[..6].to_vec())
+            .collect();
+        let mut sched = Scheduler::new(Engine::new(s, Scheme::fp()).unwrap());
+        if faulted {
+            faults::arm(
+                FaultPlan::parse("seed=7,execute=1,max=1,shard=0").unwrap(),
+            );
+        }
+        for (i, p) in prompts.iter().enumerate() {
+            let mut r = Request::new(1 + i as u64, p.clone(), 5);
+            r.stop_token = None;
+            sched.submit_request(r);
+        }
+        let mut resp = sched.run_to_completion().unwrap();
+        let injected = faults::disarm().map(|st| st.total()).unwrap_or(0);
+        resp.sort_by_key(|r| r.id);
+        assert!(resp.iter().all(|r| r.finished == FinishReason::MaxTokens));
+        (
+            resp.into_iter().map(|r| r.tokens).collect(),
+            sched.metrics.retries_total(),
+            injected,
+        )
+    };
+    let (clean, _, _) = run(false);
+    let (faulted, retries, injected) = run(true);
+    assert_eq!(injected, 1, "one shard killed exactly once");
+    assert!(retries >= 1, "the scheduler must preempt and requeue in place");
+    assert_eq!(faulted, clean, "recovered sharded run must be bit-identical");
+}

@@ -18,6 +18,9 @@
 #      - rust/tests/paged_kv.rs       (paged KV pool: shared cushion
 #        blocks, prefix caching, preemption/resume, residency + native
 #        block-table parity)
+#      - rust/tests/sharded_parity.rs (tensor-parallel group vs the
+#        single engine: fp bit-identical at shards 1/2/4, quantized
+#        within interp tolerance, shard-kill recovery)
 #   3. an explicit focused re-run of the kvpool/preemption suites, so a
 #      filter-induced skip in step 2 can never silently pass the gate
 #   4. the chaos suite under three fault seeds (PROP_SEED shifts the
@@ -56,6 +59,15 @@ if [ $status -eq 0 ]; then
     echo "[hermetic] kvpool allocator + scheduler preemption properties"
     cargo test -q --no-default-features --features ref \
         --test coordinator_props paged_kv_never_oversubscribes
+    status=$?
+fi
+if [ $status -eq 0 ]; then
+    # tensor-parallel gate: every test in this suite compares shard
+    # counts {1, 2, 4} internally (fp bit-identity, quantized
+    # tolerance, collective metering, shard-kill recovery), so a
+    # filter-induced skip in step 2 can never silently pass it
+    echo "[hermetic] sharded execution parity at shards 1/2/4"
+    cargo test -q --no-default-features --features ref --test sharded_parity
     status=$?
 fi
 
