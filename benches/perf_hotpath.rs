@@ -15,6 +15,12 @@
 //! preemption/resume with zero rejections, and a fault-injection
 //! scenario (10% transient execute faults over a wrapped backend) keeps
 //! all tenants alive through the retry path while recording recovered
+//! throughput. A replica-failover scenario drives 24 requests through a
+//! 4-replica fp router and chaos-kills one replica mid-decode: the
+//! router must quarantine it, migrate its in-flight work onto the
+//! healthy siblings (paged prompt++generated re-prefill), and finish
+//! every request with zero sheds — the row times the whole storm and
+//! the `failover` extras record migration counters plus recovered
 //! throughput. A tensor-parallel scenario decodes on a 2-shard
 //! reference group, asserting the host budget is shard-invariant and
 //! recording all-gather/all-reduce traffic per step
@@ -26,7 +32,8 @@
 use std::rc::Rc;
 
 use cushioncache::bench::{emit_bench_json, summarize, time_n, Table, Timing};
-use cushioncache::coordinator::{Engine, Scheduler};
+use cushioncache::coordinator::{Engine, Request, Router, Scheduler};
+use cushioncache::runtime::backend::RefBackend;
 use cushioncache::model::resident;
 use cushioncache::model::session::Session;
 use cushioncache::quant::calibrate;
@@ -318,6 +325,74 @@ fn main() -> anyhow::Result<()> {
         churn_sum.pool_blocks_saved_peak,
     );
 
+    // ---- replica failover: whole-replica chaos kill under load -----------
+    // 4 same-weights fp replicas over the hermetic tiny model behind one
+    // router; a seeded chaos plan kills replica 1 mid-run (after its
+    // 17th engine call — mid-decode of its second admission wave) and
+    // the router must quarantine it and reconstruct its queued + running
+    // work on the survivors via the paged `prompt ++ generated` resume
+    // path. Everything must complete (nothing shed: three replicas stay
+    // healthy); the row times the whole storm and the extras record the
+    // failover/migration/re-prefill counters plus recovered throughput.
+    let fo_fleet = 4usize;
+    let mut fo_router = Router::with_seed(0xBEEF);
+    for _ in 0..fo_fleet {
+        let s_r = cushioncache::testkit::tiny::TinyCfg::default()
+            .session_with_client(Client::with_backend(Rc::new(
+                FaultyBackend::wrap(Rc::new(RefBackend)),
+            )))?;
+        fo_router.add_engine("fp", Scheduler::new(Engine::new(s_r, Scheme::fp())?));
+    }
+    let fo_reqs = 24usize;
+    let fo_prompt: Vec<i32> = fo_router
+        .replica(0)
+        .engine
+        .session
+        .corpus
+        .split("heldout")?
+        .seq(1)[..6]
+        .to_vec();
+    for i in 0..fo_reqs {
+        let mut req = Request::new(1 + i as u64, fo_prompt.clone(), 8);
+        req.stop_token = None;
+        fo_router.route("fp", req)?;
+    }
+    faults::arm(FaultPlan::parse("seed=50,replica=1,kill_replica_after=17")?);
+    let mut fo_resp = Vec::new();
+    let (fo_t, fo_x) = time_with_xfer(0, 1, || {
+        while fo_router.has_work() {
+            fo_resp.extend(fo_router.step_all().unwrap());
+        }
+    });
+    faults::disarm();
+    row!("replica failover (24 reqs, 4 replicas, 1 killed)", &fo_t, fo_x, 1);
+    assert_eq!(fo_resp.len(), fo_reqs, "requests lost across the failover");
+    assert!(
+        fo_resp.iter().all(|r| !r.finished.is_error()),
+        "healthy siblings must absorb a killed replica's work"
+    );
+    let fo_sum = |f: fn(&cushioncache::coordinator::metrics::Metrics) -> usize| {
+        (0..fo_fleet).map(|i| f(&fo_router.replica(i).metrics)).sum::<usize>()
+    };
+    let (fo_failovers, fo_migrated, fo_reprefill, fo_shed) = (
+        fo_sum(|m| m.failovers),
+        fo_sum(|m| m.migrated_sequences),
+        fo_sum(|m| m.reprefill_tokens),
+        fo_sum(|m| m.shed_requests),
+    );
+    assert_eq!(fo_failovers, 1, "exactly one replica kill, one failover");
+    assert!(fo_migrated >= 1, "the killed replica had in-flight work");
+    assert_eq!(fo_shed, 0, "nothing may shed while siblings are healthy");
+    let fo_tokens: usize = fo_resp.iter().map(|r| r.tokens.len()).sum();
+    let fo_elapsed: f64 = fo_t.iter().sum();
+    let fo_tps = fo_tokens as f64 / fo_elapsed.max(1e-9);
+    println!(
+        "[perf] replica failover: {fo_failovers} failover, {fo_migrated} \
+         migrated item(s), {fo_reprefill} re-prefill tokens burned, \
+         {fo_shed} shed; recovered throughput {fo_tps:.1} tok/s over \
+         {fo_fleet} replicas (1 killed)"
+    );
+
     // ---- tensor-parallel: sharded decode on the reference group ----------
     // a 2-shard lock-step group over the hermetic tiny model (the
     // interpreter is the sharded substrate on every toolchain, so this
@@ -477,6 +552,15 @@ fn main() -> anyhow::Result<()> {
             "{{\"injected\": {injected}, \"retries\": {retries}, \
               \"preempted\": {}, \"recovered_tok_per_s\": {recovered_tps:.1}}}",
             fault_sched.metrics.preempted
+        ),
+    ));
+    extras.push((
+        "failover".to_string(),
+        format!(
+            "{{\"replicas\": {fo_fleet}, \"killed\": 1, \"failovers\": \
+              {fo_failovers}, \"migrated\": {fo_migrated}, \
+              \"reprefill_tokens\": {fo_reprefill}, \"shed\": {fo_shed}, \
+              \"recovered_tok_per_s\": {fo_tps:.1}}}"
         ),
     ));
     extras.push((

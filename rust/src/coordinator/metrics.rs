@@ -85,6 +85,26 @@ pub struct Metrics {
     /// `runtime::faults::stats().total()`, sampled per step) — chaos
     /// tests assert injection happened.
     pub faults_injected: u64,
+    /// Replica fault-domain gauges (coordinator::router): health state
+    /// changes of this replica (Healthy/Suspect/Broken/HalfOpen edges).
+    pub health_transitions: usize,
+    /// Circuit-breaker opens (this replica quarantined).
+    pub breaker_opens: usize,
+    /// Half-open probes started (quarantined replica offered traffic).
+    pub breaker_probes: usize,
+    /// Failover events: this replica's work migrated off it.
+    pub failovers: usize,
+    /// Sequences and queued requests migrated *off* this replica.
+    pub migrated_sequences: usize,
+    /// Tokens burned re-prefilling migrated sequences elsewhere
+    /// (`prompt ++ generated` length summed over migrated runs).
+    pub reprefill_tokens: usize,
+    /// Requests load-shed with "overloaded" because every replica of
+    /// this replica's mode was broken at failover time.
+    pub shed_requests: usize,
+    /// Batches failed honestly at the degradation-ladder floor — the
+    /// router's strongest non-Err health signal.
+    pub ladder_floor_errors: usize,
 }
 
 impl Metrics {
@@ -122,6 +142,14 @@ impl Metrics {
             deadline_expired: 0,
             drain_seconds: 0.0,
             faults_injected: 0,
+            health_transitions: 0,
+            breaker_opens: 0,
+            breaker_probes: 0,
+            failovers: 0,
+            migrated_sequences: 0,
+            reprefill_tokens: 0,
+            shed_requests: 0,
+            ladder_floor_errors: 0,
         }
     }
 
@@ -221,6 +249,40 @@ impl Metrics {
         self.faults_injected = total;
     }
 
+    /// One health-state edge of this replica (router fault domain).
+    pub fn record_health_transition(&mut self) {
+        self.health_transitions += 1;
+    }
+
+    /// This replica's circuit breaker opened (quarantine).
+    pub fn record_breaker_open(&mut self) {
+        self.breaker_opens += 1;
+    }
+
+    /// This replica's breaker half-opened (probe traffic admitted).
+    pub fn record_breaker_probe(&mut self) {
+        self.breaker_probes += 1;
+    }
+
+    /// This replica's in-flight work was migrated off it: one failover
+    /// moving `migrated` work items, costing `reprefill_tokens` of
+    /// re-prefill on the destinations.
+    pub fn record_failover(&mut self, migrated: usize, reprefill_tokens: usize) {
+        self.failovers += 1;
+        self.migrated_sequences += migrated;
+        self.reprefill_tokens += reprefill_tokens;
+    }
+
+    /// A request load-shed because no healthy replica could take it.
+    pub fn record_shed(&mut self) {
+        self.shed_requests += 1;
+    }
+
+    /// A batch failed honestly at the degradation-ladder floor.
+    pub fn record_floor_error(&mut self) {
+        self.ladder_floor_errors += 1;
+    }
+
     /// Sample the KV pool gauges (scheduler, once per step).
     pub fn record_pool(&mut self, stats: crate::coordinator::kvpool::PoolStats) {
         self.pool_blocks_total = stats.total;
@@ -296,6 +358,14 @@ impl Metrics {
             deadline_expired: self.deadline_expired,
             drain_seconds: self.drain_seconds,
             faults_injected: self.faults_injected,
+            health_transitions: self.health_transitions,
+            breaker_opens: self.breaker_opens,
+            breaker_probes: self.breaker_probes,
+            failovers: self.failovers,
+            migrated_sequences: self.migrated_sequences,
+            reprefill_tokens: self.reprefill_tokens,
+            shed_requests: self.shed_requests,
+            ladder_floor_errors: self.ladder_floor_errors,
             tokens_out: self.tokens_out,
             elapsed: self.started.elapsed().as_secs_f64(),
             ttft_mean: stats::mean(&self.ttft),
@@ -357,6 +427,16 @@ pub struct MetricsSummary {
     pub deadline_expired: usize,
     pub drain_seconds: f64,
     pub faults_injected: u64,
+    /// Replica fault-domain counters (router health machine + breaker +
+    /// failover migration): see the matching `Metrics` fields.
+    pub health_transitions: usize,
+    pub breaker_opens: usize,
+    pub breaker_probes: usize,
+    pub failovers: usize,
+    pub migrated_sequences: usize,
+    pub reprefill_tokens: usize,
+    pub shed_requests: usize,
+    pub ladder_floor_errors: usize,
     pub uploads: u64,
     pub bytes_uploaded: u64,
     pub fetches: u64,
@@ -466,6 +546,13 @@ mod tests {
         m.record_deadline_expired();
         m.record_drain(1.5);
         m.record_faults_injected(7);
+        m.record_health_transition();
+        m.record_health_transition();
+        m.record_breaker_open();
+        m.record_breaker_probe();
+        m.record_failover(3, 42);
+        m.record_shed();
+        m.record_floor_error();
         m.record_pool(crate::coordinator::kvpool::PoolStats {
             total: 16,
             in_use: 9,
@@ -499,6 +586,14 @@ mod tests {
         assert_eq!(s.deadline_expired, 1);
         assert!((s.drain_seconds - 1.5).abs() < 1e-9);
         assert_eq!(s.faults_injected, 7);
+        assert_eq!(s.health_transitions, 2);
+        assert_eq!(s.breaker_opens, 1);
+        assert_eq!(s.breaker_probes, 1);
+        assert_eq!(s.failovers, 1);
+        assert_eq!(s.migrated_sequences, 3);
+        assert_eq!(s.reprefill_tokens, 42);
+        assert_eq!(s.shed_requests, 1);
+        assert_eq!(s.ladder_floor_errors, 1);
         assert_eq!(s.tokens_out, 3);
         assert!((s.tpot_mean - 0.055).abs() < 1e-9);
         assert!((s.mean_batch - 3.0).abs() < 1e-9);

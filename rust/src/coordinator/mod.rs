@@ -38,5 +38,5 @@ pub mod server;
 pub use engine::Engine;
 pub use kvpool::{PagedKv, PoolStats};
 pub use request::{FinishReason, Request, RequestId, Response};
-pub use router::{Router, ServeBackend};
+pub use router::{Health, ReplicaHealth, Router, ServeBackend};
 pub use scheduler::Scheduler;

@@ -5,18 +5,196 @@
 //! drives the whole shard group lock-step, so draining the router
 //! drains each shard group to completion with the same semantics as an
 //! unsharded engine.
+//!
+//! Replica fault domains: each replica carries a health state machine
+//! (`Healthy → Suspect → Broken`, with a `HalfOpen` probe state on the
+//! way back) driven by three signals — engine-level step errors (a
+//! whole-replica kill or a genuine engine bug), ladder-floor errors
+//! (the replica is erroring batches at the degradation floor), and
+//! step-latency outliers (a replica far over its siblings' median).
+//! Breaking a replica opens its circuit breaker and triggers **failover
+//! migration**: the scheduler is evacuated (`Scheduler::evacuate`) and
+//! every queued request plus every running/preempted sequence is
+//! reconstructed on a healthy sibling via the paged `prompt ++
+//! generated` resume path — bit-identical in fp/static modes, no
+//! request silently lost. Only when *every* replica of a mode is broken
+//! is work load-shed with an honest "overloaded". The breaker counts
+//! down over subsequent steps (seeded-deterministic jitter, doubling
+//! backoff) to a half-open probe that re-admits traffic; enough clean
+//! probe steps close the breaker, another failure reopens it wider.
 
 use std::collections::HashMap;
 
-use super::request::{Request, RequestId, Response};
+use crate::util::prng::SplitMix64;
+
+use super::request::{FinishReason, Request, RequestId, Response};
 use super::scheduler::Scheduler;
+
+/// Suspicion strikes (floor errors / latency outliers) before a
+/// Suspect replica is broken and failed over.
+const SUSPECT_STRIKES: u32 = 3;
+/// Clean steps that clear a Suspect replica back to Healthy.
+const SUSPECT_CLEAR_OKS: u32 = 16;
+/// Clean half-open probe steps that close the breaker.
+const PROBE_OK_STEPS: u32 = 3;
+/// First breaker-open interval, in router steps (doubles per reopen).
+const BREAKER_BASE_STEPS: u64 = 8;
+/// Backoff cap on the breaker-open interval.
+const BREAKER_MAX_STEPS: u64 = 256;
+/// A step is a latency outlier when it exceeds the sibling median by
+/// this factor *and* the absolute floor (tiny test engines step in
+/// microseconds — without the floor, scheduler noise would trip it).
+const LATENCY_OUTLIER_FACTOR: f64 = 8.0;
+const LATENCY_OUTLIER_FLOOR: f64 = 0.020;
+
+/// One replica's health in the router's fault domain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Health {
+    /// Serving normally.
+    Healthy,
+    /// Accumulating strikes (ladder-floor errors, latency outliers);
+    /// still routable — enough strikes break it, enough clean steps
+    /// clear it.
+    Suspect,
+    /// Quarantined: circuit open, no traffic, work migrated away. The
+    /// breaker counts down to a half-open probe.
+    Broken,
+    /// Probing: routable again, but one more failure reopens the
+    /// breaker with doubled backoff; enough clean steps close it.
+    HalfOpen,
+}
+
+/// The per-replica health state machine + circuit breaker. Pure
+/// bookkeeping (no engine references), so transitions are unit-testable
+/// and the probe schedule is deterministic: jitter comes from a seeded
+/// `SplitMix64`, never the wall clock.
+#[derive(Debug)]
+pub struct ReplicaHealth {
+    state: Health,
+    /// Suspicion strikes since the last clear.
+    strikes: u32,
+    /// Consecutive clean steps while Suspect.
+    oks: u32,
+    /// Router steps until the open breaker half-opens.
+    probe_in: u64,
+    /// Consecutive clean steps while HalfOpen.
+    probe_ok: u32,
+    /// Current open interval; doubles each reopen, capped.
+    backoff: u64,
+    rng: SplitMix64,
+}
+
+impl ReplicaHealth {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            state: Health::Healthy,
+            strikes: 0,
+            oks: 0,
+            probe_in: 0,
+            probe_ok: 0,
+            backoff: BREAKER_BASE_STEPS,
+            rng: SplitMix64::new(seed ^ 0xB12E_A4E2),
+        }
+    }
+
+    pub fn state(&self) -> Health {
+        self.state
+    }
+
+    /// Whether the router may send this replica traffic (everything but
+    /// an open breaker).
+    pub fn is_routable(&self) -> bool {
+        !matches!(self.state, Health::Broken)
+    }
+
+    pub fn is_quarantined(&self) -> bool {
+        matches!(self.state, Health::Broken)
+    }
+
+    /// Engine-level failure: open the breaker from any state. Returns
+    /// the number of router steps until the half-open probe (seeded
+    /// jitter over the current backoff, which then doubles).
+    pub fn trip(&mut self) -> u64 {
+        self.state = Health::Broken;
+        self.strikes = 0;
+        self.oks = 0;
+        self.probe_ok = 0;
+        self.probe_in = self.backoff + self.rng.next_u64() % (self.backoff / 2 + 1);
+        self.backoff = (self.backoff * 2).min(BREAKER_MAX_STEPS);
+        self.probe_in
+    }
+
+    /// A suspicion strike (ladder-floor error, latency outlier).
+    /// Healthy becomes Suspect; returns true when the strikes have
+    /// escalated past the threshold and the caller must break the
+    /// replica (`trip` + failover).
+    pub fn strike(&mut self) -> bool {
+        match self.state {
+            Health::Broken | Health::HalfOpen => false,
+            _ => {
+                self.oks = 0;
+                self.strikes += 1;
+                if self.state == Health::Healthy {
+                    self.state = Health::Suspect;
+                }
+                self.strikes >= SUSPECT_STRIKES
+            }
+        }
+    }
+
+    /// A clean step completed on this replica. Suspect clears back to
+    /// Healthy after enough of these; HalfOpen closes the breaker
+    /// (returns true, backoff resets) after enough probe steps.
+    pub fn note_ok(&mut self) -> bool {
+        match self.state {
+            Health::Suspect => {
+                self.oks += 1;
+                if self.oks >= SUSPECT_CLEAR_OKS {
+                    self.state = Health::Healthy;
+                    self.strikes = 0;
+                    self.oks = 0;
+                }
+                false
+            }
+            Health::HalfOpen => {
+                self.probe_ok += 1;
+                if self.probe_ok >= PROBE_OK_STEPS {
+                    self.state = Health::Healthy;
+                    self.strikes = 0;
+                    self.backoff = BREAKER_BASE_STEPS;
+                    true
+                } else {
+                    false
+                }
+            }
+            _ => false,
+        }
+    }
+
+    /// One router step elapsed with the breaker open; returns true when
+    /// the countdown reaches zero and the replica half-opens.
+    pub fn tick(&mut self) -> bool {
+        if self.state != Health::Broken {
+            return false;
+        }
+        self.probe_in = self.probe_in.saturating_sub(1);
+        if self.probe_in == 0 {
+            self.state = Health::HalfOpen;
+            self.probe_ok = 0;
+            true
+        } else {
+            false
+        }
+    }
+}
 
 /// The front end serves either one scheduler or a mode router; this
 /// trait is the surface the serving loop needs from both.
 pub trait ServeBackend {
     /// Submit a request, optionally to a named quantization mode.
-    /// `Err` carries a *routing* message (unknown mode) that the server
-    /// turns into a per-request error line — never a loop failure.
+    /// `Err` carries a *routing* message (unknown mode, or every
+    /// replica of the mode broken → "overloaded") that the server turns
+    /// into a per-request error line — never a loop failure.
     fn submit(&mut self, mode: Option<&str>, req: Request) -> Result<(), String>;
     fn has_work(&self) -> bool;
     fn step(&mut self) -> crate::Result<usize>;
@@ -100,6 +278,19 @@ fn log_scheduler_metrics(tag: &str, sched: &Scheduler) {
         s.deadline_expired,
         s.drain_seconds,
     );
+    log::info!(
+        "{tag}: fault domain: {} health transition(s); breaker {} open(s) \
+         / {} probe(s); {} failover(s) migrating {} item(s) ({} re-prefill \
+         tokens burned); {} shed; {} ladder-floor error(s)",
+        s.health_transitions,
+        s.breaker_opens,
+        s.breaker_probes,
+        s.failovers,
+        s.migrated_sequences,
+        s.reprefill_tokens,
+        s.shed_requests,
+        s.ladder_floor_errors,
+    );
 }
 
 impl ServeBackend for Scheduler {
@@ -168,23 +359,43 @@ pub struct Router {
     engines: Vec<(String, Scheduler)>,
     by_mode: HashMap<String, Vec<usize>>,
     assignments: HashMap<RequestId, usize>,
+    /// Per-replica health + breaker, indexed like `engines`.
+    health: Vec<ReplicaHealth>,
+    /// Responses the router produced itself (load-shed at failover when
+    /// no healthy sibling existed) — drained with the engines' finished.
+    orphans: Vec<Response>,
+    /// Seed for the breakers' deterministic probe jitter.
+    seed: u64,
 }
 
 impl Router {
     pub fn new() -> Self {
+        Self::with_seed(0xFA11_D0_33)
+    }
+
+    /// A router whose breaker probe schedules derive from `seed` —
+    /// chaos tests pin the whole failover timeline with this.
+    pub fn with_seed(seed: u64) -> Self {
         Self {
             engines: Vec::new(),
             by_mode: HashMap::new(),
             assignments: HashMap::new(),
+            health: Vec::new(),
+            orphans: Vec::new(),
+            seed,
         }
     }
 
     pub fn add_engine(&mut self, mode: &str, sched: Scheduler) {
+        let idx = self.engines.len();
         self.by_mode
             .entry(mode.to_string())
             .or_default()
-            .push(self.engines.len());
+            .push(idx);
         self.engines.push((mode.to_string(), sched));
+        self.health.push(ReplicaHealth::new(
+            self.seed ^ ((idx as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+        ));
     }
 
     pub fn modes(&self) -> Vec<String> {
@@ -193,21 +404,29 @@ impl Router {
         m
     }
 
-    /// Route to the best replica serving `mode`: free KV blocks are the
-    /// primary key (the real admission bottleneck — a replica with a
-    /// deep queue but an empty pool is still the wrong place for a new
-    /// prompt), queued+running load breaks ties. A tensor-parallel
-    /// engine counts as *one* replica: its shards advance lock-step
-    /// behind one scheduler, so its pool/load gauges already describe
-    /// the whole group.
-    pub fn route(&mut self, mode: &str, req: Request) -> crate::Result<()> {
-        let idxs = self
-            .by_mode
-            .get(mode)
-            .ok_or_else(|| anyhow::anyhow!("no engine for mode '{mode}'"))?;
-        let &idx = idxs
-            .iter()
-            .min_by_key(|&&i| {
+    pub fn replica_count(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Replica `idx`'s current health (tests / diagnostics).
+    pub fn replica_health(&self, idx: usize) -> Health {
+        self.health[idx].state()
+    }
+
+    pub fn replica(&self, idx: usize) -> &Scheduler {
+        &self.engines[idx].1
+    }
+
+    pub fn replica_mut(&mut self, idx: usize) -> &mut Scheduler {
+        &mut self.engines[idx].1
+    }
+
+    /// Least-loaded-blocks pick among `idxs` (free KV blocks first,
+    /// queued+running load breaks ties).
+    fn pick_among(&self, idxs: &[usize]) -> Option<usize> {
+        idxs.iter()
+            .copied()
+            .min_by_key(|&i| {
                 let s = &self.engines[i].1;
                 let pool = s.engine.kv.pool_stats();
                 let free = pool.total.saturating_sub(pool.in_use);
@@ -216,29 +435,277 @@ impl Router {
                     s.batcher.waiting() + s.running_count(),
                 )
             })
-            .unwrap();
+    }
+
+    /// Tick replica `i`'s open breaker; on half-open, record the probe.
+    fn tick_breaker(&mut self, i: usize) -> bool {
+        if self.health[i].tick() {
+            self.engines[i].1.metrics.record_breaker_probe();
+            self.engines[i].1.metrics.record_health_transition();
+            log::info!(
+                "replica {i} [{}]: breaker half-open, probing",
+                self.engines[i].0
+            );
+            true
+        } else {
+            false
+        }
+    }
+
+    /// A suspicion strike against replica `i`; returns true when it
+    /// escalated past the threshold (caller must fail the replica over).
+    fn strike(&mut self, i: usize, why: &str) -> bool {
+        let before = self.health[i].state();
+        let escalated = self.health[i].strike();
+        if self.health[i].state() != before {
+            self.engines[i].1.metrics.record_health_transition();
+            log::warn!(
+                "replica {i} [{}]: {:?} -> {:?} ({why})",
+                self.engines[i].0,
+                before,
+                self.health[i].state()
+            );
+        }
+        escalated
+    }
+
+    /// Route to the best *routable* replica serving `mode`: free KV
+    /// blocks are the primary key (the real admission bottleneck — a
+    /// replica with a deep queue but an empty pool is still the wrong
+    /// place for a new prompt), queued+running load breaks ties.
+    /// Quarantined replicas receive nothing; when every replica of the
+    /// mode is quarantined the request is load-shed with an honest
+    /// "overloaded" error (sustained traffic still drives the breaker
+    /// countdown, so a healed replica can half-open and take a later
+    /// request as its probe). A tensor-parallel engine counts as *one*
+    /// replica: its shards advance lock-step behind one scheduler, so
+    /// its pool/load gauges already describe the whole group.
+    pub fn route(&mut self, mode: &str, req: Request) -> crate::Result<()> {
+        let Some(idxs) = self.by_mode.get(mode).cloned() else {
+            anyhow::bail!("no engine for mode '{mode}'");
+        };
+        let routable: Vec<usize> = idxs
+            .iter()
+            .copied()
+            .filter(|&i| self.health[i].is_routable())
+            .collect();
+        let pick = self.pick_among(&routable).or_else(|| {
+            // every replica quarantined: drive the breaker countdown so
+            // a healed replica can half-open and probe with this request
+            let mut opened = None;
+            for &i in &idxs {
+                if self.tick_breaker(i) && opened.is_none() {
+                    opened = Some(i);
+                }
+            }
+            opened
+        });
+        let Some(idx) = pick else {
+            if let Some(&i0) = idxs.first() {
+                self.engines[i0].1.metrics.record_shed();
+            }
+            anyhow::bail!(
+                "overloaded: all {} replica(s) of mode '{mode}' are broken",
+                idxs.len()
+            );
+        };
         self.assignments.insert(req.id, idx);
         self.engines[idx].1.submit_request(req);
         Ok(())
     }
 
-    /// Step every engine once; collects finished responses.
-    pub fn step_all(&mut self) -> crate::Result<Vec<Response>> {
-        let mut out = Vec::new();
-        for (_, sched) in self.engines.iter_mut() {
-            if sched.has_work() {
-                sched.step()?;
+    /// Step every live engine once, bracketed by the replica fault
+    /// marker (`faults::set_replica`) so `replica=K` chaos plans hit
+    /// exactly one engine. A replica whose step fails is quarantined
+    /// and failed over — its siblings keep stepping; the router itself
+    /// never errors. Returns tokens produced across the fleet.
+    fn step_engines(&mut self) -> usize {
+        for i in 0..self.engines.len() {
+            self.tick_breaker(i);
+        }
+        let mut produced = 0;
+        let mut stepped: Vec<(usize, f64)> = Vec::new();
+        let mut broken: Vec<(usize, String)> = Vec::new();
+        for i in 0..self.engines.len() {
+            if self.health[i].is_quarantined() || !self.engines[i].1.has_work() {
+                continue;
             }
-            for r in sched.take_finished() {
-                self.assignments.remove(&r.id);
-                out.push(r);
+            let floor_before = self.engines[i].1.metrics.ladder_floor_errors;
+            crate::runtime::faults::set_replica(Some(i));
+            let t0 = std::time::Instant::now();
+            let res = self.engines[i].1.step();
+            crate::runtime::faults::set_replica(None);
+            match res {
+                Ok(n) => {
+                    produced += n;
+                    stepped.push((i, t0.elapsed().as_secs_f64()));
+                    let floor_delta =
+                        self.engines[i].1.metrics.ladder_floor_errors - floor_before;
+                    for _ in 0..floor_delta {
+                        if self.strike(i, "ladder-floor error") {
+                            broken.push((i, "ladder-floor errors".into()));
+                            break;
+                        }
+                    }
+                }
+                Err(e) => {
+                    let kind = if crate::runtime::faults::is_replica_down(&e) {
+                        "chaos kill"
+                    } else {
+                        "engine error"
+                    };
+                    log::error!(
+                        "replica {i} [{}]: step failed ({kind}): {e:#}",
+                        self.engines[i].0
+                    );
+                    broken.push((i, format!("{kind}: {e:#}")));
+                }
             }
         }
-        Ok(out)
+        // step-latency outliers: a replica far over its siblings' median
+        // this round earns a strike (needs >= 3 stepped replicas for the
+        // median to mean anything)
+        if stepped.len() >= 3 {
+            let mut lat: Vec<f64> = stepped.iter().map(|&(_, d)| d).collect();
+            lat.sort_by(f64::total_cmp);
+            let median = lat[lat.len() / 2];
+            for &(i, d) in &stepped {
+                if d > LATENCY_OUTLIER_FLOOR
+                    && d > median * LATENCY_OUTLIER_FACTOR
+                    && !broken.iter().any(|(b, _)| *b == i)
+                    && self.strike(i, "step-latency outlier")
+                {
+                    broken.push((i, "step-latency outliers".into()));
+                }
+            }
+        }
+        // clean steps feed Suspect clearing and half-open probes
+        for &(i, _) in &stepped {
+            if broken.iter().any(|(b, _)| *b == i) {
+                continue;
+            }
+            let before = self.health[i].state();
+            if self.health[i].note_ok() {
+                log::info!(
+                    "replica {i} [{}]: probe succeeded, breaker closed",
+                    self.engines[i].0
+                );
+            }
+            if self.health[i].state() != before {
+                self.engines[i].1.metrics.record_health_transition();
+            }
+        }
+        for (i, why) in broken {
+            self.fail_over(i, &why);
+        }
+        produced
+    }
+
+    /// Quarantine replica `src` (breaker opens) and migrate everything
+    /// it holds: queued requests and running/preempted sequences move
+    /// to the least-loaded healthy sibling, reconstructed there via the
+    /// paged `prompt ++ generated` resume path. The source pool's
+    /// bookkeeping — lanes, preemption-donated prefix-cache holds — is
+    /// settled exactly once by `Scheduler::evacuate`; requests keep
+    /// their original `submitted` instant so age-ordered admission and
+    /// deadline enforcement carry over unchanged. With no healthy
+    /// sibling the work is load-shed honestly with "overloaded" —
+    /// never silently dropped.
+    fn fail_over(&mut self, src: usize, why: &str) {
+        let mode = self.engines[src].0.clone();
+        let before = self.health[src].state();
+        let reopen_in = self.health[src].trip();
+        self.engines[src].1.metrics.record_breaker_open();
+        if self.health[src].state() != before {
+            self.engines[src].1.metrics.record_health_transition();
+        }
+        let (fresh, resumes) = self.engines[src].1.evacuate();
+        let migrated = fresh.len() + resumes.len();
+        log::warn!(
+            "replica {src} [{mode}]: broken ({why}); breaker open, probe in \
+             {reopen_in} step(s); migrating {} queued + {} in-flight",
+            fresh.len(),
+            resumes.len()
+        );
+        let siblings: Vec<usize> = self
+            .by_mode
+            .get(&mode)
+            .map(|v| {
+                v.iter()
+                    .copied()
+                    .filter(|&i| i != src && self.health[i].is_routable())
+                    .collect()
+            })
+            .unwrap_or_default();
+        if siblings.is_empty() {
+            // every replica of the mode is broken: shed honestly
+            for req in fresh {
+                self.assignments.remove(&req.id);
+                self.engines[src].1.metrics.record_shed();
+                self.engines[src].1.metrics.record_rejected();
+                self.orphans.push(Response::rejection(
+                    req.id,
+                    req.echo_text,
+                    "overloaded".into(),
+                ));
+            }
+            for run in resumes {
+                self.assignments.remove(&run.request.id);
+                self.engines[src].1.metrics.record_shed();
+                let resp = run.into_response(FinishReason::Error("overloaded".into()));
+                self.engines[src].1.metrics.record_finished(&resp);
+                self.orphans.push(resp);
+            }
+            self.engines[src].1.metrics.record_failover(migrated, 0);
+            return;
+        }
+        let mut reprefill = 0usize;
+        for req in fresh {
+            let dst = self.pick_among(&siblings).unwrap();
+            self.assignments.insert(req.id, dst);
+            // straight into the batcher: the fleet already accepted this
+            // work, so a drain-mode destination must still finish it
+            // rather than reject it as a new submission
+            self.engines[dst].1.batcher.submit_request(req);
+        }
+        for run in resumes {
+            let dst = self.pick_among(&siblings).unwrap();
+            reprefill += run.resume_tokens().len();
+            self.assignments.insert(run.request.id, dst);
+            self.engines[dst].1.batcher.push_resume(run);
+        }
+        self.engines[src].1.metrics.record_failover(migrated, reprefill);
+    }
+
+    /// Drain finished responses from every engine plus the router's own
+    /// load-shed orphans, retiring their routing assignments.
+    fn collect_finished(&mut self) -> Vec<Response> {
+        let mut out = std::mem::take(&mut self.orphans);
+        for (_, sched) in self.engines.iter_mut() {
+            out.extend(sched.take_finished());
+        }
+        for r in &out {
+            self.assignments.remove(&r.id);
+        }
+        out
+    }
+
+    /// Step every engine once; collects finished responses. Never
+    /// errors while any replica can still make progress — a failing
+    /// replica is quarantined and its work migrated (`fail_over`), so
+    /// one dead engine can no longer kill every other engine's traffic.
+    pub fn step_all(&mut self) -> crate::Result<Vec<Response>> {
+        self.step_engines();
+        Ok(self.collect_finished())
     }
 
     pub fn has_work(&self) -> bool {
-        self.engines.iter().any(|(_, s)| s.has_work())
+        !self.orphans.is_empty()
+            || self
+                .engines
+                .iter()
+                .enumerate()
+                .any(|(i, (_, s))| s.has_work() && !self.health[i].is_quarantined())
     }
 
     pub fn run_to_completion(&mut self) -> crate::Result<Vec<Response>> {
@@ -264,7 +731,10 @@ impl Router {
         self.modes().into_iter().next()
     }
 
-    /// Cancel a routed request wherever it currently lives.
+    /// Cancel a routed request wherever it currently lives — after a
+    /// failover migration the assignment tracks the *destination*
+    /// replica, so the cancel releases that pool's blocks and slot, not
+    /// the dead source's (whose holds `evacuate` already settled).
     pub fn cancel(&mut self, id: RequestId) -> bool {
         if let Some(idx) = self.assignments.remove(&id) {
             return self.engines[idx].1.cancel(id);
@@ -312,24 +782,11 @@ impl ServeBackend for Router {
     }
 
     fn step(&mut self) -> crate::Result<usize> {
-        let mut produced = 0;
-        for (_, sched) in self.engines.iter_mut() {
-            if sched.has_work() {
-                produced += sched.step()?;
-            }
-        }
-        Ok(produced)
+        Ok(self.step_engines())
     }
 
     fn take_finished(&mut self) -> Vec<Response> {
-        let mut out = Vec::new();
-        for (_, sched) in self.engines.iter_mut() {
-            for r in sched.take_finished() {
-                self.assignments.remove(&r.id);
-                out.push(r);
-            }
-        }
-        out
+        self.collect_finished()
     }
 
     fn take_token_events(&mut self) -> Vec<(RequestId, i32)> {
@@ -376,8 +833,8 @@ impl ServeBackend for Router {
     }
 
     fn log_metrics(&self) {
-        for (mode, sched) in &self.engines {
-            log_scheduler_metrics(&format!("serve[{mode}]"), sched);
+        for (i, (mode, sched)) in self.engines.iter().enumerate() {
+            log_scheduler_metrics(&format!("serve[{mode}#{i}]"), sched);
         }
     }
 }
@@ -452,5 +909,119 @@ mod tests {
         r.route("fp", Request::new(2, p, 2)).unwrap();
         assert_eq!(r.engines[0].1.batcher.waiting(), 1, "load breaks the tie");
         assert_eq!(r.engines[1].1.batcher.waiting(), 1);
+    }
+
+    #[test]
+    fn health_machine_walks_healthy_suspect_broken_halfopen() {
+        let mut h = ReplicaHealth::new(7);
+        assert_eq!(h.state(), Health::Healthy);
+        assert!(h.is_routable());
+        // strikes: Healthy -> Suspect, escalation at the threshold
+        assert!(!h.strike());
+        assert_eq!(h.state(), Health::Suspect);
+        assert!(h.is_routable(), "suspect still serves");
+        assert!(!h.strike());
+        assert!(h.strike(), "third strike escalates");
+        // the caller breaks it
+        let probe_in = h.trip();
+        assert_eq!(h.state(), Health::Broken);
+        assert!(!h.is_routable());
+        assert!(
+            (BREAKER_BASE_STEPS..=BREAKER_BASE_STEPS + BREAKER_BASE_STEPS / 2)
+                .contains(&probe_in),
+            "first open interval near the base: {probe_in}"
+        );
+        // countdown to half-open
+        for _ in 0..probe_in - 1 {
+            assert!(!h.tick());
+            assert_eq!(h.state(), Health::Broken);
+        }
+        assert!(h.tick(), "countdown exhausts into the probe");
+        assert_eq!(h.state(), Health::HalfOpen);
+        assert!(h.is_routable());
+        // enough clean probe steps close the breaker
+        for _ in 0..PROBE_OK_STEPS - 1 {
+            assert!(!h.note_ok());
+        }
+        assert!(h.note_ok(), "breaker closes");
+        assert_eq!(h.state(), Health::Healthy);
+    }
+
+    #[test]
+    fn breaker_backoff_doubles_and_caps() {
+        let mut h = ReplicaHealth::new(42);
+        let mut prev = 0u64;
+        for round in 0..8 {
+            let open = h.trip();
+            assert!(
+                open <= BREAKER_MAX_STEPS + BREAKER_MAX_STEPS / 2,
+                "round {round}: open interval {open} beyond the cap"
+            );
+            if round > 0 && prev < BREAKER_MAX_STEPS / 2 {
+                assert!(open > prev, "round {round}: backoff must grow");
+            }
+            prev = open;
+        }
+        // a closed breaker resets the backoff
+        while h.state() == Health::Broken {
+            h.tick();
+        }
+        for _ in 0..PROBE_OK_STEPS {
+            h.note_ok();
+        }
+        assert_eq!(h.state(), Health::Healthy);
+        let reopened = h.trip();
+        assert!(
+            reopened <= BREAKER_BASE_STEPS + BREAKER_BASE_STEPS / 2,
+            "closed breaker resets backoff: {reopened}"
+        );
+    }
+
+    #[test]
+    fn suspect_clears_after_clean_steps() {
+        let mut h = ReplicaHealth::new(3);
+        h.strike();
+        assert_eq!(h.state(), Health::Suspect);
+        for _ in 0..SUSPECT_CLEAR_OKS - 1 {
+            h.note_ok();
+            assert_eq!(h.state(), Health::Suspect);
+        }
+        h.note_ok();
+        assert_eq!(h.state(), Health::Healthy);
+        // and the strike counter reset with it
+        assert!(!h.strike());
+        assert!(!h.strike());
+        assert!(h.strike(), "full threshold again after clearing");
+    }
+
+    #[test]
+    fn seeded_probe_schedule_is_deterministic() {
+        let run = |seed: u64| {
+            let mut h = ReplicaHealth::new(seed);
+            (0..5).map(|_| h.trip()).collect::<Vec<_>>()
+        };
+        assert_eq!(run(11), run(11));
+        assert_ne!(run(11), run(12), "different seeds, different jitter");
+    }
+
+    #[test]
+    fn quarantined_replica_receives_no_routes() {
+        let mut r = Router::new();
+        r.add_engine("fp", sched());
+        r.add_engine("fp", sched());
+        let p = prompt(&r.engines[0].1);
+        r.health[0].trip();
+        for id in 0..3u64 {
+            r.route("fp", Request::new(id, p.clone(), 2)).unwrap();
+        }
+        assert_eq!(r.engines[0].1.batcher.waiting(), 0, "quarantined");
+        assert_eq!(r.engines[1].1.batcher.waiting(), 3);
+        // both broken: honest shed, not a panic or a silent drop
+        r.health[1].trip();
+        let err = r
+            .route("fp", Request::new(9, p, 2))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("overloaded"), "sheds honestly: {err}");
     }
 }

@@ -209,7 +209,7 @@ impl Scheduler {
                         self.batcher.push_front(req);
                         break;
                     };
-                    match self.admit_prefill(slot, Running::new(req, slot)) {
+                    match self.admit_prefill(slot, Running::new(req, slot))? {
                         Some(n) => produced += n,
                         // fault-requeued: stop admitting this step so
                         // the retry happens under the next step's (maybe
@@ -240,7 +240,7 @@ impl Scheduler {
                         self.batcher.push_resume(run);
                         break;
                     };
-                    match self.resume_prefill(slot, run, &tokens) {
+                    match self.resume_prefill(slot, run, &tokens)? {
                         Some(n) => produced += n,
                         None => break,
                     }
@@ -357,11 +357,14 @@ impl Scheduler {
         );
         if !transient && !self.downgrade() {
             // ladder floor and the fault persists: fail the affected
-            // batch honestly rather than spinning on it forever
+            // batch honestly rather than spinning on it forever. The
+            // floor counter is the router's health signal — a replica
+            // erroring work at the ladder floor is as good as broken.
             let slots: Vec<usize> = self.running.keys().copied().collect();
             for slot in slots {
                 let run = self.running.remove(&slot).unwrap();
                 self.engine.kv.free(slot);
+                self.metrics.record_floor_error();
                 let resp = run.into_response(FinishReason::Error(format!(
                     "decode failed past the ladder floor: {e:#}"
                 )));
@@ -463,11 +466,18 @@ impl Scheduler {
         }
     }
 
-    /// Prefill a freshly admitted request; returns `Some(tokens
-    /// produced)` (1 on success), or `None` when an injected fault
+    /// Prefill a freshly admitted request; returns `Ok(Some(tokens
+    /// produced))` (1 on success), or `Ok(None)` when an injected fault
     /// survived the retries and the request was requeued — the caller
-    /// must stop admitting for this step.
-    fn admit_prefill(&mut self, slot: usize, mut running: Running) -> Option<usize> {
+    /// must stop admitting for this step. A whole-replica kill
+    /// (`faults::is_replica_down`) requeues the request and propagates
+    /// `Err`: the engine is dead, so the failure is engine-level, not
+    /// request-level — the router's fault domain evacuates the queue.
+    fn admit_prefill(
+        &mut self,
+        slot: usize,
+        mut running: Running,
+    ) -> crate::Result<Option<usize>> {
         let t0 = std::time::Instant::now();
         match self.with_retry("prefill", |eng| eng.prefill(slot, &running.request.prompt))
         {
@@ -482,10 +492,14 @@ impl Scheduler {
                     self.token_events.push((running.request.id, first));
                 }
                 self.maybe_finish(slot, running);
-                Some(1)
+                Ok(Some(1))
             }
             Err(e) => {
                 self.engine.kv.free(slot);
+                if crate::runtime::faults::is_replica_down(&e) {
+                    self.batcher.push_front(running.request);
+                    return Err(e);
+                }
                 let retryable = match crate::runtime::faults::classify(&e) {
                     Some((_, true)) => true,
                     Some((_, false)) => self.downgrade(),
@@ -497,26 +511,28 @@ impl Scheduler {
                         running.request.id
                     );
                     self.batcher.push_front(running.request);
-                    return None;
+                    return Ok(None);
                 }
                 // prefill consumes only this request's input, so its
                 // failure is request-scoped: free the lane, error the
                 // request, keep the engine alive.
                 self.reject(running.request, format!("prefill failed: {e:#}"));
-                Some(0)
+                Ok(Some(0))
             }
         }
     }
 
     /// Re-prefill a preempted sequence (`prompt ++ generated`) and
-    /// continue it; returns `Some(tokens produced)` (1 on success), or
-    /// `None` when an injected fault requeued the sequence.
+    /// continue it; returns `Ok(Some(tokens produced))` (1 on success),
+    /// or `Ok(None)` when an injected fault requeued the sequence. A
+    /// whole-replica kill requeues the sequence and propagates `Err`
+    /// (see `admit_prefill`) — the router migrates it to a live replica.
     fn resume_prefill(
         &mut self,
         slot: usize,
         mut run: Running,
         tokens: &[i32],
-    ) -> Option<usize> {
+    ) -> crate::Result<Option<usize>> {
         let t0 = std::time::Instant::now();
         match self.with_retry("resume prefill", |eng| eng.prefill(slot, tokens)) {
             Ok(next) => {
@@ -532,7 +548,7 @@ impl Scheduler {
                     self.token_events.push((run.request.id, next));
                 }
                 self.maybe_finish(slot, run);
-                Some(1)
+                Ok(Some(1))
             }
             Err(e) => {
                 // this attempt's free may donate *new* full blocks (the
@@ -540,6 +556,10 @@ impl Scheduler {
                 // later cancel/deadline drops exactly one hold per entry
                 let newly = self.engine.kv.free_donating(slot);
                 run.donated.extend(newly);
+                if crate::runtime::faults::is_replica_down(&e) {
+                    self.batcher.push_resume(run);
+                    return Err(e);
+                }
                 let retryable = match crate::runtime::faults::classify(&e) {
                     Some((_, true)) => true,
                     Some((_, false)) => self.downgrade(),
@@ -551,7 +571,7 @@ impl Scheduler {
                         run.request.id
                     );
                     self.batcher.push_resume(run);
-                    return None;
+                    return Ok(None);
                 }
                 self.engine.kv.drop_cached(&run.donated);
                 let id = run.request.id;
@@ -560,7 +580,7 @@ impl Scheduler {
                     .into_response(FinishReason::Error(format!("resume failed: {e:#}")));
                 self.metrics.record_finished(&resp);
                 self.finished.push(resp);
-                Some(0)
+                Ok(Some(0))
             }
         }
     }
@@ -670,6 +690,51 @@ impl Scheduler {
                 self.running.insert(slot, run);
             }
         }
+    }
+
+    /// Tear this scheduler down for failover: every running sequence is
+    /// released from its KV lane and every queued work item — fresh and
+    /// preempted alike — is pulled out, so the router can reconstruct
+    /// the whole lot on healthy replicas via the `prompt ++ generated`
+    /// resume path. All of *this* pool's bookkeeping is settled here:
+    /// lanes freed, preemption-donated prefix-cache holds dropped
+    /// exactly once and cleared (the hashes mean nothing to another
+    /// replica's pool). Requests keep their original `submitted`
+    /// instant, so age-ordered admission and deadline enforcement on
+    /// the destination are unchanged. A running sequence whose
+    /// re-prefill would exceed the prefill window cannot be
+    /// reconstructed anywhere — it is finished honestly with `Length`,
+    /// exactly as pool-pressure preemption would have.
+    pub fn evacuate(&mut self) -> (Vec<Request>, Vec<Running>) {
+        let seq_len = self.engine.session.manifest.seq_len;
+        let mut fresh = Vec::new();
+        let mut resumes = Vec::new();
+        let mut slots: Vec<usize> = self.running.keys().copied().collect();
+        slots.sort_unstable();
+        for slot in slots {
+            let run = self.running.remove(&slot).unwrap();
+            // no donation: this pool's prefix cache dies with the
+            // replica, so there are no holds to track across the move
+            self.engine.kv.free(slot);
+            if run.request.prompt.len() + run.generated.len() <= seq_len {
+                resumes.push(run);
+            } else {
+                let resp = run.into_response(FinishReason::Length);
+                self.metrics.record_finished(&resp);
+                self.finished.push(resp);
+            }
+        }
+        while let Some(next) = self.batcher.pop_next() {
+            match next {
+                Admit::New(req) => fresh.push(req),
+                Admit::Resume(mut run) => {
+                    self.engine.kv.drop_cached(&run.donated);
+                    run.donated.clear();
+                    resumes.push(run);
+                }
+            }
+        }
+        (fresh, resumes)
     }
 
     /// Run until the queue and all slots drain; returns all responses.

@@ -164,7 +164,11 @@ impl Server {
     }
 
     /// Serve a multi-mode router (one process, several quantization
-    /// variants; requests pick a variant via "mode"). Blocks.
+    /// variants and/or several replicas per variant; requests pick a
+    /// variant via "mode"). Blocks. The router's step never errors
+    /// while any replica is healthy — a broken replica is quarantined
+    /// and its work failed over — so a single dead engine can no
+    /// longer end the serve loop, unlike the single-scheduler path.
     pub fn serve_router(&self, router: Router, stop: Arc<AtomicBool>) -> crate::Result<()> {
         self.serve_backend(router, stop)
     }

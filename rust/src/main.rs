@@ -66,6 +66,9 @@ fn run() -> anyhow::Result<()> {
          manifest's n_shards; >1 runs attention heads / MLP columns \
          split across a lock-step shard group on the reference \
          interpreter)")
+    .opt("replicas", "1", "serve: engine replicas per mode behind the \
+         router (health-checked; a broken replica's work fails over to \
+         its siblings)")
     .opt("tol", "0.10", "bench-diff: mean-latency regression tolerance \
          (fraction; transfer growth always fails)")
     .opt("faults", "", "fault-injection plan, e.g. \
@@ -223,7 +226,8 @@ fn run() -> anyhow::Result<()> {
                 .with_queue_limit(args.get_usize("queue-limit")?);
             let stop = Arc::new(AtomicBool::new(false));
             let modes = args.get("modes");
-            if modes.is_empty() {
+            let replicas = args.get_usize("replicas")?.max(1);
+            if modes.is_empty() && replicas == 1 {
                 let mut s = load_session(&args)?;
                 maybe_smooth(&mut s, &args)?;
                 apply_shards(&mut s, &args)?;
@@ -237,20 +241,38 @@ fn run() -> anyhow::Result<()> {
                 }
                 server.serve(Scheduler::new(engine), stop)
             } else {
-                // one process, several quantization variants: requests
-                // pick one with {"mode": "<gran>"}
+                // one process, several quantization variants and/or
+                // several replicas per variant: requests pick a mode
+                // with {"mode": "<gran>"}; the router health-checks
+                // replicas and fails a broken one's work over to its
+                // siblings
+                let mode_list: Vec<String> = if modes.is_empty() {
+                    vec![args.get("gran").to_string()]
+                } else {
+                    modes
+                        .split(',')
+                        .map(str::trim)
+                        .filter(|m| !m.is_empty())
+                        .map(String::from)
+                        .collect()
+                };
                 let mut router = Router::new();
-                for mode in modes.split(',').map(str::trim).filter(|m| !m.is_empty()) {
-                    let mut s = load_session(&args)?;
-                    maybe_smooth(&mut s, &args)?;
-                    apply_shards(&mut s, &args)?;
-                    let scheme = scheme_for(gran_of(mode)?, &args)?;
-                    if scheme.gran.needs_calibration() {
-                        calibrate::calibrate_into(&mut s, scheme.act_levels(), 8)?;
+                for mode in &mode_list {
+                    for _ in 0..replicas {
+                        let mut s = load_session(&args)?;
+                        maybe_smooth(&mut s, &args)?;
+                        apply_shards(&mut s, &args)?;
+                        let scheme = scheme_for(gran_of(mode)?, &args)?;
+                        if scheme.gran.needs_calibration() {
+                            calibrate::calibrate_into(&mut s, scheme.act_levels(), 8)?;
+                        }
+                        router.add_engine(mode, Scheduler::new(Engine::new(s, scheme)?));
                     }
-                    router.add_engine(mode, Scheduler::new(Engine::new(s, scheme)?));
                 }
-                log::info!("router serving modes: {:?}", router.modes());
+                log::info!(
+                    "router serving modes {:?} x {replicas} replica(s)",
+                    router.modes()
+                );
                 server.serve_router(router, stop)
             }
         }

@@ -90,6 +90,48 @@ impl fmt::Display for InjectedFault {
 
 impl std::error::Error for InjectedFault {}
 
+/// The error a killed replica produces on every call. Its `Display`
+/// deliberately matches *neither* `classify` arm — `with_retry` will
+/// not retry it and `recover_decode_fault` will not preempt around it,
+/// so it propagates out of `Scheduler::step` as an engine-level `Err`
+/// and lands in the router's fault-domain layer, which is the only
+/// machinery that can actually recover (quarantine + migrate).
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicaDown {
+    /// The plan's `replica=` selector (None = the whole process).
+    pub replica: Option<usize>,
+    /// The `kill_replica_after=` threshold that was crossed.
+    pub after: u64,
+}
+
+impl fmt::Display for ReplicaDown {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.replica {
+            Some(k) => write!(
+                f,
+                "fault-injected(replica-down): replica {k} dead after {} calls",
+                self.after
+            ),
+            None => write!(
+                f,
+                "fault-injected(replica-down): replica dead after {} calls",
+                self.after
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ReplicaDown {}
+
+/// Whether an error is a whole-replica kill (`kill_replica_after=`) —
+/// typed downcast first, greppable `Display` fallback, exactly like
+/// `classify`. The router reports these as chaos kills rather than
+/// genuine engine bugs; both quarantine the replica either way.
+pub fn is_replica_down(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<ReplicaDown>().is_some()
+        || format!("{e:#}").contains("fault-injected(replica-down)")
+}
+
 /// A parsed fault schedule. Deterministic given `seed`: the same plan
 /// over the same call sequence injects the same faults.
 #[derive(Clone, Debug)]
@@ -114,6 +156,19 @@ pub struct FaultPlan {
     /// (`runtime::collective::DeviceGroup` arms the plan only on the
     /// matching shard thread). None = every shard / the whole process.
     pub shard: Option<usize>,
+    /// Restrict injection to one replica of a router fleet. Unlike
+    /// `shard` (gated at arm time — shards live on their own threads),
+    /// every replica steps on the serve thread, so the router marks the
+    /// current replica (`set_replica`) around each engine's calls and
+    /// injection fires only while the marker matches. None = everywhere.
+    pub replica: Option<usize>,
+    /// Whole-replica kill: after N execute-class calls on the selected
+    /// replica, *every* subsequent backend call there fails permanently
+    /// with an error the retry/ladder machinery cannot classify as
+    /// recoverable — the replica is dead and only the router's fault
+    /// domain (quarantine + failover migration) can save its work.
+    /// Ignores `heal=` and `max=`. 0 = disabled.
+    pub kill_after: u64,
 }
 
 impl Default for FaultPlan {
@@ -129,6 +184,8 @@ impl Default for FaultPlan {
             p_torn: 0.0,
             max_injections: 0,
             shard: None,
+            replica: None,
+            kill_after: 0,
         }
     }
 }
@@ -137,7 +194,7 @@ impl FaultPlan {
     /// Parse a comma-separated `key=value` spec:
     ///
     /// `seed=N,execute=P,upload=P,fetch=P,persistent=<op>,heal=N,`
-    /// `stall_ms=N,torn=P,max=N,shard=K`
+    /// `stall_ms=N,torn=P,max=N,shard=K,replica=K,kill_replica_after=N`
     pub fn parse(spec: &str) -> crate::Result<Self> {
         let mut plan = FaultPlan::default();
         for part in spec.split(',') {
@@ -173,9 +230,12 @@ impl FaultPlan {
                 "torn" => plan.p_torn = prob(val)?,
                 "max" => plan.max_injections = int(val)?,
                 "shard" => plan.shard = Some(int(val)? as usize),
+                "replica" => plan.replica = Some(int(val)? as usize),
+                "kill_replica_after" => plan.kill_after = int(val)?,
                 other => anyhow::bail!(
                     "unknown fault spec key '{other}' (seed | execute | upload \
-                     | fetch | persistent | heal | stall_ms | torn | max | shard)"
+                     | fetch | persistent | heal | stall_ms | torn | max | shard \
+                     | replica | kill_replica_after)"
                 ),
             }
         }
@@ -215,10 +275,42 @@ struct FaultState {
     stats: FaultStats,
     rung: u32,
     seq: u64,
+    /// Execute-class calls counted toward `kill_replica_after`.
+    kill_calls: u64,
+    /// Latched once the kill threshold is crossed: the replica stays
+    /// dead for the life of the armed plan (re-arming resurrects it —
+    /// chaos runs model replacement, not repair).
+    killed: bool,
 }
 
 thread_local! {
     static STATE: RefCell<Option<FaultState>> = const { RefCell::new(None) };
+    /// Which replica's engine is currently executing on this thread.
+    /// Set by the router around every engine call; `None` outside a
+    /// router (single-engine serving, tests, stores).
+    static REPLICA: std::cell::Cell<Option<usize>> =
+        const { std::cell::Cell::new(None) };
+}
+
+/// Mark the replica whose engine is about to run on this thread (the
+/// router brackets every submit/step/cancel with this). Injection under
+/// a `replica=K` plan fires only while the marker matches.
+pub fn set_replica(r: Option<usize>) {
+    REPLICA.with(|c| c.set(r));
+}
+
+/// The replica marker currently set on this thread, if any.
+pub fn current_replica() -> Option<usize> {
+    REPLICA.with(|c| c.get())
+}
+
+/// Whether `plan`'s replica selector matches the current marker. A plan
+/// without a selector matches everywhere (including outside routers).
+fn replica_selected(plan: &FaultPlan) -> bool {
+    match plan.replica {
+        None => true,
+        Some(k) => current_replica() == Some(k),
+    }
 }
 
 /// Arm `plan` on this thread (replaces any armed plan, resets stats).
@@ -231,6 +323,8 @@ pub fn arm(plan: FaultPlan) {
             stats: FaultStats::default(),
             rung: 0,
             seq: 0,
+            kill_calls: 0,
+            killed: false,
         });
     });
 }
@@ -291,6 +385,9 @@ fn roll(op: FaultOp) -> Option<InjectedFault> {
     STATE.with(|s| {
         let mut s = s.borrow_mut();
         let st = s.as_mut()?;
+        if !replica_selected(&st.plan) {
+            return None;
+        }
         if st.rung >= st.plan.heal_rung {
             return None;
         }
@@ -327,10 +424,45 @@ fn roll(op: FaultOp) -> Option<InjectedFault> {
 /// `FaultyBackend::execute` would.
 pub fn inject_execute() -> crate::Result<()> {
     maybe_stall();
+    if let Some(k) = check_kill(true) {
+        return Err(k.into());
+    }
     if let Some(f) = roll(FaultOp::Execute) {
         return Err(f.into());
     }
     Ok(())
+}
+
+/// Consult the whole-replica kill schedule for one backend call.
+/// Execute-class calls (`counts = true`) advance the countdown; once
+/// the threshold is crossed, *every* call on the selected replica —
+/// counted or not — fails with `ReplicaDown`. Deliberately ignores
+/// `heal=` (a ladder rung cannot route around a dead replica) and
+/// `max=` (death is a state, not a scheduled injection).
+fn check_kill(counts: bool) -> Option<ReplicaDown> {
+    STATE.with(|s| {
+        let mut s = s.borrow_mut();
+        let st = s.as_mut()?;
+        if st.plan.kill_after == 0 || !replica_selected(&st.plan) {
+            return None;
+        }
+        if !st.killed {
+            if !counts {
+                return None;
+            }
+            st.kill_calls += 1;
+            if st.kill_calls < st.plan.kill_after {
+                return None;
+            }
+            st.killed = true;
+            log::warn!(
+                "chaos: replica {:?} killed after {} execute calls",
+                st.plan.replica,
+                st.plan.kill_after
+            );
+        }
+        Some(ReplicaDown { replica: st.plan.replica, after: st.plan.kill_after })
+    })
 }
 
 /// Sleep out the plan's transfer stall, if any (upload/fetch latency).
@@ -338,7 +470,10 @@ fn maybe_stall() {
     let stall = STATE.with(|s| {
         let mut s = s.borrow_mut();
         let st = s.as_mut()?;
-        if st.plan.stall.is_zero() || st.rung >= st.plan.heal_rung {
+        if st.plan.stall.is_zero()
+            || st.rung >= st.plan.heal_rung
+            || !replica_selected(&st.plan)
+        {
             return None;
         }
         st.stats.stalls += 1;
@@ -355,7 +490,10 @@ pub fn should_tear() -> bool {
     STATE.with(|s| {
         let mut s = s.borrow_mut();
         let Some(st) = s.as_mut() else { return false };
-        if st.plan.p_torn <= 0.0 || st.rung >= st.plan.heal_rung {
+        if st.plan.p_torn <= 0.0
+            || st.rung >= st.plan.heal_rung
+            || !replica_selected(&st.plan)
+        {
             return false;
         }
         if st.plan.max_injections > 0 && st.stats.total() >= st.plan.max_injections {
@@ -421,6 +559,9 @@ impl Backend for FaultyBackend {
 
     fn upload(&self, v: &HostValue) -> crate::Result<DeviceBuf> {
         maybe_stall();
+        if let Some(k) = check_kill(false) {
+            return Err(k.into());
+        }
         if let Some(f) = roll(FaultOp::Upload) {
             return Err(f.into());
         }
@@ -429,6 +570,9 @@ impl Backend for FaultyBackend {
 
     fn fetch_f32(&self, b: &DeviceBuf) -> crate::Result<Tensor> {
         maybe_stall();
+        if let Some(k) = check_kill(false) {
+            return Err(k.into());
+        }
         if let Some(f) = roll(FaultOp::Fetch) {
             return Err(f.into());
         }
@@ -437,6 +581,9 @@ impl Backend for FaultyBackend {
 
     fn fetch_i32(&self, b: &DeviceBuf) -> crate::Result<IntTensor> {
         maybe_stall();
+        if let Some(k) = check_kill(false) {
+            return Err(k.into());
+        }
         if let Some(f) = roll(FaultOp::Fetch) {
             return Err(f.into());
         }
@@ -449,6 +596,9 @@ impl Backend for FaultyBackend {
         args: &[Rc<DeviceBuf>],
         splitter: Option<&super::split::TupleSplitter>,
     ) -> crate::Result<Outputs> {
+        if let Some(k) = check_kill(true) {
+            return Err(k.into());
+        }
         if let Some(f) = roll(FaultOp::Execute) {
             return Err(f.into());
         }
@@ -483,7 +633,8 @@ mod tests {
     fn parse_full_spec() {
         let p = FaultPlan::parse(
             "seed=7,execute=0.5,upload=0.25,fetch=1,persistent=fetch,\
-             heal=2,stall_ms=3,torn=0.1,max=9,shard=1",
+             heal=2,stall_ms=3,torn=0.1,max=9,shard=1,replica=2,\
+             kill_replica_after=50",
         )
         .unwrap();
         assert_eq!(p.seed, 7);
@@ -496,7 +647,55 @@ mod tests {
         assert_eq!(p.p_torn, 0.1);
         assert_eq!(p.max_injections, 9);
         assert_eq!(p.shard, Some(1));
-        assert_eq!(FaultPlan::parse("execute=1").unwrap().shard, None);
+        assert_eq!(p.replica, Some(2));
+        assert_eq!(p.kill_after, 50);
+        let d = FaultPlan::parse("execute=1").unwrap();
+        assert_eq!(d.shard, None);
+        assert_eq!(d.replica, None);
+        assert_eq!(d.kill_after, 0);
+    }
+
+    #[test]
+    fn replica_selector_gates_injection() {
+        arm(FaultPlan::parse("seed=1,upload=1,replica=2").unwrap());
+        let b = FaultyBackend::wrap(Rc::new(RefBackend));
+        // no marker: a replica-targeted plan stays quiet
+        assert!(b.upload(&host_scalar()).is_ok());
+        set_replica(Some(1));
+        assert!(b.upload(&host_scalar()).is_ok(), "wrong replica untouched");
+        set_replica(Some(2));
+        assert!(b.upload(&host_scalar()).is_err(), "selected replica faults");
+        set_replica(None);
+        assert_eq!(disarm().unwrap().upload, 1);
+    }
+
+    #[test]
+    fn replica_kill_latches_and_defeats_classify() {
+        arm(FaultPlan::parse("seed=2,replica=0,kill_replica_after=3").unwrap());
+        let b = FaultyBackend::wrap(Rc::new(RefBackend));
+        set_replica(Some(0));
+        // countdown: execute-class calls advance it
+        assert!(inject_execute().is_ok());
+        assert!(inject_execute().is_ok());
+        let err = inject_execute().unwrap_err();
+        assert!(is_replica_down(&err), "third call crosses the threshold");
+        // neither retryable-transient nor ladder-persistent
+        assert_eq!(classify(&err), None);
+        // the wrapped form still identifies as a kill
+        let rewrapped = anyhow::anyhow!("batched decode: {err:#}");
+        assert!(is_replica_down(&rewrapped));
+        assert_eq!(classify(&rewrapped), None);
+        // dead means dead: every op fails now, even non-counted ones,
+        // and healing the ladder does not resurrect it
+        set_rung(2);
+        assert!(b.upload(&host_scalar()).is_err());
+        assert!(inject_execute().is_err());
+        // the sibling replica never notices
+        set_replica(Some(1));
+        assert!(b.upload(&host_scalar()).is_ok());
+        assert!(inject_execute().is_ok());
+        set_replica(None);
+        disarm();
     }
 
     #[test]

@@ -541,6 +541,80 @@ mod chaos_props {
 }
 
 #[cfg(test)]
+mod replica_chaos_props {
+    //! Replica fault-domain property (coordinator::router + the
+    //! whole-replica kill fault): under a randomized kill schedule —
+    //! which replica dies, and after how many engine calls — the router
+    //! must terminate with *exactly one* response per submitted request
+    //! id: none lost, none duplicated, no assignment left dangling.
+    //! Where the kill lands (mid-prefill, mid-decode, while preempted)
+    //! varies with the countdown; the id-conservation invariant must
+    //! not.
+
+    use std::rc::Rc;
+
+    use super::*;
+    use crate::coordinator::{Engine, Request, Router, Scheduler};
+    use crate::quant::scheme::Scheme;
+    use crate::runtime::backend::RefBackend;
+    use crate::runtime::{faults, Client, FaultPlan, FaultyBackend};
+    use crate::testkit::tiny::TinyCfg;
+
+    /// One replica over an undersized 6-block pool (preemption in play)
+    /// on the fault-injecting backend.
+    fn replica() -> Scheduler {
+        let cfg = TinyCfg { kv_pool_blocks: 6, ..TinyCfg::default() };
+        let client =
+            Client::with_backend(Rc::new(FaultyBackend::wrap(Rc::new(RefBackend))));
+        let s = cfg.session_with_client(client).unwrap();
+        Scheduler::new(Engine::new(s, Scheme::fp()).unwrap())
+    }
+
+    #[test]
+    fn chaos_replica_kills_never_lose_or_duplicate_requests() {
+        check(
+            "replica kills conserve request ids",
+            6,
+            pair(usize_in(0..3), usize_in(1..40)),
+            |&(victim, kill_after)| {
+                let mut r = Router::with_seed(0xD00D);
+                r.add_engine("fp", replica());
+                r.add_engine("fp", replica());
+                let prompts: Vec<Vec<i32>> = (0..6)
+                    .map(|i| {
+                        r.replica(0).engine.session.corpus.split("heldout")
+                            .unwrap()
+                            .seq(i)[..6]
+                            .to_vec()
+                    })
+                    .collect();
+                // victim 2 = the no-kill control case
+                if victim < 2 {
+                    faults::arm(
+                        FaultPlan::parse(&format!(
+                            "seed=1,replica={victim},kill_replica_after={kill_after}"
+                        ))
+                        .unwrap(),
+                    );
+                }
+                for (i, p) in prompts.iter().enumerate() {
+                    let mut req = Request::new(1 + i as u64, p.clone(), 4);
+                    req.stop_token = None;
+                    r.route("fp", req).unwrap();
+                }
+                let out = r.run_to_completion().unwrap();
+                faults::disarm();
+                let mut ids: Vec<u64> = out.iter().map(|x| x.id).collect();
+                ids.sort_unstable();
+                ids == (1..=6).collect::<Vec<u64>>()
+                    && r.pending_assignments() == 0
+                    && !r.has_work()
+            },
+        );
+    }
+}
+
+#[cfg(test)]
 mod tests {
     use super::*;
 

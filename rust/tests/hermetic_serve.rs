@@ -10,7 +10,9 @@
 use std::io::{BufRead, BufReader, Write};
 use std::rc::Rc;
 
-use cushioncache::coordinator::{Engine, FinishReason, Request, Scheduler};
+use cushioncache::coordinator::{
+    Engine, FinishReason, Health, Request, Router, Scheduler,
+};
 use cushioncache::cushion::{self, SearchCfg};
 use cushioncache::data::PAD;
 use cushioncache::eval::perplexity::{argmax, perplexity};
@@ -317,6 +319,231 @@ fn greedy_search_and_quantized_eval_run_hermetically() {
     calibrate::calibrate_into(&mut s, w8a8.act_levels(), 2).unwrap();
     let after = perplexity(&s, &w8a8, "heldout", 2).unwrap();
     assert!(after.is_finite() && after > 1.0, "ppl {after}");
+}
+
+// ---------------------------------------------------------------------------
+// Replica fault domains: whole-replica chaos kills
+// ---------------------------------------------------------------------------
+
+/// A tiny session on the fault-injecting backend, with an optional
+/// undersized pool (blocks > 0) and the two-token cushion installed when
+/// `cushion` — the preemption-heavy shape the replica-kill tests need.
+fn faulty_session_cfg(blocks: usize, cushion: bool) -> Session {
+    let cfg = TinyCfg { kv_pool_blocks: blocks, ..TinyCfg::default() };
+    let mut s = cfg
+        .session_with_client(Client::with_backend(Rc::new(FaultyBackend::wrap(
+            Rc::new(RefBackend),
+        ))))
+        .unwrap();
+    if cushion {
+        s.set_cushion_tokens(&[cushioncache::data::BOS, cushioncache::data::DOT])
+            .unwrap();
+    }
+    s
+}
+
+/// `n` same-weights fp replicas behind one router (seeded breakers).
+fn fp_replica_router(n: usize, blocks: usize, cushion: bool) -> Router {
+    let mut r = Router::with_seed(0xC4A05);
+    for _ in 0..n {
+        let s = faulty_session_cfg(blocks, cushion);
+        r.add_engine("fp", Scheduler::new(Engine::new(s, Scheme::fp()).unwrap()));
+    }
+    r
+}
+
+/// Fault-free single-engine oracle: id -> token stream for the given
+/// workload. fp decode is deterministic and per-sequence independent, so
+/// a request's stream depends only on its prompt — which replica serves
+/// it (or re-serves it after a failover re-prefill) must not matter.
+fn baseline_streams(
+    blocks: usize,
+    cushion: bool,
+    prompts: &[Vec<i32>],
+    max_new: usize,
+) -> std::collections::HashMap<u64, Vec<i32>> {
+    let cfg = TinyCfg { kv_pool_blocks: blocks, ..TinyCfg::default() };
+    let mut s = cfg.session().unwrap();
+    if cushion {
+        s.set_cushion_tokens(&[cushioncache::data::BOS, cushioncache::data::DOT])
+            .unwrap();
+    }
+    let mut sched = Scheduler::new(Engine::new(s, Scheme::fp()).unwrap());
+    for (i, p) in prompts.iter().enumerate() {
+        let mut r = Request::new(1 + i as u64, p.clone(), max_new);
+        r.stop_token = None;
+        sched.submit_request(r);
+    }
+    let resp = sched.run_to_completion().unwrap();
+    assert!(resp.iter().all(|r| r.finished == FinishReason::MaxTokens));
+    resp.into_iter().map(|r| (r.id, r.tokens)).collect()
+}
+
+fn submit_router(r: &mut Router, prompts: &[Vec<i32>], max_new: usize) {
+    for (i, p) in prompts.iter().enumerate() {
+        let mut req = Request::new(1 + i as u64, p.clone(), max_new);
+        req.stop_token = None;
+        r.route("fp", req).unwrap();
+    }
+}
+
+#[test]
+fn chaos_replica_kill_mid_prefill_fails_over_bit_identically() {
+    // replica 0 dies on its very first engine call — the prefill of its
+    // first admitted request. Nothing has run there yet, so the whole
+    // assignment migrates as fresh requests and replica 1 serves the
+    // entire batch exactly as the fault-free oracle does.
+    let mut r = fp_replica_router(2, 0, false);
+    let prompts: Vec<Vec<i32>> = (0..4)
+        .map(|i| prompt_from(&r.replica(0).engine.session, i, 6))
+        .collect();
+    let want = baseline_streams(0, false, &prompts, 6);
+    submit_router(&mut r, &prompts, 6);
+    faults::arm(FaultPlan::parse("seed=11,replica=0,kill_replica_after=1").unwrap());
+    let mut resp = r.run_to_completion().unwrap();
+    faults::disarm();
+    resp.sort_by_key(|x| x.id);
+    assert_eq!(resp.len(), 4, "every routed request must come back");
+    for x in &resp {
+        assert_eq!(x.finished, FinishReason::MaxTokens, "id {}: {:?}", x.id, x.finished);
+        assert_eq!(x.tokens, want[&x.id], "id {}: diverged after failover", x.id);
+    }
+    let m = &r.replica(0).metrics;
+    assert_eq!(m.breaker_opens, 1, "one breaker open on the killed replica");
+    assert_eq!(m.failovers, 1);
+    assert!(m.migrated_sequences >= 1, "the kill must migrate its queue");
+    assert_eq!(r.pending_assignments(), 0);
+}
+
+#[test]
+fn chaos_replica_kill_mid_decode_fails_over_bit_identically() {
+    // let both replicas prefill and decode a few steps, then kill
+    // replica 0 on its next engine call: its running sequences carry
+    // generated tokens, so the migration must re-prefill
+    // `prompt ++ generated` on replica 1 and continue bit-identically.
+    let mut r = fp_replica_router(2, 0, false);
+    let prompts: Vec<Vec<i32>> = (0..4)
+        .map(|i| prompt_from(&r.replica(0).engine.session, i, 6))
+        .collect();
+    let want = baseline_streams(0, false, &prompts, 6);
+    submit_router(&mut r, &prompts, 6);
+    let mut resp = Vec::new();
+    for _ in 0..3 {
+        resp.extend(r.step_all().unwrap());
+    }
+    assert!(r.replica(0).running_count() > 0, "replica 0 must be mid-decode");
+    faults::arm(FaultPlan::parse("seed=12,replica=0,kill_replica_after=1").unwrap());
+    while r.has_work() {
+        resp.extend(r.step_all().unwrap());
+    }
+    faults::disarm();
+    resp.sort_by_key(|x| x.id);
+    assert_eq!(resp.len(), 4);
+    for x in &resp {
+        assert_eq!(x.finished, FinishReason::MaxTokens, "id {}: {:?}", x.id, x.finished);
+        assert_eq!(x.tokens, want[&x.id], "id {}: diverged after failover", x.id);
+    }
+    let m = &r.replica(0).metrics;
+    assert_eq!(m.failovers, 1);
+    assert!(
+        m.reprefill_tokens > 2 * 6,
+        "mid-decode migration must re-prefill generated tokens too \
+         (got {} over 2 prompts of 6)",
+        m.reprefill_tokens
+    );
+    assert_eq!(r.pending_assignments(), 0);
+}
+
+#[test]
+fn chaos_replica_kill_while_preempted_migrates_the_resume_queue() {
+    // undersized pool + cushion forces preemption; once replica 0 holds
+    // a preempted (resumable) sequence, kill it: the resume queue must
+    // migrate — donated prefix-cache holds settled exactly once on the
+    // dead pool — and the batch still finishes bit-identically.
+    let mut r = fp_replica_router(2, 6, true);
+    let prompts: Vec<Vec<i32>> = (0..8)
+        .map(|i| prompt_from(&r.replica(0).engine.session, i, 6))
+        .collect();
+    let want = baseline_streams(6, true, &prompts, 6);
+    let base: Vec<usize> = (0..2)
+        .map(|i| r.replica(i).engine.kv.blocks_in_use())
+        .collect();
+    submit_router(&mut r, &prompts, 6);
+    let mut resp = Vec::new();
+    let mut guard = 0;
+    while r.replica(0).batcher.resume_count() == 0 {
+        resp.extend(r.step_all().unwrap());
+        guard += 1;
+        assert!(guard < 300, "workload never left a preempted sequence queued");
+        assert!(r.has_work(), "finished before any preemption on replica 0");
+    }
+    faults::arm(FaultPlan::parse("seed=13,replica=0,kill_replica_after=1").unwrap());
+    while r.has_work() {
+        resp.extend(r.step_all().unwrap());
+    }
+    faults::disarm();
+    resp.sort_by_key(|x| x.id);
+    assert_eq!(resp.len(), 8);
+    for x in &resp {
+        assert_eq!(x.finished, FinishReason::MaxTokens, "id {}: {:?}", x.id, x.finished);
+        assert_eq!(x.tokens, want[&x.id], "id {}: diverged after failover", x.id);
+    }
+    assert_eq!(r.replica(0).metrics.failovers, 1);
+    // both pools fully settled: the dead replica's donated holds were
+    // dropped exactly once by evacuation, the survivor's by completion
+    for i in 0..2 {
+        r.replica_mut(i).engine.kv.clear_prefix_cache();
+        assert_eq!(
+            r.replica(i).engine.kv.blocks_in_use(),
+            base[i],
+            "replica {i}: leaked blocks after failover"
+        );
+        assert_eq!(
+            r.replica(i).engine.kv.free_count(),
+            r.replica(i).engine.kv.n_slots,
+            "replica {i}: leaked lanes after failover"
+        );
+    }
+    assert_eq!(r.pending_assignments(), 0);
+}
+
+#[test]
+fn chaos_replicas_all_dead_shed_honestly() {
+    // an unselective kill (no replica= key) latches on the first engine
+    // call and fails every replica's calls from then on: both break in
+    // the same pass, the second failover finds no routable sibling, and
+    // every request comes back as an honest "overloaded" error — none
+    // lost, none silently dropped, and new routes are refused the same
+    // way.
+    let mut r = fp_replica_router(2, 0, false);
+    let prompts: Vec<Vec<i32>> = (0..4)
+        .map(|i| prompt_from(&r.replica(0).engine.session, i, 6))
+        .collect();
+    submit_router(&mut r, &prompts, 6);
+    faults::arm(FaultPlan::parse("seed=14,kill_replica_after=1").unwrap());
+    let mut resp = r.run_to_completion().unwrap();
+    faults::disarm();
+    resp.sort_by_key(|x| x.id);
+    assert_eq!(resp.len(), 4, "shed requests must still be answered");
+    for x in &resp {
+        assert_eq!(
+            x.finished,
+            FinishReason::Error("overloaded".into()),
+            "id {}: {:?}",
+            x.id,
+            x.finished
+        );
+    }
+    assert_eq!(r.replica_health(0), Health::Broken);
+    assert_eq!(r.replica_health(1), Health::Broken);
+    let shed: usize = (0..2).map(|i| r.replica(i).metrics.shed_requests).sum();
+    assert_eq!(shed, 4);
+    // and the front door says the same thing
+    let mut late = Request::new(99, prompts[0].clone(), 2);
+    late.stop_token = None;
+    let err = r.route("fp", late).unwrap_err().to_string();
+    assert!(err.contains("overloaded"), "honest refusal: {err}");
+    assert_eq!(r.pending_assignments(), 0);
 }
 
 #[test]

@@ -396,3 +396,99 @@ fn sequential_repeats_reuse_cached_prefix_blocks() {
     let resp = sched.run_to_completion().unwrap().pop().unwrap();
     assert_eq!(resp.finished, FinishReason::MaxTokens);
 }
+
+#[test]
+fn chaos_cancel_after_failover_releases_the_destination_pool() {
+    // regression for the failover/cancel interaction: after a replica
+    // kill migrates a running sequence, the router's assignment tracks
+    // the *destination* replica — a cancel must release that pool's
+    // lane and block refcounts (the dead source's holds were already
+    // settled exactly once by evacuation). A cancel still routed to the
+    // source would leak the survivor's blocks forever.
+    use std::rc::Rc;
+
+    use cushioncache::coordinator::{Health, Router};
+    use cushioncache::runtime::backend::RefBackend;
+    use cushioncache::runtime::{faults, Client, FaultPlan, FaultyBackend};
+
+    let mk = || {
+        let s = TinyCfg::default()
+            .session_with_client(Client::with_backend(Rc::new(
+                FaultyBackend::wrap(Rc::new(RefBackend)),
+            )))
+            .unwrap();
+        Scheduler::new(Engine::new(s, Scheme::fp()).unwrap())
+    };
+    let mut r = Router::with_seed(0xCA9CE1);
+    r.add_engine("fp", mk());
+    r.add_engine("fp", mk());
+    let base: Vec<usize> = (0..2)
+        .map(|i| r.replica(i).engine.kv.blocks_in_use())
+        .collect();
+    // equal pools tie-break on load, so routing alternates: replica 0
+    // gets ids 1 and 3 (long-running), replica 1 gets ids 2 and 4
+    // (short, so its lanes free up for the migrated pair)
+    let prompts: Vec<Vec<i32>> = (0..4)
+        .map(|i| prompt_from(&r.replica(0).engine.session, i, 6))
+        .collect();
+    for (i, p) in prompts.iter().enumerate() {
+        let max_new = if i % 2 == 0 { 8 } else { 3 };
+        let mut req = Request::new(1 + i as u64, p.clone(), max_new);
+        req.stop_token = None;
+        r.route("fp", req).unwrap();
+    }
+    let mut resp = Vec::new();
+    resp.extend(r.step_all().unwrap()); // everyone admitted and decoding
+    assert_eq!(r.replica(0).running_count(), 2);
+    faults::arm(FaultPlan::parse("seed=21,replica=0,kill_replica_after=1").unwrap());
+    // step until the kill fires, ids 2/4 finish, and the migrated pair
+    // (1 and 3) is re-prefilled into replica 1's lanes
+    let mut guard = 0;
+    while r.replica_health(0) != Health::Broken
+        || r.replica(1).batcher.resume_count() > 0
+        || r.replica(1).running_count() < 2
+    {
+        resp.extend(r.step_all().unwrap());
+        guard += 1;
+        assert!(guard < 100, "migrated sequences never re-admitted");
+        assert!(r.has_work(), "drained before the migration landed");
+    }
+    faults::disarm();
+    assert_eq!(r.replica(0).metrics.failovers, 1);
+    // cancel one migrated id while it runs on the destination: its lane
+    // and blocks must come back to *replica 1's* pool immediately
+    let free_before = r.replica(1).engine.kv.free_count();
+    let in_use_before = r.replica(1).engine.kv.blocks_in_use();
+    assert!(r.cancel(1), "migrated request must be cancellable");
+    assert_eq!(
+        r.replica(1).engine.kv.free_count(),
+        free_before + 1,
+        "cancel must free the destination lane"
+    );
+    assert!(
+        r.replica(1).engine.kv.blocks_in_use() < in_use_before,
+        "cancel must release the destination's block refcounts"
+    );
+    assert!(!r.cancel(1), "double-cancel is a no-op");
+    // drain the rest; every id answered exactly once, pools restored
+    resp.extend(r.run_to_completion().unwrap());
+    resp.sort_by_key(|x| x.id);
+    let ids: Vec<u64> = resp.iter().map(|x| x.id).collect();
+    assert_eq!(ids, vec![1, 2, 3, 4]);
+    assert_eq!(resp[0].finished, FinishReason::Cancelled);
+    assert_eq!(resp[2].finished, FinishReason::MaxTokens, "id 3 survives");
+    for i in 0..2 {
+        r.replica_mut(i).engine.kv.clear_prefix_cache();
+        assert_eq!(
+            r.replica(i).engine.kv.blocks_in_use(),
+            base[i],
+            "replica {i}: refcounts not restored after failover + cancel"
+        );
+        assert_eq!(
+            r.replica(i).engine.kv.free_count(),
+            r.replica(i).engine.kv.n_slots,
+            "replica {i}: lanes not restored after failover + cancel"
+        );
+    }
+    assert_eq!(r.pending_assignments(), 0);
+}

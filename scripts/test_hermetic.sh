@@ -23,10 +23,15 @@
 #        within interp tolerance, shard-kill recovery)
 #   3. an explicit focused re-run of the kvpool/preemption suites, so a
 #      filter-induced skip in step 2 can never silently pass the gate
-#   4. the chaos suite under three fault seeds (PROP_SEED shifts the
+#   4. an explicit focused run of the replica fault-domain suite
+#      (whole-replica kills: failover migration must be bit-identical,
+#      all-replicas-dead must shed honestly), so a filter-induced skip
+#      in step 2 can never silently pass it
+#   5. the chaos suite under three fault seeds (PROP_SEED shifts the
 #      property harness; the fault schedules inside each case are still
-#      derived from the per-case seed) — end-to-end recovery must hold
-#      bit-identically across seeds, not just on the default one
+#      derived from the per-case seed) — end-to-end recovery, including
+#      the replica-kill chaos tests and the id-conservation property,
+#      must hold bit-identically across seeds, not just the default one
 #
 # CUSHION_ARTIFACTS points at an empty scratch dir so a developer's
 # local `artifacts/` cannot leak into the hermetic run.
@@ -68,6 +73,16 @@ if [ $status -eq 0 ]; then
     # filter-induced skip in step 2 can never silently pass it
     echo "[hermetic] sharded execution parity at shards 1/2/4"
     cargo test -q --no-default-features --features ref --test sharded_parity
+    status=$?
+fi
+
+if [ $status -eq 0 ]; then
+    # replica fault-domain gate: every whole-replica kill scenario
+    # (mid-prefill, mid-decode, while preempted, all replicas dead)
+    # runs here by name so it cannot be skipped by a filter above
+    echo "[hermetic] replica fault domains: kill / failover / shed chaos"
+    cargo test -q --no-default-features --features ref \
+        --test hermetic_serve chaos_replica
     status=$?
 fi
 
