@@ -31,7 +31,9 @@
 
 use std::rc::Rc;
 
+use cushioncache::bench::scenario::{generate_trace, replay_trace, TraceCfg};
 use cushioncache::bench::{emit_bench_json, summarize, time_n, Table, Timing};
+use cushioncache::coordinator::metrics::SloMetrics;
 use cushioncache::coordinator::{Engine, Request, Router, Scheduler};
 use cushioncache::runtime::backend::RefBackend;
 use cushioncache::model::resident;
@@ -506,6 +508,105 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // ---- chunked prefill: long prompt co-batched with live decodes -------
+    // the prefill-stall scenario on the hermetic tiny model: two short
+    // tenants are decoding when a seq_len-scale prompt arrives. With a
+    // 4-token chunk budget the prefill spreads over ceil(15/4) = 4
+    // steps, and every one of those steps must still advance both
+    // decode tenants — the long prompt may no longer stall the batch.
+    let chunk_budget = 4usize;
+    let tiny_serve = cushioncache::testkit::tiny::TinyCfg {
+        serve_batch: 3,
+        ..Default::default()
+    };
+    let mut chunk_sched = Scheduler::new(Engine::new(tiny_serve.session()?, Scheme::fp())?);
+    assert!(
+        chunk_sched.engine.supports_chunked_prefill(),
+        "default-mode engine must support chunked prefill"
+    );
+    chunk_sched.set_prefill_chunk(Some(chunk_budget));
+    let mut chunk_rid = 1u64;
+    let mut sub = |sched: &mut Scheduler, prompt: Vec<i32>, max_new: usize| {
+        let mut r = Request::new(chunk_rid, prompt, max_new);
+        chunk_rid += 1;
+        r.stop_token = None; // deterministic lengths
+        sched.submit_request(r);
+    };
+    sub(&mut chunk_sched, vec![1, 2, 3], 12);
+    sub(&mut chunk_sched, vec![2, 3, 4], 12);
+    chunk_sched.step()?; // both shorts prefilled + first tokens
+    let long_prompt: Vec<i32> = (0..15).map(|i| (i % 60) as i32).collect();
+    sub(&mut chunk_sched, long_prompt.clone(), 2);
+    let chunk_steps = long_prompt.len().div_ceil(chunk_budget);
+    let mut chunk_step_t = Vec::with_capacity(chunk_steps);
+    for i in 0..chunk_steps {
+        let t0 = std::time::Instant::now();
+        let produced = chunk_sched.step()?;
+        chunk_step_t.push(t0.elapsed().as_secs_f64());
+        assert!(
+            produced >= 2,
+            "decode stalled during chunked prefill (step {i} produced {produced})"
+        );
+    }
+    row!(
+        &format!("step w/ prefill chunk (budget {chunk_budget}, batch 3)"),
+        &chunk_step_t
+    );
+    let chunk_resp = chunk_sched.run_to_completion()?;
+    assert_eq!(chunk_resp.len(), 3, "all three tenants finish");
+    assert!(chunk_resp.iter().all(|r| !r.finished.is_error()));
+    println!(
+        "[perf] chunked prefill: 15-token prompt over {chunk_steps} steps \
+         (budget {chunk_budget}), co-batched decodes never stalled"
+    );
+
+    // ---- SLO trace replay: Poisson/burst arrivals, Zipf prompts ----------
+    // the bench::scenario workload against a chunking scheduler on the
+    // tiny model; per-class TTFT/TPOT percentiles and goodput feed the
+    // "slo" extras, hard-gated by bench-diff.
+    let mut trace_sched = Scheduler::new(Engine::new(
+        cushioncache::testkit::tiny::TinyCfg { serve_batch: 3, ..Default::default() }
+            .session()?,
+        Scheme::fp(),
+    )?);
+    trace_sched.set_prefill_chunk(Some(chunk_budget));
+    let trace_cfg = TraceCfg {
+        seed: 0x510,
+        n_requests: 32,
+        prompt_len: (3, 12),
+        gen_short: 4,
+        gen_long: 8,
+        deadline_ms: Some(10_000), // generous: goodput gates scheduling, not CI speed
+        ..Default::default()
+    };
+    let events = generate_trace(&trace_cfg);
+    let mut slo = SloMetrics::new();
+    let mut trace_resp = Vec::new();
+    let (trace_t, trace_x) = time_with_xfer(0, 1, || {
+        trace_resp = replay_trace(&mut trace_sched, &events, Some(&mut slo)).unwrap();
+    });
+    row!("trace replay (32 reqs, zipf, chunk 4)", &trace_t, trace_x, 1);
+    assert_eq!(trace_resp.len(), trace_cfg.n_requests, "requests lost in replay");
+    assert!(
+        trace_resp.iter().all(|r| !r.finished.is_error()),
+        "trace replay produced per-request errors"
+    );
+    assert!(
+        (slo.goodput() - 1.0).abs() < 1e-9,
+        "goodput under a generous deadline must be 1.0, got {}",
+        slo.goodput()
+    );
+    assert!(slo.tpot_p99().is_finite() && slo.ttft_p99().is_finite());
+    let slo_classes = slo.summary();
+    println!(
+        "[perf] SLO trace replay: ttft_p99 {:.2} ms, tpot_p99 {:.2} ms, \
+         goodput {:.2} over {} classes",
+        slo.ttft_p99() * 1e3,
+        slo.tpot_p99() * 1e3,
+        slo.goodput(),
+        slo_classes.len()
+    );
+
     table.emit("perf_hotpath");
     print!("{}", xfer_table.render());
 
@@ -584,6 +685,27 @@ fn main() -> anyhow::Result<()> {
                 .join(", ")
         ),
     ));
+    let mut slo_json = format!(
+        "{{\"ttft_p99_ms\": {:.3}, \"tpot_p99_ms\": {:.3}, \"goodput\": {:.3}",
+        slo.ttft_p99() * 1e3,
+        slo.tpot_p99() * 1e3,
+        slo.goodput()
+    );
+    for c in &slo_classes {
+        slo_json.push_str(&format!(
+            ", \"{}\": {{\"total\": {}, \"goodput\": {:.3}, \"ttft_p50_ms\": {:.3}, \
+             \"ttft_p99_ms\": {:.3}, \"tpot_p50_ms\": {:.3}, \"tpot_p99_ms\": {:.3}}}",
+            cushioncache::bench::json_escape(&c.class),
+            c.total,
+            c.goodput(),
+            c.ttft_p50 * 1e3,
+            c.ttft_p99 * 1e3,
+            c.tpot_p50 * 1e3,
+            c.tpot_p99 * 1e3,
+        ));
+    }
+    slo_json.push('}');
+    extras.push(("slo".to_string(), slo_json));
     emit_bench_json("perf_hotpath", &components, &extras);
     Ok(())
 }

@@ -45,7 +45,7 @@ fn main() -> anyhow::Result<()> {
             table.row(vec![
                 scheme.label(),
                 if with_cushion { "yes" } else { "no" }.into(),
-                format!("{:.2}", resp.ttft * 1e3),
+                format!("{:.2}", resp.ttft.unwrap_or(0.0) * 1e3),
                 format!("{:.2}", tpot.mean * 1e3),
                 format!("{:.2}", tpot.std * 1e3),
             ]);

@@ -61,7 +61,7 @@ fn main() -> anyhow::Result<()> {
         println!(
             "[4] req {} ttft {:5.1} ms, {} tokens: {}",
             r.id,
-            r.ttft * 1e3,
+            r.ttft.unwrap_or(0.0) * 1e3,
             r.tokens.len(),
             tokenizer.detokenize(&r.tokens)
         );

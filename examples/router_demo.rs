@@ -65,7 +65,7 @@ fn main() -> anyhow::Result<()> {
         let mode = sent.iter().find(|(id, _)| *id == r.id).unwrap().1;
         println!(
             "req {:2} [{:4}] {} tokens, ttft {:5.1} ms, finish {}",
-            r.id, mode, r.tokens.len(), r.ttft * 1e3, r.finished.as_str()
+            r.id, mode, r.tokens.len(), r.ttft.unwrap_or(0.0) * 1e3, r.finished.as_str()
         );
     }
     assert_eq!(responses.len(), 11);

@@ -9,7 +9,12 @@
 //!   the device-resident serving design, so there is no tolerance — and
 //!   likewise in a `collective_per_iter` gauge (all_gathers /
 //!   kb_gathered / all_reduces / kb_reduced), the tensor-parallel
-//!   decode step's collective traffic.
+//!   decode step's collective traffic, and
+//! * the `slo` section's tail latencies (`ttft_p99_ms` / `tpot_p99_ms`
+//!   from the trace-replay scenario) growing past the latency
+//!   tolerance, or `goodput` dropping at all. Once a baseline carries
+//!   the section, losing it (or one of its p99 gauges) is itself a
+//!   regression — the SLO gate must not go vacuously green.
 //!
 //! Consumed by `cushiond bench-diff <base.json> <new.json>` and
 //! `scripts/bench_diff.sh`, the documented pre-merge check.
@@ -121,6 +126,52 @@ pub fn diff_values(base: &Value, new: &Value, tol: f64) -> DiffReport {
             }
         }
     }
+
+    // SLO gauges (trace-replay scenario): tail latencies use the same
+    // fractional tolerance as component means; goodput is monotone —
+    // any drop fails.
+    match (base.get("slo"), new.get("slo")) {
+        (Some(b), Some(n)) => {
+            for g in ["ttft_p99_ms", "tpot_p99_ms"] {
+                match (
+                    b.get(g).and_then(Value::as_f64),
+                    n.get(g).and_then(Value::as_f64),
+                ) {
+                    (Some(bv), Some(nv)) => {
+                        if bv > 0.0 && nv > bv * (1.0 + tol) {
+                            r.regressions.push(format!(
+                                "slo {g} {bv:.2} -> {nv:.2} ({:+.1}% > {:.0}% tolerance)",
+                                (nv - bv) / bv * 100.0,
+                                tol * 100.0
+                            ));
+                        } else if bv > 0.0 && nv < bv * 0.9 {
+                            r.notes.push(format!("slo {g} improved {bv:.2} -> {nv:.2}"));
+                        }
+                    }
+                    (Some(_), None) => r.regressions.push(format!(
+                        "slo gauge '{g}' missing from the new snapshot"
+                    )),
+                    (None, _) => {}
+                }
+            }
+            if let (Some(bg), Some(ng)) = (
+                b.get("goodput").and_then(Value::as_f64),
+                n.get("goodput").and_then(Value::as_f64),
+            ) {
+                if ng + 1e-9 < bg {
+                    r.regressions
+                        .push(format!("slo goodput fell {bg:.3} -> {ng:.3}"));
+                }
+            }
+        }
+        (Some(_), None) => r
+            .regressions
+            .push("slo section missing from the new snapshot".into()),
+        (None, Some(_)) => r
+            .notes
+            .push("slo section appeared (no baseline to compare)".into()),
+        (None, None) => {}
+    }
     r
 }
 
@@ -212,6 +263,58 @@ mod tests {
         let r = diff_values(&a, &snap_coll(1.25, 0.5), DEFAULT_TOL);
         assert!(!r.passed());
         assert!(r.regressions[0].contains("kb_reduced"));
+    }
+
+    #[test]
+    fn slo_gauges_are_gated() {
+        let snap_slo = |ttft: f64, tpot: f64, goodput: f64| -> Value {
+            json::parse(&format!(
+                r#"{{
+                  "components": {{"decode step (batch 8)": {{"mean_ms": 1.0}}}},
+                  "slo": {{"ttft_p99_ms": {ttft}, "tpot_p99_ms": {tpot}, "goodput": {goodput},
+                           "short": {{"total": 24, "goodput": {goodput}}}}}
+                }}"#
+            ))
+            .unwrap()
+        };
+        let a = snap_slo(8.0, 2.0, 1.0);
+        assert!(diff_values(&a, &a, DEFAULT_TOL).passed());
+        // p99 growth beyond tolerance fails
+        let r = diff_values(&a, &snap_slo(9.5, 2.0, 1.0), DEFAULT_TOL);
+        assert!(!r.passed());
+        assert!(r.regressions[0].contains("ttft_p99_ms"));
+        let r = diff_values(&a, &snap_slo(8.0, 2.5, 1.0), DEFAULT_TOL);
+        assert!(!r.passed());
+        assert!(r.regressions[0].contains("tpot_p99_ms"));
+        // within tolerance passes; improvement is a note
+        assert!(diff_values(&a, &snap_slo(8.5, 2.1, 1.0), DEFAULT_TOL).passed());
+        let r = diff_values(&a, &snap_slo(4.0, 2.0, 1.0), DEFAULT_TOL);
+        assert!(r.passed());
+        assert!(r.notes.iter().any(|n| n.contains("improved")));
+        // any goodput drop fails
+        let r = diff_values(&a, &snap_slo(8.0, 2.0, 0.95), DEFAULT_TOL);
+        assert!(!r.passed());
+        assert!(r.regressions[0].contains("goodput"));
+        // losing the section (or a p99 gauge) once baselined fails
+        let bare = json::parse(
+            r#"{"components": {"decode step (batch 8)": {"mean_ms": 1.0}}}"#,
+        )
+        .unwrap();
+        let r = diff_values(&a, &bare, DEFAULT_TOL);
+        assert!(!r.passed());
+        assert!(r.regressions.iter().any(|x| x.contains("slo section missing")));
+        let partial = json::parse(
+            r#"{"components": {"decode step (batch 8)": {"mean_ms": 1.0}},
+                "slo": {"ttft_p99_ms": 8.0, "goodput": 1.0}}"#,
+        )
+        .unwrap();
+        let r = diff_values(&a, &partial, DEFAULT_TOL);
+        assert!(!r.passed());
+        assert!(r.regressions.iter().any(|x| x.contains("tpot_p99_ms")));
+        // no baseline section → new one is only a note
+        let r = diff_values(&bare, &a, DEFAULT_TOL);
+        assert!(r.passed(), "{:?}", r.regressions);
+        assert!(r.notes.iter().any(|n| n.contains("slo section appeared")));
     }
 
     #[test]

@@ -128,3 +128,279 @@ pub fn pct_delta(base: f64, ours: f64) -> String {
     }
     format!("{:+.1}%", (ours - base) / base * 100.0)
 }
+
+// ---------------------------------------------------------------------------
+// Trace-replay workload generator
+// ---------------------------------------------------------------------------
+//
+// Seeded, fully deterministic serving workload for the SLO benches and
+// the chunked-prefill tests: Poisson arrivals with periodic bursts,
+// Zipf-distributed prompt popularity over a small prompt pool (repeated
+// ranks submit *identical* prompts, so the prefix cache sees real
+// reuse), and long-tail generation lengths split into "short" / "long"
+// request classes. Arrival times are measured in *scheduler steps*, not
+// wall clock, so a replay is step-indexed and reproducible.
+
+use crate::coordinator::metrics::SloMetrics;
+use crate::coordinator::request::{Request, RequestId, Response};
+use crate::coordinator::scheduler::Scheduler;
+use crate::util::prng::{hash64, SplitMix64};
+
+/// Knobs of the synthetic serving trace. All sampling flows from
+/// `seed`; two configs with equal fields generate identical traces.
+#[derive(Clone, Debug)]
+pub struct TraceCfg {
+    pub seed: u64,
+    pub n_requests: usize,
+    /// Mean arrivals per scheduler step of the base Poisson process
+    /// (exponential inter-arrival times, `-ln(1-u)/rate`).
+    pub arrival_rate: f64,
+    /// Every `burst_every`-th Poisson arrival drags `burst_size` extra
+    /// requests in at the same step (0 disables bursts).
+    pub burst_every: usize,
+    pub burst_size: usize,
+    /// Distinct prompts in the popularity pool; requests pick a rank
+    /// with probability ∝ 1/(rank+1)^`zipf_s`, and equal ranks submit
+    /// byte-identical prompts (prefix-cache hits).
+    pub prompt_pool: usize,
+    pub zipf_s: f64,
+    /// Token-id range for prompt content (must not exceed the serving
+    /// session's vocab).
+    pub vocab: usize,
+    /// Inclusive prompt-length range; keep `max <= seq_len` (and
+    /// `m_max + max < cache_cap` if chunked prefill should engage).
+    pub prompt_len: (usize, usize),
+    /// Generation length of the "short" class.
+    pub gen_short: usize,
+    /// Base generation length of the "long" class; an exponential tail
+    /// on top makes the distribution long-tailed.
+    pub gen_long: usize,
+    /// Fraction of requests in the "long" class.
+    pub long_frac: f64,
+    /// Deadline applied to "short"-class requests (the tight-SLO
+    /// tenants); `None` leaves every request deadline-free.
+    pub deadline_ms: Option<u64>,
+}
+
+impl Default for TraceCfg {
+    fn default() -> Self {
+        Self {
+            seed: 0xC0FFEE,
+            n_requests: 32,
+            arrival_rate: 1.5,
+            burst_every: 8,
+            burst_size: 3,
+            prompt_pool: 6,
+            zipf_s: 1.1,
+            vocab: 64,
+            prompt_len: (3, 10),
+            gen_short: 4,
+            gen_long: 12,
+            long_frac: 0.25,
+            deadline_ms: None,
+        }
+    }
+}
+
+/// One request of the generated trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Scheduler step at which the request arrives.
+    pub step: usize,
+    /// Popularity rank of the prompt (0 = most popular). Equal ranks
+    /// carry identical `prompt` vectors.
+    pub rank: usize,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    /// Request class: "short" | "long".
+    pub class: &'static str,
+    pub deadline_ms: Option<u64>,
+}
+
+/// Generate the deterministic trace for `cfg` (sorted by arrival step;
+/// generation order breaks ties, preserving submission order).
+pub fn generate_trace(cfg: &TraceCfg) -> Vec<TraceEvent> {
+    assert!(cfg.prompt_pool > 0, "empty prompt pool");
+    assert!(cfg.prompt_len.0 >= 1 && cfg.prompt_len.0 <= cfg.prompt_len.1);
+    let mut rng = SplitMix64::new(cfg.seed);
+    // Zipf CDF over ranks 0..prompt_pool
+    let weights: Vec<f64> =
+        (0..cfg.prompt_pool).map(|r| 1.0 / ((r + 1) as f64).powf(cfg.zipf_s)).collect();
+    let total: f64 = weights.iter().sum();
+    // Per-rank prompt content: forked off the seed by rank, so the same
+    // rank yields the same prompt independent of draw order.
+    let prompts: Vec<Vec<i32>> = (0..cfg.prompt_pool)
+        .map(|rank| {
+            let mut pr = SplitMix64::new(cfg.seed ^ hash64(rank as u64 + 1));
+            let span = (cfg.prompt_len.1 - cfg.prompt_len.0 + 1) as u64;
+            let len = cfg.prompt_len.0 + pr.next_below(span) as usize;
+            (0..len).map(|_| pr.next_below(cfg.vocab as u64) as i32).collect()
+        })
+        .collect();
+
+    let mut events = Vec::with_capacity(cfg.n_requests);
+    let mut t = 0.0f64;
+    let mut arrivals = 0usize;
+    let mut burst_left = 0usize;
+    for _ in 0..cfg.n_requests {
+        if burst_left > 0 {
+            // burst member: same arrival step as the arrival that
+            // triggered the burst
+            burst_left -= 1;
+        } else {
+            t += -(1.0 - rng.next_f64()).ln() / cfg.arrival_rate.max(1e-9);
+            arrivals += 1;
+            if cfg.burst_every > 0 && arrivals % cfg.burst_every == 0 {
+                burst_left = cfg.burst_size;
+            }
+        }
+        // Zipf rank draw
+        let u = rng.next_f64() * total;
+        let mut acc = 0.0;
+        let mut rank = cfg.prompt_pool - 1;
+        for (r, w) in weights.iter().enumerate() {
+            acc += w;
+            if u < acc {
+                rank = r;
+                break;
+            }
+        }
+        let long = rng.next_f64() < cfg.long_frac;
+        let (class, max_new) = if long {
+            // exponential tail on top of the base long length
+            let tail = -(1.0 - rng.next_f64()).ln() * cfg.gen_long as f64 * 0.5;
+            ("long", (cfg.gen_long + tail as usize).max(1))
+        } else {
+            ("short", cfg.gen_short.max(1))
+        };
+        events.push(TraceEvent {
+            step: t as usize,
+            rank,
+            prompt: prompts[rank].clone(),
+            max_new,
+            class,
+            deadline_ms: if class == "short" { cfg.deadline_ms } else { None },
+        });
+    }
+    events
+}
+
+/// Step-indexed deterministic replay: submit each event at its arrival
+/// step, run the scheduler to drain, and (optionally) feed every
+/// response into per-class SLO metrics. Requests are submitted with
+/// `stop_token: None` so generation lengths follow the trace exactly.
+/// Returns responses in finish order.
+pub fn replay_trace(
+    sched: &mut Scheduler,
+    events: &[TraceEvent],
+    mut slo: Option<&mut SloMetrics>,
+) -> crate::Result<Vec<Response>> {
+    let mut class_of: std::collections::HashMap<RequestId, &'static str> =
+        std::collections::HashMap::new();
+    let mut out = Vec::with_capacity(events.len());
+    let mut collect = |sched: &mut Scheduler,
+                       slo: &mut Option<&mut SloMetrics>,
+                       class_of: &std::collections::HashMap<RequestId, &'static str>,
+                       out: &mut Vec<Response>| {
+        for r in sched.take_finished() {
+            if let Some(slo) = slo.as_deref_mut() {
+                slo.record(class_of.get(&r.id).copied().unwrap_or("?"), &r);
+            }
+            out.push(r);
+        }
+    };
+    let last_step = events.iter().map(|e| e.step).max().unwrap_or(0);
+    let mut next_id: RequestId = 1;
+    let mut iter = events.iter().peekable();
+    for step in 0..=last_step {
+        while let Some(e) = iter.peek() {
+            if e.step > step {
+                break;
+            }
+            let e = iter.next().unwrap();
+            let mut req = Request::new(next_id, e.prompt.clone(), e.max_new);
+            req.stop_token = None;
+            req.deadline =
+                e.deadline_ms.map(std::time::Duration::from_millis);
+            class_of.insert(next_id, e.class);
+            next_id += 1;
+            sched.submit_request(req);
+        }
+        sched.step()?;
+        collect(sched, &mut slo, &class_of, &mut out);
+    }
+    // drain: everything has arrived; bounded so a scheduling bug fails
+    // the replay instead of hanging it
+    let mut guard = 0usize;
+    while sched.has_work() {
+        guard += 1;
+        anyhow::ensure!(
+            guard <= 1000 + 100 * events.len(),
+            "trace replay did not converge"
+        );
+        sched.step()?;
+        collect(sched, &mut slo, &class_of, &mut out);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_per_seed() {
+        let cfg = TraceCfg::default();
+        let a = generate_trace(&cfg);
+        let b = generate_trace(&cfg);
+        assert_eq!(a, b, "same seed → same trace");
+        let c = generate_trace(&TraceCfg { seed: 7, ..cfg });
+        assert_ne!(a, c, "different seed → different trace");
+        assert_eq!(a.len(), cfg.n_requests);
+        // arrival steps are monotonically non-decreasing
+        assert!(a.windows(2).all(|w| w[0].step <= w[1].step));
+    }
+
+    #[test]
+    fn trace_zipf_reuses_prompts_and_classes_split() {
+        let cfg = TraceCfg { n_requests: 64, deadline_ms: Some(200), ..Default::default() };
+        let t = generate_trace(&cfg);
+        // rank 0 is the Zipf head: it must repeat, with identical prompts
+        let head: Vec<_> = t.iter().filter(|e| e.rank == 0).collect();
+        assert!(head.len() >= 2, "Zipf head never repeated");
+        assert!(head.windows(2).all(|w| w[0].prompt == w[1].prompt));
+        // both classes show up; short carries the deadline, long doesn't
+        assert!(t.iter().any(|e| e.class == "short"));
+        assert!(t.iter().any(|e| e.class == "long"));
+        assert!(t
+            .iter()
+            .all(|e| (e.class == "short") == (e.deadline_ms == Some(200))));
+        // long-tail: some long request generates more than the base
+        assert!(t.iter().filter(|e| e.class == "long").all(|e| e.max_new >= cfg.gen_long));
+        // prompt lengths respect the configured range
+        assert!(t
+            .iter()
+            .all(|e| e.prompt.len() >= cfg.prompt_len.0
+                && e.prompt.len() <= cfg.prompt_len.1));
+    }
+
+    #[test]
+    fn trace_bursts_cluster_arrivals() {
+        let cfg = TraceCfg {
+            n_requests: 40,
+            arrival_rate: 0.2, // sparse base process...
+            burst_every: 4,
+            burst_size: 4, // ...with dense bursts
+            ..Default::default()
+        };
+        let t = generate_trace(&cfg);
+        let mut per_step = std::collections::HashMap::new();
+        for e in &t {
+            *per_step.entry(e.step).or_insert(0usize) += 1;
+        }
+        assert!(
+            per_step.values().any(|&n| n >= 5),
+            "no burst step found: {per_step:?}"
+        );
+    }
+}

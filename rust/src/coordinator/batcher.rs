@@ -75,10 +75,11 @@ impl Running {
     /// Finalize with the real finish reason (from `should_stop`, or
     /// `Cancelled` on shutdown).
     pub fn into_response(self, finished: FinishReason) -> Response {
+        // No first token → `None`, not 0.0: a preempted-then-expired
+        // sequence that never decoded must not report an instant TTFT.
         let ttft = self
             .first_token_at
-            .map(|t| t.duration_since(self.request.submitted).as_secs_f64())
-            .unwrap_or(0.0);
+            .map(|t| t.duration_since(self.request.submitted).as_secs_f64());
         Response {
             id: self.request.id,
             tokens: self.generated,
@@ -331,6 +332,10 @@ mod tests {
         let resp = r.into_response(FinishReason::StopToken);
         assert_eq!(resp.tokens, vec![1, 2, 3]);
         assert_eq!(resp.finished, FinishReason::StopToken);
-        assert!(resp.ttft >= 0.0);
+        assert!(resp.ttft.expect("served request has a ttft") >= 0.0);
+
+        let never_served = Running::new(Request::new(2, vec![0], 8), 1);
+        let resp = never_served.into_response(FinishReason::Cancelled);
+        assert!(resp.ttft.is_none(), "no token → no ttft");
     }
 }

@@ -499,6 +499,73 @@ impl Engine {
         Ok(first)
     }
 
+    /// Whether this engine can serve resumable chunked prefill: the
+    /// default device-resident mode only (the host-round-trip,
+    /// native-paged, and sharded paths keep their single-shot prefills),
+    /// and the `prefill_chunk_<mode>` graph must resolve.
+    pub fn supports_chunked_prefill(&self) -> bool {
+        !self.host_roundtrip
+            && !self.paged_attention
+            && self.shards.is_none()
+            && self
+                .session
+                .registry
+                .has(&format!("prefill_chunk_{}", self.suffix))
+    }
+
+    /// Extend slot `slot`'s prompt prefix — `done` tokens already
+    /// written by earlier chunks — by `chunk`. Returns
+    /// `Some(first_token)` when this chunk completes the allocated
+    /// prompt (the chunk's last-row logits seed decode, host-argmaxed),
+    /// `None` while the prompt is still partial. The slot's prompt
+    /// blocks are published into the prefix cache only once the final
+    /// chunk lands — a partial prefix must never serve cache hits.
+    pub fn prefill_chunk(&mut self, slot: usize, chunk: &[i32], done: usize)
+                         -> crate::Result<Option<i32>> {
+        anyhow::ensure!(!chunk.is_empty(), "prefill_chunk: empty chunk");
+        anyhow::ensure!(
+            self.supports_chunked_prefill(),
+            "prefill_chunk: unsupported in this execution mode"
+        );
+        anyhow::ensure!(
+            self.kv.request_of(slot).is_some(),
+            "prefill_chunk: slot {slot} holds no allocated sequence"
+        );
+        let total = self.kv.tok_len(slot);
+        anyhow::ensure!(
+            done + chunk.len() <= total,
+            "prefill_chunk: {done}+{} tokens exceed the allocated \
+             prompt length {total}",
+            chunk.len()
+        );
+        let mut outs = self.session.run_values_split(
+            &format!("prefill_chunk_{}", self.suffix),
+            vec![
+                self.cache_arg(),
+                self.session.prefix_kv_value()?,
+                self.session.prefix_len_value()?,
+                Value::scalar_i32(slot as i32),
+                Value::Host(HostValue::I32(IntTensor::vec(chunk.to_vec()))),
+                Value::scalar_i32(done as i32),
+                self.session.ranges_value()?,
+                Value::Device(self.act_levels_buf.clone()),
+                Value::Device(self.kv_levels_buf.clone()),
+                self.session.inv_smooth_value()?,
+            ],
+            // same output signature as the non-sampled prefill graph
+            self.split_prefill.as_ref(),
+        )?;
+        anyhow::ensure!(outs.len() == 2, "prefill_chunk: expected 2 outputs");
+        let logits = outs.host_f32(1)?;
+        self.store_cache(outs.take(0)?, Mirror::Prefill(slot))?;
+        if done + chunk.len() == total {
+            self.kv.publish_prefix(slot);
+            Ok(Some(argmax(&logits.data) as i32))
+        } else {
+            Ok(None)
+        }
+    }
+
     /// Native-path prefill: the `prefill_paged_*` graph writes this
     /// sequence's prompt KV straight into its pool blocks via the block
     /// table (no contiguous view).
@@ -531,8 +598,13 @@ impl Engine {
 
     /// Tensor-parallel prefill: every shard runs its
     /// `prefill_<mode>_s<k>of<n>` slice of the forward lock-step through
-    /// the group's collective bus, prompts padded to `seq_len` so the
-    /// written cache matches the unsharded logits graph bit-for-bit.
+    /// the group's collective bus. Prompts pad to the smallest covering
+    /// `prefill_buckets` entry like the unsharded plan (the shard
+    /// programs are length-polymorphic); with bucketing off they pad to
+    /// the full `seq_len`, which is what makes the written cache match
+    /// the unsharded full-length graph bit-for-bit in the whole-cache
+    /// parity tests. Pad rows past `tok_len` are never attended and are
+    /// masked out of quant stats, so logits are bucket-invariant.
     /// Logits are replicated (post-gather math is identical on every
     /// shard); the per-shard caches are mirrored into the pool's shard
     /// of each block's `Hkv` axis.
@@ -559,8 +631,18 @@ impl Engine {
             (self.scheme.act_levels(), self.scheme.kv_levels());
         let suffix = self.suffix.clone();
         let tok_len = tokens.len() as i32;
+        let m = &self.session.manifest;
+        let bucket = if self.prefill_bucketing {
+            m.prefill_buckets
+                .iter()
+                .copied()
+                .find(|&b| b >= tokens.len())
+                .unwrap_or(m.seq_len)
+        } else {
+            m.seq_len
+        };
         let mut padded = tokens.to_vec();
-        padded.resize(self.session.manifest.seq_len, PAD);
+        padded.resize(bucket, PAD);
 
         let sh = self.shards.as_ref().expect("sharded path");
         let caches = &sh.caches;

@@ -195,7 +195,12 @@ impl Metrics {
         }
         self.completed += 1;
         self.tokens_out += r.tokens.len();
-        self.ttft.push(r.ttft);
+        // `ttft` is None for requests that never produced a token
+        // (e.g. cancelled after admission but before their first
+        // decode); folding those in as 0.0 would fake instant TTFTs.
+        if let Some(t) = r.ttft {
+            self.ttft.push(t);
+        }
         self.tpot.extend_from_slice(&r.tpot);
     }
 
@@ -491,6 +496,121 @@ impl MetricsSummary {
     }
 }
 
+/// Per-request-class SLO accounting: TTFT/TPOT latency distributions
+/// keyed by a caller-assigned class label ("short" / "long" in the
+/// trace-replay workload), plus goodput-under-deadline. A request is
+/// *good* when it finished without error — the scheduler converts a
+/// lapsed deadline into `FinishReason::Error("deadline")`, so "finished
+/// clean" and "met its deadline" coincide. Responses whose `ttft` is
+/// `None` (never produced a token) count toward totals and badput but
+/// contribute no latency samples.
+///
+/// This is a side-car to [`Metrics`], not part of it: classes exist
+/// only where a workload generator assigns them (bench::scenario), and
+/// the serving path proper stays class-blind.
+#[derive(Debug, Default)]
+pub struct SloMetrics {
+    classes: std::collections::BTreeMap<String, SloClass>,
+}
+
+#[derive(Debug, Default)]
+struct SloClass {
+    ttft: Vec<f64>,
+    tpot: Vec<f64>,
+    total: usize,
+    good: usize,
+    good_tokens: usize,
+}
+
+/// Percentile summary for one request class.
+#[derive(Clone, Debug)]
+pub struct SloClassSummary {
+    pub class: String,
+    pub total: usize,
+    /// Requests that finished clean (within deadline, no error).
+    pub good: usize,
+    /// Tokens produced by good requests.
+    pub good_tokens: usize,
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    pub tpot_p50: f64,
+    pub tpot_p99: f64,
+}
+
+impl SloClassSummary {
+    /// Goodput under deadline: the fraction of this class's requests
+    /// that completed cleanly. 0.0 when no requests were recorded.
+    pub fn goodput(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.good as f64 / self.total as f64
+        }
+    }
+}
+
+impl SloMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a finished response under `class`.
+    pub fn record(&mut self, class: &str, r: &Response) {
+        let c = self.classes.entry(class.to_string()).or_default();
+        c.total += 1;
+        if !r.finished.is_error() {
+            c.good += 1;
+            c.good_tokens += r.tokens.len();
+        }
+        if let Some(t) = r.ttft {
+            c.ttft.push(t);
+        }
+        c.tpot.extend_from_slice(&r.tpot);
+    }
+
+    /// Summaries in class-name order (BTreeMap keeps this deterministic
+    /// for trace-replay determinism tests and bench JSON output).
+    pub fn summary(&self) -> Vec<SloClassSummary> {
+        self.classes
+            .iter()
+            .map(|(class, c)| SloClassSummary {
+                class: class.clone(),
+                total: c.total,
+                good: c.good,
+                good_tokens: c.good_tokens,
+                ttft_p50: stats::percentile(&c.ttft, 50.0),
+                ttft_p99: stats::percentile(&c.ttft, 99.0),
+                tpot_p50: stats::percentile(&c.tpot, 50.0),
+                tpot_p99: stats::percentile(&c.tpot, 99.0),
+            })
+            .collect()
+    }
+
+    /// Worst (largest) TTFT p99 across all classes — the single number
+    /// the bench gate watches.
+    pub fn ttft_p99(&self) -> f64 {
+        self.summary().iter().map(|s| s.ttft_p99).fold(0.0, f64::max)
+    }
+
+    /// Worst (largest) TPOT p99 across all classes.
+    pub fn tpot_p99(&self) -> f64 {
+        self.summary().iter().map(|s| s.tpot_p99).fold(0.0, f64::max)
+    }
+
+    /// Overall goodput across every class.
+    pub fn goodput(&self) -> f64 {
+        let (good, total) = self
+            .classes
+            .values()
+            .fold((0usize, 0usize), |(g, t), c| (g + c.good, t + c.total));
+        if total == 0 {
+            0.0
+        } else {
+            good as f64 / total as f64
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -521,7 +641,7 @@ mod tests {
         m.record_finished(&Response {
             id: 1,
             tokens: vec![1, 2, 3],
-            ttft: 0.12,
+            ttft: Some(0.12),
             tpot: vec![0.05, 0.06],
             finished: FinishReason::MaxTokens,
             echo_text: false,
@@ -529,7 +649,7 @@ mod tests {
         m.record_finished(&Response {
             id: 2,
             tokens: vec![],
-            ttft: 0.0,
+            ttft: None,
             tpot: vec![],
             finished: FinishReason::Error("prompt does not fit".into()),
             echo_text: false,
@@ -643,6 +763,51 @@ mod tests {
         let line = m.decode_histogram_line();
         assert!(line.starts_with("<=0.5ms:1"));
         assert!(line.ends_with(">64ms:1"));
+    }
+
+    #[test]
+    fn slo_metrics_track_classes_and_goodput() {
+        let mut slo = SloMetrics::new();
+        let ok = |id, ttft: f64, tpot: Vec<f64>| Response {
+            id,
+            tokens: vec![1, 2],
+            ttft: Some(ttft),
+            tpot,
+            finished: FinishReason::MaxTokens,
+            echo_text: false,
+        };
+        slo.record("short", &ok(1, 0.010, vec![0.002, 0.003]));
+        slo.record("short", &ok(2, 0.030, vec![0.004]));
+        slo.record("long", &ok(3, 0.200, vec![0.005]));
+        // a deadline kill: errored, never produced a token
+        slo.record(
+            "long",
+            &Response {
+                id: 4,
+                tokens: vec![],
+                ttft: None,
+                tpot: vec![],
+                finished: FinishReason::Error("deadline".into()),
+                echo_text: false,
+            },
+        );
+        let s = slo.summary();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].class, "long", "BTreeMap order is deterministic");
+        assert_eq!(s[1].class, "short");
+        assert_eq!(s[0].total, 2);
+        assert_eq!(s[0].good, 1);
+        assert!((s[0].goodput() - 0.5).abs() < 1e-9);
+        assert_eq!(s[1].good, 2);
+        assert_eq!(s[1].good_tokens, 4);
+        assert!(s[1].ttft_p50 <= s[1].ttft_p99, "percentiles ordered");
+        assert!(s[1].tpot_p50 <= s[1].tpot_p99);
+        // the None-ttft response contributed no latency sample
+        assert!((s[0].ttft_p99 - 0.200).abs() < 1e-9);
+        assert!((slo.ttft_p99() - 0.200).abs() < 1e-9);
+        assert!(slo.tpot_p99() > 0.0);
+        assert!((slo.goodput() - 0.75).abs() < 1e-9);
+        assert_eq!(SloMetrics::new().goodput(), 0.0);
     }
 
     #[test]

@@ -54,8 +54,11 @@ impl Request {
 pub struct Response {
     pub id: RequestId,
     pub tokens: Vec<i32>,
-    /// Time to first token, seconds.
-    pub ttft: f64,
+    /// Time to first token, seconds. `None` for requests that never
+    /// produced a token (rejections, pre-admission cancels, deadline
+    /// expiry while queued) — rendered as `null` on the wire so an
+    /// unserved request is distinguishable from an instant first token.
+    pub ttft: Option<f64>,
     /// Per-output-token latencies (decode steps), seconds.
     pub tpot: Vec<f64>,
     pub finished: FinishReason,
@@ -80,7 +83,7 @@ impl Response {
         Self {
             id,
             tokens: Vec::new(),
-            ttft: 0.0,
+            ttft: None,
             tpot: Vec::new(),
             finished,
             echo_text,
@@ -163,5 +166,13 @@ mod tests {
         assert!(r.tokens.is_empty());
         assert!(r.echo_text);
         assert_eq!(r.finished, FinishReason::Error("too big".into()));
+        assert!(r.ttft.is_none(), "unserved request has no first token");
+    }
+
+    #[test]
+    fn cancelled_response_has_no_ttft() {
+        let r = Response::cancelled(3, false);
+        assert!(r.ttft.is_none());
+        assert!(r.tpot.is_empty());
     }
 }

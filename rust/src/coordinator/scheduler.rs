@@ -34,11 +34,33 @@
 //! preempted back to the resume queue (the bit-identical re-prefill
 //! path above), and a *persistent* fault first walks the degradation
 //! ladder down a rung: device-split → host-roundtrip → interpreter.
-//! Per-request deadlines are swept at the top of each step, and
+//! Per-request deadlines are swept at the top of each step *and again
+//! between the prefill phase and the decode batch* (a deadline that
+//! lapses during a long prefill must never cost a decode step), and
 //! `drain()` turns the loop into a graceful-shutdown mode that finishes
 //! accepted work while rejecting new submissions.
+//!
+//! Chunked prefill (`set_prefill_chunk`): with a per-step token budget
+//! set, a long prompt no longer stalls every co-batched decode behind
+//! one monolithic prefill. Admission allocates the lane as usual but
+//! parks the sequence on the `prefilling` queue; each step then spends
+//! at most `budget` prompt tokens across pending prefills — round-robin
+//! via `Engine::prefill_chunk`, which extends the slot's KV past the
+//! pinned cushion-prefix run — before the decode batch. The final
+//! chunk's logits seed decode exactly like a single-shot prefill, and
+//! the prompt's blocks are published to the prefix cache only then. In
+//! fp/static modes the chunked token stream is bit-identical to the
+//! unchunked one (masked attention keys carry exactly zero softmax
+//! mass); dynamic per-tensor modes see per-chunk activation batches —
+//! the same tolerance caveat as preemption-resume above. Chunking is
+//! engine-gated (`supports_chunked_prefill`): prompts on unsupported
+//! paths, prompts within one budget, and full-cap prompts (whose
+//! mid-prefill lane would trip the co-batched decode's `off < cap`
+//! bound) take the single-shot path unchanged. A downgrade drains the
+//! prefilling queue back to the batcher first, so no sequence straddles
+//! two execution modes mid-prompt.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use crate::data::PAD;
 
@@ -52,11 +74,26 @@ use super::request::{FinishReason, Request, RequestId, Response};
 const RETRY_ATTEMPTS: usize = 3;
 const RETRY_BACKOFF: std::time::Duration = std::time::Duration::from_millis(1);
 
+/// A sequence mid chunked-prefill: it owns a KV lane (`run.slot`) with
+/// `done` of `tokens` already written; it is in neither the batcher nor
+/// `running` until its final chunk lands. A fresh admission carries its
+/// prompt here; a preempted resume carries `prompt ++ generated` (and
+/// keeps its `donated` holds until the re-prefill completes).
+struct Prefilling {
+    run: Running,
+    tokens: Vec<i32>,
+    done: usize,
+}
+
 pub struct Scheduler {
     pub engine: Engine,
     pub batcher: Batcher,
     pub metrics: Metrics,
     running: HashMap<usize, Running>, // slot -> running request
+    /// Sequences mid chunked-prefill, oldest-admitted first.
+    prefilling: VecDeque<Prefilling>,
+    /// Per-step chunked-prefill token budget (`None` = single-shot).
+    prefill_chunk: Option<usize>,
     finished: Vec<Response>,
     /// (request, token) pairs in generation order since the last
     /// `take_token_events` — the streaming front end drains these to
@@ -84,6 +121,8 @@ impl Scheduler {
             batcher: Batcher::new(),
             metrics,
             running: HashMap::new(),
+            prefilling: VecDeque::new(),
+            prefill_chunk: None,
             finished: Vec::new(),
             token_events: Vec::new(),
             draining: false,
@@ -123,7 +162,37 @@ impl Scheduler {
     }
 
     pub fn has_work(&self) -> bool {
-        self.batcher.waiting() > 0 || !self.running.is_empty()
+        self.batcher.waiting() > 0
+            || !self.running.is_empty()
+            || !self.prefilling.is_empty()
+    }
+
+    /// Enable scheduler-budgeted chunked prefill: each step prefills at
+    /// most `budget` prompt tokens across pending chunked sequences
+    /// before the decode batch, so one long prompt cannot stall the
+    /// co-batched decodes for longer than the budget. `None` (or 0)
+    /// restores single-shot prefill.
+    pub fn set_prefill_chunk(&mut self, budget: Option<usize>) {
+        self.prefill_chunk = budget.filter(|&b| b > 0);
+    }
+
+    pub fn prefill_chunk(&self) -> Option<usize> {
+        self.prefill_chunk
+    }
+
+    /// Whether a prefill of `tokens_len` tokens should go through the
+    /// chunked path: a budget is set, the prompt is longer than one
+    /// budget (shorter ones cost no more than a chunk anyway and keep
+    /// their bucketed/sampled fast path), the engine's execution mode
+    /// supports it, and the prompt does not fill the KV space to the
+    /// brim — a mid-prefill lane reports its full prompt as `tok_len`,
+    /// so a full-cap prompt would trip the co-batched decode's
+    /// per-lane `off < cap` bound before its final chunk landed.
+    fn chunked_admissible(&self, tokens_len: usize) -> bool {
+        let Some(budget) = self.prefill_chunk else { return false };
+        tokens_len > budget
+            && self.engine.supports_chunked_prefill()
+            && self.engine.kv.m_max + tokens_len < self.engine.kv.cap
     }
 
     /// Why `req` can never be served, if so: checked before a KV lane is
@@ -209,6 +278,18 @@ impl Scheduler {
                         self.batcher.push_front(req);
                         break;
                     };
+                    if self.chunked_admissible(req.prompt.len()) {
+                        // lane and blocks are committed; the prompt is
+                        // prefilled by the budgeted chunk phase below
+                        let run = Running::new(req, slot);
+                        let tokens = run.request.prompt.clone();
+                        self.prefilling.push_back(Prefilling {
+                            run,
+                            tokens,
+                            done: 0,
+                        });
+                        continue;
+                    }
                     match self.admit_prefill(slot, Running::new(req, slot))? {
                         Some(n) => produced += n,
                         // fault-requeued: stop admitting this step so
@@ -240,6 +321,18 @@ impl Scheduler {
                         self.batcher.push_resume(run);
                         break;
                     };
+                    if self.chunked_admissible(tokens.len()) {
+                        let mut run = run;
+                        run.slot = slot;
+                        // `donated` holds stay tracked until the final
+                        // chunk lands (resume_prefill clears on success)
+                        self.prefilling.push_back(Prefilling {
+                            run,
+                            tokens,
+                            done: 0,
+                        });
+                        continue;
+                    }
                     match self.resume_prefill(slot, run, &tokens)? {
                         Some(n) => produced += n,
                         None => break,
@@ -247,6 +340,14 @@ impl Scheduler {
                 }
             }
         }
+
+        // 1b) budgeted chunked-prefill phase: extend pending prompts by
+        //     at most `prefill_chunk` tokens in total, round-robin
+        produced += self.run_prefill_chunks()?;
+
+        // 1c) deadline re-sweep: a deadline that lapsed during the
+        //     prefill phase must not cost a decode step
+        self.expire_deadlines();
 
         // 2) every running sequence must be able to cache the token this
         //    step feeds it; preempt the youngest when the pool is dry
@@ -303,6 +404,104 @@ impl Scheduler {
         }
         self.metrics.record_pool(self.engine.kv.pool_stats());
         Ok(produced)
+    }
+
+    /// Spend this step's chunked-prefill token budget across the
+    /// `prefilling` queue, round-robin: pop the oldest entry, prefill
+    /// up to the remaining budget of its pending tokens, and either
+    /// finish it (final chunk — its logits seed decode exactly like a
+    /// single-shot prefill) or park it at the back. Fault handling
+    /// mirrors `admit_prefill`/`resume_prefill`: the lane is freed and
+    /// the sequence requeued through the batcher, so the retry (under a
+    /// maybe-downgraded engine) re-decides chunk eligibility.
+    fn run_prefill_chunks(&mut self) -> crate::Result<usize> {
+        let Some(chunk_budget) = self.prefill_chunk else { return Ok(0) };
+        let mut produced = 0;
+        let mut budget = chunk_budget;
+        while budget > 0 {
+            let Some(mut p) = self.prefilling.pop_front() else { break };
+            let take = budget.min(p.tokens.len() - p.done);
+            let chunk: Vec<i32> = p.tokens[p.done..p.done + take].to_vec();
+            let (slot, done) = (p.run.slot, p.done);
+            let t0 = std::time::Instant::now();
+            match self
+                .with_retry("prefill chunk", |eng| eng.prefill_chunk(slot, &chunk, done))
+            {
+                Ok(Some(first)) => {
+                    self.metrics.record_prefill(t0.elapsed().as_secs_f64());
+                    budget -= take;
+                    // a resume's donated blocks were re-shared into the
+                    // new table at admission; ordinary cache entries now
+                    p.run.donated.clear();
+                    p.run.push_token(first);
+                    if p.run.request.stream {
+                        self.token_events.push((p.run.request.id, first));
+                    }
+                    produced += 1;
+                    self.maybe_finish(slot, p.run);
+                }
+                Ok(None) => {
+                    self.metrics.record_prefill(t0.elapsed().as_secs_f64());
+                    budget -= take;
+                    p.done += take;
+                    self.prefilling.push_back(p);
+                }
+                Err(e) => {
+                    // the partial prefix dies with the lane: no block is
+                    // fully written from this sequence's perspective, so
+                    // a plain free (no donation) is the only safe exit —
+                    // original resume `donated` holds stay tracked on
+                    // the run for the eventual cancel/deadline drop
+                    self.engine.kv.free(slot);
+                    if crate::runtime::faults::is_replica_down(&e) {
+                        self.requeue_chunked(p);
+                        return Err(e);
+                    }
+                    let retryable = match crate::runtime::faults::classify(&e) {
+                        Some((_, true)) => true,
+                        Some((_, false)) => self.downgrade(),
+                        None => false,
+                    };
+                    if retryable {
+                        log::warn!(
+                            "chunked prefill of request {} fault-injected; \
+                             requeued: {e:#}",
+                            p.run.request.id
+                        );
+                        self.requeue_chunked(p);
+                        return Ok(produced);
+                    }
+                    if p.run.generated.is_empty() {
+                        self.reject(
+                            p.run.request,
+                            format!("prefill failed: {e:#}"),
+                        );
+                    } else {
+                        self.engine.kv.drop_cached(&p.run.donated);
+                        let id = p.run.request.id;
+                        log::debug!("chunked resume of request {id} failed: {e:#}");
+                        let resp = p.run.into_response(FinishReason::Error(
+                            format!("resume failed: {e:#}"),
+                        ));
+                        self.metrics.record_finished(&resp);
+                        self.finished.push(resp);
+                    }
+                }
+            }
+        }
+        Ok(produced)
+    }
+
+    /// Send a mid-prefill sequence (lane already freed) back through the
+    /// batcher: a fresh admission requeues as a fresh request, a
+    /// preempted resume goes back to the resume queue with its donated
+    /// holds intact.
+    fn requeue_chunked(&mut self, p: Prefilling) {
+        if p.run.generated.is_empty() {
+            self.batcher.push_front(p.run.request);
+        } else {
+            self.batcher.push_resume(p.run);
+        }
     }
 
     /// Run `call` against the engine under the bounded-retry policy:
@@ -393,6 +592,14 @@ impl Scheduler {
         for slot in slots {
             self.preempt_or_finish(slot);
         }
+        // drain mid-prefill sequences back to the batcher too: their
+        // next attempt re-decides chunk eligibility under the new mode,
+        // so no sequence straddles two execution modes mid-prompt
+        let pending = std::mem::take(&mut self.prefilling);
+        for p in pending {
+            self.engine.kv.free(p.run.slot);
+            self.requeue_chunked(p);
+        }
         self.rung += 1;
         let mode = match self.rung {
             1 => {
@@ -463,6 +670,22 @@ impl Scheduler {
             let resp = run.into_response(FinishReason::Error("deadline".into()));
             self.metrics.record_finished(&resp);
             self.finished.push(resp);
+        }
+        // mid-chunked-prefill sequences hold a lane (and, for resumes,
+        // donated prefix-cache entries) without being queued or running
+        let pending = std::mem::take(&mut self.prefilling);
+        for p in pending {
+            if p.run.request.expired(now) {
+                self.engine.kv.free(p.run.slot);
+                self.engine.kv.drop_cached(&p.run.donated);
+                self.metrics.record_deadline_expired();
+                let resp =
+                    p.run.into_response(FinishReason::Error("deadline".into()));
+                self.metrics.record_finished(&resp);
+                self.finished.push(resp);
+            } else {
+                self.prefilling.push_back(p);
+            }
         }
     }
 
@@ -638,8 +861,14 @@ impl Scheduler {
     }
 
     /// The preemption victim: the youngest-submitted running sequence
-    /// that can be resumed later (its re-prefill must fit the prefill
-    /// window), excluding the oldest running sequence.
+    /// that can *usefully* be resumed later, excluding the oldest
+    /// running sequence. Useful means the re-prefill (`prompt ++
+    /// generated`) fits the prefill window with room to spare: a
+    /// sequence sitting exactly at `seq_len` would resume only to
+    /// re-prefill the entire window — the most expensive recompute the
+    /// engine can do — for tokens its very next decode step delivers
+    /// without any preemption, so it is left running (the off-by-one
+    /// was `<= seq_len`).
     fn pick_victim(&self) -> Option<usize> {
         if self.running.len() < 2 {
             return None;
@@ -654,7 +883,7 @@ impl Scheduler {
             .iter()
             .filter(|&(&s, r)| {
                 s != oldest
-                    && r.request.prompt.len() + r.generated.len() <= seq_len
+                    && r.request.prompt.len() + r.generated.len() + 1 <= seq_len
             })
             .max_by_key(|(_, r)| (r.request.submitted, r.request.id))
             .map(|(&s, _)| s)
@@ -724,6 +953,20 @@ impl Scheduler {
                 self.finished.push(resp);
             }
         }
+        // mid-chunked-prefill sequences: the partial prefix dies with
+        // this pool, so they restart as fresh requests (or ordinary
+        // resumes) on the destination replica
+        let pending = std::mem::take(&mut self.prefilling);
+        for mut p in pending {
+            self.engine.kv.free(p.run.slot);
+            if p.run.generated.is_empty() {
+                fresh.push(p.run.request);
+            } else {
+                self.engine.kv.drop_cached(&p.run.donated);
+                p.run.donated.clear();
+                resumes.push(p.run);
+            }
+        }
         while let Some(next) = self.batcher.pop_next() {
             match next {
                 Admit::New(req) => fresh.push(req),
@@ -776,6 +1019,16 @@ impl Scheduler {
             self.finished.push(run.into_response(FinishReason::Cancelled));
             return true;
         }
+        if let Some(pos) =
+            self.prefilling.iter().position(|p| p.run.request.id == id)
+        {
+            let p = self.prefilling.remove(pos).unwrap();
+            self.engine.kv.free(p.run.slot);
+            self.engine.kv.drop_cached(&p.run.donated);
+            self.metrics.record_cancelled();
+            self.finished.push(p.run.into_response(FinishReason::Cancelled));
+            return true;
+        }
         let slot = self
             .running
             .iter()
@@ -801,6 +1054,13 @@ impl Scheduler {
             self.engine.kv.free(slot);
             self.metrics.record_cancelled();
             self.finished.push(run.into_response(FinishReason::Cancelled));
+        }
+        let pending = std::mem::take(&mut self.prefilling);
+        for p in pending {
+            self.engine.kv.free(p.run.slot);
+            self.engine.kv.drop_cached(&p.run.donated);
+            self.metrics.record_cancelled();
+            self.finished.push(p.run.into_response(FinishReason::Cancelled));
         }
         while let Some(next) = self.batcher.pop_next() {
             self.metrics.record_cancelled();

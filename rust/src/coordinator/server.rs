@@ -25,7 +25,9 @@
 //! where "finish" is one of "max_tokens" | "stop_token" | "length"
 //! (KV capacity reached) | "cancelled" |
 //! "error"; on "error" the line also carries "error": "<why>" and "text"
-//! appears only when "echo_text" was set.
+//! appears only when "echo_text" was set. "ttft_ms" is null for a
+//! request that never produced a token (rejection, pre-decode cancel,
+//! deadline expiry) — never a fake 0.0.
 //!
 //! Error line (unparseable request — no id was ever assigned):
 //!   {"error": "json: ..."}
@@ -514,7 +516,16 @@ pub fn render_response(r: &Response, tokenizer: Option<&Tokenizer>) -> String {
         ("id", json::num(r.id as f64)),
         ("tokens", json::arr(r.tokens.iter().map(|&t| json::num(t as f64)))),
         ("finish", json::s(r.finished.as_str())),
-        ("ttft_ms", json::num(r.ttft * 1e3)),
+        // Null, not 0.0, when the request never produced a token: a
+        // rejection with "ttft_ms": 0.0 is indistinguishable from an
+        // instant first token to any client-side SLO accounting.
+        (
+            "ttft_ms",
+            match r.ttft {
+                Some(t) => json::num(t * 1e3),
+                None => Value::Null,
+            },
+        ),
         (
             "tpot_ms",
             json::num(crate::util::stats::mean(&r.tpot) * 1e3),
@@ -551,7 +562,7 @@ mod tests {
         let resp = Response {
             id: r.id,
             tokens: vec![1, 2],
-            ttft: 0.011,
+            ttft: Some(0.011),
             tpot: vec![0.004],
             finished: FinishReason::MaxTokens,
             echo_text: false,
@@ -563,6 +574,25 @@ mod tests {
         assert_eq!(v.req_str("finish").unwrap(), "max_tokens");
         assert!(v.get("error").is_none());
         assert!(v.get("text").is_none());
+        let ttft = v.get("ttft_ms").unwrap().as_f64().unwrap();
+        assert!((ttft - 11.0).abs() < 1e-9, "served ttft_ms is numeric ms");
+    }
+
+    #[test]
+    fn unserved_response_renders_null_ttft() {
+        // a rejection never produced a token: ttft_ms must be null on
+        // the wire, not a fake 0.0 "instant first token"
+        let resp = Response::rejection(11, false, "queue full".into());
+        let line = render_response(&resp, None);
+        let v = json::parse(&line).unwrap();
+        assert_eq!(v.req_str("finish").unwrap(), "error");
+        assert!(
+            matches!(v.get("ttft_ms"), Some(Value::Null)),
+            "expected null ttft_ms in {line}"
+        );
+        // ...and the raw wire text says null, not 0
+        assert!(line.contains("\"ttft_ms\": null") || line.contains("\"ttft_ms\":null"),
+            "wire form: {line}");
     }
 
     #[test]
@@ -628,7 +658,7 @@ mod tests {
         let resp = Response {
             id: 3,
             tokens: vec![4, 5, crate::data::DOT],
-            ttft: 0.0,
+            ttft: None,
             tpot: vec![],
             finished: FinishReason::Error("prompt does not fit".into()),
             echo_text: true,

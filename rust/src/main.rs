@@ -69,6 +69,10 @@ fn run() -> anyhow::Result<()> {
     .opt("replicas", "1", "serve: engine replicas per mode behind the \
          router (health-checked; a broken replica's work fails over to \
          its siblings)")
+    .opt("prefill-chunk", "0", "serve: per-step prefill token budget; \
+         long prompts prefill in chunks interleaved with decode so no \
+         decode step stalls behind a full prompt (0 = single-shot \
+         prefill; engine-gated, bit-identical in fp/static modes)")
     .opt("tol", "0.10", "bench-diff: mean-latency regression tolerance \
          (fraction; transfer growth always fails)")
     .opt("faults", "", "fault-injection plan, e.g. \
@@ -239,7 +243,9 @@ fn run() -> anyhow::Result<()> {
                 if engine.n_shards() > 1 {
                     log::info!("tensor-parallel: {} shards", engine.n_shards());
                 }
-                server.serve(Scheduler::new(engine), stop)
+                let mut sched = Scheduler::new(engine);
+                sched.set_prefill_chunk(prefill_chunk(&args)?);
+                server.serve(sched, stop)
             } else {
                 // one process, several quantization variants and/or
                 // several replicas per variant: requests pick a mode
@@ -266,7 +272,9 @@ fn run() -> anyhow::Result<()> {
                         if scheme.gran.needs_calibration() {
                             calibrate::calibrate_into(&mut s, scheme.act_levels(), 8)?;
                         }
-                        router.add_engine(mode, Scheduler::new(Engine::new(s, scheme)?));
+                        let mut sched = Scheduler::new(Engine::new(s, scheme)?);
+                        sched.set_prefill_chunk(prefill_chunk(&args)?);
+                        router.add_engine(mode, sched);
                     }
                 }
                 log::info!(
@@ -339,6 +347,14 @@ fn apply_shards(
         s.manifest.n_shards = n;
     }
     Ok(())
+}
+
+/// `--prefill-chunk N` for serve: 0 = single-shot prefill (off).
+fn prefill_chunk(
+    args: &cushioncache::util::cli::Args,
+) -> anyhow::Result<Option<usize>> {
+    let n = args.get_usize("prefill-chunk")?;
+    Ok((n > 0).then_some(n))
 }
 
 fn scheme_of(args: &cushioncache::util::cli::Args) -> anyhow::Result<Scheme> {

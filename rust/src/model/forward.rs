@@ -1407,6 +1407,117 @@ pub fn run_prefill(spec: &ModelSpec, params: &Params, mode: Mode,
     Ok((cache, Tensor::new(vec![v], last)))
 }
 
+/// serving.prefill_chunk: extend slot `slot`'s paged KV prefix — `done`
+/// prompt tokens already written by earlier chunks — by the next
+/// `tokens.len()` prompt tokens. Positions continue at
+/// `cushion_len + done`, the new KV lands at cache offset `m + done`,
+/// and attention runs over the slot's full cache row with
+/// `causal_offset = done` (the decode pattern): keys past the causal
+/// horizon are masked, their softmax mass underflows to exactly 0.0,
+/// and the output accumulation skips zero-probability keys, so chunked
+/// prefill is **bit-identical** to single-shot `run_prefill` in fp and
+/// static (pts) modes. Dynamic per-tensor modes (ptd/ptk) compute
+/// activation stats over the chunk shape instead of the full prompt and
+/// may diverge within quantization tolerance — the same caveat as
+/// preemption-resume re-prefill (coordinator::scheduler).
+/// cache: [L, 2, B, Hkv, CAP, dh]. Returns (cache', last_logits [V]).
+#[allow(clippy::too_many_arguments)]
+pub fn run_prefill_chunk(spec: &ModelSpec, params: &Params, mode: Mode,
+                         cache: &Tensor, _prefix_kv: &Tensor,
+                         cushion_len: i32, slot: usize, tokens: &[i32],
+                         done: i32, ranges: &Tensor, levels: f32,
+                         kv_levels: f32, inv_smooth: &Tensor)
+                         -> crate::Result<(Tensor, Tensor)> {
+    let (d, dh, hq, hkv, m) = (spec.d_model, spec.d_head, spec.n_heads,
+                               spec.n_kv_heads, spec.m_max);
+    let s = tokens.len();
+    anyhow::ensure!(cache.shape.len() == 6, "prefill_chunk: bad cache rank");
+    anyhow::ensure!(done >= 0, "prefill_chunk: negative done offset");
+    let done_u = done as usize;
+    let (bsz, cap) = (cache.shape[2], cache.shape[4]);
+    anyhow::ensure!(slot < bsz, "prefill_chunk: slot out of range");
+    anyhow::ensure!(s >= 1, "prefill_chunk: empty chunk");
+    anyhow::ensure!(m + done_u + s <= cap,
+                    "prefill_chunk: tokens exceed cache capacity");
+    let mut cache = cache.clone();
+
+    let mut qctx = QuantCtx::serving(mode, levels, ranges, inv_smooth);
+    qctx.valid = Some(vec![true; s]); // chunks arrive unpadded
+
+    let embed = params.get("embed")?;
+    let mut x = vec![0.0f32; s * d];
+    for (r, &t) in tokens.iter().enumerate() {
+        anyhow::ensure!(t >= 0 && (t as usize) < spec.vocab,
+                        "prefill_chunk: token {t} outside vocab");
+        x[r * d..(r + 1) * d].copy_from_slice(embed.row(t as usize));
+    }
+    let positions: Vec<i32> =
+        (0..s as i32).map(|i| cushion_len + done + i).collect();
+    if spec.pos == PosKind::Learned {
+        let pos_emb = params.get("pos_emb")?;
+        for r in 0..s {
+            let p = positions[r] as usize;
+            anyhow::ensure!(p < pos_emb.shape[0],
+                            "prefill_chunk: position overflow");
+            for i in 0..d {
+                x[r * d + i] += pos_emb.data[p * d + i];
+            }
+        }
+    }
+
+    for l in 0..spec.n_layers {
+        let p = layer_p(spec, params, l)?;
+        let h = match spec.norm {
+            NormKind::RmsPre => rmsnorm(&x, s, d, &p.ln1_g.data),
+            NormKind::LnPost => x.clone(),
+        };
+        let h = qctx.site(h, 1, s, d, l, 0);
+        let mut q = to_heads(&matmul(&h, s, d, p.wq), 1, s, hq, dh);
+        let mut k = to_heads(&matmul(&h, s, d, p.wk), 1, s, hkv, dh);
+        let mut v = to_heads(&matmul(&h, s, d, p.wv), 1, s, hkv, dh);
+        if spec.pos == PosKind::Rope {
+            rope_rotate(&mut q, hq, s, dh, &positions, spec.rope_theta, false);
+            rope_rotate(&mut k, hkv, s, dh, &positions, spec.rope_theta, false);
+        }
+        kv_maybe_quant(&mut k, &mut v, hkv, s, dh, kv_levels);
+        // write this chunk's token KV at the slot's `done` offset
+        for (which, t) in [(0usize, &k), (1usize, &v)] {
+            for kh in 0..hkv {
+                for si in 0..s {
+                    let src = (kh * s + si) * dh;
+                    let dst = ((((l * 2 + which) * bsz + slot) * hkv + kh)
+                        * cap + m + done_u + si) * dh;
+                    cache.data[dst..dst + dh]
+                        .copy_from_slice(&t[src..src + dh]);
+                }
+            }
+        }
+        // attend over the slot's full cache row (cushion prefix at
+        // [0, m), earlier chunks at [m, m+done), this chunk just
+        // written) — exactly how run_decode reads the cache.
+        let kbase = (((l * 2) * bsz + slot) * hkv) * cap * dh;
+        let vbase = (((l * 2 + 1) * bsz + slot) * hkv) * cap * dh;
+        let kf = cache.data[kbase..kbase + hkv * cap * dh].to_vec();
+        let vf = cache.data[vbase..vbase + hkv * cap * dh].to_vec();
+        let (o, _) = attention(spec, l, &q, &kf, &vf, s, cap, cushion_len,
+                               done, None, false);
+        let o = from_heads(&o, 1, s, hq, dh);
+        let o = qctx.site(o, 1, s, hq * dh, l, 1);
+        let attn_out = matmul(&o, s, hq * dh, p.wo);
+        x = block_tail(spec, &mut qctx, &p, x, &attn_out, 1, s, l)?;
+    }
+
+    let hfin = match spec.norm {
+        NormKind::RmsPre => rmsnorm(&x, s, d, &params.get("lnf_g")?.data),
+        NormKind::LnPost => layernorm(&x, s, d, &params.get("lnf_g")?.data,
+                                      &params.get("lnf_b")?.data),
+    };
+    let logits = matmul(&hfin, s, d, params.get("lm_head")?);
+    let v = spec.vocab;
+    let last = logits[(s - 1) * v..s * v].to_vec();
+    Ok((cache, Tensor::new(vec![v], last)))
+}
+
 /// The shared residual/MLP tail of a serving block (serving._block_tail).
 fn block_tail(spec: &ModelSpec, qctx: &mut QuantCtx, p: &LayerP,
               mut x: Vec<f32>, attn_out: &[f32], b: usize, s: usize,

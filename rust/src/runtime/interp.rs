@@ -30,6 +30,11 @@ pub enum Op {
     PrefixKv,
     TuneStep,
     Prefill { mode: Mode, sampled: bool },
+    /// Resumable chunked prefill (`prefill_chunk_<mode>`): extend a
+    /// slot's paged KV prefix — `done` tokens already written — by the
+    /// next chunk of prompt tokens. No sampled variant: only the final
+    /// chunk's logits seed decode, and the engine host-argmaxes those.
+    PrefillChunk(Mode),
     Decode { mode: Mode, sampled: bool },
     /// Block-table prefill over the pool tensor (`prefill_paged_<mode>`,
     /// no compiled counterpart — the hermetic true-paging path).
@@ -93,6 +98,10 @@ impl InterpProgram {
             Op::Prefill { mode: Mode::parse(strip_bucket(rest))?, sampled: true }
         } else if let Some(mode) = base.strip_prefix("prefill_paged_") {
             Op::PrefillPaged(Mode::parse(mode)?)
+        } else if let Some(mode) = base.strip_prefix("prefill_chunk_") {
+            // must precede the bare `prefill_` branch, which would
+            // otherwise eat the name and choke on Mode::parse("chunk_..")
+            Op::PrefillChunk(Mode::parse(mode)?)
         } else if let Some(mode) = base.strip_prefix("prefill_") {
             Op::Prefill { mode: Mode::parse(mode)?, sampled: false }
         } else if let Some(rest) = base.strip_prefix("decode_sampled_") {
@@ -249,6 +258,26 @@ impl InterpProgram {
                 } else {
                     Ok(vec![HostValue::F32(cache), HostValue::F32(last)])
                 }
+            }
+            Op::PrefillChunk(mode) => {
+                x.arity(10)?;
+                let tokens = x.i32(4, "tokens")?;
+                let (cache, last) = forward::run_prefill_chunk(
+                    spec,
+                    &params,
+                    mode,
+                    x.f32(0, "cache")?,
+                    x.f32(1, "prefix_kv")?,
+                    x.scalar_i32(2, "cushion_len")?,
+                    x.scalar_i32(3, "slot")? as usize,
+                    &tokens.data,
+                    x.scalar_i32(5, "done")?,
+                    x.f32(6, "ranges")?,
+                    x.scalar_f32(7, "levels")?,
+                    x.scalar_f32(8, "kv_levels")?,
+                    x.f32(9, "inv_smooth")?,
+                )?;
+                Ok(vec![HostValue::F32(cache), HostValue::F32(last)])
             }
             Op::PrefillPaged(mode) => {
                 x.arity(10)?;
@@ -562,6 +591,8 @@ mod tests {
             ),
             ("prefill_paged_fp", Op::PrefillPaged(Mode::Fp)),
             ("decode_paged_pts", Op::DecodePaged(Mode::Pts)),
+            ("prefill_chunk_fp", Op::PrefillChunk(Mode::Fp)),
+            ("prefill_chunk_pts", Op::PrefillChunk(Mode::Pts)),
         ] {
             let p = InterpProgram::parse(s.clone(), name).unwrap();
             assert_eq!(p.op, op, "{name}");
@@ -612,7 +643,8 @@ mod tests {
         let s = spec();
         for name in [
             "fwd_int3", "warmup", "prefill_", "decode_sampled_zzz",
-            "decode_paged_zzz", "prefill_paged_",
+            "decode_paged_zzz", "prefill_paged_", "prefill_chunk_",
+            "prefill_chunk_zzz",
         ] {
             assert!(
                 InterpProgram::parse(s.clone(), name).is_err(),

@@ -615,6 +615,104 @@ mod replica_chaos_props {
 }
 
 #[cfg(test)]
+mod slo_props {
+    //! SLO-accounting invariants (coordinator::metrics::SloMetrics):
+    //! per-class percentiles are ordered (p50 <= p99 for both TTFT and
+    //! TPOT), goodput lives in [0, 1] and is monotone in the deadline —
+    //! tightening it (turning more finishes into deadline errors) can
+    //! never raise goodput — and the worst-across-classes p99 gauges
+    //! never drop when a strictly slower sample lands.
+
+    use super::*;
+    use crate::coordinator::metrics::SloMetrics;
+    use crate::coordinator::{FinishReason, Response};
+
+    fn response(id: u64, ttft: f64, tpot: Vec<f64>, good: bool) -> Response {
+        Response {
+            id,
+            tokens: vec![0; tpot.len() + 1],
+            ttft: Some(ttft),
+            tpot,
+            finished: if good {
+                FinishReason::MaxTokens
+            } else {
+                FinishReason::Error("deadline".into())
+            },
+            echo_text: false,
+        }
+    }
+
+    /// Record `lat` as alternating short/long responses, good iff the
+    /// TTFT met `deadline`.
+    fn fill(slo: &mut SloMetrics, lat: &[f64], deadline: f64) {
+        for (i, &t) in lat.iter().enumerate() {
+            let class = if i % 2 == 0 { "short" } else { "long" };
+            let r = response(1 + i as u64, t, vec![t / 2.0, t], t <= deadline);
+            slo.record(class, &r);
+        }
+    }
+
+    #[test]
+    fn slo_percentiles_ordered_and_goodput_monotone_in_deadline() {
+        check(
+            "slo p50 <= p99, goodput monotone in deadline",
+            200,
+            pair(
+                vec_f64(1..24, 0.0, 0.050),
+                pair(f64_in(0.0, 0.050), f64_in(0.0, 0.050)),
+            ),
+            |(lat, (d1, d2))| {
+                let (tight, loose) = if d1 <= d2 { (*d1, *d2) } else { (*d2, *d1) };
+                let goodput_at = |deadline: f64| -> f64 {
+                    let mut slo = SloMetrics::new();
+                    fill(&mut slo, lat, deadline);
+                    for s in slo.summary() {
+                        if s.ttft_p50 > s.ttft_p99 + 1e-12
+                            || s.tpot_p50 > s.tpot_p99 + 1e-12
+                        {
+                            return f64::NAN; // ordering violated
+                        }
+                    }
+                    slo.goodput()
+                };
+                let g_tight = goodput_at(tight);
+                let g_loose = goodput_at(loose);
+                (0.0..=1.0).contains(&g_tight)
+                    && (0.0..=1.0).contains(&g_loose)
+                    && g_tight <= g_loose + 1e-12
+            },
+        );
+    }
+
+    #[test]
+    fn slo_worst_gauges_never_drop_when_a_slower_sample_lands() {
+        // percentile() interpolates linearly, so only a sample at or
+        // above the current maximum is guaranteed not to pull p99 down —
+        // which is exactly the shape a straggler request has
+        check(
+            "p99 gauges monotone under a dominating sample",
+            200,
+            vec_f64(1..24, 0.0, 0.050),
+            |lat| {
+                let gauges = |extra: Option<(f64, f64)>| -> (f64, f64) {
+                    let mut slo = SloMetrics::new();
+                    fill(&mut slo, lat, f64::INFINITY);
+                    if let Some((ttft, tpot)) = extra {
+                        let r = response(99, ttft, vec![tpot], true);
+                        slo.record("short", &r);
+                    }
+                    (slo.ttft_p99(), slo.tpot_p99())
+                };
+                let (t0, p0) = gauges(None);
+                let worst = lat.iter().cloned().fold(0.0, f64::max);
+                let (t1, p1) = gauges(Some((worst + 0.010, worst + 0.010)));
+                t1 + 1e-12 >= t0 && p1 + 1e-12 >= p0
+            },
+        );
+    }
+}
+
+#[cfg(test)]
 mod tests {
     use super::*;
 

@@ -2,7 +2,8 @@
 //! reference interpreter backend with **no artifact directory present**
 //! and no XLA toolchain — the `testkit::tiny` model is assembled fully
 //! in memory. Covers the scheduler (admission into every free slot,
-//! fault isolation, cancel), the TCP streaming protocol, the
+//! fault isolation, cancel, chunked-prefill bit-identity, deterministic
+//! trace replay), the TCP streaming protocol, the
 //! device-vs-host sampling parity at engine level, the greedy
 //! CushionCache search driver, and the steady-state transfer budget —
 //! the same invariants the artifact-gated suites assert under PJRT.
@@ -10,6 +11,8 @@
 use std::io::{BufRead, BufReader, Write};
 use std::rc::Rc;
 
+use cushioncache::bench::scenario::{generate_trace, replay_trace, TraceCfg};
+use cushioncache::coordinator::metrics::SloMetrics;
 use cushioncache::coordinator::{
     Engine, FinishReason, Health, Request, Router, Scheduler,
 };
@@ -169,6 +172,88 @@ fn scheduler_fills_slots_and_cancels_hermetically() {
     assert!(resp
         .iter()
         .any(|r| r.id == 200 && r.finished == FinishReason::Cancelled));
+}
+
+#[test]
+fn chunked_prefill_serves_bit_identically_to_unchunked() {
+    // the scheduler-budgeted chunked path must reproduce single-shot
+    // prefill exactly: every chunk attends the full cache row like a
+    // decode step, so fp and static-quant outputs match bit-for-bit
+    let pts = Scheme::w8a8(Granularity::PerTensorStatic, Algorithm::Naive);
+    for (scheme, calibrated) in [(Scheme::fp(), false), (pts, true)] {
+        let run = |chunk: Option<usize>| -> Vec<(u64, Vec<i32>, FinishReason)> {
+            let mut s = tiny_session();
+            if calibrated {
+                calibrate::calibrate_into(&mut s, scheme.act_levels(), 2)
+                    .unwrap();
+            }
+            let mut sched = Scheduler::new(Engine::new(s, scheme).unwrap());
+            if chunk.is_some() {
+                assert!(
+                    sched.engine.supports_chunked_prefill(),
+                    "default device-resident mode must support chunking"
+                );
+            }
+            sched.set_prefill_chunk(chunk);
+            for (i, len) in [5usize, 9, 12].into_iter().enumerate() {
+                let p = prompt_from(&sched.engine.session, i, len);
+                let mut r = Request::new(1 + i as u64, p, 3);
+                r.stop_token = None;
+                sched.submit_request(r);
+            }
+            let mut resp = sched.run_to_completion().unwrap();
+            resp.sort_by_key(|r| r.id);
+            resp.into_iter()
+                .map(|r| (r.id, r.tokens, r.finished))
+                .collect()
+        };
+        let want = run(None);
+        assert!(
+            want.iter()
+                .all(|(_, t, f)| *f == FinishReason::MaxTokens && t.len() == 3),
+            "unchunked baseline must finish clean: {want:?}"
+        );
+        for chunk in [3usize, 4, 7] {
+            assert_eq!(run(Some(chunk)), want, "chunk budget {chunk} diverges");
+        }
+    }
+}
+
+#[test]
+fn fixed_seed_trace_replay_is_deterministic_hermetically() {
+    // the bench::scenario workload replayed twice on fresh engines must
+    // produce the same response schedule token-for-token — the property
+    // scripts/test_hermetic.sh sweeps under multiple PROP_SEEDs
+    let cfg = TraceCfg {
+        seed: 0xD15EA5E,
+        n_requests: 12,
+        ..TraceCfg::default()
+    };
+    let run = |cfg: &TraceCfg| -> (Vec<(u64, Vec<i32>, FinishReason)>, f64) {
+        let mut sched =
+            Scheduler::new(Engine::new(tiny_session(), Scheme::fp()).unwrap());
+        sched.set_prefill_chunk(Some(3));
+        let events = generate_trace(cfg);
+        let mut slo = SloMetrics::new();
+        let mut resp =
+            replay_trace(&mut sched, &events, Some(&mut slo)).unwrap();
+        resp.sort_by_key(|r| r.id);
+        (
+            resp.into_iter()
+                .map(|r| (r.id, r.tokens, r.finished))
+                .collect(),
+            slo.goodput(),
+        )
+    };
+    let (a, goodput) = run(&cfg);
+    let (b, _) = run(&cfg);
+    assert_eq!(a.len(), 12, "every traced request must come back");
+    assert!(a.iter().all(|(_, _, f)| !f.is_error()), "{a:?}");
+    assert!(
+        (goodput - 1.0).abs() < 1e-9,
+        "no deadlines armed: every finish is good (goodput {goodput})"
+    );
+    assert_eq!(a, b, "same seed must replay to the same responses");
 }
 
 #[test]

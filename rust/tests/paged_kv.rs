@@ -15,7 +15,10 @@
 //!   (no rejection, no starvation);
 //! * the admission off-by-one is fixed: a prompt of exactly
 //!   `cap - m_max` tokens is served its prefill token and finished with
-//!   `Length` instead of tripping capacity asserts downstream.
+//!   `Length` instead of tripping capacity asserts downstream;
+//! * the preemption victim filter skips a sequence already sitting at
+//!   the `seq_len` boundary — preempting it would trade one decode step
+//!   for a full-window re-prefill.
 
 use cushioncache::coordinator::{Engine, FinishReason, Request, Scheduler};
 use cushioncache::data::PAD;
@@ -491,4 +494,55 @@ fn chaos_cancel_after_failover_releases_the_destination_pool() {
         );
     }
     assert_eq!(r.pending_assignments(), 0);
+}
+
+#[test]
+fn boundary_sequence_is_not_picked_as_preemption_victim() {
+    // regression for the victim-filter off-by-one: a running sequence
+    // with prompt + generated == seq_len would resume only to
+    // re-prefill the *entire* window — the most expensive recompute the
+    // engine can do — for tokens its very next decode step delivers
+    // without any preemption. Geometry: pool of 9 blocks (1 pinned
+    // cushion + 8), three lanes. A and C (prompt 6, 2 blocks each)
+    // decode until their next KV write needs a third block; that same
+    // step admits B (prompt 15, 4 blocks), which fills the pool and —
+    // after its prefill token — sits exactly at the boundary. A's
+    // growth then runs the pool dry: the old `<= seq_len` filter chose
+    // B (the youngest), parking it for a 16-token re-prefill; the fixed
+    // filter skips it, preempts C, and B finishes with `Length` in its
+    // admission step.
+    let cfg = TinyCfg { serve_batch: 3, kv_pool_blocks: 9, ..TinyCfg::default() };
+    let s = session_with_cushion(&cfg);
+    let seq_len = s.manifest.seq_len;
+    let mut sched = Scheduler::new(Engine::new(s, Scheme::fp()).unwrap());
+    let submit = |sched: &mut Scheduler, id: u64, prompt: Vec<i32>, max_new: usize| {
+        let mut r = Request::new(id, prompt, max_new);
+        r.stop_token = None;
+        sched.submit_request(r);
+    };
+    // distinct prompts: prefix-cache sharing must not distort the math
+    submit(&mut sched, 1, vec![1, 2, 3, 4, 5, 6], 8); // A (oldest)
+    submit(&mut sched, 2, vec![7, 8, 9, 10, 11, 12], 8); // C
+    sched.step().unwrap(); // prefill both + first decode
+    sched.step().unwrap(); // second decode: lanes now hold 8 tokens
+    assert_eq!(sched.running_count(), 2);
+    assert_eq!(sched.metrics.preempted, 0, "no pool pressure yet");
+
+    let b_prompt: Vec<i32> = (20..35).collect();
+    assert_eq!(b_prompt.len() + 1, seq_len, "B lands exactly on the boundary");
+    submit(&mut sched, 3, b_prompt, 4);
+    sched.step().unwrap(); // B admitted (pool full), A's growth preempts
+    let finished = sched.take_finished();
+    let b = finished.iter().find(|r| r.id == 3).expect(
+        "boundary sequence must not be the preemption victim — it \
+         finishes with Length in its admission step",
+    );
+    assert_eq!(b.finished, FinishReason::Length);
+    assert_eq!(b.tokens.len(), 2, "prefill token + the one decode step");
+    assert_eq!(sched.metrics.preempted, 1, "pool pressure fell on C instead");
+
+    // the preempted survivor resumes; everyone else completes normally
+    let rest = sched.run_to_completion().unwrap();
+    assert_eq!(rest.len(), 2);
+    assert!(rest.iter().all(|r| r.finished == FinishReason::MaxTokens));
 }

@@ -4,6 +4,9 @@
 //! exactly. fp mode is **bit-identical** across prefill + decode for
 //! shards in {1, 2, 4} on every attention/position axis the tiny model
 //! exposes; quantized modes stay within the interp-parity tolerance.
+//! Bucketed prefill is covered at a bucket boundary: the sharded path
+//! must pick the same smallest covering `prefill_buckets` entry as the
+//! unsharded plan instead of padding to the full `seq_len`.
 //! Also asserted here: the 64 KiB/step host-transfer budget holds with
 //! `--shards > 1` (collective traffic is metered separately), and a
 //! killed shard surfaces exactly one typed engine-level error that the
@@ -106,6 +109,58 @@ fn fp_sharded_serving_is_bit_identical_to_unsharded() {
                     );
                 }
             }
+        }
+    }
+}
+
+/// The bucketed prefill cache written by one engine: bucketing stays
+/// ON, the prompt sits exactly at the smallest bucket boundary, and the
+/// unsharded baseline routes through the sampled `prefill_sampled_*_b8`
+/// graph (the only unsharded plan that buckets below `seq_len`).
+fn bucketed_prefill(cfg: &TinyCfg, n_shards: usize) -> (i32, Vec<f32>) {
+    let mut cfg = cfg.clone();
+    cfg.n_shards = n_shards;
+    let s = cfg.session().unwrap();
+    let prompt: Vec<i32> = s.corpus.split("heldout").unwrap().seq(1)[..8].to_vec();
+    let mut e = Engine::new(s, Scheme::fp()).unwrap();
+    e.set_prefill_bucketing(true);
+    if n_shards == 1 {
+        e.set_device_sampling(true);
+        assert_eq!(
+            e.sampled_prefill_buckets().first().copied(),
+            Some(prompt.len()),
+            "tiny geometry: the first prefill bucket must sit exactly at \
+             the prompt length"
+        );
+    }
+    let slot = e.kv.alloc(1, prompt.len()).unwrap();
+    let first = e.prefill(slot, &prompt).unwrap();
+    (first, e.cache_host().unwrap().data)
+}
+
+/// Regression: sharded prefill used to ignore `prefill_buckets` and pad
+/// every prompt to the full `seq_len`, writing pad-row KV garbage past
+/// the prompt. With bucketing on and a prompt exactly at a bucket
+/// boundary, the sharded cache must match the unsharded bucketed cache
+/// bit-for-bit — including the untouched (still-zero) tail rows a
+/// full-length pad would have clobbered.
+#[test]
+fn bucketed_sharded_prefill_matches_unsharded_at_bucket_boundary() {
+    let _g = serial();
+    for base in [cfg_mha(), cfg_gqa()] {
+        let (want_first, want_cache) = bucketed_prefill(&base, 1);
+        for n in [2usize, 4] {
+            let (first, cache) = bucketed_prefill(&base, n);
+            let tag = format!(
+                "{} heads/{} kv, shards={n}",
+                base.n_heads, base.n_kv_heads
+            );
+            assert_eq!(first, want_first, "first token diverges: {tag}");
+            assert_eq!(
+                cache, want_cache,
+                "bucketed sharded prefill must not write past the \
+                 covering bucket: {tag}"
+            );
         }
     }
 }

@@ -32,6 +32,10 @@
 #      derived from the per-case seed) — end-to-end recovery, including
 #      the replica-kill chaos tests and the id-conservation property,
 #      must hold bit-identically across seeds, not just the default one
+#   6. the chunked-prefill gate under the same three PROP_SEEDs:
+#      chunked-vs-unchunked bit-identity, fixed-seed trace-replay
+#      determinism, and the SLO percentile/goodput-monotonicity
+#      properties (testkit::prop::slo_props)
 #
 # CUSHION_ARTIFACTS points at an empty scratch dir so a developer's
 # local `artifacts/` cannot leak into the hermetic run.
@@ -97,6 +101,28 @@ if [ $status -eq 0 ]; then
 fi
 
 if [ $status -eq 0 ]; then
-    echo "[hermetic] OK — full suite (incl. paged KV pool, preemption, and fault-injection chaos) passed with no artifacts and no XLA"
+    # chunked-prefill gate: bit-identity vs single-shot prefill, the
+    # fixed-seed trace-replay determinism check, and the SLO metric
+    # properties, swept under the same three property seeds
+    echo "[hermetic] chunked prefill + SLO scheduling across 3 seeds"
+    for seed in 1 2 3; do
+        echo "[hermetic]   PROP_SEED=$seed chunked prefill / trace replay / slo props"
+        PROP_SEED=$seed cargo test -q --no-default-features --features ref \
+            --test hermetic_serve chunked_prefill_serves_bit_identically
+        status=$?
+        [ $status -ne 0 ] && break
+        PROP_SEED=$seed cargo test -q --no-default-features --features ref \
+            --test hermetic_serve fixed_seed_trace_replay
+        status=$?
+        [ $status -ne 0 ] && break
+        PROP_SEED=$seed cargo test -q --no-default-features --features ref \
+            --lib slo_props
+        status=$?
+        [ $status -ne 0 ] && break
+    done
+fi
+
+if [ $status -eq 0 ]; then
+    echo "[hermetic] OK — full suite (incl. paged KV pool, preemption, chunked prefill, and fault-injection chaos) passed with no artifacts and no XLA"
 fi
 exit $status
