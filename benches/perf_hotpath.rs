@@ -24,7 +24,11 @@
 //! throughput. A tensor-parallel scenario decodes on a 2-shard
 //! reference group, asserting the host budget is shard-invariant and
 //! recording all-gather/all-reduce traffic per step
-//! (`collective_per_iter`, hard-gated by bench-diff). Emits
+//! (`collective_per_iter`, hard-gated by bench-diff). An observability
+//! scenario runs the same tiny serve batch untraced and with the trace
+//! ring enabled (default act-sampling rate in both arms) and records
+//! `tracing_overhead_frac` in the `observability` extras section —
+//! bench-diff holds it to an absolute <= 5% ceiling. Emits
 //! `BENCH_perf_hotpath.json` at the repo root so the perf trajectory is
 //! tracked across PRs — gate regressions with `cushiond bench-diff` /
 //! scripts/bench_diff.sh.
@@ -607,6 +611,44 @@ fn main() -> anyhow::Result<()> {
         slo_classes.len()
     );
 
+    // ---- observability: tracing overhead at the default sampling rate ----
+    // the same hermetic tiny serve workload run untraced, then with the
+    // trace ring enabled (act sampling stays at the scheduler default in
+    // both runs, so the delta isolates the tracer): the overhead
+    // fraction feeds the "observability" extras section, hard-gated
+    // <= 5% by `cushiond bench-diff`.
+    let obs_iters = 5usize;
+    let mut obs_sched = Scheduler::new(Engine::new(
+        cushioncache::testkit::tiny::TinyCfg::default().session()?,
+        Scheme::fp(),
+    )?);
+    let obs_prompt: Vec<i32> =
+        obs_sched.engine.session.corpus.split("heldout")?.seq(0)[..5].to_vec();
+    let mut obs_run = |sched: &mut Scheduler| {
+        for _ in 0..6 {
+            sched.submit(obs_prompt.clone(), 6);
+        }
+        sched.run_to_completion().unwrap();
+    };
+    let obs_untraced = time_n(1, obs_iters, || obs_run(&mut obs_sched));
+    cushioncache::runtime::trace::enable(0);
+    let obs_traced = time_n(1, obs_iters, || obs_run(&mut obs_sched));
+    let obs_records = cushioncache::runtime::trace::records().len();
+    cushioncache::runtime::trace::disable();
+    row!("serve batch untraced (6 reqs, tiny)", &obs_untraced);
+    row!("serve batch traced (6 reqs, tiny, ring on)", &obs_traced);
+    let obs_un = summarize(&obs_untraced);
+    let obs_tr = summarize(&obs_traced);
+    let tracing_overhead_frac =
+        ((obs_tr.mean - obs_un.mean) / obs_un.mean.max(1e-9)).max(0.0);
+    println!(
+        "[perf] observability: tracing overhead {:.2}% ({obs_records} \
+         records; untraced {:.2} ms, traced {:.2} ms per batch)",
+        tracing_overhead_frac * 100.0,
+        obs_un.mean * 1e3,
+        obs_tr.mean * 1e3
+    );
+
     table.emit("perf_hotpath");
     print!("{}", xfer_table.render());
 
@@ -706,6 +748,16 @@ fn main() -> anyhow::Result<()> {
     }
     slo_json.push('}');
     extras.push(("slo".to_string(), slo_json));
+    extras.push((
+        "observability".to_string(),
+        format!(
+            "{{\"tracing_overhead_frac\": {:.4}, \"untraced_mean_ms\": {:.3}, \
+              \"traced_mean_ms\": {:.3}, \"trace_records\": {obs_records}}}",
+            tracing_overhead_frac,
+            obs_un.mean * 1e3,
+            obs_tr.mean * 1e3,
+        ),
+    ));
     emit_bench_json("perf_hotpath", &components, &extras);
     Ok(())
 }

@@ -14,7 +14,11 @@
 //!   from the trace-replay scenario) growing past the latency
 //!   tolerance, or `goodput` dropping at all. Once a baseline carries
 //!   the section, losing it (or one of its p99 gauges) is itself a
-//!   regression — the SLO gate must not go vacuously green.
+//!   regression — the SLO gate must not go vacuously green, and
+//! * the `observability` section's `tracing_overhead_frac` — the
+//!   enabled-tracer cost of the decode hot path as a fraction of the
+//!   untraced step — exceeding a hard 5% ceiling, baseline or not.
+//!   Losing the section once baselined is a regression, same as SLO.
 //!
 //! Consumed by `cushiond bench-diff <base.json> <new.json>` and
 //! `scripts/bench_diff.sh`, the documented pre-merge check.
@@ -28,6 +32,10 @@ pub const KEY_COMPONENT: &str = "decode step (batch 8)";
 /// Absolute slack (KB / count) for transfer gauges: absorbs rounding in
 /// the emitted 0.1-precision values, nothing more.
 const XFER_EPS: f64 = 0.05;
+/// Hard ceiling on the enabled-tracer decode overhead fraction: an
+/// absolute budget, not a relative one — a baseline that already pays
+/// 8% does not grandfather the regression in.
+pub const TRACING_OVERHEAD_CEIL: f64 = 0.05;
 
 /// The outcome of one base-vs-new comparison.
 #[derive(Clone, Debug, Default)]
@@ -170,6 +178,46 @@ pub fn diff_values(base: &Value, new: &Value, tol: f64) -> DiffReport {
         (None, Some(_)) => r
             .notes
             .push("slo section appeared (no baseline to compare)".into()),
+        (None, None) => {}
+    }
+
+    // observability gauges: tracing overhead on the decode hot path is
+    // an absolute budget — the ceiling applies to the new snapshot
+    // whether or not a baseline exists. Losing the section (or the
+    // gauge) once baselined fails, same as the SLO gate.
+    match (base.get("observability"), new.get("observability")) {
+        (b, Some(n)) => {
+            match n.get("tracing_overhead_frac").and_then(Value::as_f64) {
+                Some(f) if f > TRACING_OVERHEAD_CEIL => {
+                    r.regressions.push(format!(
+                        "tracing overhead {:.1}% exceeds the {:.0}% ceiling",
+                        f * 100.0,
+                        TRACING_OVERHEAD_CEIL * 100.0
+                    ));
+                }
+                Some(_) => {}
+                None => {
+                    if b.map_or(false, |b| {
+                        b.get("tracing_overhead_frac").is_some()
+                    }) {
+                        r.regressions.push(
+                            "observability gauge 'tracing_overhead_frac' \
+                             missing from the new snapshot"
+                                .into(),
+                        );
+                    }
+                }
+            }
+            if b.is_none() {
+                r.notes.push(
+                    "observability section appeared (no baseline to compare)"
+                        .into(),
+                );
+            }
+        }
+        (Some(_), None) => r.regressions.push(
+            "observability section missing from the new snapshot".into(),
+        ),
         (None, None) => {}
     }
     r
@@ -315,6 +363,59 @@ mod tests {
         let r = diff_values(&bare, &a, DEFAULT_TOL);
         assert!(r.passed(), "{:?}", r.regressions);
         assert!(r.notes.iter().any(|n| n.contains("slo section appeared")));
+    }
+
+    #[test]
+    fn observability_overhead_is_gated() {
+        let snap_obs = |frac: f64| -> Value {
+            json::parse(&format!(
+                r#"{{
+                  "components": {{"decode step (batch 8)": {{"mean_ms": 1.0}}}},
+                  "observability": {{"tracing_overhead_frac": {frac},
+                                     "traced_mean_ms": 1.02,
+                                     "untraced_mean_ms": 1.0}}
+                }}"#
+            ))
+            .unwrap()
+        };
+        let a = snap_obs(0.02);
+        assert!(diff_values(&a, &a, DEFAULT_TOL).passed());
+        // the ceiling is absolute: even a worse baseline doesn't excuse it
+        let r = diff_values(&snap_obs(0.08), &snap_obs(0.06), DEFAULT_TOL);
+        assert!(!r.passed());
+        assert!(r.regressions[0].contains("tracing overhead"));
+        let r = diff_values(&a, &snap_obs(0.051), DEFAULT_TOL);
+        assert!(!r.passed());
+        // losing the section once baselined fails
+        let bare = json::parse(
+            r#"{"components": {"decode step (batch 8)": {"mean_ms": 1.0}}}"#,
+        )
+        .unwrap();
+        let r = diff_values(&a, &bare, DEFAULT_TOL);
+        assert!(!r.passed());
+        assert!(r
+            .regressions
+            .iter()
+            .any(|x| x.contains("observability section missing")));
+        // losing just the gauge fails too
+        let partial = json::parse(
+            r#"{"components": {"decode step (batch 8)": {"mean_ms": 1.0}},
+                "observability": {"traced_mean_ms": 1.0}}"#,
+        )
+        .unwrap();
+        let r = diff_values(&a, &partial, DEFAULT_TOL);
+        assert!(!r.passed());
+        assert!(r
+            .regressions
+            .iter()
+            .any(|x| x.contains("tracing_overhead_frac")));
+        // a brand-new section is only a note
+        let r = diff_values(&bare, &a, DEFAULT_TOL);
+        assert!(r.passed(), "{:?}", r.regressions);
+        assert!(r
+            .notes
+            .iter()
+            .any(|n| n.contains("observability section appeared")));
     }
 
     #[test]

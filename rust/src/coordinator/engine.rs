@@ -285,6 +285,10 @@ impl Engine {
     pub fn reset_cache(&mut self) {
         let m = &self.session.manifest;
         let cushion_len = self.session.cushion().map(|c| c.len).unwrap_or(0);
+        crate::runtime::trace::instant("reset_cache", "engine", None, &[
+            ("cushion_len", cushion_len.to_string()),
+            ("blocks", self.pool_blocks.map_or("auto".into(), |b| b.to_string())),
+        ]);
         self.kv = PagedKv::for_manifest(
             m,
             self.session.cushion().map(|c| &c.kv),

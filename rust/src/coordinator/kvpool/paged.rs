@@ -305,6 +305,16 @@ impl PagedKv {
             }
             return None;
         }
+        let prefix_hits = hashes
+            .iter()
+            .zip(&shared)
+            .filter(|(h, &s)| h.is_some() && s)
+            .count();
+        crate::runtime::trace::instant("kv_alloc", "kvpool", Some(request), &[
+            ("slot", slot.to_string()),
+            ("blocks", blocks.len().to_string()),
+            ("prefix_hits", prefix_hits.to_string()),
+        ]);
         self.seqs[slot] = Some(SeqKv {
             request,
             tok_len: prompt_len,

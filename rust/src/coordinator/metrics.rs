@@ -105,6 +105,16 @@ pub struct Metrics {
     /// Batches failed honestly at the degradation-ladder floor — the
     /// router's strongest non-Err health signal.
     pub ladder_floor_errors: usize,
+    /// Quantization-health gauges (runtime::trace act sampling): decode
+    /// steps sampled, last/peak activation absmax across quant sites,
+    /// and the cumulative clipped/total element counts against the
+    /// static quantization ranges. A stale or missing cushion surfaces
+    /// here as an absmax/clip-rate excursion (the paper's claim, live).
+    pub act_samples: usize,
+    pub act_absmax: f32,
+    pub act_absmax_peak: f32,
+    pub act_clipped: u64,
+    pub act_elems: u64,
 }
 
 impl Metrics {
@@ -150,6 +160,11 @@ impl Metrics {
             reprefill_tokens: 0,
             shed_requests: 0,
             ladder_floor_errors: 0,
+            act_samples: 0,
+            act_absmax: 0.0,
+            act_absmax_peak: 0.0,
+            act_clipped: 0,
+            act_elems: 0,
         }
     }
 
@@ -288,6 +303,38 @@ impl Metrics {
         self.ladder_floor_errors += 1;
     }
 
+    /// Fold one sampled decode step's activation-health aggregate
+    /// (runtime::trace::act_end) into the quantization-health gauges.
+    pub fn record_act_sample(&mut self, s: crate::runtime::trace::ActSample) {
+        self.act_samples += 1;
+        self.act_absmax = s.absmax;
+        self.act_absmax_peak = self.act_absmax_peak.max(s.absmax);
+        self.act_clipped += s.clipped;
+        self.act_elems += s.total;
+    }
+
+    /// Cumulative clip rate over all sampled steps (0 when nothing was
+    /// sampled or no static-range site ran).
+    pub fn act_clip_rate(&self) -> f64 {
+        if self.act_elems == 0 {
+            0.0
+        } else {
+            self.act_clipped as f64 / self.act_elems as f64
+        }
+    }
+
+    /// Decode-step latency percentile by the nearest-rank rule: always
+    /// an actual recorded step, so `decode_histogram` provably has a
+    /// non-zero count in the bucket containing it. Both `summary()` and
+    /// the histogram line derive from this one source
+    /// (`decode_seconds`); the interpolated `stats::percentile` is NOT
+    /// used for decode steps because it can land between two samples,
+    /// inside an empty bucket — the consistency test below pins the
+    /// agreement.
+    pub fn decode_percentile(&self, p: f64) -> f64 {
+        stats::percentile_nearest(&self.decode_seconds, p)
+    }
+
     /// Sample the KV pool gauges (scheduler, once per step).
     pub fn record_pool(&mut self, stats: crate::coordinator::kvpool::PoolStats) {
         self.pool_blocks_total = stats.total;
@@ -371,6 +418,10 @@ impl Metrics {
             reprefill_tokens: self.reprefill_tokens,
             shed_requests: self.shed_requests,
             ladder_floor_errors: self.ladder_floor_errors,
+            act_samples: self.act_samples,
+            act_absmax: self.act_absmax,
+            act_absmax_peak: self.act_absmax_peak,
+            act_clip_rate: self.act_clip_rate(),
             tokens_out: self.tokens_out,
             elapsed: self.started.elapsed().as_secs_f64(),
             ttft_mean: stats::mean(&self.ttft),
@@ -379,8 +430,8 @@ impl Metrics {
             tpot_std: stats::std(&self.tpot),
             tpot_p99: stats::percentile(&self.tpot, 99.0),
             decode_mean: stats::mean(&self.decode_seconds),
-            decode_p50: stats::percentile(&self.decode_seconds, 50.0),
-            decode_p99: stats::percentile(&self.decode_seconds, 99.0),
+            decode_p50: self.decode_percentile(50.0),
+            decode_p99: self.decode_percentile(99.0),
             decode_bytes_up_per_step: mean_u64(&self.decode_bytes_up),
             decode_bytes_down_per_step: mean_u64(&self.decode_bytes_down),
             decode_bytes_gathered_per_step: mean_u64(&self.decode_bytes_gathered),
@@ -442,6 +493,11 @@ pub struct MetricsSummary {
     pub reprefill_tokens: usize,
     pub shed_requests: usize,
     pub ladder_floor_errors: usize,
+    /// Quantization-health gauges (see `Metrics::record_act_sample`).
+    pub act_samples: usize,
+    pub act_absmax: f32,
+    pub act_absmax_peak: f32,
+    pub act_clip_rate: f64,
     pub uploads: u64,
     pub bytes_uploaded: u64,
     pub fetches: u64,
@@ -823,7 +879,67 @@ mod tests {
             );
         }
         let s = m.summary();
-        assert!((s.decode_p50 - 0.0505).abs() < 1e-6);
-        assert!(s.decode_p99 > 0.098 && s.decode_p99 <= 0.100);
+        // nearest-rank: p50 of 1..=100 ms is the 50th sample exactly
+        assert!((s.decode_p50 - 0.050).abs() < 1e-12);
+        assert!((s.decode_p99 - 0.099).abs() < 1e-12);
+    }
+
+    /// The satellite fix: summary percentiles and the histogram must
+    /// derive from one source. Nearest-rank percentiles are actual
+    /// samples, so the histogram bucket containing p50/p99 always has a
+    /// non-zero count — interpolated percentiles could land in an empty
+    /// bucket (e.g. samples {0.4ms, 64.5ms}: interpolated p50 =
+    /// 32.45ms falls in the empty `<=64ms` bucket).
+    #[test]
+    fn decode_percentiles_agree_with_histogram() {
+        let cases: Vec<Vec<f64>> = vec![
+            vec![0.0004, 0.0645],
+            vec![0.0003, 0.0018, 0.0018, 0.030, 9.0],
+            (1..=37).map(|i| i as f64 * 7e-4).collect(),
+        ];
+        for samples in cases {
+            let mut m = Metrics::new();
+            for &s in &samples {
+                m.record_decode(
+                    s,
+                    1,
+                    TransferStats::default(),
+                    CollectiveStats::default(),
+                    0.0,
+                );
+            }
+            let h = m.decode_histogram();
+            let s = m.summary();
+            for (p, v) in [(50.0, s.decode_p50), (99.0, s.decode_p99)] {
+                assert_eq!(v, m.decode_percentile(p), "one source for p{p}");
+                assert!(
+                    samples.contains(&v),
+                    "p{p}={v} must be an actual sample"
+                );
+                let ms = v * 1e3;
+                let bucket = DECODE_HIST_MS
+                    .iter()
+                    .position(|&b| ms <= b)
+                    .unwrap_or(DECODE_HIST_MS.len());
+                assert!(
+                    h[bucket] > 0,
+                    "p{p}={ms}ms lands in histogram bucket {bucket} with count 0"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn act_samples_track_last_peak_and_clip_rate() {
+        use crate::runtime::trace::ActSample;
+        let mut m = Metrics::new();
+        assert_eq!(m.act_clip_rate(), 0.0);
+        m.record_act_sample(ActSample { absmax: 4.0, clipped: 10, total: 100 });
+        m.record_act_sample(ActSample { absmax: 2.0, clipped: 0, total: 100 });
+        let s = m.summary();
+        assert_eq!(s.act_samples, 2);
+        assert_eq!(s.act_absmax, 2.0, "last sample");
+        assert_eq!(s.act_absmax_peak, 4.0, "peak survives the drop");
+        assert!((s.act_clip_rate - 0.05).abs() < 1e-12);
     }
 }

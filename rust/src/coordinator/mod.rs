@@ -34,6 +34,7 @@ pub mod request;
 pub mod router;
 pub mod scheduler;
 pub mod server;
+pub mod telemetry;
 
 pub use engine::Engine;
 pub use kvpool::{PagedKv, PoolStats};

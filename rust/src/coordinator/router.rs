@@ -25,10 +25,12 @@
 
 use std::collections::HashMap;
 
+use crate::runtime::trace;
 use crate::util::prng::SplitMix64;
 
 use super::request::{FinishReason, Request, RequestId, Response};
 use super::scheduler::Scheduler;
+use super::telemetry;
 
 /// Suspicion strikes (floor errors / latency outliers) before a
 /// Suspect replica is broken and failed over.
@@ -216,6 +218,15 @@ pub trait ServeBackend {
     /// server at shutdown so the transfer budget is visible in `serve`
     /// output, not just the perf bench.
     fn log_metrics(&self);
+    /// Render the live serving metrics in Prometheus text format, one
+    /// labeled sample set per replica (`coordinator::telemetry`) — the
+    /// `{"cmd":"metrics"}` wire command and the `--metrics-interval`
+    /// periodic snapshots read this mid-run.
+    fn metrics_text(&self) -> String;
+    /// Ladder-floor errors so far across the fleet. The server flushes
+    /// a metrics snapshot whenever this advances, so a run that dies at
+    /// the fault-ladder floor still leaves evidence behind.
+    fn floor_errors(&self) -> usize;
 }
 
 /// One engine's metrics lines for serve output.
@@ -353,6 +364,19 @@ impl ServeBackend for Scheduler {
     fn log_metrics(&self) {
         log_scheduler_metrics("serve", self);
     }
+
+    fn metrics_text(&self) -> String {
+        let labels = [
+            ("mode", self.engine.scheme.label()),
+            ("replica", "0".to_string()),
+            ("shards", self.engine.n_shards().to_string()),
+        ];
+        telemetry::render_metrics(&self.metrics, &labels)
+    }
+
+    fn floor_errors(&self) -> usize {
+        self.metrics.ladder_floor_errors
+    }
 }
 
 pub struct Router {
@@ -442,6 +466,12 @@ impl Router {
         if self.health[i].tick() {
             self.engines[i].1.metrics.record_breaker_probe();
             self.engines[i].1.metrics.record_health_transition();
+            trace::instant(
+                "breaker_half_open",
+                "router",
+                None,
+                &[("replica", i.to_string())],
+            );
             log::info!(
                 "replica {i} [{}]: breaker half-open, probing",
                 self.engines[i].0
@@ -459,6 +489,17 @@ impl Router {
         let escalated = self.health[i].strike();
         if self.health[i].state() != before {
             self.engines[i].1.metrics.record_health_transition();
+            trace::instant(
+                "health",
+                "router",
+                None,
+                &[
+                    ("replica", i.to_string()),
+                    ("from", format!("{before:?}")),
+                    ("to", format!("{:?}", self.health[i].state())),
+                    ("why", why.to_string()),
+                ],
+            );
             log::warn!(
                 "replica {i} [{}]: {:?} -> {:?} ({why})",
                 self.engines[i].0,
@@ -504,6 +545,12 @@ impl Router {
             if let Some(&i0) = idxs.first() {
                 self.engines[i0].1.metrics.record_shed();
             }
+            trace::instant(
+                "shed",
+                "router",
+                Some(req.id),
+                &[("mode", mode.to_string())],
+            );
             anyhow::bail!(
                 "overloaded: all {} replica(s) of mode '{mode}' are broken",
                 idxs.len()
@@ -586,6 +633,12 @@ impl Router {
             }
             let before = self.health[i].state();
             if self.health[i].note_ok() {
+                trace::instant(
+                    "breaker_close",
+                    "router",
+                    None,
+                    &[("replica", i.to_string())],
+                );
                 log::info!(
                     "replica {i} [{}]: probe succeeded, breaker closed",
                     self.engines[i].0
@@ -621,6 +674,18 @@ impl Router {
         }
         let (fresh, resumes) = self.engines[src].1.evacuate();
         let migrated = fresh.len() + resumes.len();
+        trace::instant(
+            "failover",
+            "router",
+            None,
+            &[
+                ("replica", src.to_string()),
+                ("mode", mode.clone()),
+                ("migrated", migrated.to_string()),
+                ("probe_in", reopen_in.to_string()),
+                ("why", why.to_string()),
+            ],
+        );
         log::warn!(
             "replica {src} [{mode}]: broken ({why}); breaker open, probe in \
              {reopen_in} step(s); migrating {} queued + {} in-flight",
@@ -836,6 +901,35 @@ impl ServeBackend for Router {
         for (i, (mode, sched)) in self.engines.iter().enumerate() {
             log_scheduler_metrics(&format!("serve[{mode}#{i}]"), sched);
         }
+    }
+
+    /// Per-replica exposition: the fleet's text is the concatenation of
+    /// every replica's labeled render (plus a health gauge per replica),
+    /// so any Prometheus server can aggregate across the labels.
+    fn metrics_text(&self) -> String {
+        let mut out = String::new();
+        for (i, (mode, sched)) in self.engines.iter().enumerate() {
+            let labels = [
+                ("mode", mode.clone()),
+                ("replica", i.to_string()),
+                ("shards", sched.engine.n_shards().to_string()),
+            ];
+            telemetry::sample(
+                &mut out,
+                "cushion_replica_routable",
+                &labels,
+                if self.health[i].is_routable() { 1.0 } else { 0.0 },
+            );
+            out.push_str(&telemetry::render_metrics(&sched.metrics, &labels));
+        }
+        out
+    }
+
+    fn floor_errors(&self) -> usize {
+        self.engines
+            .iter()
+            .map(|(_, s)| s.metrics.ladder_floor_errors)
+            .sum()
     }
 }
 

@@ -63,6 +63,7 @@
 use std::collections::{HashMap, VecDeque};
 
 use crate::data::PAD;
+use crate::runtime::trace;
 
 use super::batcher::{Admit, Batcher, Running};
 use super::engine::Engine;
@@ -110,6 +111,13 @@ pub struct Scheduler {
     /// up within a process — a path that faulted persistently stays
     /// shed.
     rung: u32,
+    /// Activation-health sampling period: every Nth decode step meters
+    /// the quantization sites' absmax/clip counts (`runtime::trace`
+    /// act gauges). 0 disables sampling entirely.
+    act_sample: u32,
+    /// Decode steps attempted so far — drives the sampling cadence
+    /// deterministically (step counter, never wall-clock).
+    decode_steps: u64,
 }
 
 impl Scheduler {
@@ -127,7 +135,21 @@ impl Scheduler {
             token_events: Vec::new(),
             draining: false,
             rung: 0,
+            act_sample: 16,
+            decode_steps: 0,
         }
+    }
+
+    /// Set the activation-health sampling period: every `n`th decode
+    /// step runs with quantization-site metering armed (absmax + clip
+    /// rate against the static ranges). `0` disables sampling. The
+    /// default (16) keeps the hot path unmetered ~94% of the time.
+    pub fn set_act_sample(&mut self, n: u32) {
+        self.act_sample = n;
+    }
+
+    pub fn act_sample(&self) -> u32 {
+        self.act_sample
     }
 
     pub fn submit(&mut self, prompt: Vec<i32>, max_new: usize) -> RequestId {
@@ -137,6 +159,12 @@ impl Scheduler {
     pub fn submit_request(&mut self, r: Request) {
         if self.draining {
             self.metrics.record_rejected();
+            trace::instant(
+                "reject",
+                "sched",
+                Some(r.id),
+                &[("why", "overloaded".to_string())],
+            );
             self.finished
                 .push(Response::rejection(r.id, r.echo_text, "overloaded".into()));
             return;
@@ -148,6 +176,9 @@ impl Scheduler {
     /// normally, new submissions are rejected with "overloaded". The
     /// server steps the scheduler until `has_work()` clears, then exits.
     pub fn drain(&mut self) {
+        if !self.draining {
+            trace::instant("drain", "sched", None, &[]);
+        }
         self.draining = true;
     }
 
@@ -278,6 +309,15 @@ impl Scheduler {
                         self.batcher.push_front(req);
                         break;
                     };
+                    trace::instant(
+                        "admit",
+                        "sched",
+                        Some(req.id),
+                        &[
+                            ("prompt", req.prompt.len().to_string()),
+                            ("max_new", req.max_new_tokens.to_string()),
+                        ],
+                    );
                     if self.chunked_admissible(req.prompt.len()) {
                         // lane and blocks are committed; the prompt is
                         // prefilled by the budgeted chunk phase below
@@ -321,6 +361,12 @@ impl Scheduler {
                         self.batcher.push_resume(run);
                         break;
                     };
+                    trace::instant(
+                        "resume",
+                        "sched",
+                        Some(run.request.id),
+                        &[("generated", run.generated.len().to_string())],
+                    );
                     if self.chunked_admissible(tokens.len()) {
                         let mut run = run;
                         run.slot = slot;
@@ -361,6 +407,21 @@ impl Scheduler {
                 tokens[slot] = *run.generated.last().unwrap();
             }
             let t0 = std::time::Instant::now();
+            // arm activation-health metering on every act_sample'th
+            // step: the cadence is a step counter, so which steps are
+            // sampled is deterministic under a fixed seed
+            let sampled = self.act_sample > 0
+                && self.decode_steps % self.act_sample as u64 == 0;
+            self.decode_steps += 1;
+            if sampled {
+                trace::act_begin();
+            }
+            let span = trace::begin(
+                "decode_step",
+                "sched",
+                None,
+                &[("batch", self.running.len().to_string())],
+            );
             // meter the step's host-boundary traffic alongside its
             // latency: the bytes-per-step gauges in the serve metrics.
             // Collective (shard-to-shard) traffic is metered separately
@@ -370,6 +431,7 @@ impl Scheduler {
                     self.with_retry("batched decode", |eng| eng.decode_step(&tokens))
                 })
             });
+            let act = if sampled { Some(trace::act_end()) } else { None };
             let skew = if self.engine.n_shards() > 1 {
                 crate::runtime::collective::last_skew_seconds()
             } else {
@@ -377,9 +439,26 @@ impl Scheduler {
             };
             match res {
                 Ok(next) => {
+                    trace::end(span, &[]);
                     let dt = t0.elapsed().as_secs_f64();
                     self.metrics
                         .record_decode(dt, self.running.len(), xfer, coll, skew);
+                    crate::runtime::transfer::trace_delta(&xfer);
+                    // a sampled step that faulted is discarded (the Err
+                    // arm): a half-executed batch's absmax is not a
+                    // health signal
+                    if let Some(s) = act.filter(|s| s.total > 0) {
+                        self.metrics.record_act_sample(s);
+                        trace::instant(
+                            "act_sample",
+                            "quant",
+                            None,
+                            &[
+                                ("absmax", format!("{:.4}", s.absmax)),
+                                ("clip_rate", format!("{:.6}", s.clip_rate())),
+                            ],
+                        );
+                    }
 
                     let slots: Vec<usize> = self.running.keys().copied().collect();
                     for slot in slots {
@@ -395,7 +474,10 @@ impl Scheduler {
                         self.maybe_finish(slot, run);
                     }
                 }
-                Err(e) => self.recover_decode_fault(e)?,
+                Err(e) => {
+                    trace::end(span, &[("error", "1".to_string())]);
+                    self.recover_decode_fault(e)?
+                }
             }
         }
         if crate::runtime::faults::armed() {
@@ -423,11 +505,19 @@ impl Scheduler {
             let take = budget.min(p.tokens.len() - p.done);
             let chunk: Vec<i32> = p.tokens[p.done..p.done + take].to_vec();
             let (slot, done) = (p.run.slot, p.done);
+            let span = trace::begin(
+                "prefill_chunk",
+                "sched",
+                Some(p.run.request.id),
+                // token progress through the prompt: (done+take)/total
+                &[("progress", format!("{}/{}", done + take, p.tokens.len()))],
+            );
             let t0 = std::time::Instant::now();
             match self
                 .with_retry("prefill chunk", |eng| eng.prefill_chunk(slot, &chunk, done))
             {
                 Ok(Some(first)) => {
+                    trace::end(span, &[("final", "1".to_string())]);
                     self.metrics.record_prefill(t0.elapsed().as_secs_f64());
                     budget -= take;
                     // a resume's donated blocks were re-shared into the
@@ -441,12 +531,14 @@ impl Scheduler {
                     self.maybe_finish(slot, p.run);
                 }
                 Ok(None) => {
+                    trace::end(span, &[]);
                     self.metrics.record_prefill(t0.elapsed().as_secs_f64());
                     budget -= take;
                     p.done += take;
                     self.prefilling.push_back(p);
                 }
                 Err(e) => {
+                    trace::end(span, &[("error", "1".to_string())]);
                     // the partial prefix dies with the lane: no block is
                     // fully written from this sequence's perspective, so
                     // a plain free (no donation) is the only safe exit —
@@ -522,6 +614,15 @@ impl Scheduler {
                 Err(e) => match crate::runtime::faults::classify(&e) {
                     Some((op, true)) if attempt < RETRY_ATTEMPTS => {
                         self.metrics.record_retry(op.as_str());
+                        trace::instant(
+                            "retry",
+                            "fault",
+                            None,
+                            &[
+                                ("op", op.as_str().to_string()),
+                                ("attempt", attempt.to_string()),
+                            ],
+                        );
                         log::debug!(
                             "{what}: transient {} fault (attempt \
                              {attempt}/{RETRY_ATTEMPTS}), backing off: {e:#}",
@@ -564,6 +665,12 @@ impl Scheduler {
                 let run = self.running.remove(&slot).unwrap();
                 self.engine.kv.free(slot);
                 self.metrics.record_floor_error();
+                trace::instant(
+                    "floor_error",
+                    "fault",
+                    Some(run.request.id),
+                    &[("rung", self.rung.to_string())],
+                );
                 let resp = run.into_response(FinishReason::Error(format!(
                     "decode failed past the ladder floor: {e:#}"
                 )));
@@ -613,6 +720,12 @@ impl Scheduler {
         };
         crate::runtime::faults::set_rung(self.rung);
         self.metrics.record_downgrade(self.rung);
+        trace::instant(
+            "downgrade",
+            "fault",
+            None,
+            &[("rung", self.rung.to_string()), ("mode", mode.to_string())],
+        );
         log::warn!(
             "persistent fault: engine downgraded to rung {} ({mode}); \
              serving continues",
@@ -701,10 +814,17 @@ impl Scheduler {
         slot: usize,
         mut running: Running,
     ) -> crate::Result<Option<usize>> {
+        let span = trace::begin(
+            "prefill",
+            "sched",
+            Some(running.request.id),
+            &[("tokens", running.request.prompt.len().to_string())],
+        );
         let t0 = std::time::Instant::now();
         match self.with_retry("prefill", |eng| eng.prefill(slot, &running.request.prompt))
         {
             Ok(first) => {
+                trace::end(span, &[]);
                 self.metrics.record_prefill(t0.elapsed().as_secs_f64());
                 // NOTE: `first` is generated but its KV is not cached
                 // yet; kv.tok_len stays at prompt_len until the decode
@@ -718,6 +838,7 @@ impl Scheduler {
                 Ok(Some(1))
             }
             Err(e) => {
+                trace::end(span, &[("error", "1".to_string())]);
                 self.engine.kv.free(slot);
                 if crate::runtime::faults::is_replica_down(&e) {
                     self.batcher.push_front(running.request);
@@ -756,9 +877,19 @@ impl Scheduler {
         mut run: Running,
         tokens: &[i32],
     ) -> crate::Result<Option<usize>> {
+        let span = trace::begin(
+            "prefill",
+            "sched",
+            Some(run.request.id),
+            &[
+                ("tokens", tokens.len().to_string()),
+                ("resume", "1".to_string()),
+            ],
+        );
         let t0 = std::time::Instant::now();
         match self.with_retry("resume prefill", |eng| eng.prefill(slot, tokens)) {
             Ok(next) => {
+                trace::end(span, &[]);
                 self.metrics.record_prefill(t0.elapsed().as_secs_f64());
                 run.slot = slot;
                 // the blocks donated at preemption were re-shared into
@@ -774,6 +905,7 @@ impl Scheduler {
                 Ok(Some(1))
             }
             Err(e) => {
+                trace::end(span, &[("error", "1".to_string())]);
                 // this attempt's free may donate *new* full blocks (the
                 // generated suffix); track them with the originals so a
                 // later cancel/deadline drops exactly one hold per entry
@@ -904,6 +1036,12 @@ impl Scheduler {
         // drop exactly these entries (nothing else accounts for them)
         run.donated = self.engine.kv.free_donating(slot);
         self.metrics.record_preempted();
+        trace::instant(
+            "preempt",
+            "sched",
+            Some(run.request.id),
+            &[("generated", run.generated.len().to_string())],
+        );
         self.batcher.push_resume(run);
     }
 
@@ -911,6 +1049,15 @@ impl Scheduler {
         match run.should_stop(self.engine.kv.remaining(slot)) {
             Some(reason) => {
                 self.engine.kv.free(slot);
+                trace::instant(
+                    "finish",
+                    "sched",
+                    Some(run.request.id),
+                    &[
+                        ("reason", reason.as_str().to_string()),
+                        ("generated", run.generated.len().to_string()),
+                    ],
+                );
                 let resp = run.into_response(reason);
                 self.metrics.record_finished(&resp);
                 self.finished.push(resp);

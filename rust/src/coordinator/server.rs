@@ -124,6 +124,11 @@ enum Inbound {
     },
     Cancel(RequestId),
     Shutdown,
+    /// Admin wire command ({"cmd":"metrics"} / {"cmd":"trace"}): the
+    /// scheduler thread renders one reply line — metrics and the trace
+    /// ring both live on that thread, so servicing these between steps
+    /// needs no locks.
+    Admin { cmd: String, back: Sender<Outbound> },
 }
 
 /// Pre-rendered wire lines headed back to one connection.
@@ -143,6 +148,10 @@ struct Waiter {
 pub struct Server {
     addr: String,
     queue_limit: usize,
+    /// Periodic Prometheus snapshot interval (`--metrics-interval N`);
+    /// `None` = snapshots only on demand, at drain entry, and on a
+    /// ladder-floor error.
+    metrics_interval: Option<std::time::Duration>,
 }
 
 impl Server {
@@ -150,6 +159,7 @@ impl Server {
         Self {
             addr: addr.to_string(),
             queue_limit: DEFAULT_QUEUE_LIMIT,
+            metrics_interval: None,
         }
     }
 
@@ -157,6 +167,14 @@ impl Server {
     /// with an `overloaded` error line.
     pub fn with_queue_limit(mut self, limit: usize) -> Self {
         self.queue_limit = limit.max(1);
+        self
+    }
+
+    /// Log a Prometheus metrics snapshot every `secs` seconds while
+    /// serving (0 disables periodic snapshots).
+    pub fn with_metrics_interval(mut self, secs: u64) -> Self {
+        self.metrics_interval =
+            (secs > 0).then(|| std::time::Duration::from_secs(secs));
         self
     }
 
@@ -191,6 +209,8 @@ impl Server {
 
         // scheduler loop on this thread; acceptor inline (non-blocking)
         let mut waiters: HashMap<RequestId, Waiter> = HashMap::new();
+        let mut last_floor = backend.floor_errors();
+        let mut last_snapshot = std::time::Instant::now();
         loop {
             if stop.load(Ordering::Relaxed) || signals::pending() {
                 break;
@@ -255,14 +275,35 @@ impl Server {
                     Inbound::Shutdown => {
                         stop.store(true, Ordering::Relaxed);
                     }
+                    Inbound::Admin { cmd, back } => {
+                        let _ = back
+                            .send(Outbound::Done(admin_response(&backend, &cmd)));
+                    }
                 }
             }
             // advance the engine(s)
             if backend.has_work() {
                 backend.step()?;
                 flush_output(&mut backend, &mut waiters, &tokenizer);
+                // a run dying at the fault-ladder floor must leave
+                // evidence: flush a snapshot the moment the floor
+                // counter advances, not only at shutdown
+                let floor = backend.floor_errors();
+                if floor > last_floor {
+                    last_floor = floor;
+                    log::warn!(
+                        "ladder-floor errors at {floor}; metrics snapshot:\n{}",
+                        backend.metrics_text()
+                    );
+                }
             } else {
                 std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            if let Some(iv) = self.metrics_interval {
+                if last_snapshot.elapsed() >= iv {
+                    last_snapshot = std::time::Instant::now();
+                    log::info!("metrics snapshot:\n{}", backend.metrics_text());
+                }
             }
         }
         // graceful shutdown: drain — finish the work already accepted
@@ -273,6 +314,14 @@ impl Server {
         // shutdown finished or cancelled.
         let drain_t0 = std::time::Instant::now();
         backend.drain();
+        // metrics used to surface only after the drain completed
+        // (log_metrics at the very end) — a drain that hangs or is
+        // killed left nothing. Flush a snapshot at drain *entry* so
+        // partial runs leave evidence.
+        log::info!(
+            "drain-entry metrics snapshot:\n{}",
+            backend.metrics_text()
+        );
         log::info!(
             "shutting down: draining {} in-flight request(s)",
             backend.load()
@@ -295,10 +344,23 @@ impl Server {
                         backend.cancel(id);
                     }
                     Inbound::Shutdown => {}
+                    Inbound::Admin { cmd, back } => {
+                        let _ = back
+                            .send(Outbound::Done(admin_response(&backend, &cmd)));
+                    }
                 }
             }
             backend.step()?;
             flush_output(&mut backend, &mut waiters, &tokenizer);
+            let floor = backend.floor_errors();
+            if floor > last_floor {
+                last_floor = floor;
+                log::warn!(
+                    "ladder-floor errors at {floor} during drain; metrics \
+                     snapshot:\n{}",
+                    backend.metrics_text()
+                );
+            }
         }
         backend.cancel_all();
         for resp in backend.take_finished() {
@@ -344,6 +406,43 @@ fn flush_output<B: ServeBackend>(
     }
 }
 
+/// Render one reply line for an admin wire command. `metrics` returns
+/// the Prometheus exposition as a JSON string field; `trace` returns
+/// the Chrome-trace export of the serve thread's ring (the scheduler
+/// thread is the emitting thread, so the snapshot is exact).
+fn admin_response<B: ServeBackend>(backend: &B, cmd: &str) -> String {
+    match cmd {
+        "metrics" => json::obj(vec![
+            ("ok", Value::Bool(true)),
+            ("format", json::s("prometheus")),
+            ("body", json::s(&backend.metrics_text())),
+        ])
+        .to_string(),
+        "trace" => json::obj(vec![
+            ("ok", Value::Bool(true)),
+            (
+                "trace",
+                crate::runtime::trace::chrome_json(
+                    &crate::runtime::trace::records(),
+                ),
+            ),
+        ])
+        .to_string(),
+        other => render_error_line(None, &format!("unknown admin cmd {other:?}")),
+    }
+}
+
+/// An admin line is a JSON object carrying a string `cmd` field
+/// ({"cmd":"metrics"} / {"cmd":"trace"}); anything else — including
+/// every ordinary request, which has no `cmd` — falls through to
+/// `parse_request`.
+pub fn parse_admin(line: &str) -> Option<String> {
+    match json::parse(line).ok()?.get("cmd") {
+        Some(Value::Str(s)) => Some(s.clone()),
+        _ => None,
+    }
+}
+
 fn handle_conn(
     stream: TcpStream,
     tx: Sender<Inbound>,
@@ -381,6 +480,30 @@ fn handle_conn(
         if line.trim() == "quit" {
             let _ = tx.send(Inbound::Shutdown);
             break;
+        }
+        if let Some(cmd) = parse_admin(line) {
+            let (back_tx, back_rx) = channel();
+            if tx.send(Inbound::Admin { cmd, back: back_tx }).is_err() {
+                let _ =
+                    writeln!(writer, "{}", render_error_line(None, "scheduler gone"));
+                break;
+            }
+            match back_rx.recv() {
+                Ok(Outbound::Done(l)) | Ok(Outbound::Line(l)) => {
+                    if writeln!(writer, "{l}").and_then(|_| writer.flush()).is_err() {
+                        return Ok(());
+                    }
+                }
+                Err(_) => {
+                    let _ = writeln!(
+                        writer,
+                        "{}",
+                        render_error_line(None, "scheduler gone")
+                    );
+                    return Ok(());
+                }
+            }
+            continue;
         }
         match parse_request(line, &ids, vocab) {
             Ok((req, mode)) => {
@@ -650,6 +773,16 @@ mod tests {
             parse_request(r#"{"prompt": [4], "deadline_ms": "soon"}"#, &ids, VOCAB)
                 .is_err()
         );
+    }
+
+    #[test]
+    fn admin_lines_are_recognized() {
+        assert_eq!(parse_admin(r#"{"cmd": "metrics"}"#).as_deref(), Some("metrics"));
+        assert_eq!(parse_admin(r#"{"cmd": "trace"}"#).as_deref(), Some("trace"));
+        // ordinary requests (no "cmd"), bad types, and junk fall through
+        assert!(parse_admin(r#"{"prompt": [1, 2]}"#).is_none());
+        assert!(parse_admin(r#"{"cmd": 3}"#).is_none());
+        assert!(parse_admin("not json").is_none());
     }
 
     #[test]

@@ -1,0 +1,444 @@
+//! Live metrics exposition: render the serving [`Metrics`] /
+//! [`SloMetrics`] (plus pool, collective, fault-domain, and
+//! quantization-health gauges) in Prometheus text format, on demand —
+//! the `{"cmd":"metrics"}` wire command and the `--metrics-interval`
+//! periodic snapshots — instead of only at shutdown.
+//!
+//! Label scheme (README "Observability"): every sample carries the
+//! caller's base labels — `mode` (quantization scheme serving the
+//! replica), `replica` (index within the router fleet), `shards`
+//! (tensor-parallel width) — so a multi-replica exposition is the
+//! concatenation of per-replica renders and stays aggregatable by any
+//! Prometheus server. Values print via Rust's shortest-round-trip
+//! float `Display`, so `parse_prometheus(render(..))` recovers every
+//! gauge exactly (pinned by `testkit::prop::trace_props`).
+
+use crate::util::stats;
+
+use super::metrics::{Metrics, SloMetrics, DECODE_HIST_MS};
+
+/// One parsed exposition sample: `name{labels} value`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PromSample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+/// Escape a label value per the Prometheus text format: backslash,
+/// double-quote, and newline.
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn unescape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    let mut it = v.chars();
+    while let Some(c) = it.next() {
+        if c == '\\' {
+            match it.next() {
+                Some('n') => out.push('\n'),
+                Some(e) => out.push(e),
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Append one `name{labels} value` line. Non-finite values render as
+/// the Prometheus spellings `+Inf`/`-Inf`/`NaN`.
+pub fn sample(
+    out: &mut String,
+    name: &str,
+    labels: &[(&str, String)],
+    value: f64,
+) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(k);
+            out.push_str("=\"");
+            out.push_str(&escape_label(v));
+            out.push('"');
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    if value.is_nan() {
+        out.push_str("NaN");
+    } else if value == f64::INFINITY {
+        out.push_str("+Inf");
+    } else if value == f64::NEG_INFINITY {
+        out.push_str("-Inf");
+    } else {
+        out.push_str(&value.to_string());
+    }
+    out.push('\n');
+}
+
+fn with_extra<'a>(
+    base: &'a [(&'a str, String)],
+    extra: (&'a str, String),
+) -> Vec<(&'a str, String)> {
+    let mut v = base.to_vec();
+    v.push(extra);
+    v
+}
+
+/// Render one replica's serving metrics as Prometheus text. `labels`
+/// are attached to every sample (the caller supplies `mode`/`replica`/
+/// `shards`); counter-style quantities still render as plain samples —
+/// this is a point-in-time snapshot, not a scrape-forever endpoint, so
+/// no `# TYPE` bookkeeping is attempted beyond `gauge`-like lines.
+pub fn render_metrics(m: &Metrics, labels: &[(&str, String)]) -> String {
+    let s = m.summary();
+    let mut out = String::new();
+    let g = |out: &mut String, name: &str, v: f64| sample(out, name, labels, v);
+
+    // request outcomes
+    g(&mut out, "cushion_requests_completed", s.completed as f64);
+    g(&mut out, "cushion_requests_errored", s.errored as f64);
+    g(&mut out, "cushion_requests_rejected", s.rejected as f64);
+    g(&mut out, "cushion_requests_cancelled", s.cancelled as f64);
+    g(&mut out, "cushion_deadline_expired", s.deadline_expired as f64);
+    g(&mut out, "cushion_tokens_out", s.tokens_out as f64);
+    g(&mut out, "cushion_tokens_per_second", s.tokens_per_second());
+
+    // latency distributions (single-source percentiles: satellite fix —
+    // the histogram below and these quantiles both derive from
+    // Metrics::decode_seconds via the nearest-rank rule)
+    g(&mut out, "cushion_ttft_seconds_mean", s.ttft_mean);
+    g(&mut out, "cushion_ttft_seconds_p99", s.ttft_p99);
+    g(&mut out, "cushion_tpot_seconds_mean", s.tpot_mean);
+    g(&mut out, "cushion_tpot_seconds_p99", s.tpot_p99);
+    g(&mut out, "cushion_decode_step_seconds_p50", s.decode_p50);
+    g(&mut out, "cushion_decode_step_seconds_p99", s.decode_p99);
+    g(&mut out, "cushion_prefill_seconds_mean", s.prefill_mean);
+    g(&mut out, "cushion_decode_batch_mean", s.mean_batch);
+
+    // decode-step latency histogram, cumulative le buckets
+    let h = m.decode_histogram();
+    let mut cum = 0usize;
+    for (i, bound) in DECODE_HIST_MS.iter().enumerate() {
+        cum += h[i];
+        sample(
+            &mut out,
+            "cushion_decode_step_ms_bucket",
+            &with_extra(labels, ("le", bound.to_string())),
+            cum as f64,
+        );
+    }
+    cum += h[DECODE_HIST_MS.len()];
+    sample(
+        &mut out,
+        "cushion_decode_step_ms_bucket",
+        &with_extra(labels, ("le", "+Inf".to_string())),
+        cum as f64,
+    );
+    g(&mut out, "cushion_decode_step_count", cum as f64);
+
+    // paged KV pool
+    g(&mut out, "cushion_pool_blocks_total", s.pool_blocks_total as f64);
+    g(&mut out, "cushion_pool_blocks_in_use", s.pool_blocks_in_use as f64);
+    g(&mut out, "cushion_pool_blocks_peak", s.pool_blocks_peak as f64);
+    g(&mut out, "cushion_pool_blocks_shared", s.pool_blocks_shared as f64);
+    g(&mut out, "cushion_pool_blocks_saved", s.pool_blocks_saved as f64);
+    g(&mut out, "cushion_preemptions", s.preempted as f64);
+
+    // host-boundary + collective traffic
+    g(&mut out, "cushion_bytes_uploaded", s.bytes_uploaded as f64);
+    g(&mut out, "cushion_bytes_fetched", s.bytes_fetched as f64);
+    g(&mut out, "cushion_decode_bytes_up_per_step", s.decode_bytes_up_per_step);
+    g(
+        &mut out,
+        "cushion_decode_bytes_down_per_step",
+        s.decode_bytes_down_per_step,
+    );
+    g(
+        &mut out,
+        "cushion_collective_bytes_gathered_per_step",
+        s.decode_bytes_gathered_per_step,
+    );
+    g(
+        &mut out,
+        "cushion_collective_bytes_reduced_per_step",
+        s.decode_bytes_reduced_per_step,
+    );
+    g(&mut out, "cushion_shard_skew_seconds_max", s.shard_skew_max);
+
+    // fault recovery + fault domain
+    for (cause, n) in [
+        ("execute", s.retries_execute),
+        ("upload", s.retries_upload),
+        ("fetch", s.retries_fetch),
+    ] {
+        sample(
+            &mut out,
+            "cushion_retries",
+            &with_extra(labels, ("cause", cause.to_string())),
+            n as f64,
+        );
+    }
+    g(&mut out, "cushion_downgrades", s.downgrades as f64);
+    g(&mut out, "cushion_backend_rung", s.backend_rung as f64);
+    g(&mut out, "cushion_faults_injected", s.faults_injected as f64);
+    g(&mut out, "cushion_health_transitions", s.health_transitions as f64);
+    g(&mut out, "cushion_breaker_opens", s.breaker_opens as f64);
+    g(&mut out, "cushion_breaker_probes", s.breaker_probes as f64);
+    g(&mut out, "cushion_failovers", s.failovers as f64);
+    g(&mut out, "cushion_migrated_sequences", s.migrated_sequences as f64);
+    g(&mut out, "cushion_reprefill_tokens", s.reprefill_tokens as f64);
+    g(&mut out, "cushion_shed_requests", s.shed_requests as f64);
+    g(&mut out, "cushion_ladder_floor_errors", s.ladder_floor_errors as f64);
+    g(&mut out, "cushion_drain_seconds", s.drain_seconds);
+
+    // quantization health (the paper loop-closer): serve-time
+    // activation absmax and static-range clip rate, sampled every Nth
+    // decode step. A missing/stale cushion shows up here as an absmax /
+    // clip-rate excursion long before it shows up as perplexity.
+    g(&mut out, "cushion_act_samples", s.act_samples as f64);
+    g(&mut out, "cushion_act_absmax", s.act_absmax as f64);
+    g(&mut out, "cushion_act_absmax_peak", s.act_absmax_peak as f64);
+    g(&mut out, "cushion_act_clip_rate", s.act_clip_rate);
+    out
+}
+
+/// Render per-class SLO percentiles/goodput (when a workload assigns
+/// request classes), one `class` label per sample.
+pub fn render_slo(slo: &SloMetrics, labels: &[(&str, String)]) -> String {
+    let mut out = String::new();
+    for c in slo.summary() {
+        let l = with_extra(labels, ("class", c.class.clone()));
+        sample(&mut out, "cushion_slo_requests_total", &l, c.total as f64);
+        sample(&mut out, "cushion_slo_requests_good", &l, c.good as f64);
+        sample(&mut out, "cushion_slo_good_tokens", &l, c.good_tokens as f64);
+        sample(&mut out, "cushion_slo_goodput", &l, c.goodput());
+        sample(&mut out, "cushion_slo_ttft_seconds_p50", &l, c.ttft_p50);
+        sample(&mut out, "cushion_slo_ttft_seconds_p99", &l, c.ttft_p99);
+        sample(&mut out, "cushion_slo_tpot_seconds_p50", &l, c.tpot_p50);
+        sample(&mut out, "cushion_slo_tpot_seconds_p99", &l, c.tpot_p99);
+    }
+    out
+}
+
+/// Parse Prometheus text exposition back into samples. Comment (`#`)
+/// and blank lines are skipped; malformed lines error — the round-trip
+/// property and the wire-command tests both go through here.
+pub fn parse_prometheus(text: &str) -> crate::Result<Vec<PromSample>> {
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (head, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| anyhow::anyhow!("prom line {ln}: no value: {line:?}"))?;
+        let value = match value {
+            "+Inf" => f64::INFINITY,
+            "-Inf" => f64::NEG_INFINITY,
+            "NaN" => f64::NAN,
+            v => v
+                .parse::<f64>()
+                .map_err(|e| anyhow::anyhow!("prom line {ln}: bad value {v:?}: {e}"))?,
+        };
+        let (name, labels) = match head.find('{') {
+            None => (head.to_string(), Vec::new()),
+            Some(b) => {
+                let name = head[..b].to_string();
+                let body = head[b + 1..]
+                    .strip_suffix('}')
+                    .ok_or_else(|| anyhow::anyhow!("prom line {ln}: unclosed labels"))?;
+                let mut labels = Vec::new();
+                let mut rest = body;
+                while !rest.is_empty() {
+                    let eq = rest.find("=\"").ok_or_else(|| {
+                        anyhow::anyhow!("prom line {ln}: bad label in {body:?}")
+                    })?;
+                    let key = rest[..eq].to_string();
+                    rest = &rest[eq + 2..];
+                    // scan to the closing unescaped quote
+                    let mut end = None;
+                    let bytes = rest.as_bytes();
+                    let mut i = 0;
+                    while i < bytes.len() {
+                        match bytes[i] {
+                            b'\\' => i += 2,
+                            b'"' => {
+                                end = Some(i);
+                                break;
+                            }
+                            _ => i += 1,
+                        }
+                    }
+                    let end = end.ok_or_else(|| {
+                        anyhow::anyhow!("prom line {ln}: unterminated label value")
+                    })?;
+                    labels.push((key, unescape_label(&rest[..end])));
+                    rest = &rest[end + 1..];
+                    rest = rest.strip_prefix(',').unwrap_or(rest);
+                }
+                (name, labels)
+            }
+        };
+        if name.is_empty() {
+            anyhow::bail!("prom line {ln}: empty metric name");
+        }
+        out.push(PromSample { name, labels, value });
+    }
+    Ok(out)
+}
+
+/// Convenience for tests: the value of the first sample matching
+/// `name` (and every label in `want`), if present.
+pub fn find_sample(
+    samples: &[PromSample],
+    name: &str,
+    want: &[(&str, &str)],
+) -> Option<f64> {
+    samples
+        .iter()
+        .find(|s| {
+            s.name == name
+                && want.iter().all(|(k, v)| {
+                    s.labels.iter().any(|(lk, lv)| lk == k && lv == v)
+                })
+        })
+        .map(|s| s.value)
+}
+
+/// Worst-case TTFT p99 across classes formatted for the periodic
+/// snapshot header line.
+pub fn slo_headline(slo: &SloMetrics) -> String {
+    format!(
+        "slo ttft_p99={:.4}s tpot_p99={:.4}s goodput={:.3}",
+        slo.ttft_p99(),
+        slo.tpot_p99(),
+        slo.goodput()
+    )
+}
+
+/// Percentile of `xs` by the nearest-rank rule (an actual sample, not
+/// an interpolation) — the shared quantile for exposition consumers
+/// that must agree with bucketed histograms. Re-exported here so both
+/// `Metrics::summary` and tests name one definition.
+pub fn nearest_rank(xs: &[f64], p: f64) -> f64 {
+    stats::percentile_nearest(xs, p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_lines_render_and_parse() {
+        let mut out = String::new();
+        sample(&mut out, "a_metric", &[], 1.5);
+        sample(
+            &mut out,
+            "b_metric",
+            &[("mode", "w8a8_pts".to_string()), ("replica", "3".to_string())],
+            42.0,
+        );
+        sample(&mut out, "c_inf", &[], f64::INFINITY);
+        let parsed = parse_prometheus(&out).unwrap();
+        assert_eq!(parsed.len(), 3);
+        assert_eq!(parsed[0].name, "a_metric");
+        assert_eq!(parsed[0].value, 1.5);
+        assert_eq!(
+            parsed[1].labels,
+            vec![
+                ("mode".to_string(), "w8a8_pts".to_string()),
+                ("replica".to_string(), "3".to_string())
+            ]
+        );
+        assert_eq!(parsed[2].value, f64::INFINITY);
+        assert_eq!(
+            find_sample(&parsed, "b_metric", &[("replica", "3")]),
+            Some(42.0)
+        );
+        assert_eq!(find_sample(&parsed, "b_metric", &[("replica", "9")]), None);
+    }
+
+    #[test]
+    fn label_values_escape_round_trip() {
+        let mut out = String::new();
+        let odd = "quo\"te\\slash\nnewline".to_string();
+        sample(&mut out, "m", &[("k", odd.clone())], 7.0);
+        let parsed = parse_prometheus(&out).unwrap();
+        assert_eq!(parsed[0].labels, vec![("k".to_string(), odd)]);
+    }
+
+    #[test]
+    fn render_metrics_exposes_labeled_gauges() {
+        let mut m = Metrics::new();
+        m.record_preempted();
+        m.record_floor_error();
+        m.record_act_sample(crate::runtime::trace::ActSample {
+            absmax: 2.5,
+            clipped: 5,
+            total: 100,
+        });
+        let labels = [("mode", "fp".to_string()), ("replica", "0".to_string())];
+        let text = render_metrics(&m, &labels);
+        let parsed = parse_prometheus(&text).unwrap();
+        assert_eq!(
+            find_sample(&parsed, "cushion_preemptions", &[("mode", "fp")]),
+            Some(1.0)
+        );
+        assert_eq!(
+            find_sample(&parsed, "cushion_ladder_floor_errors", &[("replica", "0")]),
+            Some(1.0)
+        );
+        assert_eq!(
+            find_sample(&parsed, "cushion_act_absmax", &[("mode", "fp")]),
+            Some(2.5),
+        );
+        assert_eq!(
+            find_sample(&parsed, "cushion_act_clip_rate", &[]),
+            Some(0.05)
+        );
+        // histogram renders cumulative buckets ending at +Inf
+        assert!(text.contains("cushion_decode_step_ms_bucket"));
+        assert!(text.contains("le=\"+Inf\""));
+        // every sample carries the caller's labels
+        for s in &parsed {
+            assert!(
+                s.labels.iter().any(|(k, _)| k == "mode"),
+                "{} missing mode label",
+                s.name
+            );
+        }
+    }
+
+    #[test]
+    fn render_slo_exposes_classes() {
+        use crate::coordinator::request::{FinishReason, Response};
+        let mut slo = SloMetrics::new();
+        slo.record(
+            "short",
+            &Response {
+                id: 1,
+                tokens: vec![1, 2],
+                ttft: Some(0.01),
+                tpot: vec![0.002],
+                finished: FinishReason::MaxTokens,
+                echo_text: false,
+            },
+        );
+        let text = render_slo(&slo, &[("replica", "1".to_string())]);
+        let parsed = parse_prometheus(&text).unwrap();
+        assert_eq!(
+            find_sample(&parsed, "cushion_slo_goodput", &[("class", "short")]),
+            Some(1.0)
+        );
+        assert!(slo_headline(&slo).starts_with("slo ttft_p99="));
+    }
+}

@@ -42,7 +42,7 @@ fn run() -> anyhow::Result<()> {
     let cli = Cli::new(
         "cushiond — CushionCache (EMNLP 2024) coordinator\n\
          commands: list | calibrate | search | tune | pipeline | eval | serve\n\
-         | bench-diff <base.json> <new.json>",
+         | bench-diff <base.json> <new.json> | trace-check <trace.json>",
     )
     .positional("command", "subcommand")
     .opt("variant", "tl-llama", "model variant (see `list`)")
@@ -75,6 +75,13 @@ fn run() -> anyhow::Result<()> {
          prefill; engine-gated, bit-identical in fp/static modes)")
     .opt("tol", "0.10", "bench-diff: mean-latency regression tolerance \
          (fraction; transfer growth always fails)")
+    .opt("trace-out", "", "serve: export a Chrome-trace JSON of the run \
+         to this file on shutdown (open in chrome://tracing or Perfetto; \
+         '' = tracing off)")
+    .opt("metrics-interval", "0", "serve: log a Prometheus-format metrics \
+         snapshot every N seconds (0 = only at drain/shutdown)")
+    .opt("act-sample", "16", "serve: meter activation absmax/clip-rate \
+         every Nth decode step (0 = off)")
     .opt("faults", "", "fault-injection plan, e.g. \
          'seed=1,execute=0.1,stall_ms=5' (see runtime::faults; also \
          honors CUSHION_FAULTS; '' = off)")
@@ -226,12 +233,23 @@ fn run() -> anyhow::Result<()> {
             Ok(())
         }
         "serve" => {
+            // --trace-out: the ring is thread-local and the scheduler
+            // steps on this thread (serve loop), so enable/export here
+            // bracket exactly the events of this serve run
+            let trace_out = args.get("trace-out").to_string();
+            if !trace_out.is_empty() {
+                cushioncache::runtime::trace::enable(
+                    cushioncache::runtime::trace::DEFAULT_CAPACITY,
+                );
+            }
+            let act_sample = args.get_usize("act-sample")? as u32;
             let server = Server::new(args.get("addr"))
-                .with_queue_limit(args.get_usize("queue-limit")?);
+                .with_queue_limit(args.get_usize("queue-limit")?)
+                .with_metrics_interval(args.get_usize("metrics-interval")? as u64);
             let stop = Arc::new(AtomicBool::new(false));
             let modes = args.get("modes");
             let replicas = args.get_usize("replicas")?.max(1);
-            if modes.is_empty() && replicas == 1 {
+            let res = if modes.is_empty() && replicas == 1 {
                 let mut s = load_session(&args)?;
                 maybe_smooth(&mut s, &args)?;
                 apply_shards(&mut s, &args)?;
@@ -245,6 +263,7 @@ fn run() -> anyhow::Result<()> {
                 }
                 let mut sched = Scheduler::new(engine);
                 sched.set_prefill_chunk(prefill_chunk(&args)?);
+                sched.set_act_sample(act_sample);
                 server.serve(sched, stop)
             } else {
                 // one process, several quantization variants and/or
@@ -274,6 +293,7 @@ fn run() -> anyhow::Result<()> {
                         }
                         let mut sched = Scheduler::new(Engine::new(s, scheme)?);
                         sched.set_prefill_chunk(prefill_chunk(&args)?);
+                        sched.set_act_sample(act_sample);
                         router.add_engine(mode, sched);
                     }
                 }
@@ -282,7 +302,14 @@ fn run() -> anyhow::Result<()> {
                     router.modes()
                 );
                 server.serve_router(router, stop)
+            };
+            if !trace_out.is_empty() {
+                let text = cushioncache::runtime::trace::export_string();
+                let n = cushioncache::runtime::trace::check_export(&text)?;
+                std::fs::write(&trace_out, &text)?;
+                log::info!("wrote {n} trace events to {trace_out}");
             }
+            res
         }
         "bench-diff" => {
             // pre-merge perf gate: diff two BENCH_*.json snapshots and
@@ -313,9 +340,23 @@ fn run() -> anyhow::Result<()> {
                 );
             }
         }
+        "trace-check" => {
+            // validate an exported Chrome-trace file (the traced-serve
+            // gate in scripts/test_hermetic.sh)
+            let pos = args.positionals();
+            let Some(path) = pos.get(1) else {
+                anyhow::bail!("usage: cushiond trace-check <trace.json>");
+            };
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("read {path}: {e}"))?;
+            let n = cushioncache::runtime::trace::check_export(&text)?;
+            println!("trace-check: OK ({n} events, {path})");
+            Ok(())
+        }
         other => anyhow::bail!(
             "unknown command '{other}'\ncommands: list | calibrate | search | \
-             tune | pipeline | eval | serve | bench-diff (--help for options)"
+             tune | pipeline | eval | serve | bench-diff | trace-check \
+             (--help for options)"
         ),
     }
 }

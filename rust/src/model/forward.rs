@@ -21,6 +21,7 @@
 use std::collections::HashMap;
 
 use crate::model::manifest::Manifest;
+use crate::runtime::trace;
 use crate::util::tensor::Tensor;
 
 pub const EPS: f32 = 1e-5;
@@ -658,6 +659,46 @@ impl QuantCtx {
         let valid_row = |row: usize| -> bool {
             self.valid.as_ref().map_or(true, |v| v[row])
         };
+
+        // Activation-health sampling: when the scheduler armed a sample
+        // for this decode step, meter the post-smoothing absmax of the
+        // site and, under Pts, how many elements fall outside the
+        // calibrated range. A missing or stale cushion surfaces here as
+        // a clip-rate spike before it shows up in output quality.
+        if trace::act_sampling() {
+            let mut am = 0.0f32;
+            let mut total = 0u64;
+            for r in 0..b * s {
+                if !valid_row(r) {
+                    continue;
+                }
+                for &v in &x[r * f..(r + 1) * f] {
+                    am = am.max(v.abs());
+                }
+                total += f as u64;
+            }
+            let clipped = if self.mode == Mode::Pts {
+                let idx = layer * 4 + site;
+                let ranges = self.ranges.as_ref().expect("pts needs ranges");
+                let lo = ranges.data[idx * 2];
+                let hi = lo + ranges.data[idx * 2 + 1] * self.levels;
+                let mut c = 0u64;
+                for r in 0..b * s {
+                    if !valid_row(r) {
+                        continue;
+                    }
+                    for &v in &x[r * f..(r + 1) * f] {
+                        if v < lo || v > hi {
+                            c += 1;
+                        }
+                    }
+                }
+                c
+            } else {
+                0
+            };
+            trace::act_note(am, clipped, total);
+        }
 
         let mut mn = f32::INFINITY;
         let mut mx = f32::NEG_INFINITY;

@@ -435,6 +435,12 @@ impl DeviceGroup {
         }
         let skew = nanos.iter().max().unwrap_or(&0) - nanos.iter().min().unwrap_or(&0);
         LAST_SKEW_NANOS.store(skew, Ordering::Relaxed);
+        if n > 1 {
+            super::trace::instant("shard_skew", "collective", None, &[
+                ("shards", n.to_string()),
+                ("skew_us", (skew / 1_000).to_string()),
+            ]);
+        }
 
         let mut results = Vec::with_capacity(n);
         let mut first_err: Option<anyhow::Error> = None;

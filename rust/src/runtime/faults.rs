@@ -382,6 +382,18 @@ pub fn rung() -> u32 {
 
 /// Roll the dice for one backend call of `op`.
 fn roll(op: FaultOp) -> Option<InjectedFault> {
+    let hit = roll_inner(op);
+    if let Some(f) = hit {
+        super::trace::instant("fault_inject", "fault", None, &[
+            ("op", format!("{:?}", f.op)),
+            ("transient", (f.transient as u8).to_string()),
+            ("seq", f.seq.to_string()),
+        ]);
+    }
+    hit
+}
+
+fn roll_inner(op: FaultOp) -> Option<InjectedFault> {
     STATE.with(|s| {
         let mut s = s.borrow_mut();
         let st = s.as_mut()?;

@@ -29,6 +29,7 @@ pub mod interp;
 pub mod literalx;
 pub mod registry;
 pub mod split;
+pub mod trace;
 pub mod transfer;
 
 pub use backend::{Backend, BackendKind, DeviceBuf};

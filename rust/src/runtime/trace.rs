@@ -1,0 +1,578 @@
+//! Structured tracing for the serving runtime: a bounded, lock-cheap,
+//! thread-local ring buffer of typed span/instant records with
+//! monotonic timestamps, exportable as Chrome-trace-format JSON
+//! (`chrome://tracing` / Perfetto — see README "Observability").
+//!
+//! Design constraints, in priority order:
+//!
+//! * **Deterministic identity.** Everything a hermetic test asserts on —
+//!   `seq`, `name`, `cat`, `ph`, `trace_id`, `replica`, `args` — is
+//!   derived from program order under a fixed seed, never from
+//!   wall-clock. Timestamps (`ts_us`/`dur_us`) exist only so the export
+//!   renders on a real time axis; they are presentation, not identity.
+//! * **Lock-cheap.** The whole serve path (scheduler, router, server
+//!   step loop, benches, hermetic tests) emits from one thread, so the
+//!   buffer is `thread_local` (the same isolation idiom as
+//!   `runtime::faults`): no mutex, no atomics on the emit path, and a
+//!   disabled tracer costs exactly one `Cell<bool>` read. Shard worker
+//!   threads do not emit; per-step shard skew is recorded on the driver
+//!   thread at the end of `DeviceGroup::run`, which is where the skew
+//!   instant comes from.
+//! * **Bounded, close-preserving.** The ring drops *oldest* records on
+//!   overflow (counted in `dropped()`), but a span close is never
+//!   rejected: `begin` parks the span in a side table that the ring's
+//!   eviction cannot touch, and `end` always lands its `Complete`
+//!   record — the `testkit::prop` trace properties pin this.
+//!
+//! The replica label is read from `faults::current_replica()` at record
+//! time, so router-bracketed engine work is attributed to its replica
+//! with zero router plumbing.
+//!
+//! Activation-health sampling (the paper loop-closer) also lives here:
+//! the scheduler arms `act_begin()` every Nth decode step, the
+//! interpreter's quantization hot path (`model::forward::QuantCtx`)
+//! notes per-site absmax/clip counts behind a single `Cell<bool>`
+//! check, and `act_end()` hands the step's aggregate back to the
+//! scheduler for the `cushion_act_*` gauges.
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::util::json::{self, Value};
+
+/// Default ring capacity (records). At ~8 events per scheduler step
+/// this holds a few thousand steps — far past any hermetic run.
+pub const DEFAULT_CAPACITY: usize = 16384;
+
+/// Chrome-trace phase of a record: a point event or a closed span.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// `ph: "i"` — an instantaneous event.
+    Instant,
+    /// `ph: "X"` — a complete (begin..end) span with a duration.
+    Complete,
+}
+
+impl Phase {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Phase::Instant => "i",
+            Phase::Complete => "X",
+        }
+    }
+}
+
+/// One trace record. Identity (what tests assert) is `seq`, `name`,
+/// `cat`, `ph`, `trace_id`, `replica`, `args`; the `*_us` fields are
+/// monotonic presentation timestamps relative to `enable()`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Record {
+    /// Emission-order sequence number, reset by `enable()`/`clear()`.
+    /// Assigned at `begin`/`instant` time; a span's record lands in the
+    /// ring at `end`, so ring order is *push* order and interleaved
+    /// traces are seq-non-monotonic there. `chrome_json` sorts by seq,
+    /// making the export strictly increasing (`trace-check` validates).
+    pub seq: u64,
+    pub name: String,
+    pub cat: &'static str,
+    pub ph: Phase,
+    /// The request this record belongs to (`RequestId`), if any.
+    pub trace_id: Option<u64>,
+    /// Replica index (`faults::current_replica()` at record time).
+    pub replica: Option<usize>,
+    /// Microseconds since `enable()` (begin time for spans).
+    pub ts_us: u64,
+    /// Span duration in microseconds (0 for instants).
+    pub dur_us: u64,
+    /// Small typed payload, insertion-ordered.
+    pub args: Vec<(String, String)>,
+}
+
+/// Handle returned by [`begin`]; pass to [`end`] to close the span.
+/// Deliberately not `Copy`/`Clone`: one begin, one end.
+#[derive(Debug)]
+#[must_use = "an unclosed span never reaches the trace"]
+pub struct SpanToken(u64);
+
+/// A span that has begun but not ended. Lives in a side table outside
+/// the ring, so ring eviction can never orphan it.
+struct OpenSpan {
+    token: u64,
+    seq: u64,
+    name: String,
+    cat: &'static str,
+    trace_id: Option<u64>,
+    replica: Option<usize>,
+    t0: Instant,
+    ts_us: u64,
+    args: Vec<(String, String)>,
+}
+
+struct TraceState {
+    cap: usize,
+    epoch: Instant,
+    next_seq: u64,
+    next_token: u64,
+    ring: VecDeque<Record>,
+    open: Vec<OpenSpan>,
+    dropped: u64,
+}
+
+/// Aggregate of one sampled decode step's quantization-site activity:
+/// the max |x| seen across all sites and the clipped/total element
+/// counts against the static quantization ranges (pts; dynamic modes
+/// clip nothing by construction, so their clip rate is structurally 0).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ActSample {
+    pub absmax: f32,
+    pub clipped: u64,
+    pub total: u64,
+}
+
+impl ActSample {
+    pub fn clip_rate(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.clipped as f64 / self.total as f64
+        }
+    }
+}
+
+thread_local! {
+    /// Fast-path gate: one Cell read decides whether emit helpers touch
+    /// the RefCell at all.
+    static ENABLED: Cell<bool> = const { Cell::new(false) };
+    /// Fast-path gate for the quantization hot loop: set for the
+    /// duration of a sampled decode step only.
+    static ACT_ACTIVE: Cell<bool> = const { Cell::new(false) };
+    static STATE: RefCell<Option<TraceState>> = const { RefCell::new(None) };
+    static ACT: RefCell<ActSample> = const { RefCell::new(ActSample {
+        absmax: 0.0,
+        clipped: 0,
+        total: 0,
+    }) };
+}
+
+/// Turn tracing on for this thread with a ring of `cap` records
+/// (`0` → [`DEFAULT_CAPACITY`]). Resets sequence numbers, the ring,
+/// open spans, and the timestamp epoch.
+pub fn enable(cap: usize) {
+    let cap = if cap == 0 { DEFAULT_CAPACITY } else { cap };
+    STATE.with(|s| {
+        *s.borrow_mut() = Some(TraceState {
+            cap,
+            epoch: Instant::now(),
+            next_seq: 0,
+            next_token: 0,
+            ring: VecDeque::with_capacity(cap.min(1024)),
+            open: Vec::new(),
+            dropped: 0,
+        });
+    });
+    ENABLED.with(|e| e.set(true));
+}
+
+/// Turn tracing off and discard all state (ring and open spans).
+pub fn disable() {
+    ENABLED.with(|e| e.set(false));
+    ACT_ACTIVE.with(|a| a.set(false));
+    STATE.with(|s| *s.borrow_mut() = None);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.with(|e| e.get())
+}
+
+/// Drop every recorded event but keep tracing enabled (sequence
+/// numbers and the epoch restart, so identity stays deterministic).
+pub fn clear() {
+    if !enabled() {
+        return;
+    }
+    STATE.with(|s| {
+        if let Some(st) = s.borrow_mut().as_mut() {
+            st.ring.clear();
+            st.open.clear();
+            st.next_seq = 0;
+            st.next_token = 0;
+            st.dropped = 0;
+            st.epoch = Instant::now();
+        }
+    });
+}
+
+fn push(st: &mut TraceState, rec: Record) {
+    if st.ring.len() >= st.cap {
+        st.ring.pop_front();
+        st.dropped += 1;
+    }
+    st.ring.push_back(rec);
+}
+
+/// Emit an instantaneous event. No-op when tracing is disabled.
+pub fn instant(
+    name: &str,
+    cat: &'static str,
+    trace_id: Option<u64>,
+    args: &[(&str, String)],
+) {
+    if !enabled() {
+        return;
+    }
+    let replica = super::faults::current_replica();
+    STATE.with(|s| {
+        if let Some(st) = s.borrow_mut().as_mut() {
+            let seq = st.next_seq;
+            st.next_seq += 1;
+            let ts_us = st.epoch.elapsed().as_micros() as u64;
+            let args =
+                args.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
+            push(
+                st,
+                Record {
+                    seq,
+                    name: name.to_string(),
+                    cat,
+                    ph: Phase::Instant,
+                    trace_id,
+                    replica,
+                    ts_us,
+                    dur_us: 0,
+                    args,
+                },
+            );
+        }
+    });
+}
+
+/// Open a span. The span is parked in the open-span side table (immune
+/// to ring eviction) until [`end`] lands its `Complete` record. When
+/// tracing is disabled the returned token is inert.
+pub fn begin(
+    name: &str,
+    cat: &'static str,
+    trace_id: Option<u64>,
+    args: &[(&str, String)],
+) -> SpanToken {
+    if !enabled() {
+        return SpanToken(u64::MAX);
+    }
+    let replica = super::faults::current_replica();
+    STATE.with(|s| {
+        let mut b = s.borrow_mut();
+        let Some(st) = b.as_mut() else { return SpanToken(u64::MAX) };
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        let token = st.next_token;
+        st.next_token += 1;
+        let now = Instant::now();
+        st.open.push(OpenSpan {
+            token,
+            seq,
+            name: name.to_string(),
+            cat,
+            trace_id,
+            replica,
+            t0: now,
+            ts_us: now.duration_since(st.epoch).as_micros() as u64,
+            args: args.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+        });
+        SpanToken(token)
+    })
+}
+
+/// Close a span opened by [`begin`], optionally appending result args.
+/// The close always lands (the ring evicts oldest records to make
+/// room, never the incoming close).
+pub fn end(token: SpanToken, extra: &[(&str, String)]) {
+    if token.0 == u64::MAX || !enabled() {
+        return;
+    }
+    STATE.with(|s| {
+        let mut b = s.borrow_mut();
+        let Some(st) = b.as_mut() else { return };
+        let Some(i) = st.open.iter().position(|o| o.token == token.0) else {
+            return;
+        };
+        let o = st.open.swap_remove(i);
+        let mut args = o.args;
+        args.extend(extra.iter().map(|(k, v)| (k.to_string(), v.clone())));
+        let dur_us = o.t0.elapsed().as_micros() as u64;
+        push(
+            st,
+            Record {
+                seq: o.seq,
+                name: o.name,
+                cat: o.cat,
+                ph: Phase::Complete,
+                trace_id: o.trace_id,
+                replica: o.replica,
+                ts_us: o.ts_us,
+                dur_us,
+                args,
+            },
+        );
+    });
+}
+
+/// Snapshot of the ring, oldest first.
+pub fn records() -> Vec<Record> {
+    STATE.with(|s| {
+        s.borrow()
+            .as_ref()
+            .map(|st| st.ring.iter().cloned().collect())
+            .unwrap_or_default()
+    })
+}
+
+/// Number of spans begun but not yet ended.
+pub fn open_spans() -> usize {
+    STATE.with(|s| s.borrow().as_ref().map(|st| st.open.len()).unwrap_or(0))
+}
+
+/// Records evicted by ring overflow since `enable()`/`clear()`.
+pub fn dropped() -> u64 {
+    STATE.with(|s| s.borrow().as_ref().map(|st| st.dropped).unwrap_or(0))
+}
+
+/// Render `records` as Chrome Trace Event Format JSON
+/// (https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU):
+/// `pid` = replica + 1 (0 = unattributed), `tid` = trace id (request),
+/// spans are `ph:"X"` complete events, instants `ph:"i"` thread-scoped.
+/// Identity fields ride along in `args` so a parsed trace can be
+/// asserted on without the Record type. Events are emitted in `seq`
+/// order: ring order is *push* order, and a span's seq was assigned at
+/// `begin` while its record lands at `end`, so an instant emitted
+/// inside the span sits earlier in the ring with a later seq.
+pub fn chrome_json(records: &[Record]) -> Value {
+    let mut ordered: Vec<&Record> = records.iter().collect();
+    ordered.sort_by_key(|r| r.seq);
+    let events = ordered.into_iter().map(|r| {
+        let mut fields = vec![
+            ("name", json::s(&r.name)),
+            ("cat", json::s(r.cat)),
+            ("ph", json::s(r.ph.as_str())),
+            ("ts", json::num(r.ts_us as f64)),
+            ("pid", json::num(r.replica.map(|i| i as f64 + 1.0).unwrap_or(0.0))),
+            ("tid", json::num(r.trace_id.map(|t| t as f64).unwrap_or(0.0))),
+        ];
+        match r.ph {
+            Phase::Complete => fields.push(("dur", json::num(r.dur_us as f64))),
+            Phase::Instant => fields.push(("s", json::s("t"))),
+        }
+        let mut args = vec![("seq", json::num(r.seq as f64))];
+        if let Some(t) = r.trace_id {
+            args.push(("trace_id", json::num(t as f64)));
+        }
+        let extra: Vec<(&str, Value)> =
+            r.args.iter().map(|(k, v)| (k.as_str(), json::s(v))).collect();
+        args.extend(extra);
+        fields.push(("args", json::obj(args)));
+        json::obj(fields)
+    });
+    json::obj(vec![
+        ("traceEvents", json::arr(events)),
+        ("displayTimeUnit", json::s("ms")),
+    ])
+}
+
+/// `chrome_json` over the current ring, serialized.
+pub fn export_string() -> String {
+    chrome_json(&records()).to_string()
+}
+
+/// Validate `text` as a well-formed Chrome-trace export of this
+/// module: parses as JSON, has a `traceEvents` array, every event has
+/// a string `name`, a `ph` of `"X"`/`"i"`, numeric `ts`/`pid`/`tid`,
+/// spans carry `dur`, and `args.seq` is strictly increasing (the
+/// deterministic emission order). Returns the event count.
+pub fn check_export(text: &str) -> crate::Result<usize> {
+    let v = json::parse(text)?;
+    let events = v
+        .get("traceEvents")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("trace: missing traceEvents array"))?;
+    let mut last_seq = -1.0f64;
+    for (i, ev) in events.iter().enumerate() {
+        let name = ev
+            .get("name")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow::anyhow!("trace event {i}: missing name"))?;
+        let ph = ev
+            .get("ph")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow::anyhow!("trace event {i} ({name}): missing ph"))?;
+        if ph != "X" && ph != "i" {
+            anyhow::bail!("trace event {i} ({name}): unknown ph {ph:?}");
+        }
+        for key in ["ts", "pid", "tid"] {
+            if ev.get(key).and_then(Value::as_f64).is_none() {
+                anyhow::bail!("trace event {i} ({name}): missing numeric {key}");
+            }
+        }
+        if ph == "X" && ev.get("dur").and_then(Value::as_f64).is_none() {
+            anyhow::bail!("trace event {i} ({name}): span without dur");
+        }
+        let seq = ev
+            .get("args")
+            .and_then(|a| a.get("seq"))
+            .and_then(Value::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("trace event {i} ({name}): missing args.seq"))?;
+        if seq <= last_seq {
+            anyhow::bail!(
+                "trace event {i} ({name}): seq {seq} not increasing past {last_seq}"
+            );
+        }
+        last_seq = seq;
+    }
+    Ok(events.len())
+}
+
+// ---------------------------------------------------------------------------
+// Activation-health sampling (quantization hot path)
+// ---------------------------------------------------------------------------
+
+/// Arm activation sampling for the current decode step: the
+/// quantization sites hit until `act_end()` accumulate absmax/clip
+/// counts. Independent of `enable()` — the gauges work untraced.
+pub fn act_begin() {
+    ACT.with(|a| *a.borrow_mut() = ActSample::default());
+    ACT_ACTIVE.with(|f| f.set(true));
+}
+
+/// Whether the quantization hot path should meter this call. One Cell
+/// read; false outside a sampled step.
+#[inline]
+pub fn act_sampling() -> bool {
+    ACT_ACTIVE.with(|f| f.get())
+}
+
+/// Fold one quantization site's activity into the step sample.
+pub fn act_note(absmax: f32, clipped: u64, total: u64) {
+    ACT.with(|a| {
+        let mut s = a.borrow_mut();
+        s.absmax = s.absmax.max(absmax);
+        s.clipped += clipped;
+        s.total += total;
+    });
+}
+
+/// Disarm sampling and return the step's aggregate.
+pub fn act_end() -> ActSample {
+    ACT_ACTIVE.with(|f| f.set(false));
+    ACT.with(|a| std::mem::replace(&mut a.borrow_mut(), ActSample::default()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Everything here runs on the test's own thread, so no
+    /// serialization with other tests is needed (thread-local state).
+    fn fresh() {
+        disable();
+        enable(0);
+    }
+
+    #[test]
+    fn disabled_tracer_is_inert() {
+        disable();
+        instant("x", "test", None, &[]);
+        let t = begin("y", "test", None, &[]);
+        end(t, &[]);
+        assert!(records().is_empty());
+        assert_eq!(open_spans(), 0);
+    }
+
+    #[test]
+    fn spans_and_instants_record_in_emission_order() {
+        fresh();
+        instant("admit", "sched", Some(7), &[("queue", "1".into())]);
+        let t = begin("prefill", "sched", Some(7), &[]);
+        instant("mid", "sched", None, &[]);
+        assert_eq!(open_spans(), 1);
+        end(t, &[("tokens", "5".into())]);
+        let recs = records();
+        // ring order is push order; the span's seq was taken at begin
+        assert_eq!(recs.len(), 3);
+        assert_eq!(recs[0].name, "admit");
+        assert_eq!(recs[0].seq, 0);
+        assert_eq!(recs[1].name, "mid");
+        assert_eq!(recs[1].seq, 2);
+        assert_eq!(recs[2].name, "prefill");
+        assert_eq!(recs[2].seq, 1);
+        assert_eq!(recs[2].ph, Phase::Complete);
+        assert_eq!(recs[2].trace_id, Some(7));
+        assert_eq!(recs[2].args, vec![("tokens".to_string(), "5".to_string())]);
+        assert_eq!(open_spans(), 0);
+        // the export re-sorts by seq, so even this interleaved ring
+        // passes the strictly-increasing-seq check
+        assert_eq!(check_export(&export_string()).unwrap(), 3);
+        disable();
+    }
+
+    #[test]
+    fn ring_drops_oldest_never_the_close() {
+        disable();
+        enable(4);
+        let t = begin("span", "test", Some(1), &[]);
+        for i in 0..10 {
+            instant(&format!("i{i}"), "test", None, &[]);
+        }
+        end(t, &[]);
+        let recs = records();
+        assert_eq!(recs.len(), 4, "ring stays bounded");
+        assert!(dropped() >= 6);
+        assert!(
+            recs.iter().any(|r| r.name == "span" && r.ph == Phase::Complete),
+            "the close of an open span always lands"
+        );
+        disable();
+    }
+
+    #[test]
+    fn chrome_export_round_trips_and_checks() {
+        fresh();
+        instant("failover", "router", Some(3), &[("from", "0".into())]);
+        let t = begin("decode", "sched", Some(3), &[]);
+        end(t, &[("batch", "2".into())]);
+        let text = export_string();
+        let n = check_export(&text).unwrap();
+        assert_eq!(n, 2);
+        let v = crate::util::json::parse(&text).unwrap();
+        let evs = v.get("traceEvents").and_then(Value::as_arr).unwrap();
+        assert_eq!(evs[0].get("ph").and_then(Value::as_str), Some("i"));
+        assert_eq!(evs[1].get("ph").and_then(Value::as_str), Some("X"));
+        assert!(evs[1].get("dur").and_then(Value::as_f64).is_some());
+        disable();
+    }
+
+    #[test]
+    fn check_export_rejects_malformed() {
+        assert!(check_export("not json").is_err());
+        assert!(check_export(r#"{"foo": 1}"#).is_err());
+        assert!(
+            check_export(r#"{"traceEvents": [{"name": "x", "ph": "Q"}]}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn act_sampling_accumulates_per_step() {
+        assert!(!act_sampling());
+        act_begin();
+        assert!(act_sampling());
+        act_note(1.5, 2, 100);
+        act_note(3.0, 0, 50);
+        let s = act_end();
+        assert!(!act_sampling());
+        assert_eq!(s.absmax, 3.0);
+        assert_eq!(s.clipped, 2);
+        assert_eq!(s.total, 150);
+        assert!((s.clip_rate() - 2.0 / 150.0).abs() < 1e-12);
+        // ended: the accumulator is reset
+        act_begin();
+        assert_eq!(act_end(), ActSample::default());
+    }
+}

@@ -61,6 +61,21 @@ pub fn measure<R>(f: impl FnOnce() -> R) -> (R, TransferStats) {
     (r, snapshot().delta_since(&base))
 }
 
+/// Emit a `transfer` trace instant for a measured delta. Inert when the
+/// tracer is disabled or the delta is empty, so callers can invoke it
+/// unconditionally on the hot path.
+pub fn trace_delta(delta: &TransferStats) {
+    if *delta == TransferStats::default() {
+        return;
+    }
+    crate::runtime::trace::instant("transfer", "xfer", None, &[
+        ("uploads", delta.uploads.to_string()),
+        ("bytes_up", delta.bytes_uploaded.to_string()),
+        ("fetches", delta.fetches.to_string()),
+        ("bytes_down", delta.bytes_fetched.to_string()),
+    ]);
+}
+
 /// Current cumulative counters.
 pub fn snapshot() -> TransferStats {
     TransferStats {

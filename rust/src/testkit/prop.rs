@@ -713,6 +713,151 @@ mod slo_props {
 }
 
 #[cfg(test)]
+mod trace_props {
+    //! Observability invariants (runtime::trace + coordinator::telemetry):
+    //! a bounded ring under arbitrary begin/end/instant interleavings
+    //! never drops an open span's close record, every export round-trips
+    //! through util::json and passes `check_export`, and Prometheus
+    //! exposition lines parse back to the exact gauge values rendered
+    //! (f64 `Display` is shortest-round-trip, so equality is exact).
+
+    use super::*;
+    use crate::coordinator::metrics::Metrics;
+    use crate::coordinator::telemetry;
+    use crate::runtime::trace;
+    use crate::util::json;
+
+    const CAP: usize = 4;
+
+    /// Replay `ops` against a tiny (capacity [`CAP`]) ring: op%3 == 0
+    /// begins a span, 1 ends the deepest open one, 2 emits an instant.
+    /// Every span still open after the ops is closed at the end.
+    /// Returns (spans closed, instants emitted, spans closed by the
+    /// final drain).
+    fn replay(ops: &[u32]) -> (usize, usize, usize) {
+        trace::enable(CAP);
+        let mut open = Vec::new();
+        let mut closed = 0usize;
+        let mut instants = 0usize;
+        for (i, &op) in ops.iter().enumerate() {
+            match op % 3 {
+                0 => open.push(trace::begin(
+                    "span",
+                    "prop",
+                    Some(i as u64),
+                    &[("i", i.to_string())],
+                )),
+                1 => {
+                    if let Some(tok) = open.pop() {
+                        trace::end(tok, &[]);
+                        closed += 1;
+                    }
+                }
+                _ => {
+                    trace::instant("tick", "prop", None, &[("i", i.to_string())]);
+                    instants += 1;
+                }
+            }
+        }
+        let drained = open.len();
+        while let Some(tok) = open.pop() {
+            trace::end(tok, &[]);
+            closed += 1;
+        }
+        (closed, instants, drained)
+    }
+
+    #[test]
+    fn ring_never_orphans_an_open_span_and_exports_check_clean() {
+        check("trace ring close-preservation", 150, vec_u32(0..48, 9), |ops| {
+            let (closed, instants, drained) = replay(ops);
+            let records = trace::records();
+            let total = closed + instants;
+            // bounded ring accounting: the newest min(total, CAP)
+            // records survive, the rest are counted dropped
+            let ok_len = records.len() == total.min(CAP);
+            let ok_dropped =
+                trace::dropped() == (total as u64).saturating_sub(CAP as u64);
+            // close-preservation: spans open through arbitrary instant
+            // flooding still land their close — the final drain's closes
+            // are the newest pushes, so they are all in the ring
+            let tail = drained.min(CAP).min(records.len());
+            let ok_tail = records[records.len() - tail..]
+                .iter()
+                .all(|r| r.ph == trace::Phase::Complete);
+            let ok_open = trace::open_spans() == 0;
+            let export_ok = trace::check_export(&trace::export_string()).is_ok();
+            trace::disable();
+            ok_len && ok_dropped && ok_tail && ok_open && export_ok
+        });
+    }
+
+    #[test]
+    fn trace_export_round_trips_through_util_json() {
+        check("trace export json round-trip", 100, vec_u32(0..32, 9), |ops| {
+            replay(ops);
+            let n_records = trace::records().len();
+            let text = trace::export_string();
+            trace::disable();
+            let Ok(v) = json::parse(&text) else { return false };
+            let Some(events) = v.get("traceEvents").and_then(|e| e.as_arr())
+            else {
+                return false;
+            };
+            // one event per surviving record, each with the fields
+            // check_export demands — and re-serializing parses again
+            let Ok(checked) = trace::check_export(&text) else { return false };
+            events.len() == n_records
+                && checked == n_records
+                && json::parse(&v.to_string()).is_ok()
+        });
+    }
+
+    #[test]
+    fn prometheus_exposition_round_trips_gauge_values() {
+        check(
+            "prometheus render -> parse is exact",
+            120,
+            pair(vec_f64(1..16, 0.0, 0.2), usize_in(0..40)),
+            |(lat, count)| {
+                let mut m = Metrics::new();
+                for (i, &dt) in lat.iter().enumerate() {
+                    m.record_decode(
+                        dt,
+                        1 + i % 3,
+                        Default::default(),
+                        Default::default(),
+                        0.0,
+                    );
+                }
+                m.completed = *count;
+                m.tokens_out = count * 7;
+                m.record_act_sample(trace::ActSample {
+                    absmax: lat[0] as f32 * 100.0,
+                    clipped: *count as u64,
+                    total: 4096,
+                });
+                let labels = [("mode", "FP16".to_string()), ("replica", "0".to_string())];
+                let text = telemetry::render_metrics(&m, &labels);
+                let Ok(samples) = telemetry::parse_prometheus(&text) else {
+                    return false;
+                };
+                let want = [("mode", "FP16"), ("replica", "0")];
+                let find = |name: &str| telemetry::find_sample(&samples, name, &want);
+                find("cushion_requests_completed") == Some(*count as f64)
+                    && find("cushion_tokens_out") == Some((count * 7) as f64)
+                    && find("cushion_decode_p50_seconds")
+                        == Some(m.decode_percentile(50.0))
+                    && find("cushion_decode_p99_seconds")
+                        == Some(m.decode_percentile(99.0))
+                    && find("cushion_act_absmax") == Some(m.act_absmax as f64)
+                    && find("cushion_act_clip_rate") == Some(m.act_clip_rate())
+            },
+        );
+    }
+}
+
+#[cfg(test)]
 mod tests {
     use super::*;
 

@@ -23,6 +23,17 @@ impl log::Log for StderrLogger {
         let t = self.start.elapsed().as_secs_f64();
         eprintln!("[{t:9.3}s {:5} {}] {}", record.level(), record.target(),
                   record.args());
+        // Mirror warn/error lines into the trace ring so an exported
+        // trace shows *where* trouble happened relative to the spans
+        // around it. Truncated: snapshot bodies do not belong in args.
+        if record.level() <= Level::Warn {
+            let msg: String = record.args().to_string().chars().take(120).collect();
+            crate::runtime::trace::instant("log", "log", None, &[
+                ("level", record.level().to_string()),
+                ("target", record.target().to_string()),
+                ("msg", msg),
+            ]);
+        }
     }
 
     fn flush(&self) {}

@@ -71,6 +71,24 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Percentile by the nearest-rank rule: the result is always an
+/// *actual sample*, so any histogram bucketing of the same data agrees
+/// with it — the bucket containing the returned value is provably
+/// non-empty. The interpolated `percentile` above can land between two
+/// samples, inside a bucket with count zero, which is exactly the
+/// summary-vs-histogram disagreement the metrics consistency test
+/// pins (coordinator::metrics).
+pub fn percentile_nearest(xs: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p));
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0 * s.len() as f64).ceil() as usize;
+    s[rank.saturating_sub(1).min(s.len() - 1)]
+}
+
 pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
@@ -112,5 +130,21 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
         assert_eq!(median(&[3.0]), 3.0);
+    }
+
+    #[test]
+    fn percentile_nearest_returns_actual_samples() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile_nearest(&xs, 0.0), 1.0);
+        assert_eq!(percentile_nearest(&xs, 50.0), 2.0);
+        assert_eq!(percentile_nearest(&xs, 75.0), 3.0);
+        assert_eq!(percentile_nearest(&xs, 100.0), 4.0);
+        assert_eq!(percentile_nearest(&[], 99.0), 0.0);
+        // the defining property: the result is a member of the input
+        let many: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        for p in [1.0, 50.0, 90.0, 99.0] {
+            let v = percentile_nearest(&many, p);
+            assert!(many.contains(&v), "p{p} -> {v} must be a sample");
+        }
     }
 }

@@ -631,6 +631,240 @@ fn chaos_replicas_all_dead_shed_honestly() {
     assert_eq!(r.pending_assignments(), 0);
 }
 
+// ---------------------------------------------------------------------------
+// Observability: trace export, activation-health gauges, admin commands
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chaos_trace_export_records_the_request_lifecycle() {
+    // fixed-seed chaos serve (undersized pool -> preemption, plus one
+    // injected replica kill -> failover) with the tracer on: the
+    // exported Chrome trace must validate and contain the request
+    // lifecycle in order — admit -> prefill chunks -> preempt -> resume
+    // -> failover -> finish — with every span closed. Honors
+    // CUSHION_TRACE_EXPORT=<file> so scripts/test_hermetic.sh can gate
+    // the export through `cushiond trace-check`.
+    use cushioncache::runtime::trace;
+
+    let mut r = fp_replica_router(2, 6, true);
+    for i in 0..2 {
+        r.replica_mut(i).set_prefill_chunk(Some(3));
+        r.replica_mut(i).set_act_sample(4);
+    }
+    let prompts: Vec<Vec<i32>> = (0..8)
+        .map(|i| prompt_from(&r.replica(0).engine.session, i, 6))
+        .collect();
+    trace::enable(0);
+    submit_router(&mut r, &prompts, 6);
+    let mut resp = Vec::new();
+    let mut guard = 0;
+    while r.replica(0).batcher.resume_count() == 0 {
+        resp.extend(r.step_all().unwrap());
+        guard += 1;
+        assert!(guard < 300, "workload never left a preempted sequence queued");
+        assert!(r.has_work(), "finished before any preemption on replica 0");
+    }
+    faults::arm(FaultPlan::parse("seed=13,replica=0,kill_replica_after=1").unwrap());
+    while r.has_work() {
+        resp.extend(r.step_all().unwrap());
+    }
+    faults::disarm();
+    assert_eq!(resp.len(), 8, "every routed request must come back");
+    assert!(resp.iter().all(|x| x.finished == FinishReason::MaxTokens));
+
+    assert_eq!(trace::open_spans(), 0, "every span must close");
+    let mut records = trace::records();
+    records.sort_by_key(|x| x.seq);
+    let text = trace::export_string();
+    let n = trace::check_export(&text).unwrap();
+    assert_eq!(n, records.len(), "export must carry every surviving record");
+    trace::disable();
+    if let Ok(path) = std::env::var("CUSHION_TRACE_EXPORT") {
+        if !path.is_empty() {
+            std::fs::write(&path, &text).unwrap();
+        }
+    }
+
+    let first = |name: &str| -> u64 {
+        records
+            .iter()
+            .find(|x| x.name == name)
+            .unwrap_or_else(|| panic!("no '{name}' event in trace"))
+            .seq
+    };
+    let admit = first("admit");
+    let chunk = first("prefill_chunk");
+    let preempt = first("preempt");
+    let resume = first("resume");
+    let failover = first("failover");
+    let finish_last = records
+        .iter()
+        .filter(|x| x.name == "finish")
+        .map(|x| x.seq)
+        .max()
+        .expect("no 'finish' event in trace");
+    assert!(admit < chunk, "admit {admit} must precede prefill chunk {chunk}");
+    assert!(chunk < preempt, "chunk {chunk} must precede preempt {preempt}");
+    assert!(preempt < resume, "preempt {preempt} must precede resume {resume}");
+    assert!(preempt < failover, "kill armed after the preemption was observed");
+    assert!(
+        failover < finish_last,
+        "migrated work must finish after the failover event"
+    );
+
+    // every prefill span carries its request's trace id, and the ids
+    // are exactly the submitted ones
+    let ids: std::collections::HashSet<u64> = (1..=8).collect();
+    for rec in records
+        .iter()
+        .filter(|x| x.name == "prefill" || x.name == "prefill_chunk")
+    {
+        assert_eq!(rec.ph, trace::Phase::Complete, "{}: unclosed span", rec.name);
+        let id = rec.trace_id.unwrap_or_else(|| {
+            panic!("span '{}' (seq {}) has no trace id", rec.name, rec.seq)
+        });
+        assert!(ids.contains(&id), "span trace id {id} was never submitted");
+    }
+    // decode under act_sample=4 must have metered at least one step
+    assert!(
+        records.iter().any(|x| x.name == "act_sample"),
+        "no act_sample instants despite act_sample=4"
+    );
+}
+
+#[test]
+fn act_gauges_separate_cushioned_from_uncushioned_pts_serving() {
+    // the paper's loop, closed at serve time: calibrate pts ranges WITH
+    // the cushion in place, then serve with and without it over the
+    // same ranges. Dropping the cushion shifts the activation
+    // distribution out of the calibrated envelope, so the absmax /
+    // clip-rate gauges must separate the two runs — a missing cushion
+    // is visible as an outlier alarm, not a silent quality loss.
+    let pts = Scheme::w8a8(Granularity::PerTensorStatic, Algorithm::Naive);
+    let cushion_toks = [cushioncache::data::BOS, cushioncache::data::DOT];
+
+    let mut calib = tiny_session();
+    calib.set_cushion_tokens(&cushion_toks).unwrap();
+    calibrate::calibrate_into(&mut calib, pts.act_levels(), 2).unwrap();
+    let ranges = calib.ranges().clone();
+
+    let run = |cushion: bool| -> (usize, f32, f64) {
+        let mut s = tiny_session();
+        if cushion {
+            s.set_cushion_tokens(&cushion_toks).unwrap();
+        }
+        s.set_ranges(ranges.clone());
+        let mut sched = Scheduler::new(Engine::new(s, pts).unwrap());
+        sched.set_act_sample(1); // meter every decode step
+        for i in 0..3 {
+            let p = prompt_from(&sched.engine.session, i, 6);
+            let mut req = Request::new(1 + i as u64, p, 4);
+            req.stop_token = None;
+            sched.submit_request(req);
+        }
+        let resp = sched.run_to_completion().unwrap();
+        assert!(resp.iter().all(|x| x.finished == FinishReason::MaxTokens));
+        (
+            sched.metrics.act_samples,
+            sched.metrics.act_absmax_peak,
+            sched.metrics.act_clip_rate(),
+        )
+    };
+    let (n_c, absmax_c, clip_c) = run(true);
+    let (n_u, absmax_u, clip_u) = run(false);
+    assert!(n_c > 0 && n_u > 0, "act sampling must fire in both runs");
+    assert!(absmax_c > 0.0 && absmax_u > 0.0, "absmax gauges must populate");
+    assert!(
+        clip_u >= clip_c,
+        "stale-ranges serving must not clip less than matched serving \
+         (uncushioned {clip_u} vs cushioned {clip_c})"
+    );
+    assert!(
+        (absmax_u, clip_u) != (absmax_c, clip_c),
+        "gauges must separate cushioned from uncushioned serving \
+         (absmax {absmax_c} clip {clip_c})"
+    );
+}
+
+#[test]
+fn tcp_server_answers_admin_metrics_and_trace_mid_run() {
+    let engine = Engine::new(tiny_session(), Scheme::fp()).unwrap();
+    let sched = Scheduler::new(engine);
+    let addr = "127.0.0.1:7394";
+    let server = cushioncache::coordinator::server::Server::new(addr);
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+
+    let handle = std::thread::spawn(move || {
+        let mut conn = None;
+        for _ in 0..100 {
+            if let Ok(c) = std::net::TcpStream::connect(addr) {
+                conn = Some(c);
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(100));
+        }
+        let mut conn = conn.expect("server did not bind");
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        let mut read = |line: &mut String| {
+            line.clear();
+            reader.read_line(line).unwrap();
+            json::parse(line.trim()).unwrap()
+        };
+
+        // one request through, so the gauges have something to show
+        let req = concat!(
+            r#"{"prompt": [0, 10, 11], "max_new": 2, "#,
+            r#""stream": false, "stop_token": null}"#
+        );
+        writeln!(conn, "{req}").unwrap();
+        let done = read(&mut line);
+        assert_eq!(done.req_str("finish").unwrap(), "max_tokens");
+
+        // {"cmd":"metrics"}: live Prometheus gauges over the wire
+        writeln!(conn, r#"{{"cmd": "metrics"}}"#).unwrap();
+        let v = read(&mut line);
+        assert_eq!(v.req_str("format").unwrap(), "prometheus");
+        let body = v.req_str("body").unwrap().to_string();
+        let samples =
+            cushioncache::coordinator::telemetry::parse_prometheus(&body)
+                .unwrap();
+        let completed = cushioncache::coordinator::telemetry::find_sample(
+            &samples,
+            "cushion_requests_completed",
+            &[("replica", "0")],
+        );
+        assert_eq!(completed, Some(1.0), "one finished request must show");
+        let toks = cushioncache::coordinator::telemetry::find_sample(
+            &samples,
+            "cushion_tokens_out",
+            &[],
+        );
+        assert_eq!(toks, Some(2.0));
+
+        // {"cmd":"trace"}: a valid (possibly empty) Chrome trace object
+        writeln!(conn, r#"{{"cmd": "trace"}}"#).unwrap();
+        let v = read(&mut line);
+        assert!(
+            v.get("trace")
+                .and_then(|t| t.get("traceEvents"))
+                .and_then(|e| e.as_arr())
+                .is_some(),
+            "trace reply must carry a traceEvents array: {line}"
+        );
+
+        // unknown admin commands get an error line, not a hang
+        writeln!(conn, r#"{{"cmd": "nope"}}"#).unwrap();
+        let v = read(&mut line);
+        assert!(v.get("error").is_some(), "unknown cmd must error: {line}");
+
+        writeln!(conn, "quit").unwrap();
+    });
+
+    server.serve(sched, stop).unwrap();
+    handle.join().unwrap();
+}
+
 #[test]
 fn tcp_server_streams_hermetically() {
     let engine = Engine::new(tiny_session(), Scheme::fp()).unwrap();

@@ -36,6 +36,11 @@
 #      chunked-vs-unchunked bit-identity, fixed-seed trace-replay
 #      determinism, and the SLO percentile/goodput-monotonicity
 #      properties (testkit::prop::slo_props)
+#   7. the traced-serve gate: the fixed-seed chaos trace-export test
+#      runs with CUSHION_TRACE_EXPORT pointed into the scratch dir, and
+#      the exported Chrome trace must pass `cushiond trace-check`
+#      (valid JSON, traceEvents present, strictly increasing args.seq,
+#      no unclosed spans)
 #
 # CUSHION_ARTIFACTS points at an empty scratch dir so a developer's
 # local `artifacts/` cannot leak into the hermetic run.
@@ -123,6 +128,22 @@ if [ $status -eq 0 ]; then
 fi
 
 if [ $status -eq 0 ]; then
-    echo "[hermetic] OK — full suite (incl. paged KV pool, preemption, chunked prefill, and fault-injection chaos) passed with no artifacts and no XLA"
+    # traced-serve gate: re-run the chaos trace-export test with the
+    # export path armed, then validate the written Chrome trace with
+    # the cushiond trace-check subcommand
+    echo "[hermetic] traced serve -> trace-check"
+    CUSHION_TRACE_EXPORT="$scratch/trace.json" \
+        cargo test -q --no-default-features --features ref \
+        --test hermetic_serve chaos_trace_export_records_the_request_lifecycle
+    status=$?
+    if [ $status -eq 0 ]; then
+        cargo run -q --no-default-features --features ref --bin cushiond -- \
+            trace-check "$scratch/trace.json"
+        status=$?
+    fi
+fi
+
+if [ $status -eq 0 ]; then
+    echo "[hermetic] OK — full suite (incl. paged KV pool, preemption, chunked prefill, fault-injection chaos, and the traced-serve observability gate) passed with no artifacts and no XLA"
 fi
 exit $status
